@@ -1,0 +1,112 @@
+//! Compare every integrator in the library on one integrand: m-Cubes
+//! (native), m-Cubes1D, serial VEGAS, gVegas-sim, ZMC-sim, MISER, and
+//! plain MC — estimate, error, calls, and wall time side by side.
+//!
+//! Run: cargo run --offline --release --example compare_methods [integrand] [dim]
+
+use mcubes::baselines::*;
+use mcubes::coordinator::{integrate_native, JobConfig};
+use mcubes::grid::GridMode;
+use mcubes::integrands::by_name;
+use mcubes::util::table::{fmt_ms, Table};
+
+fn main() -> anyhow::Result<()> {
+    let name = std::env::args().nth(1).unwrap_or_else(|| "f4".into());
+    let dim: usize = std::env::args()
+        .nth(2)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(5);
+    let f = by_name(&name, dim)?;
+    let truth = f.true_value();
+    let calls = 1 << 16;
+    let tau = 1e-3;
+    let seed = 31;
+
+    let mut t = Table::new(&[
+        "method", "estimate", "errorest", "rel-true", "calls", "time",
+    ]);
+    let mut push = |label: &str, i: f64, s: f64, calls: usize, secs: f64| {
+        let rel = truth
+            .map(|tv| format!("{:.2e}", ((i - tv) / tv).abs()))
+            .unwrap_or_else(|| "-".into());
+        t.row(vec![
+            label.into(),
+            format!("{i:.8e}"),
+            format!("{s:.2e}"),
+            rel,
+            calls.to_string(),
+            fmt_ms(secs * 1e3),
+        ]);
+    };
+
+    let cfg = JobConfig {
+        maxcalls: calls,
+        tau_rel: tau,
+        itmax: 20,
+        ita: 12,
+        skip: 2,
+        seed,
+        ..Default::default()
+    };
+    let mc = integrate_native(&*f, &cfg)?;
+    push("m-Cubes", mc.integral, mc.sigma, mc.calls_used, mc.total_time);
+
+    if f.symmetric() {
+        let mut c1 = cfg.clone();
+        c1.grid_mode = GridMode::Shared1D;
+        let m1 = integrate_native(&*f, &c1)?;
+        push("m-Cubes1D", m1.integral, m1.sigma, m1.calls_used, m1.total_time);
+    }
+
+    let vs = vegas_serial_integrate(&*f, calls, tau, 20, seed);
+    push("serial VEGAS", vs.integral, vs.sigma, vs.calls_used, vs.total_time);
+
+    let gv = gvegas_integrate(
+        &*f,
+        &GvegasConfig {
+            maxcalls: calls,
+            tau_rel: tau,
+            itmax: 20,
+            seed,
+            ..Default::default()
+        },
+    );
+    push("gVegas-sim", gv.integral, gv.sigma, gv.calls_used, gv.total_time);
+
+    let zm = zmc_integrate(
+        &*f,
+        &ZmcConfig {
+            samples_per_block: 256,
+            depth: 4,
+            seed,
+            ..Default::default()
+        },
+    );
+    push("ZMC-sim", zm.integral, zm.sigma, zm.calls_used, zm.total_time);
+
+    let mi = miser_integrate(
+        &*f,
+        &MiserConfig {
+            calls: calls * 4,
+            seed,
+            ..Default::default()
+        },
+    );
+    push("MISER", mi.integral, mi.sigma, mi.calls_used, mi.total_time);
+
+    let pm = plain_mc_integrate(
+        &*f,
+        &PlainMcConfig {
+            calls: calls * 4,
+            seed,
+        },
+    );
+    push("plain MC", pm.integral, pm.sigma, pm.calls_used, pm.total_time);
+
+    println!("integrand {name} (d={dim}), tau_rel {tau:.0e}");
+    if let Some(tv) = truth {
+        println!("true value = {tv:.10e}");
+    }
+    println!("\n{}", t.render());
+    Ok(())
+}

@@ -1,0 +1,60 @@
+//! Fig.-1 style accuracy sweep (compact): run each suite integrand at
+//! increasing digits of precision, multiple seeds, and report the
+//! spread of achieved relative errors against the requested tolerance.
+//!
+//! Run: cargo run --offline --release --example precision_sweep [runs]
+
+use mcubes::coordinator::{integrate_native_adaptive, JobConfig};
+use mcubes::integrands::by_name;
+use mcubes::report::BoxStats;
+use mcubes::util::table::Table;
+
+fn main() -> anyhow::Result<()> {
+    let runs: usize = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(10);
+    let cases = [("f2", 6), ("f3", 3), ("f4", 5), ("f5", 8), ("f6", 6)];
+    let taus = [1e-3, 2e-4, 4e-5];
+
+    let mut table = Table::new(&[
+        "integrand", "digits", "tau", "median rel", "q3 rel", "max rel", "met",
+    ]);
+    for (name, d) in cases {
+        let f = by_name(name, d)?;
+        let truth = f.true_value().unwrap();
+        for tau in taus {
+            let mut achieved = Vec::with_capacity(runs);
+            let mut conv = 0usize;
+            for r in 0..runs {
+                let base = JobConfig {
+                    maxcalls: 1 << 14,
+                    tau_rel: tau,
+                    itmax: 20,
+                    ita: 12,
+                    skip: 2,
+                    seed: 9000 + r as u32,
+                    ..Default::default()
+                };
+                let out = integrate_native_adaptive(&*f, &base, 6, 4)?;
+                if out.converged {
+                    conv += 1;
+                    achieved.push(((out.integral - truth) / truth).abs());
+                }
+            }
+            let b = BoxStats::from_samples(&achieved);
+            table.row(vec![
+                format!("{name} d={d}"),
+                format!("{:.1}", -tau.log10()),
+                format!("{tau:.0e}"),
+                format!("{:.2e}", b.median),
+                format!("{:.2e}", b.q3),
+                format!("{:.2e}", b.max),
+                format!("{conv}/{runs}"),
+            ]);
+        }
+    }
+    println!("{}", table.render());
+    println!("(median achieved error should sit at or below the requested tau)");
+    Ok(())
+}

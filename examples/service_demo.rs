@@ -1,0 +1,147 @@
+//! End-to-end system driver (the repo's E2E validation workload):
+//!
+//! 1. Loads the AOT artifact registry and checks the PJRT runtime.
+//! 2. Cross-validates PJRT vs native on one artifact (the three-layer
+//!    stack composes).
+//! 3. Pushes a realistic batch of integration jobs (the paper's test
+//!    suite at 3 digits of precision, many seeds) through the
+//!    integration service and reports latency/throughput plus
+//!    per-integrand accuracy vs the analytic values.
+//!
+//! Results are recorded in EXPERIMENTS.md §E2E. Run:
+//!   cargo run --offline --release --example service_demo
+
+use mcubes::coordinator::{
+    run_driver, IntegrationService, JobConfig, JobRequest, PjrtBackend,
+};
+use mcubes::integrands::by_name;
+use mcubes::runtime::{PjrtRuntime, Registry, DEFAULT_ARTIFACT_DIR};
+use mcubes::util::table::{fmt_ms, Table};
+
+fn main() -> anyhow::Result<()> {
+    // ---- Stage 1: artifact registry + PJRT sanity --------------------
+    let registry = Registry::load(DEFAULT_ARTIFACT_DIR)
+        .map_err(|e| anyhow::anyhow!("{e}\nhint: run `make artifacts` first"))?;
+    println!(
+        "[1/3] registry: {} artifacts from {}",
+        registry.all().len(),
+        registry.dir().display()
+    );
+    let runtime = PjrtRuntime::cpu()?;
+    println!(
+        "      pjrt: platform={} devices={}",
+        runtime.platform_name(),
+        runtime.device_count()
+    );
+
+    // ---- Stage 2: cross-backend validation ---------------------------
+    let backend = PjrtBackend::load(&runtime, &registry, "f4", 0)?;
+    let meta = backend.meta().clone();
+    let xcfg = JobConfig {
+        maxcalls: meta.maxcalls,
+        nb: meta.nb,
+        nblocks: meta.nblocks,
+        itmax: 4,
+        ita: 3,
+        skip: 0,
+        tau_rel: 1e-14,
+        seed: 999,
+        ..Default::default()
+    };
+    let pjrt = run_driver(&backend, &xcfg)?;
+    let f4 = by_name("f4", 5)?;
+    let native = mcubes::coordinator::integrate_native(&*f4, &xcfg)?;
+    let rel = ((pjrt.integral - native.integral) / native.integral).abs();
+    println!(
+        "[2/3] cross-backend check on {}: pjrt={:.12e} native={:.12e} rel diff={:.2e}",
+        meta.name, pjrt.integral, native.integral, rel
+    );
+    assert!(rel < 1e-9, "backends disagree");
+
+    // ---- Stage 3: batched service workload ----------------------------
+    let suite: &[(&str, usize, usize)] = &[
+        ("f2", 6, 1 << 15),
+        ("f3", 3, 1 << 14),
+        ("f3", 8, 1 << 16),
+        ("f4", 5, 1 << 16),
+        ("f5", 8, 1 << 15),
+        ("f6", 6, 1 << 16),
+        ("cosmo", 6, 1 << 14),
+    ];
+    let seeds_per_case = 4usize;
+    let workers = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(2)
+        .clamp(1, 8);
+    let mut svc = IntegrationService::new(workers);
+    let mut id = 0u64;
+    for (name, d, calls) in suite {
+        for s in 0..seeds_per_case {
+            svc.submit(JobRequest {
+                id,
+                integrand: name.to_string(),
+                dim: *d,
+                config: JobConfig {
+                    maxcalls: *calls,
+                    tau_rel: 1e-3,
+                    itmax: 20,
+                    ita: 12,
+                    skip: 2,
+                    seed: 7000 + id as u32 + s as u32,
+                    ..Default::default()
+                },
+            });
+            id += 1;
+        }
+    }
+    println!(
+        "[3/3] service: {} jobs ({} integrand cases x {} seeds) on {} workers",
+        id,
+        suite.len(),
+        seeds_per_case,
+        workers
+    );
+    let (results, metrics) = svc.drain()?;
+
+    let mut t = Table::new(&[
+        "integrand", "jobs", "converged", "max |rel err| vs truth", "median latency",
+    ]);
+    for (name, d, _) in suite {
+        let f = by_name(name, *d)?;
+        let truth = f.true_value().unwrap();
+        let mut rels: Vec<f64> = Vec::new();
+        let mut lats: Vec<f64> = Vec::new();
+        let mut conv = 0;
+        let key = name.to_string();
+        for r in results.iter().filter(|r| r.integrand == key && r.dim == *d) {
+            if let Ok(o) = &r.outcome {
+                if o.calls_used > 0 {
+                    rels.push(((o.integral - truth) / truth).abs());
+                    lats.push(r.latency);
+                    conv += usize::from(o.converged);
+                }
+            }
+        }
+        lats.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let max_rel = rels.iter().cloned().fold(0.0f64, f64::max);
+        t.row(vec![
+            format!("{name} (d={d})"),
+            rels.len().to_string(),
+            format!("{conv}/{}", rels.len()),
+            format!("{max_rel:.2e}"),
+            fmt_ms(lats.get(lats.len() / 2).copied().unwrap_or(0.0) * 1e3),
+        ]);
+    }
+    println!("\n{}", t.render());
+    println!(
+        "throughput: {:.2} jobs/s | wall {} | p50 {} | p95 {} | failures {}",
+        metrics.throughput,
+        fmt_ms(metrics.wall_time * 1e3),
+        fmt_ms(metrics.latency_p50 * 1e3),
+        fmt_ms(metrics.latency_p95 * 1e3),
+        metrics.failures
+    );
+    assert_eq!(metrics.failures, 0);
+    println!("\nservice_demo OK — full stack (artifacts -> PJRT -> coordinator -> service) validated");
+    Ok(())
+}

@@ -1,0 +1,12 @@
+"""Build-time compile package: L1 Pallas kernels + L2 JAX model + AOT lowering.
+
+Python in this repo runs only at artifact-build time (`make artifacts`);
+the Rust coordinator executes the lowered HLO via PJRT at runtime.
+
+Double precision is mandatory for VEGAS (relative errors down to 1e-9),
+so x64 is enabled package-wide before any jax arrays are created.
+"""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)

@@ -1,0 +1,262 @@
+"""AOT lowering: jit -> StableHLO -> XLA computation -> HLO *text* artifacts.
+
+HLO text (not `.serialize()`) is the interchange format: jax >= 0.5 emits
+HloModuleProto with 64-bit instruction ids which xla_extension 0.5.1 (the
+version the published `xla` 0.1.6 crate binds) rejects; the text parser
+reassigns ids and round-trips cleanly. See /opt/xla-example/README.md.
+
+Outputs (under --out, default ../artifacts):
+  <name>.hlo.txt          one per (integrand, dim, maxcalls, variant)
+  manifest.json           registry the Rust runtime loads
+  tables.json             runtime interpolation tables for stateful integrands
+  golden_philox.json      Philox KAT + stream vectors for the Rust RNG test
+  golden_vsample.json     oracle outputs for Rust<->PJRT cross-checks
+
+Usage: python -m compile.aot [--out DIR] [--set test|bench|all] [--force]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import integrands, philox
+from .kernels import ref
+from .layout import batch_size_heuristic
+from .model import ModelSpec, build, example_args
+
+# ---------------------------------------------------------------------------
+# Artifact sets. (integrand, dim) pairs follow the paper's evaluation:
+# f2@6, f3@{3,8}, f4@{5,8}, f5@8, f6@6 (Fig 1-3), fA/fB (Table 1-2),
+# cosmo (section 6.1 stateful integrand).
+# ---------------------------------------------------------------------------
+
+PAPER_CASES: list[tuple[str, int]] = [
+    ("f1", 5),
+    ("f2", 6),
+    ("f3", 3),
+    ("f3", 8),
+    ("f4", 5),
+    ("f4", 8),
+    ("f5", 8),
+    ("f6", 6),
+    ("fA", 6),
+    ("fB", 9),
+    ("cosmo", 6),
+]
+
+TEST_CALLS = [1 << 14]
+BENCH_CALLS = [1 << 17, 1 << 20]
+
+
+def specs_for(set_name: str) -> list[ModelSpec]:
+    if set_name == "test":
+        calls = TEST_CALLS
+    elif set_name == "bench":
+        calls = BENCH_CALLS
+    elif set_name == "all":
+        calls = TEST_CALLS + BENCH_CALLS
+    else:
+        raise ValueError(f"unknown set {set_name!r}")
+    out = []
+    for name, dim in PAPER_CASES:
+        for c in calls:
+            for adjust in (True, False):
+                out.append(ModelSpec(name, dim, c, adjust=adjust))
+    # Ablation artifact: one-hot (MXU-shaped) histogram variant.
+    out.append(ModelSpec("f4", 5, TEST_CALLS[0], adjust=True,
+                         hist_mode="onehot"))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Lowering
+# ---------------------------------------------------------------------------
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_spec(spec: ModelSpec) -> tuple[str, dict]:
+    fn, layout, table_shape = build(spec)
+    args = example_args(spec)
+    lowered = jax.jit(fn).lower(*args)
+    text = to_hlo_text(lowered)
+    ispec = integrands.get(spec.integrand)
+    outputs = [{"name": "res", "shape": [2], "dtype": "f64"}]
+    if spec.adjust:
+        outputs.append({"name": "bin_contrib", "shape": [layout.d, layout.nb],
+                        "dtype": "f64"})
+    inputs = [
+        {"name": "bins", "shape": [layout.d, layout.nb], "dtype": "f64"},
+        {"name": "lo", "shape": [layout.d], "dtype": "f64"},
+        {"name": "hi", "shape": [layout.d], "dtype": "f64"},
+        {"name": "seed_it", "shape": [2], "dtype": "u32"},
+    ]
+    if table_shape is not None:
+        inputs.append({"name": "tables", "shape": list(table_shape),
+                       "dtype": "f64"})
+    entry = {
+        "name": spec.name,
+        "file": f"{spec.name}.hlo.txt",
+        "integrand": spec.integrand,
+        "dim": layout.d,
+        "nb": layout.nb,
+        "g": layout.g,
+        "m": layout.m,
+        "p": layout.p,
+        "nblocks": layout.nblocks,
+        "cpb": layout.cpb,
+        "maxcalls": spec.maxcalls,
+        "calls": layout.calls,
+        "adjust": spec.adjust,
+        "hist_mode": spec.hist_mode,
+        "batch_size": batch_size_heuristic(spec.maxcalls),
+        "lo": ispec.lo,
+        "hi": ispec.hi,
+        "symmetric": ispec.symmetric,
+        "n_tables": ispec.n_tables,
+        "table_knots": ispec.table_knots,
+        "true_value": integrands.true_value(spec.integrand, layout.d),
+        "inputs": inputs,
+        "outputs": outputs,
+    }
+    return text, entry
+
+
+# ---------------------------------------------------------------------------
+# Goldens
+# ---------------------------------------------------------------------------
+
+
+def skewed_bins(d: int, nb: int, gamma: float = 1.7) -> np.ndarray:
+    """Deterministic non-uniform bin edges: exercises the gather path."""
+    edges = ((np.arange(1, nb + 1) / nb) ** gamma)
+    edges[-1] = 1.0
+    return np.tile(edges, (d, 1))
+
+
+def golden_philox() -> dict:
+    cases = []
+    for (c, k) in [((0, 0, 0, 0), (0, 0)),
+                   ((0xFFFFFFFF,) * 4, (0xFFFFFFFF,) * 2),
+                   ((0x243F6A88, 0x85A308D3, 0x13198A2E, 0x03707344),
+                    (0xA4093822, 0x299F31D0)),
+                   ((1, 2, 3, 4), (5, 6))]:
+        r = philox.philox4x32(*c, *k)
+        cases.append({"ctr": list(c), "key": list(k),
+                      "out": [int(x) for x in r]})
+    # A uniform stream segment as drawn by the sampler.
+    u = philox.uniforms(jnp.arange(16, dtype=jnp.uint32), 3, 42, 6)
+    return {
+        "kat": cases,
+        "uniforms": {
+            "iteration": 3, "seed": 42, "ndim": 6, "n": 16,
+            "values": np.asarray(u).reshape(-1).tolist(),
+        },
+    }
+
+
+def golden_vsample() -> list[dict]:
+    out = []
+    for name, dim, calls, bins_kind, seed, it in [
+        ("f4", 5, 1 << 14, "uniform", 123, 0),
+        ("f4", 5, 1 << 14, "skewed", 123, 3),
+        ("f2", 6, 1 << 14, "uniform", 7, 1),
+        ("fB", 9, 1 << 14, "skewed", 99, 2),
+        ("cosmo", 6, 1 << 14, "uniform", 5, 0),
+    ]:
+        spec = ModelSpec(name, dim, calls)
+        layout = spec.layout()
+        ispec = integrands.get(name)
+        tables = integrands.make_tables(ispec)
+        if bins_kind == "uniform":
+            bins = np.asarray(ref.uniform_bins(dim, layout.nb))
+        else:
+            bins = skewed_bins(dim, layout.nb)
+        lo = jnp.full(dim, ispec.lo)
+        hi = jnp.full(dim, ispec.hi)
+        i_est, var_est, c = ref.vsample_ref(
+            ispec.fn, tables, jnp.asarray(bins), lo, hi, seed, it, layout)
+        c = np.asarray(c)
+        out.append({
+            "artifact": spec.name,
+            "bins": bins_kind,
+            "seed": seed,
+            "iteration": it,
+            "integral": float(i_est),
+            "variance": float(var_est),
+            "c_axis_sums": c.sum(axis=1).tolist(),
+            "c_full": c.tolist() if name == "f4" else None,
+        })
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Main
+# ---------------------------------------------------------------------------
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--set", default="test", choices=["test", "bench", "all"])
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    manifest_path = os.path.join(args.out, "manifest.json")
+    existing: dict[str, dict] = {}
+    if os.path.exists(manifest_path) and not args.force:
+        with open(manifest_path) as f:
+            existing = {e["name"]: e for e in json.load(f)["artifacts"]}
+
+    entries = dict(existing)
+    t_all = time.time()
+    for spec in specs_for(args.set):
+        path = os.path.join(args.out, f"{spec.name}.hlo.txt")
+        if spec.name in entries and os.path.exists(path) and not args.force:
+            print(f"  [skip] {spec.name}")
+            continue
+        t0 = time.time()
+        text, entry = lower_spec(spec)
+        with open(path, "w") as f:
+            f.write(text)
+        entries[spec.name] = entry
+        print(f"  [ok]   {spec.name}  ({len(text)/1024:.0f} KiB, "
+              f"{time.time()-t0:.1f}s)")
+
+    with open(manifest_path, "w") as f:
+        json.dump({"version": 1, "artifacts": list(entries.values())}, f,
+                  indent=1)
+
+    # Runtime tables for stateful integrands.
+    cosmo = integrands.get("cosmo")
+    tables = np.asarray(integrands.make_tables(cosmo))
+    with open(os.path.join(args.out, "tables.json"), "w") as f:
+        json.dump({"cosmo": {"knots": cosmo.table_knots,
+                             "values": tables.tolist()}}, f)
+
+    with open(os.path.join(args.out, "golden_philox.json"), "w") as f:
+        json.dump(golden_philox(), f, indent=1)
+    with open(os.path.join(args.out, "golden_vsample.json"), "w") as f:
+        json.dump(golden_vsample(), f, indent=1)
+
+    print(f"artifacts complete in {time.time()-t_all:.1f}s -> {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,245 @@
+"""Integrand registry — the paper's evaluation suite, in jnp.
+
+Each integrand is a pure function `(x, tables) -> f` where `x` has shape
+(N, d) in *integration-space* coordinates and `tables` is an optional
+(T, K) float64 array of runtime state (interpolation tables) — `None`
+for closed-form integrands. The same registry exists in Rust
+(`rust/src/integrands/`) for the CPU baselines; names must match.
+
+The suite (paper eq. 1-8):
+  f1..f6 : the standard test suite (oscillatory, product peak, corner
+           peak, Gaussian, C0, discontinuous), parameterized by dim.
+  fA     : sin(sum x) over (0,10)^6            [ZMC comparison, eq. 7]
+  fB     : 9-D narrow Gaussian over (-1,1)^9   [ZMC comparison, eq. 8]
+  cosmo  : 6-D stateful integrand whose evaluation reads two runtime
+           interpolation tables (stand-in for the paper's cosmology
+           integrand with tabular state, section 6.1).
+
+`true_value(name, d)` returns the analytic/semi-analytic reference used
+by the accuracy experiments (Fig. 1).
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from itertools import combinations
+from typing import Callable, Optional
+
+import jax.numpy as jnp
+
+# ---------------------------------------------------------------------------
+# Integrand definitions (vectorized over rows of x).
+# ---------------------------------------------------------------------------
+
+
+def f1(x, tables=None):
+    """Oscillatory: cos(sum_i i * x_i)."""
+    d = x.shape[-1]
+    coef = jnp.arange(1, d + 1, dtype=x.dtype)
+    return jnp.cos(x @ coef)
+
+
+def f2(x, tables=None):
+    """Product peak: prod_i (1/50^2 + (x_i - 1/2)^2)^-1."""
+    a = 1.0 / (50.0 * 50.0)
+    return jnp.prod(1.0 / (a + (x - 0.5) ** 2), axis=-1)
+
+
+def f3(x, tables=None):
+    """Corner peak: (1 + sum_i i*x_i)^(-d-1)."""
+    d = x.shape[-1]
+    coef = jnp.arange(1, d + 1, dtype=x.dtype)
+    return (1.0 + x @ coef) ** (-(d + 1.0))
+
+
+def f4(x, tables=None):
+    """Gaussian: exp(-625 * sum_i (x_i - 1/2)^2)."""
+    return jnp.exp(-625.0 * jnp.sum((x - 0.5) ** 2, axis=-1))
+
+
+def f5(x, tables=None):
+    """C0-continuous: exp(-10 * sum_i |x_i - 1/2|)."""
+    return jnp.exp(-10.0 * jnp.sum(jnp.abs(x - 0.5), axis=-1))
+
+
+def f6(x, tables=None):
+    """Discontinuous: exp(sum_i (i+4) x_i) if all x_i < (3+i)/10 else 0."""
+    d = x.shape[-1]
+    i = jnp.arange(1, d + 1, dtype=x.dtype)
+    inside = jnp.all(x < (3.0 + i) / 10.0, axis=-1)
+    return jnp.where(inside, jnp.exp(x @ (i + 4.0)), 0.0)
+
+
+def fA(x, tables=None):
+    """sin(sum x) — evaluated over (0,10)^6 in the paper (eq. 7)."""
+    return jnp.sin(jnp.sum(x, axis=-1))
+
+
+def _interp1d(table_row, xi, lo, hi):
+    """Linear interpolation of `table_row` (K knots, uniform on [lo,hi])."""
+    k = table_row.shape[0]
+    t = (xi - lo) / (hi - lo) * (k - 1)
+    t = jnp.clip(t, 0.0, k - 1.000001)
+    i0 = jnp.floor(t).astype(jnp.int32)
+    frac = t - i0
+    v0 = jnp.take(table_row, i0)
+    v1 = jnp.take(table_row, i0 + 1)
+    return v0 + frac * (v1 - v0)
+
+
+def cosmo(x, tables):
+    """Stateful 6-D integrand exercising runtime interpolation tables.
+
+    f(x) = T0(x0) * T1(x1) * exp(-(x2^2+x3^2)) * (1 + 0.5*x4*x5)
+
+    T0, T1 are runtime-loaded 1-D tables on uniform knots over [0,1]
+    (rows 0 and 1 of `tables`). This mirrors the paper's cosmology
+    integrand, whose cost is dominated by table lookups.
+    """
+    t0 = _interp1d(tables[0], x[:, 0], 0.0, 1.0)
+    t1 = _interp1d(tables[1], x[:, 1], 0.0, 1.0)
+    gauss = jnp.exp(-(x[:, 2] ** 2 + x[:, 3] ** 2))
+    poly = 1.0 + 0.5 * x[:, 4] * x[:, 5]
+    return t0 * t1 * gauss * poly
+
+
+# ---------------------------------------------------------------------------
+# fB: careful with the paper's formula. Eq. 8 reads
+#   (1/sqrt(2 pi .01)^9) exp(-1/(2 (.01)^2) sum x_i^2)
+# but the stated true value 1.0 over (-1,1)^9 corresponds to a Gaussian
+# with variance .01 (sigma=0.1): norm (2 pi .01)^{-9/2}, exponent
+# -sum x^2 / (2 * .01). We implement the *self-consistent* version that
+# integrates to 1.0 (matching the paper's reported true value).
+# ---------------------------------------------------------------------------
+
+
+def fB_consistent(x, tables=None):
+    var = 0.01  # sigma^2
+    norm = (2.0 * math.pi * var) ** (-4.5)
+    return norm * jnp.exp(-jnp.sum(x ** 2, axis=-1) / (2.0 * var))
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class IntegrandSpec:
+    name: str
+    fn: Callable
+    default_dim: Optional[int]
+    lo: float
+    hi: float
+    n_tables: int = 0
+    table_knots: int = 0
+    symmetric: bool = False  # identical marginal density on every axis
+
+
+REGISTRY: dict[str, IntegrandSpec] = {
+    "f1": IntegrandSpec("f1", f1, None, 0.0, 1.0),
+    "f2": IntegrandSpec("f2", f2, None, 0.0, 1.0, symmetric=True),
+    "f3": IntegrandSpec("f3", f3, None, 0.0, 1.0),
+    "f4": IntegrandSpec("f4", f4, None, 0.0, 1.0, symmetric=True),
+    "f5": IntegrandSpec("f5", f5, None, 0.0, 1.0, symmetric=True),
+    "f6": IntegrandSpec("f6", f6, None, 0.0, 1.0),
+    "fA": IntegrandSpec("fA", fA, 6, 0.0, 10.0),
+    "fB": IntegrandSpec("fB", fB_consistent, 9, -1.0, 1.0, symmetric=True),
+    "cosmo": IntegrandSpec("cosmo", cosmo, 6, 0.0, 1.0, n_tables=2, table_knots=64),
+}
+
+
+def get(name: str) -> IntegrandSpec:
+    try:
+        return REGISTRY[name]
+    except KeyError:
+        raise KeyError(f"unknown integrand {name!r}; known: {sorted(REGISTRY)}")
+
+
+def make_tables(spec: IntegrandSpec):
+    """Deterministic runtime tables for stateful integrands (cosmo)."""
+    if spec.n_tables == 0:
+        return None
+    k = spec.table_knots
+    knots = jnp.linspace(0.0, 1.0, k)
+    # Smooth but non-trivial profiles; deterministic so the Rust twin and
+    # the true-value quadrature agree.
+    t0 = 1.0 + 0.5 * jnp.sin(2.0 * math.pi * knots) + 0.25 * knots ** 2
+    t1 = jnp.exp(-2.0 * (knots - 0.3) ** 2) + 0.1
+    return jnp.stack([t0, t1])
+
+
+# ---------------------------------------------------------------------------
+# True values (analytic where available) for the accuracy experiments.
+# ---------------------------------------------------------------------------
+
+
+def true_value(name: str, d: int) -> float:
+    if name == "f1":
+        # prod rule via telescoping: Re[prod_j (e^{i j} - 1)/(i j)]
+        re, im = 1.0, 0.0
+        for j in range(1, d + 1):
+            # integral of e^{i j x} over [0,1] = (sin j)/j + i(1-cos j)/j
+            a = math.sin(j) / j
+            b = (1.0 - math.cos(j)) / j
+            re, im = re * a - im * b, re * b + im * a
+        return re
+    if name == "f2":
+        one_dim = 50.0 * 2.0 * math.atan(25.0)
+        return one_dim ** d
+    if name == "f3":
+        # Corner peak closed form (inclusion-exclusion):
+        # I = (1/(d! prod c_i)) sum_{S subset [d]} (-1)^{|S|} / (1 + sum_{i in S} c_i)
+        c = list(range(1, d + 1))
+        total = 0.0
+        for r in range(d + 1):
+            for s in combinations(c, r):
+                total += (-1.0) ** r / (1.0 + sum(s))
+        return total / (math.factorial(d) * math.prod(c))
+    if name == "f4":
+        one_dim = math.sqrt(math.pi) / 25.0 * math.erf(12.5)
+        return one_dim ** d
+    if name == "f5":
+        one_dim = 0.2 * (1.0 - math.exp(-5.0))
+        return one_dim ** d
+    if name == "f6":
+        val = 1.0
+        for i in range(1, d + 1):
+            c = i + 4.0
+            b = (3.0 + i) / 10.0
+            val *= (math.exp(c * min(b, 1.0)) - 1.0) / c
+        return val
+    if name == "fA":
+        # int sin(sum x) over (0,10)^6 = Im[ prod (e^{i 10}-1)/i ] = paper: -49.165073
+        # 1-D: int_0^10 e^{i x} dx = sin(10) + i (1 - cos(10))
+        a = math.sin(10.0)
+        b = 1.0 - math.cos(10.0)
+        re, im = 1.0, 0.0
+        for _ in range(6):
+            re, im = re * a - im * b, re * b + im * a
+        return im  # Im of prod gives integral of sin(sum)
+    if name == "fB":
+        one_dim = math.erf(1.0 / (0.1 * math.sqrt(2.0)))
+        return one_dim ** 9
+    if name == "cosmo":
+        return cosmo_true_value()
+    raise KeyError(name)
+
+
+def cosmo_true_value(n: int = 200001) -> float:
+    """High-resolution product quadrature for the cosmo integrand."""
+    import numpy as np
+
+    spec = get("cosmo")
+    tables = np.asarray(make_tables(spec))
+    xs = np.linspace(0.0, 1.0, n)
+    k = spec.table_knots
+    t = np.clip(xs * (k - 1), 0.0, k - 1.000001)
+    i0 = np.floor(t).astype(int)
+    frac = t - i0
+    i0_t0 = np.trapezoid(tables[0][i0] * (1 - frac) + tables[0][i0 + 1] * frac, xs)
+    i0_t1 = np.trapezoid(tables[1][i0] * (1 - frac) + tables[1][i0 + 1] * frac, xs)
+    gauss1d = np.trapezoid(np.exp(-(xs ** 2)), xs)
+    # int (1 + .5 x4 x5) = 1 + .5 * .5 * .5 = 1.125
+    return float(i0_t0 * i0_t1 * gauss1d ** 2 * 1.125)

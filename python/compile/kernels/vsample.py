@@ -1,0 +1,135 @@
+"""L1: the m-Cubes V-Sample Pallas kernel (and its No-Adjust twin).
+
+Mapping of the paper's CUDA kernel (Algorithm 3) onto Pallas — see
+DESIGN.md §Hardware-Adaptation:
+
+  CUDA thread-block          -> grid program (nblocks of them)
+  thread x serial cube batch -> one vectorized (cpb*p, d) sample batch
+  shared-mem group reduction -> jnp.sum inside the program
+  atomicAdd bin histogram    -> segment-sum scatter (CPU/interpret) or
+                                one-hot MXU contraction (TPU plan)
+  global atomic accumulation -> per-block partial outputs, reduced by a
+                                tiny L2 epilogue (model.py)
+
+The kernel is lowered with interpret=True: the CPU PJRT plugin cannot run
+Mosaic custom-calls, and interpret-mode lowers to plain HLO that any
+backend executes. Real-TPU performance is *estimated* structurally
+(EXPERIMENTS.md §Perf) — interpret wallclock is not a TPU proxy.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .. import sampling
+from ..layout import Layout
+
+
+def _kernel_body(layout: Layout, fn: Callable, has_tables: bool,
+                 adjust: bool, hist_mode: str, *refs):
+    """Shared body for the adjust / no-adjust kernel variants."""
+    if has_tables:
+        if adjust:
+            bins_ref, lo_ref, hi_ref, seedit_ref, tab_ref, res_ref, c_ref = refs
+        else:
+            bins_ref, lo_ref, hi_ref, seedit_ref, tab_ref, res_ref = refs
+        tables = tab_ref[...]
+    else:
+        if adjust:
+            bins_ref, lo_ref, hi_ref, seedit_ref, res_ref, c_ref = refs
+        else:
+            bins_ref, lo_ref, hi_ref, seedit_ref, res_ref = refs
+        tables = None
+
+    d, nb, g, m, p = layout.d, layout.nb, layout.g, layout.m, layout.p
+    cpb = layout.cpb
+
+    bins = bins_ref[...].reshape(d, nb)
+    lo = lo_ref[...].reshape(d)
+    hi = hi_ref[...].reshape(d)
+    seed = seedit_ref[0]
+    iteration = seedit_ref[1]
+
+    blk = pl.program_id(0)
+    cube0 = blk.astype(jnp.int64) * cpb
+
+    # The block's sample batch: cpb cubes x p samples, fully vectorized.
+    cube_local = jnp.repeat(jnp.arange(cpb, dtype=jnp.int64), p)
+    k = jnp.tile(jnp.arange(p, dtype=jnp.int64), cpb)
+    cube = cube0 + cube_local
+    valid = cube < m  # last block may own padding cubes
+
+    u = sampling.draw_uniforms(cube, k, p, iteration, seed, d)
+    coords = sampling.cube_coords(cube, g, d)
+    x, jac, b = sampling.transform(u, coords, bins, lo, hi, nb, g)
+    fv = fn(x, tables)
+    v = jnp.where(valid, fv * jac, 0.0)
+
+    i_partial, var_partial = sampling.reduce_cubes(v, p, m)
+    res_ref[0, 0] = i_partial
+    res_ref[0, 1] = var_partial
+
+    if adjust:
+        if hist_mode == "onehot":
+            c = sampling.bin_histogram_onehot(v, b, d, nb)
+        else:
+            c = sampling.bin_histogram(v, b, d, nb)
+        c_ref[0, :, :] = c
+
+
+def build_vsample_kernel(layout: Layout, fn: Callable,
+                         table_shape: Optional[tuple] = None,
+                         adjust: bool = True,
+                         hist_mode: str = "scatter") -> Callable:
+    """Build the pallas_call for one (integrand, layout, variant) triple.
+
+    Returns a function (bins, lo, hi, seed_it[, tables]) ->
+      (res[nblocks, 2], C[nblocks, d, nb])   when adjust
+      (res[nblocks, 2],)                     otherwise
+    Partial outputs are per-block; the L2 model sums them (the paper's
+    final global atomicAdd, done as a reduction epilogue).
+    """
+    d, nb = layout.d, layout.nb
+    nblocks = layout.nblocks
+    has_tables = table_shape is not None
+
+    body = functools.partial(_kernel_body, layout, fn, has_tables,
+                             adjust, hist_mode)
+
+    in_specs = [
+        pl.BlockSpec((d, nb), lambda i: (0, 0)),      # bins
+        pl.BlockSpec((d,), lambda i: (0,)),           # lo
+        pl.BlockSpec((d,), lambda i: (0,)),           # hi
+        pl.BlockSpec((2,), lambda i: (0,)),           # seed, iteration
+    ]
+    if has_tables:
+        in_specs.append(pl.BlockSpec(table_shape, lambda i: (0,) * len(table_shape)))
+
+    out_shape = [jax.ShapeDtypeStruct((nblocks, 2), jnp.float64)]
+    out_specs = [pl.BlockSpec((1, 2), lambda i: (i, 0))]
+    if adjust:
+        out_shape.append(jax.ShapeDtypeStruct((nblocks, d, nb), jnp.float64))
+        out_specs.append(pl.BlockSpec((1, d, nb), lambda i: (i, 0, 0)))
+
+    call = pl.pallas_call(
+        body,
+        grid=(nblocks,),
+        in_specs=in_specs,
+        out_specs=out_specs,
+        out_shape=out_shape,
+        interpret=True,
+    )
+
+    def vsample(bins, lo, hi, seed_it, tables=None):
+        args = [bins, lo, hi, seed_it]
+        if has_tables:
+            assert tables is not None, "stateful integrand needs tables"
+            args.append(tables)
+        return call(*args)
+
+    return vsample

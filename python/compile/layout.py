@@ -1,0 +1,67 @@
+"""Stratification layout — mirrors `rust/src/strat/` exactly.
+
+Given `maxcalls` and dimension `d`, VEGAS (Algorithm 2) derives:
+  g   intervals per axis        g = max(1, floor((maxcalls/2)^(1/d)))
+  m   sub-cubes                 m = g^d
+  p   samples per cube          p = max(2, floor(maxcalls / m))
+  s   cube batch per "thread"   (Set-Batch-Size heuristic)
+
+The Pallas kernel maps the paper's thread-groups onto grid programs:
+`nblocks` programs, each owning `cpb = ceil(m / nblocks)` cubes,
+vectorized internally. The Rust strat module reproduces these numbers so
+the native engine and the AOT artifact sample identically.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class Layout:
+    d: int
+    nb: int          # bins per axis
+    g: int           # intervals per axis
+    m: int           # number of sub-cubes
+    p: int           # samples per cube
+    nblocks: int     # grid programs (paper: thread groups)
+    cpb: int         # cubes per block (padded; last block masks)
+    calls: int       # m * p, actual evaluations per iteration
+
+    @property
+    def samples_per_block(self) -> int:
+        return self.cpb * self.p
+
+
+def compute_layout(d: int, maxcalls: int, nb: int = 50, nblocks: int = 8) -> Layout:
+    if d < 1:
+        raise ValueError(f"dimension must be >= 1, got {d}")
+    if maxcalls < 4:
+        raise ValueError(f"maxcalls must be >= 4, got {maxcalls}")
+    g = max(1, int((maxcalls / 2.0) ** (1.0 / d)))
+    # Guard fp rounding: (g+1)^d might still be <= maxcalls/2.
+    while (g + 1) ** d <= maxcalls // 2:
+        g += 1
+    m = g ** d
+    p = max(2, maxcalls // m)
+    nblocks = max(1, min(nblocks, m))
+    cpb = (m + nblocks - 1) // nblocks
+    # Shrink away fully-empty trailing blocks (cpb rounding can leave
+    # grid programs with zero cubes). Mirrors rust strat::Layout.
+    nblocks = (m + cpb - 1) // cpb
+    return Layout(d=d, nb=nb, g=g, m=m, p=p, nblocks=nblocks, cpb=cpb, calls=m * p)
+
+
+def batch_size_heuristic(maxcalls: int) -> int:
+    """Paper's Set-Batch-Size: cubes each thread processes serially.
+
+    Used by the Rust native engine for work partitioning; reproduced here
+    so the manifest can carry it to the coordinator.
+    """
+    if maxcalls <= (1 << 15):
+        return 1
+    if maxcalls <= (1 << 20):
+        return 2
+    if maxcalls <= (1 << 25):
+        return 4
+    return 8

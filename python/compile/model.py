@@ -1,0 +1,94 @@
+"""L2: the jitted V-Sample computation — Pallas kernel + reduction epilogue.
+
+One `build()` per (integrand, dim, maxcalls, variant) produces the jax
+function that `aot.py` lowers to an HLO-text artifact. The function's
+runtime signature (what the Rust coordinator feeds through PJRT):
+
+  inputs : bins   f64[d, nb]   importance-bin right edges, unit space
+           lo     f64[d]       integration box lower corner
+           hi     f64[d]       integration box upper corner
+           seedit u32[2]       (seed, iteration)
+           tables f64[T, K]    only for stateful integrands
+  outputs: res    f64[2]       (I, Var) for this iteration
+           C      f64[d, nb]   bin contributions (adjust variant only)
+
+Everything else (weighted combination across iterations, chi^2,
+convergence, bin-boundary adjustment) lives in the Rust coordinator,
+mirroring the paper's CPU/GPU split.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import integrands
+from .layout import Layout, compute_layout
+from .kernels.vsample import build_vsample_kernel
+
+
+@dataclass(frozen=True)
+class ModelSpec:
+    """Everything needed to build + describe one artifact."""
+    integrand: str
+    dim: int
+    maxcalls: int
+    nb: int = 50
+    nblocks: int = 8
+    adjust: bool = True
+    hist_mode: str = "scatter"
+
+    @property
+    def name(self) -> str:
+        suffix = "adj" if self.adjust else "na"
+        if self.adjust and self.hist_mode != "scatter":
+            suffix += f"_{self.hist_mode}"
+        return f"{self.integrand}_d{self.dim}_c{self.maxcalls}_{suffix}"
+
+    def layout(self) -> Layout:
+        return compute_layout(self.dim, self.maxcalls, self.nb, self.nblocks)
+
+
+def build(spec: ModelSpec) -> tuple[Callable, Layout, Optional[tuple]]:
+    """Return (fn, layout, table_shape). `fn` is ready for jax.jit."""
+    ispec = integrands.get(spec.integrand)
+    if ispec.default_dim is not None and spec.dim != ispec.default_dim:
+        raise ValueError(
+            f"{spec.integrand} is fixed at d={ispec.default_dim}, got {spec.dim}")
+    layout = spec.layout()
+    table_shape = ((ispec.n_tables, ispec.table_knots)
+                   if ispec.n_tables else None)
+    kernel = build_vsample_kernel(layout, ispec.fn, table_shape,
+                                  adjust=spec.adjust, hist_mode=spec.hist_mode)
+
+    if spec.adjust:
+        def fn(bins, lo, hi, seed_it, *tables):
+            res, c = kernel(bins, lo, hi, seed_it,
+                            tables[0] if tables else None)
+            return jnp.sum(res, axis=0), jnp.sum(c, axis=0)
+    else:
+        def fn(bins, lo, hi, seed_it, *tables):
+            (res,) = kernel(bins, lo, hi, seed_it,
+                            tables[0] if tables else None)
+            return (jnp.sum(res, axis=0),)
+
+    return fn, layout, table_shape
+
+
+def example_args(spec: ModelSpec):
+    """ShapeDtypeStructs for jit.lower()."""
+    layout = spec.layout()
+    args = [
+        jax.ShapeDtypeStruct((layout.d, layout.nb), jnp.float64),  # bins
+        jax.ShapeDtypeStruct((layout.d,), jnp.float64),            # lo
+        jax.ShapeDtypeStruct((layout.d,), jnp.float64),            # hi
+        jax.ShapeDtypeStruct((2,), jnp.uint32),                    # seed_it
+    ]
+    ispec = integrands.get(spec.integrand)
+    if ispec.n_tables:
+        args.append(jax.ShapeDtypeStruct((ispec.n_tables, ispec.table_knots),
+                                         jnp.float64))
+    return args

@@ -1,0 +1,94 @@
+"""Philox4x32-10 counter-based RNG, vectorized in jnp.
+
+This is the same generator family curand uses (the paper's CUDA kernels
+draw from curand); implementing it identically here, in the Pallas kernel,
+in the pure-jnp oracle, and in Rust (`rust/src/rng/philox.rs`) means every
+backend draws the *same* sample sequence for a given (seed, iteration) —
+the foundation of the cross-layer equivalence tests.
+
+Conventions (Random123): 10 rounds, round-then-bump key schedule.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+# Multiplication constants (Random123 / curand). Plain Python ints so
+# they stay jaxpr literals (Pallas kernels may not close over arrays).
+PHILOX_M0 = 0xD2511F53
+PHILOX_M1 = 0xCD9E8D57
+# Weyl key increments.
+PHILOX_W0 = 0x9E3779B9
+PHILOX_W1 = 0xBB67AE85
+
+# Domain-separation constant baked into counter word 3 ("mCUB").
+CTR_MAGIC = 0x6D435542
+# Key word 1 constant ("mcub").
+KEY_MAGIC = 0x6D637562
+
+
+def _mulhilo(a: jnp.ndarray, b) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Full 32x32 -> 64 bit product, split into (hi, lo) 32-bit words."""
+    prod = a.astype(jnp.uint64) * jnp.uint64(b)
+    hi = (prod >> jnp.uint64(32)).astype(jnp.uint32)
+    lo = prod.astype(jnp.uint32)
+    return hi, lo
+
+
+def philox4x32(c0, c1, c2, c3, k0, k1):
+    """Philox4x32-10 on vectorized uint32 counter/key words.
+
+    All inputs broadcast together; returns four uint32 arrays of the
+    broadcast shape.
+    """
+    c0 = jnp.asarray(c0, jnp.uint32)
+    c1 = jnp.asarray(c1, jnp.uint32)
+    c2 = jnp.asarray(c2, jnp.uint32)
+    c3 = jnp.asarray(c3, jnp.uint32)
+    k0 = jnp.asarray(k0, jnp.uint32)
+    k1 = jnp.asarray(k1, jnp.uint32)
+    for _ in range(10):
+        hi0, lo0 = _mulhilo(c0, PHILOX_M0)
+        hi1, lo1 = _mulhilo(c2, PHILOX_M1)
+        # One Philox round (Random123 ordering).
+        c0, c1, c2, c3 = hi1 ^ c1 ^ k0, lo1, hi0 ^ c3 ^ k1, lo0
+        k0 = (k0 + jnp.uint32(PHILOX_W0)).astype(jnp.uint32)
+        k1 = (k1 + jnp.uint32(PHILOX_W1)).astype(jnp.uint32)
+    return c0, c1, c2, c3
+
+
+def u32_to_unit_f64(u: jnp.ndarray) -> jnp.ndarray:
+    """Map uint32 -> double in the open interval (0, 1)."""
+    return (u.astype(jnp.float64) + 0.5) * (2.0 ** -32)
+
+
+def uniforms(sample_idx: jnp.ndarray, iteration, seed, ndim: int) -> jnp.ndarray:
+    """Draw `ndim` doubles in (0,1) for each entry of `sample_idx`.
+
+    sample_idx : uint32 array (N,) — globally unique sample number
+                 (cube_index * samples_per_cube + sample_in_cube).
+    iteration  : scalar uint32 — VEGAS iteration number (domain separation
+                 so every iteration resamples).
+    seed       : scalar uint32 — user seed (key word 0).
+
+    Counter layout: (sample_idx, draw_block, iteration, CTR_MAGIC);
+    key: (seed, KEY_MAGIC). Each Philox call yields 4 words, so
+    ceil(ndim/4) calls per sample.
+    """
+    sample_idx = jnp.asarray(sample_idx, jnp.uint32)
+    iteration = jnp.asarray(iteration, jnp.uint32)
+    seed = jnp.asarray(seed, jnp.uint32)
+    nblocks = (ndim + 3) // 4
+    cols = []
+    for j in range(nblocks):
+        r0, r1, r2, r3 = philox4x32(
+            sample_idx,
+            jnp.uint32(j),
+            iteration,
+            jnp.uint32(CTR_MAGIC),
+            seed,
+            jnp.uint32(KEY_MAGIC),
+        )
+        cols.extend([r0, r1, r2, r3])
+    u = jnp.stack(cols[:ndim], axis=-1)  # (N, ndim) uint32
+    return u32_to_unit_f64(u)

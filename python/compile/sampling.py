@@ -1,0 +1,117 @@
+"""Core V-Sample math, shared verbatim by the Pallas kernel and the oracle.
+
+Everything here is pure jnp on explicit arrays, so the same code runs
+inside the Pallas kernel body (on values loaded from refs) and in the
+pure-jnp reference (`kernels/ref.py`). The Rust native engine
+(`rust/src/engine/`) reimplements the identical math; cross-layer tests
+pin them together.
+
+Geometry recap (DESIGN.md §VEGAS math): the unit hypercube is cut into
+`g` intervals per axis -> `m = g^d` stratification sub-cubes, and
+independently into `nb` *importance* bins per axis with right edges
+`bins[d, nb]` (monotone, ending at 1.0). A sample is placed uniformly in
+its sub-cube, located within an importance bin, then warped by the bin's
+width (the VEGAS change of variables) and finally affinely mapped to the
+user's integration box [lo, hi]^d.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import philox
+
+
+def cube_coords(cube_idx: jnp.ndarray, g: int, d: int) -> jnp.ndarray:
+    """Decode flat sub-cube index -> (N, d) integer lattice coordinates.
+
+    Digit i (axis i) is `(cube // g^i) % g`; identical decode order in
+    `rust/src/strat/mod.rs`.
+    """
+    cols = []
+    idx = cube_idx.astype(jnp.int64)
+    for _ in range(d):
+        cols.append((idx % g).astype(jnp.float64))
+        idx = idx // g
+    return jnp.stack(cols, axis=-1)
+
+
+def transform(u, coords, bins, lo, hi, nb: int, g: int):
+    """VEGAS change of variables for a batch of samples.
+
+    u      : (N, d) uniforms in (0,1) — position within the sub-cube
+    coords : (N, d) sub-cube lattice coordinates (float)
+    bins   : (d, nb) importance-bin right edges in unit space
+    lo, hi : (d,) integration box
+
+    Returns (x, jac, b): points in integration space (N, d), the per-
+    sample Jacobian (N,), and the per-axis bin index (N, d) int32.
+    """
+    z = (coords + u) / g                    # stratified point, unit space
+    loc = z * nb                            # importance-bin coordinate
+    b = jnp.clip(jnp.floor(loc).astype(jnp.int32), 0, nb - 1)
+    right = jnp.take_along_axis(bins, b.T, axis=1).T
+    left_idx = jnp.maximum(b - 1, 0)
+    left_raw = jnp.take_along_axis(bins, left_idx.T, axis=1).T
+    left = jnp.where(b > 0, left_raw, 0.0)
+    w = right - left                        # bin widths
+    xt = left + (loc - b) * w               # warped unit-space coordinate
+    jac = jnp.prod(nb * w, axis=-1) * jnp.prod(hi - lo)
+    x = lo + xt * (hi - lo)
+    return x, jac, b
+
+
+def draw_uniforms(cube_idx, sample_in_cube, p: int, iteration, seed, d: int):
+    """Philox draws for sample `k` of cube `t`: globally-unique index t*p+k."""
+    sidx = (cube_idx.astype(jnp.int64) * p + sample_in_cube.astype(jnp.int64))
+    return philox.uniforms(sidx.astype(jnp.uint32), iteration, seed, d)
+
+
+def reduce_cubes(v: jnp.ndarray, p: int, m: int):
+    """Per-cube stratified estimate + variance (DESIGN.md §VEGAS math).
+
+    v : (ncubes*p,) sample values f(x)*jac, zeroed for padded cubes.
+    Returns (I_partial, Var_partial) summed over the cubes present.
+    """
+    vc = v.reshape(-1, p)
+    s1 = jnp.sum(vc, axis=1)
+    s2 = jnp.sum(vc * vc, axis=1)
+    mean = s1 / p
+    # Sample variance of the p draws; clamp fp negatives.
+    var = jnp.maximum(s2 / p - mean * mean, 0.0) / (p - 1)
+    i_partial = jnp.sum(mean) / m
+    var_partial = jnp.sum(var) / (m * m)
+    return i_partial, var_partial
+
+
+def bin_histogram(v: jnp.ndarray, b: jnp.ndarray, d: int, nb: int):
+    """Bin contributions C[axis, bin] = sum of v^2 (paper: I_k^2).
+
+    Scatter-add (segment_sum) per axis — the CPU/interpret realization of
+    the paper's atomicAdd histogram. The TPU-faithful realization is a
+    one-hot MXU contraction; see `bin_histogram_onehot`.
+    """
+    v2 = v * v
+    rows = [jax.ops.segment_sum(v2, b[:, i], num_segments=nb) for i in range(d)]
+    return jnp.stack(rows)
+
+
+def bin_histogram_onehot(v: jnp.ndarray, b: jnp.ndarray, d: int, nb: int,
+                         chunk: int = 2048):
+    """One-hot contraction histogram — MXU-shaped, VMEM-tiled.
+
+    C[i, :] = onehot(b[:, i])^T @ v^2 computed in sample chunks of
+    `chunk` so the (chunk, nb) one-hot staging buffer stays inside the
+    VMEM budget (DESIGN.md §Perf-model). Numerically identical to
+    `bin_histogram` up to summation order.
+    """
+    n = v.shape[0]
+    v2 = v * v
+    c = jnp.zeros((d, nb), dtype=v.dtype)
+    ar = jnp.arange(nb, dtype=jnp.int32)
+    for s in range(0, n, chunk):
+        e = min(s + chunk, n)
+        onehot = (b[s:e, :, None] == ar[None, None, :]).astype(v.dtype)
+        c = c + jnp.einsum("n,ndk->dk", v2[s:e], onehot)
+    return c

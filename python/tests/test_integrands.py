@@ -1,0 +1,130 @@
+"""Integrand registry: closed-form spot values + true-value identities."""
+
+import math
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import integrands
+
+
+def pt(*coords):
+    return jnp.asarray([coords], dtype=jnp.float64)
+
+
+def val(arr):
+    """Scalar value of a length-1 result batch."""
+    return float(np.asarray(arr)[0])
+
+
+class TestSpotValues:
+    def test_f1_zero(self):
+        assert val(integrands.f1(pt(0, 0, 0))) == pytest.approx(1.0)
+
+    def test_f1_known(self):
+        # cos(1*x1 + 2*x2) at (pi/2, pi/4) -> cos(pi) = -1
+        v = val(integrands.f1(pt(math.pi / 2, math.pi / 4)))
+        assert v == pytest.approx(-1.0)
+
+    def test_f2_center_peak(self):
+        d = 4
+        v = val(integrands.f2(jnp.full((1, d), 0.5)))
+        assert v == pytest.approx(2500.0 ** d)
+
+    def test_f3_origin(self):
+        assert val(integrands.f3(pt(0, 0, 0))) == pytest.approx(1.0)
+
+    def test_f4_center(self):
+        assert val(integrands.f4(jnp.full((1, 6), 0.5))) == pytest.approx(1.0)
+
+    def test_f5_center(self):
+        assert val(integrands.f5(jnp.full((1, 8), 0.5))) == pytest.approx(1.0)
+
+    def test_f6_discontinuity(self):
+        # d=2: cutoff at x1 < 0.4, x2 < 0.5
+        inside = val(integrands.f6(pt(0.39, 0.49)))
+        outside = val(integrands.f6(pt(0.41, 0.49)))
+        assert inside == pytest.approx(math.exp(5 * 0.39 + 6 * 0.49))
+        assert outside == 0.0
+
+    def test_fA_zero(self):
+        assert val(integrands.fA(jnp.zeros((1, 6)))) == pytest.approx(0.0)
+
+    def test_fB_center(self):
+        v = val(integrands.fB_consistent(jnp.zeros((1, 9))))
+        assert v == pytest.approx((2 * math.pi * 0.01) ** -4.5)
+
+    def test_cosmo_uses_tables(self):
+        spec = integrands.get("cosmo")
+        tables = integrands.make_tables(spec)
+        x = jnp.full((1, 6), 0.25)
+        v1 = val(integrands.cosmo(x, tables))
+        v2 = val(integrands.cosmo(x, tables * 2.0))
+        assert v2 == pytest.approx(4.0 * v1)  # both tables scale
+
+
+class TestTrueValues:
+    """Validate closed forms against brute-force quadrature in low dim."""
+
+    def quad(self, fn, d, n=400, lo=0.0, hi=1.0, tables=None):
+        xs = np.linspace(lo, hi, n + 1)
+        xs = 0.5 * (xs[1:] + xs[:-1])
+        grids = np.meshgrid(*([xs] * d), indexing="ij")
+        pts = jnp.asarray(np.stack([g.ravel() for g in grids], axis=-1))
+        vals = np.asarray(integrands.REGISTRY[fn].fn(pts, tables))
+        return vals.mean() * (hi - lo) ** d
+
+    @pytest.mark.parametrize("name,d,tol", [
+        ("f1", 2, 1e-4), ("f3", 2, 1e-3), ("f5", 2, 1e-4), ("f6", 2, 1e-2),
+    ])
+    def test_quadrature_match(self, name, d, tol):
+        got = self.quad(name, d)
+        want = integrands.true_value(name, d)
+        assert got == pytest.approx(want, rel=tol)
+
+    def test_f2_quadrature(self):
+        # Sharp peak: use many points in 1-D and the product structure.
+        got_1d = self.quad("f2", 1, n=200000)
+        want_1d = 50.0 * 2.0 * math.atan(25.0)
+        assert got_1d == pytest.approx(want_1d, rel=1e-4)
+
+    def test_f4_quadrature_1d(self):
+        got = self.quad("f4", 1, n=100000)
+        assert got == pytest.approx(
+            integrands.true_value("f4", 1), rel=1e-6)
+
+    def test_fA_true_value_matches_paper(self):
+        # Paper Table 1: -49.165073
+        assert integrands.true_value("fA", 6) == pytest.approx(
+            -49.165073, abs=1e-5)
+
+    def test_fB_true_value_near_one(self):
+        assert integrands.true_value("fB", 9) == pytest.approx(1.0, abs=1e-9)
+
+    def test_f3_closed_form_dim1(self):
+        # d=1: int (1+x)^-2 = 1/2
+        assert integrands.true_value("f3", 1) == pytest.approx(0.5)
+
+    def test_cosmo_true_value_stable(self):
+        a = integrands.cosmo_true_value(50001)
+        b = integrands.cosmo_true_value(100001)
+        assert a == pytest.approx(b, rel=1e-7)
+
+
+class TestRegistry:
+    def test_all_names_resolve(self):
+        for name in integrands.REGISTRY:
+            spec = integrands.get(name)
+            assert spec.name == name
+
+    def test_unknown_raises(self):
+        with pytest.raises(KeyError):
+            integrands.get("nope")
+
+    def test_symmetric_flags(self):
+        assert integrands.get("f4").symmetric
+        assert integrands.get("f2").symmetric
+        assert integrands.get("f5").symmetric
+        assert not integrands.get("f3").symmetric
+        assert not integrands.get("f6").symmetric

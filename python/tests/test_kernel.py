@@ -1,0 +1,223 @@
+"""Kernel-vs-oracle: the CORE correctness signal for L1.
+
+The Pallas kernel must reproduce the pure-jnp oracle for every integrand,
+layout, variant, and bin configuration — same Philox stream, same change
+of variables, same reductions (up to fp summation order across blocks).
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile import integrands, model, sampling
+from compile.kernels import ref
+from compile.layout import compute_layout
+from compile.model import ModelSpec
+
+
+def run_both(name, dim, calls, nb=20, nblocks=4, seed=9, it=0,
+             bins=None, adjust=True, hist_mode="scatter"):
+    spec = ModelSpec(name, dim, calls, nb=nb, nblocks=nblocks,
+                     adjust=adjust, hist_mode=hist_mode)
+    fn, layout, _ = model.build(spec)
+    ispec = integrands.get(name)
+    tables = integrands.make_tables(ispec)
+    if bins is None:
+        bins = ref.uniform_bins(dim, nb)
+    lo = jnp.full(dim, ispec.lo)
+    hi = jnp.full(dim, ispec.hi)
+    seed_it = jnp.array([seed, it], dtype=jnp.uint32)
+    args = [bins, lo, hi, seed_it] + ([tables] if tables is not None else [])
+    got = fn(*args)
+    want = ref.vsample_ref(ispec.fn, tables, bins, lo, hi, seed, it, layout,
+                           adjust=adjust)
+    return got, want, layout
+
+
+CASES = [("f1", 5), ("f2", 6), ("f3", 3), ("f3", 8), ("f4", 5),
+         ("f5", 8), ("f6", 6), ("fA", 6), ("fB", 9), ("cosmo", 6)]
+
+
+class TestKernelVsOracle:
+    @pytest.mark.parametrize("name,dim", CASES)
+    def test_adjust_variant(self, name, dim):
+        (res, c), (i_ref, v_ref, c_ref), _ = run_both(name, dim, 4096)
+        np.testing.assert_allclose(float(res[0]), float(i_ref), rtol=1e-12)
+        np.testing.assert_allclose(float(res[1]), float(v_ref), rtol=1e-12)
+        np.testing.assert_allclose(np.asarray(c), np.asarray(c_ref),
+                                   rtol=1e-10, atol=1e-300)
+
+    @pytest.mark.parametrize("name,dim", [("f4", 5), ("fB", 9)])
+    def test_no_adjust_variant(self, name, dim):
+        (res,), (i_ref, v_ref, _), _ = run_both(name, dim, 4096, adjust=False)
+        np.testing.assert_allclose(float(res[0]), float(i_ref), rtol=1e-12)
+        np.testing.assert_allclose(float(res[1]), float(v_ref), rtol=1e-12)
+
+    def test_onehot_hist_matches_scatter(self):
+        (res_s, c_s), _, _ = run_both("f4", 5, 4096, hist_mode="scatter")
+        (res_o, c_o), _, _ = run_both("f4", 5, 4096, hist_mode="onehot")
+        np.testing.assert_allclose(np.asarray(c_s), np.asarray(c_o),
+                                   rtol=1e-10)
+        np.testing.assert_allclose(np.asarray(res_s), np.asarray(res_o),
+                                   rtol=1e-12)
+
+    def test_nonuniform_bins(self):
+        nb = 20
+        edges = (jnp.arange(1, nb + 1) / nb) ** 2.0
+        bins = jnp.tile(edges, (5, 1))
+        (res, c), (i_ref, v_ref, c_ref), _ = run_both(
+            "f4", 5, 4096, bins=bins)
+        np.testing.assert_allclose(float(res[0]), float(i_ref), rtol=1e-12)
+        np.testing.assert_allclose(np.asarray(c), np.asarray(c_ref),
+                                   rtol=1e-10, atol=1e-300)
+
+    def test_block_count_invariance(self):
+        """Partials must sum to the same result for any grid split."""
+        (r1, _), _, _ = run_both("f2", 6, 4096, nblocks=1)
+        (r4, _), _, _ = run_both("f2", 6, 4096, nblocks=4)
+        (r7, _), _, _ = run_both("f2", 6, 4096, nblocks=7)
+        np.testing.assert_allclose(np.asarray(r1), np.asarray(r4), rtol=1e-12)
+        np.testing.assert_allclose(np.asarray(r1), np.asarray(r7), rtol=1e-12)
+
+    def test_seed_changes_result(self):
+        (r1, _), _, _ = run_both("f4", 5, 4096, seed=1)
+        (r2, _), _, _ = run_both("f4", 5, 4096, seed=2)
+        assert float(r1[0]) != float(r2[0])
+
+    def test_iteration_changes_result(self):
+        (r1, _), _, _ = run_both("f4", 5, 4096, it=0)
+        (r2, _), _, _ = run_both("f4", 5, 4096, it=1)
+        assert float(r1[0]) != float(r2[0])
+
+    @given(dim=st.integers(2, 8),
+           logc=st.integers(9, 13),
+           nb=st.sampled_from([10, 20, 50]),
+           nblocks=st.integers(1, 8))
+    @settings(max_examples=12, deadline=None)
+    def test_hypothesis_sweep_f5(self, dim, logc, nb, nblocks):
+        """Shape/layout sweep: kernel == oracle on arbitrary layouts."""
+        (res, c), (i_ref, v_ref, c_ref), layout = run_both(
+            "f5", dim, 1 << logc, nb=nb, nblocks=nblocks)
+        assert c.shape == (dim, nb)
+        np.testing.assert_allclose(float(res[0]), float(i_ref), rtol=1e-11)
+        np.testing.assert_allclose(float(res[1]), float(v_ref), rtol=1e-11)
+        np.testing.assert_allclose(np.asarray(c), np.asarray(c_ref),
+                                   rtol=1e-9, atol=1e-300)
+
+
+class TestEstimateSanity:
+    """First-iteration estimates (uniform grid) are plain stratified MC:
+    they must land within a few sigma of the true value for smooth fns."""
+
+    @pytest.mark.parametrize("name,dim,calls", [
+        ("f5", 4, 1 << 14), ("f3", 3, 1 << 14), ("cosmo", 6, 1 << 14),
+    ])
+    def test_first_iteration_within_5_sigma(self, name, dim, calls):
+        (res, _), _, _ = run_both(name, dim, calls, nb=50, seed=3)
+        true = integrands.true_value(name, dim)
+        i, var = float(res[0]), float(res[1])
+        assert abs(i - true) < 5.0 * np.sqrt(var) + 1e-12
+
+    def test_variance_positive(self):
+        (res, _), _, _ = run_both("f4", 5, 4096)
+        assert float(res[1]) > 0.0
+
+
+class TestLayout:
+    def test_paper_layout_rule(self):
+        lay = compute_layout(5, 1 << 14)
+        assert lay.g == int((lay.calls and (1 << 14) / 2) ** (1 / 5)) or lay.g >= 1
+        assert lay.m == lay.g ** 5
+        assert lay.p >= 2
+        assert lay.m * lay.p == lay.calls
+
+    def test_cubes_cover_calls(self):
+        for d in (1, 2, 3, 6, 10):
+            lay = compute_layout(d, 100000)
+            assert lay.p == max(2, 100000 // lay.m)
+            assert lay.cpb * lay.nblocks >= lay.m
+
+    def test_g_maximal(self):
+        lay = compute_layout(3, 16384)
+        assert (lay.g + 1) ** 3 > 16384 // 2
+
+    def test_rejects_bad_args(self):
+        with pytest.raises(ValueError):
+            compute_layout(0, 1000)
+        with pytest.raises(ValueError):
+            compute_layout(3, 2)
+
+
+class TestSamplingPrimitives:
+    def test_cube_coords_roundtrip(self):
+        g, d = 7, 4
+        idx = jnp.arange(g ** d, dtype=jnp.int64)
+        coords = np.asarray(sampling.cube_coords(idx, g, d))
+        # re-encode
+        enc = sum(coords[:, i] * g ** i for i in range(d))
+        np.testing.assert_array_equal(enc, np.arange(g ** d))
+
+    def test_transform_uniform_bins_is_affine(self):
+        """With uniform bins the VEGAS map must reduce to identity."""
+        d, nb, g = 3, 10, 4
+        n = 1000
+        u = jnp.asarray(np.random.RandomState(0).rand(n, d))
+        coords = jnp.asarray(np.random.RandomState(1).randint(0, g, (n, d)),
+                             dtype=jnp.float64)
+        bins = ref.uniform_bins(d, nb)
+        lo = jnp.zeros(d)
+        hi = jnp.ones(d)
+        x, jac, b = sampling.transform(u, coords, bins, lo, hi, nb, g)
+        z = (coords + u) / g
+        np.testing.assert_allclose(np.asarray(x), np.asarray(z), atol=1e-12)
+        np.testing.assert_allclose(np.asarray(jac), 1.0, rtol=1e-12)
+
+    def test_transform_jacobian_integrates_to_volume(self):
+        """E[jac] over uniform samples = total volume for any bins."""
+        d, nb, g = 2, 16, 8
+        n = 200000
+        rng = np.random.RandomState(2)
+        u = jnp.asarray(rng.rand(n, d))
+        coords = jnp.asarray(rng.randint(0, g, (n, d)), dtype=jnp.float64)
+        edges = (np.arange(1, nb + 1) / nb) ** 1.5
+        edges[-1] = 1.0
+        bins = jnp.asarray(np.tile(edges, (d, 1)))
+        lo = jnp.asarray([0.0, -2.0])
+        hi = jnp.asarray([3.0, 2.0])
+        x, jac, _ = sampling.transform(u, coords, bins, lo, hi, nb, g)
+        vol = 3.0 * 4.0
+        assert float(jnp.mean(jac)) == pytest.approx(vol, rel=5e-2)
+        assert np.all(np.asarray(x) >= np.array([0.0, -2.0]) - 1e-12)
+        assert np.all(np.asarray(x) <= np.array([3.0, 2.0]) + 1e-12)
+
+    def test_histogram_total_mass(self):
+        """sum(C) per axis == sum(v^2) exactly."""
+        n, d, nb = 5000, 3, 25
+        rng = np.random.RandomState(3)
+        v = jnp.asarray(rng.randn(n))
+        b = jnp.asarray(rng.randint(0, nb, (n, d)), dtype=jnp.int32)
+        c = np.asarray(sampling.bin_histogram(v, b, d, nb))
+        for ax in range(d):
+            assert c[ax].sum() == pytest.approx(float(jnp.sum(v * v)),
+                                                rel=1e-12)
+
+    def test_histogram_onehot_equals_scatter(self):
+        n, d, nb = 3000, 4, 30
+        rng = np.random.RandomState(4)
+        v = jnp.asarray(rng.randn(n))
+        b = jnp.asarray(rng.randint(0, nb, (n, d)), dtype=jnp.int32)
+        c1 = np.asarray(sampling.bin_histogram(v, b, d, nb))
+        c2 = np.asarray(sampling.bin_histogram_onehot(v, b, d, nb, chunk=512))
+        np.testing.assert_allclose(c1, c2, rtol=1e-12)
+
+    def test_reduce_cubes_known_values(self):
+        # 2 cubes x 2 samples: v = [1,3, 2,2], m=2, p=2
+        v = jnp.asarray([1.0, 3.0, 2.0, 2.0])
+        i, var = sampling.reduce_cubes(v, p=2, m=2)
+        # means: 2, 2 -> I = (2+2)/2 = 2
+        assert float(i) == pytest.approx(2.0)
+        # cube1 sample var: ((1-2)^2+(3-2)^2)/(2-1)/2 = ... s2/p - mean^2 = (1+9)/2-4=1
+        # var_t = 1/(p-1) = 1 ; cube2: 0 -> Var = (1+0)/m^2 = 0.25
+        assert float(var) == pytest.approx(0.25)

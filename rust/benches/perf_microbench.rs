@@ -1,0 +1,180 @@
+//! Hot-path microbenchmarks (§5.3 analogue + the §Perf iteration log):
+//!   * Philox uniform generation throughput
+//!   * native V-Sample throughput (evals/s) per integrand
+//!   * integrand-evaluation share of total time (paper §5.3: <1%-18%)
+//!   * bin-adjustment (smooth+rebin) cost
+//! CSV: results/perf_microbench.csv
+
+use mcubes::engine::{NativeEngine, VSampleOpts};
+use mcubes::grid::Bins;
+use mcubes::integrands::by_name;
+use mcubes::rng::uniforms_into;
+use mcubes::strat::Layout;
+use mcubes::util::benchkit::{bench, black_box, BenchOpts};
+use mcubes::util::table::Table;
+
+fn main() {
+    let opts = BenchOpts {
+        warmup: 1,
+        runs: 5,
+        ..Default::default()
+    }
+    .quick_aware();
+    let mut csv = Table::new(&["bench", "metric", "value"]);
+
+    // ---- Philox throughput -------------------------------------------
+    {
+        let n = 1_000_000u32;
+        let stats = bench(opts, || {
+            let mut buf = [0.0f64; 8];
+            let mut acc = 0.0;
+            for s in 0..n {
+                uniforms_into(s, 0, 42, &mut buf);
+                acc += buf[0];
+            }
+            black_box(acc)
+        });
+        let per_sec = (n as f64 * 8.0) / (stats.median_ms() / 1e3);
+        println!(
+            "philox: {:.1}M uniforms/s  (1M samples x 8 dims in {:.1} ms)",
+            per_sec / 1e6,
+            stats.median_ms()
+        );
+        csv.row(vec![
+            "philox".into(),
+            "uniforms_per_sec".into(),
+            format!("{per_sec:.0}"),
+        ]);
+    }
+
+    // ---- Engine V-Sample throughput per integrand ---------------------
+    println!("\nnative V-Sample throughput (adjust variant):");
+    let mut table = Table::new(&["integrand", "d", "calls", "ms/iter", "Mevals/s", "eval share"]);
+    for (name, d) in [
+        ("f1", 5),
+        ("f2", 6),
+        ("f3", 8),
+        ("f4", 5),
+        ("f5", 8),
+        ("f6", 6),
+        ("fA", 6),
+        ("fB", 9),
+        ("cosmo", 6),
+    ] {
+        let f = by_name(name, d).unwrap();
+        let calls = 1 << 17;
+        let layout = Layout::compute(d, calls, 50, 8).unwrap();
+        let bins = Bins::uniform(d, 50);
+        let vopts = VSampleOpts {
+            seed: 1,
+            iteration: 0,
+            adjust: true,
+            threads: 1,
+        };
+        let stats = bench(opts, || {
+            black_box(NativeEngine.vsample(&*f, &layout, &bins, &vopts))
+        });
+        // Integrand-evaluation share (paper §5.3): time the bare evals.
+        let mut xs = vec![0.5f64; d];
+        let n_eval = layout.calls();
+        let eval_stats = bench(opts, || {
+            let mut acc = 0.0;
+            for i in 0..n_eval {
+                xs[0] = (i & 1023) as f64 / 1024.0;
+                acc += f.eval(&xs);
+            }
+            black_box(acc)
+        });
+        let share = eval_stats.median_ms() / stats.median_ms() * 100.0;
+        let mevals = layout.calls() as f64 / (stats.median_ms() / 1e3) / 1e6;
+        table.row(vec![
+            name.into(),
+            d.to_string(),
+            layout.calls().to_string(),
+            format!("{:.2}", stats.median_ms()),
+            format!("{mevals:.2}"),
+            format!("{share:.0}%"),
+        ]);
+        csv.row(vec![
+            format!("vsample_{name}"),
+            "mevals_per_sec".into(),
+            format!("{mevals:.3}"),
+        ]);
+        csv.row(vec![
+            format!("evalshare_{name}"),
+            "percent".into(),
+            format!("{share:.1}"),
+        ]);
+    }
+    println!("{}", table.render());
+
+    // ---- Bin adjustment cost ------------------------------------------
+    {
+        let d = 8;
+        let nb = 500; // paper-scale bin count
+        let mut bins = Bins::uniform(d, nb);
+        let contrib: Vec<f64> = (0..d * nb).map(|i| ((i % 97) as f64).sin().abs()).collect();
+        let stats = bench(opts, || {
+            bins.adjust(black_box(&contrib));
+        });
+        println!(
+            "bin adjust (d={d}, nb={nb}): {:.3} ms/iteration",
+            stats.median_ms()
+        );
+        csv.row(vec![
+            "bin_adjust_d8_nb500".into(),
+            "ms".into(),
+            format!("{:.4}", stats.median_ms()),
+        ]);
+    }
+
+    // ---- Adjust vs no-adjust engine delta (two-phase payoff) ----------
+    {
+        let f = by_name("f5", 8).unwrap();
+        let layout = Layout::compute(8, 1 << 17, 50, 8).unwrap();
+        let bins = Bins::uniform(8, 50);
+        let t_adj = bench(opts, || {
+            black_box(NativeEngine.vsample(
+                &*f,
+                &layout,
+                &bins,
+                &VSampleOpts {
+                    seed: 1,
+                    iteration: 0,
+                    adjust: true,
+                    threads: 1,
+                },
+            ))
+        });
+        let t_na = bench(opts, || {
+            black_box(NativeEngine.vsample(
+                &*f,
+                &layout,
+                &bins,
+                &VSampleOpts {
+                    seed: 1,
+                    iteration: 0,
+                    adjust: false,
+                    threads: 1,
+                },
+            ))
+        });
+        println!(
+            "V-Sample vs No-Adjust (f5 d=8): {:.2} ms vs {:.2} ms ({:.1}% saved)",
+            t_adj.median_ms(),
+            t_na.median_ms(),
+            (1.0 - t_na.median_ms() / t_adj.median_ms()) * 100.0
+        );
+        csv.row(vec![
+            "na_saving_f5d8".into(),
+            "percent".into(),
+            format!(
+                "{:.2}",
+                (1.0 - t_na.median_ms() / t_adj.median_ms()) * 100.0
+            ),
+        ]);
+    }
+
+    let _ = csv.write_csv("results/perf_microbench.csv");
+    println!("\nseries written to results/perf_microbench.csv");
+}

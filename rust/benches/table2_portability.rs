@@ -1,0 +1,78 @@
+//! Table 2 reproduction: execution-platform portability overhead.
+//!
+//! Paper: the same algorithm on CUDA vs the Kokkos port, reporting
+//! kernel time vs total time on fA and fB (10-50% overhead).
+//! Substitution (DESIGN.md): our two backends are the AOT PJRT artifact
+//! (primary) and the native Rust engine (portable second platform);
+//! we report kernel vs total time for each on the same workloads.
+//! CSV: results/table2_portability.csv
+
+use mcubes::coordinator::{run_driver, JobConfig, PjrtBackend};
+use mcubes::integrands::by_name;
+use mcubes::runtime::{PjrtRuntime, Registry};
+use mcubes::util::table::Table;
+use std::path::Path;
+
+fn artifacts_dir() -> Option<&'static str> {
+    ["artifacts", "../artifacts"]
+        .into_iter()
+        .find(|d| Path::new(d).join("manifest.json").exists())
+}
+
+fn main() {
+    println!("== Table 2: backend portability (kernel vs total time, ms) ==\n");
+    let Some(dir) = artifacts_dir() else {
+        println!("SKIP: artifacts/ missing — run `make artifacts`");
+        return;
+    };
+    let reg = Registry::load(dir).expect("manifest");
+    let runtime = PjrtRuntime::cpu().expect("pjrt");
+
+    let mut table = Table::new(&["integrand", "platform", "kernel", "total", "kernel %"]);
+    let mut csv = Table::new(&["integrand", "platform", "kernel_ms", "total_ms"]);
+
+    for name in ["fA", "fB"] {
+        let backend = PjrtBackend::load(&runtime, &reg, name, 0).expect("artifact");
+        let meta = backend.meta().clone();
+        let f = by_name(&meta.integrand, meta.dim).expect("integrand");
+        let cfg = JobConfig {
+            maxcalls: meta.maxcalls,
+            nb: meta.nb,
+            nblocks: meta.nblocks,
+            itmax: 10,
+            ita: 7,
+            skip: 1,
+            tau_rel: 1e-13, // fixed work: run all iterations
+            seed: 77,
+            ..Default::default()
+        };
+        // Warm both paths (compile cache, page faults).
+        let _ = run_driver(&backend, &cfg).unwrap();
+        let pjrt_out = run_driver(&backend, &cfg).unwrap();
+        let _ = mcubes::coordinator::integrate_native(&*f, &cfg).unwrap();
+        let native_out = mcubes::coordinator::integrate_native(&*f, &cfg).unwrap();
+
+        for (platform, out) in [("pjrt-aot", &pjrt_out), ("native-rust", &native_out)] {
+            table.row(vec![
+                name.into(),
+                platform.into(),
+                format!("{:.3}", out.kernel_time * 1e3),
+                format!("{:.3}", out.total_time * 1e3),
+                format!("{:.1}%", 100.0 * out.kernel_time / out.total_time),
+            ]);
+            csv.row(vec![
+                name.into(),
+                platform.into(),
+                format!("{:.3}", out.kernel_time * 1e3),
+                format!("{:.3}", out.total_time * 1e3),
+            ]);
+        }
+        let overhead =
+            (pjrt_out.kernel_time / native_out.kernel_time.max(1e-12) - 1.0) * 100.0;
+        println!("{name}: pjrt kernel overhead vs native: {overhead:+.1}%");
+    }
+    println!("\n{}", table.render());
+    println!("(paper shape: second platform within ~10-50% on kernel time)");
+    let _ = csv.write_csv("results/table2_portability.csv");
+    println!("series written to results/table2_portability.csv");
+}

@@ -1,0 +1,253 @@
+//! gVegas simulator — reproduces the *design choices* the paper blames
+//! for gVegas's slowdown (§2.3, §5.2), on our testbed:
+//!
+//! 1. **Every function evaluation is staged through a host buffer** —
+//!    gVegas copies all evals from device to host each iteration; we
+//!    materialize the full eval vector and then do the histogram /
+//!    reduction from that buffer in a second pass (real memory traffic,
+//!    no artificial sleeps).
+//! 2. **Host-side importance histogram** — the bin contributions are
+//!    accumulated on the "host pass" over the staged buffer, serially.
+//! 3. **Per-launch sample cap from GPU memory** — gVegas could only fit
+//!    a limited number of evaluations per launch because the buffer
+//!    lives in device memory; when `maxcalls` exceeds the cap the
+//!    iteration is split into multiple launches, each paying the
+//!    staging + reduction overhead again.
+//! 4. **One thread per sub-cube, no batching** — parallel work items
+//!    are per-cube closures rather than contiguous batched loops
+//!    (boxed-task dispatch overhead mirrors the poor occupancy).
+//!
+//! The VEGAS math itself is identical to the engine, so accuracy
+//! matches m-Cubes; only the organization differs — exactly the paper's
+//! claim.
+
+use super::BaselineResult;
+use crate::estimator::{Convergence, WeightedEstimator};
+use crate::grid::Bins;
+use crate::integrands::Integrand;
+use crate::rng::uniforms_into;
+use crate::strat::Layout;
+use crate::util::threadpool::parallel_chunks;
+use std::time::Instant;
+
+#[derive(Debug, Clone, Copy)]
+pub struct GvegasConfig {
+    pub maxcalls: usize,
+    pub tau_rel: f64,
+    pub itmax: usize,
+    pub ita: usize,
+    pub seed: u32,
+    pub nb: usize,
+    pub threads: usize,
+    /// Per-launch evaluation cap (the simulated GPU-memory limit;
+    /// gVegas allocated one slot per evaluation).
+    pub launch_cap: usize,
+}
+
+impl Default for GvegasConfig {
+    fn default() -> Self {
+        GvegasConfig {
+            maxcalls: 1 << 17,
+            tau_rel: 1e-3,
+            itmax: 15,
+            ita: 10,
+            seed: 42,
+            nb: 50,
+            threads: crate::util::threadpool::default_threads(),
+            launch_cap: 1 << 16,
+        }
+    }
+}
+
+/// Staged evaluation record (what gVegas copies back per sample).
+#[derive(Clone, Copy, Default)]
+struct EvalRecord {
+    v: f64,
+    bins: [u16; 10], // up to 10 dims recorded, like gVegas's fixed dims
+}
+
+pub fn gvegas_integrate(f: &dyn Integrand, cfg: &GvegasConfig) -> BaselineResult {
+    let t0 = Instant::now();
+    let d = f.dim();
+    assert!(d <= 10, "gvegas_sim supports d <= 10");
+    // gVegas's per-iteration sample count is capped by device-memory
+    // allocation (one buffer slot per evaluation) — the paper's §2.3
+    // "number of possible samples is limited". The iteration layout is
+    // therefore computed from the cap, and the iteration budget grows
+    // so the *total* allowed calls matches the uncapped configuration.
+    let per_iter_calls = cfg.maxcalls.min(cfg.launch_cap);
+    let layout = Layout::compute(d, per_iter_calls, cfg.nb, 1).expect("layout");
+    let (lo, hi) = (f.lo(), f.hi());
+    let vol = (hi - lo).powi(d as i32);
+    let nb = cfg.nb;
+
+    let mut bins = Bins::uniform(d, nb);
+    let mut est = WeightedEstimator::new();
+    let conv = Convergence::with_tau(cfg.tau_rel);
+    let mut calls_used = 0usize;
+    let mut iterations = 0usize;
+    let mut converged = false;
+
+    let cap_cubes = (cfg.launch_cap / layout.p).max(1);
+    // Memory-capped iterations are statistically weaker; allow the
+    // iteration count to grow so the total call budget matches what the
+    // uncapped driver would spend (the paper's gVegas runs many more
+    // iterations than m-Cubes for the same target).
+    let itmax = cfg
+        .itmax
+        .saturating_mul((cfg.maxcalls / per_iter_calls).max(1))
+        .min(cfg.itmax * 16);
+    let ita = cfg.ita.saturating_mul((cfg.maxcalls / per_iter_calls).max(1)).min(itmax);
+
+    for it in 0..itmax {
+        let mut i_iter = 0.0;
+        let mut var_iter = 0.0;
+        let mut contrib = vec![0.0f64; d * nb];
+
+        // Split the iteration into launches bounded by the memory cap.
+        let mut cube0 = 0usize;
+        while cube0 < layout.m {
+            let cube1 = (cube0 + cap_cubes).min(layout.m);
+            let n_evals = (cube1 - cube0) * layout.p;
+            // gVegas re-allocates its device buffers each iteration
+            // (early-CUDA design); model that with a fresh allocation
+            // per launch rather than a reused buffer.
+            let mut staged: Vec<EvalRecord> = vec![EvalRecord::default(); n_evals];
+
+            // "Device" phase: evaluate every sample into the staged
+            // buffer; one work item per cube (no batching).
+            let chunks = parallel_chunks(cube1 - cube0, cfg.threads, |a, b| {
+                let mut local: Vec<(usize, EvalRecord)> = Vec::with_capacity((b - a) * layout.p);
+                let mut u = [0.0f64; 10];
+                let mut x = [0.0f64; 10];
+                let mut coords = [0usize; 10];
+                for rel_cube in a..b {
+                    let cube = cube0 + rel_cube;
+                    layout.cube_coords(cube, &mut coords[..d]);
+                    for k in 0..layout.p {
+                        let sidx = (cube * layout.p + k) as u32;
+                        uniforms_into(sidx, it as u32, cfg.seed, &mut u[..d]);
+                        let mut jac = vol;
+                        let mut rec = EvalRecord::default();
+                        for i in 0..d {
+                            let z = (coords[i] as f64 + u[i]) / layout.g as f64;
+                            let loc = z * nb as f64;
+                            let b_ = (loc as usize).min(nb - 1);
+                            let left = bins.left(i, b_);
+                            let w = bins.axis(i)[b_] - left;
+                            let xt = left + (loc - b_ as f64) * w;
+                            jac *= nb as f64 * w;
+                            x[i] = lo + xt * (hi - lo);
+                            rec.bins[i] = b_ as u16;
+                        }
+                        rec.v = f.eval(&x[..d]) * jac;
+                        local.push((rel_cube * layout.p + k, rec));
+                    }
+                }
+                local
+            });
+            // "Copy back": write the records into the staged buffer.
+            for chunk in chunks {
+                for (slot, rec) in chunk {
+                    staged[slot] = rec;
+                }
+            }
+            calls_used += n_evals;
+
+            // "Host" phase: serial pass over the staged buffer for the
+            // per-cube reduction AND the histogram (gVegas does
+            // importance accounting on the CPU).
+            let pf = layout.p as f64;
+            let mf = layout.m as f64;
+            for rel_cube in 0..(cube1 - cube0) {
+                let base = rel_cube * layout.p;
+                let mut s1 = 0.0;
+                let mut s2 = 0.0;
+                for k in 0..layout.p {
+                    let rec = &staged[base + k];
+                    s1 += rec.v;
+                    s2 += rec.v * rec.v;
+                    let v2 = rec.v * rec.v;
+                    for i in 0..d {
+                        contrib[i * nb + rec.bins[i] as usize] += v2;
+                    }
+                }
+                let mean = s1 / pf;
+                let var = ((s2 / pf - mean * mean).max(0.0)) / (pf - 1.0);
+                i_iter += mean / mf;
+                var_iter += var / (mf * mf);
+            }
+            cube0 = cube1;
+        }
+
+        iterations += 1;
+        if it >= 2.min(itmax - 1) {
+            est.push(crate::estimator::IterationResult {
+                integral: i_iter,
+                variance: var_iter,
+            });
+        }
+        if it < ita {
+            bins.adjust(&contrib);
+            if est.iterations() >= 2 && est.chi2_dof() > conv.max_chi2_dof {
+                est.reset();
+            }
+        }
+        if conv.satisfied(&est) {
+            converged = true;
+            break;
+        }
+    }
+
+    BaselineResult {
+        integral: est.integral(),
+        sigma: est.sigma(),
+        calls_used,
+        iterations,
+        total_time: t0.elapsed().as_secs_f64(),
+        converged,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::integrands::by_name;
+
+    #[test]
+    fn gvegas_sim_is_accurate() {
+        // Same math as m-Cubes: must converge to the truth.
+        let f = by_name("f4", 5).unwrap();
+        let r = gvegas_integrate(
+            &*f,
+            &GvegasConfig {
+                maxcalls: 1 << 16,
+                tau_rel: 1e-3,
+                itmax: 25,
+                seed: 9,
+                ..Default::default()
+            },
+        );
+        assert!(r.converged, "{r:?}");
+        let truth = f.true_value().unwrap();
+        assert!(((r.integral - truth) / truth).abs() < 5e-3);
+    }
+
+    #[test]
+    fn launch_cap_splits_launches() {
+        let f = by_name("f5", 4).unwrap();
+        let r = gvegas_integrate(
+            &*f,
+            &GvegasConfig {
+                maxcalls: 1 << 14,
+                launch_cap: 1 << 10, // force many launches
+                tau_rel: 1e-3,
+                itmax: 5,
+                ita: 3,
+                seed: 1,
+                ..Default::default()
+            },
+        );
+        assert!(r.calls_used > 0);
+    }
+}

@@ -1,0 +1,36 @@
+//! The comparators the paper evaluates against (§5):
+//!
+//! * `vegas_serial` — single-threaded classic VEGAS (the CUBA/GSL-style
+//!   CPU baseline used in the §6.1 cosmology comparison).
+//! * `plain_mc` — standard Monte Carlo (GSL "PLAIN").
+//! * `miser` — recursive stratified sampling (GSL MISER).
+//! * `gvegas_sim` — reproduces gVegas's *design choices* (one sample set
+//!   per cube per launch, every function evaluation staged through a
+//!   host buffer, host-side histogram, per-launch sample cap) so the
+//!   Fig. 2 comparison exercises the mechanism the paper blames for
+//!   gVegas's slowdown.
+//! * `zmc_sim` — ZMCintegral-style stratified sampling + heuristic tree
+//!   search (Table 1 comparison).
+
+mod gvegas_sim;
+mod miser;
+mod plain_mc;
+mod vegas_serial;
+mod zmc_sim;
+
+pub use gvegas_sim::{gvegas_integrate, GvegasConfig};
+pub use miser::{miser_integrate, MiserConfig};
+pub use plain_mc::{plain_mc_integrate, PlainMcConfig};
+pub use vegas_serial::vegas_serial_integrate;
+pub use zmc_sim::{zmc_integrate, ZmcConfig};
+
+/// Common result shape for all baselines.
+#[derive(Debug, Clone)]
+pub struct BaselineResult {
+    pub integral: f64,
+    pub sigma: f64,
+    pub calls_used: usize,
+    pub iterations: usize,
+    pub total_time: f64,
+    pub converged: bool,
+}

@@ -1,0 +1,87 @@
+//! Standard Monte Carlo: uniform sampling, sample-mean estimate.
+
+use super::BaselineResult;
+use crate::integrands::Integrand;
+use crate::rng::uniforms_into;
+use std::time::Instant;
+
+#[derive(Debug, Clone, Copy)]
+pub struct PlainMcConfig {
+    pub calls: usize,
+    pub seed: u32,
+}
+
+impl Default for PlainMcConfig {
+    fn default() -> Self {
+        PlainMcConfig {
+            calls: 1 << 20,
+            seed: 42,
+        }
+    }
+}
+
+/// One-shot plain MC estimate over the integrand's box.
+pub fn plain_mc_integrate(f: &dyn Integrand, cfg: &PlainMcConfig) -> BaselineResult {
+    let t0 = Instant::now();
+    let d = f.dim();
+    let (lo, hi) = (f.lo(), f.hi());
+    let vol = (hi - lo).powi(d as i32);
+    let mut x = vec![0.0f64; d];
+    let mut u = vec![0.0f64; d];
+    let mut s1 = 0.0;
+    let mut s2 = 0.0;
+    for s in 0..cfg.calls {
+        uniforms_into(s as u32, 0, cfg.seed, &mut u);
+        for i in 0..d {
+            x[i] = lo + u[i] * (hi - lo);
+        }
+        let v = f.eval(&x) * vol;
+        s1 += v;
+        s2 += v * v;
+    }
+    let n = cfg.calls as f64;
+    let mean = s1 / n;
+    let var = ((s2 / n - mean * mean).max(0.0)) / (n - 1.0);
+    BaselineResult {
+        integral: mean,
+        sigma: var.sqrt(),
+        calls_used: cfg.calls,
+        iterations: 1,
+        total_time: t0.elapsed().as_secs_f64(),
+        converged: true,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::integrands::by_name;
+
+    #[test]
+    fn estimates_smooth_integral() {
+        let f = by_name("f5", 3).unwrap();
+        let r = plain_mc_integrate(
+            &*f,
+            &PlainMcConfig {
+                calls: 200_000,
+                seed: 7,
+            },
+        );
+        let truth = f.true_value().unwrap();
+        assert!(
+            (r.integral - truth).abs() < 5.0 * r.sigma,
+            "I={} truth={truth} sigma={}",
+            r.integral,
+            r.sigma
+        );
+    }
+
+    #[test]
+    fn sigma_shrinks_with_calls() {
+        let f = by_name("f3", 3).unwrap();
+        let a = plain_mc_integrate(&*f, &PlainMcConfig { calls: 10_000, seed: 1 });
+        let b = plain_mc_integrate(&*f, &PlainMcConfig { calls: 160_000, seed: 1 });
+        // 16x samples -> ~4x smaller sigma
+        assert!(b.sigma < a.sigma / 2.0, "a={} b={}", a.sigma, b.sigma);
+    }
+}

@@ -1,0 +1,63 @@
+//! Serial VEGAS — the single-threaded CPU baseline (CUBA-style).
+//!
+//! Algorithmically identical to the m-Cubes driver with the native
+//! engine pinned to one thread; packaged separately so benches can
+//! present it as the paper's "serial Vegas" comparator (§6.1) without
+//! accidentally inheriting coordinator parallelism.
+
+use super::BaselineResult;
+use crate::coordinator::{integrate_native, JobConfig};
+use crate::integrands::Integrand;
+
+/// Run serial VEGAS to `tau_rel` with the given per-iteration budget.
+pub fn vegas_serial_integrate(
+    f: &dyn Integrand,
+    maxcalls: usize,
+    tau_rel: f64,
+    itmax: usize,
+    seed: u32,
+) -> BaselineResult {
+    let cfg = JobConfig {
+        maxcalls,
+        tau_rel,
+        itmax,
+        ita: (itmax * 2).div_ceil(3),
+        skip: if itmax > 4 { 2 } else { 0 },
+        seed,
+        threads: 1, // serial by definition
+        ..Default::default()
+    };
+    match integrate_native(f, &cfg) {
+        Ok(o) => BaselineResult {
+            integral: o.integral,
+            sigma: o.sigma,
+            calls_used: o.calls_used,
+            iterations: o.iterations,
+            total_time: o.total_time,
+            converged: o.converged,
+        },
+        Err(_) => BaselineResult {
+            integral: f64::NAN,
+            sigma: f64::INFINITY,
+            calls_used: 0,
+            iterations: 0,
+            total_time: 0.0,
+            converged: false,
+        },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::integrands::by_name;
+
+    #[test]
+    fn serial_vegas_converges() {
+        let f = by_name("f4", 5).unwrap();
+        let r = vegas_serial_integrate(&*f, 1 << 16, 1e-3, 25, 3);
+        assert!(r.converged);
+        let truth = f.true_value().unwrap();
+        assert!(((r.integral - truth) / truth).abs() < 5e-3);
+    }
+}

@@ -1,0 +1,155 @@
+//! Execution backends for one V-Sample pass.
+//!
+//! The driver is backend-agnostic: `PjrtBackend` runs the AOT Pallas
+//! artifact through PJRT (the paper's GPU kernel), `NativeBackend` runs
+//! the Rust engine (the paper's Kokkos-style second platform). Both
+//! draw identical Philox streams, so for the same (seed, iteration) the
+//! results agree to summation-order tolerance.
+
+use crate::engine::{NativeEngine, VSampleOpts};
+use crate::error::Result;
+use crate::estimator::IterationResult;
+use crate::grid::Bins;
+use crate::integrands::Integrand;
+use crate::runtime::{ArtifactMeta, PjrtRuntime, Registry, VSampleExecutable};
+use crate::strat::Layout;
+use std::sync::Arc;
+
+/// One V-Sample pass provider.
+pub trait VSampleBackend {
+    /// Stratification layout (fixed per backend instance).
+    fn layout(&self) -> Layout;
+    /// Integration-box bounds (lo, hi), same on every axis.
+    fn bounds(&self) -> (f64, f64);
+    /// Backend label for reports ("pjrt" / "native").
+    fn name(&self) -> &'static str;
+    /// Run one iteration; histogram returned only when `adjust`.
+    fn run(
+        &self,
+        bins: &Bins,
+        seed: u32,
+        iteration: u32,
+        adjust: bool,
+    ) -> Result<(IterationResult, Option<Vec<f64>>)>;
+}
+
+/// Native-engine backend.
+pub struct NativeBackend {
+    integrand: Arc<dyn Integrand>,
+    layout: Layout,
+    threads: usize,
+}
+
+impl NativeBackend {
+    pub fn new(integrand: Arc<dyn Integrand>, layout: Layout, threads: usize) -> Self {
+        NativeBackend {
+            integrand,
+            layout,
+            threads,
+        }
+    }
+}
+
+impl VSampleBackend for NativeBackend {
+    fn layout(&self) -> Layout {
+        self.layout
+    }
+
+    fn bounds(&self) -> (f64, f64) {
+        (self.integrand.lo(), self.integrand.hi())
+    }
+
+    fn name(&self) -> &'static str {
+        "native"
+    }
+
+    fn run(
+        &self,
+        bins: &Bins,
+        seed: u32,
+        iteration: u32,
+        adjust: bool,
+    ) -> Result<(IterationResult, Option<Vec<f64>>)> {
+        let opts = VSampleOpts {
+            seed,
+            iteration,
+            adjust,
+            threads: self.threads,
+        };
+        Ok(NativeEngine.vsample(&*self.integrand, &self.layout, bins, &opts))
+    }
+}
+
+/// PJRT-artifact backend: holds the adjust and no-adjust executables
+/// for one (integrand, calls) pair (the paper's V-Sample /
+/// V-Sample-No-Adjust kernel pair).
+pub struct PjrtBackend {
+    adj: Arc<VSampleExecutable>,
+    na: Option<Arc<VSampleExecutable>>,
+}
+
+impl PjrtBackend {
+    /// Load from a registry: picks the smallest artifact pair with
+    /// `maxcalls >= min_calls` for `integrand`.
+    pub fn load(
+        runtime: &PjrtRuntime,
+        registry: &Registry,
+        integrand: &str,
+        min_calls: usize,
+    ) -> Result<PjrtBackend> {
+        let adj_meta = registry.select(integrand, true, min_calls)?;
+        let adj = runtime.load(registry, adj_meta)?;
+        // The no-adjust twin is optional; fall back to the adjust
+        // executable (correct, just slower) when absent.
+        let na = registry
+            .select(integrand, false, adj_meta.maxcalls)
+            .ok()
+            .filter(|m| m.maxcalls == adj_meta.maxcalls)
+            .map(|m| runtime.load(registry, m))
+            .transpose()?;
+        Ok(PjrtBackend { adj, na })
+    }
+
+    pub fn from_executables(
+        adj: Arc<VSampleExecutable>,
+        na: Option<Arc<VSampleExecutable>>,
+    ) -> PjrtBackend {
+        PjrtBackend { adj, na }
+    }
+
+    pub fn meta(&self) -> &ArtifactMeta {
+        self.adj.meta()
+    }
+}
+
+impl VSampleBackend for PjrtBackend {
+    fn layout(&self) -> Layout {
+        self.adj.meta().layout()
+    }
+
+    fn bounds(&self) -> (f64, f64) {
+        (self.adj.meta().lo, self.adj.meta().hi)
+    }
+
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn run(
+        &self,
+        bins: &Bins,
+        seed: u32,
+        iteration: u32,
+        adjust: bool,
+    ) -> Result<(IterationResult, Option<Vec<f64>>)> {
+        if adjust {
+            self.adj.vsample(bins, seed, iteration)
+        } else if let Some(na) = &self.na {
+            na.vsample(bins, seed, iteration)
+        } else {
+            // Fall back: run the adjust kernel, drop the histogram.
+            let (r, _) = self.adj.vsample(bins, seed, iteration)?;
+            Ok((r, None))
+        }
+    }
+}

@@ -1,0 +1,382 @@
+//! The m-Cubes iteration driver (Algorithm 2): two-phase loop with bin
+//! adjustment, weighted estimates, chi^2 guard, and convergence checks.
+
+use super::backend::VSampleBackend;
+use crate::error::{Error, Result};
+use crate::estimator::{Convergence, WeightedEstimator};
+use crate::grid::{Bins, GridMode};
+use crate::integrands::Integrand;
+use crate::strat::Layout;
+use crate::util::threadpool::default_threads;
+use std::time::Instant;
+
+/// Everything the driver needs to know about one integration job.
+#[derive(Debug, Clone)]
+pub struct JobConfig {
+    /// Evaluation budget per iteration (Algorithm 2 `maxcalls`).
+    pub maxcalls: usize,
+    /// Importance bins per axis.
+    pub nb: usize,
+    /// Grid programs / thread groups (must match artifact for PJRT).
+    pub nblocks: usize,
+    /// Target relative error.
+    pub tau_rel: f64,
+    /// Total iteration cap (Algorithm 2 `itmax`).
+    pub itmax: usize,
+    /// Iterations with bin adjustment (Algorithm 2 `ita`).
+    pub ita: usize,
+    /// Iterations to discard from the weighted estimate (importance-grid
+    /// warm-up). Keeps early wildly-off iterations from polluting the
+    /// combined estimate (the paper's chi^2 criterion, §5.1).
+    pub skip: usize,
+    /// Reset the estimator when chi2/dof blows past the convergence
+    /// guard during the adjust phase (recovers from a bad warm-up).
+    pub reset_on_inconsistency: bool,
+    /// RNG seed.
+    pub seed: u32,
+    /// Grid mode: PerAxis (m-Cubes) or Shared1D (m-Cubes1D).
+    pub grid_mode: GridMode,
+    /// Worker threads for the native engine.
+    pub threads: usize,
+}
+
+impl Default for JobConfig {
+    fn default() -> Self {
+        JobConfig {
+            maxcalls: 1 << 17,
+            nb: 50,
+            nblocks: 8,
+            tau_rel: 1e-3,
+            itmax: 15,
+            ita: 10,
+            skip: 2,
+            reset_on_inconsistency: true,
+            seed: 42,
+            grid_mode: GridMode::PerAxis,
+            threads: default_threads(),
+        }
+    }
+}
+
+impl JobConfig {
+    pub fn validate(&self) -> Result<()> {
+        if self.itmax == 0 {
+            return Err(Error::Config("itmax must be >= 1".into()));
+        }
+        if self.ita > self.itmax {
+            return Err(Error::Config(format!(
+                "ita {} > itmax {}",
+                self.ita, self.itmax
+            )));
+        }
+        if !(self.tau_rel > 0.0) {
+            return Err(Error::Config("tau_rel must be > 0".into()));
+        }
+        if self.skip >= self.itmax {
+            return Err(Error::Config(format!(
+                "skip {} >= itmax {}",
+                self.skip, self.itmax
+            )));
+        }
+        Ok(())
+    }
+
+    /// Convergence policy derived from this config.
+    pub fn convergence(&self) -> Convergence {
+        Convergence::with_tau(self.tau_rel)
+    }
+}
+
+/// Final result of an integration job.
+#[derive(Debug, Clone)]
+pub struct IntegrationOutput {
+    pub integral: f64,
+    pub sigma: f64,
+    pub chi2_dof: f64,
+    pub rel_err: f64,
+    pub iterations: usize,
+    pub converged: bool,
+    /// Total integrand evaluations consumed.
+    pub calls_used: usize,
+    /// Wall time of the whole job (seconds).
+    pub total_time: f64,
+    /// Time inside backend.run — the paper's "kernel time" (seconds).
+    pub kernel_time: f64,
+    /// Backend label.
+    pub backend: &'static str,
+}
+
+/// Detailed per-iteration trace (used by benches/ablations).
+#[derive(Debug, Clone, Default)]
+pub struct DriverOutput {
+    pub output: Option<IntegrationOutput>,
+    pub iteration_estimates: Vec<(f64, f64)>, // (I_j, sigma_j)
+}
+
+/// Run the two-phase m-Cubes loop on any backend.
+pub fn run_driver(backend: &dyn VSampleBackend, cfg: &JobConfig) -> Result<IntegrationOutput> {
+    let (out, _) = run_driver_traced(backend, cfg)?;
+    Ok(out)
+}
+
+/// Like `run_driver` but also returns the per-iteration estimates.
+pub fn run_driver_traced(
+    backend: &dyn VSampleBackend,
+    cfg: &JobConfig,
+) -> Result<(IntegrationOutput, DriverOutput)> {
+    cfg.validate()?;
+    let layout = backend.layout();
+    let conv = cfg.convergence();
+    let mut bins = Bins::uniform_mode(layout.d, layout.nb, cfg.grid_mode);
+    let mut est = WeightedEstimator::new();
+    let mut trace = DriverOutput::default();
+
+    let t_start = Instant::now();
+    let mut kernel_time = 0.0f64;
+    let mut calls_used = 0usize;
+    let mut iterations = 0usize;
+    let mut converged = false;
+
+    for it in 0..cfg.itmax {
+        let adjust = it < cfg.ita;
+        let t0 = Instant::now();
+        let (r, contrib) = backend.run(&bins, cfg.seed, it as u32, adjust)?;
+        kernel_time += t0.elapsed().as_secs_f64();
+        calls_used += layout.calls();
+        iterations += 1;
+
+        if it >= cfg.skip {
+            est.push(r);
+        }
+        trace.iteration_estimates.push((r.integral, r.variance.sqrt()));
+
+        // Grid refinement happens before the convergence decision so a
+        // converged final iteration still leaves an adapted grid behind.
+        if adjust {
+            if let Some(c) = contrib {
+                bins.adjust(&c);
+            }
+            if cfg.reset_on_inconsistency
+                && est.iterations() >= 2
+                && est.chi2_dof() > conv.max_chi2_dof
+            {
+                // Importance grid was still moving: drop the stale
+                // estimates, keep the (better) grid.
+                est.reset();
+            }
+        }
+
+        if conv.satisfied(&est) {
+            converged = true;
+            break;
+        }
+    }
+
+    let output = IntegrationOutput {
+        integral: est.integral(),
+        sigma: est.sigma(),
+        chi2_dof: est.chi2_dof(),
+        rel_err: est.rel_err(),
+        iterations,
+        converged,
+        calls_used,
+        total_time: t_start.elapsed().as_secs_f64(),
+        kernel_time,
+        backend: backend.name(),
+    };
+    trace.output = Some(output.clone());
+    Ok((output, trace))
+}
+
+/// Convenience: integrate `f` with the native engine.
+pub fn integrate_native(f: &dyn Integrand, cfg: &JobConfig) -> Result<IntegrationOutput> {
+    let layout = Layout::compute(f.dim(), cfg.maxcalls, cfg.nb, cfg.nblocks)?;
+    // NativeBackend holds an Arc; wrap via a thin adapter around &dyn.
+    struct Borrowed<'a> {
+        f: &'a dyn Integrand,
+        layout: Layout,
+        threads: usize,
+    }
+    impl<'a> VSampleBackend for Borrowed<'a> {
+        fn layout(&self) -> Layout {
+            self.layout
+        }
+        fn bounds(&self) -> (f64, f64) {
+            (self.f.lo(), self.f.hi())
+        }
+        fn name(&self) -> &'static str {
+            "native"
+        }
+        fn run(
+            &self,
+            bins: &Bins,
+            seed: u32,
+            iteration: u32,
+            adjust: bool,
+        ) -> Result<(crate::estimator::IterationResult, Option<Vec<f64>>)> {
+            let opts = crate::engine::VSampleOpts {
+                seed,
+                iteration,
+                adjust,
+                threads: self.threads,
+            };
+            Ok(crate::engine::NativeEngine.vsample(self.f, &self.layout, bins, &opts))
+        }
+    }
+    let backend = Borrowed {
+        f,
+        layout,
+        threads: cfg.threads,
+    };
+    run_driver(&backend, cfg)
+}
+
+/// Escalating-precision integration: runs the driver at increasing call
+/// budgets (x`escalation_factor` per step) until `tau_rel` is met,
+/// carrying the adapted grid across levels — the strategy behind the
+/// paper's high-precision runs (Fig. 1/2).
+pub fn integrate_native_adaptive(
+    f: &dyn Integrand,
+    base: &JobConfig,
+    max_escalations: usize,
+    escalation_factor: usize,
+) -> Result<IntegrationOutput> {
+    let mut cfg = base.clone();
+    let mut last: Option<IntegrationOutput> = None;
+    let mut total_time = 0.0;
+    let mut kernel_time = 0.0;
+    let mut calls_used = 0;
+    let mut iterations = 0;
+    for level in 0..=max_escalations {
+        let out = integrate_native(f, &cfg)?;
+        total_time += out.total_time;
+        kernel_time += out.kernel_time;
+        calls_used += out.calls_used;
+        iterations += out.iterations;
+        let converged = out.converged;
+        last = Some(IntegrationOutput {
+            total_time,
+            kernel_time,
+            calls_used,
+            iterations,
+            ..out
+        });
+        if converged {
+            break;
+        }
+        if level < max_escalations {
+            cfg.maxcalls *= escalation_factor;
+            // Fresh seed per level so escalations resample.
+            cfg.seed = cfg.seed.wrapping_add(0x9E37_79B9);
+        }
+    }
+    last.ok_or_else(|| Error::Config("no escalation levels ran".into()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::integrands::by_name;
+
+    fn cfg(calls: usize, tau: f64) -> JobConfig {
+        JobConfig {
+            maxcalls: calls,
+            nb: 50,
+            tau_rel: tau,
+            itmax: 15,
+            ita: 10,
+            skip: 2,
+            seed: 11,
+            threads: 4,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn converges_on_smooth_integrands() {
+        for (name, d, calls) in [("f5", 8, 1 << 15), ("f3", 3, 1 << 14), ("f2", 6, 1 << 15)] {
+            let f = by_name(name, d).unwrap();
+            let out = integrate_native(&*f, &cfg(calls, 1e-3)).unwrap();
+            assert!(out.converged, "{name} did not converge: {out:?}");
+            let truth = f.true_value().unwrap();
+            let rel = ((out.integral - truth) / truth).abs();
+            // 1e-3 claimed; allow 5x for statistical slop across seeds.
+            assert!(rel < 5e-3, "{name}: rel err {rel}, out {out:?}");
+            assert!(out.chi2_dof < 5.0, "{name}: chi2 {}", out.chi2_dof);
+        }
+    }
+
+    #[test]
+    fn error_estimate_is_honest() {
+        // |estimate - truth| should usually be within ~3 claimed sigmas.
+        let f = by_name("f4", 5).unwrap();
+        let out = integrate_native(&*f, &cfg(1 << 15, 1e-3)).unwrap();
+        let truth = f.true_value().unwrap();
+        assert!(
+            (out.integral - truth).abs() < 4.0 * out.sigma,
+            "bias: {} vs sigma {}",
+            (out.integral - truth).abs(),
+            out.sigma
+        );
+    }
+
+    #[test]
+    fn two_phase_runs_na_iterations() {
+        let f = by_name("f5", 4).unwrap();
+        let mut c = cfg(1 << 12, 1e-12); // unreachable tau: run all iters
+        c.itmax = 6;
+        c.ita = 3;
+        c.skip = 0;
+        let out = integrate_native(&*f, &c).unwrap();
+        assert!(!out.converged);
+        assert_eq!(out.iterations, 6);
+        assert_eq!(out.calls_used, 6 * Layout::compute(4, 1 << 12, 50, 8).unwrap().calls());
+    }
+
+    #[test]
+    fn validates_config() {
+        let f = by_name("f4", 5).unwrap();
+        let mut c = cfg(1 << 12, 1e-3);
+        c.ita = 99;
+        c.itmax = 5;
+        assert!(integrate_native(&*f, &c).is_err());
+        let mut c2 = cfg(1 << 12, 1e-3);
+        c2.skip = 20;
+        c2.itmax = 10;
+        assert!(integrate_native(&*f, &c2).is_err());
+    }
+
+    #[test]
+    fn adaptive_escalates_until_converged() {
+        let f = by_name("f4", 8).unwrap();
+        let mut base = cfg(1 << 12, 1e-3);
+        base.itmax = 10;
+        base.ita = 8;
+        let out = integrate_native_adaptive(&*f, &base, 4, 4).unwrap();
+        assert!(out.converged, "{out:?}");
+        let truth = f.true_value().unwrap();
+        let rel = ((out.integral - truth) / truth).abs();
+        assert!(rel < 1e-2, "rel {rel}");
+    }
+
+    #[test]
+    fn onedim_mode_works_on_symmetric() {
+        let f = by_name("f4", 5).unwrap();
+        let mut c = cfg(1 << 15, 1e-3);
+        c.itmax = 20;
+        c.grid_mode = GridMode::Shared1D;
+        let out = integrate_native(&*f, &c).unwrap();
+        assert!(out.converged, "{out:?}");
+        let truth = f.true_value().unwrap();
+        assert!(((out.integral - truth) / truth).abs() < 5e-3);
+    }
+
+    #[test]
+    fn seed_reproducibility() {
+        let f = by_name("f3", 3).unwrap();
+        let a = integrate_native(&*f, &cfg(1 << 13, 1e-3)).unwrap();
+        let b = integrate_native(&*f, &cfg(1 << 13, 1e-3)).unwrap();
+        assert_eq!(a.integral, b.integral);
+        assert_eq!(a.sigma, b.sigma);
+    }
+}

@@ -1,0 +1,14 @@
+//! L3 coordinator — the paper's host-side contribution: the two-phase
+//! m-Cubes iteration driver (Algorithm 2), backend abstraction over
+//! PJRT artifacts / the native engine, and an integration job service.
+
+mod backend;
+mod driver;
+mod service;
+
+pub use backend::{NativeBackend, PjrtBackend, VSampleBackend};
+pub use driver::{
+    integrate_native, integrate_native_adaptive, run_driver, run_driver_traced, DriverOutput,
+    IntegrationOutput, JobConfig,
+};
+pub use service::{IntegrationService, JobRequest, JobResult, ServiceMetrics};

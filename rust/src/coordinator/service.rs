@@ -1,0 +1,219 @@
+//! Integration job service: a leader queue + worker pool that runs
+//! many integration jobs concurrently and reports latency/throughput —
+//! the serving shell around the m-Cubes driver (exercised end-to-end by
+//! `examples/service_demo.rs`).
+
+use super::driver::{integrate_native, IntegrationOutput, JobConfig};
+use crate::error::{Error, Result};
+use crate::integrands::by_name;
+use crate::util::benchkit::percentile_sorted;
+use crate::util::threadpool::WorkerPool;
+use std::sync::mpsc::{channel, Receiver, Sender};
+ 
+use std::time::Instant;
+
+/// A queued integration request.
+#[derive(Debug, Clone)]
+pub struct JobRequest {
+    pub id: u64,
+    pub integrand: String,
+    pub dim: usize,
+    pub config: JobConfig,
+}
+
+/// The completed job with timing metadata.
+#[derive(Debug, Clone)]
+pub struct JobResult {
+    pub id: u64,
+    pub integrand: String,
+    pub dim: usize,
+    pub outcome: std::result::Result<IntegrationOutput, String>,
+    /// Seconds spent queued before a worker picked the job up.
+    pub queue_time: f64,
+    /// End-to-end latency (enqueue -> completion), seconds.
+    pub latency: f64,
+}
+
+/// Aggregate service metrics.
+#[derive(Debug, Clone)]
+pub struct ServiceMetrics {
+    pub jobs: usize,
+    pub failures: usize,
+    pub wall_time: f64,
+    pub throughput: f64,
+    pub latency_p50: f64,
+    pub latency_p95: f64,
+    pub latency_max: f64,
+    pub mean_queue_time: f64,
+}
+
+/// The service: submit jobs, then `drain()` for results + metrics.
+pub struct IntegrationService {
+    pool: WorkerPool,
+    tx: Sender<JobResult>,
+    rx: Receiver<JobResult>,
+    submitted: usize,
+    started: Instant,
+}
+
+impl IntegrationService {
+    /// Spawn a service with `workers` native-engine workers.
+    ///
+    /// Each job runs single-threaded internally (`config.threads` is
+    /// overridden to 1) so throughput scales with the worker count —
+    /// the batching strategy the paper's uniform-workload argument
+    /// suggests for many concurrent integrals.
+    pub fn new(workers: usize) -> IntegrationService {
+        let (tx, rx) = channel();
+        IntegrationService {
+            pool: WorkerPool::new(workers),
+            tx,
+            rx,
+            submitted: 0,
+            started: Instant::now(),
+        }
+    }
+
+    /// Enqueue one job.
+    pub fn submit(&mut self, req: JobRequest) {
+        let tx = self.tx.clone();
+        let enqueued = Instant::now();
+        self.submitted += 1;
+        self.pool.submit(move || {
+            let queue_time = enqueued.elapsed().as_secs_f64();
+            let mut cfg = req.config.clone();
+            cfg.threads = 1;
+            let outcome = by_name(&req.integrand, req.dim)
+                .and_then(|f| integrate_native(&*f, &cfg))
+                .map_err(|e| e.to_string());
+            let _ = tx.send(JobResult {
+                id: req.id,
+                integrand: req.integrand,
+                dim: req.dim,
+                outcome,
+                queue_time,
+                latency: enqueued.elapsed().as_secs_f64(),
+            });
+        });
+    }
+
+    /// Wait for all submitted jobs and compute metrics.
+    pub fn drain(self) -> Result<(Vec<JobResult>, ServiceMetrics)> {
+        let IntegrationService {
+            pool,
+            tx,
+            rx,
+            submitted,
+            started,
+        } = self;
+        drop(tx); // our clone; workers hold theirs until done
+        let mut results = Vec::with_capacity(submitted);
+        for _ in 0..submitted {
+            let r = rx
+                .recv()
+                .map_err(|_| Error::Runtime("worker channel closed early".into()))?;
+            results.push(r);
+        }
+        pool.shutdown();
+        let wall_time = started.elapsed().as_secs_f64();
+
+        let mut latencies: Vec<f64> = results.iter().map(|r| r.latency).collect();
+        latencies.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let failures = results.iter().filter(|r| r.outcome.is_err()).count();
+        let metrics = ServiceMetrics {
+            jobs: results.len(),
+            failures,
+            wall_time,
+            throughput: results.len() as f64 / wall_time.max(1e-9),
+            latency_p50: percentile_sorted(&latencies, 50.0),
+            latency_p95: percentile_sorted(&latencies, 95.0),
+            latency_max: latencies.last().copied().unwrap_or(0.0),
+            mean_queue_time: results.iter().map(|r| r.queue_time).sum::<f64>()
+                / results.len().max(1) as f64,
+        };
+        results.sort_by_key(|r| r.id);
+        Ok((results, metrics))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quick_cfg() -> JobConfig {
+        JobConfig {
+            maxcalls: 1 << 12,
+            itmax: 8,
+            ita: 6,
+            skip: 1,
+            tau_rel: 5e-3,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn runs_batch_of_jobs() {
+        let mut svc = IntegrationService::new(4);
+        for i in 0..12u64 {
+            svc.submit(JobRequest {
+                id: i,
+                integrand: "f5".into(),
+                dim: 4,
+                config: JobConfig {
+                    seed: 100 + i as u32,
+                    ..quick_cfg()
+                },
+            });
+        }
+        let (results, metrics) = svc.drain().unwrap();
+        assert_eq!(results.len(), 12);
+        assert_eq!(metrics.jobs, 12);
+        assert_eq!(metrics.failures, 0);
+        assert!(metrics.throughput > 0.0);
+        // ids come back sorted
+        for (i, r) in results.iter().enumerate() {
+            assert_eq!(r.id, i as u64);
+            assert!(r.outcome.is_ok());
+        }
+    }
+
+    #[test]
+    fn bad_integrand_reports_failure_not_panic() {
+        let mut svc = IntegrationService::new(2);
+        svc.submit(JobRequest {
+            id: 0,
+            integrand: "nope".into(),
+            dim: 3,
+            config: quick_cfg(),
+        });
+        svc.submit(JobRequest {
+            id: 1,
+            integrand: "f5".into(),
+            dim: 3,
+            config: quick_cfg(),
+        });
+        let (results, metrics) = svc.drain().unwrap();
+        assert_eq!(metrics.failures, 1);
+        assert!(results[0].outcome.is_err());
+        assert!(results[1].outcome.is_ok());
+    }
+
+    #[test]
+    fn latency_accounting_sane() {
+        let mut svc = IntegrationService::new(1);
+        for i in 0..3 {
+            svc.submit(JobRequest {
+                id: i,
+                integrand: "f3".into(),
+                dim: 3,
+                config: quick_cfg(),
+            });
+        }
+        let (results, metrics) = svc.drain().unwrap();
+        for r in &results {
+            assert!(r.latency >= r.queue_time);
+        }
+        assert!(metrics.latency_p95 >= metrics.latency_p50);
+        assert!(metrics.latency_max >= metrics.latency_p95);
+    }
+}

@@ -1,0 +1,360 @@
+//! Adaptive stratification — the paper's footnote-4 extension (the
+//! "later versions of the algorithm deploy adaptive stratification
+//! that adjust the number of integral estimates used in each
+//! sub-cube", Lepage 2021 "VEGAS enhanced").
+//!
+//! Instead of a uniform `p` samples per sub-cube, each cube's sample
+//! count is re-allocated every iteration proportionally to a damped
+//! power of its accumulated sigma: `n_t ∝ sigma_t^(2β)` with β = 0.75
+//! (Lepage's default), floored at 2 so every cube keeps a variance
+//! estimate. This is exactly the *non-uniform workload* the m-Cubes
+//! uniform mapping deliberately avoids on GPUs; shipping both lets the
+//! ablation bench quantify the trade (statistical efficiency vs
+//! workload balance).
+//!
+//! Counter mapping: sample k of cube t draws Philox index
+//! `offset[t] + k` where `offset` is the exclusive prefix sum of the
+//! per-cube counts — deterministic and collision-free per iteration.
+
+use super::MAX_DIM;
+use crate::estimator::IterationResult;
+use crate::grid::Bins;
+use crate::integrands::Integrand;
+use crate::rng::uniforms_into;
+use crate::strat::Layout;
+use crate::util::threadpool::parallel_chunks;
+
+/// Damping exponent for sample re-allocation (Lepage 2021 uses
+/// beta = 0.75; beta = 0 recovers uniform allocation).
+pub const BETA: f64 = 0.75;
+
+/// Per-iteration state of the adaptive-stratification sampler.
+#[derive(Debug, Clone)]
+pub struct StratState {
+    /// Samples allocated to each cube this iteration.
+    pub counts: Vec<u32>,
+    /// Exclusive prefix sums of `counts` (Philox offsets).
+    pub offsets: Vec<u32>,
+    /// Damped per-cube sigma accumulator driving the allocation.
+    pub sigmas: Vec<f64>,
+}
+
+impl StratState {
+    /// Uniform initial allocation (the m-Cubes layout).
+    pub fn uniform(layout: &Layout) -> StratState {
+        let counts = vec![layout.p as u32; layout.m];
+        let offsets = prefix_sums(&counts);
+        StratState {
+            counts,
+            offsets,
+            sigmas: vec![0.0; layout.m],
+        }
+    }
+
+    /// Total samples this iteration.
+    pub fn total(&self) -> usize {
+        self.counts.iter().map(|&c| c as usize).sum()
+    }
+
+    /// Re-allocate the call budget from the damped sigmas.
+    pub fn reallocate(&mut self, budget: usize) {
+        let weights: Vec<f64> = self
+            .sigmas
+            .iter()
+            .map(|&s| s.max(1e-300).powf(2.0 * BETA))
+            .collect();
+        let total_w: f64 = weights.iter().sum();
+        let m = self.counts.len();
+        let spendable = budget.saturating_sub(2 * m).max(0);
+        let mut allocated = 0usize;
+        for (i, w) in weights.iter().enumerate() {
+            let extra = if total_w > 0.0 {
+                (spendable as f64 * w / total_w) as u32
+            } else {
+                (spendable / m) as u32
+            };
+            self.counts[i] = 2 + extra;
+            allocated += self.counts[i] as usize;
+        }
+        // Distribute rounding remainder deterministically.
+        let mut leftover = budget.saturating_sub(allocated);
+        let mut i = 0usize;
+        while leftover > 0 && m > 0 {
+            self.counts[i % m] += 1;
+            leftover -= 1;
+            i += 1;
+        }
+        self.offsets = prefix_sums(&self.counts);
+    }
+}
+
+fn prefix_sums(counts: &[u32]) -> Vec<u32> {
+    let mut offsets = Vec::with_capacity(counts.len());
+    let mut acc = 0u32;
+    for &c in counts {
+        offsets.push(acc);
+        acc = acc.wrapping_add(c);
+    }
+    offsets
+}
+
+/// One adaptive-stratification V-Sample pass. Updates `state.sigmas`
+/// (damped) and returns the iteration estimate plus the bin histogram.
+pub fn vsample_adaptive(
+    f: &dyn Integrand,
+    layout: &Layout,
+    bins: &Bins,
+    state: &mut StratState,
+    seed: u32,
+    iteration: u32,
+    threads: usize,
+) -> (IterationResult, Vec<f64>) {
+    assert!(layout.d <= MAX_DIM);
+    assert_eq!(state.counts.len(), layout.m);
+    let d = layout.d;
+    let nb = layout.nb;
+    let g = layout.g as f64;
+    let m = layout.m as f64;
+    let lo = f.lo();
+    let hi = f.hi();
+    let vol = (hi - lo).powi(d as i32);
+
+    struct Partial {
+        integral: f64,
+        variance: f64,
+        contrib: Vec<f64>,
+        sigmas: Vec<(usize, f64)>,
+    }
+
+    let counts = &state.counts;
+    let offsets = &state.offsets;
+    let partials = parallel_chunks(layout.m, threads, |a, b| {
+        let mut out = Partial {
+            integral: 0.0,
+            variance: 0.0,
+            contrib: vec![0.0; d * nb],
+            sigmas: Vec::with_capacity(b - a),
+        };
+        let edges = bins.flat();
+        let inv_g = 1.0 / g;
+        let nbf = nb as f64;
+        let span = hi - lo;
+        let mut u = [0.0f64; MAX_DIM];
+        let mut x = [0.0f64; MAX_DIM];
+        let mut bidx = [0usize; MAX_DIM];
+        let mut coords = [0usize; MAX_DIM];
+        for cube in a..b {
+            layout.cube_coords(cube, &mut coords[..d]);
+            let n = counts[cube].max(2);
+            let nf = n as f64;
+            let mut s1 = 0.0;
+            let mut s2 = 0.0;
+            for k in 0..n {
+                let sidx = offsets[cube].wrapping_add(k);
+                uniforms_into(sidx, iteration, seed, &mut u[..d]);
+                let mut jac = vol;
+                for i in 0..d {
+                    let z = (coords[i] as f64 + u[i]) * inv_g;
+                    let loc = z * nbf;
+                    let bi = (loc as usize).min(nb - 1);
+                    let row = i * nb;
+                    let right = edges[row + bi];
+                    let left = if bi == 0 { 0.0 } else { edges[row + bi - 1] };
+                    let w = right - left;
+                    jac *= nbf * w;
+                    x[i] = lo + (left + (loc - bi as f64) * w) * span;
+                    bidx[i] = row + bi;
+                }
+                let v = f.eval(&x[..d]) * jac;
+                s1 += v;
+                s2 += v * v;
+                let v2 = v * v;
+                for i in 0..d {
+                    out.contrib[bidx[i]] += v2;
+                }
+            }
+            let mean = s1 / nf;
+            let var = ((s2 / nf - mean * mean).max(0.0)) / (nf - 1.0);
+            out.integral += mean / m;
+            out.variance += var / (m * m);
+            // sigma of the *cube total*, not of the mean — drives the
+            // next allocation (Lepage's d_t accumulator).
+            out.sigmas.push((cube, (var * nf).sqrt()));
+        }
+        out
+    });
+
+    let mut integral = 0.0;
+    let mut variance = 0.0;
+    let mut contrib = vec![0.0; d * nb];
+    for p in partials {
+        integral += p.integral;
+        variance += p.variance;
+        for (x_, y) in contrib.iter_mut().zip(&p.contrib) {
+            *x_ += y;
+        }
+        for (cube, s) in p.sigmas {
+            // Damped accumulation across iterations.
+            state.sigmas[cube] = 0.5 * state.sigmas[cube] + 0.5 * s;
+        }
+    }
+    (
+        IterationResult {
+            integral,
+            variance,
+        },
+        contrib,
+    )
+}
+
+/// Full adaptive-stratification driver (native-only extension; the
+/// m-Cubes artifacts keep uniform `p` by design — see module docs).
+pub fn integrate_adaptive_strat(
+    f: &dyn Integrand,
+    maxcalls: usize,
+    nb: usize,
+    tau_rel: f64,
+    itmax: usize,
+    ita: usize,
+    seed: u32,
+    threads: usize,
+) -> crate::error::Result<crate::coordinator::IntegrationOutput> {
+    use crate::estimator::{Convergence, WeightedEstimator};
+    use std::time::Instant;
+
+    let layout = Layout::compute(f.dim(), maxcalls, nb, 1)?;
+    let mut bins = Bins::uniform(layout.d, nb);
+    let mut state = StratState::uniform(&layout);
+    let mut est = WeightedEstimator::new();
+    let conv = Convergence::with_tau(tau_rel);
+    let t0 = Instant::now();
+    let mut kernel_time = 0.0;
+    let mut calls_used = 0usize;
+    let mut iterations = 0usize;
+    let mut converged = false;
+    for it in 0..itmax {
+        let tk = Instant::now();
+        let (r, contrib) =
+            vsample_adaptive(f, &layout, &bins, &mut state, seed, it as u32, threads);
+        kernel_time += tk.elapsed().as_secs_f64();
+        calls_used += state.total();
+        iterations += 1;
+        if it >= 2.min(itmax - 1) {
+            est.push(r);
+        }
+        if it < ita {
+            bins.adjust(&contrib);
+            state.reallocate(maxcalls);
+            if est.iterations() >= 2 && est.chi2_dof() > conv.max_chi2_dof {
+                est.reset();
+            }
+        }
+        if conv.satisfied(&est) {
+            converged = true;
+            break;
+        }
+    }
+    Ok(crate::coordinator::IntegrationOutput {
+        integral: est.integral(),
+        sigma: est.sigma(),
+        chi2_dof: est.chi2_dof(),
+        rel_err: est.rel_err(),
+        iterations,
+        converged,
+        calls_used,
+        total_time: t0.elapsed().as_secs_f64(),
+        kernel_time,
+        backend: "native-adaptive-strat",
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::integrands::by_name;
+
+    #[test]
+    fn uniform_state_matches_layout() {
+        let layout = Layout::compute(4, 4096, 20, 1).unwrap();
+        let st = StratState::uniform(&layout);
+        assert_eq!(st.total(), layout.m * layout.p);
+        assert_eq!(st.offsets[0], 0);
+        assert_eq!(
+            st.offsets[1] - st.offsets[0],
+            layout.p as u32
+        );
+    }
+
+    #[test]
+    fn reallocate_preserves_budget_and_floor() {
+        let layout = Layout::compute(3, 8000, 20, 1).unwrap();
+        let mut st = StratState::uniform(&layout);
+        // Fake: one hot cube.
+        st.sigmas[7] = 100.0;
+        for s in st.sigmas.iter_mut().skip(8) {
+            *s = 0.01;
+        }
+        st.reallocate(8000);
+        assert_eq!(st.total(), 8000);
+        assert!(st.counts.iter().all(|&c| c >= 2));
+        assert!(
+            st.counts[7] > st.counts[100],
+            "hot cube must get more samples: {} vs {}",
+            st.counts[7],
+            st.counts[100]
+        );
+        // offsets consistent
+        for i in 1..st.counts.len() {
+            assert_eq!(
+                st.offsets[i],
+                st.offsets[i - 1] + st.counts[i - 1]
+            );
+        }
+    }
+
+    #[test]
+    fn adaptive_converges_and_is_honest() {
+        let f = by_name("f4", 5).unwrap();
+        let out =
+            integrate_adaptive_strat(&*f, 1 << 16, 50, 1e-3, 20, 12, 5, 2).unwrap();
+        assert!(out.converged, "{out:?}");
+        let truth = f.true_value().unwrap();
+        assert!(
+            (out.integral - truth).abs() < 4.0 * out.sigma,
+            "I={} truth={truth} sigma={}",
+            out.integral,
+            out.sigma
+        );
+    }
+
+    #[test]
+    fn adaptive_beats_uniform_on_peaked_integrand() {
+        // Same per-iteration budget, fixed iteration count: the
+        // adaptive allocation should reach a smaller combined sigma on
+        // a sharply peaked integrand.
+        use crate::coordinator::{integrate_native, JobConfig};
+        let f = by_name("f4", 5).unwrap();
+        let budget = 1 << 14;
+        let uni = integrate_native(
+            &*f,
+            &JobConfig {
+                maxcalls: budget,
+                tau_rel: 1e-15,
+                itmax: 10,
+                ita: 8,
+                skip: 2,
+                seed: 5,
+                threads: 2,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let ada = integrate_adaptive_strat(&*f, budget, 50, 1e-15, 10, 8, 5, 2).unwrap();
+        assert!(
+            ada.sigma < uni.sigma * 1.05,
+            "adaptive {} should be <= ~uniform {}",
+            ada.sigma,
+            uni.sigma
+        );
+    }
+}

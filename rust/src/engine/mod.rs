@@ -1,0 +1,310 @@
+//! Native CPU V-Sample engine — the "second backend" (portability
+//! Table 2) and the reference the PJRT path is cross-checked against.
+//!
+//! Implements exactly the same sampling math as the Pallas kernel
+//! (`python/compile/sampling.py`): identical Philox stream, cube decode,
+//! VEGAS change of variables, per-cube reduction, and v^2 bin histogram.
+//! For the same (seed, iteration) the native engine and the AOT artifact
+//! agree to fp-summation-order tolerance — this is asserted by
+//! `rust/tests/integration_runtime.rs`.
+//!
+//! Parallelization mirrors the paper's Algorithm 3: the cube range is
+//! split into contiguous batches, one per worker thread; each worker
+//! serially processes its cubes and accumulates a private estimate +
+//! histogram; the coordinator reduces worker partials in order
+//! (deterministic, unlike atomics).
+
+pub mod adaptive;
+
+use crate::estimator::IterationResult;
+use crate::grid::Bins;
+use crate::integrands::Integrand;
+use crate::rng::uniforms_into;
+use crate::strat::Layout;
+use crate::util::threadpool::parallel_chunks;
+
+/// Maximum dimension supported by the stack-allocated hot path.
+pub const MAX_DIM: usize = 16;
+
+/// One worker's partial output.
+struct Partial {
+    integral: f64,
+    variance: f64,
+    contrib: Option<Vec<f64>>,
+}
+
+/// Configuration for a V-Sample pass.
+#[derive(Debug, Clone, Copy)]
+pub struct VSampleOpts {
+    pub seed: u32,
+    pub iteration: u32,
+    /// Accumulate the v^2 histogram (V-Sample) or skip it
+    /// (V-Sample-No-Adjust, Algorithm 2 line 15).
+    pub adjust: bool,
+    pub threads: usize,
+}
+
+/// The native engine. Stateless; all state flows through arguments so
+/// the coordinator can drive PJRT and native backends identically.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct NativeEngine;
+
+impl NativeEngine {
+    /// One V-Sample pass over every sub-cube in `layout`.
+    ///
+    /// Returns the iteration result and, when `opts.adjust`, the
+    /// row-major `[d][nb]` bin-contribution histogram.
+    pub fn vsample(
+        &self,
+        f: &dyn Integrand,
+        layout: &Layout,
+        bins: &Bins,
+        opts: &VSampleOpts,
+    ) -> (IterationResult, Option<Vec<f64>>) {
+        assert!(layout.d <= MAX_DIM, "d > MAX_DIM");
+        assert_eq!(bins.d(), layout.d);
+        assert_eq!(bins.nb(), layout.nb);
+
+        let partials = parallel_chunks(layout.m, opts.threads, |a, b| {
+            sample_cube_range(f, layout, bins, opts, a, b)
+        });
+
+        let mut integral = 0.0;
+        let mut variance = 0.0;
+        let mut contrib = opts.adjust.then(|| vec![0.0; layout.d * layout.nb]);
+        for p in partials {
+            integral += p.integral;
+            variance += p.variance;
+            if let (Some(acc), Some(part)) = (contrib.as_mut(), p.contrib.as_ref()) {
+                for (x, y) in acc.iter_mut().zip(part) {
+                    *x += y;
+                }
+            }
+        }
+        (
+            IterationResult {
+                integral,
+                variance,
+            },
+            contrib,
+        )
+    }
+}
+
+/// Serial V-Sample over cubes [cube_lo, cube_hi) — the per-worker body.
+fn sample_cube_range(
+    f: &dyn Integrand,
+    layout: &Layout,
+    bins: &Bins,
+    opts: &VSampleOpts,
+    cube_lo: usize,
+    cube_hi: usize,
+) -> Partial {
+    let d = layout.d;
+    let nb = layout.nb;
+    let g = layout.g as f64;
+    let m = layout.m as f64;
+    let p = layout.p;
+    let pf = p as f64;
+    let lo = f.lo();
+    let hi = f.hi();
+    let vol = (hi - lo).powi(d as i32);
+
+    let mut contrib = opts.adjust.then(|| vec![0.0; d * nb]);
+    let mut integral = 0.0;
+    let mut variance = 0.0;
+
+    let mut u = [0.0f64; MAX_DIM];
+    let mut x = [0.0f64; MAX_DIM];
+    let mut bidx = [0usize; MAX_DIM];
+    let mut coords = [0usize; MAX_DIM];
+
+    // Hot-loop constants + flat edge array (perf pass: avoids per-dim
+    // slice recomputation in bins.axis()/bins.left()).
+    let edges = bins.flat();
+    let inv_g = 1.0 / g;
+    let nbf = nb as f64;
+    let span = hi - lo;
+
+    // Decode the first cube, then advance coords as a base-g odometer —
+    // avoids d divisions per cube in the hot loop (perf pass).
+    layout.cube_coords(cube_lo, &mut coords[..d]);
+    let gm1 = layout.g - 1;
+
+    for cube in cube_lo..cube_hi {
+        if cube != cube_lo {
+            for slot in coords.iter_mut().take(d) {
+                if *slot == gm1 {
+                    *slot = 0;
+                } else {
+                    *slot += 1;
+                    break;
+                }
+            }
+        }
+        let mut s1 = 0.0;
+        let mut s2 = 0.0;
+        for k in 0..p {
+            let sidx = (cube * p + k) as u32;
+            uniforms_into(sidx, opts.iteration, opts.seed, &mut u[..d]);
+            // VEGAS change of variables (sampling.transform twin).
+            let mut jac = vol;
+            for i in 0..d {
+                let z = (coords[i] as f64 + u[i]) * inv_g;
+                let loc = z * nbf;
+                let b = (loc as usize).min(nb - 1);
+                let row = i * nb;
+                // SAFETY: i < d and b < nb, so row + b < d*nb == edges.len().
+                let right = unsafe { *edges.get_unchecked(row + b) };
+                let left = if b == 0 {
+                    0.0
+                } else {
+                    unsafe { *edges.get_unchecked(row + b - 1) }
+                };
+                let w = right - left;
+                let xt = left + (loc - b as f64) * w;
+                jac *= nbf * w;
+                x[i] = lo + xt * span;
+                bidx[i] = row + b;
+            }
+            let v = f.eval(&x[..d]) * jac;
+            s1 += v;
+            s2 += v * v;
+            if let Some(c) = contrib.as_mut() {
+                let v2 = v * v;
+                for i in 0..d {
+                    // SAFETY: bidx[i] = i*nb + b < d*nb == c.len().
+                    unsafe { *c.get_unchecked_mut(bidx[i]) += v2 };
+                }
+            }
+        }
+        let mean = s1 / pf;
+        let var = ((s2 / pf - mean * mean).max(0.0)) / (pf - 1.0);
+        integral += mean / m;
+        variance += var / (m * m);
+    }
+
+    Partial {
+        integral,
+        variance,
+        contrib,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::integrands::by_name;
+
+    fn opts(seed: u32, it: u32) -> VSampleOpts {
+        VSampleOpts {
+            seed,
+            iteration: it,
+            adjust: true,
+            threads: 2,
+        }
+    }
+
+    #[test]
+    fn deterministic_across_thread_counts() {
+        let f = by_name("f4", 5).unwrap();
+        let layout = Layout::compute(5, 4096, 20, 4).unwrap();
+        let bins = Bins::uniform(5, 20);
+        let e = NativeEngine;
+        let (r1, c1) = e.vsample(
+            &*f,
+            &layout,
+            &bins,
+            &VSampleOpts {
+                threads: 1,
+                ..opts(42, 0)
+            },
+        );
+        let (r8, c8) = e.vsample(
+            &*f,
+            &layout,
+            &bins,
+            &VSampleOpts {
+                threads: 8,
+                ..opts(42, 0)
+            },
+        );
+        assert!((r1.integral - r8.integral).abs() <= 1e-15 * r1.integral.abs());
+        assert!((r1.variance - r8.variance).abs() <= 1e-12 * r1.variance.abs());
+        let (c1, c8) = (c1.unwrap(), c8.unwrap());
+        for (a, b) in c1.iter().zip(&c8) {
+            assert!((a - b).abs() <= 1e-12 * a.abs().max(1.0));
+        }
+    }
+
+    #[test]
+    fn matches_python_first_iteration_estimate() {
+        // Python prototype printed for f4 d=5 calls=4096 nb=20 seed=42 it=0:
+        //   I = 2.7858176280788316e-05, Var = 7.757123669326781e-10
+        let f = by_name("f4", 5).unwrap();
+        let layout = Layout::compute(5, 4096, 20, 4).unwrap();
+        let bins = Bins::uniform(5, 20);
+        let (r, _) = NativeEngine.vsample(&*f, &layout, &bins, &opts(42, 0));
+        assert!(
+            ((r.integral - 2.7858176280788316e-05) / 2.7858176280788316e-05).abs() < 1e-12,
+            "I = {}",
+            r.integral
+        );
+        assert!(
+            ((r.variance - 7.757123669326781e-10) / 7.757123669326781e-10).abs() < 1e-10,
+            "Var = {}",
+            r.variance
+        );
+    }
+
+    #[test]
+    fn no_adjust_skips_histogram() {
+        let f = by_name("f5", 4).unwrap();
+        let layout = Layout::compute(4, 2048, 10, 2).unwrap();
+        let bins = Bins::uniform(4, 10);
+        let (_, c) = NativeEngine.vsample(
+            &*f,
+            &layout,
+            &bins,
+            &VSampleOpts {
+                adjust: false,
+                ..opts(1, 0)
+            },
+        );
+        assert!(c.is_none());
+    }
+
+    #[test]
+    fn histogram_mass_equals_sum_v2() {
+        // Each axis's histogram totals the same sum of v^2.
+        let f = by_name("f3", 3).unwrap();
+        let layout = Layout::compute(3, 2048, 12, 2).unwrap();
+        let bins = Bins::uniform(3, 12);
+        let (_, c) = NativeEngine.vsample(&*f, &layout, &bins, &opts(7, 2));
+        let c = c.unwrap();
+        let per_axis: Vec<f64> = (0..3)
+            .map(|i| c[i * 12..(i + 1) * 12].iter().sum())
+            .collect();
+        for w in per_axis.windows(2) {
+            assert!(
+                ((w[0] - w[1]) / w[0]).abs() < 1e-12,
+                "axis masses differ: {per_axis:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn estimate_within_5_sigma_of_truth() {
+        let f = by_name("f5", 4).unwrap();
+        let layout = Layout::compute(4, 1 << 14, 50, 8).unwrap();
+        let bins = Bins::uniform(4, 50);
+        let (r, _) = NativeEngine.vsample(&*f, &layout, &bins, &opts(3, 0));
+        let truth = f.true_value().unwrap();
+        assert!(
+            (r.integral - truth).abs() < 5.0 * r.variance.sqrt(),
+            "I={} true={truth} sigma={}",
+            r.integral,
+            r.variance.sqrt()
+        );
+    }
+}

@@ -1,0 +1,48 @@
+//! Library error type. All public APIs return `Result<T, Error>`.
+
+use thiserror::Error;
+
+/// Unified error for the m-Cubes library.
+#[derive(Error, Debug)]
+pub enum Error {
+    /// Malformed or missing artifact manifest / JSON payload.
+    #[error("manifest error: {0}")]
+    Manifest(String),
+
+    /// JSON syntax error at a byte offset.
+    #[error("json parse error at byte {offset}: {msg}")]
+    Json { offset: usize, msg: String },
+
+    /// Unknown integrand, artifact, or backend name.
+    #[error("unknown {kind}: {name}")]
+    Unknown { kind: &'static str, name: String },
+
+    /// Invalid configuration (dimensions, calls, tolerances...).
+    #[error("invalid config: {0}")]
+    Config(String),
+
+    /// PJRT/XLA runtime failure.
+    #[error("runtime error: {0}")]
+    Runtime(String),
+
+    /// The integrator failed to converge within its budget.
+    #[error("did not converge: reached {iterations} iterations, rel-err {relerr:.3e} > target {target:.3e}")]
+    NotConverged {
+        iterations: usize,
+        relerr: f64,
+        target: f64,
+    },
+
+    /// Underlying I/O failure.
+    #[error("io error: {0}")]
+    Io(#[from] std::io::Error),
+}
+
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Self {
+        Error::Runtime(e.to_string())
+    }
+}
+
+/// Library-wide result alias.
+pub type Result<T> = std::result::Result<T, Error>;

@@ -1,0 +1,246 @@
+//! Iteration-result accumulation: Lepage's weighted estimates (eq. 5/6
+//! of [11]), chi-square consistency, and convergence policy
+//! (Algorithm 2 lines 11/13, "Weighted-Estimates" / "Check-Convergence").
+
+/// Result of a single V-Sample pass.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct IterationResult {
+    /// Integral estimate of this iteration.
+    pub integral: f64,
+    /// Variance of that estimate (sigma^2, not sigma).
+    pub variance: f64,
+}
+
+/// Weighted combination of iteration results.
+///
+/// Iterations are weighted by inverse variance; `chi2_dof` measures
+/// whether the per-iteration estimates are mutually consistent (VEGAS
+/// results are only trustworthy when chi2/dof is O(1) — the paper's
+/// §5.1 discussion).
+#[derive(Debug, Clone, Default)]
+pub struct WeightedEstimator {
+    sum_w: f64,     // sum of 1/sigma_j^2
+    sum_wi: f64,    // sum of I_j/sigma_j^2
+    sum_wi2: f64,   // sum of I_j^2/sigma_j^2
+    n: usize,
+}
+
+/// Floor for variances to keep weights finite when an iteration
+/// happens to sample an exactly-constant region.
+const VAR_FLOOR: f64 = 1e-300;
+
+impl WeightedEstimator {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Fold in one iteration.
+    pub fn push(&mut self, r: IterationResult) {
+        let var = r.variance.max(VAR_FLOOR);
+        let w = 1.0 / var;
+        self.sum_w += w;
+        self.sum_wi += w * r.integral;
+        self.sum_wi2 += w * r.integral * r.integral;
+        self.n += 1;
+    }
+
+    /// Number of iterations folded in.
+    pub fn iterations(&self) -> usize {
+        self.n
+    }
+
+    /// Combined integral estimate (undefined before the first push).
+    pub fn integral(&self) -> f64 {
+        if self.sum_w > 0.0 {
+            self.sum_wi / self.sum_w
+        } else {
+            0.0
+        }
+    }
+
+    /// Standard deviation of the combined estimate.
+    pub fn sigma(&self) -> f64 {
+        if self.sum_w > 0.0 {
+            (1.0 / self.sum_w).sqrt()
+        } else {
+            f64::INFINITY
+        }
+    }
+
+    /// chi^2 per degree of freedom across iterations.
+    pub fn chi2_dof(&self) -> f64 {
+        if self.n < 2 {
+            return 0.0;
+        }
+        let ibar = self.integral();
+        // sum w_j (I_j - Ibar)^2 = sum w I^2 - Ibar * sum w I
+        let chi2 = (self.sum_wi2 - ibar * self.sum_wi).max(0.0);
+        chi2 / (self.n - 1) as f64
+    }
+
+    /// Achieved relative error |sigma / integral|.
+    pub fn rel_err(&self) -> f64 {
+        let i = self.integral();
+        if i == 0.0 {
+            f64::INFINITY
+        } else {
+            (self.sigma() / i).abs()
+        }
+    }
+
+    /// Reset (used when the adjust phase ends and the caller chooses to
+    /// discard warm-up iterations, or when chi2 signals inconsistency).
+    pub fn reset(&mut self) {
+        *self = Self::default();
+    }
+}
+
+/// Convergence policy: relative-error target plus chi-square guard.
+#[derive(Debug, Clone, Copy)]
+pub struct Convergence {
+    /// Target relative error tau_rel.
+    pub tau_rel: f64,
+    /// Require at least this many folded iterations before claiming
+    /// convergence (statistical sanity; default 2).
+    pub min_iterations: usize,
+    /// Reject convergence while chi2/dof exceeds this (default 5.0).
+    pub max_chi2_dof: f64,
+}
+
+impl Default for Convergence {
+    fn default() -> Self {
+        Convergence {
+            tau_rel: 1e-3,
+            min_iterations: 2,
+            max_chi2_dof: 5.0,
+        }
+    }
+}
+
+impl Convergence {
+    pub fn with_tau(tau_rel: f64) -> Self {
+        Convergence {
+            tau_rel,
+            ..Default::default()
+        }
+    }
+
+    /// Has the estimator met this policy?
+    pub fn satisfied(&self, est: &WeightedEstimator) -> bool {
+        est.iterations() >= self.min_iterations
+            && est.rel_err() <= self.tau_rel
+            && est.chi2_dof() <= self.max_chi2_dof
+    }
+}
+
+/// The paper's precision ladder (§5.1): start at 1e-3, divide by 5
+/// until passing 1e-9. `digits` is -log10(tau).
+pub fn precision_ladder() -> Vec<f64> {
+    let mut taus = Vec::new();
+    let mut tau = 1e-3;
+    while tau >= 1e-9 {
+        taus.push(tau);
+        tau /= 5.0;
+    }
+    taus
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn r(i: f64, v: f64) -> IterationResult {
+        IterationResult {
+            integral: i,
+            variance: v,
+        }
+    }
+
+    #[test]
+    fn single_iteration_passthrough() {
+        let mut e = WeightedEstimator::new();
+        e.push(r(2.5, 0.04));
+        assert_eq!(e.integral(), 2.5);
+        assert!((e.sigma() - 0.2).abs() < 1e-15);
+        assert_eq!(e.chi2_dof(), 0.0);
+    }
+
+    #[test]
+    fn equal_variance_is_mean() {
+        let mut e = WeightedEstimator::new();
+        e.push(r(1.0, 1.0));
+        e.push(r(3.0, 1.0));
+        assert!((e.integral() - 2.0).abs() < 1e-15);
+        // combined sigma = sqrt(1/2)
+        assert!((e.sigma() - (0.5f64).sqrt()).abs() < 1e-15);
+        // chi2 = (1-2)^2 + (3-2)^2 = 2, dof = 1
+        assert!((e.chi2_dof() - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn precision_weighted() {
+        let mut e = WeightedEstimator::new();
+        e.push(r(10.0, 1e-6)); // very precise
+        e.push(r(20.0, 1e6)); // junk
+        assert!((e.integral() - 10.0).abs() < 1e-3);
+    }
+
+    #[test]
+    fn consistent_iterations_have_small_chi2() {
+        let mut e = WeightedEstimator::new();
+        for k in 0..10 {
+            // scatter ~ sigma around 5.0
+            let noise = ((k * 2654435761u64 % 1000) as f64 / 1000.0 - 0.5) * 0.02;
+            e.push(r(5.0 + noise, 1e-4));
+        }
+        assert!(e.chi2_dof() < 3.0, "chi2/dof = {}", e.chi2_dof());
+    }
+
+    #[test]
+    fn zero_variance_guard() {
+        let mut e = WeightedEstimator::new();
+        e.push(r(1.0, 0.0));
+        assert!(e.sigma().is_finite());
+        assert_eq!(e.integral(), 1.0);
+    }
+
+    #[test]
+    fn convergence_policy() {
+        let conv = Convergence::with_tau(1e-2);
+        let mut e = WeightedEstimator::new();
+        e.push(r(1.0, 1e-8));
+        assert!(!conv.satisfied(&e), "needs min_iterations");
+        e.push(r(1.0, 1e-8));
+        assert!(conv.satisfied(&e));
+    }
+
+    #[test]
+    fn convergence_rejects_inconsistent() {
+        let conv = Convergence::with_tau(1e-1);
+        let mut e = WeightedEstimator::new();
+        e.push(r(1.0, 1e-8));
+        e.push(r(2.0, 1e-8)); // wildly inconsistent
+        assert!(e.rel_err() < 1e-1);
+        assert!(!conv.satisfied(&e), "chi2 guard must trip");
+    }
+
+    #[test]
+    fn ladder_matches_paper() {
+        let l = precision_ladder();
+        assert_eq!(l[0], 1e-3);
+        assert!((l[1] - 2e-4).abs() < 1e-18);
+        assert!(*l.last().unwrap() >= 1e-9);
+        assert!(l.last().unwrap() / 5.0 < 1e-9);
+        // 1e-3 / 5^k >= 1e-9  =>  k = 0..=8
+        assert_eq!(l.len(), 9);
+    }
+
+    #[test]
+    fn reset_clears() {
+        let mut e = WeightedEstimator::new();
+        e.push(r(1.0, 1.0));
+        e.reset();
+        assert_eq!(e.iterations(), 0);
+        assert_eq!(e.integral(), 0.0);
+    }
+}

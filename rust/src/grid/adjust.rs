@@ -1,0 +1,191 @@
+//! Contribution smoothing + boundary re-partitioning (classic VEGAS,
+//! Lepage 1978; same damped scheme as GSL's `refine_grid`).
+//!
+//! Validated against the Python prototype in the repo history and the
+//! golden-driven integration tests: given the same histogram the Rust
+//! and Python adjusters produce identical edges to fp round-off.
+
+/// Damping exponent. 1.5 is the standard VEGAS choice.
+pub const ALPHA: f64 = 1.5;
+
+const TINY: f64 = 1e-30;
+
+/// Smooth a raw contribution histogram and convert it to re-partition
+/// weights: w = ((r - 1)/ln r)^ALPHA with r the normalized smoothed
+/// contribution. Returns `None` when the histogram carries no signal
+/// (all zeros) — callers must leave the grid unchanged in that case.
+///
+/// `scratch` must have the same length and is used for the smoothed
+/// values to avoid per-iteration allocation in the driver loop.
+pub fn smooth_weights<'a>(contrib: &[f64], scratch: &'a mut [f64]) -> Option<&'a [f64]> {
+    let nb = contrib.len();
+    assert!(nb >= 2, "need at least 2 bins");
+    assert_eq!(scratch.len(), nb);
+
+    // 3-point smoothing (endpoints: 2-point), as in GSL/Lepage.
+    scratch[0] = (contrib[0] + contrib[1]) / 2.0;
+    scratch[nb - 1] = (contrib[nb - 2] + contrib[nb - 1]) / 2.0;
+    for i in 1..nb - 1 {
+        scratch[i] = (contrib[i - 1] + contrib[i] + contrib[i + 1]) / 3.0;
+    }
+    let total: f64 = scratch.iter().sum();
+    if total <= 0.0 {
+        return None;
+    }
+    for v in scratch.iter_mut() {
+        let r = *v / total;
+        *v = if r > TINY {
+            // lim_{r->1} (r-1)/ln r = 1, and the expression is smooth;
+            // guard the removable singularity explicitly.
+            let q = if (r - 1.0).abs() < 1e-12 {
+                1.0
+            } else {
+                (r - 1.0) / r.ln()
+            };
+            q.powf(ALPHA)
+        } else {
+            0.0
+        };
+        if *v < TINY {
+            *v = TINY;
+        }
+    }
+    Some(scratch)
+}
+
+/// Re-partition one axis's right edges so each new bin carries an equal
+/// share of `weights`. `edges` holds the nb right edges (left edge 0
+/// implicit, last edge stays exactly 1.0).
+pub fn rebin(edges: &mut [f64], weights: &[f64]) {
+    let nb = edges.len();
+    assert_eq!(weights.len(), nb);
+    let total: f64 = weights.iter().sum();
+    let target = total / nb as f64;
+
+    let mut new_edges = vec![0.0; nb];
+    let mut acc = 0.0; // weight accumulated so far
+    let mut j = 0usize; // old bin cursor (0-based; consumed bins < j)
+    let mut prev_edge = 0.0;
+    for k in 0..nb - 1 {
+        // Consume old bins until we pass the (k+1)-th equal-weight mark.
+        // (j < nb guards fp drift on the final marks.)
+        while acc < target && j < nb {
+            acc += weights[j];
+            prev_edge = if j == 0 { 0.0 } else { edges[j - 1] };
+            j += 1;
+        }
+        acc -= target;
+        // We overshot inside old bin j-1: interpolate back.
+        let right = edges[j - 1];
+        let width = right - prev_edge;
+        new_edges[k] = right - acc / weights[j - 1] * width;
+    }
+    new_edges[nb - 1] = 1.0;
+    edges.copy_from_slice(&new_edges);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn flat_weights_give_uniform_edges() {
+        let mut edges: Vec<f64> = (1..=8).map(|i| i as f64 / 8.0).collect();
+        let w = vec![2.0; 8];
+        rebin(&mut edges, &w);
+        for (i, &e) in edges.iter().enumerate() {
+            assert!((e - (i + 1) as f64 / 8.0).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn rebin_preserves_monotonicity_and_ends() {
+        let mut edges: Vec<f64> = (1..=16).map(|i| (i as f64 / 16.0).powf(1.4)).collect();
+        edges[15] = 1.0;
+        let w: Vec<f64> = (0..16).map(|i| 1.0 + (i as f64).sin().abs()).collect();
+        rebin(&mut edges, &w);
+        let mut prev = 0.0;
+        for &e in &edges {
+            assert!(e > prev);
+            prev = e;
+        }
+        assert_eq!(edges[15], 1.0);
+    }
+
+    #[test]
+    fn rebin_equalizes_weight_mass() {
+        // After rebinning with piecewise-constant density, each new bin
+        // should hold ~equal mass of that density.
+        let nb = 10;
+        let mut edges: Vec<f64> = (1..=nb).map(|i| i as f64 / nb as f64).collect();
+        let mut w = vec![1.0; nb];
+        w[0] = 9.0; // hot first bin
+        let old_edges = edges.clone();
+        let old_w = w.clone();
+        rebin(&mut edges, &w);
+        // density over [0, 0.1) is 90, elsewhere 1 (per unit length)
+        let mass = |a: f64, b: f64| -> f64 {
+            let mut m = 0.0;
+            let mut lo = a;
+            for i in 0..nb {
+                let left = if i == 0 { 0.0 } else { old_edges[i - 1] };
+                let right = old_edges[i];
+                let dens = old_w[i] / (right - left);
+                let seg_lo = lo.max(left);
+                let seg_hi = b.min(right);
+                if seg_hi > seg_lo {
+                    m += dens * (seg_hi - seg_lo);
+                }
+                lo = a;
+            }
+            m
+        };
+        let total: f64 = old_w.iter().sum();
+        let target = total / nb as f64;
+        let mut prev = 0.0;
+        for &e in &edges {
+            let got = mass(prev, e);
+            assert!(
+                (got - target).abs() < 1e-9,
+                "bin [{prev},{e}] mass {got} != {target}"
+            );
+            prev = e;
+        }
+    }
+
+    #[test]
+    fn smooth_weights_none_on_zero() {
+        let mut scratch = vec![0.0; 5];
+        assert!(smooth_weights(&[0.0; 5], &mut scratch).is_none());
+    }
+
+    #[test]
+    fn smooth_weights_flat_is_constant() {
+        // Flat contributions give equal (not unit) weights — rebinning
+        // with constant weights leaves the grid uniform.
+        let mut scratch = vec![0.0; 6];
+        let w = smooth_weights(&[4.0; 6], &mut scratch).unwrap();
+        for pair in w.windows(2) {
+            assert!((pair[0] - pair[1]).abs() < 1e-12, "{w:?}");
+        }
+        assert!(w[0] > 0.0);
+    }
+
+    #[test]
+    fn smooth_weights_monotone_in_contribution() {
+        let mut scratch = vec![0.0; 8];
+        let mut c = vec![1.0; 8];
+        c[3] = 50.0;
+        let w = smooth_weights(&c, &mut scratch).unwrap().to_vec();
+        assert!(w[3] > w[0], "hot bin must get more weight: {w:?}");
+        assert!(w.iter().all(|&x| x >= TINY));
+    }
+
+    #[test]
+    fn weights_positive_even_with_empty_bins() {
+        let mut scratch = vec![0.0; 6];
+        let c = [0.0, 0.0, 10.0, 0.0, 0.0, 0.0];
+        let w = smooth_weights(&c, &mut scratch).unwrap();
+        assert!(w.iter().all(|&x| x > 0.0));
+    }
+}

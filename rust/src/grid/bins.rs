@@ -1,0 +1,313 @@
+//! Bin-boundary storage: d axes × nb right edges in unit space.
+
+use super::adjust::{rebin, smooth_weights};
+use super::GridMode;
+use crate::error::{Error, Result};
+
+/// Importance-bin boundaries. Row-major `[d][nb]` right edges; the left
+/// edge of bin 0 is implicitly 0.0 and `edges[axis][nb-1] == 1.0`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Bins {
+    d: usize,
+    nb: usize,
+    edges: Vec<f64>,
+    mode: GridMode,
+}
+
+impl Bins {
+    /// Equal-width bins (Init-Bins, Algorithm 2 line 6).
+    pub fn uniform(d: usize, nb: usize) -> Bins {
+        Self::uniform_mode(d, nb, GridMode::PerAxis)
+    }
+
+    pub fn uniform_mode(d: usize, nb: usize, mode: GridMode) -> Bins {
+        assert!(d >= 1 && nb >= 2, "need d>=1, nb>=2");
+        let mut edges = Vec::with_capacity(d * nb);
+        for _ in 0..d {
+            for b in 1..=nb {
+                edges.push(b as f64 / nb as f64);
+            }
+        }
+        Bins { d, nb, edges, mode }
+    }
+
+    /// Build from explicit edges (row-major d*nb). Validates monotonicity.
+    pub fn from_edges(d: usize, nb: usize, edges: Vec<f64>, mode: GridMode) -> Result<Bins> {
+        if edges.len() != d * nb {
+            return Err(Error::Config(format!(
+                "edges len {} != d*nb {}",
+                edges.len(),
+                d * nb
+            )));
+        }
+        let b = Bins { d, nb, edges, mode };
+        b.validate()?;
+        Ok(b)
+    }
+
+    pub fn d(&self) -> usize {
+        self.d
+    }
+    pub fn nb(&self) -> usize {
+        self.nb
+    }
+    pub fn mode(&self) -> GridMode {
+        self.mode
+    }
+
+    /// Right edges of one axis.
+    #[inline]
+    pub fn axis(&self, axis: usize) -> &[f64] {
+        &self.edges[axis * self.nb..(axis + 1) * self.nb]
+    }
+
+    /// Flat row-major view (what the PJRT executable consumes).
+    pub fn flat(&self) -> &[f64] {
+        &self.edges
+    }
+
+    /// Left edge of bin `b` on `axis`.
+    #[inline]
+    pub fn left(&self, axis: usize, b: usize) -> f64 {
+        if b == 0 {
+            0.0
+        } else {
+            self.axis(axis)[b - 1]
+        }
+    }
+
+    /// Width of bin `b` on `axis`.
+    #[inline]
+    pub fn width(&self, axis: usize, b: usize) -> f64 {
+        self.axis(axis)[b] - self.left(axis, b)
+    }
+
+    /// Check structural invariants: monotone, positive widths, ends at 1.
+    pub fn validate(&self) -> Result<()> {
+        for axis in 0..self.d {
+            let e = self.axis(axis);
+            let mut prev = 0.0;
+            for (i, &x) in e.iter().enumerate() {
+                if !(x > prev) {
+                    return Err(Error::Config(format!(
+                        "axis {axis} bin {i}: edge {x} <= previous {prev}"
+                    )));
+                }
+                prev = x;
+            }
+            if (e[self.nb - 1] - 1.0).abs() > 1e-12 {
+                return Err(Error::Config(format!(
+                    "axis {axis}: last edge {} != 1.0",
+                    e[self.nb - 1]
+                )));
+            }
+        }
+        Ok(())
+    }
+
+    /// One VEGAS refinement step from a contribution histogram
+    /// `contrib[d][nb]` (row-major). In `Shared1D` mode only axis 0 of
+    /// the histogram drives the (shared) boundary update and every axis
+    /// receives identical edges — the m-Cubes1D variant.
+    pub fn adjust(&mut self, contrib: &[f64]) {
+        assert_eq!(contrib.len(), self.d * self.nb, "contrib shape");
+        match self.mode {
+            GridMode::PerAxis => {
+                let mut scratch = vec![0.0; self.nb];
+                for axis in 0..self.d {
+                    let c = &contrib[axis * self.nb..(axis + 1) * self.nb];
+                    if let Some(w) = smooth_weights(c, &mut scratch) {
+                        let row =
+                            &mut self.edges[axis * self.nb..(axis + 1) * self.nb];
+                        rebin(row, w);
+                    }
+                }
+            }
+            GridMode::Shared1D => {
+                // Accumulate every axis's histogram into one row so the
+                // shared boundaries see all the evidence (for a fully
+                // symmetric integrand the rows are statistically
+                // identical; summing reduces variance).
+                let mut c = vec![0.0; self.nb];
+                for axis in 0..self.d {
+                    for b in 0..self.nb {
+                        c[b] += contrib[axis * self.nb + b];
+                    }
+                }
+                let mut scratch = vec![0.0; self.nb];
+                if let Some(w) = smooth_weights(&c, &mut scratch) {
+                    rebin(&mut self.edges[0..self.nb], w);
+                    let (first, rest) = self.edges.split_at_mut(self.nb);
+                    for axis in 1..self.d {
+                        rest[(axis - 1) * self.nb..axis * self.nb]
+                            .copy_from_slice(first);
+                    }
+                }
+            }
+        }
+        debug_assert!(self.validate().is_ok());
+    }
+
+    /// Serialize the adapted grid to JSON — checkpoint/resume support
+    /// for long pipelines (the paper's "complicated pipelines" §6 use
+    /// case: adapt once on a cheap target, reuse the grid later).
+    pub fn to_json(&self) -> crate::util::json::Value {
+        use crate::util::json::ObjBuilder;
+        ObjBuilder::new()
+            .field("d", self.d)
+            .field("nb", self.nb)
+            .field(
+                "mode",
+                match self.mode {
+                    GridMode::PerAxis => "per_axis",
+                    GridMode::Shared1D => "shared_1d",
+                },
+            )
+            .field("edges", self.edges.clone())
+            .build()
+    }
+
+    /// Restore a grid from `to_json` output (validates invariants).
+    pub fn from_json(v: &crate::util::json::Value) -> Result<Bins> {
+        let d = v
+            .req("d")?
+            .as_usize()
+            .ok_or_else(|| Error::Manifest("d".into()))?;
+        let nb = v
+            .req("nb")?
+            .as_usize()
+            .ok_or_else(|| Error::Manifest("nb".into()))?;
+        let mode = match v.req("mode")?.as_str() {
+            Some("per_axis") => GridMode::PerAxis,
+            Some("shared_1d") => GridMode::Shared1D,
+            other => {
+                return Err(Error::Manifest(format!("bad grid mode {other:?}")))
+            }
+        };
+        let edges = v
+            .req("edges")?
+            .as_f64_vec()
+            .ok_or_else(|| Error::Manifest("edges".into()))?;
+        Bins::from_edges(d, nb, edges, mode)
+    }
+
+    /// Save to a file (JSON).
+    pub fn save(&self, path: impl AsRef<std::path::Path>) -> Result<()> {
+        std::fs::write(path, self.to_json().to_json())?;
+        Ok(())
+    }
+
+    /// Load from a file written by `save`.
+    pub fn load(path: impl AsRef<std::path::Path>) -> Result<Bins> {
+        let text = std::fs::read_to_string(path)?;
+        Self::from_json(&crate::util::json::parse(&text)?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn uniform_is_valid() {
+        let b = Bins::uniform(3, 50);
+        b.validate().unwrap();
+        assert_eq!(b.axis(2)[49], 1.0);
+        assert!((b.width(1, 7) - 0.02).abs() < 1e-15);
+        assert_eq!(b.left(0, 0), 0.0);
+    }
+
+    #[test]
+    fn from_edges_validates() {
+        assert!(Bins::from_edges(1, 3, vec![0.5, 0.4, 1.0], GridMode::PerAxis).is_err());
+        assert!(Bins::from_edges(1, 3, vec![0.2, 0.8, 0.9], GridMode::PerAxis).is_err());
+        assert!(Bins::from_edges(1, 3, vec![0.2, 0.8, 1.0], GridMode::PerAxis).is_ok());
+    }
+
+    #[test]
+    fn adjust_concentrates_bins_at_peak() {
+        // Put all contribution mass in the first 10% of the axis; bins
+        // must migrate left (smaller widths near 0).
+        let mut b = Bins::uniform(1, 10);
+        let mut contrib = vec![0.0; 10];
+        contrib[0] = 100.0;
+        contrib[1] = 50.0;
+        for _ in 0..5 {
+            b.adjust(&contrib);
+        }
+        b.validate().unwrap();
+        assert!(
+            b.width(0, 0) < 0.05,
+            "first bin should shrink, got {}",
+            b.width(0, 0)
+        );
+    }
+
+    #[test]
+    fn adjust_flat_contributions_keeps_uniform() {
+        let mut b = Bins::uniform(2, 8);
+        let before = b.flat().to_vec();
+        b.adjust(&vec![3.0; 16]);
+        for (x, y) in b.flat().iter().zip(&before) {
+            assert!((x - y).abs() < 1e-9, "{x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn adjust_zero_contributions_noop() {
+        let mut b = Bins::uniform(2, 8);
+        let before = b.flat().to_vec();
+        b.adjust(&vec![0.0; 16]);
+        assert_eq!(b.flat(), &before[..]);
+    }
+
+    #[test]
+    fn checkpoint_roundtrip() {
+        let mut b = Bins::uniform(3, 16);
+        let mut contrib = vec![1.0; 48];
+        contrib[5] = 40.0;
+        contrib[20] = 25.0;
+        b.adjust(&contrib);
+        let back = Bins::from_json(&b.to_json()).unwrap();
+        assert_eq!(back, b);
+    }
+
+    #[test]
+    fn checkpoint_file_roundtrip() {
+        let mut b = Bins::uniform_mode(2, 8, GridMode::Shared1D);
+        b.adjust(&{
+            let mut c = vec![1.0; 16];
+            c[0] = 30.0;
+            c
+        });
+        let path = std::env::temp_dir().join("mcubes_bins_ckpt_test.json");
+        b.save(&path).unwrap();
+        let back = Bins::load(&path).unwrap();
+        assert_eq!(back, b);
+        assert_eq!(back.mode(), GridMode::Shared1D);
+        let _ = std::fs::remove_file(path);
+    }
+
+    #[test]
+    fn checkpoint_rejects_corrupt() {
+        let v = crate::util::json::parse(
+            r#"{"d": 1, "nb": 3, "mode": "per_axis", "edges": [0.9, 0.5, 1.0]}"#,
+        )
+        .unwrap();
+        assert!(Bins::from_json(&v).is_err()); // non-monotone
+    }
+
+    #[test]
+    fn shared1d_keeps_axes_identical() {
+        let mut b = Bins::uniform_mode(3, 12, GridMode::Shared1D);
+        let mut contrib = vec![0.0; 36];
+        // asymmetric evidence on axis 0 only — Shared1D pools it
+        for i in 0..12 {
+            contrib[i] = (i as f64).exp().min(100.0);
+        }
+        b.adjust(&contrib);
+        b.validate().unwrap();
+        assert_eq!(b.axis(0), b.axis(1));
+        assert_eq!(b.axis(0), b.axis(2));
+    }
+}

@@ -1,0 +1,34 @@
+//! The VEGAS importance grid: per-axis bin boundaries + their adaptive
+//! refinement (Algorithm 2 line 12, "Adjust-Bin-Bounds").
+//!
+//! This runs on the *coordinator* (host) side, exactly as the paper's
+//! CUDA implementation adjusts bins on the CPU between kernel launches.
+//! Only `bins` (d*nb doubles) and the contribution histogram cross the
+//! host/device boundary — the m-Cubes data-movement contribution.
+
+mod adjust;
+mod bins;
+
+pub use adjust::{rebin, smooth_weights, ALPHA};
+pub use bins::Bins;
+
+/// How bin boundaries are shared across axes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum GridMode {
+    /// Standard m-Cubes: independent bins per axis.
+    PerAxis,
+    /// m-Cubes1D (paper §5.4): one shared boundary set for all axes —
+    /// correct only for fully-symmetric integrands, and faster because
+    /// a single axis histogram is accumulated and adjusted.
+    Shared1D,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grid_mode_eq() {
+        assert_ne!(GridMode::PerAxis, GridMode::Shared1D);
+    }
+}

@@ -1,0 +1,72 @@
+//! 1-D linear interpolation over uniform knots — the paper's "supplied
+//! data structures" (§6.1) that let stateful integrands carry tabular
+//! data without the user writing any device code. Must match
+//! `integrands._interp1d` in Python bit-for-bit (same clamping).
+
+/// Linear interpolator on `k` uniform knots spanning [lo, hi].
+#[derive(Debug, Clone)]
+pub struct Interp1D {
+    values: Vec<f64>,
+    lo: f64,
+    hi: f64,
+}
+
+impl Interp1D {
+    pub fn new(values: Vec<f64>, lo: f64, hi: f64) -> Self {
+        assert!(values.len() >= 2, "need at least 2 knots");
+        assert!(hi > lo);
+        Interp1D { values, lo, hi }
+    }
+
+    pub fn knots(&self) -> usize {
+        self.values.len()
+    }
+
+    pub fn values(&self) -> &[f64] {
+        &self.values
+    }
+
+    /// Evaluate at `x` (clamped to the knot range, as the Python twin).
+    #[inline]
+    pub fn eval(&self, x: f64) -> f64 {
+        let k = self.values.len();
+        let t = (x - self.lo) / (self.hi - self.lo) * (k - 1) as f64;
+        // Same clamp constant as python `_interp1d`: [0, k - 1.000001].
+        let t = t.clamp(0.0, k as f64 - 1.000001);
+        let i0 = t.floor() as usize;
+        let frac = t - i0 as f64;
+        self.values[i0] + frac * (self.values[i0 + 1] - self.values[i0])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn endpoints_and_midpoints() {
+        let t = Interp1D::new(vec![0.0, 1.0, 4.0], 0.0, 1.0);
+        assert!((t.eval(0.0) - 0.0).abs() < 1e-12);
+        assert!((t.eval(0.25) - 0.5).abs() < 1e-12);
+        assert!((t.eval(0.5) - 1.0).abs() < 1e-12);
+        assert!((t.eval(0.75) - 2.5).abs() < 1e-12);
+        assert!((t.eval(1.0) - 4.0).abs() < 1e-4); // clamped just below knot
+    }
+
+    #[test]
+    fn clamps_out_of_range() {
+        let t = Interp1D::new(vec![2.0, 3.0], 0.0, 1.0);
+        assert!((t.eval(-5.0) - 2.0).abs() < 1e-12);
+        assert!((t.eval(7.0) - 3.0).abs() < 1e-4);
+    }
+
+    #[test]
+    fn linear_function_is_exact() {
+        let vals: Vec<f64> = (0..11).map(|i| 3.0 * i as f64 / 10.0 + 1.0).collect();
+        let t = Interp1D::new(vals, 0.0, 1.0);
+        for j in 0..100 {
+            let x = j as f64 / 100.0;
+            assert!((t.eval(x) - (3.0 * x + 1.0)).abs() < 1e-6, "x={x}");
+        }
+    }
+}

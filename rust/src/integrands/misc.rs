@@ -1,0 +1,233 @@
+//! fA/fB (the ZMCintegral comparison integrands, eq. 7-8) and the
+//! stateful cosmology-style integrand (§6.1).
+
+use super::interp::Interp1D;
+use super::Integrand;
+use std::f64::consts::PI;
+
+/// fA: sin(sum x) over (0,10)^6 — paper Table 1, true value -49.165073.
+pub struct FaSin6;
+
+impl FaSin6 {
+    pub fn new() -> Self {
+        FaSin6
+    }
+}
+
+impl Default for FaSin6 {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Integrand for FaSin6 {
+    fn name(&self) -> &str {
+        "fA"
+    }
+    fn dim(&self) -> usize {
+        6
+    }
+    fn lo(&self) -> f64 {
+        0.0
+    }
+    fn hi(&self) -> f64 {
+        10.0
+    }
+    #[inline]
+    fn eval(&self, x: &[f64]) -> f64 {
+        x.iter().sum::<f64>().sin()
+    }
+    fn true_value(&self) -> Option<f64> {
+        // Im[ (sin10 + i(1-cos10))^6 ]
+        let a = 10.0f64.sin();
+        let b = 1.0 - 10.0f64.cos();
+        let (mut re, mut im) = (1.0f64, 0.0f64);
+        for _ in 0..6 {
+            let (nre, nim) = (re * a - im * b, re * b + im * a);
+            re = nre;
+            im = nim;
+        }
+        Some(im)
+    }
+}
+
+/// fB: 9-D Gaussian with sigma = 0.1 over (-1,1)^9 — integrates to ~1.
+/// (Self-consistent version of the paper's eq. 8; see the Python
+/// registry's note about the formula/true-value mismatch in the paper.)
+pub struct FbGauss9;
+
+impl FbGauss9 {
+    pub fn new() -> Self {
+        FbGauss9
+    }
+}
+
+impl Default for FbGauss9 {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Integrand for FbGauss9 {
+    fn name(&self) -> &str {
+        "fB"
+    }
+    fn dim(&self) -> usize {
+        9
+    }
+    fn lo(&self) -> f64 {
+        -1.0
+    }
+    fn hi(&self) -> f64 {
+        1.0
+    }
+    #[inline]
+    fn eval(&self, x: &[f64]) -> f64 {
+        let var = 0.01; // sigma^2
+        let norm = (2.0 * PI * var).powf(-4.5);
+        let s: f64 = x.iter().map(|&v| v * v).sum();
+        norm * (-s / (2.0 * var)).exp()
+    }
+    fn true_value(&self) -> Option<f64> {
+        let one = super::genz::erf(1.0 / (0.1 * 2.0f64.sqrt()));
+        Some(one.powi(9))
+    }
+    fn symmetric(&self) -> bool {
+        true
+    }
+}
+
+/// The stateful 6-D "cosmology-style" integrand (§6.1 substitution):
+/// evaluation flows through two runtime interpolation tables, mirroring
+/// the paper's cosmology integrand whose cost is table lookups.
+///
+/// f(x) = T0(x0) * T1(x1) * exp(-(x2^2+x3^2)) * (1 + 0.5*x4*x5)
+pub struct Cosmo {
+    t0: Interp1D,
+    t1: Interp1D,
+}
+
+/// Knot count of the default tables (must match the Python registry).
+pub const COSMO_KNOTS: usize = 64;
+
+impl Cosmo {
+    pub fn new(t0: Interp1D, t1: Interp1D) -> Self {
+        Cosmo { t0, t1 }
+    }
+
+    /// The deterministic default tables — same formulas as
+    /// `integrands.make_tables` in Python.
+    pub fn default_tables() -> (Vec<f64>, Vec<f64>) {
+        let k = COSMO_KNOTS;
+        let mut t0 = Vec::with_capacity(k);
+        let mut t1 = Vec::with_capacity(k);
+        for i in 0..k {
+            let x = i as f64 / (k - 1) as f64;
+            t0.push(1.0 + 0.5 * (2.0 * PI * x).sin() + 0.25 * x * x);
+            t1.push((-2.0 * (x - 0.3) * (x - 0.3)).exp() + 0.1);
+        }
+        (t0, t1)
+    }
+
+    pub fn with_default_tables() -> Self {
+        let (t0, t1) = Self::default_tables();
+        Cosmo::new(Interp1D::new(t0, 0.0, 1.0), Interp1D::new(t1, 0.0, 1.0))
+    }
+
+    /// Semi-analytic reference by high-resolution product quadrature
+    /// (same method as `integrands.cosmo_true_value`).
+    pub fn quadrature_true_value(&self, n: usize) -> f64 {
+        let trapz = |f: &dyn Fn(f64) -> f64| -> f64 {
+            let mut s = 0.0;
+            for i in 0..n {
+                let x0 = i as f64 / n as f64;
+                let x1 = (i + 1) as f64 / n as f64;
+                s += 0.5 * (f(x0) + f(x1)) * (x1 - x0);
+            }
+            s
+        };
+        let i0 = trapz(&|x| self.t0.eval(x));
+        let i1 = trapz(&|x| self.t1.eval(x));
+        let ig = trapz(&|x| (-x * x).exp());
+        i0 * i1 * ig * ig * 1.125
+    }
+}
+
+impl Integrand for Cosmo {
+    fn name(&self) -> &str {
+        "cosmo"
+    }
+    fn dim(&self) -> usize {
+        6
+    }
+    fn lo(&self) -> f64 {
+        0.0
+    }
+    fn hi(&self) -> f64 {
+        1.0
+    }
+    #[inline]
+    fn eval(&self, x: &[f64]) -> f64 {
+        let a = self.t0.eval(x[0]);
+        let b = self.t1.eval(x[1]);
+        let g = (-(x[2] * x[2] + x[3] * x[3])).exp();
+        let p = 1.0 + 0.5 * x[4] * x[5];
+        a * b * g * p
+    }
+    fn true_value(&self) -> Option<f64> {
+        Some(self.quadrature_true_value(50_000))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fa_true_value_matches_paper() {
+        let f = FaSin6::new();
+        let tv = f.true_value().unwrap();
+        assert!((tv - (-49.165073)).abs() < 1e-5, "{tv}");
+    }
+
+    #[test]
+    fn fa_eval() {
+        let f = FaSin6::new();
+        assert_eq!(f.eval(&[0.0; 6]), 0.0);
+        let x = [PI / 12.0; 6]; // sum = pi/2
+        assert!((f.eval(&x) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn fb_true_value_near_one() {
+        let f = FbGauss9::new();
+        assert!((f.true_value().unwrap() - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn fb_center_value() {
+        let f = FbGauss9::new();
+        let want = (2.0 * PI * 0.01f64).powf(-4.5);
+        assert!((f.eval(&[0.0; 9]) - want).abs() / want < 1e-12);
+    }
+
+    #[test]
+    fn cosmo_tables_scale_linearly() {
+        let c = Cosmo::with_default_tables();
+        let (t0, t1) = Cosmo::default_tables();
+        let doubled = Cosmo::new(
+            Interp1D::new(t0.iter().map(|v| v * 2.0).collect(), 0.0, 1.0),
+            Interp1D::new(t1.iter().map(|v| v * 2.0).collect(), 0.0, 1.0),
+        );
+        let x = [0.25; 6];
+        assert!((doubled.eval(&x) - 4.0 * c.eval(&x)).abs() < 1e-10);
+    }
+
+    #[test]
+    fn cosmo_true_value_matches_python() {
+        // python cosmo_true_value() ~ 0.617448 (printed in the proto run)
+        let c = Cosmo::with_default_tables();
+        let tv = c.true_value().unwrap();
+        assert!((tv - 0.617448).abs() < 5e-4, "{tv}");
+    }
+}

@@ -1,0 +1,120 @@
+//! Integrand registry — Rust twins of `python/compile/integrands.py`.
+//!
+//! The native engine and all CPU baselines evaluate these; the PJRT
+//! path evaluates the jnp versions baked into the artifacts. Names,
+//! formulas, domains, and true values must match the Python registry
+//! exactly (cross-checked in tests and via golden files).
+
+mod genz;
+mod interp;
+mod misc;
+
+pub use genz::*;
+pub use interp::Interp1D;
+pub use misc::*;
+
+use crate::error::{Error, Result};
+use std::sync::Arc;
+
+/// A d-dimensional scalar integrand. `eval` receives one point in
+/// integration-space coordinates (length d).
+pub trait Integrand: Send + Sync {
+    /// Registry name (matches the Python registry / artifact manifest).
+    fn name(&self) -> &str;
+    /// Dimensionality this instance integrates over.
+    fn dim(&self) -> usize;
+    /// Integration box lower corner (same value on every axis).
+    fn lo(&self) -> f64;
+    /// Integration box upper corner.
+    fn hi(&self) -> f64;
+    /// Evaluate at one point (length `dim`).
+    fn eval(&self, x: &[f64]) -> f64;
+    /// Analytic / semi-analytic reference value, if known.
+    fn true_value(&self) -> Option<f64>;
+    /// Identical marginal density on all axes (m-Cubes1D is valid).
+    fn symmetric(&self) -> bool {
+        false
+    }
+}
+
+/// Shared handle to an integrand.
+pub type IntegrandRef = Arc<dyn Integrand>;
+
+/// Instantiate a registry integrand at dimension `d`.
+///
+/// Fixed-dimension integrands (fA, fB, cosmo) reject other dims.
+pub fn by_name(name: &str, d: usize) -> Result<IntegrandRef> {
+    let f: IntegrandRef = match name {
+        "f1" => Arc::new(F1::new(d)),
+        "f2" => Arc::new(F2::new(d)),
+        "f3" => Arc::new(F3::new(d)),
+        "f4" => Arc::new(F4::new(d)),
+        "f5" => Arc::new(F5::new(d)),
+        "f6" => Arc::new(F6::new(d)),
+        "fA" => {
+            check_dim(name, d, 6)?;
+            Arc::new(FaSin6::new())
+        }
+        "fB" => {
+            check_dim(name, d, 9)?;
+            Arc::new(FbGauss9::new())
+        }
+        "cosmo" => {
+            check_dim(name, d, 6)?;
+            Arc::new(Cosmo::with_default_tables())
+        }
+        _ => {
+            return Err(Error::Unknown {
+                kind: "integrand",
+                name: name.to_string(),
+            })
+        }
+    };
+    Ok(f)
+}
+
+fn check_dim(name: &str, d: usize, want: usize) -> Result<()> {
+    if d != want {
+        return Err(Error::Config(format!(
+            "integrand {name} is fixed at d={want}, got d={d}"
+        )));
+    }
+    Ok(())
+}
+
+/// All registry names (paper suite order).
+pub const ALL_NAMES: [&str; 9] = [
+    "f1", "f2", "f3", "f4", "f5", "f6", "fA", "fB", "cosmo",
+];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_resolves_all() {
+        for name in ALL_NAMES {
+            let d = match name {
+                "fA" => 6,
+                "fB" => 9,
+                "cosmo" => 6,
+                _ => 5,
+            };
+            let f = by_name(name, d).unwrap();
+            assert_eq!(f.name(), name);
+            assert_eq!(f.dim(), d);
+        }
+    }
+
+    #[test]
+    fn unknown_name_errors() {
+        assert!(by_name("nope", 3).is_err());
+    }
+
+    #[test]
+    fn fixed_dim_enforced() {
+        assert!(by_name("fA", 5).is_err());
+        assert!(by_name("fB", 9).is_ok());
+        assert!(by_name("cosmo", 2).is_err());
+    }
+}

@@ -1,0 +1,58 @@
+//! # m-Cubes — portable VEGAS multi-dimensional integration
+//!
+//! A reproduction of *"m-Cubes: An Efficient and Portable Implementation
+//! of Multi-Dimensional Integration for GPUs"* (Sakiotis et al., 2022)
+//! as a three-layer Rust + JAX + Pallas stack:
+//!
+//! - **L1** — the V-Sample Pallas kernel (`python/compile/kernels/`),
+//!   AOT-lowered to HLO-text artifacts at build time.
+//! - **L2** — the JAX wrapper (`python/compile/model.py`) that reduces
+//!   per-block partials; lowered together with L1.
+//! - **L3** — this crate: the coordinator (iteration driver, importance
+//!   grid adjustment, convergence, job service), the PJRT runtime that
+//!   executes the artifacts, a native CPU engine that reproduces the
+//!   identical sampling math, and the baselines the paper compares
+//!   against (serial VEGAS, gVegas, ZMCintegral-style, plain MC, MISER).
+//!
+//! Python never runs on the request path; after `make artifacts` the
+//! `mcubes` binary is self-contained.
+//!
+//! ## Quick start
+//!
+//! ```no_run
+//! use mcubes::prelude::*;
+//!
+//! let f = mcubes::integrands::by_name("f4", 5).unwrap();
+//! let cfg = JobConfig {
+//!     maxcalls: 1 << 17,
+//!     tau_rel: 1e-3,
+//!     ..JobConfig::default()
+//! };
+//! let out = mcubes::coordinator::integrate_native(&*f, &cfg).unwrap();
+//! println!("I = {} ± {}", out.integral, out.sigma);
+//! ```
+
+pub mod baselines;
+pub mod coordinator;
+pub mod engine;
+pub mod error;
+pub mod estimator;
+pub mod grid;
+pub mod integrands;
+pub mod report;
+pub mod rng;
+pub mod runtime;
+pub mod strat;
+pub mod util;
+
+pub use error::{Error, Result};
+
+/// Common imports for examples and benches.
+pub mod prelude {
+    pub use crate::coordinator::{IntegrationOutput, JobConfig};
+    pub use crate::error::{Error, Result};
+    pub use crate::estimator::{Convergence, IterationResult, WeightedEstimator};
+    pub use crate::grid::{Bins, GridMode};
+    pub use crate::integrands::{Integrand, IntegrandRef};
+    pub use crate::strat::Layout;
+}

@@ -1,0 +1,332 @@
+//! `mcubes` — the leader binary: CLI over the integration service,
+//! PJRT artifact runtime, native engine, and baselines.
+//!
+//! Subcommands:
+//!   integrate   run one integration job (native or pjrt backend)
+//!   serve       run a batch of jobs through the service, print metrics
+//!   artifacts   list artifacts in the manifest
+//!   selftest    quick native-vs-pjrt cross-check on one artifact
+//!
+//! Examples:
+//!   mcubes integrate --integrand f4 --dim 5 --calls 131072 --tau 1e-3
+//!   mcubes integrate --backend pjrt --integrand f4 --dim 5
+//!   mcubes artifacts
+//!   mcubes selftest
+
+use mcubes::baselines::{vegas_serial_integrate, zmc_integrate, ZmcConfig};
+use mcubes::coordinator::{
+    run_driver, IntegrationService, JobConfig, JobRequest, PjrtBackend,
+};
+use mcubes::grid::GridMode;
+use mcubes::integrands::by_name;
+use mcubes::runtime::{PjrtRuntime, Registry, DEFAULT_ARTIFACT_DIR};
+use mcubes::util::cli::Cli;
+use mcubes::util::table::{fmt_ms, fmt_sig, Table};
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let sub = args.first().map(|s| s.as_str()).unwrap_or("help");
+    let rest = if args.is_empty() { &[][..] } else { &args[1..] };
+    let code = match sub {
+        "integrate" => cmd_integrate(rest),
+        "serve" => cmd_serve(rest),
+        "artifacts" => cmd_artifacts(rest),
+        "selftest" => cmd_selftest(rest),
+        _ => {
+            eprintln!(
+                "usage: mcubes <integrate|serve|artifacts|selftest> [options]\n\
+                 run `mcubes <subcommand> --help` for options"
+            );
+            if sub == "help" {
+                0
+            } else {
+                2
+            }
+        }
+    };
+    std::process::exit(code);
+}
+
+fn integrate_cli() -> Cli {
+    Cli::new("mcubes integrate", "run one integration job")
+        .opt("integrand", "f4", "integrand name (f1..f6, fA, fB, cosmo)")
+        .opt("dim", "5", "dimension (fixed-dim integrands check this)")
+        .opt("calls", "131072", "evaluation budget per iteration")
+        .opt("tau", "1e-3", "target relative error")
+        .opt("itmax", "15", "max iterations")
+        .opt("ita", "10", "iterations with bin adjustment")
+        .opt("seed", "42", "rng seed")
+        .opt("backend", "native", "native | pjrt")
+        .opt("artifacts", DEFAULT_ARTIFACT_DIR, "artifacts directory")
+        .flag("onedim", "use the m-Cubes1D shared-axis grid")
+        .flag("baseline-serial", "also run serial VEGAS for comparison")
+        .flag("baseline-zmc", "also run the ZMC-style baseline")
+}
+
+fn cmd_integrate(args: &[String]) -> i32 {
+    let cli = integrate_cli();
+    let p = match cli.parse(args) {
+        Ok(p) => p,
+        Err(msg) => {
+            eprintln!("{msg}");
+            return 2;
+        }
+    };
+    let run = || -> Result<i32, String> {
+        let name = p.get("integrand").unwrap().to_string();
+        let dim = p.get_usize("dim")?;
+        let cfg = JobConfig {
+            maxcalls: p.get_usize("calls")?,
+            tau_rel: p.get_f64("tau")?,
+            itmax: p.get_usize("itmax")?,
+            ita: p.get_usize("ita")?,
+            seed: p.get_u32("seed")?,
+            grid_mode: if p.is_set("onedim") {
+                GridMode::Shared1D
+            } else {
+                GridMode::PerAxis
+            },
+            ..Default::default()
+        };
+        let f = by_name(&name, dim).map_err(|e| e.to_string())?;
+
+        let out = match p.get("backend").unwrap() {
+            "native" => mcubes::coordinator::integrate_native(&*f, &cfg).map_err(|e| e.to_string())?,
+            "pjrt" => {
+                let registry =
+                    Registry::load(p.get("artifacts").unwrap()).map_err(|e| e.to_string())?;
+                let runtime = PjrtRuntime::cpu().map_err(|e| e.to_string())?;
+                let backend = PjrtBackend::load(&runtime, &registry, &name, cfg.maxcalls)
+                    .map_err(|e| e.to_string())?;
+                run_driver(&backend, &cfg).map_err(|e| e.to_string())?
+            }
+            other => return Err(format!("unknown backend {other}")),
+        };
+
+        let truth = f.true_value();
+        println!("integrand   : {name} (d={dim})");
+        println!("backend     : {}", out.backend);
+        println!("integral    : {}", fmt_sig(out.integral, 10));
+        println!("sigma       : {}", fmt_sig(out.sigma, 4));
+        println!("rel err     : {:.3e}", out.rel_err);
+        if let Some(t) = truth {
+            println!("true value  : {}", fmt_sig(t, 10));
+            println!("true rel err: {:.3e}", ((out.integral - t) / t).abs());
+        }
+        println!("chi2/dof    : {:.3}", out.chi2_dof);
+        println!("iterations  : {} (converged: {})", out.iterations, out.converged);
+        println!("calls used  : {}", out.calls_used);
+        println!(
+            "time        : total {} / kernel {}",
+            fmt_ms(out.total_time * 1e3),
+            fmt_ms(out.kernel_time * 1e3)
+        );
+
+        if p.is_set("baseline-serial") {
+            let b = vegas_serial_integrate(&*f, cfg.maxcalls, cfg.tau_rel, cfg.itmax, cfg.seed);
+            println!(
+                "serial vegas: I={} sigma={} time={}",
+                fmt_sig(b.integral, 8),
+                fmt_sig(b.sigma, 3),
+                fmt_ms(b.total_time * 1e3)
+            );
+        }
+        if p.is_set("baseline-zmc") {
+            let b = zmc_integrate(&*f, &ZmcConfig::default());
+            println!(
+                "zmc-style   : I={} sigma={} time={}",
+                fmt_sig(b.integral, 8),
+                fmt_sig(b.sigma, 3),
+                fmt_ms(b.total_time * 1e3)
+            );
+        }
+        Ok(0)
+    };
+    match run() {
+        Ok(c) => c,
+        Err(msg) => {
+            eprintln!("error: {msg}");
+            1
+        }
+    }
+}
+
+fn cmd_serve(args: &[String]) -> i32 {
+    let cli = Cli::new("mcubes serve", "run a batch of jobs through the service")
+        .opt("jobs", "16", "number of jobs")
+        .opt("workers", "4", "worker threads")
+        .opt("calls", "16384", "evaluation budget per iteration")
+        .opt("tau", "1e-3", "target relative error");
+    let p = match cli.parse(args) {
+        Ok(p) => p,
+        Err(msg) => {
+            eprintln!("{msg}");
+            return 2;
+        }
+    };
+    let jobs = p.get_usize("jobs").unwrap_or(16);
+    let workers = p.get_usize("workers").unwrap_or(4);
+    let suite = ["f2", "f3", "f4", "f5", "f6"];
+    let dims = [6, 3, 5, 8, 6];
+    let mut svc = IntegrationService::new(workers);
+    for i in 0..jobs {
+        let k = i % suite.len();
+        svc.submit(JobRequest {
+            id: i as u64,
+            integrand: suite[k].into(),
+            dim: dims[k],
+            config: JobConfig {
+                maxcalls: p.get_usize("calls").unwrap_or(16384),
+                tau_rel: p.get_f64("tau").unwrap_or(1e-3),
+                seed: 1000 + i as u32,
+                ..Default::default()
+            },
+        });
+    }
+    match svc.drain() {
+        Ok((results, m)) => {
+            let mut t = Table::new(&["id", "integrand", "I", "sigma", "iters", "latency"]);
+            for r in &results {
+                match &r.outcome {
+                    Ok(o) => t.row(vec![
+                        r.id.to_string(),
+                        r.integrand.clone(),
+                        fmt_sig(o.integral, 6),
+                        fmt_sig(o.sigma, 3),
+                        o.iterations.to_string(),
+                        fmt_ms(r.latency * 1e3),
+                    ]),
+                    Err(e) => t.row(vec![
+                        r.id.to_string(),
+                        r.integrand.clone(),
+                        format!("ERROR: {e}"),
+                        "-".into(),
+                        "-".into(),
+                        fmt_ms(r.latency * 1e3),
+                    ]),
+                };
+            }
+            println!("{}", t.render());
+            println!(
+                "jobs={} failures={} wall={} throughput={:.1} jobs/s p50={} p95={}",
+                m.jobs,
+                m.failures,
+                fmt_ms(m.wall_time * 1e3),
+                m.throughput,
+                fmt_ms(m.latency_p50 * 1e3),
+                fmt_ms(m.latency_p95 * 1e3)
+            );
+            0
+        }
+        Err(e) => {
+            eprintln!("error: {e}");
+            1
+        }
+    }
+}
+
+fn cmd_artifacts(args: &[String]) -> i32 {
+    let cli = Cli::new("mcubes artifacts", "list the artifact manifest")
+        .opt("artifacts", DEFAULT_ARTIFACT_DIR, "artifacts directory");
+    let p = match cli.parse(args) {
+        Ok(p) => p,
+        Err(msg) => {
+            eprintln!("{msg}");
+            return 2;
+        }
+    };
+    match Registry::load(p.get("artifacts").unwrap()) {
+        Ok(reg) => {
+            let mut t = Table::new(&[
+                "name", "integrand", "d", "calls", "g", "m", "p", "adjust", "hist",
+            ]);
+            for a in reg.all() {
+                t.row(vec![
+                    a.name.clone(),
+                    a.integrand.clone(),
+                    a.dim.to_string(),
+                    a.maxcalls.to_string(),
+                    a.g.to_string(),
+                    a.m.to_string(),
+                    a.p.to_string(),
+                    a.adjust.to_string(),
+                    a.hist_mode.clone(),
+                ]);
+            }
+            println!("{}", t.render());
+            0
+        }
+        Err(e) => {
+            eprintln!("error: {e}");
+            1
+        }
+    }
+}
+
+fn cmd_selftest(args: &[String]) -> i32 {
+    let cli = Cli::new(
+        "mcubes selftest",
+        "native-vs-pjrt cross-check on one artifact",
+    )
+    .opt("artifacts", DEFAULT_ARTIFACT_DIR, "artifacts directory")
+    .opt("integrand", "f4", "integrand to check");
+    let p = match cli.parse(args) {
+        Ok(p) => p,
+        Err(msg) => {
+            eprintln!("{msg}");
+            return 2;
+        }
+    };
+    let run = || -> Result<(), String> {
+        let registry = Registry::load(p.get("artifacts").unwrap()).map_err(|e| e.to_string())?;
+        let runtime = PjrtRuntime::cpu().map_err(|e| e.to_string())?;
+        println!(
+            "pjrt platform: {} ({} devices)",
+            runtime.platform_name(),
+            runtime.device_count()
+        );
+        let name = p.get("integrand").unwrap();
+        let backend =
+            PjrtBackend::load(&runtime, &registry, name, 0).map_err(|e| e.to_string())?;
+        let meta = backend.meta().clone();
+        let f = by_name(&meta.integrand, meta.dim).map_err(|e| e.to_string())?;
+        let cfg = JobConfig {
+            maxcalls: meta.maxcalls,
+            nb: meta.nb,
+            nblocks: meta.nblocks,
+            itmax: 5,
+            ita: 3,
+            skip: 0,
+            tau_rel: 1e-12, // run all 5 iterations
+            seed: 2024,
+            ..Default::default()
+        };
+        let pjrt_out = run_driver(&backend, &cfg).map_err(|e| e.to_string())?;
+        let native_out =
+            mcubes::coordinator::integrate_native(&*f, &cfg).map_err(|e| e.to_string())?;
+        let rel = ((pjrt_out.integral - native_out.integral) / native_out.integral).abs();
+        println!(
+            "pjrt   I={} sigma={}",
+            fmt_sig(pjrt_out.integral, 12),
+            fmt_sig(pjrt_out.sigma, 4)
+        );
+        println!(
+            "native I={} sigma={}",
+            fmt_sig(native_out.integral, 12),
+            fmt_sig(native_out.sigma, 4)
+        );
+        println!("cross-backend rel diff: {rel:.3e}");
+        if rel > 1e-9 {
+            return Err(format!("backends disagree: rel {rel:.3e}"));
+        }
+        println!("selftest OK");
+        Ok(())
+    };
+    match run() {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("selftest FAILED: {e}");
+            1
+        }
+    }
+}

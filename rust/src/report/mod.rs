@@ -1,0 +1,140 @@
+//! Experiment reporting: box-plot statistics (Fig. 1), speedup series,
+//! and markdown/CSV emission helpers shared by the benches.
+
+use crate::util::benchkit::percentile_sorted;
+
+/// Five-number summary + outliers — what each box in the paper's Fig. 1
+/// displays (quartile box, median line, whiskers, outlier points).
+#[derive(Debug, Clone)]
+pub struct BoxStats {
+    pub n: usize,
+    pub min: f64,
+    pub q1: f64,
+    pub median: f64,
+    pub q3: f64,
+    pub max: f64,
+    pub mean: f64,
+    /// Points beyond 1.5 IQR whiskers.
+    pub outliers: Vec<f64>,
+}
+
+impl BoxStats {
+    pub fn from_samples(samples: &[f64]) -> BoxStats {
+        let mut s: Vec<f64> = samples.iter().copied().filter(|x| x.is_finite()).collect();
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        if s.is_empty() {
+            return BoxStats {
+                n: 0,
+                min: 0.0,
+                q1: 0.0,
+                median: 0.0,
+                q3: 0.0,
+                max: 0.0,
+                mean: 0.0,
+                outliers: vec![],
+            };
+        }
+        let q1 = percentile_sorted(&s, 25.0);
+        let q3 = percentile_sorted(&s, 75.0);
+        let iqr = q3 - q1;
+        let lo_fence = q1 - 1.5 * iqr;
+        let hi_fence = q3 + 1.5 * iqr;
+        let outliers = s
+            .iter()
+            .copied()
+            .filter(|&x| x < lo_fence || x > hi_fence)
+            .collect();
+        BoxStats {
+            n: s.len(),
+            min: s[0],
+            q1,
+            median: percentile_sorted(&s, 50.0),
+            q3,
+            max: *s.last().unwrap(),
+            mean: s.iter().sum::<f64>() / s.len() as f64,
+            outliers,
+        }
+    }
+
+    /// Whisker ends (min/max of non-outlier points).
+    pub fn whiskers(&self) -> (f64, f64) {
+        let iqr = self.q3 - self.q1;
+        let lo_fence = self.q1 - 1.5 * iqr;
+        let hi_fence = self.q3 + 1.5 * iqr;
+        (self.min.max(lo_fence), self.max.min(hi_fence))
+    }
+}
+
+/// One Fig.-1 style cell: requested tolerance vs achieved rel-errors.
+#[derive(Debug, Clone)]
+pub struct AccuracyCell {
+    pub integrand: String,
+    pub dim: usize,
+    pub tau_rel: f64,
+    pub digits: f64,
+    pub achieved: BoxStats,
+    pub runs_converged: usize,
+    pub runs_total: usize,
+}
+
+impl AccuracyCell {
+    /// Did the median achieved error meet the requested tolerance?
+    /// (The paper's criterion: box boundaries encompass the target.)
+    pub fn median_meets_target(&self) -> bool {
+        self.achieved.median <= self.tau_rel
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn five_number_summary() {
+        let s: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        let b = BoxStats::from_samples(&s);
+        assert_eq!(b.n, 100);
+        assert_eq!(b.min, 1.0);
+        assert_eq!(b.max, 100.0);
+        assert!((b.median - 50.5).abs() < 1e-9);
+        assert!((b.q1 - 25.75).abs() < 1e-9);
+        assert!((b.q3 - 75.25).abs() < 1e-9);
+        assert!(b.outliers.is_empty());
+    }
+
+    #[test]
+    fn detects_outliers() {
+        let mut s: Vec<f64> = vec![1.0; 20];
+        for (i, v) in s.iter_mut().enumerate() {
+            *v = 1.0 + (i as f64) * 0.01;
+        }
+        s.push(50.0); // gross outlier
+        let b = BoxStats::from_samples(&s);
+        assert_eq!(b.outliers.len(), 1);
+        assert_eq!(b.outliers[0], 50.0);
+        let (_, hi) = b.whiskers();
+        assert!(hi < 50.0);
+    }
+
+    #[test]
+    fn handles_nan_and_empty() {
+        let b = BoxStats::from_samples(&[f64::NAN, 1.0, 2.0]);
+        assert_eq!(b.n, 2);
+        let e = BoxStats::from_samples(&[]);
+        assert_eq!(e.n, 0);
+    }
+
+    #[test]
+    fn accuracy_cell_target() {
+        let cell = AccuracyCell {
+            integrand: "f4".into(),
+            dim: 5,
+            tau_rel: 1e-3,
+            digits: 3.0,
+            achieved: BoxStats::from_samples(&[5e-4, 8e-4, 2e-4]),
+            runs_converged: 3,
+            runs_total: 3,
+        };
+        assert!(cell.median_meets_target());
+    }
+}

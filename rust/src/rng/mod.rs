@@ -1,0 +1,11 @@
+//! Counter-based RNG — Philox4x32-10, bit-identical to the Python/Pallas
+//! implementation (`python/compile/philox.py`).
+//!
+//! Every backend (Pallas kernel via PJRT, native Rust engine, serial
+//! baselines) draws the *same* uniform for (seed, iteration, sample,
+//! dim), which is what makes the cross-layer equivalence tests possible
+//! and keeps results reproducible across backends.
+
+mod philox;
+
+pub use philox::{philox4x32, uniform_for, uniforms_into, PhiloxStream, CTR_MAGIC, KEY_MAGIC};

@@ -1,0 +1,11 @@
+//! PJRT runtime: load AOT artifacts (HLO text + manifest) and execute
+//! them from the Rust request path. Python is never involved here.
+
+mod pjrt;
+mod registry;
+
+pub use pjrt::{PjrtRuntime, VSampleExecutable};
+pub use registry::{ArtifactMeta, Registry};
+
+/// Default artifacts directory (relative to the repo root / cwd).
+pub const DEFAULT_ARTIFACT_DIR: &str = "artifacts";

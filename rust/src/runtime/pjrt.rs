@@ -1,0 +1,143 @@
+//! PJRT client wrapper: compile HLO-text artifacts once, execute many
+//! times from the coordinator's hot loop.
+//!
+//! Pattern from /opt/xla-example/load_hlo: text -> HloModuleProto ->
+//! XlaComputation -> PjRtLoadedExecutable. The executable returns a
+//! tuple (res[2][, C[d][nb]]), matching `model.py`'s output convention.
+
+use super::registry::{ArtifactMeta, Registry};
+use crate::error::{Error, Result};
+use crate::estimator::IterationResult;
+use crate::grid::Bins;
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+/// Owns the PJRT CPU client and a compile cache keyed by artifact name.
+pub struct PjrtRuntime {
+    client: xla::PjRtClient,
+    cache: Mutex<HashMap<String, Arc<VSampleExecutable>>>,
+}
+
+impl PjrtRuntime {
+    /// Create a CPU PJRT client.
+    pub fn cpu() -> Result<PjrtRuntime> {
+        let client = xla::PjRtClient::cpu()?;
+        Ok(PjrtRuntime {
+            client,
+            cache: Mutex::new(HashMap::new()),
+        })
+    }
+
+    pub fn platform_name(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn device_count(&self) -> usize {
+        self.client.device_count()
+    }
+
+    /// Load + compile an artifact (cached).
+    pub fn load(&self, registry: &Registry, meta: &ArtifactMeta) -> Result<Arc<VSampleExecutable>> {
+        if let Some(exe) = self.cache.lock().unwrap().get(&meta.name) {
+            return Ok(Arc::clone(exe));
+        }
+        let path = registry.hlo_path(meta);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str()
+                .ok_or_else(|| Error::Runtime("non-utf8 artifact path".into()))?,
+        )?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)?;
+        let tables = registry.tables_for(meta)?;
+        let built = Arc::new(VSampleExecutable {
+            exe,
+            meta: meta.clone(),
+            tables,
+        });
+        self.cache
+            .lock()
+            .unwrap()
+            .insert(meta.name.clone(), Arc::clone(&built));
+        Ok(built)
+    }
+}
+
+/// A compiled V-Sample pass for one (integrand, layout, variant).
+pub struct VSampleExecutable {
+    exe: xla::PjRtLoadedExecutable,
+    meta: ArtifactMeta,
+    /// Runtime tables for stateful integrands (row-major), if any.
+    tables: Option<Vec<f64>>,
+}
+
+impl VSampleExecutable {
+    pub fn meta(&self) -> &ArtifactMeta {
+        &self.meta
+    }
+
+    /// Execute one iteration. `bins` must match the artifact's (d, nb).
+    ///
+    /// Returns the iteration result and the bin-contribution histogram
+    /// (row-major d*nb) for adjust-variant artifacts, `None` otherwise.
+    pub fn vsample(
+        &self,
+        bins: &Bins,
+        seed: u32,
+        iteration: u32,
+    ) -> Result<(IterationResult, Option<Vec<f64>>)> {
+        let d = self.meta.dim;
+        let nb = self.meta.nb;
+        if bins.d() != d || bins.nb() != nb {
+            return Err(Error::Config(format!(
+                "bins shape ({}, {}) != artifact ({d}, {nb})",
+                bins.d(),
+                bins.nb()
+            )));
+        }
+        let bins_lit = xla::Literal::vec1(bins.flat()).reshape(&[d as i64, nb as i64])?;
+        let lo_lit = xla::Literal::vec1(&vec![self.meta.lo; d]);
+        let hi_lit = xla::Literal::vec1(&vec![self.meta.hi; d]);
+        let seed_lit = xla::Literal::vec1(&[seed, iteration]);
+
+        let mut args = vec![bins_lit, lo_lit, hi_lit, seed_lit];
+        if let Some(t) = &self.tables {
+            args.push(
+                xla::Literal::vec1(t)
+                    .reshape(&[self.meta.n_tables as i64, self.meta.table_knots as i64])?,
+            );
+        }
+
+        let result = self.exe.execute::<xla::Literal>(&args)?[0][0].to_literal_sync()?;
+        let parts = result.to_tuple()?;
+        if parts.is_empty() {
+            return Err(Error::Runtime("empty result tuple".into()));
+        }
+        let res = parts[0].to_vec::<f64>()?;
+        if res.len() != 2 {
+            return Err(Error::Runtime(format!("res len {} != 2", res.len())));
+        }
+        let contrib = if self.meta.adjust {
+            let c = parts
+                .get(1)
+                .ok_or_else(|| Error::Runtime("missing contrib output".into()))?
+                .to_vec::<f64>()?;
+            if c.len() != d * nb {
+                return Err(Error::Runtime(format!(
+                    "contrib len {} != {}",
+                    c.len(),
+                    d * nb
+                )));
+            }
+            Some(c)
+        } else {
+            None
+        };
+        Ok((
+            IterationResult {
+                integral: res[0],
+                variance: res[1],
+            },
+            contrib,
+        ))
+    }
+}

@@ -1,0 +1,272 @@
+//! Artifact manifest: what `python -m compile.aot` emitted.
+
+use crate::error::{Error, Result};
+use crate::strat::Layout;
+use crate::util::json::{parse, Value};
+use std::fs;
+use std::path::{Path, PathBuf};
+
+/// Metadata for one AOT-lowered V-Sample executable.
+#[derive(Debug, Clone)]
+pub struct ArtifactMeta {
+    pub name: String,
+    pub file: String,
+    pub integrand: String,
+    pub dim: usize,
+    pub nb: usize,
+    pub g: usize,
+    pub m: usize,
+    pub p: usize,
+    pub nblocks: usize,
+    pub cpb: usize,
+    pub maxcalls: usize,
+    pub calls: usize,
+    pub adjust: bool,
+    pub hist_mode: String,
+    pub batch_size: usize,
+    pub lo: f64,
+    pub hi: f64,
+    pub symmetric: bool,
+    pub n_tables: usize,
+    pub table_knots: usize,
+    pub true_value: Option<f64>,
+}
+
+impl ArtifactMeta {
+    fn from_json(v: &Value) -> Result<ArtifactMeta> {
+        let s = |k: &str| -> Result<String> {
+            Ok(v.req(k)?
+                .as_str()
+                .ok_or_else(|| Error::Manifest(format!("{k}: not a string")))?
+                .to_string())
+        };
+        let u = |k: &str| -> Result<usize> {
+            v.req(k)?
+                .as_usize()
+                .ok_or_else(|| Error::Manifest(format!("{k}: not a usize")))
+        };
+        let f = |k: &str| -> Result<f64> {
+            v.req(k)?
+                .as_f64()
+                .ok_or_else(|| Error::Manifest(format!("{k}: not a number")))
+        };
+        let b = |k: &str| -> Result<bool> {
+            v.req(k)?
+                .as_bool()
+                .ok_or_else(|| Error::Manifest(format!("{k}: not a bool")))
+        };
+        Ok(ArtifactMeta {
+            name: s("name")?,
+            file: s("file")?,
+            integrand: s("integrand")?,
+            dim: u("dim")?,
+            nb: u("nb")?,
+            g: u("g")?,
+            m: u("m")?,
+            p: u("p")?,
+            nblocks: u("nblocks")?,
+            cpb: u("cpb")?,
+            maxcalls: u("maxcalls")?,
+            calls: u("calls")?,
+            adjust: b("adjust")?,
+            hist_mode: s("hist_mode")?,
+            batch_size: u("batch_size")?,
+            lo: f("lo")?,
+            hi: f("hi")?,
+            symmetric: b("symmetric")?,
+            n_tables: u("n_tables")?,
+            table_knots: u("table_knots")?,
+            true_value: v.get("true_value").and_then(|x| x.as_f64()),
+        })
+    }
+
+    /// The stratification layout this artifact was compiled for.
+    pub fn layout(&self) -> Layout {
+        Layout {
+            d: self.dim,
+            nb: self.nb,
+            g: self.g,
+            m: self.m,
+            p: self.p,
+            nblocks: self.nblocks,
+            cpb: self.cpb,
+        }
+    }
+
+    /// Cross-check: the manifest numbers must reproduce under the Rust
+    /// layout rule (guards Python/Rust drift).
+    pub fn verify_layout(&self) -> Result<()> {
+        let l = Layout::compute(self.dim, self.maxcalls, self.nb, self.nblocks)
+            .map_err(|e| Error::Manifest(format!("{}: {e}", self.name)))?;
+        if l != self.layout() {
+            return Err(Error::Manifest(format!(
+                "{}: layout drift python={:?} rust={:?}",
+                self.name,
+                self.layout(),
+                l
+            )));
+        }
+        Ok(())
+    }
+}
+
+/// The parsed artifacts directory.
+#[derive(Debug, Clone)]
+pub struct Registry {
+    dir: PathBuf,
+    artifacts: Vec<ArtifactMeta>,
+}
+
+impl Registry {
+    /// Parse `<dir>/manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Registry> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest = dir.join("manifest.json");
+        let text = fs::read_to_string(&manifest).map_err(|e| {
+            Error::Manifest(format!(
+                "cannot read {} (run `make artifacts` first): {e}",
+                manifest.display()
+            ))
+        })?;
+        let root = parse(&text)?;
+        let arts = root
+            .req("artifacts")?
+            .as_arr()
+            .ok_or_else(|| Error::Manifest("artifacts: not an array".into()))?;
+        let mut artifacts = Vec::with_capacity(arts.len());
+        for a in arts {
+            let meta = ArtifactMeta::from_json(a)?;
+            meta.verify_layout()?;
+            artifacts.push(meta);
+        }
+        Ok(Registry { dir, artifacts })
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    pub fn all(&self) -> &[ArtifactMeta] {
+        &self.artifacts
+    }
+
+    /// Find by artifact name.
+    pub fn by_name(&self, name: &str) -> Result<&ArtifactMeta> {
+        self.artifacts
+            .iter()
+            .find(|a| a.name == name)
+            .ok_or_else(|| Error::Unknown {
+                kind: "artifact",
+                name: name.to_string(),
+            })
+    }
+
+    /// Find the best artifact for (integrand, variant) with
+    /// maxcalls >= `min_calls` (smallest adequate), falling back to the
+    /// largest available.
+    pub fn select(&self, integrand: &str, adjust: bool, min_calls: usize) -> Result<&ArtifactMeta> {
+        let mut candidates: Vec<&ArtifactMeta> = self
+            .artifacts
+            .iter()
+            .filter(|a| {
+                a.integrand == integrand && a.adjust == adjust && a.hist_mode == "scatter"
+            })
+            .collect();
+        if candidates.is_empty() {
+            return Err(Error::Unknown {
+                kind: "artifact for integrand",
+                name: format!("{integrand} (adjust={adjust})"),
+            });
+        }
+        candidates.sort_by_key(|a| a.maxcalls);
+        Ok(candidates
+            .iter()
+            .find(|a| a.maxcalls >= min_calls)
+            .copied()
+            .unwrap_or(*candidates.last().unwrap()))
+    }
+
+    /// Path to an artifact's HLO text.
+    pub fn hlo_path(&self, meta: &ArtifactMeta) -> PathBuf {
+        self.dir.join(&meta.file)
+    }
+
+    /// Load the runtime interpolation tables for a stateful integrand
+    /// from `tables.json` (row-major [n_tables][knots]).
+    pub fn tables_for(&self, meta: &ArtifactMeta) -> Result<Option<Vec<f64>>> {
+        if meta.n_tables == 0 {
+            return Ok(None);
+        }
+        let text = fs::read_to_string(self.dir.join("tables.json"))?;
+        let root = parse(&text)?;
+        let entry = root.req(&meta.integrand)?;
+        let values = entry
+            .req("values")?
+            .as_arr()
+            .ok_or_else(|| Error::Manifest("tables values: not an array".into()))?;
+        let mut flat = Vec::with_capacity(meta.n_tables * meta.table_knots);
+        for row in values {
+            let r = row
+                .as_f64_vec()
+                .ok_or_else(|| Error::Manifest("table row: not numbers".into()))?;
+            if r.len() != meta.table_knots {
+                return Err(Error::Manifest(format!(
+                    "table row len {} != knots {}",
+                    r.len(),
+                    meta.table_knots
+                )));
+            }
+            flat.extend_from_slice(&r);
+        }
+        if flat.len() != meta.n_tables * meta.table_knots {
+            return Err(Error::Manifest("table count mismatch".into()));
+        }
+        Ok(Some(flat))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "version": 1,
+      "artifacts": [
+        {"name": "f4_d5_c16384_adj", "file": "f4_d5_c16384_adj.hlo.txt",
+         "integrand": "f4", "dim": 5, "nb": 50, "g": 6, "m": 7776, "p": 2,
+         "nblocks": 8, "cpb": 972, "maxcalls": 16384, "calls": 15552,
+         "adjust": true, "hist_mode": "scatter", "batch_size": 1,
+         "lo": 0.0, "hi": 1.0, "symmetric": true,
+         "n_tables": 0, "table_knots": 0, "true_value": 1.79e-6,
+         "inputs": [], "outputs": []}
+      ]
+    }"#;
+
+    #[test]
+    fn parses_sample_manifest() {
+        let root = parse(SAMPLE).unwrap();
+        let meta =
+            ArtifactMeta::from_json(&root.req("artifacts").unwrap().as_arr().unwrap()[0]).unwrap();
+        assert_eq!(meta.name, "f4_d5_c16384_adj");
+        assert_eq!(meta.m, 7776);
+        assert!(meta.adjust);
+        assert_eq!(meta.layout().d, 5);
+    }
+
+    #[test]
+    fn verify_layout_catches_drift() {
+        let root = parse(SAMPLE).unwrap();
+        let mut meta =
+            ArtifactMeta::from_json(&root.req("artifacts").unwrap().as_arr().unwrap()[0]).unwrap();
+        // The real numbers for (5, 16384): g=6? python: (16384/2)^(1/5)=6.06 -> 6
+        meta.verify_layout().expect("sample should be consistent");
+        meta.g = 5;
+        assert!(meta.verify_layout().is_err());
+    }
+
+    #[test]
+    fn missing_field_is_error() {
+        let root = parse(r#"{"name": "x"}"#).unwrap();
+        assert!(ArtifactMeta::from_json(&root).is_err());
+    }
+}

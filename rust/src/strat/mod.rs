@@ -1,0 +1,164 @@
+//! Stratification layout — sub-cube decomposition of the unit hypercube.
+//!
+//! Mirrors `python/compile/layout.py` exactly; the manifest carries the
+//! Python-computed numbers and `Layout::compute` must reproduce them
+//! (checked by `runtime::registry` on load and by unit tests here).
+
+use crate::error::{Error, Result};
+
+/// The paper's Algorithm-2 derived quantities (lines 3-8).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Layout {
+    /// Dimensionality of the integral.
+    pub d: usize,
+    /// Importance bins per axis.
+    pub nb: usize,
+    /// Stratification intervals per axis.
+    pub g: usize,
+    /// Number of sub-cubes, `g^d`.
+    pub m: usize,
+    /// Samples per sub-cube (uniform across cubes — the m-Cubes
+    /// workload-balance contribution).
+    pub p: usize,
+    /// Grid programs / thread groups.
+    pub nblocks: usize,
+    /// Cubes per block (last block may be padded).
+    pub cpb: usize,
+}
+
+impl Layout {
+    /// Compute the layout from (d, maxcalls) per Algorithm 2.
+    pub fn compute(d: usize, maxcalls: usize, nb: usize, nblocks: usize) -> Result<Layout> {
+        if d < 1 {
+            return Err(Error::Config(format!("dimension must be >= 1, got {d}")));
+        }
+        if maxcalls < 4 {
+            return Err(Error::Config(format!("maxcalls must be >= 4, got {maxcalls}")));
+        }
+        let mut g = ((maxcalls as f64 / 2.0).powf(1.0 / d as f64)).floor() as usize;
+        g = g.max(1);
+        // Guard fp rounding, same as the Python twin.
+        while (g + 1).pow(d as u32) <= maxcalls / 2 {
+            g += 1;
+        }
+        let m = g.pow(d as u32);
+        let p = (maxcalls / m).max(2);
+        let nblocks = nblocks.clamp(1, m);
+        let cpb = m.div_ceil(nblocks);
+        // Shrink away fully-empty trailing blocks (cpb rounding can
+        // leave grid programs with zero cubes).
+        let nblocks = m.div_ceil(cpb);
+        Ok(Layout {
+            d,
+            nb,
+            g,
+            m,
+            p,
+            nblocks,
+            cpb,
+        })
+    }
+
+    /// Function evaluations per iteration.
+    pub fn calls(&self) -> usize {
+        self.m * self.p
+    }
+
+    /// Decode flat cube index -> lattice coordinates (digit i base g).
+    /// Must match `sampling.cube_coords`.
+    #[inline]
+    pub fn cube_coords(&self, cube: usize, out: &mut [usize]) {
+        let mut idx = cube;
+        for slot in out.iter_mut().take(self.d) {
+            *slot = idx % self.g;
+            idx /= self.g;
+        }
+    }
+
+    /// Re-encode lattice coordinates -> flat cube index.
+    pub fn cube_index(&self, coords: &[usize]) -> usize {
+        let mut idx = 0usize;
+        for &c in coords.iter().rev() {
+            idx = idx * self.g + c;
+        }
+        idx
+    }
+}
+
+/// The paper's Set-Batch-Size heuristic (Algorithm 2 line 5): how many
+/// sub-cubes one worker processes serially. Mirrors
+/// `layout.batch_size_heuristic`.
+pub fn batch_size_heuristic(maxcalls: usize) -> usize {
+    if maxcalls <= (1 << 15) {
+        1
+    } else if maxcalls <= (1 << 20) {
+        2
+    } else if maxcalls <= (1 << 25) {
+        4
+    } else {
+        8
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn layout_matches_paper_rule() {
+        let l = Layout::compute(5, 1 << 14, 50, 8).unwrap();
+        assert_eq!(l.m, l.g.pow(5));
+        assert!(l.p >= 2);
+        assert_eq!(l.calls(), l.m * l.p);
+        // g is maximal with g^d <= maxcalls/2
+        assert!((l.g + 1).pow(5) > (1 << 14) / 2);
+        assert!(l.g.pow(5) <= (1 << 14) / 2);
+    }
+
+    #[test]
+    fn layout_matches_python_values() {
+        // Values printed by python compute_layout(5, 4096, 20, 4):
+        // g=4, m=1024, p=4, cpb=256
+        let l = Layout::compute(5, 4096, 20, 4).unwrap();
+        assert_eq!((l.g, l.m, l.p, l.cpb), (4, 1024, 4, 256));
+        // compute_layout(6, 16384, 50, 8): g = floor(8192^(1/6)) = 4
+        let l = Layout::compute(6, 16384, 50, 8).unwrap();
+        assert_eq!(l.g, 4);
+        assert_eq!(l.m, 4096);
+        assert_eq!(l.p, 4);
+    }
+
+    #[test]
+    fn blocks_cover_cubes() {
+        for (d, mc, nbk) in [(3, 5000, 8), (6, 16384, 8), (2, 100, 16), (9, 16384, 8)] {
+            let l = Layout::compute(d, mc, 50, nbk).unwrap();
+            assert!(l.cpb * l.nblocks >= l.m, "{l:?}");
+            assert!(l.cpb * (l.nblocks - 1) < l.m, "{l:?} wastes a block");
+        }
+    }
+
+    #[test]
+    fn cube_coords_roundtrip() {
+        let l = Layout::compute(4, 10_000, 50, 8).unwrap();
+        let mut buf = [0usize; 4];
+        for cube in 0..l.m {
+            l.cube_coords(cube, &mut buf);
+            assert!(buf.iter().all(|&c| c < l.g));
+            assert_eq!(l.cube_index(&buf), cube);
+        }
+    }
+
+    #[test]
+    fn rejects_bad_input() {
+        assert!(Layout::compute(0, 100, 50, 8).is_err());
+        assert!(Layout::compute(3, 2, 50, 8).is_err());
+    }
+
+    #[test]
+    fn batch_size_ladder() {
+        assert_eq!(batch_size_heuristic(1 << 14), 1);
+        assert_eq!(batch_size_heuristic(1 << 18), 2);
+        assert_eq!(batch_size_heuristic(1 << 22), 4);
+        assert_eq!(batch_size_heuristic(1 << 28), 8);
+    }
+}

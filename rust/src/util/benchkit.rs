@@ -1,0 +1,181 @@
+//! Micro/macro benchmark harness (no criterion offline).
+//!
+//! `cargo bench` targets are `harness = false` binaries built on this:
+//! warmup, repeated timed runs, robust stats, and paper-style table
+//! printing via `util::table`.
+
+use std::time::{Duration, Instant};
+
+/// Timing statistics over repeated runs.
+#[derive(Debug, Clone)]
+pub struct Stats {
+    pub samples_ms: Vec<f64>,
+}
+
+impl Stats {
+    pub fn from_ms(mut samples_ms: Vec<f64>) -> Stats {
+        samples_ms.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        Stats { samples_ms }
+    }
+
+    pub fn n(&self) -> usize {
+        self.samples_ms.len()
+    }
+
+    pub fn mean_ms(&self) -> f64 {
+        self.samples_ms.iter().sum::<f64>() / self.n().max(1) as f64
+    }
+
+    pub fn median_ms(&self) -> f64 {
+        percentile_sorted(&self.samples_ms, 50.0)
+    }
+
+    pub fn min_ms(&self) -> f64 {
+        self.samples_ms.first().copied().unwrap_or(0.0)
+    }
+
+    pub fn max_ms(&self) -> f64 {
+        self.samples_ms.last().copied().unwrap_or(0.0)
+    }
+
+    pub fn stddev_ms(&self) -> f64 {
+        if self.n() < 2 {
+            return 0.0;
+        }
+        let m = self.mean_ms();
+        let v = self
+            .samples_ms
+            .iter()
+            .map(|x| (x - m) * (x - m))
+            .sum::<f64>()
+            / (self.n() - 1) as f64;
+        v.sqrt()
+    }
+
+    pub fn p(&self, pct: f64) -> f64 {
+        percentile_sorted(&self.samples_ms, pct)
+    }
+}
+
+/// Percentile of an ascending-sorted slice (linear interpolation).
+pub fn percentile_sorted(sorted: &[f64], pct: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let rank = pct / 100.0 * (sorted.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    if lo == hi {
+        sorted[lo]
+    } else {
+        let frac = rank - lo as f64;
+        sorted[lo] * (1.0 - frac) + sorted[hi] * frac
+    }
+}
+
+/// Benchmark runner configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct BenchOpts {
+    pub warmup: usize,
+    pub runs: usize,
+    /// Hard wall-clock cap; stops sampling early when exceeded.
+    pub max_total: Duration,
+}
+
+impl Default for BenchOpts {
+    fn default() -> Self {
+        BenchOpts {
+            warmup: 1,
+            runs: 5,
+            max_total: Duration::from_secs(120),
+        }
+    }
+}
+
+/// Quick-mode detection: `MCUBES_BENCH_QUICK=1` shrinks runs so the
+/// full `cargo bench` suite stays tractable in CI.
+pub fn quick_mode() -> bool {
+    std::env::var("MCUBES_BENCH_QUICK").map(|v| v == "1").unwrap_or(false)
+}
+
+impl BenchOpts {
+    pub fn quick_aware(mut self) -> Self {
+        if quick_mode() {
+            self.warmup = 0;
+            self.runs = self.runs.min(2);
+            self.max_total = Duration::from_secs(30);
+        }
+        self
+    }
+}
+
+/// Time `f` under `opts`; `f` returns an arbitrary value that is
+/// black-boxed to keep the optimizer honest.
+pub fn bench<R>(opts: BenchOpts, mut f: impl FnMut() -> R) -> Stats {
+    for _ in 0..opts.warmup {
+        black_box(f());
+    }
+    let started = Instant::now();
+    let mut samples = Vec::with_capacity(opts.runs);
+    for i in 0..opts.runs {
+        let t0 = Instant::now();
+        black_box(f());
+        samples.push(t0.elapsed().as_secs_f64() * 1e3);
+        if started.elapsed() > opts.max_total && i >= 1 {
+            break;
+        }
+    }
+    Stats::from_ms(samples)
+}
+
+/// Opaque value sink (stable `std::hint::black_box`).
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_basic() {
+        let s = Stats::from_ms(vec![3.0, 1.0, 2.0]);
+        assert_eq!(s.min_ms(), 1.0);
+        assert_eq!(s.max_ms(), 3.0);
+        assert!((s.mean_ms() - 2.0).abs() < 1e-12);
+        assert!((s.median_ms() - 2.0).abs() < 1e-12);
+        assert!((s.stddev_ms() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentiles() {
+        let v: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        assert!((percentile_sorted(&v, 0.0) - 1.0).abs() < 1e-12);
+        assert!((percentile_sorted(&v, 100.0) - 100.0).abs() < 1e-12);
+        let p50 = percentile_sorted(&v, 50.0);
+        assert!((p50 - 50.5).abs() < 1e-9, "{p50}");
+    }
+
+    #[test]
+    fn bench_runs_and_counts() {
+        let opts = BenchOpts {
+            warmup: 1,
+            runs: 3,
+            max_total: Duration::from_secs(10),
+        };
+        let mut count = 0u32;
+        let s = bench(opts, || {
+            count += 1;
+            count
+        });
+        assert_eq!(s.n(), 3);
+        assert_eq!(count, 4); // warmup + 3
+    }
+
+    #[test]
+    fn empty_stats_are_safe() {
+        let s = Stats::from_ms(vec![]);
+        assert_eq!(s.mean_ms(), 0.0);
+        assert_eq!(s.median_ms(), 0.0);
+    }
+}

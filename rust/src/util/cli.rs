@@ -1,0 +1,241 @@
+//! Tiny declarative CLI argument parser (no clap offline).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, positional args,
+//! subcommands (first positional), and generated `--help` text.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+/// Declared option.
+#[derive(Debug, Clone)]
+struct OptSpec {
+    name: &'static str,
+    help: &'static str,
+    takes_value: bool,
+    default: Option<String>,
+}
+
+/// Declarative command-line parser.
+#[derive(Debug, Default)]
+pub struct Cli {
+    program: &'static str,
+    about: &'static str,
+    opts: Vec<OptSpec>,
+}
+
+/// Parse outcome: option map + positionals.
+#[derive(Debug, Clone, Default)]
+pub struct Parsed {
+    values: BTreeMap<&'static str, String>,
+    flags: BTreeMap<&'static str, bool>,
+    pub positionals: Vec<String>,
+}
+
+impl Cli {
+    pub fn new(program: &'static str, about: &'static str) -> Self {
+        Cli {
+            program,
+            about,
+            opts: Vec::new(),
+        }
+    }
+
+    /// `--name <value>` option with default.
+    pub fn opt(mut self, name: &'static str, default: &str, help: &'static str) -> Self {
+        self.opts.push(OptSpec {
+            name,
+            help,
+            takes_value: true,
+            default: Some(default.to_string()),
+        });
+        self
+    }
+
+    /// `--name <value>` option without default (optional).
+    pub fn opt_opt(mut self, name: &'static str, help: &'static str) -> Self {
+        self.opts.push(OptSpec {
+            name,
+            help,
+            takes_value: true,
+            default: None,
+        });
+        self
+    }
+
+    /// Boolean `--name` flag.
+    pub fn flag(mut self, name: &'static str, help: &'static str) -> Self {
+        self.opts.push(OptSpec {
+            name,
+            help,
+            takes_value: false,
+            default: None,
+        });
+        self
+    }
+
+    pub fn help_text(&self) -> String {
+        let mut s = String::new();
+        let _ = writeln!(s, "{} — {}", self.program, self.about);
+        let _ = writeln!(s, "\nOptions:");
+        for o in &self.opts {
+            let arg = if o.takes_value {
+                format!("--{} <v>", o.name)
+            } else {
+                format!("--{}", o.name)
+            };
+            let def = o
+                .default
+                .as_ref()
+                .map(|d| format!(" [default: {d}]"))
+                .unwrap_or_default();
+            let _ = writeln!(s, "  {arg:<24} {}{def}", o.help);
+        }
+        s
+    }
+
+    /// Parse an argv slice (without the program name).
+    pub fn parse(&self, args: &[String]) -> Result<Parsed, String> {
+        let mut out = Parsed::default();
+        for o in &self.opts {
+            if let Some(d) = &o.default {
+                out.values.insert(o.name, d.clone());
+            }
+            if !o.takes_value {
+                out.flags.insert(o.name, false);
+            }
+        }
+        let mut i = 0;
+        while i < args.len() {
+            let a = &args[i];
+            if a == "--help" || a == "-h" {
+                return Err(self.help_text());
+            }
+            if let Some(body) = a.strip_prefix("--") {
+                let (name, inline) = match body.split_once('=') {
+                    Some((n, v)) => (n, Some(v.to_string())),
+                    None => (body, None),
+                };
+                let spec = self
+                    .opts
+                    .iter()
+                    .find(|o| o.name == name)
+                    .ok_or_else(|| format!("unknown option --{name}\n\n{}", self.help_text()))?;
+                if spec.takes_value {
+                    let v = match inline {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            args.get(i)
+                                .cloned()
+                                .ok_or_else(|| format!("--{name} needs a value"))?
+                        }
+                    };
+                    out.values.insert(spec.name, v);
+                } else {
+                    if inline.is_some() {
+                        return Err(format!("--{name} takes no value"));
+                    }
+                    out.flags.insert(spec.name, true);
+                }
+            } else {
+                out.positionals.push(a.clone());
+            }
+            i += 1;
+        }
+        Ok(out)
+    }
+}
+
+impl Parsed {
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.values.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_usize(&self, name: &str) -> Result<usize, String> {
+        self.get(name)
+            .ok_or_else(|| format!("missing --{name}"))?
+            .parse()
+            .map_err(|e| format!("--{name}: {e}"))
+    }
+
+    pub fn get_u32(&self, name: &str) -> Result<u32, String> {
+        self.get(name)
+            .ok_or_else(|| format!("missing --{name}"))?
+            .parse()
+            .map_err(|e| format!("--{name}: {e}"))
+    }
+
+    pub fn get_f64(&self, name: &str) -> Result<f64, String> {
+        self.get(name)
+            .ok_or_else(|| format!("missing --{name}"))?
+            .parse()
+            .map_err(|e| format!("--{name}: {e}"))
+    }
+
+    pub fn is_set(&self, name: &str) -> bool {
+        self.flags.get(name).copied().unwrap_or(false)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    fn cli() -> Cli {
+        Cli::new("t", "test")
+            .opt("calls", "1000", "max calls")
+            .opt_opt("seed", "rng seed")
+            .flag("verbose", "chatty")
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let p = cli().parse(&argv(&[])).unwrap();
+        assert_eq!(p.get("calls"), Some("1000"));
+        assert_eq!(p.get("seed"), None);
+        assert!(!p.is_set("verbose"));
+    }
+
+    #[test]
+    fn parses_values_and_flags() {
+        let p = cli()
+            .parse(&argv(&["--calls", "42", "--verbose", "pos1", "--seed=7"]))
+            .unwrap();
+        assert_eq!(p.get_usize("calls").unwrap(), 42);
+        assert_eq!(p.get_u32("seed").unwrap(), 7);
+        assert!(p.is_set("verbose"));
+        assert_eq!(p.positionals, vec!["pos1"]);
+    }
+
+    #[test]
+    fn unknown_option_errors() {
+        assert!(cli().parse(&argv(&["--nope"])).is_err());
+    }
+
+    #[test]
+    fn missing_value_errors() {
+        assert!(cli().parse(&argv(&["--calls"])).is_err());
+    }
+
+    #[test]
+    fn help_is_error_with_text() {
+        let err = cli().parse(&argv(&["--help"])).unwrap_err();
+        assert!(err.contains("--calls"));
+        assert!(err.contains("max calls"));
+    }
+
+    #[test]
+    fn flag_with_value_rejected() {
+        assert!(cli().parse(&argv(&["--verbose=yes"])).is_err());
+    }
+
+    #[test]
+    fn bad_number_reports() {
+        let p = cli().parse(&argv(&["--calls", "abc"])).unwrap();
+        assert!(p.get_usize("calls").is_err());
+    }
+}

@@ -1,0 +1,10 @@
+//! Substrate utilities built in-repo (the offline registry has no
+//! serde/clap/tokio/criterion/proptest — see DESIGN.md §Dependency
+//! constraints).
+
+pub mod benchkit;
+pub mod cli;
+pub mod json;
+pub mod prop;
+pub mod table;
+pub mod threadpool;

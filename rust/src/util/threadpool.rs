@@ -1,0 +1,210 @@
+//! Minimal scoped data-parallel helpers (no rayon/tokio offline).
+//!
+//! The native engine splits V-Sample's cube range across OS threads via
+//! `parallel_chunks`; the coordinator's job service uses `WorkerPool`
+//! for long-lived workers fed by an MPSC channel.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread;
+
+/// Number of worker threads to use by default: physical parallelism,
+/// clamped to keep test machines responsive.
+pub fn default_threads() -> usize {
+    thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(4)
+        .clamp(1, 32)
+}
+
+/// Map `f` over `0..n` items in contiguous chunks across `threads`
+/// scoped threads, collecting per-chunk results in order.
+///
+/// `f(chunk_start, chunk_end) -> R` runs on a worker; results come back
+/// ordered by chunk index, so deterministic reductions stay
+/// deterministic regardless of scheduling.
+pub fn parallel_chunks<R, F>(n: usize, threads: usize, f: F) -> Vec<R>
+where
+    R: Send,
+    F: Fn(usize, usize) -> R + Sync,
+{
+    let threads = threads.clamp(1, n.max(1));
+    if threads <= 1 || n == 0 {
+        return vec![f(0, n)];
+    }
+    let chunk = n.div_ceil(threads);
+    thread::scope(|s| {
+        let handles: Vec<_> = (0..threads)
+            .filter_map(|t| {
+                let start = t * chunk;
+                let end = ((t + 1) * chunk).min(n);
+                if start >= end {
+                    return None;
+                }
+                let f = &f;
+                Some(s.spawn(move || f(start, end)))
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("worker panicked"))
+            .collect()
+    })
+}
+
+/// A long-lived worker pool consuming boxed jobs from a shared queue.
+/// Used by `coordinator::service`.
+pub struct WorkerPool {
+    tx: Option<Sender<Job>>,
+    handles: Vec<thread::JoinHandle<()>>,
+    active: Arc<AtomicUsize>,
+}
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+impl WorkerPool {
+    /// Spawn `threads` workers.
+    pub fn new(threads: usize) -> Self {
+        let (tx, rx) = channel::<Job>();
+        let rx = Arc::new(Mutex::new(rx));
+        let active = Arc::new(AtomicUsize::new(0));
+        let mut handles = Vec::with_capacity(threads);
+        for i in 0..threads.max(1) {
+            let rx = Arc::clone(&rx);
+            let active = Arc::clone(&active);
+            handles.push(
+                thread::Builder::new()
+                    .name(format!("mcubes-worker-{i}"))
+                    .spawn(move || loop {
+                        let job = {
+                            let guard = rx.lock().unwrap();
+                            guard.recv()
+                        };
+                        match job {
+                            Ok(job) => {
+                                active.fetch_add(1, Ordering::SeqCst);
+                                job();
+                                active.fetch_sub(1, Ordering::SeqCst);
+                            }
+                            Err(_) => break, // channel closed: shut down
+                        }
+                    })
+                    .expect("spawn worker"),
+            );
+        }
+        WorkerPool {
+            tx: Some(tx),
+            handles,
+            active,
+        }
+    }
+
+    /// Enqueue a job.
+    pub fn submit(&self, job: impl FnOnce() + Send + 'static) {
+        self.tx
+            .as_ref()
+            .expect("pool shut down")
+            .send(Box::new(job))
+            .expect("workers alive");
+    }
+
+    /// Jobs currently executing (not queued).
+    pub fn active(&self) -> usize {
+        self.active.load(Ordering::SeqCst)
+    }
+
+    /// Close the queue and join all workers (drains remaining jobs).
+    pub fn shutdown(mut self) {
+        self.tx.take(); // drop sender -> workers exit after drain
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        self.tx.take();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Unbounded MPSC used by the service for result collection; re-export
+/// to keep call sites decoupled from std details.
+pub fn result_channel<T>() -> (Sender<T>, Receiver<T>) {
+    channel()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn parallel_chunks_covers_range() {
+        let n = 1003;
+        let parts = parallel_chunks(n, 7, |a, b| (a, b));
+        // Contiguous, ordered, complete.
+        let mut expect_start = 0;
+        for &(a, b) in &parts {
+            assert_eq!(a, expect_start);
+            assert!(b > a);
+            expect_start = b;
+        }
+        assert_eq!(expect_start, n);
+    }
+
+    #[test]
+    fn parallel_chunks_sums_correctly() {
+        let n = 10_000usize;
+        let parts = parallel_chunks(n, 8, |a, b| (a..b).sum::<usize>());
+        let total: usize = parts.iter().sum();
+        assert_eq!(total, n * (n - 1) / 2);
+    }
+
+    #[test]
+    fn parallel_chunks_single_thread() {
+        let parts = parallel_chunks(10, 1, |a, b| b - a);
+        assert_eq!(parts, vec![10]);
+    }
+
+    #[test]
+    fn parallel_chunks_more_threads_than_items() {
+        let parts = parallel_chunks(3, 16, |a, b| b - a);
+        let total: usize = parts.iter().sum();
+        assert_eq!(total, 3);
+    }
+
+    #[test]
+    fn worker_pool_runs_all_jobs() {
+        let pool = WorkerPool::new(4);
+        let counter = Arc::new(AtomicU64::new(0));
+        for i in 0..100u64 {
+            let c = Arc::clone(&counter);
+            pool.submit(move || {
+                c.fetch_add(i, Ordering::SeqCst);
+            });
+        }
+        pool.shutdown();
+        assert_eq!(counter.load(Ordering::SeqCst), 99 * 100 / 2);
+    }
+
+    #[test]
+    fn worker_pool_drop_joins() {
+        let counter = Arc::new(AtomicU64::new(0));
+        {
+            let pool = WorkerPool::new(2);
+            for _ in 0..10 {
+                let c = Arc::clone(&counter);
+                pool.submit(move || {
+                    c.fetch_add(1, Ordering::SeqCst);
+                });
+            }
+            // drop
+        }
+        assert_eq!(counter.load(Ordering::SeqCst), 10);
+    }
+}

@@ -1,0 +1,218 @@
+//! Integration tests: the full m-Cubes driver on the native engine
+//! against the paper's integrand suite and known true values.
+
+use mcubes::baselines::{
+    gvegas_integrate, miser_integrate, plain_mc_integrate, vegas_serial_integrate, zmc_integrate,
+    GvegasConfig, MiserConfig, PlainMcConfig, ZmcConfig,
+};
+use mcubes::coordinator::{integrate_native, integrate_native_adaptive, JobConfig};
+use mcubes::grid::GridMode;
+use mcubes::integrands::by_name;
+
+fn cfg(calls: usize, tau: f64, seed: u32) -> JobConfig {
+    JobConfig {
+        maxcalls: calls,
+        tau_rel: tau,
+        itmax: 20,
+        ita: 12,
+        skip: 2,
+        seed,
+        ..Default::default()
+    }
+}
+
+/// The paper's evaluation suite at 3 digits of precision.
+#[test]
+fn paper_suite_three_digits() {
+    let cases = [
+        ("f2", 6, 1 << 15),
+        ("f3", 3, 1 << 14),
+        ("f3", 8, 1 << 16),
+        ("f4", 5, 1 << 16),
+        ("f5", 8, 1 << 15),
+        ("f6", 6, 1 << 16),
+        ("cosmo", 6, 1 << 14),
+    ];
+    for (name, d, calls) in cases {
+        let f = by_name(name, d).unwrap();
+        let out = integrate_native(&*f, &cfg(calls, 1e-3, 17)).unwrap();
+        assert!(out.converged, "{name} d={d}: {out:?}");
+        let truth = f.true_value().unwrap();
+        let rel = ((out.integral - truth) / truth).abs();
+        assert!(
+            rel < 6e-3,
+            "{name} d={d}: true rel err {rel:.2e} (claimed {:.2e})",
+            out.rel_err
+        );
+    }
+}
+
+/// Error estimates must be *honest*: achieved error within a few
+/// claimed sigmas across seeds (the paper's Fig. 1 criterion).
+#[test]
+fn error_estimates_honest_across_seeds() {
+    let f = by_name("f5", 8).unwrap();
+    let truth = f.true_value().unwrap();
+    let mut within_3_sigma = 0;
+    let n_runs = 10;
+    for seed in 0..n_runs {
+        let out = integrate_native(&*f, &cfg(1 << 14, 1e-3, 100 + seed)).unwrap();
+        if (out.integral - truth).abs() <= 3.0 * out.sigma {
+            within_3_sigma += 1;
+        }
+    }
+    // 3-sigma coverage should be ~99.7%; allow one escape in 10 runs.
+    assert!(
+        within_3_sigma >= n_runs - 1,
+        "only {within_3_sigma}/{n_runs} runs within 3 sigma"
+    );
+}
+
+/// Higher precision targets require more work but must still be honest.
+#[test]
+fn precision_ladder_first_rungs() {
+    let f = by_name("f2", 6).unwrap();
+    let truth = f.true_value().unwrap();
+    for (tau, calls) in [(1e-3, 1 << 15), (2e-4, 1 << 19)] {
+        let out = integrate_native(&*f, &cfg(calls, tau, 5)).unwrap();
+        assert!(out.converged, "tau={tau}: {out:?}");
+        assert!(out.rel_err <= tau, "claimed {} > tau {tau}", out.rel_err);
+        let rel = ((out.integral - truth) / truth).abs();
+        assert!(rel < 8.0 * tau, "tau={tau}: true rel {rel:.2e}");
+    }
+}
+
+/// m-Cubes1D on symmetric integrands: same answer, shared grid.
+#[test]
+fn onedim_variant_matches_on_symmetric() {
+    for (name, d, calls) in [("f4", 8, 1 << 15), ("f5", 8, 1 << 14)] {
+        let f = by_name(name, d).unwrap();
+        let per_axis = integrate_native(&*f, &cfg(calls, 1e-3, 3)).unwrap();
+        let mut c1 = cfg(calls, 1e-3, 3);
+        c1.grid_mode = GridMode::Shared1D;
+        let onedim = integrate_native(&*f, &c1).unwrap();
+        let truth = f.true_value().unwrap();
+        for (label, out) in [("per-axis", &per_axis), ("1d", &onedim)] {
+            let rel = ((out.integral - truth) / truth).abs();
+            assert!(rel < 1e-2, "{name} {label}: rel {rel:.2e}");
+        }
+    }
+}
+
+/// The adaptive escalation driver reaches tighter tolerances than a
+/// single fixed budget would.
+#[test]
+fn adaptive_escalation_reaches_tight_tau() {
+    let f = by_name("f3", 3).unwrap();
+    let base = cfg(1 << 13, 4e-5, 9);
+    let out = integrate_native_adaptive(&*f, &base, 5, 4).unwrap();
+    assert!(out.converged, "{out:?}");
+    let truth = f.true_value().unwrap();
+    let rel = ((out.integral - truth) / truth).abs();
+    assert!(rel < 4e-4, "rel {rel:.2e}");
+}
+
+/// All five baselines produce statistically-consistent estimates on a
+/// common smooth integrand.
+#[test]
+fn baselines_agree_on_smooth_integrand() {
+    let f = by_name("f5", 4).unwrap();
+    let truth = f.true_value().unwrap();
+    let check = |label: &str, integral: f64, sigma: f64| {
+        assert!(
+            (integral - truth).abs() < 6.0 * sigma + 1e-9 * truth.abs(),
+            "{label}: I={integral} truth={truth} sigma={sigma}"
+        );
+    };
+    let v = vegas_serial_integrate(&*f, 1 << 14, 1e-3, 20, 21);
+    check("vegas_serial", v.integral, v.sigma);
+    let p = plain_mc_integrate(
+        &*f,
+        &PlainMcConfig {
+            calls: 1 << 17,
+            seed: 21,
+        },
+    );
+    check("plain_mc", p.integral, p.sigma);
+    let m = miser_integrate(
+        &*f,
+        &MiserConfig {
+            calls: 1 << 17,
+            seed: 21,
+            ..Default::default()
+        },
+    );
+    check("miser", m.integral, m.sigma);
+    let g = gvegas_integrate(
+        &*f,
+        &GvegasConfig {
+            maxcalls: 1 << 14,
+            seed: 21,
+            ..Default::default()
+        },
+    );
+    check("gvegas_sim", g.integral, g.sigma);
+    let z = zmc_integrate(
+        &*f,
+        &ZmcConfig {
+            samples_per_block: 256,
+            depth: 3,
+            seed: 21,
+            ..Default::default()
+        },
+    );
+    check("zmc_sim", z.integral, z.sigma);
+}
+
+/// gVegas-sim and m-Cubes draw the same Philox stream: their
+/// *first-iteration* estimates are identical before designs diverge.
+#[test]
+fn gvegas_and_mcubes_share_the_stream() {
+    let f = by_name("f3", 3).unwrap();
+    // One iteration each, no adaptation: same estimate expected.
+    let mc = integrate_native(
+        &*f,
+        &JobConfig {
+            maxcalls: 1 << 12,
+            itmax: 1,
+            ita: 0,
+            skip: 0,
+            tau_rel: 1e-12,
+            seed: 77,
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    let gv = gvegas_integrate(
+        &*f,
+        &GvegasConfig {
+            maxcalls: 1 << 12,
+            itmax: 1,
+            ita: 0,
+            tau_rel: 1e-12,
+            seed: 77,
+            ..Default::default()
+        },
+    );
+    let rel = ((mc.integral - gv.integral) / mc.integral).abs();
+    assert!(rel < 1e-12, "mc {} vs gv {}", mc.integral, gv.integral);
+}
+
+/// fA needs a large budget (oscillatory, huge cancellation); verify the
+/// estimate lands near the paper's true value with adaptive escalation.
+#[test]
+fn fa_table1_estimate() {
+    let f = by_name("fA", 6).unwrap();
+    let mut base = cfg(1 << 17, 2e-2, 33);
+    base.itmax = 10;
+    base.ita = 10;
+    base.skip = 1;
+    let out = integrate_native_adaptive(&*f, &base, 2, 4).unwrap();
+    let truth = f.true_value().unwrap(); // -49.165073
+    assert!(
+        (out.integral - truth).abs() < 4.0 * out.sigma.max(truth.abs() * 5e-2),
+        "I={} truth={truth} sigma={}",
+        out.integral,
+        out.sigma
+    );
+}

@@ -1,0 +1,281 @@
+//! PJRT-runtime integration tests: the AOT Pallas artifacts against the
+//! Python-generated goldens and the native engine.
+//!
+//! Requires `make artifacts` to have produced `artifacts/`; all tests
+//! skip politely if the directory is missing (e.g. plain `cargo test`
+//! in a fresh checkout).
+
+use mcubes::coordinator::{run_driver, JobConfig, PjrtBackend, VSampleBackend};
+use mcubes::grid::{Bins, GridMode};
+use mcubes::integrands::by_name;
+use mcubes::rng::philox4x32;
+use mcubes::runtime::{PjrtRuntime, Registry};
+use mcubes::util::json::parse;
+use std::path::Path;
+
+fn artifacts_dir() -> Option<&'static str> {
+    for dir in ["artifacts", "../artifacts"] {
+        if Path::new(dir).join("manifest.json").exists() {
+            return Some(dir);
+        }
+    }
+    eprintln!("SKIP: artifacts/ missing (run `make artifacts`)");
+    None
+}
+
+#[test]
+fn manifest_loads_and_layouts_verify() {
+    let Some(dir) = artifacts_dir() else { return };
+    let reg = Registry::load(dir).unwrap();
+    assert!(reg.all().len() >= 20, "expected the full test set");
+    for meta in reg.all() {
+        meta.verify_layout().unwrap();
+        assert!(reg.hlo_path(meta).exists(), "{} missing", meta.file);
+    }
+}
+
+#[test]
+fn philox_golden_vectors() {
+    let Some(dir) = artifacts_dir() else { return };
+    let text = std::fs::read_to_string(Path::new(dir).join("golden_philox.json")).unwrap();
+    let root = parse(&text).unwrap();
+    for case in root.req("kat").unwrap().as_arr().unwrap() {
+        let ctr: Vec<u32> = case
+            .req("ctr")
+            .unwrap()
+            .as_f64_vec()
+            .unwrap()
+            .iter()
+            .map(|&x| x as u32)
+            .collect();
+        let key: Vec<u32> = case
+            .req("key")
+            .unwrap()
+            .as_f64_vec()
+            .unwrap()
+            .iter()
+            .map(|&x| x as u32)
+            .collect();
+        let want: Vec<u32> = case
+            .req("out")
+            .unwrap()
+            .as_f64_vec()
+            .unwrap()
+            .iter()
+            .map(|&x| x as u32)
+            .collect();
+        let got = philox4x32([ctr[0], ctr[1], ctr[2], ctr[3]], [key[0], key[1]]);
+        assert_eq!(got.to_vec(), want, "ctr={ctr:?}");
+    }
+    // The uniform stream segment drawn exactly like the kernel does.
+    let uni = root.req("uniforms").unwrap();
+    let seed = uni.req("seed").unwrap().as_usize().unwrap() as u32;
+    let it = uni.req("iteration").unwrap().as_usize().unwrap() as u32;
+    let ndim = uni.req("ndim").unwrap().as_usize().unwrap();
+    let n = uni.req("n").unwrap().as_usize().unwrap();
+    let vals = uni.req("values").unwrap().as_f64_vec().unwrap();
+    assert_eq!(vals.len(), n * ndim);
+    let mut buf = vec![0.0; ndim];
+    for s in 0..n {
+        mcubes::rng::uniforms_into(s as u32, it, seed, &mut buf);
+        for d in 0..ndim {
+            assert_eq!(
+                buf[d],
+                vals[s * ndim + d],
+                "sample {s} dim {d}: rust {} vs python {}",
+                buf[d],
+                vals[s * ndim + d]
+            );
+        }
+    }
+}
+
+/// The native engine must reproduce the Python oracle's V-Sample
+/// outputs (golden_vsample.json) bit-tight.
+#[test]
+fn native_engine_matches_python_goldens() {
+    let Some(dir) = artifacts_dir() else { return };
+    let reg = Registry::load(dir).unwrap();
+    let text = std::fs::read_to_string(Path::new(dir).join("golden_vsample.json")).unwrap();
+    let root = parse(&text).unwrap();
+    let engine = mcubes::engine::NativeEngine;
+    for case in root.as_arr().unwrap() {
+        let art = case.req("artifact").unwrap().as_str().unwrap();
+        let meta = reg.by_name(art).unwrap();
+        let layout = meta.layout();
+        let bins = match case.req("bins").unwrap().as_str().unwrap() {
+            "uniform" => Bins::uniform(layout.d, layout.nb),
+            "skewed" => {
+                // Same construction as aot.skewed_bins (gamma = 1.7).
+                let mut edges = Vec::with_capacity(layout.d * layout.nb);
+                for _ in 0..layout.d {
+                    for b in 1..=layout.nb {
+                        let e = (b as f64 / layout.nb as f64).powf(1.7);
+                        edges.push(if b == layout.nb { 1.0 } else { e });
+                    }
+                }
+                Bins::from_edges(layout.d, layout.nb, edges, GridMode::PerAxis).unwrap()
+            }
+            other => panic!("unknown bins kind {other}"),
+        };
+        let f = by_name(&meta.integrand, meta.dim).unwrap();
+        let opts = mcubes::engine::VSampleOpts {
+            seed: case.req("seed").unwrap().as_usize().unwrap() as u32,
+            iteration: case.req("iteration").unwrap().as_usize().unwrap() as u32,
+            adjust: true,
+            threads: 4,
+        };
+        let (r, contrib) = engine.vsample(&*f, &layout, &bins, &opts);
+        let want_i = case.req("integral").unwrap().as_f64().unwrap();
+        let want_v = case.req("variance").unwrap().as_f64().unwrap();
+        assert!(
+            ((r.integral - want_i) / want_i).abs() < 1e-11,
+            "{art}: I {} vs golden {want_i}",
+            r.integral
+        );
+        assert!(
+            ((r.variance - want_v) / want_v).abs() < 1e-9,
+            "{art}: Var {} vs golden {want_v}",
+            r.variance
+        );
+        let contrib = contrib.unwrap();
+        let sums = case.req("c_axis_sums").unwrap().as_f64_vec().unwrap();
+        for (axis, want) in sums.iter().enumerate() {
+            let got: f64 = contrib[axis * layout.nb..(axis + 1) * layout.nb].iter().sum();
+            assert!(
+                ((got - want) / want).abs() < 1e-10,
+                "{art} axis {axis}: {got} vs {want}"
+            );
+        }
+        // Full histogram where provided (f4 cases).
+        if let Some(full) = case.get("c_full").filter(|v| v.as_arr().is_some()) {
+            let rows = full.as_arr().unwrap();
+            for (axis, row) in rows.iter().enumerate() {
+                let want_row = row.as_f64_vec().unwrap();
+                for (b, want) in want_row.iter().enumerate() {
+                    let got = contrib[axis * layout.nb + b];
+                    let tol = 1e-9 * want.abs().max(1e-30);
+                    assert!(
+                        (got - want).abs() <= tol,
+                        "{art} C[{axis}][{b}]: {got} vs {want}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// The PJRT artifact and native engine agree iteration-by-iteration
+/// through a full adaptive run (grid feedback included).
+#[test]
+fn pjrt_vs_native_full_driver() {
+    let Some(dir) = artifacts_dir() else { return };
+    let reg = Registry::load(dir).unwrap();
+    let runtime = PjrtRuntime::cpu().unwrap();
+    for name in ["f4", "f2", "cosmo"] {
+        let backend = PjrtBackend::load(&runtime, &reg, name, 0).unwrap();
+        let meta = backend.meta().clone();
+        let f = by_name(&meta.integrand, meta.dim).unwrap();
+        let cfg = JobConfig {
+            maxcalls: meta.maxcalls,
+            nb: meta.nb,
+            nblocks: meta.nblocks,
+            itmax: 4,
+            ita: 3,
+            skip: 0,
+            tau_rel: 1e-14, // force all iterations
+            seed: 555,
+            ..Default::default()
+        };
+        let pjrt = run_driver(&backend, &cfg).unwrap();
+        let native = mcubes::coordinator::integrate_native(&*f, &cfg).unwrap();
+        let rel = ((pjrt.integral - native.integral) / native.integral).abs();
+        assert!(rel < 1e-9, "{name}: pjrt vs native rel {rel:.2e}");
+        let rel_s = ((pjrt.sigma - native.sigma) / native.sigma).abs();
+        assert!(rel_s < 1e-6, "{name}: sigma rel {rel_s:.2e}");
+    }
+}
+
+/// The no-adjust artifact returns the same estimates as the adjust one
+/// (only the histogram work differs).
+#[test]
+fn na_artifact_matches_adjust_estimates() {
+    let Some(dir) = artifacts_dir() else { return };
+    let reg = Registry::load(dir).unwrap();
+    let runtime = PjrtRuntime::cpu().unwrap();
+    let adj = runtime
+        .load(&reg, reg.select("f5", true, 0).unwrap())
+        .unwrap();
+    let na = runtime
+        .load(&reg, reg.select("f5", false, 0).unwrap())
+        .unwrap();
+    let layout = adj.meta().layout();
+    let bins = Bins::uniform(layout.d, layout.nb);
+    let (ra, ca) = adj.vsample(&bins, 9, 4).unwrap();
+    let (rn, cn) = na.vsample(&bins, 9, 4).unwrap();
+    assert!(ca.is_some());
+    assert!(cn.is_none());
+    assert!(((ra.integral - rn.integral) / ra.integral).abs() < 1e-12);
+    assert!(((ra.variance - rn.variance) / ra.variance).abs() < 1e-12);
+}
+
+/// The one-hot (MXU-shaped) histogram ablation artifact matches the
+/// scatter artifact exactly.
+#[test]
+fn onehot_artifact_matches_scatter() {
+    let Some(dir) = artifacts_dir() else { return };
+    let reg = Registry::load(dir).unwrap();
+    let Ok(onehot_meta) = reg.by_name("f4_d5_c16384_adj_onehot") else {
+        eprintln!("SKIP: onehot ablation artifact missing");
+        return;
+    };
+    let runtime = PjrtRuntime::cpu().unwrap();
+    let scatter = runtime.load(&reg, reg.by_name("f4_d5_c16384_adj").unwrap()).unwrap();
+    let onehot = runtime.load(&reg, onehot_meta).unwrap();
+    let layout = scatter.meta().layout();
+    let bins = Bins::uniform(layout.d, layout.nb);
+    let (rs, cs) = scatter.vsample(&bins, 31, 2).unwrap();
+    let (ro, co) = onehot.vsample(&bins, 31, 2).unwrap();
+    assert!(((rs.integral - ro.integral) / rs.integral).abs() < 1e-12);
+    let (cs, co) = (cs.unwrap(), co.unwrap());
+    for (a, b) in cs.iter().zip(&co) {
+        assert!((a - b).abs() <= 1e-9 * a.abs().max(1e-30), "{a} vs {b}");
+    }
+}
+
+/// Executables are cached: loading twice returns the same Arc.
+#[test]
+fn runtime_caches_executables() {
+    let Some(dir) = artifacts_dir() else { return };
+    let reg = Registry::load(dir).unwrap();
+    let runtime = PjrtRuntime::cpu().unwrap();
+    let meta = reg.select("f3", true, 0).unwrap();
+    let a = runtime.load(&reg, meta).unwrap();
+    let b = runtime.load(&reg, meta).unwrap();
+    assert!(std::sync::Arc::ptr_eq(&a, &b));
+}
+
+/// Mismatched bins shape is rejected cleanly, not a crash.
+#[test]
+fn bins_shape_mismatch_is_config_error() {
+    let Some(dir) = artifacts_dir() else { return };
+    let reg = Registry::load(dir).unwrap();
+    let runtime = PjrtRuntime::cpu().unwrap();
+    let exe = runtime
+        .load(&reg, reg.select("f4", true, 0).unwrap())
+        .unwrap();
+    let wrong = Bins::uniform(3, 10);
+    assert!(exe.vsample(&wrong, 1, 0).is_err());
+}
+
+/// Backend trait sanity on the PJRT side.
+#[test]
+fn pjrt_backend_reports_meta() {
+    let Some(dir) = artifacts_dir() else { return };
+    let reg = Registry::load(dir).unwrap();
+    let runtime = PjrtRuntime::cpu().unwrap();
+    let backend = PjrtBackend::load(&runtime, &reg, "fB", 0).unwrap();
+    assert_eq!(backend.layout().d, 9);
+    assert_eq!(backend.bounds(), (-1.0, 1.0));
+    assert_eq!(backend.name(), "pjrt");
+}

@@ -1,0 +1,123 @@
+//! Service-level integration tests: batched jobs, mixed workloads,
+//! failure isolation, and metric sanity.
+
+use mcubes::coordinator::{IntegrationService, JobConfig, JobRequest};
+
+fn quick(seed: u32) -> JobConfig {
+    JobConfig {
+        maxcalls: 1 << 12,
+        itmax: 10,
+        ita: 7,
+        skip: 1,
+        tau_rel: 5e-3,
+        seed,
+        ..Default::default()
+    }
+}
+
+#[test]
+fn mixed_suite_batch() {
+    let suite = [("f2", 6), ("f3", 3), ("f4", 5), ("f5", 8), ("f6", 6), ("cosmo", 6)];
+    let mut svc = IntegrationService::new(4);
+    let n = 18;
+    for i in 0..n {
+        let (name, d) = suite[i % suite.len()];
+        svc.submit(JobRequest {
+            id: i as u64,
+            integrand: name.into(),
+            dim: d,
+            config: quick(500 + i as u32),
+        });
+    }
+    let (results, metrics) = svc.drain().unwrap();
+    assert_eq!(metrics.jobs, n);
+    assert_eq!(metrics.failures, 0);
+    for r in &results {
+        let out = r.outcome.as_ref().unwrap();
+        assert!(out.integral.is_finite());
+        assert!(out.sigma.is_finite());
+    }
+}
+
+#[test]
+fn throughput_scales_with_workers() {
+    // 1 worker vs 4 workers on the same 12-job batch: wall time must
+    // drop meaningfully (not necessarily 4x on CI machines).
+    let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    if cores < 2 {
+        eprintln!("SKIP: single-core machine, no parallel speedup possible");
+        return;
+    }
+    let make_batch = |svc: &mut IntegrationService| {
+        for i in 0..12u64 {
+            svc.submit(JobRequest {
+                id: i,
+                integrand: "f5".into(),
+                dim: 6,
+                config: JobConfig {
+                    maxcalls: 1 << 17,
+                    itmax: 6,
+                    ita: 4,
+                    skip: 1,
+                    tau_rel: 1e-12, // run all iterations: fixed work
+                    seed: 40 + i as u32,
+                    ..Default::default()
+                },
+            });
+        }
+    };
+    let mut s1 = IntegrationService::new(1);
+    make_batch(&mut s1);
+    let (_, m1) = s1.drain().unwrap();
+    let mut s4 = IntegrationService::new(4);
+    make_batch(&mut s4);
+    let (_, m4) = s4.drain().unwrap();
+    assert!(
+        m4.wall_time < m1.wall_time * 0.7,
+        "1w {:.3}s vs 4w {:.3}s",
+        m1.wall_time,
+        m4.wall_time
+    );
+}
+
+#[test]
+fn failures_are_isolated() {
+    let mut svc = IntegrationService::new(3);
+    for i in 0..9u64 {
+        let name = if i % 3 == 0 { "doesnotexist" } else { "f3" };
+        svc.submit(JobRequest {
+            id: i,
+            integrand: name.into(),
+            dim: 3,
+            config: quick(i as u32),
+        });
+    }
+    let (results, metrics) = svc.drain().unwrap();
+    assert_eq!(metrics.failures, 3);
+    for r in results {
+        if r.integrand == "doesnotexist" {
+            assert!(r.outcome.is_err());
+        } else {
+            assert!(r.outcome.is_ok());
+        }
+    }
+}
+
+#[test]
+fn queue_time_reflects_backlog() {
+    // With one worker and several jobs, later jobs must wait.
+    let mut svc = IntegrationService::new(1);
+    for i in 0..6u64 {
+        svc.submit(JobRequest {
+            id: i,
+            integrand: "f4".into(),
+            dim: 5,
+            config: quick(i as u32),
+        });
+    }
+    let (results, metrics) = svc.drain().unwrap();
+    let first = results.iter().find(|r| r.id == 0).unwrap();
+    let last = results.iter().find(|r| r.id == 5).unwrap();
+    assert!(last.queue_time >= first.queue_time);
+    assert!(metrics.mean_queue_time > 0.0);
+}

@@ -1,0 +1,246 @@
+//! Property-based tests (via the in-repo `util::prop` driver) on grid,
+//! strat, estimator, and engine invariants.
+
+use mcubes::engine::{NativeEngine, VSampleOpts};
+use mcubes::estimator::{IterationResult, WeightedEstimator};
+use mcubes::grid::{rebin, smooth_weights, Bins, GridMode};
+use mcubes::integrands::by_name;
+use mcubes::strat::Layout;
+use mcubes::util::prop::{property, Gen};
+
+/// Any rebin of a valid grid with positive weights stays a valid grid.
+#[test]
+fn prop_rebin_preserves_grid_invariants() {
+    property("rebin_valid", 200, |g: &mut Gen, _| {
+        let nb = g.usize_range(2, 64);
+        // Random monotone edges ending at 1.
+        let mut edges: Vec<f64> = (0..nb).map(|_| g.f64_range(1e-9, 1.0)).collect();
+        edges.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        // Force strict monotonicity + final edge 1.0.
+        for i in 0..nb {
+            let min = if i == 0 { 0.0 } else { edges[i - 1] };
+            if edges[i] <= min {
+                edges[i] = min + 1e-9;
+            }
+        }
+        edges[nb - 1] = 1.0;
+        let w = g.weights(nb, 0.3).iter().map(|x| x.max(1e-30)).collect::<Vec<_>>();
+        rebin(&mut edges, &w);
+        let mut prev = 0.0;
+        for (i, &e) in edges.iter().enumerate() {
+            if e <= prev {
+                return Err(format!("edge {i} not increasing: {e} <= {prev}"));
+            }
+            prev = e;
+        }
+        if (edges[nb - 1] - 1.0).abs() > 1e-12 {
+            return Err(format!("last edge {} != 1", edges[nb - 1]));
+        }
+        Ok(())
+    });
+}
+
+/// smooth_weights never yields negatives/NaN, and hot bins outweigh
+/// cold ones after smoothing.
+#[test]
+fn prop_smooth_weights_sane() {
+    property("smooth_weights", 200, |g: &mut Gen, _| {
+        let nb = g.usize_range(2, 80);
+        let c = g.weights(nb, 0.5);
+        let mut scratch = vec![0.0; nb];
+        match smooth_weights(&c, &mut scratch) {
+            None => {
+                if c.iter().any(|&x| x > 0.0) {
+                    return Err("None despite signal".into());
+                }
+            }
+            Some(w) => {
+                for &x in w {
+                    if !(x > 0.0) || !x.is_finite() {
+                        return Err(format!("bad weight {x}"));
+                    }
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Repeated adjustment with a fixed histogram converges to a fixed
+/// point (the equal-weight partition of that histogram's density).
+#[test]
+fn prop_adjust_converges_to_fixed_point() {
+    property("adjust_fixed_point", 25, |g: &mut Gen, _| {
+        let nb = g.usize_range(8, 32);
+        let mut bins = Bins::uniform(1, nb);
+        let contrib = g.weights(nb, 0.2);
+        if contrib.iter().all(|&x| x == 0.0) {
+            return Ok(());
+        }
+        // NOTE: the histogram is a function of the *bins* in the real
+        // loop; with a fixed histogram the map is a contraction toward
+        // equal-weight edges. Expect edge motion to shrink.
+        let mut prev = bins.flat().to_vec();
+        let mut motion_prev = f64::INFINITY;
+        for round in 0..30 {
+            bins.adjust(&contrib);
+            let motion: f64 = bins
+                .flat()
+                .iter()
+                .zip(&prev)
+                .map(|(a, b)| (a - b).abs())
+                .sum();
+            prev = bins.flat().to_vec();
+            if round > 20 && motion > motion_prev * 2.0 + 1e-9 {
+                return Err(format!("motion diverging: {motion} > {motion_prev}"));
+            }
+            motion_prev = motion.max(1e-18);
+        }
+        bins.validate().map_err(|e| e.to_string())
+    });
+}
+
+/// Layout invariants hold over random (d, maxcalls).
+#[test]
+fn prop_layout_invariants() {
+    property("layout", 300, |g: &mut Gen, _| {
+        let d = g.usize_range(1, 12);
+        let maxcalls = g.usize_range(4, 2_000_000);
+        let nblocks = g.usize_range(1, 64);
+        let l = Layout::compute(d, maxcalls, 50, nblocks).map_err(|e| e.to_string())?;
+        if l.m != l.g.pow(d as u32) {
+            return Err(format!("m {} != g^d", l.m));
+        }
+        if l.p < 2 {
+            return Err("p < 2".into());
+        }
+        if l.g.pow(d as u32) > maxcalls / 2 && l.g > 1 {
+            return Err(format!("g too large: {l:?}"));
+        }
+        if l.cpb * l.nblocks < l.m {
+            return Err("blocks don't cover cubes".into());
+        }
+        if l.nblocks > 1 && l.cpb * (l.nblocks - 1) >= l.m {
+            return Err(format!("empty trailing block: {l:?}"));
+        }
+        // decode/encode roundtrip on a few random cubes
+        let mut buf = vec![0usize; d];
+        for _ in 0..10 {
+            let cube = g.usize_range(0, l.m - 1);
+            l.cube_coords(cube, &mut buf);
+            if l.cube_index(&buf) != cube {
+                return Err(format!("roundtrip failed at {cube}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Estimator algebra: combining iterations never increases sigma, and
+/// the combined integral lies within the inputs' envelope.
+#[test]
+fn prop_estimator_combination() {
+    property("estimator", 300, |g: &mut Gen, _| {
+        let n = g.usize_range(2, 12);
+        let mut est = WeightedEstimator::new();
+        let mut lo = f64::INFINITY;
+        let mut hi = f64::NEG_INFINITY;
+        let mut min_sigma = f64::INFINITY;
+        for _ in 0..n {
+            let i = g.f64_range(-5.0, 5.0);
+            let v = g.f64_range(1e-8, 2.0);
+            est.push(IterationResult {
+                integral: i,
+                variance: v,
+            });
+            lo = lo.min(i);
+            hi = hi.max(i);
+            min_sigma = min_sigma.min(v.sqrt());
+        }
+        let combined = est.integral();
+        if !(lo - 1e-12 <= combined && combined <= hi + 1e-12) {
+            return Err(format!("combined {combined} outside [{lo}, {hi}]"));
+        }
+        if est.sigma() > min_sigma + 1e-12 {
+            return Err(format!(
+                "combined sigma {} > best input {min_sigma}",
+                est.sigma()
+            ));
+        }
+        if est.chi2_dof() < 0.0 {
+            return Err("negative chi2".into());
+        }
+        Ok(())
+    });
+}
+
+/// Engine invariance: the estimate is independent of the block/thread
+/// partition, and histogram mass equals sum(v^2) on every axis.
+#[test]
+fn prop_engine_partition_invariance() {
+    property("engine_partition", 12, |g: &mut Gen, _| {
+        let d = g.usize_range(2, 6);
+        let maxcalls = g.usize_range(512, 4096);
+        let f = by_name("f5", d).map_err(|e| e.to_string())?;
+        let layout = Layout::compute(d, maxcalls, 20, 4).map_err(|e| e.to_string())?;
+        let bins = Bins::uniform(d, 20);
+        let seed = g.usize_range(0, 10_000) as u32;
+        let mut results = Vec::new();
+        for threads in [1, 3, 8] {
+            let (r, c) = NativeEngine.vsample(
+                &*f,
+                &layout,
+                &bins,
+                &VSampleOpts {
+                    seed,
+                    iteration: 0,
+                    adjust: true,
+                    threads,
+                },
+            );
+            results.push((r, c.unwrap()));
+        }
+        let (r0, c0) = &results[0];
+        for (r, c) in &results[1..] {
+            if ((r.integral - r0.integral) / r0.integral).abs() > 1e-13 {
+                return Err(format!("integral varies: {} vs {}", r.integral, r0.integral));
+            }
+            for (a, b) in c.iter().zip(c0) {
+                if (a - b).abs() > 1e-11 * a.abs().max(1.0) {
+                    return Err("histogram varies with threads".into());
+                }
+            }
+        }
+        // mass conservation
+        let total_v2: f64 = c0[0..20].iter().sum();
+        for axis in 1..d {
+            let s: f64 = c0[axis * 20..(axis + 1) * 20].iter().sum();
+            if ((s - total_v2) / total_v2).abs() > 1e-12 {
+                return Err(format!("axis {axis} mass {s} != {total_v2}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Shared1D grids keep all axes identical under any histogram.
+#[test]
+fn prop_shared1d_axes_identical() {
+    property("shared1d", 50, |g: &mut Gen, _| {
+        let d = g.usize_range(2, 8);
+        let nb = g.usize_range(4, 32);
+        let mut bins = Bins::uniform_mode(d, nb, GridMode::Shared1D);
+        for _ in 0..3 {
+            let contrib = g.weights(d * nb, 0.3);
+            bins.adjust(&contrib);
+        }
+        bins.validate().map_err(|e| e.to_string())?;
+        let first = bins.axis(0).to_vec();
+        for axis in 1..d {
+            if bins.axis(axis) != &first[..] {
+                return Err(format!("axis {axis} differs"));
+            }
+        }
+        Ok(())
+    });
+}
