@@ -5,18 +5,16 @@
 //! Run: cargo run --offline --release --example compare_methods [integrand] [dim]
 
 use mcubes::baselines::*;
-use mcubes::coordinator::{integrate_native, JobConfig};
-use mcubes::grid::GridMode;
-use mcubes::integrands::by_name;
+use mcubes::prelude::*;
 use mcubes::util::table::{fmt_ms, Table};
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<()> {
     let name = std::env::args().nth(1).unwrap_or_else(|| "f4".into());
     let dim: usize = std::env::args()
         .nth(2)
         .and_then(|s| s.parse().ok())
         .unwrap_or(5);
-    let f = by_name(&name, dim)?;
+    let f = mcubes::integrands::by_name(&name, dim)?;
     let truth = f.true_value();
     let calls = 1 << 16;
     let tau = 1e-3;
@@ -39,27 +37,37 @@ fn main() -> anyhow::Result<()> {
         ]);
     };
 
-    let cfg = JobConfig {
-        maxcalls: calls,
-        tau_rel: tau,
-        itmax: 20,
-        ita: 12,
-        skip: 2,
-        seed,
-        ..Default::default()
+    let base = || {
+        Integrator::new(f.clone())
+            .maxcalls(calls)
+            .tolerance(tau)
+            .max_iterations(20)
+            .adjust_iterations(12)
+            .skip_iterations(2)
+            .seed(seed)
     };
-    let mc = integrate_native(&*f, &cfg)?;
+    let mc = base().run()?;
     push("m-Cubes", mc.integral, mc.sigma, mc.calls_used, mc.total_time);
 
     if f.symmetric() {
-        let mut c1 = cfg.clone();
-        c1.grid_mode = GridMode::Shared1D;
-        let m1 = integrate_native(&*f, &c1)?;
-        push("m-Cubes1D", m1.integral, m1.sigma, m1.calls_used, m1.total_time);
+        let m1 = base().grid_mode(GridMode::Shared1D).run()?;
+        push(
+            "m-Cubes1D",
+            m1.integral,
+            m1.sigma,
+            m1.calls_used,
+            m1.total_time,
+        );
     }
 
     let vs = vegas_serial_integrate(&*f, calls, tau, 20, seed);
-    push("serial VEGAS", vs.integral, vs.sigma, vs.calls_used, vs.total_time);
+    push(
+        "serial VEGAS",
+        vs.integral,
+        vs.sigma,
+        vs.calls_used,
+        vs.total_time,
+    );
 
     let gv = gvegas_integrate(
         &*f,
@@ -71,7 +79,13 @@ fn main() -> anyhow::Result<()> {
             ..Default::default()
         },
     );
-    push("gVegas-sim", gv.integral, gv.sigma, gv.calls_used, gv.total_time);
+    push(
+        "gVegas-sim",
+        gv.integral,
+        gv.sigma,
+        gv.calls_used,
+        gv.total_time,
+    );
 
     let zm = zmc_integrate(
         &*f,

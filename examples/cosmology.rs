@@ -4,47 +4,45 @@
 //! tables passed as tensor inputs) and compared against the serial
 //! VEGAS CPU baseline (the paper's CUBA comparison).
 //!
-//! Requires `make artifacts`. Run:
+//! Requires `make artifacts` and a `pjrt`-featured build. Run:
 //!   cargo run --offline --release --example cosmology
 
 use mcubes::baselines::vegas_serial_integrate;
-use mcubes::coordinator::{run_driver, JobConfig, PjrtBackend};
-use mcubes::integrands::{by_name, Cosmo};
-use mcubes::runtime::{PjrtRuntime, Registry, DEFAULT_ARTIFACT_DIR};
+use mcubes::integrands::Cosmo;
+use mcubes::prelude::*;
+use mcubes::runtime::DEFAULT_ARTIFACT_DIR;
 
-fn main() -> anyhow::Result<()> {
-    let registry = Registry::load(DEFAULT_ARTIFACT_DIR)
-        .map_err(|e| anyhow::anyhow!("{e}\nhint: run `make artifacts` first"))?;
-    let runtime = PjrtRuntime::cpu()?;
-    println!("PJRT platform: {}", runtime.platform_name());
-
+fn main() -> Result<()> {
     // --- m-Cubes over the AOT artifact (tables flow in at runtime) ---
-    let backend = PjrtBackend::load(&runtime, &registry, "cosmo", 0)?;
-    let meta = backend.meta().clone();
-    println!(
-        "artifact {} (d={}, m={} cubes x p={} samples, {} tables x {} knots)",
-        meta.name, meta.dim, meta.m, meta.p, meta.n_tables, meta.table_knots
-    );
-    let cfg = JobConfig {
-        maxcalls: meta.maxcalls,
-        nb: meta.nb,
-        nblocks: meta.nblocks,
-        tau_rel: 1e-3,
-        itmax: 15,
-        ita: 10,
-        seed: 7,
-        ..Default::default()
-    };
-    let mcubes_out = run_driver(&backend, &cfg)?;
+    let mut intg = Integrator::from_registry("cosmo", 6)?
+        .backend(BackendSpec::Pjrt {
+            artifacts_dir: DEFAULT_ARTIFACT_DIR.into(),
+        })
+        // maxcalls acts as the artifact's minimum budget on the PJRT
+        // backend; 4 selects the smallest compiled cosmo artifact
+        // (matching the pre-facade behavior of min_calls = 0).
+        .maxcalls(4)
+        .tolerance(1e-3)
+        .max_iterations(15)
+        .adjust_iterations(10)
+        .seed(7);
+    let mcubes_out = intg.run().map_err(|e| {
+        Error::Runtime(format!("{e}\nhint: run `make artifacts` first"))
+    })?;
 
     // --- Serial VEGAS baseline (CUBA-style CPU implementation) ---
-    let f = by_name("cosmo", 6)?;
-    let serial = vegas_serial_integrate(&*f, meta.maxcalls, 1e-3, 15, 7);
+    // Same per-iteration budget the artifact actually used.
+    let per_iter = (mcubes_out.calls_used / mcubes_out.iterations.max(1)).max(4);
+    let f = mcubes::integrands::by_name("cosmo", 6)?;
+    let serial = vegas_serial_integrate(&*f, per_iter, 1e-3, 15, 7);
 
     // --- Reference by product quadrature over the same tables ---
     let truth = Cosmo::with_default_tables().quadrature_true_value(200_000);
 
-    println!("\n{:<22} {:>16} {:>12} {:>12} {:>10}", "method", "estimate", "errorest", "rel-true", "time(ms)");
+    println!(
+        "\n{:<22} {:>16} {:>12} {:>12} {:>10}",
+        "method", "estimate", "errorest", "rel-true", "time(ms)"
+    );
     for (name, i, s, t) in [
         (
             "m-Cubes (PJRT AOT)",
@@ -52,7 +50,12 @@ fn main() -> anyhow::Result<()> {
             mcubes_out.sigma,
             mcubes_out.total_time,
         ),
-        ("serial VEGAS (CPU)", serial.integral, serial.sigma, serial.total_time),
+        (
+            "serial VEGAS (CPU)",
+            serial.integral,
+            serial.sigma,
+            serial.total_time,
+        ),
     ] {
         println!(
             "{:<22} {:>16.8e} {:>12.3e} {:>12.3e} {:>10.1}",

@@ -1,15 +1,16 @@
 //! Fig.-1 style accuracy sweep (compact): run each suite integrand at
 //! increasing digits of precision, multiple seeds, and report the
 //! spread of achieved relative errors against the requested tolerance.
+//! Uses the `Integrator` facade with escalation (budget x4 per level,
+//! adapted grid carried across levels).
 //!
 //! Run: cargo run --offline --release --example precision_sweep [runs]
 
-use mcubes::coordinator::{integrate_native_adaptive, JobConfig};
-use mcubes::integrands::by_name;
+use mcubes::prelude::*;
 use mcubes::report::BoxStats;
 use mcubes::util::table::Table;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<()> {
     let runs: usize = std::env::args()
         .nth(1)
         .and_then(|s| s.parse().ok())
@@ -21,22 +22,21 @@ fn main() -> anyhow::Result<()> {
         "integrand", "digits", "tau", "median rel", "q3 rel", "max rel", "met",
     ]);
     for (name, d) in cases {
-        let f = by_name(name, d)?;
+        let f = mcubes::integrands::by_name(name, d)?;
         let truth = f.true_value().unwrap();
         for tau in taus {
             let mut achieved = Vec::with_capacity(runs);
             let mut conv = 0usize;
             for r in 0..runs {
-                let base = JobConfig {
-                    maxcalls: 1 << 14,
-                    tau_rel: tau,
-                    itmax: 20,
-                    ita: 12,
-                    skip: 2,
-                    seed: 9000 + r as u32,
-                    ..Default::default()
-                };
-                let out = integrate_native_adaptive(&*f, &base, 6, 4)?;
+                let out = Integrator::new(f.clone())
+                    .maxcalls(1 << 14)
+                    .tolerance(tau)
+                    .max_iterations(20)
+                    .adjust_iterations(12)
+                    .skip_iterations(2)
+                    .seed(9000 + r as u32)
+                    .escalate(6, 4)
+                    .run()?;
                 if out.converged {
                     conv += 1;
                     achieved.push(((out.integral - truth) / truth).abs());

@@ -1,38 +1,77 @@
-//! Quickstart: integrate a sharp 5-D Gaussian with m-Cubes (native
-//! engine) and compare against the analytic value.
+//! Quickstart for the `Integrator` facade:
+//!
+//!  1. a registry integrand (the paper's f4, a sharp 5-D Gaussian),
+//!  2. a closure integrand over non-uniform per-axis bounds,
+//!  3. a grid warm-start that skips the importance-grid warm-up.
+//!
+//! The seed-era free functions (`integrate_native`, `run_driver`, ...)
+//! still exist but are `#[deprecated]` shims over the same core — new
+//! code should look like this file.
 //!
 //! Run: cargo run --offline --release --example quickstart
 
-use mcubes::coordinator::{integrate_native, JobConfig};
-use mcubes::integrands::by_name;
+use mcubes::prelude::*;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<()> {
+    // --- 1. Registry integrand through the builder -------------------
     // The paper's f4 (eq. 4): exp(-625 * sum (x_i - 1/2)^2) over [0,1]^5.
-    let f = by_name("f4", 5)?;
-
-    let cfg = JobConfig {
-        maxcalls: 1 << 17, // evaluations per iteration
-        tau_rel: 1e-3,     // requested relative error (3 digits)
-        itmax: 15,
-        ita: 10, // iterations with importance-grid adjustment
-        ..Default::default()
-    };
-
-    let out = integrate_native(&*f, &cfg)?;
+    let mut intg = Integrator::from_registry("f4", 5)?
+        .maxcalls(1 << 17) // evaluations per iteration
+        .tolerance(1e-3) // requested relative error (3 digits)
+        .max_iterations(15)
+        .adjust_iterations(10); // iterations with grid adjustment
+    let out = intg.run()?;
 
     println!("m-Cubes quickstart — integrand f4 (5-D Gaussian)");
     println!("  integral   = {:.10e}", out.integral);
     println!("  sigma      = {:.3e}", out.sigma);
-    println!("  rel error  = {:.3e} (requested {:.0e})", out.rel_err, cfg.tau_rel);
+    println!("  rel error  = {:.3e} (requested 1e-3)", out.rel_err);
     println!("  chi2/dof   = {:.3}", out.chi2_dof);
-    println!("  iterations = {} (converged: {})", out.iterations, out.converged);
+    println!(
+        "  iterations = {} (converged: {})",
+        out.iterations, out.converged
+    );
     println!("  calls used = {}", out.calls_used);
     println!("  time       = {:.1} ms", out.total_time * 1e3);
 
+    let f = mcubes::integrands::by_name("f4", 5)?;
     let truth = f.true_value().unwrap();
     println!("  true value = {:.10e}", truth);
-    println!("  true rel   = {:.3e}", ((out.integral - truth) / truth).abs());
-
+    println!(
+        "  true rel   = {:.3e}",
+        ((out.integral - truth) / truth).abs()
+    );
     assert!(out.converged, "did not converge");
+
+    // --- 2. Closure integrand over per-axis bounds -------------------
+    // ∫∫ x·y over [0,2]×[1,3] = 2 · 4 = 8, no registry entry needed.
+    let bounds = Bounds::per_axis(&[(0.0, 2.0), (1.0, 3.0)])?;
+    let xy = Integrator::from_fn(2, bounds, |x| x[0] * x[1])?
+        .maxcalls(1 << 14)
+        .tolerance(1e-3)
+        .run()?;
+    println!("\nclosure ∫ x·y over [0,2]×[1,3]:");
+    println!(
+        "  integral   = {:.6} (exact 8), rel-true {:.2e}",
+        xy.integral,
+        ((xy.integral - 8.0) / 8.0).abs()
+    );
+
+    // --- 3. Warm-start: reuse the adapted grid -----------------------
+    let grid = intg.export_grid().expect("grid after run");
+    let warm = Integrator::from_registry("f4", 5)?
+        .maxcalls(1 << 17)
+        .tolerance(1e-3)
+        .seed(43) // fresh samples, same adapted grid
+        .warm_start(grid)
+        .adjust_iterations(0) // the grid is already adapted
+        .skip_iterations(0)
+        .run()?;
+    println!("\nwarm-started rerun:");
+    println!(
+        "  iterations = {} (cold start took {})",
+        warm.iterations, out.iterations
+    );
+    assert!(warm.converged);
     Ok(())
 }

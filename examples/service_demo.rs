@@ -1,27 +1,26 @@
 //! End-to-end system driver (the repo's E2E validation workload):
 //!
 //! 1. Loads the AOT artifact registry and checks the PJRT runtime.
-//! 2. Cross-validates PJRT vs native on one artifact (the three-layer
-//!    stack composes).
+//! 2. Cross-validates PJRT vs native on one artifact through the
+//!    `Integrator` facade (the three-layer stack composes).
 //! 3. Pushes a realistic batch of integration jobs (the paper's test
 //!    suite at 3 digits of precision, many seeds) through the
-//!    integration service and reports latency/throughput plus
+//!    integration service — including a closure integrand and a
+//!    warm-started repeat batch — and reports latency/throughput plus
 //!    per-integrand accuracy vs the analytic values.
 //!
 //! Results are recorded in EXPERIMENTS.md §E2E. Run:
 //!   cargo run --offline --release --example service_demo
 
-use mcubes::coordinator::{
-    run_driver, IntegrationService, JobConfig, JobRequest, PjrtBackend,
-};
-use mcubes::integrands::by_name;
+use mcubes::coordinator::{IntegrationService, JobRequest};
+use mcubes::prelude::*;
 use mcubes::runtime::{PjrtRuntime, Registry, DEFAULT_ARTIFACT_DIR};
 use mcubes::util::table::{fmt_ms, Table};
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<()> {
     // ---- Stage 1: artifact registry + PJRT sanity --------------------
     let registry = Registry::load(DEFAULT_ARTIFACT_DIR)
-        .map_err(|e| anyhow::anyhow!("{e}\nhint: run `make artifacts` first"))?;
+        .map_err(|e| Error::Runtime(format!("{e}\nhint: run `make artifacts` first")))?;
     println!(
         "[1/3] registry: {} artifacts from {}",
         registry.all().len(),
@@ -34,27 +33,31 @@ fn main() -> anyhow::Result<()> {
         runtime.device_count()
     );
 
-    // ---- Stage 2: cross-backend validation ---------------------------
-    let backend = PjrtBackend::load(&runtime, &registry, "f4", 0)?;
-    let meta = backend.meta().clone();
-    let xcfg = JobConfig {
-        maxcalls: meta.maxcalls,
-        nb: meta.nb,
-        nblocks: meta.nblocks,
-        itmax: 4,
-        ita: 3,
-        skip: 0,
-        tau_rel: 1e-14,
-        seed: 999,
-        ..Default::default()
+    // ---- Stage 2: cross-backend validation through the facade --------
+    // Same compiled layout on both sides: adopt the smallest f4
+    // artifact's (maxcalls, nb, nblocks) for the native run too.
+    let meta = registry.select("f4", true, 4)?.clone();
+    let xcheck = |backend: BackendSpec| -> Result<IntegrationOutput> {
+        Integrator::from_registry("f4", 5)?
+            .backend(backend)
+            .maxcalls(meta.maxcalls)
+            .bins_per_axis(meta.nb)
+            .blocks(meta.nblocks)
+            .max_iterations(4)
+            .adjust_iterations(3)
+            .skip_iterations(0)
+            .tolerance(1e-14)
+            .seed(999)
+            .run()
     };
-    let pjrt = run_driver(&backend, &xcfg)?;
-    let f4 = by_name("f4", 5)?;
-    let native = mcubes::coordinator::integrate_native(&*f4, &xcfg)?;
+    let pjrt = xcheck(BackendSpec::Pjrt {
+        artifacts_dir: DEFAULT_ARTIFACT_DIR.into(),
+    })?;
+    let native = xcheck(BackendSpec::Native)?;
     let rel = ((pjrt.integral - native.integral) / native.integral).abs();
     println!(
-        "[2/3] cross-backend check on {}: pjrt={:.12e} native={:.12e} rel diff={:.2e}",
-        meta.name, pjrt.integral, native.integral, rel
+        "[2/3] cross-backend check on f4: pjrt={:.12e} native={:.12e} rel diff={:.2e}",
+        pjrt.integral, native.integral, rel
     );
     assert!(rel < 1e-9, "backends disagree");
 
@@ -77,11 +80,11 @@ fn main() -> anyhow::Result<()> {
     let mut id = 0u64;
     for (name, d, calls) in suite {
         for s in 0..seeds_per_case {
-            svc.submit(JobRequest {
+            svc.submit(JobRequest::registry(
                 id,
-                integrand: name.to_string(),
-                dim: *d,
-                config: JobConfig {
+                *name,
+                *d,
+                JobConfig {
                     maxcalls: *calls,
                     tau_rel: 1e-3,
                     itmax: 20,
@@ -90,12 +93,32 @@ fn main() -> anyhow::Result<()> {
                     seed: 7000 + id as u32 + s as u32,
                     ..Default::default()
                 },
-            });
+            ));
             id += 1;
         }
     }
+    // A closure job rides along — no registry entry needed.
+    let closure_id = id;
+    svc.submit(JobRequest::custom(
+        closure_id,
+        FnIntegrand::unit(4, |x: &[f64]| {
+            (-(x.iter().map(|v| (v - 0.5) * (v - 0.5)).sum::<f64>()) * 20.0).exp()
+        })
+        .named("gauss4")
+        .into_ref(),
+        JobConfig {
+            maxcalls: 1 << 14,
+            tau_rel: 1e-3,
+            itmax: 20,
+            ita: 12,
+            skip: 2,
+            seed: 4242,
+            ..Default::default()
+        },
+    ));
+    id += 1;
     println!(
-        "[3/3] service: {} jobs ({} integrand cases x {} seeds) on {} workers",
+        "[3/3] service: {} jobs ({} integrand cases x {} seeds + 1 closure) on {} workers",
         id,
         suite.len(),
         seeds_per_case,
@@ -104,10 +127,14 @@ fn main() -> anyhow::Result<()> {
     let (results, metrics) = svc.drain()?;
 
     let mut t = Table::new(&[
-        "integrand", "jobs", "converged", "max |rel err| vs truth", "median latency",
+        "integrand",
+        "jobs",
+        "converged",
+        "max |rel err| vs truth",
+        "median latency",
     ]);
     for (name, d, _) in suite {
-        let f = by_name(name, *d)?;
+        let f = mcubes::integrands::by_name(name, *d)?;
         let truth = f.true_value().unwrap();
         let mut rels: Vec<f64> = Vec::new();
         let mut lats: Vec<f64> = Vec::new();
@@ -122,7 +149,7 @@ fn main() -> anyhow::Result<()> {
                 }
             }
         }
-        lats.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        lats.sort_by(f64::total_cmp);
         let max_rel = rels.iter().cloned().fold(0.0f64, f64::max);
         t.row(vec![
             format!("{name} (d={d})"),
@@ -133,6 +160,15 @@ fn main() -> anyhow::Result<()> {
         ]);
     }
     println!("\n{}", t.render());
+    let closure_result = results.iter().find(|r| r.id == closure_id).unwrap();
+    println!(
+        "closure job `{}`: {}",
+        closure_result.integrand,
+        match &closure_result.outcome {
+            Ok(o) => format!("I = {:.6e} (converged: {})", o.integral, o.converged),
+            Err(e) => format!("ERROR: {e}"),
+        }
+    );
     println!(
         "throughput: {:.2} jobs/s | wall {} | p50 {} | p95 {} | failures {}",
         metrics.throughput,
@@ -142,6 +178,49 @@ fn main() -> anyhow::Result<()> {
         metrics.failures
     );
     assert_eq!(metrics.failures, 0);
+
+    // ---- Warm-started repeat batch: the grid-reuse serving win -------
+    let donor_grid = results
+        .iter()
+        .find(|r| r.integrand == "f4" && r.outcome.is_ok())
+        .and_then(|r| r.grid.clone())
+        .expect("f4 grid");
+    let mut svc = IntegrationService::new(workers);
+    for i in 0..4u64 {
+        svc.submit(
+            JobRequest::registry(
+                i,
+                "f4",
+                5,
+                JobConfig {
+                    maxcalls: 1 << 16,
+                    tau_rel: 1e-3,
+                    itmax: 20,
+                    ita: 0, // grid already adapted
+                    skip: 0,
+                    seed: 9900 + i as u32,
+                    ..Default::default()
+                },
+            )
+            .with_warm_start(donor_grid.clone()),
+        );
+    }
+    let (warm_results, warm_metrics) = svc.drain()?;
+    let mean_iters: f64 = warm_results
+        .iter()
+        .filter_map(|r| r.outcome.as_ref().ok())
+        .map(|o| o.iterations as f64)
+        .sum::<f64>()
+        / warm_results.len() as f64;
+    println!(
+        "warm-started f4 batch: {} jobs, mean {:.1} iterations (cold runs take the full \
+         adjust phase), p50 {}",
+        warm_metrics.jobs,
+        mean_iters,
+        fmt_ms(warm_metrics.latency_p50 * 1e3)
+    );
+    assert_eq!(warm_metrics.failures, 0);
+
     println!("\nservice_demo OK — full stack (artifacts -> PJRT -> coordinator -> service) validated");
     Ok(())
 }

@@ -7,7 +7,7 @@
 //! where convergence is feasible, 100 runs per cell).
 //! CSV series land in results/fig1_accuracy.csv.
 
-use mcubes::coordinator::{integrate_native_adaptive, JobConfig};
+use mcubes::api::Integrator;
 use mcubes::estimator::precision_ladder;
 use mcubes::integrands::by_name;
 use mcubes::report::{AccuracyCell, BoxStats};
@@ -46,17 +46,17 @@ fn main() {
             let mut achieved = Vec::with_capacity(runs);
             let mut conv = 0usize;
             for r in 0..runs {
-                let base = JobConfig {
-                    maxcalls: 1 << 14,
-                    tau_rel: tau,
-                    itmax: 20,
-                    ita: 12,
-                    skip: 2,
-                    seed: (1000 + 77 * r) as u32,
-                    ..Default::default()
-                };
                 // Escalate calls x4 up to 6 times (2^14 -> 2^26 ceiling)
-                if let Ok(out) = integrate_native_adaptive(&*f, &base, if full { 6 } else { 4 }, 4) {
+                let run = Integrator::new(f.clone())
+                    .maxcalls(1 << 14)
+                    .tolerance(tau)
+                    .max_iterations(20)
+                    .adjust_iterations(12)
+                    .skip_iterations(2)
+                    .seed((1000 + 77 * r) as u32)
+                    .escalate(if full { 6 } else { 4 }, 4)
+                    .run();
+                if let Ok(out) = run {
                     if out.converged {
                         conv += 1;
                         achieved.push(((out.integral - truth) / truth).abs());

@@ -13,8 +13,8 @@
 //! to tau or exhausts its escalation budget; non-converged cells are
 //! reported as missing ("—"). CSV: results/fig2_gvegas.csv
 
+use mcubes::api::Integrator;
 use mcubes::baselines::{gvegas_integrate, GvegasConfig};
-use mcubes::coordinator::{integrate_native_adaptive, JobConfig};
 use mcubes::integrands::by_name;
 use mcubes::util::table::{fmt_ms, Table};
 
@@ -42,16 +42,16 @@ fn main() {
         let f = by_name(name, d).expect("integrand");
         for &tau in taus {
             // m-Cubes: escalate per-iteration budget x4 until converged.
-            let base = JobConfig {
-                maxcalls: base_calls,
-                tau_rel: tau,
-                itmax: 15,
-                ita: 10,
-                skip: 2,
-                seed: 3,
-                ..Default::default()
-            };
-            let mc = integrate_native_adaptive(&*f, &base, 5, 4).expect("mcubes");
+            let mc = Integrator::new(f.clone())
+                .maxcalls(base_calls)
+                .tolerance(tau)
+                .max_iterations(15)
+                .adjust_iterations(10)
+                .skip_iterations(2)
+                .seed(3)
+                .escalate(5, 4)
+                .run()
+                .expect("mcubes");
 
             // gVegas: same total budget ambitions, but per-iteration
             // samples capped by "device memory" (2^14 evaluations).

@@ -6,7 +6,7 @@
 //! traffic) drops by a factor of d.
 //! CSV: results/fig3_onedim.csv
 
-use mcubes::coordinator::{integrate_native, JobConfig};
+use mcubes::api::Integrator;
 use mcubes::grid::GridMode;
 use mcubes::integrands::by_name;
 use mcubes::util::benchkit::{bench, BenchOpts};
@@ -31,23 +31,19 @@ fn main() {
         let f = by_name(name, d).expect("integrand");
         let truth = f.true_value().unwrap();
         for &tau in taus {
-            let mk = |mode: GridMode| JobConfig {
-                maxcalls: calls,
-                tau_rel: tau,
-                itmax: 20,
-                ita: 12,
-                skip: 2,
-                seed: 13,
-                grid_mode: mode,
-                ..Default::default()
+            let mk = |mode: GridMode| {
+                Integrator::new(f.clone())
+                    .maxcalls(calls)
+                    .tolerance(tau)
+                    .max_iterations(20)
+                    .adjust_iterations(12)
+                    .skip_iterations(2)
+                    .seed(13)
+                    .grid_mode(mode)
             };
-            let per_axis_stats = bench(opts, || {
-                integrate_native(&*f, &mk(GridMode::PerAxis)).unwrap()
-            });
-            let onedim_out = integrate_native(&*f, &mk(GridMode::Shared1D)).unwrap();
-            let onedim_stats = bench(opts, || {
-                integrate_native(&*f, &mk(GridMode::Shared1D)).unwrap()
-            });
+            let per_axis_stats = bench(opts, || mk(GridMode::PerAxis).run().unwrap());
+            let onedim_out = mk(GridMode::Shared1D).run().unwrap();
+            let onedim_stats = bench(opts, || mk(GridMode::Shared1D).run().unwrap());
             let speedup = per_axis_stats.median_ms() / onedim_stats.median_ms().max(1e-9);
             let rel = ((onedim_out.integral - truth) / truth).abs();
             table.row(vec![

@@ -4,8 +4,8 @@
 //! and 10x faster at markedly smaller error estimates.
 //! CSV: results/table1_zmc.csv
 
+use mcubes::api::Integrator;
 use mcubes::baselines::{zmc_integrate, ZmcConfig};
-use mcubes::coordinator::{integrate_native, JobConfig};
 use mcubes::integrands::by_name;
 use mcubes::util::table::Table;
 
@@ -55,16 +55,15 @@ fn main() {
         let truth = f.true_value().unwrap();
 
         let z = zmc_integrate(&*f, &zcfg);
-        let mcfg = JobConfig {
-            maxcalls: calls,
-            tau_rel: 1e-3,
-            itmax,
-            ita: itmax,
-            skip: 2,
-            seed: 11,
-            ..Default::default()
-        };
-        let m = integrate_native(&*f, &mcfg).expect("mcubes");
+        let m = Integrator::new(f.clone())
+            .maxcalls(calls)
+            .tolerance(1e-3)
+            .max_iterations(itmax)
+            .adjust_iterations(itmax)
+            .skip_iterations(2)
+            .seed(11)
+            .run()
+            .expect("mcubes");
 
         for (alg, est, err, secs) in [
             ("zmc-sim", z.integral, z.sigma, z.total_time),

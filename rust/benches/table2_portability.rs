@@ -7,8 +7,8 @@
 //! we report kernel vs total time for each on the same workloads.
 //! CSV: results/table2_portability.csv
 
-use mcubes::coordinator::{run_driver, JobConfig, PjrtBackend};
-use mcubes::integrands::by_name;
+use mcubes::api::Integrator;
+use mcubes::coordinator::{drive, JobConfig, PjrtBackend};
 use mcubes::runtime::{PjrtRuntime, Registry};
 use mcubes::util::table::Table;
 use std::path::Path;
@@ -34,7 +34,6 @@ fn main() {
     for name in ["fA", "fB"] {
         let backend = PjrtBackend::load(&runtime, &reg, name, 0).expect("artifact");
         let meta = backend.meta().clone();
-        let f = by_name(&meta.integrand, meta.dim).expect("integrand");
         let cfg = JobConfig {
             maxcalls: meta.maxcalls,
             nb: meta.nb,
@@ -46,11 +45,14 @@ fn main() {
             seed: 77,
             ..Default::default()
         };
+        let mut native = Integrator::from_registry(&meta.integrand, meta.dim)
+            .expect("integrand")
+            .config(cfg.clone());
         // Warm both paths (compile cache, page faults).
-        let _ = run_driver(&backend, &cfg).unwrap();
-        let pjrt_out = run_driver(&backend, &cfg).unwrap();
-        let _ = mcubes::coordinator::integrate_native(&*f, &cfg).unwrap();
-        let native_out = mcubes::coordinator::integrate_native(&*f, &cfg).unwrap();
+        let _ = drive(&backend, &cfg, None, None).unwrap();
+        let pjrt_out = drive(&backend, &cfg, None, None).unwrap().output;
+        let _ = native.run().unwrap();
+        let native_out = native.run().unwrap();
 
         for (platform, out) in [("pjrt-aot", &pjrt_out), ("native-rust", &native_out)] {
             table.row(vec![

@@ -1,0 +1,131 @@
+//! Exportable importance-grid state — the warm-start currency of the
+//! `Integrator` facade.
+//!
+//! A `GridState` captures the adapted VEGAS bin boundaries after a run.
+//! Re-importing it into a later run (same dimension and bin count; the
+//! call budget may differ) skips the adjust phase's warm-up cost — the
+//! serving win for repeated similar integrals, escalation ladders, and
+//! service jobs.
+
+use crate::error::{Error, Result};
+use crate::grid::{Bins, GridMode};
+use crate::util::json::Value;
+use std::path::Path;
+
+/// An adapted (or uniform) importance grid, detached from any driver.
+#[derive(Debug, Clone, PartialEq)]
+pub struct GridState {
+    bins: Bins,
+}
+
+impl GridState {
+    /// Capture a grid from raw bin boundaries.
+    pub fn from_bins(bins: Bins) -> GridState {
+        GridState { bins }
+    }
+
+    /// A fresh uniform grid (what a cold start uses internally).
+    pub fn uniform(d: usize, nb: usize, mode: GridMode) -> GridState {
+        GridState {
+            bins: Bins::uniform_mode(d, nb, mode),
+        }
+    }
+
+    /// Borrow the underlying bin boundaries.
+    pub fn bins(&self) -> &Bins {
+        &self.bins
+    }
+
+    /// Unwrap into the underlying bin boundaries.
+    pub fn into_bins(self) -> Bins {
+        self.bins
+    }
+
+    /// Dimension of the grid.
+    pub fn d(&self) -> usize {
+        self.bins.d()
+    }
+
+    /// Importance bins per axis.
+    pub fn nb(&self) -> usize {
+        self.bins.nb()
+    }
+
+    /// Grid mode the donor run used.
+    pub fn mode(&self) -> GridMode {
+        self.bins.mode()
+    }
+
+    /// Check this grid can seed a job with layout `(d, nb)`.
+    pub fn compatible(&self, d: usize, nb: usize) -> Result<()> {
+        if self.d() != d || self.nb() != nb {
+            return Err(Error::Config(format!(
+                "warm-start grid shape (d={}, nb={}) != job layout (d={d}, nb={nb})",
+                self.d(),
+                self.nb()
+            )));
+        }
+        Ok(())
+    }
+
+    /// Serialize (JSON value) — same schema as `Bins::to_json`.
+    pub fn to_json(&self) -> Value {
+        self.bins.to_json()
+    }
+
+    /// Restore from `to_json` output (validates grid invariants).
+    pub fn from_json(v: &Value) -> Result<GridState> {
+        Ok(GridState {
+            bins: Bins::from_json(v)?,
+        })
+    }
+
+    /// Save to a JSON file.
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        self.bins.save(path)
+    }
+
+    /// Load from a file written by `save`.
+    pub fn load(path: impl AsRef<Path>) -> Result<GridState> {
+        Ok(GridState {
+            bins: Bins::load(path)?,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn json_roundtrip_preserves_grid() {
+        let mut bins = Bins::uniform(3, 12);
+        let mut contrib = vec![1.0; 36];
+        contrib[2] = 50.0;
+        bins.adjust(&contrib);
+        let gs = GridState::from_bins(bins);
+        let back = GridState::from_json(&gs.to_json()).unwrap();
+        assert_eq!(back, gs);
+        assert_eq!(back.d(), 3);
+        assert_eq!(back.nb(), 12);
+    }
+
+    #[test]
+    fn compatibility_is_checked() {
+        let gs = GridState::uniform(4, 50, GridMode::PerAxis);
+        assert!(gs.compatible(4, 50).is_ok());
+        assert!(gs.compatible(4, 32).is_err());
+        assert!(gs.compatible(3, 50).is_err());
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let gs = GridState::uniform(2, 8, GridMode::Shared1D);
+        let path = std::env::temp_dir().join("mcubes_grid_state_test.json");
+        gs.save(&path).unwrap();
+        let back = GridState::load(&path).unwrap();
+        assert_eq!(back, gs);
+        assert_eq!(back.mode(), GridMode::Shared1D);
+        let _ = std::fs::remove_file(path);
+    }
+}

@@ -1,0 +1,254 @@
+//! Closure integrands and integrand specifications.
+//!
+//! `FnIntegrand` adapts any `Fn(&[f64]) -> f64` closure (or fn pointer)
+//! into the `Integrand` trait, with arbitrary per-axis bounds — the
+//! user-defined-integrand-first surface the paper's "easy to define
+//! stateful integrals" pitch calls for. `IntegrandSpec` is the
+//! serializable-ish handle the service and `Integrator` share: either a
+//! registry name (resolvable, artifact-addressable) or a custom
+//! `IntegrandRef`.
+
+use crate::error::Result;
+use crate::integrands::{by_name, Integrand, IntegrandRef};
+use crate::strat::Bounds;
+use std::fmt;
+use std::sync::Arc;
+
+/// A closure adapted into the `Integrand` trait.
+///
+/// The closure receives points in *physical* coordinates (inside
+/// `bounds`); the engine handles the unit-box map and Jacobian. The
+/// engine, driver, and CPU baselines all sample through `bounds()`;
+/// for non-uniform boxes the legacy `lo()/hi()` pair reports the
+/// bounding hull and should not be used for sampling.
+pub struct FnIntegrand<F> {
+    f: F,
+    dim: usize,
+    bounds: Bounds,
+    hull: (f64, f64),
+    name: String,
+    true_value: Option<f64>,
+    symmetric: bool,
+}
+
+impl<F> FnIntegrand<F>
+where
+    F: Fn(&[f64]) -> f64 + Send + Sync,
+{
+    /// Wrap `f` over an arbitrary box. Fails if `bounds.dim() != dim`.
+    pub fn new(dim: usize, bounds: Bounds, f: F) -> Result<FnIntegrand<F>> {
+        if bounds.dim() != dim {
+            return Err(crate::error::Error::Config(format!(
+                "bounds dimension {} != integrand dimension {dim}",
+                bounds.dim()
+            )));
+        }
+        let hull = bounds.hull();
+        Ok(FnIntegrand {
+            f,
+            dim,
+            bounds,
+            hull,
+            name: "closure".to_string(),
+            true_value: None,
+            symmetric: false,
+        })
+    }
+
+    /// Wrap `f` over the unit box `[0, 1]^dim`.
+    pub fn unit(dim: usize, f: F) -> FnIntegrand<F> {
+        Self::new(dim, Bounds::unit(dim), f).expect("unit bounds always match")
+    }
+
+    /// Attach a display name (shows up in service results and reports).
+    pub fn named(mut self, name: impl Into<String>) -> Self {
+        self.name = name.into();
+        self
+    }
+
+    /// Attach a known reference value (enables accuracy reporting).
+    pub fn with_true_value(mut self, v: f64) -> Self {
+        self.true_value = Some(v);
+        self
+    }
+
+    /// Declare the integrand symmetric across axes (m-Cubes1D valid).
+    pub fn assume_symmetric(mut self) -> Self {
+        self.symmetric = true;
+        self
+    }
+
+    /// Erase into a shared `IntegrandRef` handle.
+    pub fn into_ref(self) -> IntegrandRef
+    where
+        F: 'static,
+    {
+        Arc::new(self)
+    }
+}
+
+impl<F> Integrand for FnIntegrand<F>
+where
+    F: Fn(&[f64]) -> f64 + Send + Sync,
+{
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn dim(&self) -> usize {
+        self.dim
+    }
+
+    fn lo(&self) -> f64 {
+        self.hull.0
+    }
+
+    fn hi(&self) -> f64 {
+        self.hull.1
+    }
+
+    #[inline]
+    fn eval(&self, x: &[f64]) -> f64 {
+        (self.f)(x)
+    }
+
+    fn true_value(&self) -> Option<f64> {
+        self.true_value
+    }
+
+    fn symmetric(&self) -> bool {
+        self.symmetric
+    }
+
+    fn bounds(&self) -> Bounds {
+        self.bounds.clone()
+    }
+}
+
+/// What to integrate: a registry name or a user-supplied integrand.
+///
+/// The registry form stays artifact-addressable (the PJRT backend
+/// selects compiled kernels by registry name); the custom form carries
+/// any `Integrand`, including `FnIntegrand` closures.
+#[derive(Clone)]
+pub enum IntegrandSpec {
+    /// A named integrand from `integrands::by_name` at a dimension.
+    Registry { name: String, dim: usize },
+    /// A user-supplied integrand handle.
+    Custom(IntegrandRef),
+}
+
+impl IntegrandSpec {
+    /// Spec for a registry integrand.
+    pub fn registry(name: impl Into<String>, dim: usize) -> IntegrandSpec {
+        IntegrandSpec::Registry {
+            name: name.into(),
+            dim,
+        }
+    }
+
+    /// Spec wrapping a custom integrand.
+    pub fn custom(f: IntegrandRef) -> IntegrandSpec {
+        IntegrandSpec::Custom(f)
+    }
+
+    /// Human-readable label (registry name or the integrand's name).
+    pub fn label(&self) -> String {
+        match self {
+            IntegrandSpec::Registry { name, .. } => name.clone(),
+            IntegrandSpec::Custom(f) => f.name().to_string(),
+        }
+    }
+
+    /// Dimension of the integral.
+    pub fn dim(&self) -> usize {
+        match self {
+            IntegrandSpec::Registry { dim, .. } => *dim,
+            IntegrandSpec::Custom(f) => f.dim(),
+        }
+    }
+
+    /// Registry name, when artifact-addressable.
+    pub fn registry_name(&self) -> Option<&str> {
+        match self {
+            IntegrandSpec::Registry { name, .. } => Some(name),
+            IntegrandSpec::Custom(_) => None,
+        }
+    }
+
+    /// Resolve to a callable integrand handle.
+    pub fn resolve(&self) -> Result<IntegrandRef> {
+        match self {
+            IntegrandSpec::Registry { name, dim } => by_name(name, *dim),
+            IntegrandSpec::Custom(f) => Ok(Arc::clone(f)),
+        }
+    }
+}
+
+impl fmt::Debug for IntegrandSpec {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            IntegrandSpec::Registry { name, dim } => {
+                write!(f, "IntegrandSpec::Registry({name}, d={dim})")
+            }
+            IntegrandSpec::Custom(g) => {
+                write!(f, "IntegrandSpec::Custom({}, d={})", g.name(), g.dim())
+            }
+        }
+    }
+}
+
+impl From<IntegrandRef> for IntegrandSpec {
+    fn from(f: IntegrandRef) -> Self {
+        IntegrandSpec::Custom(f)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fn_integrand_evaluates_closure() {
+        let f = FnIntegrand::unit(2, |x: &[f64]| x[0] * x[1])
+            .named("xy")
+            .with_true_value(0.25);
+        assert_eq!(f.name(), "xy");
+        assert_eq!(f.dim(), 2);
+        assert_eq!(f.eval(&[0.5, 0.4]), 0.2);
+        assert_eq!(f.true_value(), Some(0.25));
+        assert_eq!(f.bounds(), Bounds::unit(2));
+    }
+
+    #[test]
+    fn fn_integrand_per_axis_hull() {
+        let b = Bounds::per_axis(&[(0.0, 2.0), (-1.0, 1.0)]).unwrap();
+        let f = FnIntegrand::new(2, b.clone(), |_: &[f64]| 1.0).unwrap();
+        assert_eq!(f.bounds(), b);
+        assert_eq!((f.lo(), f.hi()), (-1.0, 2.0));
+    }
+
+    #[test]
+    fn fn_integrand_dim_mismatch_rejected() {
+        assert!(FnIntegrand::new(3, Bounds::unit(2), |_: &[f64]| 0.0).is_err());
+    }
+
+    #[test]
+    fn spec_resolution() {
+        let reg = IntegrandSpec::registry("f4", 5);
+        assert_eq!(reg.label(), "f4");
+        assert_eq!(reg.dim(), 5);
+        assert_eq!(reg.registry_name(), Some("f4"));
+        assert!(reg.resolve().is_ok());
+
+        let bad = IntegrandSpec::registry("nope", 3);
+        assert!(bad.resolve().is_err());
+
+        let custom =
+            IntegrandSpec::custom(FnIntegrand::unit(1, |x: &[f64]| x[0]).named("id").into_ref());
+        assert_eq!(custom.label(), "id");
+        assert_eq!(custom.dim(), 1);
+        assert_eq!(custom.registry_name(), None);
+        assert!(custom.resolve().is_ok());
+    }
+}

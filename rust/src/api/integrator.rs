@@ -1,0 +1,452 @@
+//! The unified `Integrator` facade — one entry point over the native
+//! engine and the PJRT artifact runtime.
+//!
+//! ```no_run
+//! use mcubes::prelude::*;
+//!
+//! // A closure over a non-uniform box: ∫ x·y over [0,2]×[1,3] = 8.
+//! let bounds = Bounds::per_axis(&[(0.0, 2.0), (1.0, 3.0)]).unwrap();
+//! let out = Integrator::from_fn(2, bounds, |x| x[0] * x[1])
+//!     .unwrap()
+//!     .maxcalls(1 << 14)
+//!     .tolerance(1e-3)
+//!     .run()
+//!     .unwrap();
+//! println!("I = {} ± {}", out.integral, out.sigma);
+//! ```
+
+use super::grid_state::GridState;
+use super::integrand::IntegrandSpec;
+use super::observer::IterationEvent;
+use crate::coordinator::{
+    drive, escalate_native, integrate_native_core, DriveOutcome, IntegrationOutput, JobConfig,
+    PjrtBackend,
+};
+use crate::error::{Error, Result};
+use crate::grid::GridMode;
+use crate::integrands::IntegrandRef;
+use crate::runtime::{PjrtRuntime, Registry, DEFAULT_ARTIFACT_DIR};
+use crate::strat::Bounds;
+
+/// Which execution backend serves the job.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum BackendSpec {
+    /// The native Rust engine (always available).
+    Native,
+    /// The AOT Pallas artifacts through PJRT. Only registry integrands
+    /// are artifact-addressable; requires the `pjrt` cargo feature and
+    /// `make artifacts`.
+    Pjrt { artifacts_dir: String },
+}
+
+impl BackendSpec {
+    /// PJRT with the conventional `artifacts/` directory.
+    pub fn pjrt_default() -> BackendSpec {
+        BackendSpec::Pjrt {
+            artifacts_dir: DEFAULT_ARTIFACT_DIR.to_string(),
+        }
+    }
+}
+
+#[derive(Debug, Clone, Copy)]
+struct Escalation {
+    max_levels: usize,
+    factor: usize,
+}
+
+/// Loaded-once PJRT state, reused across `run()` calls so repeated
+/// runs (warm starts, benches) don't re-parse the manifest or rebuild
+/// the client; the runtime's own compile cache then makes artifact
+/// compilation once-per-name.
+struct PjrtState {
+    artifacts_dir: String,
+    registry: Registry,
+    runtime: PjrtRuntime,
+}
+
+/// Builder-style facade over the whole integration stack.
+///
+/// Construct from a registry name, an `IntegrandRef`, or a closure;
+/// chain configuration; `run()`. The adapted importance grid of the
+/// last run is exportable via [`Integrator::export_grid`] and feeds
+/// back in through [`Integrator::warm_start`].
+pub struct Integrator {
+    spec: IntegrandSpec,
+    cfg: JobConfig,
+    backend: BackendSpec,
+    escalation: Option<Escalation>,
+    warm: Option<GridState>,
+    observers: Vec<Box<dyn FnMut(&IterationEvent) + Send>>,
+    last_grid: Option<GridState>,
+    pjrt: Option<PjrtState>,
+}
+
+impl Integrator {
+    /// Integrate a user-supplied integrand handle.
+    pub fn new(f: IntegrandRef) -> Integrator {
+        Integrator::from_spec(IntegrandSpec::custom(f))
+    }
+
+    /// Integrate a closure over per-axis `bounds`.
+    pub fn from_fn<F>(dim: usize, bounds: Bounds, f: F) -> Result<Integrator>
+    where
+        F: Fn(&[f64]) -> f64 + Send + Sync + 'static,
+    {
+        let wrapped = super::integrand::FnIntegrand::new(dim, bounds, f)?;
+        Ok(Integrator::new(wrapped.into_ref()))
+    }
+
+    /// Integrate a registry integrand (name checked eagerly).
+    pub fn from_registry(name: &str, dim: usize) -> Result<Integrator> {
+        // Resolve once now so typos fail at build, not run, time.
+        crate::integrands::by_name(name, dim)?;
+        Ok(Integrator::from_spec(IntegrandSpec::registry(name, dim)))
+    }
+
+    /// Integrate an explicit spec (what the service queues).
+    pub fn from_spec(spec: IntegrandSpec) -> Integrator {
+        Integrator {
+            spec,
+            cfg: JobConfig::default(),
+            backend: BackendSpec::Native,
+            escalation: None,
+            warm: None,
+            observers: Vec::new(),
+            last_grid: None,
+            pjrt: None,
+        }
+    }
+
+    /// Evaluation budget per iteration.
+    pub fn maxcalls(mut self, calls: usize) -> Self {
+        self.cfg.maxcalls = calls;
+        self
+    }
+
+    /// Target relative error tau_rel.
+    pub fn tolerance(mut self, tau_rel: f64) -> Self {
+        self.cfg.tau_rel = tau_rel;
+        self
+    }
+
+    /// Total iteration cap.
+    pub fn max_iterations(mut self, itmax: usize) -> Self {
+        self.cfg.itmax = itmax;
+        self
+    }
+
+    /// Iterations with importance-grid adjustment.
+    pub fn adjust_iterations(mut self, ita: usize) -> Self {
+        self.cfg.ita = ita;
+        self
+    }
+
+    /// Warm-up iterations excluded from the weighted estimate.
+    pub fn skip_iterations(mut self, skip: usize) -> Self {
+        self.cfg.skip = skip;
+        self
+    }
+
+    /// Importance bins per axis.
+    pub fn bins_per_axis(mut self, nb: usize) -> Self {
+        self.cfg.nb = nb;
+        self
+    }
+
+    /// Grid programs / thread groups.
+    pub fn blocks(mut self, nblocks: usize) -> Self {
+        self.cfg.nblocks = nblocks;
+        self
+    }
+
+    /// RNG seed (runs are deterministic per seed).
+    pub fn seed(mut self, seed: u32) -> Self {
+        self.cfg.seed = seed;
+        self
+    }
+
+    /// Native-engine worker threads.
+    pub fn threads(mut self, threads: usize) -> Self {
+        self.cfg.threads = threads;
+        self
+    }
+
+    /// Per-axis (m-Cubes) or shared (m-Cubes1D) importance grid.
+    pub fn grid_mode(mut self, mode: GridMode) -> Self {
+        self.cfg.grid_mode = mode;
+        self
+    }
+
+    /// Replace the whole job configuration at once.
+    pub fn config(mut self, cfg: JobConfig) -> Self {
+        self.cfg = cfg;
+        self
+    }
+
+    /// Select the execution backend (default: native).
+    pub fn backend(mut self, backend: BackendSpec) -> Self {
+        self.backend = backend;
+        self
+    }
+
+    /// Escalate the per-iteration budget x`factor` up to `max_levels`
+    /// times until the tolerance is met, carrying the adapted grid
+    /// across levels (native backend only).
+    pub fn escalate(mut self, max_levels: usize, factor: usize) -> Self {
+        self.escalation = Some(Escalation { max_levels, factor });
+        self
+    }
+
+    /// Seed the run with an adapted grid from a previous run — skips
+    /// the importance-grid warm-up for repeated similar integrals.
+    pub fn warm_start(mut self, grid: GridState) -> Self {
+        self.warm = Some(grid);
+        self
+    }
+
+    /// Register a per-iteration observer. Multiple observers fire in
+    /// registration order.
+    pub fn observe<F>(mut self, f: F) -> Self
+    where
+        F: FnMut(&IterationEvent) + Send + 'static,
+    {
+        self.observers.push(Box::new(f));
+        self
+    }
+
+    /// The current job configuration.
+    pub fn job_config(&self) -> &JobConfig {
+        &self.cfg
+    }
+
+    /// The integrand spec this integrator runs.
+    pub fn spec(&self) -> &IntegrandSpec {
+        &self.spec
+    }
+
+    /// Run and return the integration output.
+    pub fn run(&mut self) -> Result<IntegrationOutput> {
+        self.run_outcome().map(|o| o.output)
+    }
+
+    /// Run and return both the output and the adapted grid.
+    pub fn run_outcome(&mut self) -> Result<DriveOutcome> {
+        self.cfg.validate()?;
+        // Disjoint field borrows: the fan-out closure mutably borrows
+        // `observers` in place (panic-safe — nothing is taken out of
+        // self) while dispatch reads the other fields.
+        let Integrator {
+            spec,
+            cfg,
+            backend,
+            escalation,
+            warm,
+            observers,
+            last_grid,
+            pjrt,
+        } = self;
+        let mut fan;
+        let obs: Option<&mut dyn FnMut(&IterationEvent)> = if observers.is_empty() {
+            None
+        } else {
+            fan = |ev: &IterationEvent| {
+                for o in observers.iter_mut() {
+                    o(ev);
+                }
+            };
+            Some(&mut fan)
+        };
+        let outcome = Self::dispatch(spec, cfg, backend, *escalation, warm.as_ref(), pjrt, obs)?;
+        *last_grid = Some(outcome.grid.clone());
+        Ok(outcome)
+    }
+
+    /// The adapted grid left by the most recent `run`.
+    pub fn grid(&self) -> Option<&GridState> {
+        self.last_grid.as_ref()
+    }
+
+    /// Clone out the adapted grid of the most recent `run` — feed it to
+    /// another integrator's [`Integrator::warm_start`].
+    pub fn export_grid(&self) -> Option<GridState> {
+        self.last_grid.clone()
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn dispatch(
+        spec: &IntegrandSpec,
+        cfg: &JobConfig,
+        backend_spec: &BackendSpec,
+        escalation: Option<Escalation>,
+        warm: Option<&GridState>,
+        pjrt: &mut Option<PjrtState>,
+        observer: Option<&mut dyn FnMut(&IterationEvent)>,
+    ) -> Result<DriveOutcome> {
+        match backend_spec {
+            BackendSpec::Native => {
+                let f = spec.resolve()?;
+                match escalation {
+                    Some(esc) => {
+                        escalate_native(&*f, cfg, esc.max_levels, esc.factor, warm, observer)
+                    }
+                    None => integrate_native_core(&*f, cfg, warm, observer),
+                }
+            }
+            BackendSpec::Pjrt { artifacts_dir } => {
+                if escalation.is_some() {
+                    return Err(Error::Config(
+                        "escalation is only supported on the native backend \
+                         (PJRT artifacts have a fixed maxcalls)"
+                            .into(),
+                    ));
+                }
+                let name = spec.registry_name().ok_or_else(|| {
+                    Error::Config(
+                        "the PJRT backend requires a registry integrand \
+                         (artifacts are compiled per registry name); use the \
+                         native backend for closures"
+                            .into(),
+                    )
+                })?;
+                // Load the registry + PJRT client once per integrator;
+                // the runtime's compile cache then makes repeated runs
+                // (warm starts, benches) compile each artifact once.
+                let stale = pjrt
+                    .as_ref()
+                    .map(|s| s.artifacts_dir != *artifacts_dir)
+                    .unwrap_or(true);
+                if stale {
+                    *pjrt = Some(PjrtState {
+                        artifacts_dir: artifacts_dir.clone(),
+                        registry: Registry::load(artifacts_dir)?,
+                        runtime: PjrtRuntime::cpu()?,
+                    });
+                }
+                let state = pjrt.as_ref().expect("pjrt state just ensured");
+                let backend =
+                    PjrtBackend::load(&state.runtime, &state.registry, name, cfg.maxcalls)?;
+                // Adopt the artifact's compiled layout; the rest of the
+                // config (tolerance, iterations, seed) applies as-is.
+                let meta = backend.meta();
+                let mut run_cfg = cfg.clone();
+                run_cfg.maxcalls = meta.maxcalls;
+                run_cfg.nb = meta.nb;
+                run_cfg.nblocks = meta.nblocks;
+                drive(&backend, &run_cfg, warm, observer)
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::api::FnIntegrand;
+
+    #[test]
+    fn builder_round_trips_config() {
+        let intg = Integrator::from_registry("f4", 5)
+            .unwrap()
+            .maxcalls(4096)
+            .tolerance(5e-3)
+            .max_iterations(9)
+            .adjust_iterations(6)
+            .skip_iterations(1)
+            .bins_per_axis(32)
+            .blocks(4)
+            .seed(7)
+            .threads(2)
+            .grid_mode(GridMode::Shared1D);
+        let c = intg.job_config();
+        assert_eq!(c.maxcalls, 4096);
+        assert_eq!(c.tau_rel, 5e-3);
+        assert_eq!(c.itmax, 9);
+        assert_eq!(c.ita, 6);
+        assert_eq!(c.skip, 1);
+        assert_eq!(c.nb, 32);
+        assert_eq!(c.nblocks, 4);
+        assert_eq!(c.seed, 7);
+        assert_eq!(c.threads, 2);
+        assert_eq!(c.grid_mode, GridMode::Shared1D);
+        assert_eq!(intg.spec().label(), "f4");
+    }
+
+    #[test]
+    fn unknown_registry_name_fails_at_build() {
+        assert!(Integrator::from_registry("nope", 3).is_err());
+    }
+
+    #[test]
+    fn runs_registry_integrand() {
+        let out = Integrator::from_registry("f5", 4)
+            .unwrap()
+            .maxcalls(1 << 13)
+            .tolerance(1e-3)
+            .seed(11)
+            .run()
+            .unwrap();
+        assert!(out.converged, "{out:?}");
+        assert_eq!(out.backend, "native");
+    }
+
+    #[test]
+    fn closure_on_pjrt_backend_is_rejected() {
+        let f = FnIntegrand::unit(2, |x: &[f64]| x[0] + x[1]).into_ref();
+        let err = Integrator::new(f)
+            .backend(BackendSpec::pjrt_default())
+            .run()
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("registry integrand"), "{err}");
+    }
+
+    #[test]
+    fn escalation_on_pjrt_backend_is_rejected() {
+        let err = Integrator::from_registry("f4", 5)
+            .unwrap()
+            .backend(BackendSpec::pjrt_default())
+            .escalate(2, 4)
+            .run()
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("escalation"), "{err}");
+    }
+
+    #[test]
+    fn invalid_config_rejected_before_running() {
+        let err = Integrator::from_registry("f4", 5)
+            .unwrap()
+            .maxcalls(0)
+            .run()
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("maxcalls"), "{err}");
+    }
+
+    #[test]
+    fn observers_fire_and_grid_exports() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        use std::sync::Arc;
+        let count = Arc::new(AtomicUsize::new(0));
+        let c2 = Arc::clone(&count);
+        let mut intg = Integrator::from_registry("f3", 3)
+            .unwrap()
+            .maxcalls(1 << 12)
+            .tolerance(1e-3)
+            .observe(move |_ev| {
+                c2.fetch_add(1, Ordering::Relaxed);
+            });
+        assert!(intg.grid().is_none());
+        let out = intg.run().unwrap();
+        assert_eq!(count.load(Ordering::Relaxed), out.iterations);
+        let grid = intg.export_grid().expect("grid after run");
+        assert_eq!(grid.d(), 3);
+        assert_eq!(grid.nb(), intg.job_config().nb);
+        // Observers survive across runs.
+        let out2 = intg.run().unwrap();
+        assert_eq!(
+            count.load(Ordering::Relaxed),
+            out.iterations + out2.iterations
+        );
+    }
+}

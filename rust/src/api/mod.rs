@@ -1,0 +1,35 @@
+//! The unified integration facade.
+//!
+//! One entry point — [`Integrator`] — subsumes the seed's scattered
+//! free functions (`integrate_native`, `integrate_native_adaptive`,
+//! `run_driver`, `run_driver_traced`), which survive only as deprecated
+//! shims. The facade adds what they couldn't express:
+//!
+//! * **Closure integrands** — [`FnIntegrand`] adapts any
+//!   `Fn(&[f64]) -> f64` into the [`crate::integrands::Integrand`]
+//!   trait; no registry entry needed.
+//! * **Per-axis bounds** — [`crate::strat::Bounds`] generalizes the
+//!   uniform `[lo, hi]^d` box to an arbitrary axis-aligned box, mapped
+//!   affinely from the unit hypercube inside the engine hot loop.
+//! * **Grid warm-start** — [`GridState`] exports the adapted VEGAS
+//!   importance grid from one run and seeds the next (runs, escalation
+//!   levels, service jobs), skipping the adjust phase's warm-up.
+//! * **Observer hooks** — [`IterationEvent`] callbacks replace the
+//!   ad-hoc `DriverOutput` trace with structured per-iteration
+//!   telemetry.
+//! * **Backend selection** — [`BackendSpec`] picks the native engine
+//!   or the AOT-Pallas/PJRT artifact runtime behind the same builder.
+
+mod grid_state;
+mod integrand;
+mod integrator;
+mod observer;
+
+pub use grid_state::GridState;
+pub use integrand::{FnIntegrand, IntegrandSpec};
+pub use integrator::{BackendSpec, Integrator};
+pub use observer::IterationEvent;
+
+// Re-export the bounds type here too: it is the facade's vocabulary for
+// "where to integrate", even though it lives with the layout math.
+pub use crate::strat::Bounds;

@@ -1,0 +1,42 @@
+//! Per-iteration observer hooks — the structured replacement for the
+//! ad-hoc `DriverOutput` trace.
+//!
+//! The driver invokes the observer once per iteration, after grid
+//! adjustment and the convergence decision, so the event shows both the
+//! raw iteration estimate and the running weighted combination. Cheap
+//! by construction: the event borrows the live grid instead of cloning
+//! it; observers that want history copy what they need.
+
+use crate::estimator::IterationResult;
+use crate::grid::Bins;
+
+/// Snapshot of one driver iteration, delivered to observers.
+#[derive(Debug, Clone, Copy)]
+pub struct IterationEvent<'a> {
+    /// 0-based iteration index. When escalation is active the index is
+    /// cumulative across levels.
+    pub iteration: usize,
+    /// Whether this iteration accumulated the v^2 histogram and
+    /// adjusted the grid (the two-phase split of Algorithm 2).
+    pub adjusting: bool,
+    /// Raw estimate of this iteration alone.
+    pub estimate: IterationResult,
+    /// Running weighted integral. While the estimator is empty — the
+    /// `skip` warm-up iterations, or right after a chi^2 reset — the
+    /// running fields carry their empty-estimator sentinels:
+    /// `integral` 0.0, `sigma`/`rel_err` infinity, `chi2_dof` 0.0.
+    pub integral: f64,
+    /// Running combined sigma (infinite until the first fold).
+    pub sigma: f64,
+    /// Running chi^2 per degree of freedom.
+    pub chi2_dof: f64,
+    /// Running relative error |sigma / integral| (infinite until the
+    /// first fold).
+    pub rel_err: f64,
+    /// The chi^2 guard fired and the estimator was reset this iteration.
+    pub estimator_reset: bool,
+    /// Convergence was declared on this iteration (it is the last one).
+    pub converged: bool,
+    /// The importance grid after this iteration's adjustment.
+    pub grid: &'a Bins,
+}

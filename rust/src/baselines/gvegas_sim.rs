@@ -77,8 +77,11 @@ pub fn gvegas_integrate(f: &dyn Integrand, cfg: &GvegasConfig) -> BaselineResult
     // so the *total* allowed calls matches the uncapped configuration.
     let per_iter_calls = cfg.maxcalls.min(cfg.launch_cap);
     let layout = Layout::compute(d, per_iter_calls, cfg.nb, 1).expect("layout");
-    let (lo, hi) = (f.lo(), f.hi());
-    let vol = (hi - lo).powi(d as i32);
+    // Per-axis bounds, same affine map as the native engine.
+    let bounds = f.bounds();
+    let mut lo_ax = [0.0f64; 10];
+    let mut span_ax = [0.0f64; 10];
+    let vol = bounds.unpack(&mut lo_ax, &mut span_ax);
     let nb = cfg.nb;
 
     let mut bins = Bins::uniform(d, nb);
@@ -137,7 +140,7 @@ pub fn gvegas_integrate(f: &dyn Integrand, cfg: &GvegasConfig) -> BaselineResult
                             let w = bins.axis(i)[b_] - left;
                             let xt = left + (loc - b_ as f64) * w;
                             jac *= nb as f64 * w;
-                            x[i] = lo + xt * (hi - lo);
+                            x[i] = lo_ax[i] + xt * span_ax[i];
                             rec.bins[i] = b_ as u16;
                         }
                         rec.v = f.eval(&x[..d]) * jac;

@@ -125,12 +125,13 @@ impl<'a> MiserState<'a> {
     }
 }
 
-/// Run MISER over the integrand's box.
+/// Run MISER over the integrand's (per-axis) box.
 pub fn miser_integrate(f: &dyn Integrand, cfg: &MiserConfig) -> BaselineResult {
     let t0 = Instant::now();
     let d = f.dim();
-    let mut lo = vec![f.lo(); d];
-    let mut hi = vec![f.hi(); d];
+    let bounds = f.bounds();
+    let mut lo: Vec<f64> = (0..d).map(|i| bounds.lo(i)).collect();
+    let mut hi: Vec<f64> = (0..d).map(|i| bounds.hi(i)).collect();
     let mut st = MiserState {
         f,
         seed: cfg.seed,

@@ -20,21 +20,19 @@ impl Default for PlainMcConfig {
     }
 }
 
-/// One-shot plain MC estimate over the integrand's box.
+/// One-shot plain MC estimate over the integrand's (per-axis) box.
 pub fn plain_mc_integrate(f: &dyn Integrand, cfg: &PlainMcConfig) -> BaselineResult {
     let t0 = Instant::now();
     let d = f.dim();
-    let (lo, hi) = (f.lo(), f.hi());
-    let vol = (hi - lo).powi(d as i32);
+    let bounds = f.bounds();
+    let vol = bounds.volume();
     let mut x = vec![0.0f64; d];
     let mut u = vec![0.0f64; d];
     let mut s1 = 0.0;
     let mut s2 = 0.0;
     for s in 0..cfg.calls {
         uniforms_into(s as u32, 0, cfg.seed, &mut u);
-        for i in 0..d {
-            x[i] = lo + u[i] * (hi - lo);
-        }
+        bounds.map_unit(&u, &mut x);
         let v = f.eval(&x) * vol;
         s1 += v;
         s2 += v * v;

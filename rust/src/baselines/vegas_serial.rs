@@ -6,7 +6,7 @@
 //! accidentally inheriting coordinator parallelism.
 
 use super::BaselineResult;
-use crate::coordinator::{integrate_native, JobConfig};
+use crate::coordinator::{integrate_native_core, JobConfig};
 use crate::integrands::Integrand;
 
 /// Run serial VEGAS to `tau_rel` with the given per-iteration budget.
@@ -27,7 +27,7 @@ pub fn vegas_serial_integrate(
         threads: 1, // serial by definition
         ..Default::default()
     };
-    match integrate_native(f, &cfg) {
+    match integrate_native_core(f, &cfg, None, None).map(|o| o.output) {
         Ok(o) => BaselineResult {
             integral: o.integral,
             sigma: o.sigma,

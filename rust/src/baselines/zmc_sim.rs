@@ -119,9 +119,10 @@ pub fn zmc_integrate(f: &dyn Integrand, cfg: &ZmcConfig) -> BaselineResult {
         calls: 0,
     };
 
+    let bounds = f.bounds();
     let root = Block {
-        lo: vec![f.lo(); d],
-        hi: vec![f.hi(); d],
+        lo: (0..d).map(|i| bounds.lo(i)).collect(),
+        hi: (0..d).map(|i| bounds.hi(i)).collect(),
         integral: 0.0,
         variance: 0.0,
     };

@@ -12,15 +12,15 @@ use crate::estimator::IterationResult;
 use crate::grid::Bins;
 use crate::integrands::Integrand;
 use crate::runtime::{ArtifactMeta, PjrtRuntime, Registry, VSampleExecutable};
-use crate::strat::Layout;
+use crate::strat::{Bounds, Layout};
 use std::sync::Arc;
 
 /// One V-Sample pass provider.
 pub trait VSampleBackend {
     /// Stratification layout (fixed per backend instance).
     fn layout(&self) -> Layout;
-    /// Integration-box bounds (lo, hi), same on every axis.
-    fn bounds(&self) -> (f64, f64);
+    /// Per-axis integration-box bounds.
+    fn bounds(&self) -> Bounds;
     /// Backend label for reports ("pjrt" / "native").
     fn name(&self) -> &'static str;
     /// Run one iteration; histogram returned only when `adjust`.
@@ -55,8 +55,8 @@ impl VSampleBackend for NativeBackend {
         self.layout
     }
 
-    fn bounds(&self) -> (f64, f64) {
-        (self.integrand.lo(), self.integrand.hi())
+    fn bounds(&self) -> Bounds {
+        self.integrand.bounds()
     }
 
     fn name(&self) -> &'static str {
@@ -127,8 +127,9 @@ impl VSampleBackend for PjrtBackend {
         self.adj.meta().layout()
     }
 
-    fn bounds(&self) -> (f64, f64) {
-        (self.adj.meta().lo, self.adj.meta().hi)
+    fn bounds(&self) -> Bounds {
+        let meta = self.adj.meta();
+        Bounds::uniform(meta.dim, meta.lo, meta.hi)
     }
 
     fn name(&self) -> &'static str {

@@ -1,7 +1,16 @@
 //! The m-Cubes iteration driver (Algorithm 2): two-phase loop with bin
 //! adjustment, weighted estimates, chi^2 guard, and convergence checks.
+//!
+//! `drive` is the single driver core. It accepts an optional warm-start
+//! grid (`api::GridState`) and an optional per-iteration observer
+//! (`api::IterationEvent`), and returns both the integration output and
+//! the final adapted grid. The free functions the seed shipped
+//! (`run_driver`, `run_driver_traced`, `integrate_native`,
+//! `integrate_native_adaptive`) remain as deprecated shims over it;
+//! new code goes through `api::Integrator`.
 
 use super::backend::VSampleBackend;
+use crate::api::{GridState, IterationEvent};
 use crate::error::{Error, Result};
 use crate::estimator::{Convergence, WeightedEstimator};
 use crate::grid::{Bins, GridMode};
@@ -60,6 +69,24 @@ impl Default for JobConfig {
 
 impl JobConfig {
     pub fn validate(&self) -> Result<()> {
+        if self.maxcalls < 4 {
+            return Err(Error::Config(format!(
+                "maxcalls must be >= 4 (the layout needs at least 2 samples \
+                 in at least 1 cube), got {}",
+                self.maxcalls
+            )));
+        }
+        if self.nb < 2 {
+            return Err(Error::Config(format!(
+                "nb (importance bins per axis) must be >= 2, got {}",
+                self.nb
+            )));
+        }
+        if self.nblocks == 0 {
+            return Err(Error::Config(
+                "nblocks (grid programs) must be >= 1, got 0".into(),
+            ));
+        }
         if self.itmax == 0 {
             return Err(Error::Config("itmax must be >= 1".into()));
         }
@@ -106,30 +133,57 @@ pub struct IntegrationOutput {
     pub backend: &'static str,
 }
 
-/// Detailed per-iteration trace (used by benches/ablations).
+/// Detailed per-iteration trace (legacy; superseded by observers on
+/// `drive` / `api::Integrator::observe`).
 #[derive(Debug, Clone, Default)]
 pub struct DriverOutput {
     pub output: Option<IntegrationOutput>,
     pub iteration_estimates: Vec<(f64, f64)>, // (I_j, sigma_j)
 }
 
-/// Run the two-phase m-Cubes loop on any backend.
-pub fn run_driver(backend: &dyn VSampleBackend, cfg: &JobConfig) -> Result<IntegrationOutput> {
-    let (out, _) = run_driver_traced(backend, cfg)?;
-    Ok(out)
+/// `drive` result: the integration output plus the adapted grid, ready
+/// to warm-start a later run.
+#[derive(Debug, Clone)]
+pub struct DriveOutcome {
+    pub output: IntegrationOutput,
+    pub grid: GridState,
 }
 
-/// Like `run_driver` but also returns the per-iteration estimates.
-pub fn run_driver_traced(
+/// Run the two-phase m-Cubes loop on any backend.
+///
+/// * `warm_start` — adapted grid from a previous run. Must match the
+///   backend layout's `(d, nb)` and `cfg.grid_mode` — a mismatch is a
+///   config error, never a silent override. `None` starts from a
+///   uniform grid.
+/// * `observer` — called once per iteration with an
+///   [`IterationEvent`] after grid adjustment and the convergence
+///   decision.
+pub fn drive(
     backend: &dyn VSampleBackend,
     cfg: &JobConfig,
-) -> Result<(IntegrationOutput, DriverOutput)> {
+    warm_start: Option<&GridState>,
+    mut observer: Option<&mut dyn FnMut(&IterationEvent)>,
+) -> Result<DriveOutcome> {
     cfg.validate()?;
     let layout = backend.layout();
     let conv = cfg.convergence();
-    let mut bins = Bins::uniform_mode(layout.d, layout.nb, cfg.grid_mode);
+    let mut bins = match warm_start {
+        Some(gs) => {
+            gs.compatible(layout.d, layout.nb)?;
+            if gs.mode() != cfg.grid_mode {
+                return Err(Error::Config(format!(
+                    "warm-start grid mode {:?} != configured grid mode {:?}; \
+                     adapt the donor in the same mode (or match grid_mode to \
+                     the donor)",
+                    gs.mode(),
+                    cfg.grid_mode
+                )));
+            }
+            gs.bins().clone()
+        }
+        None => Bins::uniform_mode(layout.d, layout.nb, cfg.grid_mode),
+    };
     let mut est = WeightedEstimator::new();
-    let mut trace = DriverOutput::default();
 
     let t_start = Instant::now();
     let mut kernel_time = 0.0f64;
@@ -148,10 +202,10 @@ pub fn run_driver_traced(
         if it >= cfg.skip {
             est.push(r);
         }
-        trace.iteration_estimates.push((r.integral, r.variance.sqrt()));
 
         // Grid refinement happens before the convergence decision so a
         // converged final iteration still leaves an adapted grid behind.
+        let mut estimator_reset = false;
         if adjust {
             if let Some(c) = contrib {
                 bins.adjust(&c);
@@ -163,11 +217,30 @@ pub fn run_driver_traced(
                 // Importance grid was still moving: drop the stale
                 // estimates, keep the (better) grid.
                 est.reset();
+                estimator_reset = true;
             }
         }
 
         if conv.satisfied(&est) {
             converged = true;
+        }
+
+        if let Some(cb) = observer.as_mut() {
+            cb(&IterationEvent {
+                iteration: it,
+                adjusting: adjust,
+                estimate: r,
+                integral: est.integral(),
+                sigma: est.sigma(),
+                chi2_dof: est.chi2_dof(),
+                rel_err: est.rel_err(),
+                estimator_reset,
+                converged,
+                grid: &bins,
+            });
+        }
+
+        if converged {
             break;
         }
     }
@@ -184,93 +257,186 @@ pub fn run_driver_traced(
         kernel_time,
         backend: backend.name(),
     };
-    trace.output = Some(output.clone());
-    Ok((output, trace))
+    Ok(DriveOutcome {
+        output,
+        grid: GridState::from_bins(bins),
+    })
 }
 
-/// Convenience: integrate `f` with the native engine.
-pub fn integrate_native(f: &dyn Integrand, cfg: &JobConfig) -> Result<IntegrationOutput> {
+/// Thin adapter: run a `&dyn Integrand` on the native engine without
+/// requiring an `Arc`.
+struct BorrowedNative<'a> {
+    f: &'a dyn Integrand,
+    layout: Layout,
+    threads: usize,
+}
+
+impl<'a> VSampleBackend for BorrowedNative<'a> {
+    fn layout(&self) -> Layout {
+        self.layout
+    }
+
+    fn bounds(&self) -> crate::strat::Bounds {
+        self.f.bounds()
+    }
+
+    fn name(&self) -> &'static str {
+        "native"
+    }
+
+    fn run(
+        &self,
+        bins: &Bins,
+        seed: u32,
+        iteration: u32,
+        adjust: bool,
+    ) -> Result<(crate::estimator::IterationResult, Option<Vec<f64>>)> {
+        let opts = crate::engine::VSampleOpts {
+            seed,
+            iteration,
+            adjust,
+            threads: self.threads,
+        };
+        Ok(crate::engine::NativeEngine.vsample(self.f, &self.layout, bins, &opts))
+    }
+}
+
+/// Native-engine drive over a borrowed integrand — the shared core the
+/// facade, the service, and the deprecated shims all call.
+pub(crate) fn integrate_native_core(
+    f: &dyn Integrand,
+    cfg: &JobConfig,
+    warm_start: Option<&GridState>,
+    observer: Option<&mut dyn FnMut(&IterationEvent)>,
+) -> Result<DriveOutcome> {
+    cfg.validate()?;
     let layout = Layout::compute(f.dim(), cfg.maxcalls, cfg.nb, cfg.nblocks)?;
-    // NativeBackend holds an Arc; wrap via a thin adapter around &dyn.
-    struct Borrowed<'a> {
-        f: &'a dyn Integrand,
-        layout: Layout,
-        threads: usize,
-    }
-    impl<'a> VSampleBackend for Borrowed<'a> {
-        fn layout(&self) -> Layout {
-            self.layout
-        }
-        fn bounds(&self) -> (f64, f64) {
-            (self.f.lo(), self.f.hi())
-        }
-        fn name(&self) -> &'static str {
-            "native"
-        }
-        fn run(
-            &self,
-            bins: &Bins,
-            seed: u32,
-            iteration: u32,
-            adjust: bool,
-        ) -> Result<(crate::estimator::IterationResult, Option<Vec<f64>>)> {
-            let opts = crate::engine::VSampleOpts {
-                seed,
-                iteration,
-                adjust,
-                threads: self.threads,
-            };
-            Ok(crate::engine::NativeEngine.vsample(self.f, &self.layout, bins, &opts))
-        }
-    }
-    let backend = Borrowed {
+    let backend = BorrowedNative {
         f,
         layout,
         threads: cfg.threads,
     };
-    run_driver(&backend, cfg)
+    drive(&backend, cfg, warm_start, observer)
 }
 
-/// Escalating-precision integration: runs the driver at increasing call
-/// budgets (x`escalation_factor` per step) until `tau_rel` is met,
-/// carrying the adapted grid across levels — the strategy behind the
-/// paper's high-precision runs (Fig. 1/2).
+/// Escalating-precision native integration: runs the driver at
+/// increasing call budgets (x`factor` per level) until `tau_rel` is
+/// met, genuinely carrying the adapted grid across levels — the
+/// strategy behind the paper's high-precision runs (Fig. 1/2).
+/// Iteration indices in observer events are cumulative across levels.
+pub(crate) fn escalate_native(
+    f: &dyn Integrand,
+    base: &JobConfig,
+    max_escalations: usize,
+    factor: usize,
+    warm_start: Option<&GridState>,
+    mut observer: Option<&mut dyn FnMut(&IterationEvent)>,
+) -> Result<DriveOutcome> {
+    if factor < 2 {
+        return Err(Error::Config(format!(
+            "escalation factor must be >= 2, got {factor}"
+        )));
+    }
+    let mut cfg = base.clone();
+    let mut grid: Option<GridState> = warm_start.cloned();
+    let mut last: Option<DriveOutcome> = None;
+    let mut total_time = 0.0;
+    let mut kernel_time = 0.0;
+    let mut calls_used = 0;
+    let mut iterations = 0;
+    for level in 0..=max_escalations {
+        let outcome = {
+            let base_it = iterations;
+            match observer.as_deref_mut() {
+                Some(cb) => {
+                    let mut shifted = |ev: &IterationEvent| {
+                        cb(&IterationEvent {
+                            iteration: base_it + ev.iteration,
+                            ..*ev
+                        })
+                    };
+                    integrate_native_core(f, &cfg, grid.as_ref(), Some(&mut shifted))?
+                }
+                None => integrate_native_core(f, &cfg, grid.as_ref(), None)?,
+            }
+        };
+        total_time += outcome.output.total_time;
+        kernel_time += outcome.output.kernel_time;
+        calls_used += outcome.output.calls_used;
+        iterations += outcome.output.iterations;
+        let converged = outcome.output.converged;
+        grid = Some(outcome.grid.clone());
+        last = Some(DriveOutcome {
+            output: IntegrationOutput {
+                total_time,
+                kernel_time,
+                calls_used,
+                iterations,
+                ..outcome.output
+            },
+            grid: outcome.grid,
+        });
+        if converged {
+            break;
+        }
+        if level < max_escalations {
+            cfg.maxcalls *= factor;
+            // Fresh seed per level so escalations resample.
+            cfg.seed = cfg.seed.wrapping_add(0x9E37_79B9);
+        }
+    }
+    last.ok_or_else(|| Error::Config("no escalation levels ran".into()))
+}
+
+/// Run the two-phase m-Cubes loop on any backend (cold start, no
+/// observers).
+#[deprecated(
+    since = "0.2.0",
+    note = "use `api::Integrator`, or `coordinator::drive` for raw backends"
+)]
+pub fn run_driver(backend: &dyn VSampleBackend, cfg: &JobConfig) -> Result<IntegrationOutput> {
+    drive(backend, cfg, None, None).map(|o| o.output)
+}
+
+/// Like `run_driver` but also returns the per-iteration estimates.
+#[deprecated(
+    since = "0.2.0",
+    note = "use an observer on `api::Integrator::observe` (or `drive`) instead"
+)]
+pub fn run_driver_traced(
+    backend: &dyn VSampleBackend,
+    cfg: &JobConfig,
+) -> Result<(IntegrationOutput, DriverOutput)> {
+    let mut estimates: Vec<(f64, f64)> = Vec::new();
+    let mut cb = |ev: &IterationEvent| {
+        estimates.push((ev.estimate.integral, ev.estimate.variance.sqrt()));
+    };
+    let outcome = drive(backend, cfg, None, Some(&mut cb))?;
+    let trace = DriverOutput {
+        output: Some(outcome.output.clone()),
+        iteration_estimates: estimates,
+    };
+    Ok((outcome.output, trace))
+}
+
+/// Convenience: integrate `f` with the native engine.
+#[deprecated(since = "0.2.0", note = "use `api::Integrator::new(f).run()` instead")]
+pub fn integrate_native(f: &dyn Integrand, cfg: &JobConfig) -> Result<IntegrationOutput> {
+    integrate_native_core(f, cfg, None, None).map(|o| o.output)
+}
+
+/// Escalating-precision integration (see `escalate_native`).
+#[deprecated(
+    since = "0.2.0",
+    note = "use `api::Integrator::new(f).escalate(levels, factor).run()` instead"
+)]
 pub fn integrate_native_adaptive(
     f: &dyn Integrand,
     base: &JobConfig,
     max_escalations: usize,
     escalation_factor: usize,
 ) -> Result<IntegrationOutput> {
-    let mut cfg = base.clone();
-    let mut last: Option<IntegrationOutput> = None;
-    let mut total_time = 0.0;
-    let mut kernel_time = 0.0;
-    let mut calls_used = 0;
-    let mut iterations = 0;
-    for level in 0..=max_escalations {
-        let out = integrate_native(f, &cfg)?;
-        total_time += out.total_time;
-        kernel_time += out.kernel_time;
-        calls_used += out.calls_used;
-        iterations += out.iterations;
-        let converged = out.converged;
-        last = Some(IntegrationOutput {
-            total_time,
-            kernel_time,
-            calls_used,
-            iterations,
-            ..out
-        });
-        if converged {
-            break;
-        }
-        if level < max_escalations {
-            cfg.maxcalls *= escalation_factor;
-            // Fresh seed per level so escalations resample.
-            cfg.seed = cfg.seed.wrapping_add(0x9E37_79B9);
-        }
-    }
-    last.ok_or_else(|| Error::Config("no escalation levels ran".into()))
+    escalate_native(f, base, max_escalations, escalation_factor, None, None).map(|o| o.output)
 }
 
 #[cfg(test)]
@@ -292,11 +458,15 @@ mod tests {
         }
     }
 
+    fn integrate(f: &dyn Integrand, c: &JobConfig) -> Result<IntegrationOutput> {
+        integrate_native_core(f, c, None, None).map(|o| o.output)
+    }
+
     #[test]
     fn converges_on_smooth_integrands() {
         for (name, d, calls) in [("f5", 8, 1 << 15), ("f3", 3, 1 << 14), ("f2", 6, 1 << 15)] {
             let f = by_name(name, d).unwrap();
-            let out = integrate_native(&*f, &cfg(calls, 1e-3)).unwrap();
+            let out = integrate(&*f, &cfg(calls, 1e-3)).unwrap();
             assert!(out.converged, "{name} did not converge: {out:?}");
             let truth = f.true_value().unwrap();
             let rel = ((out.integral - truth) / truth).abs();
@@ -310,7 +480,7 @@ mod tests {
     fn error_estimate_is_honest() {
         // |estimate - truth| should usually be within ~3 claimed sigmas.
         let f = by_name("f4", 5).unwrap();
-        let out = integrate_native(&*f, &cfg(1 << 15, 1e-3)).unwrap();
+        let out = integrate(&*f, &cfg(1 << 15, 1e-3)).unwrap();
         let truth = f.true_value().unwrap();
         assert!(
             (out.integral - truth).abs() < 4.0 * out.sigma,
@@ -327,10 +497,13 @@ mod tests {
         c.itmax = 6;
         c.ita = 3;
         c.skip = 0;
-        let out = integrate_native(&*f, &c).unwrap();
+        let out = integrate(&*f, &c).unwrap();
         assert!(!out.converged);
         assert_eq!(out.iterations, 6);
-        assert_eq!(out.calls_used, 6 * Layout::compute(4, 1 << 12, 50, 8).unwrap().calls());
+        assert_eq!(
+            out.calls_used,
+            6 * Layout::compute(4, 1 << 12, 50, 8).unwrap().calls()
+        );
     }
 
     #[test]
@@ -339,11 +512,49 @@ mod tests {
         let mut c = cfg(1 << 12, 1e-3);
         c.ita = 99;
         c.itmax = 5;
-        assert!(integrate_native(&*f, &c).is_err());
+        assert!(integrate(&*f, &c).is_err());
         let mut c2 = cfg(1 << 12, 1e-3);
         c2.skip = 20;
         c2.itmax = 10;
-        assert!(integrate_native(&*f, &c2).is_err());
+        assert!(integrate(&*f, &c2).is_err());
+    }
+
+    #[test]
+    fn validate_rejects_zero_budget_and_shape() {
+        assert!(JobConfig::default().validate().is_ok());
+
+        let zero_calls = JobConfig {
+            maxcalls: 0,
+            ..Default::default()
+        };
+        let err = zero_calls.validate().unwrap_err().to_string();
+        assert!(err.contains("maxcalls"), "{err}");
+        assert!(JobConfig {
+            maxcalls: 3,
+            ..Default::default()
+        }
+        .validate()
+        .is_err());
+
+        let zero_nb = JobConfig {
+            nb: 0,
+            ..Default::default()
+        };
+        let err = zero_nb.validate().unwrap_err().to_string();
+        assert!(err.contains("nb"), "{err}");
+        assert!(JobConfig {
+            nb: 1,
+            ..Default::default()
+        }
+        .validate()
+        .is_err());
+
+        let zero_blocks = JobConfig {
+            nblocks: 0,
+            ..Default::default()
+        };
+        let err = zero_blocks.validate().unwrap_err().to_string();
+        assert!(err.contains("nblocks"), "{err}");
     }
 
     #[test]
@@ -352,7 +563,7 @@ mod tests {
         let mut base = cfg(1 << 12, 1e-3);
         base.itmax = 10;
         base.ita = 8;
-        let out = integrate_native_adaptive(&*f, &base, 4, 4).unwrap();
+        let out = escalate_native(&*f, &base, 4, 4, None, None).unwrap().output;
         assert!(out.converged, "{out:?}");
         let truth = f.true_value().unwrap();
         let rel = ((out.integral - truth) / truth).abs();
@@ -365,7 +576,7 @@ mod tests {
         let mut c = cfg(1 << 15, 1e-3);
         c.itmax = 20;
         c.grid_mode = GridMode::Shared1D;
-        let out = integrate_native(&*f, &c).unwrap();
+        let out = integrate(&*f, &c).unwrap();
         assert!(out.converged, "{out:?}");
         let truth = f.true_value().unwrap();
         assert!(((out.integral - truth) / truth).abs() < 5e-3);
@@ -374,9 +585,77 @@ mod tests {
     #[test]
     fn seed_reproducibility() {
         let f = by_name("f3", 3).unwrap();
-        let a = integrate_native(&*f, &cfg(1 << 13, 1e-3)).unwrap();
-        let b = integrate_native(&*f, &cfg(1 << 13, 1e-3)).unwrap();
+        let a = integrate(&*f, &cfg(1 << 13, 1e-3)).unwrap();
+        let b = integrate(&*f, &cfg(1 << 13, 1e-3)).unwrap();
         assert_eq!(a.integral, b.integral);
         assert_eq!(a.sigma, b.sigma);
+    }
+
+    #[test]
+    fn observer_sees_every_iteration() {
+        let f = by_name("f5", 4).unwrap();
+        let mut c = cfg(1 << 12, 1e-12);
+        c.itmax = 5;
+        c.ita = 3;
+        c.skip = 0;
+        let mut seen: Vec<(usize, bool, bool)> = Vec::new();
+        let mut cb = |ev: &IterationEvent| {
+            assert!(ev.grid.validate().is_ok());
+            seen.push((ev.iteration, ev.adjusting, ev.converged));
+        };
+        let out = integrate_native_core(&*f, &c, None, Some(&mut cb))
+            .unwrap()
+            .output;
+        assert_eq!(seen.len(), out.iterations);
+        for (i, &(it, adjusting, _)) in seen.iter().enumerate() {
+            assert_eq!(it, i);
+            assert_eq!(adjusting, i < c.ita);
+        }
+        assert!(!seen.last().unwrap().2, "tau 1e-12 must not converge");
+    }
+
+    #[test]
+    fn warm_start_reuses_grid_shape() {
+        let f = by_name("f4", 5).unwrap();
+        let donor = integrate_native_core(&*f, &cfg(1 << 13, 1e-3), None, None).unwrap();
+        // Mismatched nb must be rejected with a clear error.
+        let mut c = cfg(1 << 13, 1e-3);
+        c.nb = 32;
+        let err = integrate_native_core(&*f, &c, Some(&donor.grid), None)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("warm-start"), "{err}");
+        // Mismatched grid mode is rejected too (no silent override).
+        let mut c_mode = cfg(1 << 13, 1e-3);
+        c_mode.grid_mode = GridMode::Shared1D;
+        let err = integrate_native_core(&*f, &c_mode, Some(&donor.grid), None)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("grid mode"), "{err}");
+        // Matching shape is accepted.
+        let warm = integrate_native_core(&*f, &cfg(1 << 13, 1e-3), Some(&donor.grid), None);
+        assert!(warm.is_ok());
+    }
+
+    #[test]
+    #[allow(deprecated)]
+    fn deprecated_shims_still_delegate() {
+        let f = by_name("f3", 3).unwrap();
+        let c = cfg(1 << 12, 1e-3);
+        let new = integrate(&*f, &c).unwrap();
+        let old = integrate_native(&*f, &c).unwrap();
+        assert_eq!(new.integral, old.integral);
+        assert_eq!(new.sigma, old.sigma);
+        let (traced, trace) = {
+            let layout = Layout::compute(3, c.maxcalls, c.nb, c.nblocks).unwrap();
+            let backend = BorrowedNative {
+                f: &*f,
+                layout,
+                threads: c.threads,
+            };
+            run_driver_traced(&backend, &c).unwrap()
+        };
+        assert_eq!(traced.integral, new.integral);
+        assert_eq!(trace.iteration_estimates.len(), traced.iterations);
     }
 }

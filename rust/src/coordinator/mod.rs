@@ -1,14 +1,19 @@
 //! L3 coordinator — the paper's host-side contribution: the two-phase
 //! m-Cubes iteration driver (Algorithm 2), backend abstraction over
 //! PJRT artifacts / the native engine, and an integration job service.
+//!
+//! `drive` is the one driver core (warm-startable, observable); the
+//! seed's free functions remain as deprecated shims. Most callers
+//! should go through `crate::api::Integrator` instead of using this
+//! module directly.
 
 mod backend;
 mod driver;
 mod service;
 
 pub use backend::{NativeBackend, PjrtBackend, VSampleBackend};
-pub use driver::{
-    integrate_native, integrate_native_adaptive, run_driver, run_driver_traced, DriverOutput,
-    IntegrationOutput, JobConfig,
-};
+pub use driver::{drive, DriveOutcome, DriverOutput, IntegrationOutput, JobConfig};
+#[allow(deprecated)]
+pub use driver::{integrate_native, integrate_native_adaptive, run_driver, run_driver_traced};
+pub(crate) use driver::{escalate_native, integrate_native_core};
 pub use service::{IntegrationService, JobRequest, JobResult, ServiceMetrics};

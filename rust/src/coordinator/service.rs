@@ -2,32 +2,72 @@
 //! many integration jobs concurrently and reports latency/throughput —
 //! the serving shell around the m-Cubes driver (exercised end-to-end by
 //! `examples/service_demo.rs`).
+//!
+//! Jobs are described by `api::IntegrandSpec`, so the service accepts
+//! registry names *and* user-supplied closures/`IntegrandRef`s, and may
+//! carry an `api::GridState` warm start — repeated similar integrals
+//! skip the importance-grid warm-up, and each result returns its
+//! adapted grid for follow-up jobs.
 
-use super::driver::{integrate_native, IntegrationOutput, JobConfig};
+use super::driver::{integrate_native_core, IntegrationOutput, JobConfig};
+use crate::api::{GridState, IntegrandSpec};
 use crate::error::{Error, Result};
-use crate::integrands::by_name;
+use crate::integrands::IntegrandRef;
 use crate::util::benchkit::percentile_sorted;
 use crate::util::threadpool::WorkerPool;
 use std::sync::mpsc::{channel, Receiver, Sender};
- 
 use std::time::Instant;
 
 /// A queued integration request.
 #[derive(Debug, Clone)]
 pub struct JobRequest {
     pub id: u64,
-    pub integrand: String,
-    pub dim: usize,
+    /// What to integrate: registry name or custom integrand.
+    pub spec: IntegrandSpec,
     pub config: JobConfig,
+    /// Optional adapted grid from a previous run (same d, nb).
+    pub warm_start: Option<GridState>,
+}
+
+impl JobRequest {
+    /// A registry-integrand job.
+    pub fn registry(id: u64, name: impl Into<String>, dim: usize, config: JobConfig) -> JobRequest {
+        JobRequest {
+            id,
+            spec: IntegrandSpec::registry(name, dim),
+            config,
+            warm_start: None,
+        }
+    }
+
+    /// A custom-integrand job (closures via `api::FnIntegrand`).
+    pub fn custom(id: u64, f: IntegrandRef, config: JobConfig) -> JobRequest {
+        JobRequest {
+            id,
+            spec: IntegrandSpec::custom(f),
+            config,
+            warm_start: None,
+        }
+    }
+
+    /// Attach a warm-start grid.
+    pub fn with_warm_start(mut self, grid: GridState) -> JobRequest {
+        self.warm_start = Some(grid);
+        self
+    }
 }
 
 /// The completed job with timing metadata.
 #[derive(Debug, Clone)]
 pub struct JobResult {
     pub id: u64,
+    /// Display label of the integrand (registry or custom name).
     pub integrand: String,
     pub dim: usize,
     pub outcome: std::result::Result<IntegrationOutput, String>,
+    /// Adapted grid after the run (successful jobs only) — feed it to a
+    /// follow-up request's `warm_start`.
+    pub grid: Option<GridState>,
     /// Seconds spent queued before a worker picked the job up.
     pub queue_time: f64,
     /// End-to-end latency (enqueue -> completion), seconds.
@@ -83,14 +123,34 @@ impl IntegrationService {
             let queue_time = enqueued.elapsed().as_secs_f64();
             let mut cfg = req.config.clone();
             cfg.threads = 1;
-            let outcome = by_name(&req.integrand, req.dim)
-                .and_then(|f| integrate_native(&*f, &cfg))
-                .map_err(|e| e.to_string());
+            let label = req.spec.label();
+            let dim = req.spec.dim();
+            // User-supplied closures can panic; isolate the panic to
+            // this job so the batch (and the worker) survives and
+            // drain() still returns every result.
+            let run = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                req.spec
+                    .resolve()
+                    .and_then(|f| integrate_native_core(&*f, &cfg, req.warm_start.as_ref(), None))
+            }));
+            let (outcome, grid) = match run {
+                Ok(Ok(o)) => (Ok(o.output), Some(o.grid)),
+                Ok(Err(e)) => (Err(e.to_string()), None),
+                Err(payload) => {
+                    let msg = payload
+                        .downcast_ref::<&str>()
+                        .map(|s| s.to_string())
+                        .or_else(|| payload.downcast_ref::<String>().cloned())
+                        .unwrap_or_else(|| "unknown panic payload".to_string());
+                    (Err(format!("integrand panicked: {msg}")), None)
+                }
+            };
             let _ = tx.send(JobResult {
                 id: req.id,
-                integrand: req.integrand,
-                dim: req.dim,
+                integrand: label,
+                dim,
                 outcome,
+                grid,
                 queue_time,
                 latency: enqueued.elapsed().as_secs_f64(),
             });
@@ -118,7 +178,9 @@ impl IntegrationService {
         let wall_time = started.elapsed().as_secs_f64();
 
         let mut latencies: Vec<f64> = results.iter().map(|r| r.latency).collect();
-        latencies.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        // total_cmp: a NaN timing (clock weirdness) must not panic the
+        // whole drain; NaNs sort to the end and surface in latency_max.
+        latencies.sort_by(f64::total_cmp);
         let failures = results.iter().filter(|r| r.outcome.is_err()).count();
         let metrics = ServiceMetrics {
             jobs: results.len(),
@@ -139,6 +201,7 @@ impl IntegrationService {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::api::FnIntegrand;
 
     fn quick_cfg() -> JobConfig {
         JobConfig {
@@ -155,15 +218,15 @@ mod tests {
     fn runs_batch_of_jobs() {
         let mut svc = IntegrationService::new(4);
         for i in 0..12u64 {
-            svc.submit(JobRequest {
-                id: i,
-                integrand: "f5".into(),
-                dim: 4,
-                config: JobConfig {
+            svc.submit(JobRequest::registry(
+                i,
+                "f5",
+                4,
+                JobConfig {
                     seed: 100 + i as u32,
                     ..quick_cfg()
                 },
-            });
+            ));
         }
         let (results, metrics) = svc.drain().unwrap();
         assert_eq!(results.len(), 12);
@@ -174,27 +237,19 @@ mod tests {
         for (i, r) in results.iter().enumerate() {
             assert_eq!(r.id, i as u64);
             assert!(r.outcome.is_ok());
+            assert!(r.grid.is_some(), "successful jobs return their grid");
         }
     }
 
     #[test]
     fn bad_integrand_reports_failure_not_panic() {
         let mut svc = IntegrationService::new(2);
-        svc.submit(JobRequest {
-            id: 0,
-            integrand: "nope".into(),
-            dim: 3,
-            config: quick_cfg(),
-        });
-        svc.submit(JobRequest {
-            id: 1,
-            integrand: "f5".into(),
-            dim: 3,
-            config: quick_cfg(),
-        });
+        svc.submit(JobRequest::registry(0, "nope", 3, quick_cfg()));
+        svc.submit(JobRequest::registry(1, "f5", 3, quick_cfg()));
         let (results, metrics) = svc.drain().unwrap();
         assert_eq!(metrics.failures, 1);
         assert!(results[0].outcome.is_err());
+        assert!(results[0].grid.is_none());
         assert!(results[1].outcome.is_ok());
     }
 
@@ -202,12 +257,7 @@ mod tests {
     fn latency_accounting_sane() {
         let mut svc = IntegrationService::new(1);
         for i in 0..3 {
-            svc.submit(JobRequest {
-                id: i,
-                integrand: "f3".into(),
-                dim: 3,
-                config: quick_cfg(),
-            });
+            svc.submit(JobRequest::registry(i, "f3", 3, quick_cfg()));
         }
         let (results, metrics) = svc.drain().unwrap();
         for r in &results {
@@ -215,5 +265,79 @@ mod tests {
         }
         assert!(metrics.latency_p95 >= metrics.latency_p50);
         assert!(metrics.latency_max >= metrics.latency_p95);
+    }
+
+    #[test]
+    fn custom_closure_jobs_run() {
+        let mut svc = IntegrationService::new(2);
+        let f = FnIntegrand::unit(3, |x: &[f64]| x.iter().sum::<f64>())
+            .named("sum3")
+            .with_true_value(1.5)
+            .into_ref();
+        svc.submit(JobRequest::custom(0, f, quick_cfg()));
+        let (results, metrics) = svc.drain().unwrap();
+        assert_eq!(metrics.failures, 0);
+        assert_eq!(results[0].integrand, "sum3");
+        assert_eq!(results[0].dim, 3);
+        let out = results[0].outcome.as_ref().unwrap();
+        assert!((out.integral - 1.5).abs() < 0.05, "I = {}", out.integral);
+    }
+
+    #[test]
+    fn panicking_closure_is_isolated_from_the_batch() {
+        let mut svc = IntegrationService::new(2);
+        let bomb = FnIntegrand::unit(3, |x: &[f64]| {
+            // Out-of-range index: panics on the first evaluation.
+            x[7]
+        })
+        .named("bomb")
+        .into_ref();
+        svc.submit(JobRequest::custom(0, bomb, quick_cfg()));
+        svc.submit(JobRequest::registry(1, "f3", 3, quick_cfg()));
+        svc.submit(JobRequest::registry(2, "f5", 4, quick_cfg()));
+        let (results, metrics) = svc.drain().unwrap();
+        assert_eq!(results.len(), 3, "all results survive the panic");
+        assert_eq!(metrics.failures, 1);
+        let err = results[0].outcome.as_ref().unwrap_err();
+        assert!(err.contains("panicked"), "{err}");
+        assert!(results[1].outcome.is_ok());
+        assert!(results[2].outcome.is_ok());
+    }
+
+    #[test]
+    fn warm_started_job_reuses_donor_grid() {
+        // Donor adapts a grid; a warm-started rerun of the same job
+        // must converge at least as fast.
+        let cold_cfg = JobConfig {
+            maxcalls: 1 << 13,
+            itmax: 20,
+            ita: 12,
+            skip: 2,
+            tau_rel: 5e-3,
+            seed: 5,
+            ..Default::default()
+        };
+        let mut svc = IntegrationService::new(1);
+        svc.submit(JobRequest::registry(0, "f4", 5, cold_cfg.clone()));
+        let (results, _) = svc.drain().unwrap();
+        let donor_grid = results[0].grid.clone().unwrap();
+        let cold_iters = results[0].outcome.as_ref().unwrap().iterations;
+
+        let warm_cfg = JobConfig {
+            ita: 0,
+            skip: 0,
+            ..cold_cfg
+        };
+        let mut svc = IntegrationService::new(1);
+        svc.submit(JobRequest::registry(1, "f4", 5, warm_cfg).with_warm_start(donor_grid));
+        let (results, metrics) = svc.drain().unwrap();
+        assert_eq!(metrics.failures, 0);
+        let warm = results[0].outcome.as_ref().unwrap();
+        assert!(warm.converged, "{warm:?}");
+        assert!(
+            warm.iterations <= cold_iters,
+            "warm {} vs cold {cold_iters}",
+            warm.iterations
+        );
     }
 }

@@ -115,9 +115,11 @@ pub fn vsample_adaptive(
     let nb = layout.nb;
     let g = layout.g as f64;
     let m = layout.m as f64;
-    let lo = f.lo();
-    let hi = f.hi();
-    let vol = (hi - lo).powi(d as i32);
+    let bounds = f.bounds();
+    assert_eq!(bounds.dim(), d, "bounds dim != layout dim");
+    let mut lo_ax = [0.0f64; MAX_DIM];
+    let mut span_ax = [0.0f64; MAX_DIM];
+    let vol = bounds.unpack(&mut lo_ax, &mut span_ax);
 
     struct Partial {
         integral: f64,
@@ -138,7 +140,6 @@ pub fn vsample_adaptive(
         let edges = bins.flat();
         let inv_g = 1.0 / g;
         let nbf = nb as f64;
-        let span = hi - lo;
         let mut u = [0.0f64; MAX_DIM];
         let mut x = [0.0f64; MAX_DIM];
         let mut bidx = [0usize; MAX_DIM];
@@ -162,7 +163,7 @@ pub fn vsample_adaptive(
                     let left = if bi == 0 { 0.0 } else { edges[row + bi - 1] };
                     let w = right - left;
                     jac *= nbf * w;
-                    x[i] = lo + (left + (loc - bi as f64) * w) * span;
+                    x[i] = lo_ax[i] + (left + (loc - bi as f64) * w) * span_ax[i];
                     bidx[i] = row + bi;
                 }
                 let v = f.eval(&x[..d]) * jac;
@@ -209,6 +210,7 @@ pub fn vsample_adaptive(
 
 /// Full adaptive-stratification driver (native-only extension; the
 /// m-Cubes artifacts keep uniform `p` by design — see module docs).
+#[allow(clippy::too_many_arguments)]
 pub fn integrate_adaptive_strat(
     f: &dyn Integrand,
     maxcalls: usize,
@@ -332,10 +334,10 @@ mod tests {
         // Same per-iteration budget, fixed iteration count: the
         // adaptive allocation should reach a smaller combined sigma on
         // a sharply peaked integrand.
-        use crate::coordinator::{integrate_native, JobConfig};
+        use crate::coordinator::{integrate_native_core, JobConfig};
         let f = by_name("f4", 5).unwrap();
         let budget = 1 << 14;
-        let uni = integrate_native(
+        let uni = integrate_native_core(
             &*f,
             &JobConfig {
                 maxcalls: budget,
@@ -347,8 +349,11 @@ mod tests {
                 threads: 2,
                 ..Default::default()
             },
+            None,
+            None,
         )
-        .unwrap();
+        .unwrap()
+        .output;
         let ada = integrate_adaptive_strat(&*f, budget, 50, 1e-15, 10, 8, 5, 2).unwrap();
         assert!(
             ada.sigma < uni.sigma * 1.05,

@@ -106,9 +106,14 @@ fn sample_cube_range(
     let m = layout.m as f64;
     let p = layout.p;
     let pf = p as f64;
-    let lo = f.lo();
-    let hi = f.hi();
-    let vol = (hi - lo).powi(d as i32);
+    // Per-axis affine map unit box -> physical box. For a uniform box
+    // this produces bit-identical samples to the old scalar lo/hi path
+    // (same `lo + z*span` expression per axis, volume by product).
+    let bounds = f.bounds();
+    assert_eq!(bounds.dim(), d, "bounds dim != layout dim");
+    let mut lo_ax = [0.0f64; MAX_DIM];
+    let mut span_ax = [0.0f64; MAX_DIM];
+    let vol = bounds.unpack(&mut lo_ax, &mut span_ax);
 
     let mut contrib = opts.adjust.then(|| vec![0.0; d * nb]);
     let mut integral = 0.0;
@@ -124,7 +129,6 @@ fn sample_cube_range(
     let edges = bins.flat();
     let inv_g = 1.0 / g;
     let nbf = nb as f64;
-    let span = hi - lo;
 
     // Decode the first cube, then advance coords as a base-g odometer —
     // avoids d divisions per cube in the hot loop (perf pass).
@@ -164,7 +168,7 @@ fn sample_cube_range(
                 let w = right - left;
                 let xt = left + (loc - b as f64) * w;
                 jac *= nbf * w;
-                x[i] = lo + xt * span;
+                x[i] = lo_ax[i] + xt * span_ax[i];
                 bidx[i] = row + b;
             }
             let v = f.eval(&x[..d]) * jac;
@@ -291,6 +295,82 @@ mod tests {
                 "axis masses differ: {per_axis:?}"
             );
         }
+    }
+
+    #[test]
+    fn per_axis_bounds_constant_integrand() {
+        // f == 1 over [0,2] x [1,4] x [-1,0]: integral is the box
+        // volume (6), exactly, for any importance grid.
+        struct Box3;
+        impl crate::integrands::Integrand for Box3 {
+            fn name(&self) -> &str {
+                "box3"
+            }
+            fn dim(&self) -> usize {
+                3
+            }
+            fn lo(&self) -> f64 {
+                -1.0
+            }
+            fn hi(&self) -> f64 {
+                4.0
+            }
+            fn eval(&self, _x: &[f64]) -> f64 {
+                1.0
+            }
+            fn true_value(&self) -> Option<f64> {
+                Some(6.0)
+            }
+            fn bounds(&self) -> crate::strat::Bounds {
+                crate::strat::Bounds::per_axis(&[(0.0, 2.0), (1.0, 4.0), (-1.0, 0.0)])
+                    .unwrap()
+            }
+        }
+        let layout = Layout::compute(3, 2048, 16, 2).unwrap();
+        let bins = Bins::uniform(3, 16);
+        let (r, _) = NativeEngine.vsample(&Box3, &layout, &bins, &opts(5, 0));
+        assert!((r.integral - 6.0).abs() < 1e-10, "I = {}", r.integral);
+        assert!(r.variance.abs() < 1e-18, "Var = {}", r.variance);
+    }
+
+    #[test]
+    fn per_axis_bounds_sample_points_in_box() {
+        // Samples must land inside the per-axis box, never the hull.
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        struct Probe(AtomicUsize);
+        impl crate::integrands::Integrand for Probe {
+            fn name(&self) -> &str {
+                "probe"
+            }
+            fn dim(&self) -> usize {
+                2
+            }
+            fn lo(&self) -> f64 {
+                0.0
+            }
+            fn hi(&self) -> f64 {
+                3.0
+            }
+            fn eval(&self, x: &[f64]) -> f64 {
+                assert!((0.0..=2.0).contains(&x[0]), "x0 = {}", x[0]);
+                assert!((1.0..=3.0).contains(&x[1]), "x1 = {}", x[1]);
+                self.0.fetch_add(1, Ordering::Relaxed);
+                x[0] + x[1]
+            }
+            fn true_value(&self) -> Option<f64> {
+                None
+            }
+            fn bounds(&self) -> crate::strat::Bounds {
+                crate::strat::Bounds::per_axis(&[(0.0, 2.0), (1.0, 3.0)]).unwrap()
+            }
+        }
+        let layout = Layout::compute(2, 512, 8, 1).unwrap();
+        let bins = Bins::uniform(2, 8);
+        let probe = Probe(AtomicUsize::new(0));
+        let (r, _) = NativeEngine.vsample(&probe, &layout, &bins, &opts(9, 1));
+        assert_eq!(probe.0.load(Ordering::Relaxed), layout.calls());
+        // E[x0 + x1] * area = (1 + 2) * 4 = 12
+        assert!((r.integral - 12.0).abs() < 0.5, "I = {}", r.integral);
     }
 
     #[test]

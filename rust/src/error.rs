@@ -1,32 +1,29 @@
 //! Library error type. All public APIs return `Result<T, Error>`.
+//!
+//! Hand-rolled `Display`/`Error` impls (no `thiserror` in the offline
+//! registry — see `util::mod` on the dependency constraints).
 
-use thiserror::Error;
+use std::fmt;
 
 /// Unified error for the m-Cubes library.
-#[derive(Error, Debug)]
+#[derive(Debug)]
 pub enum Error {
     /// Malformed or missing artifact manifest / JSON payload.
-    #[error("manifest error: {0}")]
     Manifest(String),
 
     /// JSON syntax error at a byte offset.
-    #[error("json parse error at byte {offset}: {msg}")]
     Json { offset: usize, msg: String },
 
     /// Unknown integrand, artifact, or backend name.
-    #[error("unknown {kind}: {name}")]
     Unknown { kind: &'static str, name: String },
 
     /// Invalid configuration (dimensions, calls, tolerances...).
-    #[error("invalid config: {0}")]
     Config(String),
 
-    /// PJRT/XLA runtime failure.
-    #[error("runtime error: {0}")]
+    /// PJRT/XLA runtime failure (or the runtime not being compiled in).
     Runtime(String),
 
     /// The integrator failed to converge within its budget.
-    #[error("did not converge: reached {iterations} iterations, rel-err {relerr:.3e} > target {target:.3e}")]
     NotConverged {
         iterations: usize,
         relerr: f64,
@@ -34,15 +31,81 @@ pub enum Error {
     },
 
     /// Underlying I/O failure.
-    #[error("io error: {0}")]
-    Io(#[from] std::io::Error),
+    Io(std::io::Error),
 }
 
-impl From<xla::Error> for Error {
-    fn from(e: xla::Error) -> Self {
-        Error::Runtime(e.to_string())
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Manifest(msg) => write!(f, "manifest error: {msg}"),
+            Error::Json { offset, msg } => {
+                write!(f, "json parse error at byte {offset}: {msg}")
+            }
+            Error::Unknown { kind, name } => write!(f, "unknown {kind}: {name}"),
+            Error::Config(msg) => write!(f, "invalid config: {msg}"),
+            Error::Runtime(msg) => write!(f, "runtime error: {msg}"),
+            Error::NotConverged {
+                iterations,
+                relerr,
+                target,
+            } => write!(
+                f,
+                "did not converge: reached {iterations} iterations, \
+                 rel-err {relerr:.3e} > target {target:.3e}"
+            ),
+            Error::Io(e) => write!(f, "io error: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
     }
 }
 
 /// Library-wide result alias.
 pub type Result<T> = std::result::Result<T, Error>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_messages() {
+        assert_eq!(
+            Error::Config("bad".into()).to_string(),
+            "invalid config: bad"
+        );
+        assert_eq!(
+            Error::Unknown {
+                kind: "integrand",
+                name: "nope".into()
+            }
+            .to_string(),
+            "unknown integrand: nope"
+        );
+        let e = Error::Json {
+            offset: 7,
+            msg: "oops".into(),
+        };
+        assert!(e.to_string().contains("byte 7"));
+    }
+
+    #[test]
+    fn io_conversion_keeps_source() {
+        let io = std::io::Error::new(std::io::ErrorKind::NotFound, "gone");
+        let e: Error = io.into();
+        assert!(e.to_string().contains("gone"));
+        assert!(std::error::Error::source(&e).is_some());
+    }
+}

@@ -14,6 +14,7 @@ pub use interp::Interp1D;
 pub use misc::*;
 
 use crate::error::{Error, Result};
+use crate::strat::Bounds;
 use std::sync::Arc;
 
 /// A d-dimensional scalar integrand. `eval` receives one point in
@@ -23,9 +24,9 @@ pub trait Integrand: Send + Sync {
     fn name(&self) -> &str;
     /// Dimensionality this instance integrates over.
     fn dim(&self) -> usize;
-    /// Integration box lower corner (same value on every axis).
+    /// Uniform-box lower corner (legacy; `bounds()` is authoritative).
     fn lo(&self) -> f64;
-    /// Integration box upper corner.
+    /// Uniform-box upper corner (legacy; `bounds()` is authoritative).
     fn hi(&self) -> f64;
     /// Evaluate at one point (length `dim`).
     fn eval(&self, x: &[f64]) -> f64;
@@ -34,6 +35,15 @@ pub trait Integrand: Send + Sync {
     /// Identical marginal density on all axes (m-Cubes1D is valid).
     fn symmetric(&self) -> bool {
         false
+    }
+    /// Per-axis integration bounds. The engine, driver, and all CPU
+    /// baselines sample through this; the default reproduces the
+    /// legacy uniform box `[lo, hi]^d`. Implementations with genuinely
+    /// per-axis boxes (e.g. `api::FnIntegrand`) override it — their
+    /// `lo()/hi()` then report the bounding hull for any remaining
+    /// legacy uniform-box callers.
+    fn bounds(&self) -> Bounds {
+        Bounds::uniform(self.dim(), self.lo(), self.hi())
     }
 }
 

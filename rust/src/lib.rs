@@ -8,30 +8,70 @@
 //!   AOT-lowered to HLO-text artifacts at build time.
 //! - **L2** — the JAX wrapper (`python/compile/model.py`) that reduces
 //!   per-block partials; lowered together with L1.
-//! - **L3** — this crate: the coordinator (iteration driver, importance
-//!   grid adjustment, convergence, job service), the PJRT runtime that
-//!   executes the artifacts, a native CPU engine that reproduces the
-//!   identical sampling math, and the baselines the paper compares
-//!   against (serial VEGAS, gVegas, ZMCintegral-style, plain MC, MISER).
+//! - **L3** — this crate: the [`api::Integrator`] facade, the
+//!   coordinator (iteration driver, importance-grid adjustment,
+//!   convergence, job service), the PJRT runtime that executes the
+//!   artifacts, a native CPU engine that reproduces the identical
+//!   sampling math, and the baselines the paper compares against
+//!   (serial VEGAS, gVegas, ZMCintegral-style, plain MC, MISER).
 //!
 //! Python never runs on the request path; after `make artifacts` the
 //! `mcubes` binary is self-contained.
 //!
 //! ## Quick start
 //!
+//! Everything goes through the [`api::Integrator`] builder:
+//!
 //! ```no_run
 //! use mcubes::prelude::*;
 //!
-//! let f = mcubes::integrands::by_name("f4", 5).unwrap();
-//! let cfg = JobConfig {
-//!     maxcalls: 1 << 17,
-//!     tau_rel: 1e-3,
-//!     ..JobConfig::default()
-//! };
-//! let out = mcubes::coordinator::integrate_native(&*f, &cfg).unwrap();
+//! // A registry integrand (the paper's f4, a sharp 5-D Gaussian):
+//! let out = Integrator::from_registry("f4", 5)?
+//!     .maxcalls(1 << 17)
+//!     .tolerance(1e-3)
+//!     .run()?;
 //! println!("I = {} ± {}", out.integral, out.sigma);
+//!
+//! // A closure over per-axis bounds — no registry entry needed:
+//! let bounds = Bounds::per_axis(&[(0.0, 2.0), (1.0, 3.0)])?;
+//! let out = Integrator::from_fn(2, bounds, |x| x[0] * x[1])?
+//!     .tolerance(1e-3)
+//!     .run()?;
+//! println!("I = {} ± {}", out.integral, out.sigma);
+//! # Ok::<(), mcubes::Error>(())
 //! ```
+//!
+//! ### Warm starts and observers
+//!
+//! ```no_run
+//! use mcubes::prelude::*;
+//!
+//! let mut donor = Integrator::from_registry("f4", 5)?.seed(1);
+//! donor.run()?;
+//! let grid = donor.export_grid().unwrap();       // adapted VEGAS grid
+//!
+//! let out = Integrator::from_registry("f4", 5)?
+//!     .seed(2)
+//!     .warm_start(grid)                           // skip the warm-up
+//!     .adjust_iterations(0)
+//!     .skip_iterations(0)
+//!     .observe(|ev| eprintln!("it {}: rel {:.2e}", ev.iteration, ev.rel_err))
+//!     .run()?;
+//! assert!(out.converged);
+//! # Ok::<(), mcubes::Error>(())
+//! ```
+//!
+//! ## Deprecation path
+//!
+//! The seed's free functions — `coordinator::integrate_native`,
+//! `integrate_native_adaptive`, `run_driver`, `run_driver_traced` —
+//! remain as `#[deprecated]` shims that delegate to the same core
+//! (`coordinator::drive`) the facade uses, and will be removed once
+//! downstream callers migrate. `IntegrationService` now takes
+//! [`api::IntegrandSpec`] (registry names *or* custom integrands)
+//! instead of bare name strings.
 
+pub mod api;
 pub mod baselines;
 pub mod coordinator;
 pub mod engine;
@@ -49,7 +89,10 @@ pub use error::{Error, Result};
 
 /// Common imports for examples and benches.
 pub mod prelude {
-    pub use crate::coordinator::{IntegrationOutput, JobConfig};
+    pub use crate::api::{
+        BackendSpec, Bounds, FnIntegrand, GridState, IntegrandSpec, Integrator, IterationEvent,
+    };
+    pub use crate::coordinator::{DriveOutcome, IntegrationOutput, JobConfig};
     pub use crate::error::{Error, Result};
     pub use crate::estimator::{Convergence, IterationResult, WeightedEstimator};
     pub use crate::grid::{Bins, GridMode};

@@ -10,13 +10,14 @@
 //! Examples:
 //!   mcubes integrate --integrand f4 --dim 5 --calls 131072 --tau 1e-3
 //!   mcubes integrate --backend pjrt --integrand f4 --dim 5
+//!   mcubes integrate --integrand f4 --dim 5 --grid-out /tmp/f4.grid.json
+//!   mcubes integrate --integrand f4 --dim 5 --grid-in /tmp/f4.grid.json --ita 0
 //!   mcubes artifacts
 //!   mcubes selftest
 
+use mcubes::api::{BackendSpec, GridState, Integrator};
 use mcubes::baselines::{vegas_serial_integrate, zmc_integrate, ZmcConfig};
-use mcubes::coordinator::{
-    run_driver, IntegrationService, JobConfig, JobRequest, PjrtBackend,
-};
+use mcubes::coordinator::{drive, IntegrationService, JobConfig, JobRequest, PjrtBackend};
 use mcubes::grid::GridMode;
 use mcubes::integrands::by_name;
 use mcubes::runtime::{PjrtRuntime, Registry, DEFAULT_ARTIFACT_DIR};
@@ -58,6 +59,8 @@ fn integrate_cli() -> Cli {
         .opt("seed", "42", "rng seed")
         .opt("backend", "native", "native | pjrt")
         .opt("artifacts", DEFAULT_ARTIFACT_DIR, "artifacts directory")
+        .opt_opt("grid-in", "warm-start grid file (from --grid-out)")
+        .opt_opt("grid-out", "save the adapted grid to this file")
         .flag("onedim", "use the m-Cubes1D shared-axis grid")
         .flag("baseline-serial", "also run serial VEGAS for comparison")
         .flag("baseline-zmc", "also run the ZMC-style baseline")
@@ -75,34 +78,40 @@ fn cmd_integrate(args: &[String]) -> i32 {
     let run = || -> Result<i32, String> {
         let name = p.get("integrand").unwrap().to_string();
         let dim = p.get_usize("dim")?;
-        let cfg = JobConfig {
-            maxcalls: p.get_usize("calls")?,
-            tau_rel: p.get_f64("tau")?,
-            itmax: p.get_usize("itmax")?,
-            ita: p.get_usize("ita")?,
-            seed: p.get_u32("seed")?,
-            grid_mode: if p.is_set("onedim") {
+        let mut intg = Integrator::from_registry(&name, dim)
+            .map_err(|e| e.to_string())?
+            .maxcalls(p.get_usize("calls")?)
+            .tolerance(p.get_f64("tau")?)
+            .max_iterations(p.get_usize("itmax")?)
+            .adjust_iterations(p.get_usize("ita")?)
+            .seed(p.get_u32("seed")?)
+            .grid_mode(if p.is_set("onedim") {
                 GridMode::Shared1D
             } else {
                 GridMode::PerAxis
-            },
-            ..Default::default()
-        };
+            });
+        if p.get("backend").unwrap() == "pjrt" {
+            intg = intg.backend(BackendSpec::Pjrt {
+                artifacts_dir: p.get("artifacts").unwrap().to_string(),
+            });
+        } else if p.get("backend").unwrap() != "native" {
+            return Err(format!("unknown backend {}", p.get("backend").unwrap()));
+        }
+        if let Some(path) = p.get("grid-in") {
+            let grid = GridState::load(path).map_err(|e| e.to_string())?;
+            intg = intg.warm_start(grid);
+        }
+
+        let out = intg.run().map_err(|e| e.to_string())?;
+        if let Some(path) = p.get("grid-out") {
+            intg.export_grid()
+                .expect("grid present after a successful run")
+                .save(path)
+                .map_err(|e| e.to_string())?;
+            println!("adapted grid saved to {path}");
+        }
+
         let f = by_name(&name, dim).map_err(|e| e.to_string())?;
-
-        let out = match p.get("backend").unwrap() {
-            "native" => mcubes::coordinator::integrate_native(&*f, &cfg).map_err(|e| e.to_string())?,
-            "pjrt" => {
-                let registry =
-                    Registry::load(p.get("artifacts").unwrap()).map_err(|e| e.to_string())?;
-                let runtime = PjrtRuntime::cpu().map_err(|e| e.to_string())?;
-                let backend = PjrtBackend::load(&runtime, &registry, &name, cfg.maxcalls)
-                    .map_err(|e| e.to_string())?;
-                run_driver(&backend, &cfg).map_err(|e| e.to_string())?
-            }
-            other => return Err(format!("unknown backend {other}")),
-        };
-
         let truth = f.true_value();
         println!("integrand   : {name} (d={dim})");
         println!("backend     : {}", out.backend);
@@ -114,7 +123,10 @@ fn cmd_integrate(args: &[String]) -> i32 {
             println!("true rel err: {:.3e}", ((out.integral - t) / t).abs());
         }
         println!("chi2/dof    : {:.3}", out.chi2_dof);
-        println!("iterations  : {} (converged: {})", out.iterations, out.converged);
+        println!(
+            "iterations  : {} (converged: {})",
+            out.iterations, out.converged
+        );
         println!("calls used  : {}", out.calls_used);
         println!(
             "time        : total {} / kernel {}",
@@ -123,6 +135,7 @@ fn cmd_integrate(args: &[String]) -> i32 {
         );
 
         if p.is_set("baseline-serial") {
+            let cfg = intg.job_config();
             let b = vegas_serial_integrate(&*f, cfg.maxcalls, cfg.tau_rel, cfg.itmax, cfg.seed);
             println!(
                 "serial vegas: I={} sigma={} time={}",
@@ -171,17 +184,17 @@ fn cmd_serve(args: &[String]) -> i32 {
     let mut svc = IntegrationService::new(workers);
     for i in 0..jobs {
         let k = i % suite.len();
-        svc.submit(JobRequest {
-            id: i as u64,
-            integrand: suite[k].into(),
-            dim: dims[k],
-            config: JobConfig {
+        svc.submit(JobRequest::registry(
+            i as u64,
+            suite[k],
+            dims[k],
+            JobConfig {
                 maxcalls: p.get_usize("calls").unwrap_or(16384),
                 tau_rel: p.get_f64("tau").unwrap_or(1e-3),
                 seed: 1000 + i as u32,
                 ..Default::default()
             },
-        });
+        ));
     }
     match svc.drain() {
         Ok((results, m)) => {
@@ -289,7 +302,6 @@ fn cmd_selftest(args: &[String]) -> i32 {
         let backend =
             PjrtBackend::load(&runtime, &registry, name, 0).map_err(|e| e.to_string())?;
         let meta = backend.meta().clone();
-        let f = by_name(&meta.integrand, meta.dim).map_err(|e| e.to_string())?;
         let cfg = JobConfig {
             maxcalls: meta.maxcalls,
             nb: meta.nb,
@@ -301,9 +313,14 @@ fn cmd_selftest(args: &[String]) -> i32 {
             seed: 2024,
             ..Default::default()
         };
-        let pjrt_out = run_driver(&backend, &cfg).map_err(|e| e.to_string())?;
-        let native_out =
-            mcubes::coordinator::integrate_native(&*f, &cfg).map_err(|e| e.to_string())?;
+        let pjrt_out = drive(&backend, &cfg, None, None)
+            .map_err(|e| e.to_string())?
+            .output;
+        let native_out = Integrator::from_registry(&meta.integrand, meta.dim)
+            .map_err(|e| e.to_string())?
+            .config(cfg)
+            .run()
+            .map_err(|e| e.to_string())?;
         let rel = ((pjrt_out.integral - native_out.integral) / native_out.integral).abs();
         println!(
             "pjrt   I={} sigma={}",

@@ -1,143 +1,248 @@
 //! PJRT client wrapper: compile HLO-text artifacts once, execute many
 //! times from the coordinator's hot loop.
 //!
-//! Pattern from /opt/xla-example/load_hlo: text -> HloModuleProto ->
+//! The real implementation (behind the `pjrt` cargo feature) follows
+//! the /opt/xla-example/load_hlo pattern: text -> HloModuleProto ->
 //! XlaComputation -> PjRtLoadedExecutable. The executable returns a
 //! tuple (res[2][, C[d][nb]]), matching `model.py`'s output convention.
+//!
+//! Without the feature (the offline default — the `xla` crate is not in
+//! the offline registry) a stub with the identical public surface is
+//! compiled instead; `PjrtRuntime::cpu()` reports the backend as
+//! unavailable and every caller falls back to the native engine.
 
-use super::registry::{ArtifactMeta, Registry};
-use crate::error::{Error, Result};
-use crate::estimator::IterationResult;
-use crate::grid::Bins;
-use std::collections::HashMap;
-use std::sync::{Arc, Mutex};
+#[cfg(feature = "pjrt")]
+mod imp {
+    use crate::error::{Error, Result};
+    use crate::estimator::IterationResult;
+    use crate::grid::Bins;
+    use crate::runtime::registry::{ArtifactMeta, Registry};
+    use std::collections::HashMap;
+    use std::sync::{Arc, Mutex};
 
-/// Owns the PJRT CPU client and a compile cache keyed by artifact name.
-pub struct PjrtRuntime {
-    client: xla::PjRtClient,
-    cache: Mutex<HashMap<String, Arc<VSampleExecutable>>>,
-}
-
-impl PjrtRuntime {
-    /// Create a CPU PJRT client.
-    pub fn cpu() -> Result<PjrtRuntime> {
-        let client = xla::PjRtClient::cpu()?;
-        Ok(PjrtRuntime {
-            client,
-            cache: Mutex::new(HashMap::new()),
-        })
+    fn xerr(e: xla::Error) -> Error {
+        Error::Runtime(e.to_string())
     }
 
-    pub fn platform_name(&self) -> String {
-        self.client.platform_name()
+    /// Owns the PJRT CPU client and a compile cache keyed by artifact name.
+    pub struct PjrtRuntime {
+        client: xla::PjRtClient,
+        cache: Mutex<HashMap<String, Arc<VSampleExecutable>>>,
     }
 
-    pub fn device_count(&self) -> usize {
-        self.client.device_count()
+    impl PjrtRuntime {
+        /// Create a CPU PJRT client.
+        pub fn cpu() -> Result<PjrtRuntime> {
+            let client = xla::PjRtClient::cpu().map_err(xerr)?;
+            Ok(PjrtRuntime {
+                client,
+                cache: Mutex::new(HashMap::new()),
+            })
+        }
+
+        pub fn platform_name(&self) -> String {
+            self.client.platform_name()
+        }
+
+        pub fn device_count(&self) -> usize {
+            self.client.device_count()
+        }
+
+        /// Load + compile an artifact (cached).
+        pub fn load(
+            &self,
+            registry: &Registry,
+            meta: &ArtifactMeta,
+        ) -> Result<Arc<VSampleExecutable>> {
+            if let Some(exe) = self.cache.lock().unwrap().get(&meta.name) {
+                return Ok(Arc::clone(exe));
+            }
+            let path = registry.hlo_path(meta);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str()
+                    .ok_or_else(|| Error::Runtime("non-utf8 artifact path".into()))?,
+            )
+            .map_err(xerr)?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self.client.compile(&comp).map_err(xerr)?;
+            let tables = registry.tables_for(meta)?;
+            let built = Arc::new(VSampleExecutable {
+                exe,
+                meta: meta.clone(),
+                tables,
+            });
+            self.cache
+                .lock()
+                .unwrap()
+                .insert(meta.name.clone(), Arc::clone(&built));
+            Ok(built)
+        }
     }
 
-    /// Load + compile an artifact (cached).
-    pub fn load(&self, registry: &Registry, meta: &ArtifactMeta) -> Result<Arc<VSampleExecutable>> {
-        if let Some(exe) = self.cache.lock().unwrap().get(&meta.name) {
-            return Ok(Arc::clone(exe));
-        }
-        let path = registry.hlo_path(meta);
-        let proto = xla::HloModuleProto::from_text_file(
-            path.to_str()
-                .ok_or_else(|| Error::Runtime("non-utf8 artifact path".into()))?,
-        )?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self.client.compile(&comp)?;
-        let tables = registry.tables_for(meta)?;
-        let built = Arc::new(VSampleExecutable {
-            exe,
-            meta: meta.clone(),
-            tables,
-        });
-        self.cache
-            .lock()
-            .unwrap()
-            .insert(meta.name.clone(), Arc::clone(&built));
-        Ok(built)
-    }
-}
-
-/// A compiled V-Sample pass for one (integrand, layout, variant).
-pub struct VSampleExecutable {
-    exe: xla::PjRtLoadedExecutable,
-    meta: ArtifactMeta,
-    /// Runtime tables for stateful integrands (row-major), if any.
-    tables: Option<Vec<f64>>,
-}
-
-impl VSampleExecutable {
-    pub fn meta(&self) -> &ArtifactMeta {
-        &self.meta
+    /// A compiled V-Sample pass for one (integrand, layout, variant).
+    pub struct VSampleExecutable {
+        exe: xla::PjRtLoadedExecutable,
+        meta: ArtifactMeta,
+        /// Runtime tables for stateful integrands (row-major), if any.
+        tables: Option<Vec<f64>>,
     }
 
-    /// Execute one iteration. `bins` must match the artifact's (d, nb).
-    ///
-    /// Returns the iteration result and the bin-contribution histogram
-    /// (row-major d*nb) for adjust-variant artifacts, `None` otherwise.
-    pub fn vsample(
-        &self,
-        bins: &Bins,
-        seed: u32,
-        iteration: u32,
-    ) -> Result<(IterationResult, Option<Vec<f64>>)> {
-        let d = self.meta.dim;
-        let nb = self.meta.nb;
-        if bins.d() != d || bins.nb() != nb {
-            return Err(Error::Config(format!(
-                "bins shape ({}, {}) != artifact ({d}, {nb})",
-                bins.d(),
-                bins.nb()
-            )));
-        }
-        let bins_lit = xla::Literal::vec1(bins.flat()).reshape(&[d as i64, nb as i64])?;
-        let lo_lit = xla::Literal::vec1(&vec![self.meta.lo; d]);
-        let hi_lit = xla::Literal::vec1(&vec![self.meta.hi; d]);
-        let seed_lit = xla::Literal::vec1(&[seed, iteration]);
-
-        let mut args = vec![bins_lit, lo_lit, hi_lit, seed_lit];
-        if let Some(t) = &self.tables {
-            args.push(
-                xla::Literal::vec1(t)
-                    .reshape(&[self.meta.n_tables as i64, self.meta.table_knots as i64])?,
-            );
+    impl VSampleExecutable {
+        pub fn meta(&self) -> &ArtifactMeta {
+            &self.meta
         }
 
-        let result = self.exe.execute::<xla::Literal>(&args)?[0][0].to_literal_sync()?;
-        let parts = result.to_tuple()?;
-        if parts.is_empty() {
-            return Err(Error::Runtime("empty result tuple".into()));
-        }
-        let res = parts[0].to_vec::<f64>()?;
-        if res.len() != 2 {
-            return Err(Error::Runtime(format!("res len {} != 2", res.len())));
-        }
-        let contrib = if self.meta.adjust {
-            let c = parts
-                .get(1)
-                .ok_or_else(|| Error::Runtime("missing contrib output".into()))?
-                .to_vec::<f64>()?;
-            if c.len() != d * nb {
-                return Err(Error::Runtime(format!(
-                    "contrib len {} != {}",
-                    c.len(),
-                    d * nb
+        /// Execute one iteration. `bins` must match the artifact's (d, nb).
+        ///
+        /// Returns the iteration result and the bin-contribution histogram
+        /// (row-major d*nb) for adjust-variant artifacts, `None` otherwise.
+        pub fn vsample(
+            &self,
+            bins: &Bins,
+            seed: u32,
+            iteration: u32,
+        ) -> Result<(IterationResult, Option<Vec<f64>>)> {
+            let d = self.meta.dim;
+            let nb = self.meta.nb;
+            if bins.d() != d || bins.nb() != nb {
+                return Err(Error::Config(format!(
+                    "bins shape ({}, {}) != artifact ({d}, {nb})",
+                    bins.d(),
+                    bins.nb()
                 )));
             }
-            Some(c)
-        } else {
-            None
-        };
-        Ok((
-            IterationResult {
-                integral: res[0],
-                variance: res[1],
-            },
-            contrib,
-        ))
+            let bins_lit = xla::Literal::vec1(bins.flat())
+                .reshape(&[d as i64, nb as i64])
+                .map_err(xerr)?;
+            let lo_lit = xla::Literal::vec1(&vec![self.meta.lo; d]);
+            let hi_lit = xla::Literal::vec1(&vec![self.meta.hi; d]);
+            let seed_lit = xla::Literal::vec1(&[seed, iteration]);
+
+            let mut args = vec![bins_lit, lo_lit, hi_lit, seed_lit];
+            if let Some(t) = &self.tables {
+                args.push(
+                    xla::Literal::vec1(t)
+                        .reshape(&[self.meta.n_tables as i64, self.meta.table_knots as i64])
+                        .map_err(xerr)?,
+                );
+            }
+
+            let result = self.exe.execute::<xla::Literal>(&args).map_err(xerr)?[0][0]
+                .to_literal_sync()
+                .map_err(xerr)?;
+            let parts = result.to_tuple().map_err(xerr)?;
+            if parts.is_empty() {
+                return Err(Error::Runtime("empty result tuple".into()));
+            }
+            let res = parts[0].to_vec::<f64>().map_err(xerr)?;
+            if res.len() != 2 {
+                return Err(Error::Runtime(format!("res len {} != 2", res.len())));
+            }
+            let contrib = if self.meta.adjust {
+                let c = parts
+                    .get(1)
+                    .ok_or_else(|| Error::Runtime("missing contrib output".into()))?
+                    .to_vec::<f64>()
+                    .map_err(xerr)?;
+                if c.len() != d * nb {
+                    return Err(Error::Runtime(format!(
+                        "contrib len {} != {}",
+                        c.len(),
+                        d * nb
+                    )));
+                }
+                Some(c)
+            } else {
+                None
+            };
+            Ok((
+                IterationResult {
+                    integral: res[0],
+                    variance: res[1],
+                },
+                contrib,
+            ))
+        }
+    }
+}
+
+#[cfg(not(feature = "pjrt"))]
+mod imp {
+    use crate::error::{Error, Result};
+    use crate::estimator::IterationResult;
+    use crate::grid::Bins;
+    use crate::runtime::registry::{ArtifactMeta, Registry};
+    use std::sync::Arc;
+
+    fn unavailable() -> Error {
+        Error::Runtime(
+            "PJRT backend not compiled in: rebuild with `--features pjrt` \
+             and a vendored `xla` crate (the native engine serves every \
+             workload without it)"
+                .into(),
+        )
+    }
+
+    /// Offline stub: same surface as the real runtime, always
+    /// unavailable.
+    pub struct PjrtRuntime {
+        _priv: (),
+    }
+
+    impl PjrtRuntime {
+        /// Always fails in the stub build; callers fall back to native.
+        pub fn cpu() -> Result<PjrtRuntime> {
+            Err(unavailable())
+        }
+
+        pub fn platform_name(&self) -> String {
+            "unavailable".to_string()
+        }
+
+        pub fn device_count(&self) -> usize {
+            0
+        }
+
+        pub fn load(
+            &self,
+            _registry: &Registry,
+            _meta: &ArtifactMeta,
+        ) -> Result<Arc<VSampleExecutable>> {
+            Err(unavailable())
+        }
+    }
+
+    /// Stub executable — never constructed (loading always fails), but
+    /// the type must exist so signatures match the real runtime.
+    pub struct VSampleExecutable {
+        meta: ArtifactMeta,
+    }
+
+    impl VSampleExecutable {
+        pub fn meta(&self) -> &ArtifactMeta {
+            &self.meta
+        }
+
+        pub fn vsample(
+            &self,
+            _bins: &Bins,
+            _seed: u32,
+            _iteration: u32,
+        ) -> Result<(IterationResult, Option<Vec<f64>>)> {
+            Err(unavailable())
+        }
+    }
+}
+
+pub use imp::{PjrtRuntime, VSampleExecutable};
+
+#[cfg(all(test, not(feature = "pjrt")))]
+mod tests {
+    use super::PjrtRuntime;
+
+    #[test]
+    fn stub_reports_unavailable() {
+        let err = PjrtRuntime::cpu().err().expect("stub must fail");
+        assert!(err.to_string().contains("PJRT backend not compiled in"));
     }
 }

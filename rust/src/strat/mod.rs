@@ -6,6 +6,142 @@
 
 use crate::error::{Error, Result};
 
+/// Per-axis integration bounds — the physical box the unit hypercube
+/// is affinely mapped onto.
+///
+/// The seed implementation assumed the same `[lo, hi]` on every axis
+/// (the `Integrand::lo()/hi()` uniform box); `Bounds` generalizes that
+/// to an arbitrary axis-aligned box while keeping the uniform case
+/// bit-identical: for axis `i`, `x_i = lo_i + z_i * (hi_i - lo_i)` with
+/// `z` the unit-box sample, and the Jacobian is `volume()`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Bounds {
+    lo: Vec<f64>,
+    hi: Vec<f64>,
+}
+
+impl Bounds {
+    /// The unit box `[0, 1]^d`.
+    pub fn unit(d: usize) -> Bounds {
+        Bounds::uniform(d, 0.0, 1.0)
+    }
+
+    /// The uniform box `[lo, hi]^d` (the legacy `lo()/hi()` contract).
+    ///
+    /// Panics on a degenerate box (`lo >= hi`) — this is a programmer
+    /// error in an `Integrand` impl, surfaced loudly rather than as a
+    /// silent zero-volume estimate. Use [`Bounds::per_axis`] for
+    /// fallible validation of user-supplied bounds. (Inside the job
+    /// service the panic is caught and reported as that job's error.)
+    pub fn uniform(d: usize, lo: f64, hi: f64) -> Bounds {
+        assert!(d >= 1, "dimension must be >= 1");
+        assert!(lo < hi, "need lo < hi, got [{lo}, {hi}]");
+        Bounds {
+            lo: vec![lo; d],
+            hi: vec![hi; d],
+        }
+    }
+
+    /// Arbitrary per-axis `(lo, hi)` pairs. Validates each axis.
+    pub fn per_axis(pairs: &[(f64, f64)]) -> Result<Bounds> {
+        if pairs.is_empty() {
+            return Err(Error::Config("bounds need at least one axis".into()));
+        }
+        for (i, &(lo, hi)) in pairs.iter().enumerate() {
+            if !lo.is_finite() || !hi.is_finite() {
+                return Err(Error::Config(format!(
+                    "axis {i}: bounds must be finite, got [{lo}, {hi}]"
+                )));
+            }
+            if !(lo < hi) {
+                return Err(Error::Config(format!(
+                    "axis {i}: need lo < hi, got [{lo}, {hi}]"
+                )));
+            }
+        }
+        Ok(Bounds {
+            lo: pairs.iter().map(|p| p.0).collect(),
+            hi: pairs.iter().map(|p| p.1).collect(),
+        })
+    }
+
+    /// Number of axes.
+    pub fn dim(&self) -> usize {
+        self.lo.len()
+    }
+
+    /// Lower bound of one axis.
+    #[inline]
+    pub fn lo(&self, axis: usize) -> f64 {
+        self.lo[axis]
+    }
+
+    /// Upper bound of one axis.
+    #[inline]
+    pub fn hi(&self, axis: usize) -> f64 {
+        self.hi[axis]
+    }
+
+    /// Width of one axis.
+    #[inline]
+    pub fn span(&self, axis: usize) -> f64 {
+        self.hi[axis] - self.lo[axis]
+    }
+
+    /// Volume of the box (the global Jacobian of the unit-box map).
+    pub fn volume(&self) -> f64 {
+        (0..self.dim()).map(|i| self.span(i)).product()
+    }
+
+    /// `Some((lo, hi))` when every axis shares the same bounds — the
+    /// case legacy `Integrand::lo()/hi()` callers can represent.
+    pub fn as_uniform(&self) -> Option<(f64, f64)> {
+        let (lo, hi) = (self.lo[0], self.hi[0]);
+        if self.lo.iter().all(|&l| l == lo) && self.hi.iter().all(|&h| h == hi) {
+            Some((lo, hi))
+        } else {
+            None
+        }
+    }
+
+    /// Smallest uniform box containing this one (legacy hull).
+    pub fn hull(&self) -> (f64, f64) {
+        let lo = self.lo.iter().cloned().fold(f64::INFINITY, f64::min);
+        let hi = self.hi.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        (lo, hi)
+    }
+
+    /// Hot-loop setup: unpack per-axis `lo` and `span` into
+    /// caller-provided arrays (first `dim()` slots) and return the box
+    /// volume. One definition shared by every sampler (engine,
+    /// adaptive engine, gVegas-sim) so the affine map can't diverge.
+    pub fn unpack(&self, lo_out: &mut [f64], span_out: &mut [f64]) -> f64 {
+        let d = self.dim();
+        assert!(lo_out.len() >= d && span_out.len() >= d, "unpack buffers too small");
+        let mut vol = 1.0f64;
+        for i in 0..d {
+            lo_out[i] = self.lo(i);
+            span_out[i] = self.span(i);
+            vol *= span_out[i];
+        }
+        vol
+    }
+
+    /// Affine map of a unit-box point into this box.
+    pub fn map_unit(&self, z: &[f64], out: &mut [f64]) {
+        assert_eq!(z.len(), self.dim());
+        assert_eq!(out.len(), self.dim());
+        for i in 0..self.dim() {
+            out[i] = self.lo[i] + z[i] * self.span(i);
+        }
+    }
+
+    /// The per-axis `(lo, hi)` pairs.
+    pub fn to_pairs(&self) -> Vec<(f64, f64)> {
+        self.lo.iter().cloned().zip(self.hi.iter().cloned()).collect()
+    }
+}
+
 /// The paper's Algorithm-2 derived quantities (lines 3-8).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct Layout {
@@ -103,6 +239,38 @@ pub fn batch_size_heuristic(maxcalls: usize) -> usize {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn bounds_uniform_roundtrip() {
+        let b = Bounds::uniform(3, -1.0, 1.0);
+        assert_eq!(b.dim(), 3);
+        assert_eq!(b.as_uniform(), Some((-1.0, 1.0)));
+        assert_eq!(b.volume(), 8.0);
+        assert_eq!(b.hull(), (-1.0, 1.0));
+        let mut out = [0.0; 3];
+        b.map_unit(&[0.0, 0.5, 1.0], &mut out);
+        assert_eq!(out, [-1.0, 0.0, 1.0]);
+    }
+
+    #[test]
+    fn bounds_per_axis() {
+        let b = Bounds::per_axis(&[(0.0, 2.0), (1.0, 3.0)]).unwrap();
+        assert_eq!(b.dim(), 2);
+        assert_eq!(b.as_uniform(), None);
+        assert_eq!(b.volume(), 4.0);
+        assert_eq!(b.span(1), 2.0);
+        assert_eq!(b.hull(), (0.0, 3.0));
+        assert_eq!(b.to_pairs(), vec![(0.0, 2.0), (1.0, 3.0)]);
+    }
+
+    #[test]
+    fn bounds_reject_bad_axes() {
+        assert!(Bounds::per_axis(&[]).is_err());
+        assert!(Bounds::per_axis(&[(1.0, 1.0)]).is_err());
+        assert!(Bounds::per_axis(&[(2.0, 1.0)]).is_err());
+        assert!(Bounds::per_axis(&[(0.0, f64::INFINITY)]).is_err());
+        assert!(Bounds::per_axis(&[(f64::NAN, 1.0)]).is_err());
+    }
 
     #[test]
     fn layout_matches_paper_rule() {

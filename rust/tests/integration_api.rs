@@ -1,0 +1,273 @@
+//! Facade-level integration tests: closure integrands over per-axis
+//! bounds, grid export/warm-start, observers, and escalation through
+//! `api::Integrator`.
+
+use mcubes::prelude::*;
+
+/// A closure integrand over a non-uniform box integrates end-to-end on
+/// the native backend with the correct result vs analytic truth.
+#[test]
+fn closure_per_axis_bounds_matches_analytic_truth() {
+    // ∫∫∫ x·y·z over [0,2]×[1,3]×[0,1]:
+    //   (2²/2) · ((3²-1²)/2) · (1/2) = 2 · 4 · 0.5 = 4.
+    let bounds = Bounds::per_axis(&[(0.0, 2.0), (1.0, 3.0), (0.0, 1.0)]).unwrap();
+    let out = Integrator::from_fn(3, bounds, |x| x[0] * x[1] * x[2])
+        .unwrap()
+        .maxcalls(1 << 14)
+        .tolerance(1e-3)
+        .seed(3)
+        .run()
+        .unwrap();
+    assert!(out.converged, "{out:?}");
+    let rel = ((out.integral - 4.0) / 4.0).abs();
+    assert!(rel < 5e-3, "I = {} (rel {rel:.2e})", out.integral);
+}
+
+/// A closure over per-axis bounds agrees with the affinely rescaled
+/// registry integrand it was built from: same seed, same layout, the
+/// two runs sample the same unit-box points, so the estimates agree to
+/// affine-roundtrip rounding.
+#[test]
+fn closure_agrees_with_rescaled_registry_integrand() {
+    let d = 5;
+    let f4 = mcubes::integrands::by_name("f4", d).unwrap();
+
+    // Physical box [a_i, b_i] per axis; g(y) = f4(u(y)) / vol where
+    // u_i = (y_i - a_i) / (b_i - a_i). Then ∫_box g = ∫_unit f4.
+    let pairs = [(0.0, 2.0), (-1.0, 1.0), (0.5, 1.5), (10.0, 14.0), (0.0, 0.5)];
+    let bounds = Bounds::per_axis(&pairs).unwrap();
+    let vol = bounds.volume();
+    let f4_inner = f4.clone();
+    let rescaled = move |y: &[f64]| {
+        let mut u = [0.0f64; 5];
+        for i in 0..5 {
+            u[i] = (y[i] - pairs[i].0) / (pairs[i].1 - pairs[i].0);
+        }
+        f4_inner.eval(&u) / vol
+    };
+
+    let mk_cfg = |intg: Integrator| {
+        intg.maxcalls(1 << 14)
+            .tolerance(1e-12) // run a fixed number of iterations
+            .max_iterations(6)
+            .adjust_iterations(4)
+            .skip_iterations(0)
+            .seed(99)
+    };
+    let reference = mk_cfg(Integrator::new(f4.clone())).run().unwrap();
+    let scaled = mk_cfg(Integrator::from_fn(d, bounds, rescaled).unwrap())
+        .run()
+        .unwrap();
+
+    assert_eq!(reference.iterations, scaled.iterations);
+    let rel = ((reference.integral - scaled.integral) / reference.integral).abs();
+    assert!(
+        rel < 1e-9,
+        "unit-box {} vs rescaled {} (rel {rel:.2e})",
+        reference.integral,
+        scaled.integral
+    );
+    let rel_s = ((reference.sigma - scaled.sigma) / reference.sigma).abs();
+    assert!(rel_s < 1e-6, "sigma rel {rel_s:.2e}");
+}
+
+/// GridState round-trips (export → JSON → import) and the imported
+/// grid is the donor grid.
+#[test]
+fn grid_state_round_trips() {
+    let mut donor = Integrator::from_registry("f4", 5)
+        .unwrap()
+        .maxcalls(1 << 13)
+        .tolerance(1e-3)
+        .seed(21);
+    donor.run().unwrap();
+    let grid = donor.export_grid().expect("grid after run");
+    assert_eq!(grid.d(), 5);
+
+    let json = grid.to_json().to_json();
+    let back = GridState::from_json(&mcubes::util::json::parse(&json).unwrap()).unwrap();
+    assert_eq!(back, grid);
+
+    let path = std::env::temp_dir().join("mcubes_api_grid_roundtrip.json");
+    grid.save(&path).unwrap();
+    let from_file = GridState::load(&path).unwrap();
+    assert_eq!(from_file, grid);
+    let _ = std::fs::remove_file(path);
+}
+
+/// Warm-started runs are seed-reproducible: the same donor grid and
+/// seed produce bit-identical outputs.
+#[test]
+fn warm_start_is_seed_reproducible() {
+    let mut donor = Integrator::from_registry("f4", 5)
+        .unwrap()
+        .maxcalls(1 << 13)
+        .tolerance(1e-3)
+        .seed(5);
+    donor.run().unwrap();
+    let grid = donor.export_grid().unwrap();
+
+    let warm_run = || {
+        Integrator::from_registry("f4", 5)
+            .unwrap()
+            .maxcalls(1 << 13)
+            .tolerance(1e-3)
+            .seed(1234)
+            .warm_start(grid.clone())
+            .adjust_iterations(0)
+            .skip_iterations(0)
+            .run()
+            .unwrap()
+    };
+    let a = warm_run();
+    let b = warm_run();
+    assert_eq!(a.integral, b.integral);
+    assert_eq!(a.sigma, b.sigma);
+    assert_eq!(a.iterations, b.iterations);
+}
+
+/// A warm start reproduces the donor's adapted-grid behavior: it
+/// converges in fewer iterations than a cold start, because the
+/// importance grid no longer has to be learned.
+#[test]
+fn warm_start_converges_faster_than_cold() {
+    // f4 (sharp 5-D Gaussian) at a modest budget needs several
+    // adjustment iterations from a uniform grid.
+    let cold_builder = || {
+        Integrator::from_registry("f4", 5)
+            .unwrap()
+            .maxcalls(1 << 14)
+            .tolerance(1e-3)
+            .max_iterations(20)
+            .adjust_iterations(12)
+            .skip_iterations(2)
+            .seed(17)
+    };
+    let mut cold = cold_builder();
+    let cold_out = cold.run().unwrap();
+    assert!(cold_out.converged, "{cold_out:?}");
+    let grid = cold.export_grid().unwrap();
+
+    let warm_out = Integrator::from_registry("f4", 5)
+        .unwrap()
+        .maxcalls(1 << 14)
+        .tolerance(1e-3)
+        .max_iterations(20)
+        .adjust_iterations(0) // grid already adapted
+        .skip_iterations(0)
+        .seed(18)
+        .warm_start(grid)
+        .run()
+        .unwrap();
+    assert!(warm_out.converged, "{warm_out:?}");
+    assert!(
+        warm_out.iterations < cold_out.iterations,
+        "warm {} !< cold {}",
+        warm_out.iterations,
+        cold_out.iterations
+    );
+}
+
+/// Observer events narrate the whole run: indices are consecutive and
+/// cumulative across escalation levels, the last event is converged
+/// when the output is, and running estimates match the output.
+#[test]
+fn observer_trace_is_consistent() {
+    use std::sync::{Arc, Mutex};
+    let events: Arc<Mutex<Vec<(usize, f64, bool)>>> = Arc::new(Mutex::new(Vec::new()));
+    let sink = Arc::clone(&events);
+    let out = Integrator::from_registry("f3", 3)
+        .unwrap()
+        .maxcalls(1 << 12)
+        .tolerance(2e-4)
+        .escalate(3, 4)
+        .seed(8)
+        .observe(move |ev| {
+            sink.lock()
+                .unwrap()
+                .push((ev.iteration, ev.rel_err, ev.converged));
+        })
+        .run()
+        .unwrap();
+    let events = events.lock().unwrap();
+    assert_eq!(events.len(), out.iterations);
+    for (i, &(it, _, _)) in events.iter().enumerate() {
+        assert_eq!(it, i, "iteration indices must be cumulative");
+    }
+    let last = events.last().unwrap();
+    assert_eq!(last.2, out.converged);
+    if out.converged {
+        assert!(last.1 <= 2e-4, "final rel_err {} > tau", last.1);
+    }
+}
+
+/// The CPU baselines honor per-axis bounds too (they sample through
+/// `Integrand::bounds()`, not the legacy scalar hull).
+#[test]
+fn baselines_honor_per_axis_bounds() {
+    use mcubes::baselines::{miser_integrate, plain_mc_integrate, MiserConfig, PlainMcConfig};
+    // ∫∫ x·y over [0,2]×[1,3] = 8; the hull box [0,3]² would give a
+    // very different answer (81/4), so this catches hull sampling.
+    let bounds = Bounds::per_axis(&[(0.0, 2.0), (1.0, 3.0)]).unwrap();
+    let f = FnIntegrand::new(2, bounds, |x: &[f64]| x[0] * x[1])
+        .unwrap()
+        .into_ref();
+    let p = plain_mc_integrate(
+        &*f,
+        &PlainMcConfig {
+            calls: 100_000,
+            seed: 9,
+        },
+    );
+    assert!(
+        (p.integral - 8.0).abs() < 6.0 * p.sigma + 0.05,
+        "plain MC I = {} sigma = {}",
+        p.integral,
+        p.sigma
+    );
+    let m = miser_integrate(
+        &*f,
+        &MiserConfig {
+            calls: 100_000,
+            seed: 9,
+            ..Default::default()
+        },
+    );
+    assert!(
+        (m.integral - 8.0).abs() < 6.0 * m.sigma + 0.05,
+        "MISER I = {} sigma = {}",
+        m.integral,
+        m.sigma
+    );
+}
+
+/// The legacy string-keyed flow still works through IntegrandSpec.
+#[test]
+fn integrand_spec_drives_the_facade() {
+    let out = Integrator::from_spec(IntegrandSpec::registry("f5", 4))
+        .maxcalls(1 << 13)
+        .tolerance(1e-3)
+        .seed(2)
+        .run()
+        .unwrap();
+    assert!(out.converged);
+
+    let custom = IntegrandSpec::custom(
+        FnIntegrand::unit(2, |x: &[f64]| (x[0] + x[1]).sin())
+            .named("sinsum")
+            .into_ref(),
+    );
+    let out = Integrator::from_spec(custom)
+        .maxcalls(1 << 13)
+        .tolerance(1e-3)
+        .seed(2)
+        .run()
+        .unwrap();
+    // ∫∫ sin(x+y) over [0,1]² = 2 sin(1) (1 - cos(1)) ≈ 0.7736445
+    let truth = 2.0 * 1.0f64.sin() * (1.0 - 1.0f64.cos());
+    assert!(
+        ((out.integral - truth) / truth).abs() < 5e-3,
+        "I = {} truth = {truth}",
+        out.integral
+    );
+}

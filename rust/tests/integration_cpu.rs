@@ -1,24 +1,23 @@
-//! Integration tests: the full m-Cubes driver on the native engine
-//! against the paper's integrand suite and known true values.
+//! Integration tests: the full m-Cubes driver (via the `Integrator`
+//! facade) on the native engine against the paper's integrand suite
+//! and known true values.
 
+use mcubes::api::Integrator;
 use mcubes::baselines::{
     gvegas_integrate, miser_integrate, plain_mc_integrate, vegas_serial_integrate, zmc_integrate,
     GvegasConfig, MiserConfig, PlainMcConfig, ZmcConfig,
 };
-use mcubes::coordinator::{integrate_native, integrate_native_adaptive, JobConfig};
 use mcubes::grid::GridMode;
-use mcubes::integrands::by_name;
+use mcubes::integrands::{by_name, IntegrandRef};
 
-fn cfg(calls: usize, tau: f64, seed: u32) -> JobConfig {
-    JobConfig {
-        maxcalls: calls,
-        tau_rel: tau,
-        itmax: 20,
-        ita: 12,
-        skip: 2,
-        seed,
-        ..Default::default()
-    }
+fn facade(f: &IntegrandRef, calls: usize, tau: f64, seed: u32) -> Integrator {
+    Integrator::new(f.clone())
+        .maxcalls(calls)
+        .tolerance(tau)
+        .max_iterations(20)
+        .adjust_iterations(12)
+        .skip_iterations(2)
+        .seed(seed)
 }
 
 /// The paper's evaluation suite at 3 digits of precision.
@@ -35,7 +34,7 @@ fn paper_suite_three_digits() {
     ];
     for (name, d, calls) in cases {
         let f = by_name(name, d).unwrap();
-        let out = integrate_native(&*f, &cfg(calls, 1e-3, 17)).unwrap();
+        let out = facade(&f, calls, 1e-3, 17).run().unwrap();
         assert!(out.converged, "{name} d={d}: {out:?}");
         let truth = f.true_value().unwrap();
         let rel = ((out.integral - truth) / truth).abs();
@@ -56,7 +55,7 @@ fn error_estimates_honest_across_seeds() {
     let mut within_3_sigma = 0;
     let n_runs = 10;
     for seed in 0..n_runs {
-        let out = integrate_native(&*f, &cfg(1 << 14, 1e-3, 100 + seed)).unwrap();
+        let out = facade(&f, 1 << 14, 1e-3, 100 + seed).run().unwrap();
         if (out.integral - truth).abs() <= 3.0 * out.sigma {
             within_3_sigma += 1;
         }
@@ -74,7 +73,7 @@ fn precision_ladder_first_rungs() {
     let f = by_name("f2", 6).unwrap();
     let truth = f.true_value().unwrap();
     for (tau, calls) in [(1e-3, 1 << 15), (2e-4, 1 << 19)] {
-        let out = integrate_native(&*f, &cfg(calls, tau, 5)).unwrap();
+        let out = facade(&f, calls, tau, 5).run().unwrap();
         assert!(out.converged, "tau={tau}: {out:?}");
         assert!(out.rel_err <= tau, "claimed {} > tau {tau}", out.rel_err);
         let rel = ((out.integral - truth) / truth).abs();
@@ -87,10 +86,11 @@ fn precision_ladder_first_rungs() {
 fn onedim_variant_matches_on_symmetric() {
     for (name, d, calls) in [("f4", 8, 1 << 15), ("f5", 8, 1 << 14)] {
         let f = by_name(name, d).unwrap();
-        let per_axis = integrate_native(&*f, &cfg(calls, 1e-3, 3)).unwrap();
-        let mut c1 = cfg(calls, 1e-3, 3);
-        c1.grid_mode = GridMode::Shared1D;
-        let onedim = integrate_native(&*f, &c1).unwrap();
+        let per_axis = facade(&f, calls, 1e-3, 3).run().unwrap();
+        let onedim = facade(&f, calls, 1e-3, 3)
+            .grid_mode(GridMode::Shared1D)
+            .run()
+            .unwrap();
         let truth = f.true_value().unwrap();
         for (label, out) in [("per-axis", &per_axis), ("1d", &onedim)] {
             let rel = ((out.integral - truth) / truth).abs();
@@ -104,8 +104,7 @@ fn onedim_variant_matches_on_symmetric() {
 #[test]
 fn adaptive_escalation_reaches_tight_tau() {
     let f = by_name("f3", 3).unwrap();
-    let base = cfg(1 << 13, 4e-5, 9);
-    let out = integrate_native_adaptive(&*f, &base, 5, 4).unwrap();
+    let out = facade(&f, 1 << 13, 4e-5, 9).escalate(5, 4).run().unwrap();
     assert!(out.converged, "{out:?}");
     let truth = f.true_value().unwrap();
     let rel = ((out.integral - truth) / truth).abs();
@@ -170,19 +169,15 @@ fn baselines_agree_on_smooth_integrand() {
 fn gvegas_and_mcubes_share_the_stream() {
     let f = by_name("f3", 3).unwrap();
     // One iteration each, no adaptation: same estimate expected.
-    let mc = integrate_native(
-        &*f,
-        &JobConfig {
-            maxcalls: 1 << 12,
-            itmax: 1,
-            ita: 0,
-            skip: 0,
-            tau_rel: 1e-12,
-            seed: 77,
-            ..Default::default()
-        },
-    )
-    .unwrap();
+    let mc = Integrator::new(f.clone())
+        .maxcalls(1 << 12)
+        .max_iterations(1)
+        .adjust_iterations(0)
+        .skip_iterations(0)
+        .tolerance(1e-12)
+        .seed(77)
+        .run()
+        .unwrap();
     let gv = gvegas_integrate(
         &*f,
         &GvegasConfig {
@@ -203,11 +198,16 @@ fn gvegas_and_mcubes_share_the_stream() {
 #[test]
 fn fa_table1_estimate() {
     let f = by_name("fA", 6).unwrap();
-    let mut base = cfg(1 << 17, 2e-2, 33);
-    base.itmax = 10;
-    base.ita = 10;
-    base.skip = 1;
-    let out = integrate_native_adaptive(&*f, &base, 2, 4).unwrap();
+    let out = Integrator::new(f.clone())
+        .maxcalls(1 << 17)
+        .tolerance(2e-2)
+        .max_iterations(10)
+        .adjust_iterations(10)
+        .skip_iterations(1)
+        .seed(33)
+        .escalate(2, 4)
+        .run()
+        .unwrap();
     let truth = f.true_value().unwrap(); // -49.165073
     assert!(
         (out.integral - truth).abs() < 4.0 * out.sigma.max(truth.abs() * 5e-2),

@@ -5,11 +5,13 @@
 //! skip politely if the directory is missing (e.g. plain `cargo test`
 //! in a fresh checkout).
 
-use mcubes::coordinator::{run_driver, JobConfig, PjrtBackend, VSampleBackend};
+use mcubes::api::{BackendSpec, Integrator};
+use mcubes::coordinator::{drive, JobConfig, PjrtBackend, VSampleBackend};
 use mcubes::grid::{Bins, GridMode};
 use mcubes::integrands::by_name;
 use mcubes::rng::philox4x32;
 use mcubes::runtime::{PjrtRuntime, Registry};
+use mcubes::strat::Bounds;
 use mcubes::util::json::parse;
 use std::path::Path;
 
@@ -166,34 +168,65 @@ fn native_engine_matches_python_goldens() {
 }
 
 /// The PJRT artifact and native engine agree iteration-by-iteration
-/// through a full adaptive run (grid feedback included).
+/// through a full adaptive run (grid feedback included), both driven
+/// through the `Integrator` facade.
 #[test]
 fn pjrt_vs_native_full_driver() {
     let Some(dir) = artifacts_dir() else { return };
     let reg = Registry::load(dir).unwrap();
-    let runtime = PjrtRuntime::cpu().unwrap();
     for name in ["f4", "f2", "cosmo"] {
-        let backend = PjrtBackend::load(&runtime, &reg, name, 0).unwrap();
-        let meta = backend.meta().clone();
-        let f = by_name(&meta.integrand, meta.dim).unwrap();
-        let cfg = JobConfig {
-            maxcalls: meta.maxcalls,
-            nb: meta.nb,
-            nblocks: meta.nblocks,
-            itmax: 4,
-            ita: 3,
-            skip: 0,
-            tau_rel: 1e-14, // force all iterations
-            seed: 555,
-            ..Default::default()
+        let meta = reg.select(name, true, 4).unwrap().clone();
+        let run = |backend: BackendSpec| {
+            Integrator::from_registry(&meta.integrand, meta.dim)
+                .unwrap()
+                .backend(backend)
+                .config(JobConfig {
+                    maxcalls: meta.maxcalls,
+                    nb: meta.nb,
+                    nblocks: meta.nblocks,
+                    itmax: 4,
+                    ita: 3,
+                    skip: 0,
+                    tau_rel: 1e-14, // force all iterations
+                    seed: 555,
+                    ..Default::default()
+                })
+                .run()
+                .unwrap()
         };
-        let pjrt = run_driver(&backend, &cfg).unwrap();
-        let native = mcubes::coordinator::integrate_native(&*f, &cfg).unwrap();
+        let pjrt = run(BackendSpec::Pjrt {
+            artifacts_dir: dir.to_string(),
+        });
+        let native = run(BackendSpec::Native);
         let rel = ((pjrt.integral - native.integral) / native.integral).abs();
         assert!(rel < 1e-9, "{name}: pjrt vs native rel {rel:.2e}");
         let rel_s = ((pjrt.sigma - native.sigma) / native.sigma).abs();
         assert!(rel_s < 1e-6, "{name}: sigma rel {rel_s:.2e}");
     }
+}
+
+/// `drive` on a raw PJRT backend still works for low-level callers.
+#[test]
+fn drive_runs_raw_pjrt_backend() {
+    let Some(dir) = artifacts_dir() else { return };
+    let reg = Registry::load(dir).unwrap();
+    let runtime = PjrtRuntime::cpu().unwrap();
+    let backend = PjrtBackend::load(&runtime, &reg, "f4", 0).unwrap();
+    let meta = backend.meta().clone();
+    let cfg = JobConfig {
+        maxcalls: meta.maxcalls,
+        nb: meta.nb,
+        nblocks: meta.nblocks,
+        itmax: 2,
+        ita: 1,
+        skip: 0,
+        tau_rel: 1e-14,
+        seed: 1,
+        ..Default::default()
+    };
+    let outcome = drive(&backend, &cfg, None, None).unwrap();
+    assert_eq!(outcome.output.iterations, 2);
+    assert_eq!(outcome.grid.d(), meta.dim);
 }
 
 /// The no-adjust artifact returns the same estimates as the adjust one
@@ -276,6 +309,6 @@ fn pjrt_backend_reports_meta() {
     let runtime = PjrtRuntime::cpu().unwrap();
     let backend = PjrtBackend::load(&runtime, &reg, "fB", 0).unwrap();
     assert_eq!(backend.layout().d, 9);
-    assert_eq!(backend.bounds(), (-1.0, 1.0));
+    assert_eq!(backend.bounds(), Bounds::uniform(9, -1.0, 1.0));
     assert_eq!(backend.name(), "pjrt");
 }

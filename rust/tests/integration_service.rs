@@ -1,6 +1,7 @@
 //! Service-level integration tests: batched jobs, mixed workloads,
-//! failure isolation, and metric sanity.
+//! failure isolation, closure jobs, warm starts, and metric sanity.
 
+use mcubes::api::FnIntegrand;
 use mcubes::coordinator::{IntegrationService, JobConfig, JobRequest};
 
 fn quick(seed: u32) -> JobConfig {
@@ -17,17 +18,24 @@ fn quick(seed: u32) -> JobConfig {
 
 #[test]
 fn mixed_suite_batch() {
-    let suite = [("f2", 6), ("f3", 3), ("f4", 5), ("f5", 8), ("f6", 6), ("cosmo", 6)];
+    let suite = [
+        ("f2", 6),
+        ("f3", 3),
+        ("f4", 5),
+        ("f5", 8),
+        ("f6", 6),
+        ("cosmo", 6),
+    ];
     let mut svc = IntegrationService::new(4);
     let n = 18;
     for i in 0..n {
         let (name, d) = suite[i % suite.len()];
-        svc.submit(JobRequest {
-            id: i as u64,
-            integrand: name.into(),
-            dim: d,
-            config: quick(500 + i as u32),
-        });
+        svc.submit(JobRequest::registry(
+            i as u64,
+            name,
+            d,
+            quick(500 + i as u32),
+        ));
     }
     let (results, metrics) = svc.drain().unwrap();
     assert_eq!(metrics.jobs, n);
@@ -36,6 +44,7 @@ fn mixed_suite_batch() {
         let out = r.outcome.as_ref().unwrap();
         assert!(out.integral.is_finite());
         assert!(out.sigma.is_finite());
+        assert!(r.grid.is_some());
     }
 }
 
@@ -43,18 +52,20 @@ fn mixed_suite_batch() {
 fn throughput_scales_with_workers() {
     // 1 worker vs 4 workers on the same 12-job batch: wall time must
     // drop meaningfully (not necessarily 4x on CI machines).
-    let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let cores = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1);
     if cores < 2 {
         eprintln!("SKIP: single-core machine, no parallel speedup possible");
         return;
     }
     let make_batch = |svc: &mut IntegrationService| {
         for i in 0..12u64 {
-            svc.submit(JobRequest {
-                id: i,
-                integrand: "f5".into(),
-                dim: 6,
-                config: JobConfig {
+            svc.submit(JobRequest::registry(
+                i,
+                "f5",
+                6,
+                JobConfig {
                     maxcalls: 1 << 17,
                     itmax: 6,
                     ita: 4,
@@ -63,7 +74,7 @@ fn throughput_scales_with_workers() {
                     seed: 40 + i as u32,
                     ..Default::default()
                 },
-            });
+            ));
         }
     };
     let mut s1 = IntegrationService::new(1);
@@ -85,12 +96,7 @@ fn failures_are_isolated() {
     let mut svc = IntegrationService::new(3);
     for i in 0..9u64 {
         let name = if i % 3 == 0 { "doesnotexist" } else { "f3" };
-        svc.submit(JobRequest {
-            id: i,
-            integrand: name.into(),
-            dim: 3,
-            config: quick(i as u32),
-        });
+        svc.submit(JobRequest::registry(i, name, 3, quick(i as u32)));
     }
     let (results, metrics) = svc.drain().unwrap();
     assert_eq!(metrics.failures, 3);
@@ -108,16 +114,81 @@ fn queue_time_reflects_backlog() {
     // With one worker and several jobs, later jobs must wait.
     let mut svc = IntegrationService::new(1);
     for i in 0..6u64 {
-        svc.submit(JobRequest {
-            id: i,
-            integrand: "f4".into(),
-            dim: 5,
-            config: quick(i as u32),
-        });
+        svc.submit(JobRequest::registry(i, "f4", 5, quick(i as u32)));
     }
     let (results, metrics) = svc.drain().unwrap();
     let first = results.iter().find(|r| r.id == 0).unwrap();
     let last = results.iter().find(|r| r.id == 5).unwrap();
     assert!(last.queue_time >= first.queue_time);
     assert!(metrics.mean_queue_time > 0.0);
+}
+
+#[test]
+fn closure_jobs_mix_with_registry_jobs() {
+    let mut svc = IntegrationService::new(3);
+    svc.submit(JobRequest::registry(0, "f3", 3, quick(1)));
+    svc.submit(JobRequest::custom(
+        1,
+        FnIntegrand::unit(2, |x: &[f64]| 4.0 * x[0] * x[1])
+            .named("4xy")
+            .with_true_value(1.0)
+            .into_ref(),
+        quick(2),
+    ));
+    svc.submit(JobRequest::registry(2, "f5", 4, quick(3)));
+    let (results, metrics) = svc.drain().unwrap();
+    assert_eq!(metrics.failures, 0);
+    assert_eq!(results[1].integrand, "4xy");
+    let out = results[1].outcome.as_ref().unwrap();
+    assert!((out.integral - 1.0).abs() < 0.05, "I = {}", out.integral);
+}
+
+#[test]
+fn warm_start_round_trips_through_service() {
+    // Grid exported by one batch warm-starts the next; warm jobs skip
+    // the adjust phase and still converge.
+    let mut svc = IntegrationService::new(2);
+    svc.submit(JobRequest::registry(
+        0,
+        "f4",
+        5,
+        JobConfig {
+            maxcalls: 1 << 13,
+            itmax: 20,
+            ita: 12,
+            skip: 2,
+            tau_rel: 5e-3,
+            seed: 7,
+            ..Default::default()
+        },
+    ));
+    let (results, _) = svc.drain().unwrap();
+    let grid = results[0].grid.clone().expect("donor grid");
+
+    let mut svc = IntegrationService::new(2);
+    for i in 0..3u64 {
+        svc.submit(
+            JobRequest::registry(
+                i,
+                "f4",
+                5,
+                JobConfig {
+                    maxcalls: 1 << 13,
+                    itmax: 20,
+                    ita: 0,
+                    skip: 0,
+                    tau_rel: 5e-3,
+                    seed: 70 + i as u32,
+                    ..Default::default()
+                },
+            )
+            .with_warm_start(grid.clone()),
+        );
+    }
+    let (warm_results, metrics) = svc.drain().unwrap();
+    assert_eq!(metrics.failures, 0);
+    for r in &warm_results {
+        let out = r.outcome.as_ref().unwrap();
+        assert!(out.converged, "warm job {} did not converge: {out:?}", r.id);
+    }
 }
