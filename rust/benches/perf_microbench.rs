@@ -3,14 +3,16 @@
 //!   * native V-Sample throughput (evals/s) per integrand
 //!   * integrand-evaluation share of total time (paper §5.3: <1%-18%)
 //!   * bin-adjustment (smooth+rebin) cost
-//! CSV: results/perf_microbench.csv
+//!   * batched vs scalar-default evaluation (the PointBlock redesign)
+//! CSV: results/perf_microbench.csv; `BENCH {...}` JSON lines record
+//! the batch-vs-scalar series for the perf trajectory.
 
-use mcubes::engine::{NativeEngine, VSampleOpts};
+use mcubes::engine::{NativeEngine, ScalarEval, VSampleOpts};
 use mcubes::grid::Bins;
 use mcubes::integrands::by_name;
 use mcubes::rng::uniforms_into;
 use mcubes::strat::Layout;
-use mcubes::util::benchkit::{bench, black_box, BenchOpts};
+use mcubes::util::benchkit::{bench, black_box, emit_bench, BenchOpts};
 use mcubes::util::table::Table;
 
 fn main() {
@@ -126,6 +128,62 @@ fn main() {
             "ms".into(),
             format!("{:.4}", stats.median_ms()),
         ]);
+    }
+
+    // ---- Batched vs scalar-default evaluation -------------------------
+    // Same engine pipeline twice: once with the integrand's hand-batched
+    // eval_batch, once through ScalarEval (the default gather-and-call
+    // loop). Results are bitwise identical (property-tested); only the
+    // evaluation organization differs — exactly the redesign's payoff.
+    {
+        println!("\nbatched vs scalar-default evaluation (V-Sample, 1 thread):");
+        let mut table = Table::new(&[
+            "integrand", "d", "batch ms", "scalar ms", "speedup", "batch Mevals/s",
+        ]);
+        for (name, d) in [("f4", 5), ("f4", 8), ("f5", 5), ("f5", 8)] {
+            let f = by_name(name, d).unwrap();
+            let calls = 1 << 17;
+            let layout = Layout::compute(d, calls, 50, 8).unwrap();
+            let bins = Bins::uniform(d, 50);
+            let vopts = VSampleOpts {
+                seed: 1,
+                iteration: 0,
+                adjust: true,
+                threads: 1,
+            };
+            let t_batch = bench(opts, || {
+                black_box(NativeEngine.vsample(&*f, &layout, &bins, &vopts))
+            });
+            let scalar = ScalarEval(&*f);
+            let t_scalar = bench(opts, || {
+                black_box(NativeEngine.vsample(&scalar, &layout, &bins, &vopts))
+            });
+            let speedup = t_scalar.median_ms() / t_batch.median_ms();
+            let mevals = layout.calls() as f64 / (t_batch.median_ms() / 1e3) / 1e6;
+            table.row(vec![
+                name.into(),
+                d.to_string(),
+                format!("{:.2}", t_batch.median_ms()),
+                format!("{:.2}", t_scalar.median_ms()),
+                format!("{speedup:.2}x"),
+                format!("{mevals:.2}"),
+            ]);
+            let tag = format!("batch_vs_scalar_{name}_d{d}");
+            emit_bench(&tag, "batch_ms", t_batch.median_ms(), "ms");
+            emit_bench(&tag, "scalar_ms", t_scalar.median_ms(), "ms");
+            emit_bench(&tag, "speedup", speedup, "x");
+            csv.row(vec![
+                tag.clone(),
+                "speedup".into(),
+                format!("{speedup:.4}"),
+            ]);
+            csv.row(vec![
+                tag,
+                "batch_mevals_per_sec".into(),
+                format!("{mevals:.3}"),
+            ]);
+        }
+        println!("{}", table.render());
     }
 
     // ---- Adjust vs no-adjust engine delta (two-phase payoff) ----------

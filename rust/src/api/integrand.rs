@@ -3,11 +3,16 @@
 //! `FnIntegrand` adapts any `Fn(&[f64]) -> f64` closure (or fn pointer)
 //! into the `Integrand` trait, with arbitrary per-axis bounds — the
 //! user-defined-integrand-first surface the paper's "easy to define
-//! stateful integrals" pitch calls for. `IntegrandSpec` is the
-//! serializable-ish handle the service and `Integrator` share: either a
-//! registry name (resolvable, artifact-addressable) or a custom
-//! `IntegrandRef`.
+//! stateful integrals" pitch calls for. `FnBatchIntegrand` is its
+//! batch-first twin: the closure receives a whole structure-of-arrays
+//! [`PointBlock`] per call, so user integrands get the same
+//! one-virtual-call-per-block hot path as the built-in registry.
+//! `IntegrandSpec` is the serializable-ish handle the service and
+//! `Integrator` share: either a registry name (resolvable,
+//! artifact-addressable) or a custom `IntegrandRef` (scalar *or*
+//! batch — both erase to the same handle).
 
+use crate::engine::block::PointBlock;
 use crate::error::Result;
 use crate::integrands::{by_name, Integrand, IntegrandRef};
 use crate::strat::Bounds;
@@ -110,6 +115,132 @@ where
     #[inline]
     fn eval(&self, x: &[f64]) -> f64 {
         (self.f)(x)
+    }
+
+    fn true_value(&self) -> Option<f64> {
+        self.true_value
+    }
+
+    fn symmetric(&self) -> bool {
+        self.symmetric
+    }
+
+    fn bounds(&self) -> Bounds {
+        self.bounds.clone()
+    }
+}
+
+/// A batch closure adapted into the `Integrand` trait.
+///
+/// The closure receives a [`PointBlock`] (column-major SoA: axis `i`'s
+/// coordinates are the contiguous slice `block.axis(i)`) and must write
+/// `out[k]` for every `k < block.len()` — raw integrand values, **no**
+/// Jacobian factor (the engine applies `block.jacobians()` during
+/// reduction). The scalar [`Integrand::eval`] bridge builds a one-point
+/// block, so anything that only needs single points (baselines with no
+/// batch path, debugging) still works.
+pub struct FnBatchIntegrand<F> {
+    f: F,
+    dim: usize,
+    bounds: Bounds,
+    hull: (f64, f64),
+    name: String,
+    true_value: Option<f64>,
+    symmetric: bool,
+}
+
+impl<F> FnBatchIntegrand<F>
+where
+    F: Fn(&PointBlock, &mut [f64]) + Send + Sync,
+{
+    /// Wrap a batch closure over an arbitrary box. Fails if
+    /// `bounds.dim() != dim`.
+    pub fn new(dim: usize, bounds: Bounds, f: F) -> Result<FnBatchIntegrand<F>> {
+        if bounds.dim() != dim {
+            return Err(crate::error::Error::Config(format!(
+                "bounds dimension {} != integrand dimension {dim}",
+                bounds.dim()
+            )));
+        }
+        let hull = bounds.hull();
+        Ok(FnBatchIntegrand {
+            f,
+            dim,
+            bounds,
+            hull,
+            name: "batch-closure".to_string(),
+            true_value: None,
+            symmetric: false,
+        })
+    }
+
+    /// Wrap a batch closure over the unit box `[0, 1]^dim`.
+    pub fn unit(dim: usize, f: F) -> FnBatchIntegrand<F> {
+        Self::new(dim, Bounds::unit(dim), f).expect("unit bounds always match")
+    }
+
+    /// Attach a display name (shows up in service results and reports).
+    pub fn named(mut self, name: impl Into<String>) -> Self {
+        self.name = name.into();
+        self
+    }
+
+    /// Attach a known reference value (enables accuracy reporting).
+    pub fn with_true_value(mut self, v: f64) -> Self {
+        self.true_value = Some(v);
+        self
+    }
+
+    /// Declare the integrand symmetric across axes (m-Cubes1D valid).
+    pub fn assume_symmetric(mut self) -> Self {
+        self.symmetric = true;
+        self
+    }
+
+    /// Erase into a shared `IntegrandRef` handle.
+    pub fn into_ref(self) -> IntegrandRef
+    where
+        F: 'static,
+    {
+        Arc::new(self)
+    }
+}
+
+impl<F> Integrand for FnBatchIntegrand<F>
+where
+    F: Fn(&PointBlock, &mut [f64]) + Send + Sync,
+{
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn dim(&self) -> usize {
+        self.dim
+    }
+
+    fn lo(&self) -> f64 {
+        self.hull.0
+    }
+
+    fn hi(&self) -> f64 {
+        self.hull.1
+    }
+
+    fn eval(&self, x: &[f64]) -> f64 {
+        // Scalar bridge: a one-point block through the batch closure.
+        // Allocates two Vecs per call — fine for debugging and spot
+        // checks, but hot loops must go through eval_batch (every
+        // engine/baseline path does).
+        let mut block = PointBlock::with_capacity(self.dim, 1);
+        block.push_point(x, 1.0);
+        let mut out = [0.0f64];
+        (self.f)(&block, &mut out);
+        out[0]
+    }
+
+    #[inline]
+    fn eval_batch(&self, block: &PointBlock, out: &mut [f64]) {
+        (self.f)(block, &mut out[..block.len()]);
     }
 
     fn true_value(&self) -> Option<f64> {
@@ -231,6 +362,52 @@ mod tests {
     #[test]
     fn fn_integrand_dim_mismatch_rejected() {
         assert!(FnIntegrand::new(3, Bounds::unit(2), |_: &[f64]| 0.0).is_err());
+    }
+
+    #[test]
+    fn batch_integrand_builders_and_scalar_bridge() {
+        let f = FnBatchIntegrand::unit(2, |block: &PointBlock, out: &mut [f64]| {
+            let (x, y) = (block.axis(0), block.axis(1));
+            for (k, o) in out.iter_mut().enumerate() {
+                *o = x[k] * y[k];
+            }
+        })
+        .named("xy-batch")
+        .with_true_value(0.25)
+        .assume_symmetric();
+        assert_eq!(f.name(), "xy-batch");
+        assert_eq!(f.dim(), 2);
+        assert_eq!(f.true_value(), Some(0.25));
+        assert!(f.symmetric());
+        assert_eq!(f.bounds(), Bounds::unit(2));
+        // Scalar bridge builds a one-point block.
+        assert_eq!(f.eval(&[0.5, 0.4]), 0.2);
+        // Batch path writes every slot.
+        let mut block = PointBlock::with_capacity(2, 3);
+        block.push_point(&[0.5, 0.4], 1.0);
+        block.push_point(&[1.0, 0.25], 1.0);
+        block.push_point(&[0.0, 0.9], 1.0);
+        let mut out = [9.0f64; 3];
+        f.eval_batch(&block, &mut out);
+        assert_eq!(out, [0.2, 0.25, 0.0]);
+    }
+
+    #[test]
+    fn batch_integrand_dim_mismatch_rejected() {
+        assert!(
+            FnBatchIntegrand::new(3, Bounds::unit(2), |_: &PointBlock, _: &mut [f64]| {}).is_err()
+        );
+    }
+
+    #[test]
+    fn batch_integrand_per_axis_hull() {
+        let b = Bounds::per_axis(&[(0.0, 2.0), (-1.0, 1.0)]).unwrap();
+        let f = FnBatchIntegrand::new(2, b.clone(), |_: &PointBlock, out: &mut [f64]| {
+            out.fill(1.0)
+        })
+        .unwrap();
+        assert_eq!(f.bounds(), b);
+        assert_eq!((f.lo(), f.hi()), (-1.0, 2.0));
     }
 
     #[test]

@@ -19,6 +19,35 @@
 //!   telemetry.
 //! * **Backend selection** — [`BackendSpec`] picks the native engine
 //!   or the AOT-Pallas/PJRT artifact runtime behind the same builder.
+//! * **Batch evaluation** — [`FnBatchIntegrand`] /
+//!   [`Integrator::custom_batch`] accept closures over whole
+//!   structure-of-arrays [`PointBlock`]s, the same
+//!   one-virtual-call-per-block hot path the registry integrands use.
+//!
+//! ## Migration table
+//!
+//! The seed's free functions map onto the builder like so (the batch
+//! column is the fastest path for custom integrands):
+//!
+//! | Seed free function | Builder call | Batch builder call |
+//! |---|---|---|
+//! | `integrate_native(&f, &cfg)` | `Integrator::new(f).config(cfg).run()` | `Integrator::custom_batch(d, bounds, \|blk, out\| …)?.config(cfg).run()` |
+//! | `integrate_native_adaptive(&f, &cfg, l, k)` | `Integrator::new(f).config(cfg).escalate(l, k).run()` | same, via `custom_batch(..)` + `.escalate(l, k)` |
+//! | `run_driver(&backend, &cfg)` | `coordinator::drive(&backend, &cfg, None, None)` | backends already evaluate through `eval_batch` |
+//! | `run_driver_traced(&backend, &cfg)` | `drive(.., Some(&mut observer))` or `Integrator::observe(..)` | — |
+//!
+//! The free functions survive behind the on-by-default `legacy-api`
+//! cargo feature; build with `--no-default-features` to verify no code
+//! path still needs them.
+//!
+//! ## `PointBlock` SoA layout contract
+//!
+//! Batch closures receive points **column-major**: `block.axis(i)` is
+//! the contiguous slice of axis-`i` coordinates for all `block.len()`
+//! points (there is no per-point row). Write `out[k]` for every point
+//! `k`; never apply `block.jacobians()` yourself — the engine folds the
+//! VEGAS/box weight in during reduction. See [`crate::engine::block`]
+//! for the full contract.
 
 mod grid_state;
 mod integrand;
@@ -26,10 +55,14 @@ mod integrator;
 mod observer;
 
 pub use grid_state::GridState;
-pub use integrand::{FnIntegrand, IntegrandSpec};
+pub use integrand::{FnBatchIntegrand, FnIntegrand, IntegrandSpec};
 pub use integrator::{BackendSpec, Integrator};
 pub use observer::IterationEvent;
 
 // Re-export the bounds type here too: it is the facade's vocabulary for
 // "where to integrate", even though it lives with the layout math.
 pub use crate::strat::Bounds;
+
+// The batch-evaluation vocabulary is part of the facade surface:
+// `custom_batch` closures receive a `PointBlock`.
+pub use crate::engine::block::PointBlock;

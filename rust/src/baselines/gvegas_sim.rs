@@ -22,6 +22,7 @@
 //! claim.
 
 use super::BaselineResult;
+use crate::engine::{PointBlock, VegasMap, BLOCK_POINTS};
 use crate::estimator::{Convergence, WeightedEstimator};
 use crate::grid::Bins;
 use crate::integrands::Integrand;
@@ -77,11 +78,6 @@ pub fn gvegas_integrate(f: &dyn Integrand, cfg: &GvegasConfig) -> BaselineResult
     // so the *total* allowed calls matches the uncapped configuration.
     let per_iter_calls = cfg.maxcalls.min(cfg.launch_cap);
     let layout = Layout::compute(d, per_iter_calls, cfg.nb, 1).expect("layout");
-    // Per-axis bounds, same affine map as the native engine.
-    let bounds = f.bounds();
-    let mut lo_ax = [0.0f64; 10];
-    let mut span_ax = [0.0f64; 10];
-    let vol = bounds.unpack(&mut lo_ax, &mut span_ax);
     let nb = cfg.nb;
 
     let mut bins = Bins::uniform(d, nb);
@@ -106,6 +102,8 @@ pub fn gvegas_integrate(f: &dyn Integrand, cfg: &GvegasConfig) -> BaselineResult
         let mut i_iter = 0.0;
         let mut var_iter = 0.0;
         let mut contrib = vec![0.0f64; d * nb];
+        // Shared VEGAS transform (identical to the engine's fill).
+        let map = VegasMap::new(&layout, &bins, &f.bounds());
 
         // Split the iteration into launches bounded by the memory cap.
         let mut cube0 = 0usize;
@@ -117,35 +115,54 @@ pub fn gvegas_integrate(f: &dyn Integrand, cfg: &GvegasConfig) -> BaselineResult
             // per launch rather than a reused buffer.
             let mut staged: Vec<EvalRecord> = vec![EvalRecord::default(); n_evals];
 
-            // "Device" phase: evaluate every sample into the staged
-            // buffer; one work item per cube (no batching).
+            // "Device" phase: fill-block → eval_batch → stage. The
+            // records still round-trip through the host buffer (the
+            // design flaw under test). NOTE: VegasMap multiplies by a
+            // precomputed 1/g where the old loop divided by g — up to
+            // 1 ulp per coordinate — so gVegas samples are *not*
+            // bitwise-reproducible against pre-batch versions (its
+            // results are statistical, asserted at wide tolerances;
+            // only the native engine carries a bitwise contract).
+            let p = layout.p;
             let chunks = parallel_chunks(cube1 - cube0, cfg.threads, |a, b| {
-                let mut local: Vec<(usize, EvalRecord)> = Vec::with_capacity((b - a) * layout.p);
+                let mut local: Vec<(usize, EvalRecord)> = Vec::with_capacity((b - a) * p);
                 let mut u = [0.0f64; 10];
-                let mut x = [0.0f64; 10];
                 let mut coords = [0usize; 10];
-                for rel_cube in a..b {
-                    let cube = cube0 + rel_cube;
-                    layout.cube_coords(cube, &mut coords[..d]);
-                    for k in 0..layout.p {
-                        let sidx = (cube * layout.p + k) as u32;
-                        uniforms_into(sidx, it as u32, cfg.seed, &mut u[..d]);
-                        let mut jac = vol;
+                let cubes_per_block = (BLOCK_POINTS / p).max(1);
+                let cap = cubes_per_block * p;
+                let mut blk = PointBlock::with_capacity(d, cap);
+                let mut vals = vec![0.0f64; cap];
+                let mut bidx = vec![0usize; cap * d];
+                let mut rel_cube = a;
+                while rel_cube < b {
+                    let ncubes = cubes_per_block.min(b - rel_cube);
+                    let npts = ncubes * p;
+                    blk.reset(npts);
+                    for c in 0..ncubes {
+                        let cube = cube0 + rel_cube + c;
+                        layout.cube_coords(cube, &mut coords[..d]);
+                        for k in 0..p {
+                            let j = c * p + k;
+                            let sidx = (cube * p + k) as u32;
+                            uniforms_into(sidx, it as u32, cfg.seed, &mut u[..d]);
+                            map.fill_point(&coords[..d], &u[..d], &mut blk, j, &mut bidx);
+                        }
+                    }
+                    f.eval_batch(&blk, &mut vals[..npts]);
+                    for j in 0..npts {
                         let mut rec = EvalRecord::default();
                         for i in 0..d {
-                            let z = (coords[i] as f64 + u[i]) / layout.g as f64;
-                            let loc = z * nb as f64;
-                            let b_ = (loc as usize).min(nb - 1);
-                            let left = bins.left(i, b_);
-                            let w = bins.axis(i)[b_] - left;
-                            let xt = left + (loc - b_ as f64) * w;
-                            jac *= nb as f64 * w;
-                            x[i] = lo_ax[i] + xt * span_ax[i];
-                            rec.bins[i] = b_ as u16;
+                            // bidx holds i*nb + b; the record keeps b.
+                            rec.bins[i] = (bidx[j * d + i] - i * nb) as u16;
                         }
-                        rec.v = f.eval(&x[..d]) * jac;
-                        local.push((rel_cube * layout.p + k, rec));
+                        rec.v = vals[j] * blk.jac(j);
+                        // Staged slot: launch-relative cube index * p + k,
+                        // i.e. (rel_cube + j/p)*p + j%p == rel_cube*p + j —
+                        // kept in cube/sample form to mirror the staged
+                        // buffer's (cube, k) addressing in the host pass.
+                        local.push(((rel_cube + j / p) * p + j % p, rec));
                     }
+                    rel_cube += ncubes;
                 }
                 local
             });

@@ -4,10 +4,14 @@
 //! the axis whose bisection minimizes combined variance, split the
 //! remaining budget between the halves proportionally to their
 //! estimated sigma, and recurse until the budget floor.
+//!
+//! Leaf/exploration sampling runs through the shared block evaluator
+//! (`engine::accumulate_uniform_box`) — same Philox draws as the old
+//! scalar loop, but batched `eval_batch` calls.
 
 use super::BaselineResult;
+use crate::engine::{accumulate_uniform_box, PointBlock, BLOCK_POINTS};
 use crate::integrands::Integrand;
-use crate::rng::uniforms_into;
 use std::time::Instant;
 
 #[derive(Debug, Clone, Copy)]
@@ -36,31 +40,29 @@ struct MiserState<'a> {
     seed: u32,
     counter: u32,
     calls_used: usize,
+    /// Reused block-evaluation scratch (the recursion calls `plain`
+    /// thousands of times; allocating per node would dominate).
+    block: PointBlock,
+    vals: Vec<f64>,
 }
 
 impl<'a> MiserState<'a> {
-    fn uniform_point(&mut self, lo: &[f64], hi: &[f64], x: &mut [f64], u: &mut [f64]) {
-        uniforms_into(self.counter, 1, self.seed, u);
-        self.counter = self.counter.wrapping_add(1);
-        for i in 0..x.len() {
-            x[i] = lo[i] + u[i] * (hi[i] - lo[i]);
-        }
-    }
-
-    /// Plain MC over [lo,hi] with n samples -> (mean, var_of_mean).
+    /// Plain MC over [lo,hi] with n samples -> (mean, var_of_mean),
+    /// through the shared block evaluator (Philox stream 1, sequential
+    /// counters — the same draws as the old scalar loop).
     fn plain(&mut self, lo: &[f64], hi: &[f64], n: usize) -> (f64, f64) {
-        let d = lo.len();
-        let vol: f64 = lo.iter().zip(hi).map(|(a, b)| b - a).product();
-        let mut x = vec![0.0; d];
-        let mut u = vec![0.0; d];
-        let mut s1 = 0.0;
-        let mut s2 = 0.0;
-        for _ in 0..n {
-            self.uniform_point(lo, hi, &mut x, &mut u);
-            let v = self.f.eval(&x) * vol;
-            s1 += v;
-            s2 += v * v;
-        }
+        let (s1, s2) = accumulate_uniform_box(
+            self.f,
+            lo,
+            hi,
+            self.seed,
+            1,
+            self.counter,
+            n,
+            &mut self.block,
+            &mut self.vals,
+        );
+        self.counter = self.counter.wrapping_add(n as u32);
         self.calls_used += n;
         let nf = n as f64;
         let mean = s1 / nf;
@@ -137,6 +139,8 @@ pub fn miser_integrate(f: &dyn Integrand, cfg: &MiserConfig) -> BaselineResult {
         seed: cfg.seed,
         counter: 0,
         calls_used: 0,
+        block: PointBlock::with_capacity(d, BLOCK_POINTS),
+        vals: Vec::new(),
     };
     let (integral, var) = st.recurse(&mut lo, &mut hi, cfg.calls, cfg);
     BaselineResult {

@@ -1,8 +1,13 @@
 //! Standard Monte Carlo: uniform sampling, sample-mean estimate.
+//!
+//! Sampling and evaluation go through the shared block evaluator
+//! (`engine::accumulate_uniform_box`): same Philox stream, same affine
+//! map, but one `eval_batch` call per block instead of one virtual
+//! `eval` per point.
 
 use super::BaselineResult;
+use crate::engine::{accumulate_uniform_box, PointBlock, BLOCK_POINTS};
 use crate::integrands::Integrand;
-use crate::rng::uniforms_into;
 use std::time::Instant;
 
 #[derive(Debug, Clone, Copy)]
@@ -25,18 +30,13 @@ pub fn plain_mc_integrate(f: &dyn Integrand, cfg: &PlainMcConfig) -> BaselineRes
     let t0 = Instant::now();
     let d = f.dim();
     let bounds = f.bounds();
-    let vol = bounds.volume();
-    let mut x = vec![0.0f64; d];
-    let mut u = vec![0.0f64; d];
-    let mut s1 = 0.0;
-    let mut s2 = 0.0;
-    for s in 0..cfg.calls {
-        uniforms_into(s as u32, 0, cfg.seed, &mut u);
-        bounds.map_unit(&u, &mut x);
-        let v = f.eval(&x) * vol;
-        s1 += v;
-        s2 += v * v;
-    }
+    let lo: Vec<f64> = (0..d).map(|i| bounds.lo(i)).collect();
+    let hi: Vec<f64> = (0..d).map(|i| bounds.hi(i)).collect();
+    let mut block = PointBlock::with_capacity(d, BLOCK_POINTS);
+    let mut vals = Vec::new();
+    let (s1, s2) = accumulate_uniform_box(
+        f, &lo, &hi, cfg.seed, 0, 0, cfg.calls, &mut block, &mut vals,
+    );
     let n = cfg.calls as f64;
     let mean = s1 / n;
     let var = ((s2 / n - mean * mean).max(0.0)) / (n - 1.0);

@@ -9,9 +9,13 @@
 //!    `depth` levels; unselected blocks keep their estimates.
 //!  4. Total = sum of block estimates; variance = sum of block variances.
 
+//! Block sampling runs through the shared block evaluator
+//! (`engine::accumulate_uniform_box`) — same Philox draws as the old
+//! scalar loop, but batched `eval_batch` calls.
+
 use super::BaselineResult;
+use crate::engine::{accumulate_uniform_box, PointBlock, BLOCK_POINTS};
 use crate::integrands::Integrand;
-use crate::rng::uniforms_into;
 use std::time::Instant;
 
 #[derive(Debug, Clone, Copy)]
@@ -54,26 +58,25 @@ struct ZmcState<'a> {
     seed: u32,
     counter: u32,
     calls: usize,
+    /// Reused block-evaluation scratch across the whole tree search.
+    block: PointBlock,
+    vals: Vec<f64>,
 }
 
 impl<'a> ZmcState<'a> {
     fn sample_block(&mut self, lo: &[f64], hi: &[f64], n: usize) -> (f64, f64) {
-        let d = lo.len();
-        let vol: f64 = lo.iter().zip(hi).map(|(a, b)| b - a).product();
-        let mut u = vec![0.0; d];
-        let mut x = vec![0.0; d];
-        let mut s1 = 0.0;
-        let mut s2 = 0.0;
-        for _ in 0..n {
-            uniforms_into(self.counter, 2, self.seed, &mut u);
-            self.counter = self.counter.wrapping_add(1);
-            for i in 0..d {
-                x[i] = lo[i] + u[i] * (hi[i] - lo[i]);
-            }
-            let v = self.f.eval(&x) * vol;
-            s1 += v;
-            s2 += v * v;
-        }
+        let (s1, s2) = accumulate_uniform_box(
+            self.f,
+            lo,
+            hi,
+            self.seed,
+            2,
+            self.counter,
+            n,
+            &mut self.block,
+            &mut self.vals,
+        );
+        self.counter = self.counter.wrapping_add(n as u32);
         self.calls += n;
         let nf = n as f64;
         let mean = s1 / nf;
@@ -117,6 +120,8 @@ pub fn zmc_integrate(f: &dyn Integrand, cfg: &ZmcConfig) -> BaselineResult {
         seed: cfg.seed,
         counter: 0,
         calls: 0,
+        block: PointBlock::with_capacity(d, BLOCK_POINTS),
+        vals: Vec::new(),
     };
 
     let bounds = f.bounds();

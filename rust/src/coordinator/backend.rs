@@ -5,6 +5,12 @@
 //! the Rust engine (the paper's Kokkos-style second platform). Both
 //! draw identical Philox streams, so for the same (seed, iteration) the
 //! results agree to summation-order tolerance.
+//!
+//! Both backends are batch-first: the artifact evaluates whole
+//! per-thread-block sample batches on device, and the native engine
+//! mirrors that with its fill-block → `Integrand::eval_batch` → reduce
+//! pipeline over [`crate::engine::PointBlock`]s — one virtual call per
+//! block, never one per point.
 
 use crate::engine::{NativeEngine, VSampleOpts};
 use crate::error::Result;

@@ -3,9 +3,11 @@
 //! PJRT artifacts / the native engine, and an integration job service.
 //!
 //! `drive` is the one driver core (warm-startable, observable); the
-//! seed's free functions remain as deprecated shims. Most callers
-//! should go through `crate::api::Integrator` instead of using this
-//! module directly.
+//! seed's free functions remain as deprecated shims behind the
+//! on-by-default `legacy-api` cargo feature (build with
+//! `--no-default-features` to drop them). Most callers should go
+//! through `crate::api::Integrator` instead of using this module
+//! directly.
 
 mod backend;
 mod driver;
@@ -13,6 +15,7 @@ mod service;
 
 pub use backend::{NativeBackend, PjrtBackend, VSampleBackend};
 pub use driver::{drive, DriveOutcome, DriverOutput, IntegrationOutput, JobConfig};
+#[cfg(feature = "legacy-api")]
 #[allow(deprecated)]
 pub use driver::{integrate_native, integrate_native_adaptive, run_driver, run_driver_traced};
 pub(crate) use driver::{escalate_native, integrate_native_core};

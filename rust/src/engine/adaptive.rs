@@ -16,6 +16,7 @@
 //! `offset[t] + k` where `offset` is the exclusive prefix sum of the
 //! per-cube counts — deterministic and collision-free per iteration.
 
+use super::block::{PointBlock, VegasMap, BLOCK_POINTS};
 use super::MAX_DIM;
 use crate::estimator::IterationResult;
 use crate::grid::Bins;
@@ -113,13 +114,7 @@ pub fn vsample_adaptive(
     assert_eq!(state.counts.len(), layout.m);
     let d = layout.d;
     let nb = layout.nb;
-    let g = layout.g as f64;
     let m = layout.m as f64;
-    let bounds = f.bounds();
-    assert_eq!(bounds.dim(), d, "bounds dim != layout dim");
-    let mut lo_ax = [0.0f64; MAX_DIM];
-    let mut span_ax = [0.0f64; MAX_DIM];
-    let vol = bounds.unpack(&mut lo_ax, &mut span_ax);
 
     struct Partial {
         integral: f64,
@@ -137,12 +132,12 @@ pub fn vsample_adaptive(
             contrib: vec![0.0; d * nb],
             sigmas: Vec::with_capacity(b - a),
         };
-        let edges = bins.flat();
-        let inv_g = 1.0 / g;
-        let nbf = nb as f64;
+        // Shared batch machinery: same transform as the uniform engine.
+        let map = VegasMap::new(layout, bins, &f.bounds());
+        let mut blk = PointBlock::with_capacity(d, BLOCK_POINTS);
+        let mut vals = vec![0.0f64; BLOCK_POINTS];
+        let mut bidx = vec![0usize; BLOCK_POINTS * d];
         let mut u = [0.0f64; MAX_DIM];
-        let mut x = [0.0f64; MAX_DIM];
-        let mut bidx = [0usize; MAX_DIM];
         let mut coords = [0usize; MAX_DIM];
         for cube in a..b {
             layout.cube_coords(cube, &mut coords[..d]);
@@ -150,29 +145,29 @@ pub fn vsample_adaptive(
             let nf = n as f64;
             let mut s1 = 0.0;
             let mut s2 = 0.0;
-            for k in 0..n {
-                let sidx = offsets[cube].wrapping_add(k);
-                uniforms_into(sidx, iteration, seed, &mut u[..d]);
-                let mut jac = vol;
-                for i in 0..d {
-                    let z = (coords[i] as f64 + u[i]) * inv_g;
-                    let loc = z * nbf;
-                    let bi = (loc as usize).min(nb - 1);
-                    let row = i * nb;
-                    let right = edges[row + bi];
-                    let left = if bi == 0 { 0.0 } else { edges[row + bi - 1] };
-                    let w = right - left;
-                    jac *= nbf * w;
-                    x[i] = lo_ax[i] + (left + (loc - bi as f64) * w) * span_ax[i];
-                    bidx[i] = row + bi;
+            // A cube's (variable-size) sample set is processed in
+            // block-sized chunks, carrying s1/s2 across chunks so the
+            // accumulation order matches the scalar per-point loop.
+            let mut k0 = 0u32;
+            while k0 < n {
+                let chunk = (n - k0).min(BLOCK_POINTS as u32);
+                blk.reset(chunk as usize);
+                for k in 0..chunk {
+                    let sidx = offsets[cube].wrapping_add(k0 + k);
+                    uniforms_into(sidx, iteration, seed, &mut u[..d]);
+                    map.fill_point(&coords[..d], &u[..d], &mut blk, k as usize, &mut bidx);
                 }
-                let v = f.eval(&x[..d]) * jac;
-                s1 += v;
-                s2 += v * v;
-                let v2 = v * v;
-                for i in 0..d {
-                    out.contrib[bidx[i]] += v2;
+                f.eval_batch(&blk, &mut vals[..chunk as usize]);
+                for j in 0..chunk as usize {
+                    let v = vals[j] * blk.jac(j);
+                    s1 += v;
+                    s2 += v * v;
+                    let v2 = v * v;
+                    for i in 0..d {
+                        out.contrib[bidx[j * d + i]] += v2;
+                    }
                 }
+                k0 += chunk;
             }
             let mean = s1 / nf;
             let var = ((s2 / nf - mean * mean).max(0.0)) / (nf - 1.0);

@@ -1,0 +1,451 @@
+//! Structure-of-arrays point blocks — the batch-first evaluation
+//! vocabulary shared by the engine, the adaptive engine, the CPU
+//! baselines, and user batch integrands.
+//!
+//! The paper's whole performance story is evaluating *blocks* of points
+//! per processor (a thread-block owns a batch of sub-cubes) rather than
+//! one point at a time. [`PointBlock`] is the CPU-side twin of that
+//! layout: a fixed-capacity buffer of up to `capacity` points in
+//! `dim` dimensions, stored column-major (`[d][capacity]`) so the inner
+//! loop of a batched integrand runs over one contiguous coordinate
+//! column per axis and vectorizes.
+//!
+//! ## SoA layout contract
+//!
+//! * Coordinates are column-major: [`PointBlock::axis`]`(i)` is the
+//!   contiguous slice of axis-`i` coordinates for points `0..len()`.
+//!   There is **no** per-point stride — point `k` is `axis(i)[k]` for
+//!   each `i`, never a contiguous `[x0, x1, ..]` row.
+//! * `jacobians()[k]` carries the VEGAS/box weight of point `k`. Batch
+//!   integrands must **not** apply it — the caller multiplies
+//!   `out[k] * jacobians()[k]` during reduction, exactly like the
+//!   scalar path multiplied `eval(x) * jac`.
+//! * `eval_batch` implementations must write `out[k]` for every
+//!   `k < len()` and must not read `out` before writing it (the buffer
+//!   is reused across blocks and carries stale values).
+//!
+//! Fill helpers here ([`VegasMap`], [`accumulate_uniform_box`]) are the
+//! single definition of the change-of-variables / uniform-box sampling
+//! loops. The native engine, the adaptive engine, and the uniform-box
+//! baselines (`plain_mc`, `miser`, `zmc_sim`) draw bit-identical points
+//! from the same Philox streams as before the batch redesign; the one
+//! exception is `gvegas_sim`, whose old loop divided by `g` where
+//! [`VegasMap`] multiplies by a precomputed `1/g` (≤ 1 ulp per
+//! coordinate — see the note in `baselines/gvegas_sim.rs`).
+
+use super::MAX_DIM;
+use crate::grid::Bins;
+use crate::integrands::Integrand;
+use crate::rng::uniforms_into;
+use crate::strat::{Bounds, Layout};
+
+/// Default number of points a block holds — sized so coords + jacobians
+/// + values of a high-dimensional block stay L1/L2-resident (mirrors
+/// the paper's per-thread-block batch).
+pub const BLOCK_POINTS: usize = 256;
+
+/// A fixed-capacity structure-of-arrays batch of evaluation points.
+///
+/// See the [module docs](self) for the layout contract.
+#[derive(Debug, Clone)]
+pub struct PointBlock {
+    dim: usize,
+    capacity: usize,
+    len: usize,
+    /// Column-major coords: axis `i`, point `k` at `coords[i * capacity + k]`.
+    coords: Vec<f64>,
+    /// Per-point Jacobian / weight.
+    jac: Vec<f64>,
+}
+
+impl PointBlock {
+    /// An empty block for `dim`-dimensional points, holding up to
+    /// `capacity` points.
+    pub fn with_capacity(dim: usize, capacity: usize) -> PointBlock {
+        assert!(dim >= 1, "dimension must be >= 1");
+        assert!(capacity >= 1, "capacity must be >= 1");
+        PointBlock {
+            dim,
+            capacity,
+            len: 0,
+            coords: vec![0.0; dim * capacity],
+            jac: vec![0.0; capacity],
+        }
+    }
+
+    /// Dimensionality of every point in the block.
+    #[inline]
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    /// Maximum number of points the block can hold.
+    #[inline]
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Number of points currently in the block.
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    /// True when the block holds no points.
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Restart the block with `n` points whose coordinates are about to
+    /// be written via [`PointBlock::set_coord`] / [`PointBlock::set_jac`].
+    /// Existing contents are stale, not zeroed.
+    #[inline]
+    pub fn reset(&mut self, n: usize) {
+        assert!(n <= self.capacity, "block overflow: {n} > {}", self.capacity);
+        self.len = n;
+    }
+
+    /// Write coordinate `axis` of point `k`.
+    #[inline]
+    pub fn set_coord(&mut self, axis: usize, k: usize, v: f64) {
+        debug_assert!(axis < self.dim && k < self.len);
+        self.coords[axis * self.capacity + k] = v;
+    }
+
+    /// Read coordinate `axis` of point `k`.
+    #[inline]
+    pub fn coord(&self, axis: usize, k: usize) -> f64 {
+        debug_assert!(axis < self.dim && k < self.len);
+        self.coords[axis * self.capacity + k]
+    }
+
+    /// Write the Jacobian / weight of point `k`.
+    #[inline]
+    pub fn set_jac(&mut self, k: usize, v: f64) {
+        debug_assert!(k < self.len);
+        self.jac[k] = v;
+    }
+
+    /// Jacobian / weight of point `k`.
+    #[inline]
+    pub fn jac(&self, k: usize) -> f64 {
+        debug_assert!(k < self.len);
+        self.jac[k]
+    }
+
+    /// The contiguous axis-`i` coordinate column for points `0..len()`.
+    #[inline]
+    pub fn axis(&self, axis: usize) -> &[f64] {
+        debug_assert!(axis < self.dim);
+        &self.coords[axis * self.capacity..axis * self.capacity + self.len]
+    }
+
+    /// Per-point Jacobians for points `0..len()`.
+    #[inline]
+    pub fn jacobians(&self) -> &[f64] {
+        &self.jac[..self.len]
+    }
+
+    /// Append one point given row-major coordinates (AoS convenience
+    /// for tests and one-off scalar bridging; the hot fills write
+    /// columns directly).
+    pub fn push_point(&mut self, x: &[f64], jac: f64) {
+        assert_eq!(x.len(), self.dim, "point dimension mismatch");
+        assert!(self.len < self.capacity, "block full");
+        let k = self.len;
+        self.len += 1;
+        for (i, &xi) in x.iter().enumerate() {
+            self.coords[i * self.capacity + k] = xi;
+        }
+        self.jac[k] = jac;
+    }
+
+    /// Gather point `k` into a row-major buffer (the scalar-fallback
+    /// bridge used by the default `Integrand::eval_batch`).
+    #[inline]
+    pub fn gather(&self, k: usize, out: &mut [f64]) {
+        debug_assert!(k < self.len);
+        debug_assert!(out.len() >= self.dim);
+        for (i, slot) in out.iter_mut().enumerate().take(self.dim) {
+            *slot = self.coords[i * self.capacity + k];
+        }
+    }
+}
+
+/// Adapter that hides an integrand's hand-batched `eval_batch`
+/// override, forcing the default scalar-loop implementation. Used by
+/// the batch-vs-scalar property tests and the perf microbench to
+/// compare the two paths through the identical engine pipeline.
+pub struct ScalarEval<'a>(pub &'a dyn Integrand);
+
+impl Integrand for ScalarEval<'_> {
+    fn name(&self) -> &str {
+        self.0.name()
+    }
+    fn dim(&self) -> usize {
+        self.0.dim()
+    }
+    fn lo(&self) -> f64 {
+        self.0.lo()
+    }
+    fn hi(&self) -> f64 {
+        self.0.hi()
+    }
+    #[inline]
+    fn eval(&self, x: &[f64]) -> f64 {
+        self.0.eval(x)
+    }
+    fn true_value(&self) -> Option<f64> {
+        self.0.true_value()
+    }
+    fn symmetric(&self) -> bool {
+        self.0.symmetric()
+    }
+    fn bounds(&self) -> Bounds {
+        self.0.bounds()
+    }
+    // NOTE: eval_batch deliberately NOT forwarded — the trait default
+    // (gather + scalar eval) applies.
+}
+
+/// The VEGAS change of variables for block fills — one definition of
+/// the per-axis importance-grid transform shared by the native engine,
+/// the adaptive engine, and the gVegas simulator, so the batched fills
+/// stay bit-identical to the scalar loops they replaced.
+pub struct VegasMap<'a> {
+    edges: &'a [f64],
+    d: usize,
+    nb: usize,
+    inv_g: f64,
+    nbf: f64,
+    lo_ax: [f64; MAX_DIM],
+    span_ax: [f64; MAX_DIM],
+    /// Volume of the physical box (the global Jacobian factor).
+    pub vol: f64,
+}
+
+impl<'a> VegasMap<'a> {
+    /// Build the transform for one (layout, grid, bounds) triple.
+    pub fn new(layout: &Layout, bins: &'a Bins, bounds: &Bounds) -> VegasMap<'a> {
+        assert!(layout.d <= MAX_DIM, "d > MAX_DIM");
+        assert_eq!(bins.d(), layout.d);
+        assert_eq!(bins.nb(), layout.nb);
+        assert_eq!(bounds.dim(), layout.d, "bounds dim != layout dim");
+        let mut lo_ax = [0.0f64; MAX_DIM];
+        let mut span_ax = [0.0f64; MAX_DIM];
+        let vol = bounds.unpack(&mut lo_ax, &mut span_ax);
+        VegasMap {
+            edges: bins.flat(),
+            d: layout.d,
+            nb: layout.nb,
+            inv_g: 1.0 / layout.g as f64,
+            nbf: layout.nb as f64,
+            lo_ax,
+            span_ax,
+            vol,
+        }
+    }
+
+    /// Transform the stratified unit sample `u` of the sub-cube at
+    /// lattice `coords` into physical coordinates, writing the point
+    /// into block slot `k` (with its Jacobian) and the flat `d * nb`
+    /// histogram rows into `bidx[k * d .. (k + 1) * d]`.
+    #[inline]
+    pub fn fill_point(
+        &self,
+        coords: &[usize],
+        u: &[f64],
+        block: &mut PointBlock,
+        k: usize,
+        bidx: &mut [usize],
+    ) {
+        let d = self.d;
+        let nb = self.nb;
+        let mut jac = self.vol;
+        for i in 0..d {
+            let z = (coords[i] as f64 + u[i]) * self.inv_g;
+            let loc = z * self.nbf;
+            let b = (loc as usize).min(nb - 1);
+            let row = i * nb;
+            // SAFETY: i < d and b < nb, so row + b < d*nb == edges.len().
+            let right = unsafe { *self.edges.get_unchecked(row + b) };
+            let left = if b == 0 {
+                0.0
+            } else {
+                unsafe { *self.edges.get_unchecked(row + b - 1) }
+            };
+            let w = right - left;
+            let xt = left + (loc - b as f64) * w;
+            jac *= self.nbf * w;
+            block.set_coord(i, k, self.lo_ax[i] + xt * self.span_ax[i]);
+            bidx[k * d + i] = row + b;
+        }
+        block.set_jac(k, jac);
+    }
+}
+
+/// Accumulate plain-MC sums over `n` uniform samples in the axis-aligned
+/// box `[lo, hi]`, drawing Philox uniforms from the stream
+/// `(counter0.., stream, seed)` and evaluating through
+/// `Integrand::eval_batch` in block-sized chunks.
+///
+/// Returns `(sum v, sum v^2)` with `v = f(x) * vol`, accumulated in
+/// counter order — bitwise-identical to the scalar per-point loop it
+/// replaces in `plain_mc`, `miser`, and `zmc_sim`.
+#[allow(clippy::too_many_arguments)]
+pub fn accumulate_uniform_box(
+    f: &dyn Integrand,
+    lo: &[f64],
+    hi: &[f64],
+    seed: u32,
+    stream: u32,
+    counter0: u32,
+    n: usize,
+    block: &mut PointBlock,
+    vals: &mut Vec<f64>,
+) -> (f64, f64) {
+    let d = lo.len();
+    assert_eq!(hi.len(), d);
+    assert_eq!(block.dim(), d, "block dim != box dim");
+    let vol: f64 = lo.iter().zip(hi).map(|(a, b)| b - a).product();
+    let cap = block.capacity();
+    if vals.len() < cap {
+        vals.resize(cap, 0.0);
+    }
+    // Stack scratch for the per-point uniforms (heap fallback above
+    // MAX_DIM) — this runs once per MISER/ZMC tree node, so a per-call
+    // heap alloc here would undo the callers' reused-scratch design.
+    let mut u_small = [0.0f64; MAX_DIM];
+    let mut u_big;
+    let u: &mut [f64] = if d <= MAX_DIM {
+        &mut u_small[..d]
+    } else {
+        u_big = vec![0.0f64; d];
+        &mut u_big
+    };
+    let mut s1 = 0.0;
+    let mut s2 = 0.0;
+    let mut done = 0usize;
+    while done < n {
+        let m = (n - done).min(cap);
+        block.reset(m);
+        for k in 0..m {
+            let ctr = counter0.wrapping_add((done + k) as u32);
+            uniforms_into(ctr, stream, seed, u);
+            for i in 0..d {
+                block.set_coord(i, k, lo[i] + u[i] * (hi[i] - lo[i]));
+            }
+            block.set_jac(k, vol);
+        }
+        f.eval_batch(block, &mut vals[..m]);
+        for &fv in vals[..m].iter() {
+            let v = fv * vol;
+            s1 += v;
+            s2 += v * v;
+        }
+        done += m;
+    }
+    (s1, s2)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::integrands::by_name;
+
+    #[test]
+    fn block_layout_round_trips() {
+        let mut b = PointBlock::with_capacity(3, 8);
+        assert_eq!(b.dim(), 3);
+        assert_eq!(b.capacity(), 8);
+        assert!(b.is_empty());
+        b.push_point(&[1.0, 2.0, 3.0], 0.5);
+        b.push_point(&[4.0, 5.0, 6.0], 0.25);
+        assert_eq!(b.len(), 2);
+        assert_eq!(b.axis(0), &[1.0, 4.0]);
+        assert_eq!(b.axis(1), &[2.0, 5.0]);
+        assert_eq!(b.axis(2), &[3.0, 6.0]);
+        assert_eq!(b.jacobians(), &[0.5, 0.25]);
+        let mut x = [0.0; 3];
+        b.gather(1, &mut x);
+        assert_eq!(x, [4.0, 5.0, 6.0]);
+        b.reset(1);
+        assert_eq!(b.len(), 1);
+        b.set_coord(0, 0, 9.0);
+        b.set_jac(0, 2.0);
+        assert_eq!(b.coord(0, 0), 9.0);
+        assert_eq!(b.jac(0), 2.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "block overflow")]
+    fn reset_past_capacity_panics() {
+        PointBlock::with_capacity(2, 4).reset(5);
+    }
+
+    #[test]
+    fn default_eval_batch_matches_scalar_loop() {
+        let f = by_name("f4", 3).unwrap();
+        let mut b = PointBlock::with_capacity(3, 4);
+        let pts = [[0.1, 0.2, 0.3], [0.5, 0.5, 0.5], [0.9, 0.1, 0.4]];
+        for p in &pts {
+            b.push_point(p, 1.0);
+        }
+        let mut out = [0.0f64; 4];
+        f.eval_batch(&b, &mut out[..3]);
+        for (k, p) in pts.iter().enumerate() {
+            assert_eq!(out[k].to_bits(), f.eval(p).to_bits());
+        }
+    }
+
+    #[test]
+    fn scalar_eval_adapter_hides_batch_override() {
+        let f = by_name("f5", 4).unwrap();
+        let scalar = ScalarEval(&*f);
+        assert_eq!(scalar.name(), "f5");
+        assert_eq!(scalar.dim(), 4);
+        assert_eq!(scalar.bounds(), f.bounds());
+        assert_eq!(scalar.true_value(), f.true_value());
+        let mut b = PointBlock::with_capacity(4, 2);
+        b.push_point(&[0.3, 0.6, 0.1, 0.9], 1.0);
+        b.push_point(&[0.5, 0.5, 0.5, 0.5], 1.0);
+        let mut via_batch = [0.0f64; 2];
+        let mut via_scalar = [0.0f64; 2];
+        f.eval_batch(&b, &mut via_batch);
+        scalar.eval_batch(&b, &mut via_scalar);
+        assert_eq!(via_batch[0].to_bits(), via_scalar[0].to_bits());
+        assert_eq!(via_batch[1].to_bits(), via_scalar[1].to_bits());
+    }
+
+    #[test]
+    fn accumulate_uniform_box_matches_scalar_stream() {
+        // Reference: the scalar per-point loop the helper replaced.
+        let f = by_name("f3", 3).unwrap();
+        let lo = [0.0, 0.25, 0.5];
+        let hi = [1.0, 0.75, 0.9];
+        let vol: f64 = lo.iter().zip(&hi).map(|(a, b)| b - a).product();
+        let n = 777usize;
+        let (seed, stream, counter0) = (9u32, 2u32, 13u32);
+        let mut s1 = 0.0;
+        let mut s2 = 0.0;
+        let mut u = [0.0f64; 3];
+        let mut x = [0.0f64; 3];
+        for s in 0..n {
+            uniforms_into(counter0.wrapping_add(s as u32), stream, seed, &mut u);
+            for i in 0..3 {
+                x[i] = lo[i] + u[i] * (hi[i] - lo[i]);
+            }
+            let v = f.eval(&x) * vol;
+            s1 += v;
+            s2 += v * v;
+        }
+        let mut block = PointBlock::with_capacity(3, 64);
+        let mut vals = Vec::new();
+        let (b1, b2) = accumulate_uniform_box(
+            &*f, &lo, &hi, seed, stream, counter0, n, &mut block, &mut vals,
+        );
+        assert_eq!(s1.to_bits(), b1.to_bits());
+        assert_eq!(s2.to_bits(), b2.to_bits());
+    }
+}

@@ -13,8 +13,20 @@
 //! serially processes its cubes and accumulates a private estimate +
 //! histogram; the coordinator reduces worker partials in order
 //! (deterministic, unlike atomics).
+//!
+//! Evaluation is batch-first (the paper's per-thread-block batches):
+//! each worker fills a structure-of-arrays [`PointBlock`] with the
+//! VEGAS-transformed points of a batch of whole sub-cubes, evaluates
+//! the whole block through one `Integrand::eval_batch` call, then
+//! reduces per cube in sample order. The Philox streams, the transform,
+//! and the ordered reduction are unchanged, so results are bitwise
+//! identical to the scalar per-point loop this replaced (asserted by
+//! the batch-vs-scalar property tests).
 
 pub mod adaptive;
+pub mod block;
+
+pub use block::{accumulate_uniform_box, PointBlock, ScalarEval, VegasMap, BLOCK_POINTS};
 
 use crate::estimator::IterationResult;
 use crate::grid::Bins;
@@ -92,6 +104,11 @@ impl NativeEngine {
 }
 
 /// Serial V-Sample over cubes [cube_lo, cube_hi) — the per-worker body.
+///
+/// Batch pipeline: fill a [`PointBlock`] with the points of a batch of
+/// whole cubes → one `eval_batch` call → ordered per-cube reduction.
+/// Point order, Philox counters, and every accumulation order match the
+/// scalar loop this replaced, so partials are bitwise identical.
 fn sample_cube_range(
     f: &dyn Integrand,
     layout: &Layout,
@@ -102,41 +119,48 @@ fn sample_cube_range(
 ) -> Partial {
     let d = layout.d;
     let nb = layout.nb;
-    let g = layout.g as f64;
     let m = layout.m as f64;
     let p = layout.p;
     let pf = p as f64;
-    // Per-axis affine map unit box -> physical box. For a uniform box
-    // this produces bit-identical samples to the old scalar lo/hi path
-    // (same `lo + z*span` expression per axis, volume by product).
-    let bounds = f.bounds();
-    assert_eq!(bounds.dim(), d, "bounds dim != layout dim");
-    let mut lo_ax = [0.0f64; MAX_DIM];
-    let mut span_ax = [0.0f64; MAX_DIM];
-    let vol = bounds.unpack(&mut lo_ax, &mut span_ax);
+    // Per-axis affine map unit box -> physical box + importance-grid
+    // transform, shared with the adaptive engine and gVegas-sim.
+    let map = VegasMap::new(layout, bins, &f.bounds());
 
     let mut contrib = opts.adjust.then(|| vec![0.0; d * nb]);
     let mut integral = 0.0;
     let mut variance = 0.0;
 
     let mut u = [0.0f64; MAX_DIM];
-    let mut x = [0.0f64; MAX_DIM];
-    let mut bidx = [0usize; MAX_DIM];
     let mut coords = [0usize; MAX_DIM];
 
-    // Hot-loop constants + flat edge array (perf pass: avoids per-dim
-    // slice recomputation in bins.axis()/bins.left()).
-    let edges = bins.flat();
-    let inv_g = 1.0 / g;
-    let nbf = nb as f64;
+    // Whole cubes per block: at least one cube, and as many as fit the
+    // target block size when p is small.
+    let cubes_per_block = (BLOCK_POINTS / p).max(1);
+    let cap = cubes_per_block * p;
+    let mut blk = PointBlock::with_capacity(d, cap);
+    let mut vals = vec![0.0f64; cap];
+    let mut bidx = vec![0usize; cap * d];
 
     // Decode the first cube, then advance coords as a base-g odometer —
     // avoids d divisions per cube in the hot loop (perf pass).
     layout.cube_coords(cube_lo, &mut coords[..d]);
     let gm1 = layout.g - 1;
 
-    for cube in cube_lo..cube_hi {
-        if cube != cube_lo {
+    let mut cube = cube_lo;
+    while cube < cube_hi {
+        let ncubes = cubes_per_block.min(cube_hi - cube);
+        let npts = ncubes * p;
+        blk.reset(npts);
+
+        // Fill phase: the block's points in (cube, sample) order.
+        for c in 0..ncubes {
+            for k in 0..p {
+                let j = c * p + k;
+                let sidx = ((cube + c) * p + k) as u32;
+                uniforms_into(sidx, opts.iteration, opts.seed, &mut u[..d]);
+                map.fill_point(&coords[..d], &u[..d], &mut blk, j, &mut bidx);
+            }
+            // Advance the odometer to the next cube's lattice coords.
             for slot in coords.iter_mut().take(d) {
                 if *slot == gm1 {
                     *slot = 0;
@@ -146,46 +170,36 @@ fn sample_cube_range(
                 }
             }
         }
-        let mut s1 = 0.0;
-        let mut s2 = 0.0;
-        for k in 0..p {
-            let sidx = (cube * p + k) as u32;
-            uniforms_into(sidx, opts.iteration, opts.seed, &mut u[..d]);
-            // VEGAS change of variables (sampling.transform twin).
-            let mut jac = vol;
-            for i in 0..d {
-                let z = (coords[i] as f64 + u[i]) * inv_g;
-                let loc = z * nbf;
-                let b = (loc as usize).min(nb - 1);
-                let row = i * nb;
-                // SAFETY: i < d and b < nb, so row + b < d*nb == edges.len().
-                let right = unsafe { *edges.get_unchecked(row + b) };
-                let left = if b == 0 {
-                    0.0
-                } else {
-                    unsafe { *edges.get_unchecked(row + b - 1) }
-                };
-                let w = right - left;
-                let xt = left + (loc - b as f64) * w;
-                jac *= nbf * w;
-                x[i] = lo_ax[i] + xt * span_ax[i];
-                bidx[i] = row + b;
-            }
-            let v = f.eval(&x[..d]) * jac;
-            s1 += v;
-            s2 += v * v;
-            if let Some(c) = contrib.as_mut() {
-                let v2 = v * v;
-                for i in 0..d {
-                    // SAFETY: bidx[i] = i*nb + b < d*nb == c.len().
-                    unsafe { *c.get_unchecked_mut(bidx[i]) += v2 };
+
+        // Eval phase: one virtual call for the whole block.
+        f.eval_batch(&blk, &mut vals[..npts]);
+
+        // Reduce phase: per cube, in sample order.
+        for c in 0..ncubes {
+            let base = c * p;
+            let mut s1 = 0.0;
+            let mut s2 = 0.0;
+            for k in 0..p {
+                let j = base + k;
+                let v = vals[j] * blk.jac(j);
+                s1 += v;
+                s2 += v * v;
+                if let Some(cacc) = contrib.as_mut() {
+                    let v2 = v * v;
+                    for i in 0..d {
+                        // SAFETY: bidx slots hold i*nb + b with b < nb,
+                        // so each is < d*nb == cacc.len().
+                        unsafe { *cacc.get_unchecked_mut(bidx[j * d + i]) += v2 };
+                    }
                 }
             }
+            let mean = s1 / pf;
+            let var = ((s2 / pf - mean * mean).max(0.0)) / (pf - 1.0);
+            integral += mean / m;
+            variance += var / (m * m);
         }
-        let mean = s1 / pf;
-        let var = ((s2 / pf - mean * mean).max(0.0)) / (pf - 1.0);
-        integral += mean / m;
-        variance += var / (m * m);
+
+        cube += ncubes;
     }
 
     Partial {

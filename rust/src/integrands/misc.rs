@@ -3,6 +3,7 @@
 
 use super::interp::Interp1D;
 use super::Integrand;
+use crate::engine::block::PointBlock;
 use std::f64::consts::PI;
 
 /// fA: sin(sum x) over (0,10)^6 — paper Table 1, true value -49.165073.
@@ -36,6 +37,18 @@ impl Integrand for FaSin6 {
     #[inline]
     fn eval(&self, x: &[f64]) -> f64 {
         x.iter().sum::<f64>().sin()
+    }
+    fn eval_batch(&self, block: &PointBlock, out: &mut [f64]) {
+        let out = &mut out[..block.len()];
+        out.fill(0.0);
+        for i in 0..6 {
+            for (o, &xi) in out.iter_mut().zip(block.axis(i)) {
+                *o += xi;
+            }
+        }
+        for o in out.iter_mut() {
+            *o = (*o).sin();
+        }
     }
     fn true_value(&self) -> Option<f64> {
         // Im[ (sin10 + i(1-cos10))^6 ]
@@ -87,6 +100,20 @@ impl Integrand for FbGauss9 {
         let norm = (2.0 * PI * var).powf(-4.5);
         let s: f64 = x.iter().map(|&v| v * v).sum();
         norm * (-s / (2.0 * var)).exp()
+    }
+    fn eval_batch(&self, block: &PointBlock, out: &mut [f64]) {
+        let var = 0.01; // sigma^2
+        let norm = (2.0 * PI * var).powf(-4.5);
+        let out = &mut out[..block.len()];
+        out.fill(0.0);
+        for i in 0..9 {
+            for (o, &xi) in out.iter_mut().zip(block.axis(i)) {
+                *o += xi * xi;
+            }
+        }
+        for o in out.iter_mut() {
+            *o = norm * (-*o / (2.0 * var)).exp();
+        }
     }
     fn true_value(&self) -> Option<f64> {
         let one = super::genz::erf(1.0 / (0.1 * 2.0f64.sqrt()));
@@ -174,6 +201,21 @@ impl Integrand for Cosmo {
         let p = 1.0 + 0.5 * x[4] * x[5];
         a * b * g * p
     }
+    fn eval_batch(&self, block: &PointBlock, out: &mut [f64]) {
+        // Slice first so an undersized buffer panics (the documented
+        // contract) instead of silently truncating the batch.
+        let out = &mut out[..block.len()];
+        let (x0, x1) = (block.axis(0), block.axis(1));
+        let (x2, x3) = (block.axis(2), block.axis(3));
+        let (x4, x5) = (block.axis(4), block.axis(5));
+        for (k, o) in out.iter_mut().enumerate() {
+            let a = self.t0.eval(x0[k]);
+            let b = self.t1.eval(x1[k]);
+            let g = (-(x2[k] * x2[k] + x3[k] * x3[k])).exp();
+            let p = 1.0 + 0.5 * x4[k] * x5[k];
+            *o = a * b * g * p;
+        }
+    }
     fn true_value(&self) -> Option<f64> {
         Some(self.quadrature_true_value(50_000))
     }
@@ -221,6 +263,39 @@ mod tests {
         );
         let x = [0.25; 6];
         assert!((doubled.eval(&x) - 4.0 * c.eval(&x)).abs() < 1e-10);
+    }
+
+    #[test]
+    fn batched_overrides_match_scalar_bitwise() {
+        fn check(f: &dyn Integrand, pts: &[Vec<f64>]) {
+            let d = f.dim();
+            let mut block = PointBlock::with_capacity(d, pts.len());
+            for p in pts {
+                block.push_point(p, 1.0);
+            }
+            let mut out = vec![0.0f64; pts.len()];
+            f.eval_batch(&block, &mut out);
+            for (k, p) in pts.iter().enumerate() {
+                assert_eq!(
+                    out[k].to_bits(),
+                    f.eval(p).to_bits(),
+                    "{} point {k}",
+                    f.name()
+                );
+            }
+        }
+        let mk = |d: usize, scale: f64, shift: f64| -> Vec<Vec<f64>> {
+            (0..5)
+                .map(|k| {
+                    (0..d)
+                        .map(|i| shift + scale * ((k * d + i) as f64 * 0.37).fract())
+                        .collect()
+                })
+                .collect()
+        };
+        check(&FaSin6::new(), &mk(6, 10.0, 0.0));
+        check(&FbGauss9::new(), &mk(9, 2.0, -1.0));
+        check(&Cosmo::with_default_tables(), &mk(6, 1.0, 0.0));
     }
 
     #[test]

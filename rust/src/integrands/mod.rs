@@ -13,12 +13,18 @@ pub use genz::*;
 pub use interp::Interp1D;
 pub use misc::*;
 
+use crate::engine::block::PointBlock;
+use crate::engine::MAX_DIM;
 use crate::error::{Error, Result};
 use crate::strat::Bounds;
 use std::sync::Arc;
 
 /// A d-dimensional scalar integrand. `eval` receives one point in
-/// integration-space coordinates (length d).
+/// integration-space coordinates (length d); `eval_batch` receives a
+/// structure-of-arrays [`PointBlock`] of points — the engine, the
+/// adaptive engine, and every CPU baseline evaluate exclusively through
+/// `eval_batch`, so overriding it is the one lever for making an
+/// integrand's hot loop vectorize.
 pub trait Integrand: Send + Sync {
     /// Registry name (matches the Python registry / artifact manifest).
     fn name(&self) -> &str;
@@ -30,6 +36,32 @@ pub trait Integrand: Send + Sync {
     fn hi(&self) -> f64;
     /// Evaluate at one point (length `dim`).
     fn eval(&self, x: &[f64]) -> f64;
+    /// Evaluate every point of `block`, writing `out[k]` for each
+    /// `k < block.len()`. Implementations must **not** apply the
+    /// block's Jacobians — the caller multiplies during reduction.
+    ///
+    /// The default gathers each point into a scratch row and calls the
+    /// scalar [`Integrand::eval`]; hand-batched overrides (the Genz
+    /// suite, the misc integrands, [`crate::api::FnBatchIntegrand`])
+    /// run one contiguous pass per axis instead and must return
+    /// bit-identical values to the scalar path (property-tested).
+    fn eval_batch(&self, block: &PointBlock, out: &mut [f64]) {
+        let d = block.dim();
+        let n = block.len();
+        assert!(out.len() >= n, "eval_batch output buffer too small");
+        let mut small = [0.0f64; MAX_DIM];
+        let mut big;
+        let x: &mut [f64] = if d <= MAX_DIM {
+            &mut small[..d]
+        } else {
+            big = vec![0.0f64; d];
+            &mut big
+        };
+        for (k, slot) in out.iter_mut().enumerate().take(n) {
+            block.gather(k, x);
+            *slot = self.eval(x);
+        }
+    }
     /// Analytic / semi-analytic reference value, if known.
     fn true_value(&self) -> Option<f64>;
     /// Identical marginal density on all axes (m-Cubes1D is valid).

@@ -41,6 +41,37 @@
 //! # Ok::<(), mcubes::Error>(())
 //! ```
 //!
+//! ### Batch-first evaluation
+//!
+//! Every evaluation path — the native engine, the adaptive engine, and
+//! the CPU baselines — feeds points through
+//! [`integrands::Integrand::eval_batch`] in structure-of-arrays
+//! [`engine::PointBlock`]s (column-major `[d][block]`, mirroring the
+//! paper's per-thread-block batches), so the inner per-axis loop
+//! vectorizes instead of paying one virtual call per point. Registry
+//! integrands ship hand-batched overrides; custom integrands opt in
+//! with [`api::Integrator::custom_batch`]:
+//!
+//! ```no_run
+//! use mcubes::prelude::*;
+//!
+//! let out = Integrator::custom_batch(2, Bounds::unit(2), |block, out| {
+//!     // block.axis(i) is the contiguous column of axis-i coordinates.
+//!     let (x, y) = (block.axis(0), block.axis(1));
+//!     for (k, o) in out.iter_mut().enumerate() {
+//!         *o = x[k] * y[k]; // raw values — the engine applies Jacobians
+//!     }
+//! })?
+//! .tolerance(1e-3)
+//! .run()?;
+//! println!("I = {} ± {}", out.integral, out.sigma);
+//! # Ok::<(), mcubes::Error>(())
+//! ```
+//!
+//! Scalar closures (`Integrator::from_fn`) still work — the trait's
+//! default `eval_batch` bridges them point by point, bit-identically
+//! (property-tested across the whole registry).
+//!
 //! ### Warm starts and observers
 //!
 //! ```no_run
@@ -66,8 +97,11 @@
 //! The seed's free functions — `coordinator::integrate_native`,
 //! `integrate_native_adaptive`, `run_driver`, `run_driver_traced` —
 //! remain as `#[deprecated]` shims that delegate to the same core
-//! (`coordinator::drive`) the facade uses, and will be removed once
-//! downstream callers migrate. `IntegrationService` now takes
+//! (`coordinator::drive`) the facade uses. They are gated behind the
+//! on-by-default `legacy-api` cargo feature; building with
+//! `--no-default-features` drops them entirely (the removal dry run),
+//! and they disappear for good once downstream callers migrate (see
+//! the migration table in [`api`]). `IntegrationService` takes
 //! [`api::IntegrandSpec`] (registry names *or* custom integrands)
 //! instead of bare name strings.
 
@@ -90,7 +124,8 @@ pub use error::{Error, Result};
 /// Common imports for examples and benches.
 pub mod prelude {
     pub use crate::api::{
-        BackendSpec, Bounds, FnIntegrand, GridState, IntegrandSpec, Integrator, IterationEvent,
+        BackendSpec, Bounds, FnBatchIntegrand, FnIntegrand, GridState, IntegrandSpec, Integrator,
+        IterationEvent, PointBlock,
     };
     pub use crate::coordinator::{DriveOutcome, IntegrationOutput, JobConfig};
     pub use crate::error::{Error, Result};

@@ -1,9 +1,12 @@
 //! Micro/macro benchmark harness (no criterion offline).
 //!
 //! `cargo bench` targets are `harness = false` binaries built on this:
-//! warmup, repeated timed runs, robust stats, and paper-style table
-//! printing via `util::table`.
+//! warmup, repeated timed runs, robust stats, paper-style table
+//! printing via `util::table`, and machine-greppable `BENCH {...}`
+//! JSON lines via [`bench_json_line`] / [`emit_bench`] so the perf
+//! trajectory of a series can be recorded across runs.
 
+use crate::util::json::ObjBuilder;
 use std::time::{Duration, Instant};
 
 /// Timing statistics over repeated runs.
@@ -133,6 +136,24 @@ pub fn black_box<T>(x: T) -> T {
     std::hint::black_box(x)
 }
 
+/// One machine-greppable benchmark record: a `BENCH `-prefixed JSON
+/// object (`{"bench": .., "metric": .., "value": .., "unit": ..}`)
+/// suitable for `grep '^BENCH ' | cut -d' ' -f2- | jq`.
+pub fn bench_json_line(bench: &str, metric: &str, value: f64, unit: &str) -> String {
+    let obj = ObjBuilder::new()
+        .field("bench", bench)
+        .field("metric", metric)
+        .field("value", value)
+        .field("unit", unit)
+        .build();
+    format!("BENCH {}", obj.to_json())
+}
+
+/// Print a [`bench_json_line`] record to stdout.
+pub fn emit_bench(bench: &str, metric: &str, value: f64, unit: &str) {
+    println!("{}", bench_json_line(bench, metric, value, unit));
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -177,5 +198,16 @@ mod tests {
         let s = Stats::from_ms(vec![]);
         assert_eq!(s.mean_ms(), 0.0);
         assert_eq!(s.median_ms(), 0.0);
+    }
+
+    #[test]
+    fn bench_json_line_round_trips() {
+        let line = bench_json_line("batch_vs_scalar_f4_d5", "speedup", 2.0, "x");
+        let json = line.strip_prefix("BENCH ").expect("BENCH prefix");
+        let v = crate::util::json::parse(json).unwrap();
+        assert_eq!(v.get("bench").unwrap().as_str(), Some("batch_vs_scalar_f4_d5"));
+        assert_eq!(v.get("metric").unwrap().as_str(), Some("speedup"));
+        assert_eq!(v.get("value").unwrap().as_f64(), Some(2.0));
+        assert_eq!(v.get("unit").unwrap().as_str(), Some("x"));
     }
 }

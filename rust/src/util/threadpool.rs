@@ -48,7 +48,15 @@ where
             .collect();
         handles
             .into_iter()
-            .map(|h| h.join().expect("worker panicked"))
+            .map(|h| match h.join() {
+                Ok(r) => r,
+                // Re-raise the worker's original panic payload on the
+                // caller thread, so upstream `catch_unwind` isolation
+                // (the job service's per-job error reporting) sees the
+                // user integrand's own message instead of a generic
+                // "worker panicked".
+                Err(payload) => std::panic::resume_unwind(payload),
+            })
             .collect()
     })
 }
@@ -176,6 +184,30 @@ mod tests {
         let parts = parallel_chunks(3, 16, |a, b| b - a);
         let total: usize = parts.iter().sum();
         assert_eq!(total, 3);
+    }
+
+    #[test]
+    fn parallel_chunks_preserves_panic_payload() {
+        // The original panic message must survive the worker boundary
+        // (resume_unwind), not be replaced by "worker panicked".
+        let caught = std::panic::catch_unwind(|| {
+            parallel_chunks(100, 4, |a, _b| {
+                if a >= 25 {
+                    panic!("integrand exploded at {a}");
+                }
+                a
+            })
+        })
+        .expect_err("must propagate the panic");
+        let msg = caught
+            .downcast_ref::<String>()
+            .cloned()
+            .or_else(|| caught.downcast_ref::<&str>().map(|s| s.to_string()))
+            .unwrap_or_default();
+        assert!(
+            msg.contains("integrand exploded"),
+            "payload lost: {msg:?}"
+        );
     }
 
     #[test]

@@ -1,8 +1,75 @@
 //! Facade-level integration tests: closure integrands over per-axis
-//! bounds, grid export/warm-start, observers, and escalation through
-//! `api::Integrator`.
+//! bounds, batch closures, grid export/warm-start, observers, and
+//! escalation through `api::Integrator`.
 
 use mcubes::prelude::*;
+
+/// A batch closure (`Integrator::custom_batch`) runs end-to-end and
+/// reproduces the equivalent scalar closure bitwise: both feed the
+/// same engine pipeline, one via hand-written column math, one via the
+/// default gather-and-eval bridge.
+#[test]
+fn custom_batch_closure_matches_scalar_closure_bitwise() {
+    let bounds = Bounds::per_axis(&[(0.0, 2.0), (1.0, 3.0)]).unwrap();
+    let scalar = Integrator::from_fn(2, bounds.clone(), |x| x[0] * x[1])
+        .unwrap()
+        .maxcalls(1 << 12)
+        .tolerance(1e-3)
+        .seed(7)
+        .run()
+        .unwrap();
+    let batch = Integrator::custom_batch(2, bounds, |block, out| {
+        let (x, y) = (block.axis(0), block.axis(1));
+        for (k, o) in out.iter_mut().enumerate() {
+            *o = x[k] * y[k];
+        }
+    })
+    .unwrap()
+    .maxcalls(1 << 12)
+    .tolerance(1e-3)
+    .seed(7)
+    .run()
+    .unwrap();
+    assert_eq!(scalar.integral.to_bits(), batch.integral.to_bits());
+    assert_eq!(scalar.sigma.to_bits(), batch.sigma.to_bits());
+    assert_eq!(scalar.iterations, batch.iterations);
+    // ∫∫ x·y over [0,2]×[1,3] = 2 · 4 = 8.
+    assert!(batch.converged, "{batch:?}");
+    assert!(
+        ((batch.integral - 8.0) / 8.0).abs() < 5e-3,
+        "I = {}",
+        batch.integral
+    );
+}
+
+/// Batch closures carry names/true values through `FnBatchIntegrand`
+/// and work wherever an `IntegrandRef` does (spec, service path).
+#[test]
+fn batch_integrand_ref_flows_through_spec() {
+    let f = FnBatchIntegrand::unit(3, |block: &PointBlock, out: &mut [f64]| {
+        let (x, y, z) = (block.axis(0), block.axis(1), block.axis(2));
+        for (k, o) in out.iter_mut().enumerate() {
+            *o = x[k] + y[k] + z[k];
+        }
+    })
+    .named("sum3-batch")
+    .with_true_value(1.5);
+    let spec = IntegrandSpec::custom(f.into_ref());
+    assert_eq!(spec.label(), "sum3-batch");
+    assert_eq!(spec.dim(), 3);
+    let out = Integrator::from_spec(spec)
+        .maxcalls(1 << 12)
+        .tolerance(1e-3)
+        .seed(5)
+        .run()
+        .unwrap();
+    assert!(out.converged, "{out:?}");
+    assert!(
+        ((out.integral - 1.5) / 1.5).abs() < 5e-3,
+        "I = {}",
+        out.integral
+    );
+}
 
 /// A closure integrand over a non-uniform box integrates end-to-end on
 /// the native backend with the correct result vs analytic truth.

@@ -1,10 +1,14 @@
 //! Property-based tests (via the in-repo `util::prop` driver) on grid,
-//! strat, estimator, and engine invariants.
+//! strat, estimator, and engine invariants — including the batch-API
+//! contract: for every registry integrand, the hand-batched
+//! `eval_batch` path must be *bitwise* identical to the scalar default
+//! through the identical engine pipeline.
 
-use mcubes::engine::{NativeEngine, VSampleOpts};
+use mcubes::engine::adaptive::{vsample_adaptive, StratState};
+use mcubes::engine::{NativeEngine, ScalarEval, VSampleOpts};
 use mcubes::estimator::{IterationResult, WeightedEstimator};
 use mcubes::grid::{rebin, smooth_weights, Bins, GridMode};
-use mcubes::integrands::by_name;
+use mcubes::integrands::{by_name, ALL_NAMES};
 use mcubes::strat::Layout;
 use mcubes::util::prop::{property, Gen};
 
@@ -217,6 +221,117 @@ fn prop_engine_partition_invariance() {
             let s: f64 = c0[axis * 20..(axis + 1) * 20].iter().sum();
             if ((s - total_v2) / total_v2).abs() > 1e-12 {
                 return Err(format!("axis {axis} mass {s} != {total_v2}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// The batch evaluation path (hand-batched `eval_batch` overrides fed
+/// through the fill-block → eval_batch → reduce pipeline) reproduces
+/// the scalar default-impl path *bitwise* — integral, variance, and
+/// every histogram cell — for every registry integrand across random
+/// (seed, iteration, d, calls, nb, threads, adjust) draws.
+#[test]
+fn prop_batch_engine_bitwise_matches_scalar() {
+    property("batch_vs_scalar_engine", 40, |g: &mut Gen, i| {
+        let name = ALL_NAMES[i % ALL_NAMES.len()];
+        let d = match name {
+            "fA" | "cosmo" => 6,
+            "fB" => 9,
+            _ => g.usize_range(1, 8),
+        };
+        let calls = g.usize_range(512, 8192);
+        let nb = g.usize_range(2, 50);
+        let nblocks = g.usize_range(1, 8);
+        let seed = g.usize_range(0, 1 << 30) as u32;
+        let iteration = g.usize_range(0, 25) as u32;
+        let adjust = g.f64() < 0.7;
+        let threads = g.usize_range(1, 4);
+        let f = by_name(name, d).map_err(|e| e.to_string())?;
+        let layout = Layout::compute(d, calls, nb, nblocks).map_err(|e| e.to_string())?;
+        let bins = Bins::uniform(d, nb);
+        let opts = VSampleOpts {
+            seed,
+            iteration,
+            adjust,
+            threads,
+        };
+        let (rb, cb) = NativeEngine.vsample(&*f, &layout, &bins, &opts);
+        let scalar = ScalarEval(&*f);
+        let (rs, cs) = NativeEngine.vsample(&scalar, &layout, &bins, &opts);
+        if rb.integral.to_bits() != rs.integral.to_bits() {
+            return Err(format!(
+                "{name} d={d}: integral {} != scalar {}",
+                rb.integral, rs.integral
+            ));
+        }
+        if rb.variance.to_bits() != rs.variance.to_bits() {
+            return Err(format!(
+                "{name} d={d}: variance {} != scalar {}",
+                rb.variance, rs.variance
+            ));
+        }
+        match (cb, cs) {
+            (None, None) => {}
+            (Some(hb), Some(hs)) => {
+                for (j, (a, b)) in hb.iter().zip(&hs).enumerate() {
+                    if a.to_bits() != b.to_bits() {
+                        return Err(format!("{name} d={d}: histogram cell {j}: {a} != {b}"));
+                    }
+                }
+            }
+            _ => return Err(format!("{name}: histogram presence differs")),
+        }
+        Ok(())
+    });
+}
+
+/// Same bitwise contract for the adaptive-stratification engine, whose
+/// variable per-cube sample counts exercise the chunked block path.
+#[test]
+fn prop_batch_adaptive_bitwise_matches_scalar() {
+    property("batch_vs_scalar_adaptive", 12, |g: &mut Gen, i| {
+        let names = ["f1", "f3", "f4", "f6"];
+        let name = names[i % names.len()];
+        let d = g.usize_range(2, 5);
+        let calls = g.usize_range(1024, 8192);
+        let nb = g.usize_range(4, 30);
+        let seed = g.usize_range(0, 1 << 30) as u32;
+        let threads = g.usize_range(1, 4);
+        let f = by_name(name, d).map_err(|e| e.to_string())?;
+        let layout = Layout::compute(d, calls, nb, 1).map_err(|e| e.to_string())?;
+        let bins = Bins::uniform(d, nb);
+        // A skewed allocation so cubes carry very different counts
+        // (some below, some far above one block).
+        let mut st_batch = StratState::uniform(&layout);
+        st_batch.sigmas[0] = 50.0;
+        for s in st_batch.sigmas.iter_mut().skip(1) {
+            *s = 0.05;
+        }
+        st_batch.reallocate(calls);
+        let mut st_scalar = st_batch.clone();
+        let (rb, hb) =
+            vsample_adaptive(&*f, &layout, &bins, &mut st_batch, seed, 1, threads);
+        let scalar = ScalarEval(&*f);
+        let (rs, hs) =
+            vsample_adaptive(&scalar, &layout, &bins, &mut st_scalar, seed, 1, threads);
+        if rb.integral.to_bits() != rs.integral.to_bits()
+            || rb.variance.to_bits() != rs.variance.to_bits()
+        {
+            return Err(format!(
+                "{name} d={d}: adaptive estimate differs: ({}, {}) vs ({}, {})",
+                rb.integral, rb.variance, rs.integral, rs.variance
+            ));
+        }
+        for (j, (a, b)) in hb.iter().zip(&hs).enumerate() {
+            if a.to_bits() != b.to_bits() {
+                return Err(format!("{name} d={d}: histogram cell {j}: {a} != {b}"));
+            }
+        }
+        for (j, (a, b)) in st_batch.sigmas.iter().zip(&st_scalar.sigmas).enumerate() {
+            if a.to_bits() != b.to_bits() {
+                return Err(format!("{name} d={d}: sigma {j}: {a} != {b}"));
             }
         }
         Ok(())
