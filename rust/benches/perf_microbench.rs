@@ -4,9 +4,13 @@
 //!   * integrand-evaluation share of total time (paper §5.3: <1%-18%)
 //!   * bin-adjustment (smooth+rebin) cost
 //!   * batched vs scalar-default evaluation (the PointBlock redesign)
+//!   * uniform m-Cubes vs VEGAS+ adaptive stratification (calls to tau)
 //! CSV: results/perf_microbench.csv; `BENCH {...}` JSON lines record
-//! the batch-vs-scalar series for the perf trajectory.
+//! the batch-vs-scalar and sampling-strategy series for the perf
+//! trajectory.
 
+use mcubes::api::{Integrator, Sampling};
+use mcubes::coordinator::IntegrationOutput;
 use mcubes::engine::{NativeEngine, ScalarEval, VSampleOpts};
 use mcubes::grid::Bins;
 use mcubes::integrands::by_name;
@@ -231,6 +235,81 @@ fn main() {
                 (1.0 - t_na.median_ms() / t_adj.median_ms()) * 100.0
             ),
         ]);
+    }
+
+    // ---- Uniform vs VEGAS+ adaptive stratification --------------------
+    // Same per-iteration budget, seed, and tolerance; both strategies
+    // drive until tau is met. VEGAS+ re-apportions each iteration's
+    // samples toward high-variance sub-cubes, so on peaked integrands
+    // (f4, cosmo) it should reach tau with fewer total calls; f5 is the
+    // smooth control where the two should be comparable.
+    {
+        println!("\nuniform vs VEGAS+ sampling (total calls to reach tau):");
+        let mut table = Table::new(&[
+            "integrand",
+            "d",
+            "tau",
+            "uniform calls",
+            "vegas+ calls",
+            "ratio",
+            "uniform rel",
+            "vegas+ rel",
+        ]);
+        for (name, d, calls, tau) in [
+            ("f4", 8, 1usize << 16, 5e-3),
+            ("f5", 8, 1usize << 15, 1e-3),
+            ("cosmo", 6, 1usize << 16, 5e-3),
+        ] {
+            let run = |sampling: Sampling| {
+                Integrator::from_registry(name, d)
+                    .expect("registry integrand")
+                    .maxcalls(calls)
+                    .tolerance(tau)
+                    .max_iterations(60)
+                    .adjust_iterations(48)
+                    .skip_iterations(2)
+                    .seed(2024)
+                    .sampling(sampling)
+                    .run()
+                    .expect("integration run")
+            };
+            let uni = run(Sampling::Uniform);
+            let vp = run(Sampling::vegas_plus());
+            let truth = by_name(name, d).unwrap().true_value();
+            let rel = |out: &IntegrationOutput| match truth {
+                Some(t) => ((out.integral - t) / t).abs(),
+                None => out.rel_err,
+            };
+            let ratio = vp.calls_used as f64 / uni.calls_used as f64;
+            table.row(vec![
+                name.into(),
+                d.to_string(),
+                format!("{tau:.0e}"),
+                uni.calls_used.to_string(),
+                vp.calls_used.to_string(),
+                format!("{ratio:.2}x"),
+                format!("{:.1e}", rel(&uni)),
+                format!("{:.1e}", rel(&vp)),
+            ]);
+            let tag = format!("sampling_{name}_d{d}");
+            emit_bench(&tag, "uniform_calls", uni.calls_used as f64, "calls");
+            emit_bench(&tag, "vegas_plus_calls", vp.calls_used as f64, "calls");
+            emit_bench(&tag, "calls_ratio", ratio, "x");
+            emit_bench(&tag, "uniform_rel_err", rel(&uni), "rel");
+            emit_bench(&tag, "vegas_plus_rel_err", rel(&vp), "rel");
+            csv.row(vec![
+                tag.clone(),
+                "uniform_calls".into(),
+                uni.calls_used.to_string(),
+            ]);
+            csv.row(vec![
+                tag.clone(),
+                "vegas_plus_calls".into(),
+                vp.calls_used.to_string(),
+            ]);
+            csv.row(vec![tag, "calls_ratio".into(), format!("{ratio:.4}")]);
+        }
+        println!("{}", table.render());
     }
 
     let _ = csv.write_csv("results/perf_microbench.csv");

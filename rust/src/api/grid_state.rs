@@ -1,34 +1,131 @@
-//! Exportable importance-grid state — the warm-start currency of the
-//! `Integrator` facade.
+//! Exportable importance-grid + stratification state — the warm-start
+//! currency of the `Integrator` facade.
 //!
-//! A `GridState` captures the adapted VEGAS bin boundaries after a run.
+//! A `GridState` captures the adapted VEGAS bin boundaries after a run
+//! and, for `Sampling::VegasPlus` runs, a [`StratSnapshot`] of the
+//! per-cube sample allocation (counts + damped variance accumulator).
 //! Re-importing it into a later run (same dimension and bin count; the
-//! call budget may differ) skips the adjust phase's warm-up cost — the
+//! call budget may differ) skips the adjust phase's warm-up — the
 //! serving win for repeated similar integrals, escalation ladders, and
-//! service jobs.
+//! service jobs. A matching-layout VEGAS+ run additionally resumes the
+//! adaptive allocation instead of re-learning it from uniform counts.
 
 use crate::error::{Error, Result};
 use crate::grid::{Bins, GridMode};
-use crate::util::json::Value;
+use crate::strat::Allocation;
+use crate::util::json::{ObjBuilder, Value};
 use std::path::Path;
 
-/// An adapted (or uniform) importance grid, detached from any driver.
+/// Snapshot of a VEGAS+ run's per-cube allocation state, carried
+/// alongside the importance grid so warm starts resume the adaptive
+/// stratification (see `crate::strat::Allocation`).
+///
+/// The snapshot is layout-specific: `counts.len()` is the donor
+/// layout's cube count `m`. A warm-started run whose layout has a
+/// different `m` (different `maxcalls`, e.g. an escalation level)
+/// keeps the grid but starts from a fresh uniform allocation.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StratSnapshot {
+    /// Redistribution exponent the donor ran with.
+    pub beta: f64,
+    /// Per-cube sample counts of the donor's final allocation.
+    pub counts: Vec<u32>,
+    /// Damped per-cube variance accumulator (`d_k`).
+    pub damped: Vec<f64>,
+}
+
+impl StratSnapshot {
+    fn to_json(&self) -> Value {
+        ObjBuilder::new()
+            .field("beta", self.beta)
+            .field(
+                "counts",
+                self.counts.iter().map(|&c| c as usize).collect::<Vec<_>>(),
+            )
+            .field("damped", self.damped.clone())
+            .build()
+    }
+
+    fn from_json(v: &Value) -> Result<StratSnapshot> {
+        let beta = v
+            .req("beta")?
+            .as_f64()
+            .ok_or_else(|| Error::Manifest("strat beta".into()))?;
+        // Mirror `Sampling::validate`: a grid file must not smuggle in
+        // a beta the config layer would reject.
+        if !beta.is_finite() || !(0.0..=1.0).contains(&beta) {
+            return Err(Error::Manifest(format!(
+                "strat beta must lie in [0, 1], got {beta}"
+            )));
+        }
+        let counts_raw = v
+            .req("counts")?
+            .as_f64_vec()
+            .ok_or_else(|| Error::Manifest("strat counts".into()))?;
+        let mut counts = Vec::with_capacity(counts_raw.len());
+        for c in counts_raw {
+            // JSON-level shape only (integral, fits u32); the
+            // allocation invariants are checked once, below.
+            if c.fract() != 0.0 || !(0.0..=u32::MAX as f64).contains(&c) {
+                return Err(Error::Manifest(format!("bad strat count {c}")));
+            }
+            counts.push(c as u32);
+        }
+        let damped = v
+            .req("damped")?
+            .as_f64_vec()
+            .ok_or_else(|| Error::Manifest("strat damped".into()))?;
+        // Single source of truth for the allocation invariants (shape,
+        // per-cube floor, finite non-negative accumulator).
+        let alloc = Allocation::from_parts(counts, damped)
+            .map_err(|e| Error::Manifest(format!("strat snapshot: {e}")))?;
+        Ok(StratSnapshot {
+            beta,
+            counts: alloc.counts().to_vec(),
+            damped: alloc.damped().to_vec(),
+        })
+    }
+}
+
+/// An adapted (or uniform) importance grid, detached from any driver,
+/// optionally carrying VEGAS+ stratification state.
 #[derive(Debug, Clone, PartialEq)]
 pub struct GridState {
     bins: Bins,
+    strat: Option<StratSnapshot>,
 }
 
 impl GridState {
-    /// Capture a grid from raw bin boundaries.
+    /// Capture a grid from raw bin boundaries (no stratification
+    /// state).
     pub fn from_bins(bins: Bins) -> GridState {
-        GridState { bins }
+        GridState { bins, strat: None }
     }
 
     /// A fresh uniform grid (what a cold start uses internally).
     pub fn uniform(d: usize, nb: usize, mode: GridMode) -> GridState {
         GridState {
             bins: Bins::uniform_mode(d, nb, mode),
+            strat: None,
         }
+    }
+
+    /// Attach a VEGAS+ stratification snapshot (builder style).
+    pub fn with_strat(mut self, strat: StratSnapshot) -> GridState {
+        self.strat = Some(strat);
+        self
+    }
+
+    /// The VEGAS+ stratification snapshot, when the donor ran with
+    /// `Sampling::VegasPlus`.
+    pub fn strat(&self) -> Option<&StratSnapshot> {
+        self.strat.as_ref()
+    }
+
+    /// Drop the stratification snapshot, keeping only the grid.
+    pub fn without_strat(mut self) -> GridState {
+        self.strat = None;
+        self
     }
 
     /// Borrow the underlying bin boundaries.
@@ -68,28 +165,38 @@ impl GridState {
         Ok(())
     }
 
-    /// Serialize (JSON value) — same schema as `Bins::to_json`.
+    /// Serialize (JSON value) — the `Bins::to_json` schema plus an
+    /// optional `strat` object, so grids saved before the VEGAS+
+    /// extension still load.
     pub fn to_json(&self) -> Value {
-        self.bins.to_json()
+        let mut v = self.bins.to_json();
+        if let (Value::Obj(fields), Some(s)) = (&mut v, &self.strat) {
+            fields.push(("strat".to_string(), s.to_json()));
+        }
+        v
     }
 
-    /// Restore from `to_json` output (validates grid invariants).
+    /// Restore from `to_json` output (validates grid + strat
+    /// invariants; the `strat` field is optional).
     pub fn from_json(v: &Value) -> Result<GridState> {
-        Ok(GridState {
-            bins: Bins::from_json(v)?,
-        })
+        let bins = Bins::from_json(v)?;
+        let strat = match v.get("strat") {
+            Some(sv) => Some(StratSnapshot::from_json(sv)?),
+            None => None,
+        };
+        Ok(GridState { bins, strat })
     }
 
     /// Save to a JSON file.
     pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
-        self.bins.save(path)
+        std::fs::write(path, self.to_json().to_json())?;
+        Ok(())
     }
 
-    /// Load from a file written by `save`.
+    /// Load from a file written by `save` (or a bare `Bins` file).
     pub fn load(path: impl AsRef<Path>) -> Result<GridState> {
-        Ok(GridState {
-            bins: Bins::load(path)?,
-        })
+        let text = std::fs::read_to_string(path)?;
+        GridState::from_json(&crate::util::json::parse(&text)?)
     }
 }
 
@@ -108,6 +215,44 @@ mod tests {
         assert_eq!(back, gs);
         assert_eq!(back.d(), 3);
         assert_eq!(back.nb(), 12);
+        assert!(back.strat().is_none());
+    }
+
+    #[test]
+    fn json_roundtrip_preserves_strat_snapshot() {
+        let gs = GridState::uniform(2, 8, GridMode::PerAxis).with_strat(StratSnapshot {
+            beta: 0.75,
+            counts: vec![2, 7, 3, 4],
+            damped: vec![0.0, 1.5, 0.25, 1e-9],
+        });
+        let back = GridState::from_json(&gs.to_json()).unwrap();
+        assert_eq!(back, gs);
+        let s = back.strat().unwrap();
+        assert_eq!(s.beta, 0.75);
+        assert_eq!(s.counts, vec![2, 7, 3, 4]);
+        assert_eq!(back.clone().without_strat().strat(), None);
+    }
+
+    #[test]
+    fn strat_snapshot_rejects_corrupt_fields() {
+        let bad = [
+            // count below the floor
+            r#"{"beta": 0.75, "counts": [1, 4], "damped": [0.0, 0.0]}"#,
+            // fractional count
+            r#"{"beta": 0.75, "counts": [2.5, 4], "damped": [0.0, 0.0]}"#,
+            // shape mismatch
+            r#"{"beta": 0.75, "counts": [2, 4], "damped": [0.0]}"#,
+            // negative accumulator
+            r#"{"beta": 0.75, "counts": [2, 4], "damped": [0.0, -1.0]}"#,
+            // beta outside [0, 1] / non-finite (JSON null)
+            r#"{"beta": 1.5, "counts": [2, 4], "damped": [0.0, 0.0]}"#,
+            r#"{"beta": -0.25, "counts": [2, 4], "damped": [0.0, 0.0]}"#,
+            r#"{"beta": null, "counts": [2, 4], "damped": [0.0, 0.0]}"#,
+        ];
+        for s in bad {
+            let v = crate::util::json::parse(s).unwrap();
+            assert!(StratSnapshot::from_json(&v).is_err(), "{s}");
+        }
     }
 
     #[test]
@@ -120,12 +265,29 @@ mod tests {
 
     #[test]
     fn file_roundtrip() {
-        let gs = GridState::uniform(2, 8, GridMode::Shared1D);
+        let gs = GridState::uniform(2, 8, GridMode::Shared1D).with_strat(StratSnapshot {
+            beta: 0.5,
+            counts: vec![3, 2],
+            damped: vec![0.125, 0.0],
+        });
         let path = std::env::temp_dir().join("mcubes_grid_state_test.json");
         gs.save(&path).unwrap();
         let back = GridState::load(&path).unwrap();
         assert_eq!(back, gs);
         assert_eq!(back.mode(), GridMode::Shared1D);
+        let _ = std::fs::remove_file(path);
+    }
+
+    #[test]
+    fn loads_pre_strat_grid_files() {
+        // A file written by the pre-VEGAS+ GridState (bare Bins
+        // schema) must still load, with no stratification state.
+        let bins = Bins::uniform(2, 4);
+        let path = std::env::temp_dir().join("mcubes_grid_state_legacy.json");
+        bins.save(&path).unwrap();
+        let back = GridState::load(&path).unwrap();
+        assert_eq!(back.bins(), &bins);
+        assert!(back.strat().is_none());
         let _ = std::fs::remove_file(path);
     }
 }

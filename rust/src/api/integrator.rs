@@ -26,7 +26,7 @@ use crate::error::{Error, Result};
 use crate::grid::GridMode;
 use crate::integrands::IntegrandRef;
 use crate::runtime::{PjrtRuntime, Registry, DEFAULT_ARTIFACT_DIR};
-use crate::strat::Bounds;
+use crate::strat::{Bounds, Sampling};
 
 /// Which execution backend serves the job.
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -207,6 +207,36 @@ impl Integrator {
         self
     }
 
+    /// Per-cube sample allocation: the paper's uniform m-Cubes split
+    /// (default) or VEGAS+ adaptive stratification, which re-apportions
+    /// each iteration's budget toward high-variance sub-cubes (native
+    /// backend only; `beta = 0` reproduces the uniform path bitwise).
+    /// See `docs/sampling.md` for when each wins.
+    ///
+    /// ```no_run
+    /// use mcubes::prelude::*;
+    ///
+    /// let out = Integrator::from_registry("f4", 8)?
+    ///     .maxcalls(1 << 16)
+    ///     .tolerance(1e-3)
+    ///     .sampling(Sampling::VegasPlus { beta: 0.75 })
+    ///     .observe(|ev| {
+    ///         if let Some(a) = ev.alloc {
+    ///             eprintln!(
+    ///                 "it {}: samples/cube min {} mean {:.1} max {}",
+    ///                 ev.iteration, a.min, a.mean, a.max
+    ///             );
+    ///         }
+    ///     })
+    ///     .run()?;
+    /// println!("I = {} ± {}", out.integral, out.sigma);
+    /// # Ok::<(), mcubes::Error>(())
+    /// ```
+    pub fn sampling(mut self, sampling: Sampling) -> Self {
+        self.cfg.sampling = sampling;
+        self
+    }
+
     /// Replace the whole job configuration at once.
     pub fn config(mut self, cfg: JobConfig) -> Self {
         self.cfg = cfg;
@@ -323,6 +353,15 @@ impl Integrator {
                 }
             }
             BackendSpec::Pjrt { artifacts_dir } => {
+                if matches!(cfg.sampling, Sampling::VegasPlus { .. }) {
+                    return Err(Error::Config(
+                        "VEGAS+ adaptive stratification is native-only: the \
+                         PJRT artifacts compile the uniform m-Cubes sample \
+                         layout (drop `.sampling(..)` or use the native \
+                         backend)"
+                            .into(),
+                    ));
+                }
                 if escalation.is_some() {
                     return Err(Error::Config(
                         "escalation is only supported on the native backend \
@@ -386,7 +425,8 @@ mod tests {
             .blocks(4)
             .seed(7)
             .threads(2)
-            .grid_mode(GridMode::Shared1D);
+            .grid_mode(GridMode::Shared1D)
+            .sampling(Sampling::vegas_plus());
         let c = intg.job_config();
         assert_eq!(c.maxcalls, 4096);
         assert_eq!(c.tau_rel, 5e-3);
@@ -398,6 +438,7 @@ mod tests {
         assert_eq!(c.seed, 7);
         assert_eq!(c.threads, 2);
         assert_eq!(c.grid_mode, GridMode::Shared1D);
+        assert_eq!(c.sampling, Sampling::VegasPlus { beta: 0.75 });
         assert_eq!(intg.spec().label(), "f4");
     }
 
@@ -428,6 +469,49 @@ mod tests {
             .unwrap_err()
             .to_string();
         assert!(err.contains("registry integrand"), "{err}");
+    }
+
+    #[test]
+    fn vegas_plus_on_pjrt_backend_is_rejected() {
+        let err = Integrator::from_registry("f4", 5)
+            .unwrap()
+            .backend(BackendSpec::pjrt_default())
+            .sampling(Sampling::vegas_plus())
+            .run()
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("native-only"), "{err}");
+    }
+
+    #[test]
+    fn vegas_plus_runs_through_the_facade() {
+        use std::sync::{Arc, Mutex};
+        let sink: Arc<Mutex<Vec<(u32, u32, usize)>>> = Arc::new(Mutex::new(Vec::new()));
+        let s2 = Arc::clone(&sink);
+        let out = Integrator::from_registry("f4", 5)
+            .unwrap()
+            .maxcalls(4096)
+            .tolerance(1e-12) // fixed work: run all iterations
+            .max_iterations(5)
+            .adjust_iterations(3)
+            .skip_iterations(0)
+            .seed(3)
+            .sampling(Sampling::vegas_plus())
+            .observe(move |ev| {
+                if let Some(a) = ev.alloc {
+                    s2.lock().unwrap().push((a.min, a.max, a.total));
+                }
+            })
+            .run()
+            .unwrap();
+        assert_eq!(out.backend, "native-vegas+");
+        assert_eq!(out.iterations, 5);
+        let spreads = sink.lock().unwrap();
+        assert_eq!(spreads.len(), 5);
+        // Iteration 0 is the uniform split (f4 d=5 @4096: p = 4
+        // everywhere); every iteration keeps the full budget.
+        assert_eq!(spreads[0].0, spreads[0].1);
+        assert!(spreads.iter().all(|&(_, _, t)| t == 4096));
     }
 
     #[test]

@@ -23,6 +23,11 @@
 //!   [`Integrator::custom_batch`] accept closures over whole
 //!   structure-of-arrays [`PointBlock`]s, the same
 //!   one-virtual-call-per-block hot path the registry integrands use.
+//! * **Sampling strategy** — [`Integrator::sampling`] switches between
+//!   the paper's uniform per-cube allocation and VEGAS+ adaptive
+//!   stratification ([`Sampling::VegasPlus`]); VEGAS+ runs export
+//!   their allocation in [`GridState`] (as a [`StratSnapshot`]) and
+//!   report per-iteration [`AllocStats`] through observers.
 //!
 //! ## Migration table
 //!
@@ -54,7 +59,7 @@ mod integrand;
 mod integrator;
 mod observer;
 
-pub use grid_state::GridState;
+pub use grid_state::{GridState, StratSnapshot};
 pub use integrand::{FnBatchIntegrand, FnIntegrand, IntegrandSpec};
 pub use integrator::{BackendSpec, Integrator};
 pub use observer::IterationEvent;
@@ -62,6 +67,10 @@ pub use observer::IterationEvent;
 // Re-export the bounds type here too: it is the facade's vocabulary for
 // "where to integrate", even though it lives with the layout math.
 pub use crate::strat::Bounds;
+
+// Sampling strategy + allocation stats are facade vocabulary as well:
+// the builder's `sampling(..)` takes one, observers receive the other.
+pub use crate::strat::{AllocStats, Sampling};
 
 // The batch-evaluation vocabulary is part of the facade surface:
 // `custom_batch` closures receive a `PointBlock`.

@@ -9,6 +9,7 @@
 
 use crate::estimator::IterationResult;
 use crate::grid::Bins;
+use crate::strat::AllocStats;
 
 /// Snapshot of one driver iteration, delivered to observers.
 #[derive(Debug, Clone, Copy)]
@@ -37,6 +38,12 @@ pub struct IterationEvent<'a> {
     pub estimator_reset: bool,
     /// Convergence was declared on this iteration (it is the last one).
     pub converged: bool,
+    /// Per-cube sample-allocation summary (min/max/mean samples per
+    /// cube) of this iteration — `Some` only under
+    /// `Sampling::VegasPlus` (see `crate::strat::Sampling`), where the
+    /// spread shows how hard the adaptive stratification is skewing
+    /// the budget toward high-variance cubes.
+    pub alloc: Option<AllocStats>,
     /// The importance grid after this iteration's adjustment.
     pub grid: &'a Bins,
 }

@@ -37,6 +37,12 @@ pub trait VSampleBackend {
         iteration: u32,
         adjust: bool,
     ) -> Result<(IterationResult, Option<Vec<f64>>)>;
+    /// Per-cube allocation summary of the *most recent* `run` call —
+    /// `Some` only for adaptively-stratified backends (VEGAS+). The
+    /// driver forwards it to observers via `IterationEvent::alloc`.
+    fn alloc_stats(&self) -> Option<crate::strat::AllocStats> {
+        None
+    }
 }
 
 /// Native-engine backend.

@@ -10,13 +10,15 @@
 //! new code goes through `api::Integrator`.
 
 use super::backend::VSampleBackend;
-use crate::api::{GridState, IterationEvent};
+use crate::api::{GridState, IterationEvent, StratSnapshot};
+use crate::engine::vsample_stratified;
 use crate::error::{Error, Result};
 use crate::estimator::{Convergence, WeightedEstimator};
 use crate::grid::{Bins, GridMode};
 use crate::integrands::Integrand;
-use crate::strat::Layout;
+use crate::strat::{AllocStats, Allocation, Layout, Sampling};
 use crate::util::threadpool::default_threads;
+use std::cell::RefCell;
 use std::time::Instant;
 
 /// Everything the driver needs to know about one integration job.
@@ -45,6 +47,11 @@ pub struct JobConfig {
     pub seed: u32,
     /// Grid mode: PerAxis (m-Cubes) or Shared1D (m-Cubes1D).
     pub grid_mode: GridMode,
+    /// Per-cube sample allocation: uniform m-Cubes (`Sampling::Uniform`)
+    /// or VEGAS+ adaptive stratification (`Sampling::VegasPlus`).
+    /// Native engine only — the PJRT artifacts compile the uniform
+    /// layout.
+    pub sampling: Sampling,
     /// Worker threads for the native engine.
     pub threads: usize,
 }
@@ -62,6 +69,7 @@ impl Default for JobConfig {
             reset_on_inconsistency: true,
             seed: 42,
             grid_mode: GridMode::PerAxis,
+            sampling: Sampling::Uniform,
             threads: default_threads(),
         }
     }
@@ -105,6 +113,7 @@ impl JobConfig {
                 self.skip, self.itmax
             )));
         }
+        self.sampling.validate()?;
         Ok(())
     }
 
@@ -236,6 +245,7 @@ pub fn drive(
                 rel_err: est.rel_err(),
                 estimator_reset,
                 converged,
+                alloc: backend.alloc_stats(),
                 grid: &bins,
             });
         }
@@ -301,8 +311,75 @@ impl<'a> VSampleBackend for BorrowedNative<'a> {
     }
 }
 
+/// Mutable per-run state of the stratified backend: the live
+/// allocation plus the stats snapshot of the iteration that just ran.
+struct StratCell {
+    alloc: Allocation,
+    last: Option<AllocStats>,
+}
+
+/// VEGAS+ stratified twin of [`BorrowedNative`]: drives
+/// `engine::stratified::vsample_stratified` with a live [`Allocation`],
+/// re-apportioning the per-iteration budget after every pass. The
+/// driver itself stays allocation-agnostic — it only sees the
+/// `VSampleBackend` contract plus `alloc_stats` for observers.
+struct BorrowedStratified<'a> {
+    f: &'a dyn Integrand,
+    layout: Layout,
+    threads: usize,
+    beta: f64,
+    /// Per-iteration call budget (`layout.calls()`, matching the
+    /// uniform engine so `calls_used` accounting is identical).
+    budget: usize,
+    state: RefCell<StratCell>,
+}
+
+impl<'a> VSampleBackend for BorrowedStratified<'a> {
+    fn layout(&self) -> Layout {
+        self.layout
+    }
+
+    fn bounds(&self) -> crate::strat::Bounds {
+        self.f.bounds()
+    }
+
+    fn name(&self) -> &'static str {
+        "native-vegas+"
+    }
+
+    fn run(
+        &self,
+        bins: &Bins,
+        seed: u32,
+        iteration: u32,
+        adjust: bool,
+    ) -> Result<(crate::estimator::IterationResult, Option<Vec<f64>>)> {
+        let mut cell = self.state.borrow_mut();
+        let StratCell { alloc, last } = &mut *cell;
+        *last = Some(alloc.stats());
+        let opts = crate::engine::VSampleOpts {
+            seed,
+            iteration,
+            adjust,
+            threads: self.threads,
+        };
+        let out = vsample_stratified(self.f, &self.layout, bins, alloc, &opts);
+        // Re-apportion for the next iteration from the freshly damped
+        // accumulator (cheap; also leaves the exported snapshot ready
+        // for warm starts even when this was the final iteration).
+        alloc.reallocate(self.budget, self.beta);
+        Ok(out)
+    }
+
+    fn alloc_stats(&self) -> Option<AllocStats> {
+        self.state.borrow().last
+    }
+}
+
 /// Native-engine drive over a borrowed integrand — the shared core the
-/// facade, the service, and the deprecated shims all call.
+/// facade, the service, and the deprecated shims all call. Dispatches
+/// on `cfg.sampling` between the uniform m-Cubes engine and the VEGAS+
+/// stratified path.
 pub(crate) fn integrate_native_core(
     f: &dyn Integrand,
     cfg: &JobConfig,
@@ -311,12 +388,51 @@ pub(crate) fn integrate_native_core(
 ) -> Result<DriveOutcome> {
     cfg.validate()?;
     let layout = Layout::compute(f.dim(), cfg.maxcalls, cfg.nb, cfg.nblocks)?;
-    let backend = BorrowedNative {
-        f,
-        layout,
-        threads: cfg.threads,
-    };
-    drive(&backend, cfg, warm_start, observer)
+    match cfg.sampling {
+        Sampling::Uniform => {
+            let backend = BorrowedNative {
+                f,
+                layout,
+                threads: cfg.threads,
+            };
+            drive(&backend, cfg, warm_start, observer)
+        }
+        Sampling::VegasPlus { beta } => {
+            // Resume the donor's allocation when its layout matches;
+            // allocations are per-cube state, so a different cube
+            // count (different maxcalls) starts fresh while the
+            // importance grid still warm-starts. The re-apportion
+            // below is a pure function of (damped, budget, beta): for
+            // a matching budget it reproduces the snapshot's counts
+            // bit-for-bit, and for a same-m / different-p layout
+            // (escalation can hit this) it corrects the counts to the
+            // new call budget instead of silently under-sampling.
+            let alloc = match warm_start.and_then(|gs| gs.strat()) {
+                Some(s) if s.counts.len() == layout.m => {
+                    let mut a = Allocation::from_parts(s.counts.clone(), s.damped.clone())?;
+                    a.reallocate(layout.calls(), beta);
+                    a
+                }
+                _ => Allocation::uniform(&layout),
+            };
+            let backend = BorrowedStratified {
+                f,
+                layout,
+                threads: cfg.threads,
+                beta,
+                budget: layout.calls(),
+                state: RefCell::new(StratCell { alloc, last: None }),
+            };
+            let mut outcome = drive(&backend, cfg, warm_start, observer)?;
+            let cell = backend.state.into_inner();
+            outcome.grid = outcome.grid.with_strat(StratSnapshot {
+                beta,
+                counts: cell.alloc.counts().to_vec(),
+                damped: cell.alloc.damped().to_vec(),
+            });
+            Ok(outcome)
+        }
+    }
 }
 
 /// Escalating-precision native integration: runs the driver at
@@ -639,6 +755,173 @@ mod tests {
         // Matching shape is accepted.
         let warm = integrate_native_core(&*f, &cfg(1 << 13, 1e-3), Some(&donor.grid), None);
         assert!(warm.is_ok());
+    }
+
+    #[test]
+    fn vegas_plus_converges_and_is_honest() {
+        let f = by_name("f4", 5).unwrap();
+        let mut c = cfg(1 << 16, 1e-3);
+        c.itmax = 20;
+        c.ita = 12;
+        c.seed = 5;
+        c.threads = 2;
+        c.sampling = Sampling::vegas_plus();
+        let out = integrate(&*f, &c).unwrap();
+        assert!(out.converged, "{out:?}");
+        assert_eq!(out.backend, "native-vegas+");
+        let truth = f.true_value().unwrap();
+        assert!(
+            (out.integral - truth).abs() < 4.0 * out.sigma,
+            "I={} truth={truth} sigma={}",
+            out.integral,
+            out.sigma
+        );
+    }
+
+    #[test]
+    fn vegas_plus_beta_zero_bitwise_matches_uniform() {
+        // beta = 0 degenerates to the exact uniform split, and both
+        // engines share the fixed-task reduction — whole runs agree
+        // bit for bit, importance-grid evolution included.
+        let f = by_name("f3", 3).unwrap();
+        let mut c = cfg(1 << 13, 1e-3);
+        c.itmax = 8;
+        c.ita = 5;
+        let uni = integrate(&*f, &c).unwrap();
+        c.sampling = Sampling::VegasPlus { beta: 0.0 };
+        let vp = integrate(&*f, &c).unwrap();
+        assert_eq!(uni.integral.to_bits(), vp.integral.to_bits());
+        assert_eq!(uni.sigma.to_bits(), vp.sigma.to_bits());
+        assert_eq!(uni.iterations, vp.iterations);
+    }
+
+    #[test]
+    fn vegas_plus_bitwise_across_thread_counts() {
+        let f = by_name("f4", 5).unwrap();
+        let run = |threads: usize| {
+            let mut c = cfg(4096, 1e-15); // fixed work: run all iterations
+            c.itmax = 6;
+            c.ita = 4;
+            c.skip = 0;
+            c.threads = threads;
+            c.sampling = Sampling::vegas_plus();
+            integrate(&*f, &c).unwrap()
+        };
+        let a = run(1);
+        let b = run(4);
+        assert_eq!(a.integral.to_bits(), b.integral.to_bits());
+        assert_eq!(a.sigma.to_bits(), b.sigma.to_bits());
+        assert_eq!(a.iterations, b.iterations);
+    }
+
+    #[test]
+    fn vegas_plus_not_worse_than_uniform_on_peaked_integrand() {
+        // Same per-iteration budget, fixed iteration count: adaptive
+        // allocation should reach a comparable-or-smaller combined
+        // sigma on a sharply peaked integrand.
+        let f = by_name("f4", 5).unwrap();
+        let mk = |sampling: Sampling| {
+            let mut c = cfg(4096, 1e-15);
+            c.itmax = 10;
+            c.ita = 8;
+            c.seed = 5;
+            c.threads = 2;
+            c.sampling = sampling;
+            integrate(&*f, &c).unwrap()
+        };
+        let uni = mk(Sampling::Uniform);
+        let vp = mk(Sampling::vegas_plus());
+        assert_eq!(uni.calls_used, vp.calls_used, "same budget per iteration");
+        assert!(
+            vp.sigma < uni.sigma * 1.05,
+            "vegas+ {} should be <= ~uniform {}",
+            vp.sigma,
+            uni.sigma
+        );
+    }
+
+    #[test]
+    fn vegas_plus_invalid_beta_rejected() {
+        let f = by_name("f3", 3).unwrap();
+        for beta in [-0.5, 1.5, f64::NAN] {
+            let mut c = cfg(1 << 12, 1e-3);
+            c.sampling = Sampling::VegasPlus { beta };
+            let err = integrate(&*f, &c).unwrap_err().to_string();
+            assert!(err.contains("beta"), "{err}");
+        }
+    }
+
+    #[test]
+    fn vegas_plus_exports_and_resumes_allocation() {
+        // f4 d=5 at 4096 calls: g=4, m=1024, p=4 — enough per-cube
+        // headroom (p > 2) for the allocation to actually move.
+        let f = by_name("f4", 5).unwrap();
+        let mut c = cfg(4096, 1e-15);
+        c.itmax = 6;
+        c.ita = 4;
+        c.skip = 0;
+        c.sampling = Sampling::vegas_plus();
+        let donor = integrate_native_core(&*f, &c, None, None).unwrap();
+        let layout = Layout::compute(5, 4096, c.nb, c.nblocks).unwrap();
+        let snap = donor.grid.strat().expect("strat snapshot").clone();
+        assert_eq!(snap.beta, 0.75);
+        assert_eq!(snap.counts.len(), layout.m);
+        assert_eq!(
+            snap.counts.iter().map(|&x| x as usize).sum::<usize>(),
+            layout.calls()
+        );
+        assert!(
+            snap.counts.iter().any(|&x| x as usize != layout.p),
+            "adaptive allocation never moved off the uniform split"
+        );
+
+        // Same layout: the snapshot resumes (first iteration samples
+        // through the imported counts, so outputs differ from a fresh
+        // uniform start).
+        let resumed = integrate_native_core(&*f, &c, Some(&donor.grid), None).unwrap();
+        assert!(resumed.grid.strat().is_some());
+        let fresh_grid = donor.grid.clone().without_strat();
+        let fresh = integrate_native_core(&*f, &c, Some(&fresh_grid), None).unwrap();
+        assert_ne!(
+            resumed.output.integral.to_bits(),
+            fresh.output.integral.to_bits(),
+            "resumed allocation must change the sample stream"
+        );
+
+        // Different budget (different m): grid warm-starts, allocation
+        // silently refreshes to uniform for the new layout.
+        let mut c2 = c.clone();
+        c2.maxcalls = 1 << 13;
+        let refreshed = integrate_native_core(&*f, &c2, Some(&donor.grid), None).unwrap();
+        assert_eq!(refreshed.output.iterations, c2.itmax);
+    }
+
+    #[test]
+    fn uniform_runs_carry_no_strat_state_and_no_alloc_events() {
+        let f = by_name("f5", 4).unwrap();
+        let mut c = cfg(1 << 12, 1e-3);
+        c.itmax = 4;
+        c.ita = 2;
+        c.skip = 0;
+        c.tau_rel = 1e-15;
+        let mut allocs = Vec::new();
+        let mut cb = |ev: &IterationEvent| allocs.push(ev.alloc);
+        let out = integrate_native_core(&*f, &c, None, Some(&mut cb)).unwrap();
+        assert!(out.grid.strat().is_none());
+        assert!(allocs.iter().all(|a| a.is_none()));
+
+        c.sampling = Sampling::vegas_plus();
+        let mut allocs = Vec::new();
+        let mut cb = |ev: &IterationEvent| allocs.push(ev.alloc);
+        let out = integrate_native_core(&*f, &c, None, Some(&mut cb)).unwrap();
+        assert!(out.grid.strat().is_some());
+        assert_eq!(allocs.len(), out.output.iterations);
+        for a in allocs {
+            let a = a.expect("vegas+ iterations expose allocation stats");
+            assert!(a.min >= 2);
+            assert!(a.max >= a.min);
+            assert!(a.total > 0);
+        }
     }
 
     /// The one sanctioned `allow(deprecated)`: the test that pins the

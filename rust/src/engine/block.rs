@@ -1,5 +1,5 @@
 //! Structure-of-arrays point blocks — the batch-first evaluation
-//! vocabulary shared by the engine, the adaptive engine, the CPU
+//! vocabulary shared by the engine, the stratified engine, the CPU
 //! baselines, and user batch integrands.
 //!
 //! The paper's whole performance story is evaluating *blocks* of points
@@ -26,7 +26,7 @@
 //!
 //! Fill helpers here ([`VegasMap`], [`accumulate_uniform_box`]) are the
 //! single definition of the change-of-variables / uniform-box sampling
-//! loops. The native engine, the adaptive engine, and the uniform-box
+//! loops. The native engine, the stratified engine, and the uniform-box
 //! baselines (`plain_mc`, `miser`, `zmc_sim`) draw bit-identical points
 //! from the same Philox streams as before the batch redesign; the one
 //! exception is `gvegas_sim`, whose old loop divided by `g` where
@@ -211,7 +211,7 @@ impl Integrand for ScalarEval<'_> {
 
 /// The VEGAS change of variables for block fills — one definition of
 /// the per-axis importance-grid transform shared by the native engine,
-/// the adaptive engine, and the gVegas simulator, so the batched fills
+/// the stratified engine, and the gVegas simulator, so the batched fills
 /// stay bit-identical to the scalar loops they replaced.
 pub struct VegasMap<'a> {
     edges: &'a [f64],

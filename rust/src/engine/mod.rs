@@ -9,10 +9,17 @@
 //! `rust/tests/integration_runtime.rs`.
 //!
 //! Parallelization mirrors the paper's Algorithm 3: the cube range is
-//! split into contiguous batches, one per worker thread; each worker
-//! serially processes its cubes and accumulates a private estimate +
-//! histogram; the coordinator reduces worker partials in order
-//! (deterministic, unlike atomics).
+//! split into contiguous *reduction tasks* (a fixed partition of
+//! [`REDUCTION_TASKS`] spans, independent of the thread count); workers
+//! pick up contiguous runs of tasks, each task accumulates a private
+//! estimate + histogram over its cubes, and the coordinator folds task
+//! partials in task order. Because both the partition and the fold
+//! order are fixed, results are **bitwise identical for any thread
+//! count** (deterministic, unlike atomics — and stronger than the
+//! per-worker chunking this replaced, which was only reproducible up to
+//! summation-order rounding). The stratified VEGAS+ path
+//! ([`stratified::vsample_stratified`]) shares the same partition, so
+//! `Sampling::VegasPlus { beta: 0 }` reproduces this engine bitwise.
 //!
 //! Evaluation is batch-first (the paper's per-thread-block batches):
 //! each worker fills a structure-of-arrays [`PointBlock`] with the
@@ -23,10 +30,11 @@
 //! identical to the scalar per-point loop this replaced (asserted by
 //! the batch-vs-scalar property tests).
 
-pub mod adaptive;
 pub mod block;
+pub mod stratified;
 
 pub use block::{accumulate_uniform_box, PointBlock, ScalarEval, VegasMap, BLOCK_POINTS};
+pub use stratified::vsample_stratified;
 
 use crate::estimator::IterationResult;
 use crate::grid::Bins;
@@ -37,6 +45,31 @@ use crate::util::threadpool::parallel_chunks;
 
 /// Maximum dimension supported by the stack-allocated hot path.
 pub const MAX_DIM: usize = 16;
+
+/// Fixed number of reduction tasks the cube range is partitioned into.
+///
+/// Work is split into (at most) this many contiguous cube spans and the
+/// per-task partials are folded in task order, so the floating-point
+/// reduction is a pure function of the layout — never of the thread
+/// count. 64 keeps every realistic worker count busy while the
+/// per-task scratch stays negligible next to the sampling work.
+pub const REDUCTION_TASKS: usize = 64;
+
+/// Number of reduction tasks for an `m`-cube layout.
+#[inline]
+pub(crate) fn reduction_tasks(m: usize) -> usize {
+    m.min(REDUCTION_TASKS).max(1)
+}
+
+/// Cube span `[lo, hi)` of reduction task `t` (balanced partition of
+/// `m` cubes into `ntasks` contiguous spans).
+#[inline]
+pub(crate) fn reduction_task_span(m: usize, ntasks: usize, t: usize) -> (usize, usize) {
+    let q = m / ntasks;
+    let r = m % ntasks;
+    let lo = t * q + t.min(r);
+    (lo, lo + q + usize::from(t < r))
+}
 
 /// One worker's partial output.
 struct Partial {
@@ -77,14 +110,23 @@ impl NativeEngine {
         assert_eq!(bins.d(), layout.d);
         assert_eq!(bins.nb(), layout.nb);
 
-        let partials = parallel_chunks(layout.m, opts.threads, |a, b| {
-            sample_cube_range(f, layout, bins, opts, a, b)
-        });
+        // Fixed task partition: the same spans (and the same fold
+        // order below) for every thread count — see `REDUCTION_TASKS`.
+        let ntasks = reduction_tasks(layout.m);
+        let task_partials: Vec<Vec<Partial>> =
+            parallel_chunks(ntasks, opts.threads, |t0, t1| {
+                (t0..t1)
+                    .map(|t| {
+                        let (lo, hi) = reduction_task_span(layout.m, ntasks, t);
+                        sample_cube_range(f, layout, bins, opts, lo, hi)
+                    })
+                    .collect()
+            });
 
         let mut integral = 0.0;
         let mut variance = 0.0;
         let mut contrib = opts.adjust.then(|| vec![0.0; layout.d * layout.nb]);
-        for p in partials {
+        for p in task_partials.into_iter().flatten() {
             integral += p.integral;
             variance += p.variance;
             if let (Some(acc), Some(part)) = (contrib.as_mut(), p.contrib.as_ref()) {
@@ -123,7 +165,7 @@ fn sample_cube_range(
     let p = layout.p;
     let pf = p as f64;
     // Per-axis affine map unit box -> physical box + importance-grid
-    // transform, shared with the adaptive engine and gVegas-sim.
+    // transform, shared with the stratified engine and gVegas-sim.
     let map = VegasMap::new(layout, bins, &f.bounds());
 
     let mut contrib = opts.adjust.then(|| vec![0.0; d * nb]);
@@ -224,7 +266,9 @@ mod tests {
     }
 
     #[test]
-    fn deterministic_across_thread_counts() {
+    fn bitwise_identical_across_thread_counts() {
+        // The fixed task partition makes the reduction independent of
+        // the worker count: not just close — bit-for-bit equal.
         let f = by_name("f4", 5).unwrap();
         let layout = Layout::compute(5, 4096, 20, 4).unwrap();
         let bins = Bins::uniform(5, 20);
@@ -247,11 +291,27 @@ mod tests {
                 ..opts(42, 0)
             },
         );
-        assert!((r1.integral - r8.integral).abs() <= 1e-15 * r1.integral.abs());
-        assert!((r1.variance - r8.variance).abs() <= 1e-12 * r1.variance.abs());
+        assert_eq!(r1.integral.to_bits(), r8.integral.to_bits());
+        assert_eq!(r1.variance.to_bits(), r8.variance.to_bits());
         let (c1, c8) = (c1.unwrap(), c8.unwrap());
         for (a, b) in c1.iter().zip(&c8) {
-            assert!((a - b).abs() <= 1e-12 * a.abs().max(1.0));
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn reduction_task_partition_covers_cubes() {
+        for m in [1, 2, 63, 64, 65, 1000, 6561] {
+            let ntasks = reduction_tasks(m);
+            assert!(ntasks >= 1 && ntasks <= REDUCTION_TASKS.min(m).max(1));
+            let mut next = 0usize;
+            for t in 0..ntasks {
+                let (lo, hi) = reduction_task_span(m, ntasks, t);
+                assert_eq!(lo, next, "m={m} t={t}");
+                assert!(hi > lo, "empty task: m={m} t={t}");
+                next = hi;
+            }
+            assert_eq!(next, m);
         }
     }
 

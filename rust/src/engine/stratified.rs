@@ -1,0 +1,274 @@
+//! VEGAS+ adaptive-stratification sampling path — variable per-cube
+//! sample counts over the m-Cubes layout.
+//!
+//! The uniform engine ([`crate::engine::NativeEngine::vsample`]) gives
+//! every sub-cube the same `p` samples. This path drives the identical
+//! fill-block → `eval_batch` → reduce pipeline with a per-cube
+//! [`Allocation`]: cube `k` draws `counts[k]` samples from the Philox
+//! indices `offsets[k] .. offsets[k] + counts[k]` (exclusive prefix
+//! sums of the counts), so the sample stream of every cube is a pure
+//! function of `(seed, iteration, allocation)` — never of the thread
+//! count. After the pass each cube's fresh variance observation
+//! `n_k * Var_k` is folded into the allocation's damped accumulator
+//! (`d_k <- d_k/2 + n_k Var_k / 2`); the *caller* decides when to
+//! [`Allocation::reallocate`] with weights `d_k^beta`
+//! (`crate::coordinator`'s stratified backend does so every iteration).
+//!
+//! ## Reproducibility contract
+//!
+//! The cube range is partitioned into the engine's fixed reduction
+//! tasks and partials are folded in task order — the same contract as
+//! the uniform engine, so:
+//!
+//! * results are bitwise identical for any `threads` value, and
+//! * with a uniform allocation (`beta = 0`, or the initial state) the
+//!   Philox offsets collapse to `cube * p` and the whole pass is
+//!   bitwise identical to `NativeEngine::vsample` (property-tested in
+//!   `rust/tests/properties.rs`).
+
+use super::block::{PointBlock, VegasMap, BLOCK_POINTS};
+use super::{reduction_task_span, reduction_tasks, VSampleOpts, MAX_DIM};
+use crate::estimator::IterationResult;
+use crate::grid::Bins;
+use crate::integrands::Integrand;
+use crate::rng::uniforms_into;
+use crate::strat::{Allocation, Layout};
+use crate::util::threadpool::parallel_chunks;
+
+/// One reduction task's partial output.
+struct Partial {
+    cube_lo: usize,
+    integral: f64,
+    variance: f64,
+    contrib: Option<Vec<f64>>,
+    /// Fresh per-cube variance observations `n_k * Var_k`, indexed
+    /// relative to `cube_lo`.
+    d_new: Vec<f64>,
+}
+
+/// One VEGAS+ V-Sample pass over every sub-cube in `layout`.
+///
+/// Samples cube `k` `alloc.counts()[k]` times, folds the fresh per-cube
+/// variance into `alloc`'s damped accumulator, and returns the
+/// iteration estimate plus (when `opts.adjust`) the row-major `[d][nb]`
+/// bin-contribution histogram — the same contract as the uniform
+/// engine's `vsample`.
+pub fn vsample_stratified(
+    f: &dyn Integrand,
+    layout: &Layout,
+    bins: &Bins,
+    alloc: &mut Allocation,
+    opts: &VSampleOpts,
+) -> (IterationResult, Option<Vec<f64>>) {
+    assert!(layout.d <= MAX_DIM, "d > MAX_DIM");
+    assert_eq!(bins.d(), layout.d);
+    assert_eq!(bins.nb(), layout.nb);
+    assert_eq!(alloc.m(), layout.m, "allocation cube count != layout");
+    let d = layout.d;
+    let nb = layout.nb;
+    let m = layout.m as f64;
+
+    let ntasks = reduction_tasks(layout.m);
+    let task_partials: Vec<Vec<Partial>> = {
+        let counts = alloc.counts();
+        let offsets = alloc.offsets();
+        parallel_chunks(ntasks, opts.threads, |t0, t1| {
+            // Per-worker scratch, shared across this worker's tasks.
+            let map = VegasMap::new(layout, bins, &f.bounds());
+            let mut blk = PointBlock::with_capacity(d, BLOCK_POINTS);
+            let mut vals = vec![0.0f64; BLOCK_POINTS];
+            let mut bidx = vec![0usize; BLOCK_POINTS * d];
+            let mut u = [0.0f64; MAX_DIM];
+            let mut coords = [0usize; MAX_DIM];
+            (t0..t1)
+                .map(|t| {
+                    let (cube_lo, cube_hi) = reduction_task_span(layout.m, ntasks, t);
+                    let mut out = Partial {
+                        cube_lo,
+                        integral: 0.0,
+                        variance: 0.0,
+                        contrib: opts.adjust.then(|| vec![0.0; d * nb]),
+                        d_new: Vec::with_capacity(cube_hi - cube_lo),
+                    };
+                    for cube in cube_lo..cube_hi {
+                        layout.cube_coords(cube, &mut coords[..d]);
+                        let n = counts[cube].max(2);
+                        let nf = n as f64;
+                        let mut s1 = 0.0;
+                        let mut s2 = 0.0;
+                        // A cube's (variable-size) sample set is
+                        // processed in block-sized chunks, carrying
+                        // s1/s2 across chunks so the accumulation
+                        // order matches the uniform engine's.
+                        let mut k0 = 0u32;
+                        while k0 < n {
+                            let chunk = (n - k0).min(BLOCK_POINTS as u32);
+                            blk.reset(chunk as usize);
+                            for k in 0..chunk {
+                                let sidx = offsets[cube].wrapping_add(k0 + k);
+                                uniforms_into(sidx, opts.iteration, opts.seed, &mut u[..d]);
+                                map.fill_point(
+                                    &coords[..d],
+                                    &u[..d],
+                                    &mut blk,
+                                    k as usize,
+                                    &mut bidx,
+                                );
+                            }
+                            f.eval_batch(&blk, &mut vals[..chunk as usize]);
+                            for j in 0..chunk as usize {
+                                let v = vals[j] * blk.jac(j);
+                                s1 += v;
+                                s2 += v * v;
+                                if let Some(cacc) = out.contrib.as_mut() {
+                                    let v2 = v * v;
+                                    for i in 0..d {
+                                        cacc[bidx[j * d + i]] += v2;
+                                    }
+                                }
+                            }
+                            k0 += chunk;
+                        }
+                        let mean = s1 / nf;
+                        let var = ((s2 / nf - mean * mean).max(0.0)) / (nf - 1.0);
+                        out.integral += mean / m;
+                        out.variance += var / (m * m);
+                        // Variance of the *cube total* — Lepage's d_k
+                        // observation driving the next allocation.
+                        out.d_new.push(var * nf);
+                    }
+                    out
+                })
+                .collect()
+        })
+    };
+
+    let mut integral = 0.0;
+    let mut variance = 0.0;
+    let mut contrib = opts.adjust.then(|| vec![0.0; d * nb]);
+    for p in task_partials.into_iter().flatten() {
+        integral += p.integral;
+        variance += p.variance;
+        if let (Some(acc), Some(part)) = (contrib.as_mut(), p.contrib.as_ref()) {
+            for (x, y) in acc.iter_mut().zip(part) {
+                *x += y;
+            }
+        }
+        for (i, &dn) in p.d_new.iter().enumerate() {
+            alloc.absorb(p.cube_lo + i, dn);
+        }
+    }
+    (
+        IterationResult {
+            integral,
+            variance,
+        },
+        contrib,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::NativeEngine;
+    use crate::integrands::by_name;
+
+    fn opts(seed: u32, it: u32, threads: usize) -> VSampleOpts {
+        VSampleOpts {
+            seed,
+            iteration: it,
+            adjust: true,
+            threads,
+        }
+    }
+
+    #[test]
+    fn uniform_allocation_matches_uniform_engine_bitwise() {
+        let f = by_name("f4", 5).unwrap();
+        let layout = Layout::compute(5, 4096, 20, 4).unwrap();
+        let bins = Bins::uniform(5, 20);
+        let (ru, cu) = NativeEngine.vsample(&*f, &layout, &bins, &opts(42, 0, 2));
+        let mut alloc = Allocation::uniform(&layout);
+        let (rs, cs) = vsample_stratified(&*f, &layout, &bins, &mut alloc, &opts(42, 0, 3));
+        assert_eq!(ru.integral.to_bits(), rs.integral.to_bits());
+        assert_eq!(ru.variance.to_bits(), rs.variance.to_bits());
+        let (cu, cs) = (cu.unwrap(), cs.unwrap());
+        for (a, b) in cu.iter().zip(&cs) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn bitwise_identical_across_thread_counts() {
+        let f = by_name("f3", 4).unwrap();
+        let layout = Layout::compute(4, 4096, 16, 1).unwrap();
+        let bins = Bins::uniform(4, 16);
+        // Skewed allocation so counts differ wildly across cubes.
+        let mut a1 = Allocation::uniform(&layout);
+        a1.absorb(0, 100.0);
+        for cube in 1..a1.m() {
+            a1.absorb(cube, 0.01);
+        }
+        a1.reallocate(layout.calls(), crate::strat::DEFAULT_BETA);
+        let mut a4 = a1.clone();
+        let (r1, c1) = vsample_stratified(&*f, &layout, &bins, &mut a1, &opts(9, 3, 1));
+        let (r4, c4) = vsample_stratified(&*f, &layout, &bins, &mut a4, &opts(9, 3, 4));
+        assert_eq!(r1.integral.to_bits(), r4.integral.to_bits());
+        assert_eq!(r1.variance.to_bits(), r4.variance.to_bits());
+        for (a, b) in c1.unwrap().iter().zip(&c4.unwrap()) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        for (a, b) in a1.damped().iter().zip(a4.damped()) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn no_adjust_skips_histogram_but_updates_accumulator() {
+        let f = by_name("f5", 4).unwrap();
+        let layout = Layout::compute(4, 2048, 10, 2).unwrap();
+        let bins = Bins::uniform(4, 10);
+        let mut alloc = Allocation::uniform(&layout);
+        let (_, c) = vsample_stratified(
+            &*f,
+            &layout,
+            &bins,
+            &mut alloc,
+            &VSampleOpts {
+                adjust: false,
+                ..opts(1, 0, 2)
+            },
+        );
+        assert!(c.is_none());
+        assert!(
+            alloc.damped().iter().any(|&d| d > 0.0),
+            "variance observations must land in the accumulator"
+        );
+    }
+
+    #[test]
+    fn allocation_concentrates_on_the_peak() {
+        // f4's sharp Gaussian peaks at the box center: after a pass +
+        // reallocation, the cubes nearest the center must hold more
+        // samples than the corner cube. (d=5 @4096 gives p=4 — real
+        // re-allocation headroom above the per-cube floor of 2.)
+        let f = by_name("f4", 5).unwrap();
+        let layout = Layout::compute(5, 4096, 16, 1).unwrap();
+        let bins = Bins::uniform(5, 16);
+        let mut alloc = Allocation::uniform(&layout);
+        vsample_stratified(&*f, &layout, &bins, &mut alloc, &opts(7, 0, 2));
+        alloc.reallocate(layout.calls(), crate::strat::DEFAULT_BETA);
+        let mut mid = [0usize; 5];
+        for s in mid.iter_mut() {
+            *s = layout.g / 2;
+        }
+        let center = layout.cube_index(&mid);
+        assert!(
+            alloc.counts()[center] > alloc.counts()[0],
+            "center cube {} should outdraw corner cube {}",
+            alloc.counts()[center],
+            alloc.counts()[0]
+        );
+        assert_eq!(alloc.total(), layout.calls());
+    }
+}

@@ -22,7 +22,7 @@ use std::sync::Arc;
 /// A d-dimensional scalar integrand. `eval` receives one point in
 /// integration-space coordinates (length d); `eval_batch` receives a
 /// structure-of-arrays [`PointBlock`] of points — the engine, the
-/// adaptive engine, and every CPU baseline evaluate exclusively through
+/// stratified engine, and every CPU baseline evaluate exclusively through
 /// `eval_batch`, so overriding it is the one lever for making an
 /// integrand's hot loop vectorize.
 pub trait Integrand: Send + Sync {

@@ -43,7 +43,7 @@
 //!
 //! ### Batch-first evaluation
 //!
-//! Every evaluation path — the native engine, the adaptive engine, and
+//! Every evaluation path — the native engine, the stratified engine, and
 //! the CPU baselines — feeds points through
 //! [`integrands::Integrand::eval_batch`] in structure-of-arrays
 //! [`engine::PointBlock`]s (column-major `[d][block]`, mirroring the
@@ -71,6 +71,27 @@
 //! Scalar closures (`Integrator::from_fn`) still work — the trait's
 //! default `eval_batch` bridges them point by point, bit-identically
 //! (property-tested across the whole registry).
+//!
+//! ### VEGAS+ adaptive stratification
+//!
+//! m-Cubes keeps the per-cube workload uniform (the paper's GPU
+//! load-balance contribution). On sharply peaked integrands the VEGAS+
+//! successor line wins statistically by re-apportioning each
+//! iteration's budget toward high-variance sub-cubes; both strategies
+//! ship behind one switch (see `docs/sampling.md` for the trade-offs
+//! and the reproducibility contract):
+//!
+//! ```no_run
+//! use mcubes::prelude::*;
+//!
+//! let out = Integrator::from_registry("f4", 8)?
+//!     .maxcalls(1 << 16)
+//!     .tolerance(1e-3)
+//!     .sampling(Sampling::VegasPlus { beta: 0.75 })
+//!     .run()?;
+//! println!("I = {} ± {}", out.integral, out.sigma);
+//! # Ok::<(), mcubes::Error>(())
+//! ```
 //!
 //! ### Warm starts and observers
 //!
@@ -125,12 +146,28 @@ pub use error::{Error, Result};
 pub mod prelude {
     pub use crate::api::{
         BackendSpec, Bounds, FnBatchIntegrand, FnIntegrand, GridState, IntegrandSpec, Integrator,
-        IterationEvent, PointBlock,
+        IterationEvent, PointBlock, StratSnapshot,
     };
     pub use crate::coordinator::{DriveOutcome, IntegrationOutput, JobConfig};
     pub use crate::error::{Error, Result};
     pub use crate::estimator::{Convergence, IterationResult, WeightedEstimator};
     pub use crate::grid::{Bins, GridMode};
     pub use crate::integrands::{Integrand, IntegrandRef};
-    pub use crate::strat::Layout;
+    pub use crate::strat::{AllocStats, Layout, Sampling};
 }
+
+// Compile the README's and the docs mini-book's Rust code fences as
+// doctests (`cargo test --doc` / the CI docs step), so the prose can
+// never drift from the API. Non-Rust fences are labelled (`sh`,
+// `text`) and skipped by rustdoc.
+#[cfg(doctest)]
+#[doc = include_str!("../../README.md")]
+mod readme_doctests {}
+
+#[cfg(doctest)]
+#[doc = include_str!("../../docs/architecture.md")]
+mod architecture_doctests {}
+
+#[cfg(doctest)]
+#[doc = include_str!("../../docs/sampling.md")]
+mod sampling_doctests {}

@@ -1,0 +1,424 @@
+//! VEGAS+ adaptive sample allocation — per-cube budgets driven by
+//! damped variance (`d_k^beta` weights).
+//!
+//! m-Cubes keeps the workload uniform: every sub-cube receives the same
+//! `p` samples (the paper's GPU load-balance contribution). The VEGAS+
+//! line (Lepage 2021, "VEGAS Enhanced"; cuVegas, arXiv:2408.09229)
+//! instead *re-allocates* the per-iteration call budget across cubes by
+//! how much each cube contributes to the total variance:
+//!
+//! ```text
+//! d_k   <- (1 - DAMPING) * d_k + DAMPING * n_k * Var_k     (damped accumulator)
+//! n_k'  =  floor + apportion(budget - m * floor; w_k = d_k^beta)
+//! ```
+//!
+//! where `Var_k` is the sample variance of cube `k`'s estimate this
+//! iteration, `beta` damps the redistribution (`beta = 0.75` is
+//! Lepage's default; `beta = 0` recovers the exact uniform split), and
+//! `floor = MIN_SAMPLES_PER_CUBE` keeps a variance estimate alive in
+//! every cube. The integer apportionment uses largest-remainder
+//! rounding with index order as the tie-break, so the allocation is a
+//! deterministic function of the damped accumulator — a load-time
+//! snapshot (see `api::GridState`) resumes bit-identically.
+//!
+//! [`Allocation`] owns the per-cube counts, their exclusive prefix sums
+//! (the per-cube Philox stream offsets used by
+//! `engine::stratified::vsample_stratified`), and the damped
+//! accumulator. [`Sampling`] is the user-facing strategy switch carried
+//! by `coordinator::JobConfig` and the `api::Integrator` builder.
+
+use crate::error::{Error, Result};
+use crate::strat::Layout;
+
+/// Minimum samples any cube receives, ever — below two samples a cube
+/// has no variance estimate and can never re-earn budget.
+pub const MIN_SAMPLES_PER_CUBE: u32 = 2;
+
+/// Damping factor for the per-cube variance accumulator: the new
+/// observation and the running value are averaged 50/50, so stale
+/// variance decays geometrically instead of pinning the allocation.
+pub const DAMPING: f64 = 0.5;
+
+/// Lepage's default redistribution exponent.
+pub const DEFAULT_BETA: f64 = 0.75;
+
+/// Which per-cube sample allocation the engine uses.
+///
+/// ```
+/// use mcubes::strat::Sampling;
+///
+/// assert_eq!(Sampling::default(), Sampling::Uniform);
+/// assert_eq!(Sampling::vegas_plus(), Sampling::VegasPlus { beta: 0.75 });
+/// assert!(Sampling::VegasPlus { beta: 0.75 }.validate().is_ok());
+/// assert!(Sampling::VegasPlus { beta: 2.0 }.validate().is_err());
+/// ```
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub enum Sampling {
+    /// The paper's uniform m-Cubes allocation: every sub-cube draws the
+    /// same `p = maxcalls / m` samples each iteration.
+    #[default]
+    Uniform,
+    /// VEGAS+ adaptive stratification: per-cube counts re-allocated
+    /// each iteration proportionally to `d_k^beta` (damped per-cube
+    /// variance). `beta = 0` reproduces the uniform split bitwise;
+    /// `beta = 0.75` is the standard default (see
+    /// [`Sampling::vegas_plus`]).
+    VegasPlus {
+        /// Redistribution exponent in `[0, 1]`.
+        beta: f64,
+    },
+}
+
+impl Sampling {
+    /// VEGAS+ with the standard damping exponent ([`DEFAULT_BETA`]).
+    pub fn vegas_plus() -> Sampling {
+        Sampling::VegasPlus { beta: DEFAULT_BETA }
+    }
+
+    /// Check the strategy's parameters.
+    pub fn validate(&self) -> Result<()> {
+        if let Sampling::VegasPlus { beta } = *self {
+            if !beta.is_finite() || !(0.0..=1.0).contains(&beta) {
+                return Err(Error::Config(format!(
+                    "VEGAS+ beta must lie in [0, 1] (0 = uniform split, \
+                     0.75 = Lepage default), got {beta}"
+                )));
+            }
+        }
+        Ok(())
+    }
+
+    /// Short label for reports ("uniform" / "vegas+").
+    pub fn label(&self) -> &'static str {
+        match self {
+            Sampling::Uniform => "uniform",
+            Sampling::VegasPlus { .. } => "vegas+",
+        }
+    }
+}
+
+/// Per-iteration summary of an [`Allocation`], surfaced to observers
+/// through `api::IterationEvent::alloc`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct AllocStats {
+    /// Smallest per-cube sample count.
+    pub min: u32,
+    /// Largest per-cube sample count.
+    pub max: u32,
+    /// Mean samples per cube (`total / m`).
+    pub mean: f64,
+    /// Total samples this iteration (the call budget).
+    pub total: usize,
+}
+
+/// Per-cube sample allocation state for one stratification layout.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Allocation {
+    /// Samples allocated to each cube this iteration.
+    counts: Vec<u32>,
+    /// Exclusive prefix sums of `counts` — the Philox counter offset of
+    /// each cube's first sample (wrapping, like the counter itself).
+    offsets: Vec<u32>,
+    /// Damped per-cube variance accumulator `d_k` driving reallocation.
+    damped: Vec<f64>,
+}
+
+impl Allocation {
+    /// The uniform m-Cubes allocation for `layout` (`p` samples per
+    /// cube, zeroed accumulator).
+    pub fn uniform(layout: &Layout) -> Allocation {
+        let counts = vec![layout.p as u32; layout.m];
+        let offsets = prefix_sums(&counts);
+        Allocation {
+            counts,
+            offsets,
+            damped: vec![0.0; layout.m],
+        }
+    }
+
+    /// Rebuild an allocation from a snapshot (warm start). Validates
+    /// shape and the per-cube floor; offsets are recomputed.
+    pub fn from_parts(counts: Vec<u32>, damped: Vec<f64>) -> Result<Allocation> {
+        if counts.is_empty() {
+            return Err(Error::Config("allocation needs at least one cube".into()));
+        }
+        if counts.len() != damped.len() {
+            return Err(Error::Config(format!(
+                "allocation shape mismatch: {} counts vs {} damped entries",
+                counts.len(),
+                damped.len()
+            )));
+        }
+        if let Some(c) = counts.iter().find(|&&c| c < MIN_SAMPLES_PER_CUBE) {
+            return Err(Error::Config(format!(
+                "allocation count {c} below the per-cube floor {MIN_SAMPLES_PER_CUBE}"
+            )));
+        }
+        if let Some(d) = damped.iter().find(|&&d| !d.is_finite() || d < 0.0) {
+            return Err(Error::Config(format!(
+                "damped variance entries must be finite and >= 0, got {d}"
+            )));
+        }
+        let offsets = prefix_sums(&counts);
+        Ok(Allocation {
+            counts,
+            offsets,
+            damped,
+        })
+    }
+
+    /// Number of cubes this allocation covers.
+    pub fn m(&self) -> usize {
+        self.counts.len()
+    }
+
+    /// Per-cube sample counts.
+    pub fn counts(&self) -> &[u32] {
+        &self.counts
+    }
+
+    /// Per-cube Philox stream offsets (exclusive prefix sums of
+    /// [`Allocation::counts`]).
+    pub fn offsets(&self) -> &[u32] {
+        &self.offsets
+    }
+
+    /// Damped per-cube variance accumulator.
+    pub fn damped(&self) -> &[f64] {
+        &self.damped
+    }
+
+    /// Total samples this iteration.
+    pub fn total(&self) -> usize {
+        self.counts.iter().map(|&c| c as usize).sum()
+    }
+
+    /// Min/max/mean summary of the current counts.
+    pub fn stats(&self) -> AllocStats {
+        let total = self.total();
+        let min = self.counts.iter().copied().min().unwrap_or(0);
+        let max = self.counts.iter().copied().max().unwrap_or(0);
+        AllocStats {
+            min,
+            max,
+            mean: total as f64 / self.counts.len().max(1) as f64,
+            total,
+        }
+    }
+
+    /// Fold one cube's fresh variance observation (`n_k * Var_k`) into
+    /// the damped accumulator.
+    #[inline]
+    pub fn absorb(&mut self, cube: usize, d_new: f64) {
+        let d = &mut self.damped[cube];
+        *d = (1.0 - DAMPING) * *d + DAMPING * d_new.max(0.0);
+    }
+
+    /// Re-apportion `budget` samples across cubes from the damped
+    /// accumulator with weights `d_k^beta`.
+    ///
+    /// Invariants (property-tested):
+    /// * every count >= [`MIN_SAMPLES_PER_CUBE`];
+    /// * `total() == max(budget, MIN_SAMPLES_PER_CUBE * m)`;
+    /// * `beta == 0` (or an all-zero accumulator) yields the exact
+    ///   integer uniform split `budget / m` (+1 on the first
+    ///   `budget % m` cubes) — for the m-Cubes budget `m * p` that is
+    ///   exactly `p` per cube, so the Philox offsets and therefore the
+    ///   whole iteration match the uniform engine bitwise.
+    pub fn reallocate(&mut self, budget: usize, beta: f64) {
+        let m = self.counts.len();
+        let floor = MIN_SAMPLES_PER_CUBE as usize;
+        let weights: Vec<f64> = self.damped.iter().map(|&d| d.max(0.0).powf(beta)).collect();
+        let total_w: f64 = weights.iter().sum();
+        if beta == 0.0 || !(total_w > 0.0) || !total_w.is_finite() {
+            // Exact uniform split (also the fallback before any
+            // variance has been observed, or if the accumulator
+            // degenerated to zeros/non-finite values).
+            let (q, r) = if budget >= floor * m {
+                (budget / m, budget % m)
+            } else {
+                (floor, 0)
+            };
+            for (i, c) in self.counts.iter_mut().enumerate() {
+                *c = (q + usize::from(i < r)) as u32;
+            }
+            self.offsets = prefix_sums(&self.counts);
+            return;
+        }
+
+        let spendable = budget.saturating_sub(floor * m);
+        let mut fracs = vec![0.0f64; m];
+        let mut allocated = floor * m;
+        for i in 0..m {
+            let share = spendable as f64 * (weights[i] / total_w);
+            let base = share.floor();
+            fracs[i] = share - base;
+            let base = (base as usize).min(spendable);
+            self.counts[i] = (floor + base) as u32;
+            allocated += base;
+        }
+        // Largest-remainder rounding for the leftover samples; ties
+        // break toward the lower cube index, so the result is a pure
+        // function of the accumulator.
+        if allocated < budget {
+            let mut order: Vec<usize> = (0..m).collect();
+            order.sort_by(|&a, &b| fracs[b].total_cmp(&fracs[a]).then(a.cmp(&b)));
+            let mut left = budget - allocated;
+            let mut idx = 0usize;
+            while left > 0 {
+                self.counts[order[idx % m]] += 1;
+                idx += 1;
+                left -= 1;
+            }
+        } else if allocated > budget {
+            // Floating-point slop can only over-floor by a hair; shave
+            // deterministically, never below the floor.
+            let mut excess = allocated - budget;
+            while excess > 0 {
+                let mut progressed = false;
+                for c in self.counts.iter_mut() {
+                    if excess == 0 {
+                        break;
+                    }
+                    if *c as usize > floor {
+                        *c -= 1;
+                        excess -= 1;
+                        progressed = true;
+                    }
+                }
+                if !progressed {
+                    break;
+                }
+            }
+        }
+        self.offsets = prefix_sums(&self.counts);
+    }
+}
+
+fn prefix_sums(counts: &[u32]) -> Vec<u32> {
+    let mut offsets = Vec::with_capacity(counts.len());
+    let mut acc = 0u32;
+    for &c in counts {
+        offsets.push(acc);
+        acc = acc.wrapping_add(c);
+    }
+    offsets
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn uniform_matches_layout() {
+        let layout = Layout::compute(4, 4096, 20, 1).unwrap();
+        let a = Allocation::uniform(&layout);
+        assert_eq!(a.m(), layout.m);
+        assert_eq!(a.total(), layout.m * layout.p);
+        assert_eq!(a.offsets()[0], 0);
+        assert_eq!(a.offsets()[1], layout.p as u32);
+        let s = a.stats();
+        assert_eq!(s.min, layout.p as u32);
+        assert_eq!(s.max, layout.p as u32);
+        assert_eq!(s.total, layout.m * layout.p);
+    }
+
+    #[test]
+    fn reallocate_preserves_budget_and_floor() {
+        let layout = Layout::compute(3, 8000, 20, 1).unwrap();
+        let mut a = Allocation::uniform(&layout);
+        a.absorb(7, 1e4); // one hot cube
+        for cube in 0..a.m() {
+            if cube != 7 {
+                a.absorb(cube, 1e-4);
+            }
+        }
+        a.reallocate(8000, DEFAULT_BETA);
+        assert_eq!(a.total(), 8000);
+        assert!(a.counts().iter().all(|&c| c >= MIN_SAMPLES_PER_CUBE));
+        assert!(
+            a.counts()[7] > a.counts()[100],
+            "hot cube must get more samples: {} vs {}",
+            a.counts()[7],
+            a.counts()[100]
+        );
+        for i in 1..a.m() {
+            assert_eq!(a.offsets()[i], a.offsets()[i - 1] + a.counts()[i - 1]);
+        }
+    }
+
+    #[test]
+    fn beta_zero_is_exact_uniform_split() {
+        let layout = Layout::compute(5, 4096, 20, 1).unwrap();
+        let mut a = Allocation::uniform(&layout);
+        // Wildly skewed accumulator: beta = 0 must ignore it.
+        for cube in 0..a.m() {
+            a.absorb(cube, (cube as f64).powi(3));
+        }
+        a.reallocate(layout.m * layout.p, 0.0);
+        assert!(a.counts().iter().all(|&c| c as usize == layout.p));
+        let b = Allocation::uniform(&layout);
+        assert_eq!(a.counts(), b.counts());
+        assert_eq!(a.offsets(), b.offsets());
+    }
+
+    #[test]
+    fn uniform_split_distributes_remainder_to_low_indices() {
+        let layout = Layout::compute(2, 100, 8, 1).unwrap();
+        let mut a = Allocation::uniform(&layout);
+        let budget = layout.m * layout.p + 3;
+        a.reallocate(budget, 0.0);
+        assert_eq!(a.total(), budget);
+        for i in 0..3 {
+            assert_eq!(a.counts()[i] as usize, layout.p + 1);
+        }
+        assert_eq!(a.counts()[3] as usize, layout.p);
+    }
+
+    #[test]
+    fn floor_dominates_tiny_budgets() {
+        let layout = Layout::compute(3, 2000, 8, 1).unwrap();
+        let mut a = Allocation::uniform(&layout);
+        a.absorb(0, 5.0);
+        a.reallocate(3, DEFAULT_BETA); // budget < 2m
+        assert!(a.counts().iter().all(|&c| c == MIN_SAMPLES_PER_CUBE));
+        assert_eq!(a.total(), 2 * a.m());
+    }
+
+    #[test]
+    fn from_parts_validates() {
+        assert!(Allocation::from_parts(vec![], vec![]).is_err());
+        assert!(Allocation::from_parts(vec![2, 2], vec![0.0]).is_err());
+        assert!(Allocation::from_parts(vec![2, 1], vec![0.0, 0.0]).is_err());
+        assert!(Allocation::from_parts(vec![2, 2], vec![0.0, -1.0]).is_err());
+        assert!(Allocation::from_parts(vec![2, 2], vec![0.0, f64::NAN]).is_err());
+        let a = Allocation::from_parts(vec![2, 5], vec![0.1, 0.9]).unwrap();
+        assert_eq!(a.offsets(), &[0, 2]);
+        assert_eq!(a.total(), 7);
+    }
+
+    #[test]
+    fn absorb_damps_geometrically() {
+        let layout = Layout::compute(2, 64, 4, 1).unwrap();
+        let mut a = Allocation::uniform(&layout);
+        a.absorb(0, 8.0);
+        assert_eq!(a.damped()[0], 4.0);
+        a.absorb(0, 8.0);
+        assert_eq!(a.damped()[0], 6.0);
+        a.absorb(0, -3.0); // negative observations clamp to zero
+        assert_eq!(a.damped()[0], 3.0);
+    }
+
+    #[test]
+    fn sampling_validates_beta() {
+        assert!(Sampling::Uniform.validate().is_ok());
+        assert!(Sampling::vegas_plus().validate().is_ok());
+        assert!(Sampling::VegasPlus { beta: 0.0 }.validate().is_ok());
+        assert!(Sampling::VegasPlus { beta: 1.0 }.validate().is_ok());
+        assert!(Sampling::VegasPlus { beta: -0.1 }.validate().is_err());
+        assert!(Sampling::VegasPlus { beta: 1.5 }.validate().is_err());
+        assert!(Sampling::VegasPlus { beta: f64::NAN }.validate().is_err());
+        assert_eq!(Sampling::Uniform.label(), "uniform");
+        assert_eq!(Sampling::vegas_plus().label(), "vegas+");
+    }
+}

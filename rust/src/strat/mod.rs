@@ -3,6 +3,16 @@
 //! Mirrors `python/compile/layout.py` exactly; the manifest carries the
 //! Python-computed numbers and `Layout::compute` must reproduce them
 //! (checked by `runtime::registry` on load and by unit tests here).
+//!
+//! The [`alloc`] submodule carries the VEGAS+ side of stratification:
+//! the per-cube sample [`Allocation`] with its damped-variance
+//! accumulator, and the user-facing [`Sampling`] strategy switch
+//! (uniform m-Cubes vs VEGAS+ adaptive counts). See
+//! `docs/sampling.md` for the algorithm-level comparison.
+
+pub mod alloc;
+
+pub use alloc::{AllocStats, Allocation, Sampling, DEFAULT_BETA, MIN_SAMPLES_PER_CUBE};
 
 use crate::error::{Error, Result};
 
@@ -114,7 +124,7 @@ impl Bounds {
     /// Hot-loop setup: unpack per-axis `lo` and `span` into
     /// caller-provided arrays (first `dim()` slots) and return the box
     /// volume. One definition shared by every sampler (engine,
-    /// adaptive engine, gVegas-sim) so the affine map can't diverge.
+    /// stratified engine, gVegas-sim) so the affine map can't diverge.
     pub fn unpack(&self, lo_out: &mut [f64], span_out: &mut [f64]) -> f64 {
         let d = self.dim();
         assert!(lo_out.len() >= d && span_out.len() >= d, "unpack buffers too small");

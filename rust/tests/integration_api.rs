@@ -235,6 +235,52 @@ fn warm_start_converges_faster_than_cold() {
     );
 }
 
+/// VEGAS+ through the facade: the exported grid carries the
+/// stratification snapshot, it round-trips through JSON, and feeding
+/// it back resumes the allocation (same layout) without erroring.
+#[test]
+fn vegas_plus_grid_exports_and_round_trips_strat_state() {
+    let mut donor = Integrator::from_registry("f4", 5)
+        .unwrap()
+        .maxcalls(4096) // g=4, m=1024, p=4: allocation headroom
+        .tolerance(1e-12)
+        .max_iterations(6)
+        .adjust_iterations(4)
+        .skip_iterations(0)
+        .seed(31)
+        .sampling(Sampling::vegas_plus())
+        .observe(|ev| {
+            assert!(ev.alloc.is_some(), "vegas+ events carry alloc stats");
+        });
+    let out = donor.run().unwrap();
+    assert_eq!(out.backend, "native-vegas+");
+    let grid = donor.export_grid().expect("grid after run");
+    let snap = grid.strat().expect("vegas+ grids carry a strat snapshot");
+    assert_eq!(snap.beta, 0.75);
+    assert_eq!(snap.counts.len(), 1024);
+    assert_eq!(snap.counts.iter().map(|&c| c as usize).sum::<usize>(), 4096);
+
+    let path = std::env::temp_dir().join("mcubes_api_vegas_grid.json");
+    grid.save(&path).unwrap();
+    let back = GridState::load(&path).unwrap();
+    assert_eq!(back, grid);
+    let _ = std::fs::remove_file(path);
+
+    let warm = Integrator::from_registry("f4", 5)
+        .unwrap()
+        .maxcalls(4096)
+        .tolerance(1e-3)
+        .max_iterations(10)
+        .adjust_iterations(0)
+        .skip_iterations(0)
+        .seed(32)
+        .sampling(Sampling::vegas_plus())
+        .warm_start(back)
+        .run()
+        .unwrap();
+    assert!(warm.iterations >= 1, "{warm:?}");
+}
+
 /// Observer events narrate the whole run: indices are consecutive and
 /// cumulative across escalation levels, the last event is converged
 /// when the output is, and running estimates match the output.

@@ -4,12 +4,11 @@
 //! `eval_batch` path must be *bitwise* identical to the scalar default
 //! through the identical engine pipeline.
 
-use mcubes::engine::adaptive::{vsample_adaptive, StratState};
-use mcubes::engine::{NativeEngine, ScalarEval, VSampleOpts};
+use mcubes::engine::{vsample_stratified, NativeEngine, ScalarEval, VSampleOpts};
 use mcubes::estimator::{IterationResult, WeightedEstimator};
 use mcubes::grid::{rebin, smooth_weights, Bins, GridMode};
 use mcubes::integrands::{by_name, ALL_NAMES};
-use mcubes::strat::Layout;
+use mcubes::strat::{Allocation, Layout, MIN_SAMPLES_PER_CUBE};
 use mcubes::util::prop::{property, Gen};
 
 /// Any rebin of a valid grid with positive weights stays a valid grid.
@@ -287,11 +286,28 @@ fn prop_batch_engine_bitwise_matches_scalar() {
     });
 }
 
-/// Same bitwise contract for the adaptive-stratification engine, whose
+/// Build a deliberately skewed allocation (random damped accumulator,
+/// one hot cube) so per-cube counts differ wildly, then re-apportion.
+fn skewed_allocation(g: &mut Gen, layout: &Layout, beta: f64) -> Allocation {
+    let mut alloc = Allocation::uniform(layout);
+    let hot = g.usize_range(0, layout.m - 1);
+    for cube in 0..layout.m {
+        let d = if cube == hot {
+            g.f64_range(10.0, 1000.0)
+        } else {
+            g.f64_range(0.0, 0.2)
+        };
+        alloc.absorb(cube, d);
+    }
+    alloc.reallocate(layout.calls(), beta);
+    alloc
+}
+
+/// Same bitwise contract for the VEGAS+ stratified engine, whose
 /// variable per-cube sample counts exercise the chunked block path.
 #[test]
-fn prop_batch_adaptive_bitwise_matches_scalar() {
-    property("batch_vs_scalar_adaptive", 12, |g: &mut Gen, i| {
+fn prop_batch_stratified_bitwise_matches_scalar() {
+    property("batch_vs_scalar_stratified", 12, |g: &mut Gen, i| {
         let names = ["f1", "f3", "f4", "f6"];
         let name = names[i % names.len()];
         let d = g.usize_range(2, 5);
@@ -302,36 +318,150 @@ fn prop_batch_adaptive_bitwise_matches_scalar() {
         let f = by_name(name, d).map_err(|e| e.to_string())?;
         let layout = Layout::compute(d, calls, nb, 1).map_err(|e| e.to_string())?;
         let bins = Bins::uniform(d, nb);
-        // A skewed allocation so cubes carry very different counts
-        // (some below, some far above one block).
-        let mut st_batch = StratState::uniform(&layout);
-        st_batch.sigmas[0] = 50.0;
-        for s in st_batch.sigmas.iter_mut().skip(1) {
-            *s = 0.05;
-        }
-        st_batch.reallocate(calls);
-        let mut st_scalar = st_batch.clone();
-        let (rb, hb) =
-            vsample_adaptive(&*f, &layout, &bins, &mut st_batch, seed, 1, threads);
+        let mut a_batch = skewed_allocation(g, &layout, 0.75);
+        let mut a_scalar = a_batch.clone();
+        let opts = VSampleOpts {
+            seed,
+            iteration: 1,
+            adjust: true,
+            threads,
+        };
+        let (rb, hb) = vsample_stratified(&*f, &layout, &bins, &mut a_batch, &opts);
         let scalar = ScalarEval(&*f);
-        let (rs, hs) =
-            vsample_adaptive(&scalar, &layout, &bins, &mut st_scalar, seed, 1, threads);
+        let (rs, hs) = vsample_stratified(&scalar, &layout, &bins, &mut a_scalar, &opts);
         if rb.integral.to_bits() != rs.integral.to_bits()
             || rb.variance.to_bits() != rs.variance.to_bits()
         {
             return Err(format!(
-                "{name} d={d}: adaptive estimate differs: ({}, {}) vs ({}, {})",
+                "{name} d={d}: stratified estimate differs: ({}, {}) vs ({}, {})",
                 rb.integral, rb.variance, rs.integral, rs.variance
             ));
         }
-        for (j, (a, b)) in hb.iter().zip(&hs).enumerate() {
+        for (j, (a, b)) in hb.unwrap().iter().zip(&hs.unwrap()).enumerate() {
             if a.to_bits() != b.to_bits() {
                 return Err(format!("{name} d={d}: histogram cell {j}: {a} != {b}"));
             }
         }
-        for (j, (a, b)) in st_batch.sigmas.iter().zip(&st_scalar.sigmas).enumerate() {
+        for (j, (a, b)) in a_batch.damped().iter().zip(a_scalar.damped()).enumerate() {
             if a.to_bits() != b.to_bits() {
-                return Err(format!("{name} d={d}: sigma {j}: {a} != {b}"));
+                return Err(format!("{name} d={d}: damped {j}: {a} != {b}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Allocation invariants over random layouts / damped accumulators /
+/// betas: counts sum to the call budget, never dip below the per-cube
+/// floor, offsets are exclusive prefix sums, and `beta = 0` is the
+/// exact uniform split regardless of the accumulator.
+#[test]
+fn prop_allocation_invariants() {
+    property("allocation", 150, |g: &mut Gen, _| {
+        let d = g.usize_range(1, 8);
+        let calls = g.usize_range(64, 200_000);
+        let layout = Layout::compute(d, calls, 20, 1).map_err(|e| e.to_string())?;
+        let budget = layout.calls(); // >= 2m by construction (p >= 2)
+        let beta = g.f64_range(0.0, 1.0);
+        let mut alloc = Allocation::uniform(&layout);
+        for cube in 0..layout.m {
+            alloc.absorb(cube, g.f64_range(0.0, 100.0));
+        }
+        alloc.reallocate(budget, beta);
+        if alloc.total() != budget {
+            return Err(format!(
+                "total {} != budget {budget} (m={}, beta={beta})",
+                alloc.total(),
+                layout.m
+            ));
+        }
+        if let Some(&c) = alloc.counts().iter().find(|&&c| c < MIN_SAMPLES_PER_CUBE) {
+            return Err(format!("count {c} below floor"));
+        }
+        let mut acc = 0u32;
+        for (i, (&o, &c)) in alloc.offsets().iter().zip(alloc.counts()).enumerate() {
+            if o != acc {
+                return Err(format!("offset {i}: {o} != prefix sum {acc}"));
+            }
+            acc = acc.wrapping_add(c);
+        }
+        // beta = 0: exact uniform split (p everywhere for this budget).
+        let mut zero = alloc.clone();
+        zero.reallocate(budget, 0.0);
+        if zero.counts().iter().any(|&c| c as usize != layout.p) {
+            return Err(format!(
+                "beta=0 must reproduce the uniform split p={}",
+                layout.p
+            ));
+        }
+        Ok(())
+    });
+}
+
+/// The stratified engine is bitwise thread-count invariant (fixed task
+/// partition), and with a uniform allocation it reproduces the uniform
+/// engine bitwise — the `Sampling::VegasPlus { beta: 0 }` contract.
+#[test]
+fn prop_stratified_thread_invariance_and_beta0_equivalence() {
+    property("stratified_invariance", 10, |g: &mut Gen, i| {
+        let names = ["f2", "f4", "f5"];
+        let name = names[i % names.len()];
+        let d = g.usize_range(2, 6);
+        let calls = g.usize_range(512, 8192);
+        let nb = g.usize_range(4, 30);
+        let seed = g.usize_range(0, 1 << 30) as u32;
+        let adjust = g.f64() < 0.7;
+        let f = by_name(name, d).map_err(|e| e.to_string())?;
+        let layout = Layout::compute(d, calls, nb, 1).map_err(|e| e.to_string())?;
+        let bins = Bins::uniform(d, nb);
+        let opts = |threads: usize| VSampleOpts {
+            seed,
+            iteration: 2,
+            adjust,
+            threads,
+        };
+
+        // Thread invariance on a skewed allocation.
+        let mut a1 = skewed_allocation(g, &layout, 0.75);
+        let mut a4 = a1.clone();
+        let (r1, h1) = vsample_stratified(&*f, &layout, &bins, &mut a1, &opts(1));
+        let (r4, h4) = vsample_stratified(&*f, &layout, &bins, &mut a4, &opts(4));
+        if r1.integral.to_bits() != r4.integral.to_bits()
+            || r1.variance.to_bits() != r4.variance.to_bits()
+        {
+            return Err(format!("{name} d={d}: thread counts change the estimate"));
+        }
+        match (h1, h4) {
+            (None, None) => {}
+            (Some(h1), Some(h4)) => {
+                for (a, b) in h1.iter().zip(&h4) {
+                    if a.to_bits() != b.to_bits() {
+                        return Err(format!("{name} d={d}: histogram varies with threads"));
+                    }
+                }
+            }
+            _ => return Err("histogram presence differs".into()),
+        }
+
+        // Uniform allocation == uniform engine, any thread counts.
+        let threads_u = g.usize_range(1, 4);
+        let threads_s = g.usize_range(1, 4);
+        let (ru, hu) = NativeEngine.vsample(&*f, &layout, &bins, &opts(threads_u));
+        let mut au = Allocation::uniform(&layout);
+        let (rs, hs) = vsample_stratified(&*f, &layout, &bins, &mut au, &opts(threads_s));
+        if ru.integral.to_bits() != rs.integral.to_bits()
+            || ru.variance.to_bits() != rs.variance.to_bits()
+        {
+            return Err(format!(
+                "{name} d={d}: uniform allocation != uniform engine: {} vs {}",
+                rs.integral, ru.integral
+            ));
+        }
+        if let (Some(hu), Some(hs)) = (hu, hs) {
+            for (a, b) in hu.iter().zip(&hs) {
+                if a.to_bits() != b.to_bits() {
+                    return Err(format!("{name} d={d}: uniform histograms differ"));
+                }
             }
         }
         Ok(())
