@@ -41,9 +41,7 @@ fn main() -> Result<()> {
         Integrator::new(f.clone())
             .maxcalls(calls)
             .tolerance(tau)
-            .max_iterations(20)
-            .adjust_iterations(12)
-            .skip_iterations(2)
+            .plan(RunPlan::classic(20, 12, 2))
             .seed(seed)
     };
     let mc = base().run()?;
@@ -60,7 +58,7 @@ fn main() -> Result<()> {
         );
     }
 
-    let vs = vegas_serial_integrate(&*f, calls, tau, 20, seed);
+    let vs = vegas_serial_integrate(&f, calls, tau, 20, seed);
     push(
         "serial VEGAS",
         vs.integral,

@@ -23,8 +23,7 @@ fn main() -> Result<()> {
         // (matching the pre-facade behavior of min_calls = 0).
         .maxcalls(4)
         .tolerance(1e-3)
-        .max_iterations(15)
-        .adjust_iterations(10)
+        .plan(RunPlan::classic(15, 10, 2))
         .seed(7);
     let mcubes_out = intg.run().map_err(|e| {
         Error::Runtime(format!("{e}\nhint: run `make artifacts` first"))
@@ -34,7 +33,7 @@ fn main() -> Result<()> {
     // Same per-iteration budget the artifact actually used.
     let per_iter = (mcubes_out.calls_used / mcubes_out.iterations.max(1)).max(4);
     let f = mcubes::integrands::by_name("cosmo", 6)?;
-    let serial = vegas_serial_integrate(&*f, per_iter, 1e-3, 15, 7);
+    let serial = vegas_serial_integrate(&f, per_iter, 1e-3, 15, 7);
 
     // --- Reference by product quadrature over the same tables ---
     let truth = Cosmo::with_default_tables().quadrature_true_value(200_000);

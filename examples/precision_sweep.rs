@@ -31,9 +31,7 @@ fn main() -> Result<()> {
                 let out = Integrator::new(f.clone())
                     .maxcalls(1 << 14)
                     .tolerance(tau)
-                    .max_iterations(20)
-                    .adjust_iterations(12)
-                    .skip_iterations(2)
+                    .plan(RunPlan::classic(20, 12, 2))
                     .seed(9000 + r as u32)
                     .escalate(6, 4)
                     .run()?;

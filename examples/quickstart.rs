@@ -2,11 +2,14 @@
 //!
 //!  1. a registry integrand (the paper's f4, a sharp 5-D Gaussian),
 //!  2. a closure integrand over non-uniform per-axis bounds,
-//!  3. a grid warm-start that skips the importance-grid warm-up.
+//!  3. a grid warm-start that skips the importance-grid warm-up,
+//!  4. a pull-based `Session`: step, suspend to a checkpoint, resume.
 //!
 //! The seed-era free functions (`integrate_native`, `run_driver`, ...)
-//! still exist but are `#[deprecated]` shims over the same core — new
-//! code should look like this file.
+//! and the flat `max_iterations`/`adjust_iterations`/`skip_iterations`
+//! builder knobs still exist but are `#[deprecated]` shims over
+//! `RunPlan` and the same session core — new code should look like
+//! this file.
 //!
 //! Run: cargo run --offline --release --example quickstart
 
@@ -18,8 +21,7 @@ fn main() -> Result<()> {
     let mut intg = Integrator::from_registry("f4", 5)?
         .maxcalls(1 << 17) // evaluations per iteration
         .tolerance(1e-3) // requested relative error (3 digits)
-        .max_iterations(15)
-        .adjust_iterations(10); // iterations with grid adjustment
+        .plan(RunPlan::classic(15, 10, 2)); // itmax 15, 10 adjusting, 2 discarded
     let out = intg.run()?;
 
     println!("m-Cubes quickstart — integrand f4 (5-D Gaussian)");
@@ -64,8 +66,7 @@ fn main() -> Result<()> {
         .tolerance(1e-3)
         .seed(43) // fresh samples, same adapted grid
         .warm_start(grid)
-        .adjust_iterations(0) // the grid is already adapted
-        .skip_iterations(0)
+        .plan(RunPlan::classic(15, 0, 0)) // the grid is already adapted
         .run()?;
     println!("\nwarm-started rerun:");
     println!(
@@ -73,5 +74,48 @@ fn main() -> Result<()> {
         warm.iterations, out.iterations
     );
     assert!(warm.converged);
+
+    // --- 4. Pull-based session: step, suspend, resume ----------------
+    // The same run, inside out: step() advances exactly one iteration
+    // and hands back a typed snapshot. suspend() exports a Checkpoint
+    // (grid + estimator sums + RNG cursor) that resume() restores
+    // bit-identically — pause an expensive integral, persist it, and
+    // pick it up later (or elsewhere).
+    let builder = || -> Result<Integrator> {
+        Ok(Integrator::from_registry("f4", 5)?
+            .maxcalls(1 << 15)
+            .tolerance(1e-3)
+            .plan(RunPlan::warmup_then_final(5, 1 << 12, 10))
+            .seed(7))
+    };
+    let mut session = builder()?.session()?;
+    println!("\nsession (warm-up at 2^12 calls, then frozen grid at 2^15):");
+    let mut checkpoint = None;
+    while let Some(it) = session.step()? {
+        println!(
+            "  it {:>2} [{:>13}] rel {:.2e}",
+            it.index, it.stage_label, it.rel_err
+        );
+        if it.index == 2 {
+            checkpoint = Some(session.suspend()); // e.g. save to disk here
+        }
+    }
+    let full = session.finish()?;
+
+    // Resume the mid-run checkpoint; the continuation reproduces the
+    // uninterrupted run bit for bit.
+    let resumed = builder()?
+        .resume_session(checkpoint.as_ref().expect("suspended at it 2"))?
+        .finish()?;
+    println!(
+        "  finish: I = {:.10e} ({:?}); resumed-from-checkpoint I matches bitwise: {}",
+        full.output.integral,
+        full.stop,
+        resumed.output.integral.to_bits() == full.output.integral.to_bits()
+    );
+    assert_eq!(
+        resumed.output.integral.to_bits(),
+        full.output.integral.to_bits()
+    );
     Ok(())
 }

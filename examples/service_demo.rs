@@ -5,14 +5,16 @@
 //!    `Integrator` facade (the three-layer stack composes).
 //! 3. Pushes a realistic batch of integration jobs (the paper's test
 //!    suite at 3 digits of precision, many seeds) through the
-//!    integration service — including a closure integrand and a
-//!    warm-started repeat batch — and reports latency/throughput plus
-//!    per-integrand accuracy vs the analytic values.
+//!    throughput scheduler — time-sliced round-robin sessions with a
+//!    priority lane and a streamed result feed — including a closure
+//!    integrand and a warm-started repeat batch — and reports
+//!    latency/throughput plus per-integrand accuracy vs the analytic
+//!    values.
 //!
 //! Results are recorded in EXPERIMENTS.md §E2E. Run:
 //!   cargo run --offline --release --example service_demo
 
-use mcubes::coordinator::{IntegrationService, JobRequest};
+use mcubes::coordinator::{JobRequest, Scheduler};
 use mcubes::prelude::*;
 use mcubes::runtime::{PjrtRuntime, Registry, DEFAULT_ARTIFACT_DIR};
 use mcubes::util::table::{fmt_ms, Table};
@@ -43,9 +45,7 @@ fn main() -> Result<()> {
             .maxcalls(meta.maxcalls)
             .bins_per_axis(meta.nb)
             .blocks(meta.nblocks)
-            .max_iterations(4)
-            .adjust_iterations(3)
-            .skip_iterations(0)
+            .plan(RunPlan::classic(4, 3, 0))
             .tolerance(1e-14)
             .seed(999)
             .run()
@@ -76,7 +76,10 @@ fn main() -> Result<()> {
         .map(|n| n.get())
         .unwrap_or(2)
         .clamp(1, 8);
-    let mut svc = IntegrationService::new(workers);
+    let mut svc = Scheduler::new(workers);
+    // Fairness quantum: no job may hog a worker for more than ~4
+    // default iterations before yielding to its priority peers.
+    svc.calls_budget(1 << 18);
     let mut id = 0u64;
     for (name, d, calls) in suite {
         for s in 0..seeds_per_case {
@@ -84,47 +87,51 @@ fn main() -> Result<()> {
                 id,
                 *name,
                 *d,
-                JobConfig {
-                    maxcalls: *calls,
-                    tau_rel: 1e-3,
-                    itmax: 20,
-                    ita: 12,
-                    skip: 2,
-                    seed: 7000 + id as u32 + s as u32,
-                    ..Default::default()
-                },
+                JobConfig::default()
+                    .with_maxcalls(*calls)
+                    .with_tolerance(1e-3)
+                    .with_plan(RunPlan::classic(20, 12, 2))
+                    .with_seed(7000 + id as u32 + s as u32),
             ));
             id += 1;
         }
     }
-    // A closure job rides along — no registry entry needed.
+    // A closure job rides along — no registry entry needed — on the
+    // high-priority lane (it jumps the queued registry jobs).
     let closure_id = id;
-    svc.submit(JobRequest::custom(
-        closure_id,
-        FnIntegrand::unit(4, |x: &[f64]| {
-            (-(x.iter().map(|v| (v - 0.5) * (v - 0.5)).sum::<f64>()) * 20.0).exp()
-        })
-        .named("gauss4")
-        .into_ref(),
-        JobConfig {
-            maxcalls: 1 << 14,
-            tau_rel: 1e-3,
-            itmax: 20,
-            ita: 12,
-            skip: 2,
-            seed: 4242,
-            ..Default::default()
-        },
-    ));
+    svc.submit(
+        JobRequest::custom(
+            closure_id,
+            FnIntegrand::unit(4, |x: &[f64]| {
+                (-(x.iter().map(|v| (v - 0.5) * (v - 0.5)).sum::<f64>()) * 20.0).exp()
+            })
+            .named("gauss4")
+            .into_ref(),
+            JobConfig::default()
+                .with_maxcalls(1 << 14)
+                .with_tolerance(1e-3)
+                .with_plan(RunPlan::classic(20, 12, 2))
+                .with_seed(4242),
+        )
+        .with_priority(10),
+    );
     id += 1;
     println!(
-        "[3/3] service: {} jobs ({} integrand cases x {} seeds + 1 closure) on {} workers",
+        "[3/3] scheduler: {} jobs ({} integrand cases x {} seeds + 1 priority closure) \
+         on {} workers, quantum 2^18 calls",
         id,
         suite.len(),
         seeds_per_case,
         workers
     );
-    let (results, metrics) = svc.drain()?;
+    // Stream results as they complete (completion order, not id order).
+    let mut completed = 0usize;
+    let (results, metrics) = svc.drain_with(|r| {
+        completed += 1;
+        if completed % 8 == 0 {
+            println!("      ... {completed} jobs done (latest: {} #{})", r.integrand, r.id);
+        }
+    })?;
 
     let mut t = Table::new(&[
         "integrand",
@@ -170,8 +177,9 @@ fn main() -> Result<()> {
         }
     );
     println!(
-        "throughput: {:.2} jobs/s | wall {} | p50 {} | p95 {} | failures {}",
+        "throughput: {:.2} jobs/s | {:.2e} calls/s | wall {} | p50 {} | p95 {} | failures {}",
         metrics.throughput,
+        metrics.calls_per_sec,
         fmt_ms(metrics.wall_time * 1e3),
         fmt_ms(metrics.latency_p50 * 1e3),
         fmt_ms(metrics.latency_p95 * 1e3),
@@ -185,22 +193,19 @@ fn main() -> Result<()> {
         .find(|r| r.integrand == "f4" && r.outcome.is_ok())
         .and_then(|r| r.grid.clone())
         .expect("f4 grid");
-    let mut svc = IntegrationService::new(workers);
+    let mut svc = Scheduler::new(workers);
     for i in 0..4u64 {
         svc.submit(
             JobRequest::registry(
                 i,
                 "f4",
                 5,
-                JobConfig {
-                    maxcalls: 1 << 16,
-                    tau_rel: 1e-3,
-                    itmax: 20,
-                    ita: 0, // grid already adapted
-                    skip: 0,
-                    seed: 9900 + i as u32,
-                    ..Default::default()
-                },
+                JobConfig::default()
+                    .with_maxcalls(1 << 16)
+                    .with_tolerance(1e-3)
+                    // grid already adapted: no adjust, no discard
+                    .with_plan(RunPlan::classic(20, 0, 0))
+                    .with_seed(9900 + i as u32),
             )
             .with_warm_start(donor_grid.clone()),
         );
@@ -221,6 +226,8 @@ fn main() -> Result<()> {
     );
     assert_eq!(warm_metrics.failures, 0);
 
-    println!("\nservice_demo OK — full stack (artifacts -> PJRT -> coordinator -> service) validated");
+    println!(
+        "\nservice_demo OK — full stack (artifacts -> PJRT -> coordinator -> scheduler) validated"
+    );
     Ok(())
 }

@@ -17,9 +17,7 @@ fn run(label: &str, sampling: Sampling) -> Result<IntegrationOutput> {
     let out = Integrator::from_registry("f4", 8)?
         .maxcalls(1 << 16) // g=3, m=6561, p=9: real re-allocation headroom
         .tolerance(5e-3)
-        .max_iterations(30)
-        .adjust_iterations(24)
-        .skip_iterations(2)
+        .plan(RunPlan::classic(30, 24, 2))
         .seed(2024)
         .sampling(sampling)
         .observe(|ev| match ev.alloc {

@@ -7,7 +7,7 @@
 //! where convergence is feasible, 100 runs per cell).
 //! CSV series land in results/fig1_accuracy.csv.
 
-use mcubes::api::Integrator;
+use mcubes::api::{Integrator, RunPlan};
 use mcubes::estimator::precision_ladder;
 use mcubes::integrands::by_name;
 use mcubes::report::{AccuracyCell, BoxStats};
@@ -50,9 +50,7 @@ fn main() {
                 let run = Integrator::new(f.clone())
                     .maxcalls(1 << 14)
                     .tolerance(tau)
-                    .max_iterations(20)
-                    .adjust_iterations(12)
-                    .skip_iterations(2)
+                    .plan(RunPlan::classic(20, 12, 2))
                     .seed((1000 + 77 * r) as u32)
                     .escalate(if full { 6 } else { 4 }, 4)
                     .run();

@@ -13,7 +13,7 @@
 //! to tau or exhausts its escalation budget; non-converged cells are
 //! reported as missing ("—"). CSV: results/fig2_gvegas.csv
 
-use mcubes::api::Integrator;
+use mcubes::api::{Integrator, RunPlan};
 use mcubes::baselines::{gvegas_integrate, GvegasConfig};
 use mcubes::integrands::by_name;
 use mcubes::util::table::{fmt_ms, Table};
@@ -45,9 +45,7 @@ fn main() {
             let mc = Integrator::new(f.clone())
                 .maxcalls(base_calls)
                 .tolerance(tau)
-                .max_iterations(15)
-                .adjust_iterations(10)
-                .skip_iterations(2)
+                .plan(RunPlan::classic(15, 10, 2))
                 .seed(3)
                 .escalate(5, 4)
                 .run()

@@ -6,7 +6,7 @@
 //! traffic) drops by a factor of d.
 //! CSV: results/fig3_onedim.csv
 
-use mcubes::api::Integrator;
+use mcubes::api::{Integrator, RunPlan};
 use mcubes::grid::GridMode;
 use mcubes::integrands::by_name;
 use mcubes::util::benchkit::{bench, BenchOpts};
@@ -35,9 +35,7 @@ fn main() {
                 Integrator::new(f.clone())
                     .maxcalls(calls)
                     .tolerance(tau)
-                    .max_iterations(20)
-                    .adjust_iterations(12)
-                    .skip_iterations(2)
+                    .plan(RunPlan::classic(20, 12, 2))
                     .seed(13)
                     .grid_mode(mode)
             };

@@ -9,8 +9,8 @@
 //! the batch-vs-scalar and sampling-strategy series for the perf
 //! trajectory.
 
-use mcubes::api::{Integrator, Sampling};
-use mcubes::coordinator::IntegrationOutput;
+use mcubes::api::{Integrator, RunPlan, Sampling};
+use mcubes::coordinator::{IntegrationOutput, JobConfig, JobRequest, Scheduler};
 use mcubes::engine::{NativeEngine, ScalarEval, VSampleOpts};
 use mcubes::grid::Bins;
 use mcubes::integrands::by_name;
@@ -265,9 +265,7 @@ fn main() {
                     .expect("registry integrand")
                     .maxcalls(calls)
                     .tolerance(tau)
-                    .max_iterations(60)
-                    .adjust_iterations(48)
-                    .skip_iterations(2)
+                    .plan(RunPlan::classic(60, 48, 2))
                     .seed(2024)
                     .sampling(sampling)
                     .run()
@@ -308,6 +306,66 @@ fn main() {
                 vp.calls_used.to_string(),
             ]);
             csv.row(vec![tag, "calls_ratio".into(), format!("{ratio:.4}")]);
+        }
+        println!("{}", table.render());
+    }
+
+    // ---- Scheduler throughput (mixed multi-job workload) --------------
+    // 16 independent jobs over the f1–f6 Genz suite, fixed work per job
+    // (unreachable tau), time-sliced round-robin at a 2^18-call quantum.
+    // Jobs/sec and total calls/sec per worker count are the serving
+    // numbers the ROADMAP trajectory tracks.
+    {
+        println!("\nscheduler throughput: 16 mixed f1–f6 jobs, 2^18-call quantum:");
+        let suite: &[(&str, usize)] = &[
+            ("f1", 5),
+            ("f2", 6),
+            ("f3", 3),
+            ("f4", 5),
+            ("f5", 8),
+            ("f6", 6),
+        ];
+        let mut table = Table::new(&["workers", "wall ms", "jobs/s", "Mcalls/s", "p95 ms"]);
+        for workers in [1usize, 4, 8] {
+            let mut sched = Scheduler::new(workers);
+            sched.calls_budget(1 << 18);
+            for i in 0..16u64 {
+                let (name, d) = suite[i as usize % suite.len()];
+                sched.submit(JobRequest::registry(
+                    i,
+                    name,
+                    d,
+                    JobConfig::default()
+                        .with_maxcalls(1 << 15)
+                        .with_plan(RunPlan::classic(8, 6, 1))
+                        .with_tolerance(1e-12) // fixed work: run the whole plan
+                        .with_seed(3000 + i as u32),
+                ));
+            }
+            let (results, m) = sched.drain().expect("scheduler drain");
+            assert_eq!(m.failures, 0, "bench workload must not fail");
+            assert_eq!(results.len(), 16);
+            table.row(vec![
+                workers.to_string(),
+                format!("{:.1}", m.wall_time * 1e3),
+                format!("{:.2}", m.throughput),
+                format!("{:.2}", m.calls_per_sec / 1e6),
+                format!("{:.1}", m.latency_p95 * 1e3),
+            ]);
+            let tag = format!("scheduler_16jobs_w{workers}");
+            emit_bench(&tag, "jobs_per_sec", m.throughput, "jobs/s");
+            emit_bench(&tag, "calls_per_sec", m.calls_per_sec, "calls/s");
+            emit_bench(&tag, "wall_ms", m.wall_time * 1e3, "ms");
+            csv.row(vec![
+                tag.clone(),
+                "jobs_per_sec".into(),
+                format!("{:.4}", m.throughput),
+            ]);
+            csv.row(vec![
+                tag,
+                "calls_per_sec".into(),
+                format!("{:.1}", m.calls_per_sec),
+            ]);
         }
         println!("{}", table.render());
     }

@@ -4,7 +4,7 @@
 //! and 10x faster at markedly smaller error estimates.
 //! CSV: results/table1_zmc.csv
 
-use mcubes::api::Integrator;
+use mcubes::api::{Integrator, RunPlan};
 use mcubes::baselines::{zmc_integrate, ZmcConfig};
 use mcubes::integrands::by_name;
 use mcubes::util::table::Table;
@@ -58,9 +58,7 @@ fn main() {
         let m = Integrator::new(f.clone())
             .maxcalls(calls)
             .tolerance(1e-3)
-            .max_iterations(itmax)
-            .adjust_iterations(itmax)
-            .skip_iterations(2)
+            .plan(RunPlan::classic(itmax, itmax, 2))
             .seed(11)
             .run()
             .expect("mcubes");

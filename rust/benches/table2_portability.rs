@@ -7,7 +7,7 @@
 //! we report kernel vs total time for each on the same workloads.
 //! CSV: results/table2_portability.csv
 
-use mcubes::api::Integrator;
+use mcubes::api::{Integrator, RunPlan};
 use mcubes::coordinator::{drive, JobConfig, PjrtBackend};
 use mcubes::runtime::{PjrtRuntime, Registry};
 use mcubes::util::table::Table;
@@ -34,17 +34,13 @@ fn main() {
     for name in ["fA", "fB"] {
         let backend = PjrtBackend::load(&runtime, &reg, name, 0).expect("artifact");
         let meta = backend.meta().clone();
-        let cfg = JobConfig {
-            maxcalls: meta.maxcalls,
-            nb: meta.nb,
-            nblocks: meta.nblocks,
-            itmax: 10,
-            ita: 7,
-            skip: 1,
-            tau_rel: 1e-13, // fixed work: run all iterations
-            seed: 77,
-            ..Default::default()
-        };
+        let cfg = JobConfig::default()
+            .with_maxcalls(meta.maxcalls)
+            .with_bins(meta.nb)
+            .with_blocks(meta.nblocks)
+            .with_plan(RunPlan::classic(10, 7, 1))
+            .with_tolerance(1e-13) // fixed work: run all iterations
+            .with_seed(77);
         let mut native = Integrator::from_registry(&meta.integrand, meta.dim)
             .expect("integrand")
             .config(cfg.clone());

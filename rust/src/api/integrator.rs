@@ -14,10 +14,32 @@
 //!     .unwrap();
 //! println!("I = {} ± {}", out.integral, out.sigma);
 //! ```
+//!
+//! Blocking `run()` is one of two execution styles. The pull-based
+//! alternative — [`Integrator::session`] — returns a resumable
+//! [`Session`] that advances one iteration per `step()` and can be
+//! suspended to a [`Checkpoint`] and resumed bit-identically:
+//!
+//! ```no_run
+//! use mcubes::prelude::*;
+//!
+//! let mut session = Integrator::from_registry("f4", 5)?
+//!     .maxcalls(1 << 14)
+//!     .plan(RunPlan::classic(15, 10, 2))
+//!     .session()?;
+//! while let Some(it) = session.step()? {
+//!     eprintln!("it {}: rel {:.2e} [{}]", it.index, it.rel_err, it.stage_label);
+//! }
+//! let outcome = session.finish()?;
+//! println!("I = {}", outcome.output.integral);
+//! # Ok::<(), mcubes::Error>(())
+//! ```
 
 use super::grid_state::GridState;
 use super::integrand::IntegrandSpec;
-use super::observer::IterationEvent;
+use super::observer::{IterationEvent, ObserverControl};
+use super::plan::RunPlan;
+use super::session::{Checkpoint, Session};
 use crate::coordinator::{
     drive, escalate_native, integrate_native_core, DriveOutcome, IntegrationOutput, JobConfig,
     PjrtBackend,
@@ -64,21 +86,28 @@ struct PjrtState {
     runtime: PjrtRuntime,
 }
 
+type ObserverBox = Box<dyn FnMut(&IterationEvent) -> ObserverControl + Send>;
+
 /// Builder-style facade over the whole integration stack.
 ///
 /// Construct from a registry name, an `IntegrandRef`, or a closure;
-/// chain configuration; `run()`. The adapted importance grid of the
-/// last run is exportable via [`Integrator::export_grid`] and feeds
-/// back in through [`Integrator::warm_start`].
+/// chain configuration; `run()` (or pull iterations through
+/// [`Integrator::session`]). The adapted importance grid of the last
+/// run is exportable via [`Integrator::export_grid`] and feeds back in
+/// through [`Integrator::warm_start`].
 pub struct Integrator {
     spec: IntegrandSpec,
     cfg: JobConfig,
     backend: BackendSpec,
     escalation: Option<Escalation>,
     warm: Option<GridState>,
-    observers: Vec<Box<dyn FnMut(&IterationEvent) + Send>>,
+    observers: Vec<ObserverBox>,
     last_grid: Option<GridState>,
     pjrt: Option<PjrtState>,
+    /// Shadow triple backing the deprecated flat-knob shims
+    /// (`max_iterations`/`adjust_iterations`/`skip_iterations`), which
+    /// rebuild a classic plan on every call.
+    classic: (usize, usize, usize),
 }
 
 impl Integrator {
@@ -133,7 +162,7 @@ impl Integrator {
         Ok(Integrator::from_spec(IntegrandSpec::registry(name, dim)))
     }
 
-    /// Integrate an explicit spec (what the service queues).
+    /// Integrate an explicit spec (what the scheduler queues).
     pub fn from_spec(spec: IntegrandSpec) -> Integrator {
         Integrator {
             spec,
@@ -144,6 +173,7 @@ impl Integrator {
             observers: Vec::new(),
             last_grid: None,
             pjrt: None,
+            classic: (15, 10, 2),
         }
     }
 
@@ -159,21 +189,56 @@ impl Integrator {
         self
     }
 
+    /// The iteration schedule (see [`RunPlan`]). [`RunPlan::classic`]
+    /// reproduces the old `itmax`/`ita`/`skip` triple bitwise;
+    /// [`RunPlan::warmup_then_final`] states the paper's two-phase
+    /// workflow directly.
+    pub fn plan(mut self, plan: RunPlan) -> Self {
+        self.cfg.plan = plan;
+        self
+    }
+
+    /// Cap the total integrand evaluations across the whole run: the
+    /// run ends with `StopReason::TargetCallsReached` once the budget
+    /// is spent (spans escalation levels).
+    pub fn call_budget(mut self, max_total_calls: usize) -> Self {
+        self.cfg.max_total_calls = Some(max_total_calls);
+        self
+    }
+
     /// Total iteration cap.
+    #[deprecated(
+        since = "0.3.0",
+        note = "use `.plan(RunPlan::classic(itmax, ita, skip))` — the flat \
+                knobs are shims that rebuild a classic plan"
+    )]
     pub fn max_iterations(mut self, itmax: usize) -> Self {
-        self.cfg.itmax = itmax;
+        self.classic.0 = itmax;
+        self.cfg.plan = RunPlan::classic(self.classic.0, self.classic.1, self.classic.2);
         self
     }
 
     /// Iterations with importance-grid adjustment.
+    #[deprecated(
+        since = "0.3.0",
+        note = "use `.plan(RunPlan::classic(itmax, ita, skip))` — the flat \
+                knobs are shims that rebuild a classic plan"
+    )]
     pub fn adjust_iterations(mut self, ita: usize) -> Self {
-        self.cfg.ita = ita;
+        self.classic.1 = ita;
+        self.cfg.plan = RunPlan::classic(self.classic.0, self.classic.1, self.classic.2);
         self
     }
 
     /// Warm-up iterations excluded from the weighted estimate.
+    #[deprecated(
+        since = "0.3.0",
+        note = "use `.plan(RunPlan::classic(itmax, ita, skip))` — the flat \
+                knobs are shims that rebuild a classic plan"
+    )]
     pub fn skip_iterations(mut self, skip: usize) -> Self {
-        self.cfg.skip = skip;
+        self.classic.2 = skip;
+        self.cfg.plan = RunPlan::classic(self.classic.0, self.classic.1, self.classic.2);
         self
     }
 
@@ -266,9 +331,24 @@ impl Integrator {
 
     /// Register a per-iteration observer. Multiple observers fire in
     /// registration order.
-    pub fn observe<F>(mut self, f: F) -> Self
+    pub fn observe<F>(mut self, mut f: F) -> Self
     where
         F: FnMut(&IterationEvent) + Send + 'static,
+    {
+        self.observers.push(Box::new(move |ev: &IterationEvent| {
+            f(ev);
+            ObserverControl::Continue
+        }));
+        self
+    }
+
+    /// Register an observer that can end the run: returning
+    /// [`ObserverControl::Abort`] stops after the current iteration
+    /// with `StopReason::ObserverAbort`. If any observer aborts, the
+    /// run aborts.
+    pub fn observe_ctrl<F>(mut self, f: F) -> Self
+    where
+        F: FnMut(&IterationEvent) -> ObserverControl + Send + 'static,
     {
         self.observers.push(Box::new(f));
         self
@@ -284,12 +364,55 @@ impl Integrator {
         &self.spec
     }
 
+    /// Open a resumable [`Session`] over the current configuration
+    /// (native backend only; a configured `warm_start` grid seeds it).
+    /// Observers registered on the builder do not transfer — the
+    /// session caller *is* the observer.
+    pub fn session(&self) -> Result<Session> {
+        if !matches!(self.backend, BackendSpec::Native) {
+            return Err(Error::Config(
+                "sessions require the native backend (PJRT artifacts drive \
+                 through the blocking `run()` path)"
+                    .into(),
+            ));
+        }
+        if self.escalation.is_some() {
+            return Err(Error::Config(
+                "escalation and sessions don't compose: express the budget \
+                 ladder as RunPlan stages with per-stage `with_calls` \
+                 overrides instead"
+                    .into(),
+            ));
+        }
+        let f = self.spec.resolve()?;
+        match &self.warm {
+            Some(grid) => Session::resume(f, self.cfg.clone(), &Checkpoint::from_grid(grid.clone())),
+            None => Session::new(f, self.cfg.clone()),
+        }
+    }
+
+    /// Restore a suspended [`Session`] from a [`Checkpoint`] under the
+    /// current configuration. Bitwise continuation requires the same
+    /// integrand, config, and plan the suspended session ran with.
+    pub fn resume_session(&self, checkpoint: &Checkpoint) -> Result<Session> {
+        if !matches!(self.backend, BackendSpec::Native) {
+            return Err(Error::Config(
+                "sessions require the native backend (PJRT artifacts drive \
+                 through the blocking `run()` path)"
+                    .into(),
+            ));
+        }
+        let f = self.spec.resolve()?;
+        Session::resume(f, self.cfg.clone(), checkpoint)
+    }
+
     /// Run and return the integration output.
     pub fn run(&mut self) -> Result<IntegrationOutput> {
         self.run_outcome().map(|o| o.output)
     }
 
-    /// Run and return both the output and the adapted grid.
+    /// Run and return the output, the adapted grid, and the typed
+    /// [`crate::api::StopReason`].
     pub fn run_outcome(&mut self) -> Result<DriveOutcome> {
         self.cfg.validate()?;
         // Disjoint field borrows: the fan-out closure mutably borrows
@@ -304,18 +427,24 @@ impl Integrator {
             observers,
             last_grid,
             pjrt,
+            classic: _,
         } = self;
         let mut fan;
-        let obs: Option<&mut dyn FnMut(&IterationEvent)> = if observers.is_empty() {
-            None
-        } else {
-            fan = |ev: &IterationEvent| {
-                for o in observers.iter_mut() {
-                    o(ev);
-                }
+        let obs: Option<&mut dyn FnMut(&IterationEvent) -> ObserverControl> =
+            if observers.is_empty() {
+                None
+            } else {
+                fan = |ev: &IterationEvent| {
+                    let mut control = ObserverControl::Continue;
+                    for o in observers.iter_mut() {
+                        if o(ev) == ObserverControl::Abort {
+                            control = ObserverControl::Abort;
+                        }
+                    }
+                    control
+                };
+                Some(&mut fan)
             };
-            Some(&mut fan)
-        };
         let outcome = Self::dispatch(spec, cfg, backend, *escalation, warm.as_ref(), pjrt, obs)?;
         *last_grid = Some(outcome.grid.clone());
         Ok(outcome)
@@ -340,16 +469,16 @@ impl Integrator {
         escalation: Option<Escalation>,
         warm: Option<&GridState>,
         pjrt: &mut Option<PjrtState>,
-        observer: Option<&mut dyn FnMut(&IterationEvent)>,
+        observer: Option<&mut dyn FnMut(&IterationEvent) -> ObserverControl>,
     ) -> Result<DriveOutcome> {
         match backend_spec {
             BackendSpec::Native => {
                 let f = spec.resolve()?;
                 match escalation {
                     Some(esc) => {
-                        escalate_native(&*f, cfg, esc.max_levels, esc.factor, warm, observer)
+                        escalate_native(&f, cfg, esc.max_levels, esc.factor, warm, observer)
                     }
-                    None => integrate_native_core(&*f, cfg, warm, observer),
+                    None => integrate_native_core(&f, cfg, warm, observer),
                 }
             }
             BackendSpec::Pjrt { artifacts_dir } => {
@@ -395,7 +524,7 @@ impl Integrator {
                 let backend =
                     PjrtBackend::load(&state.runtime, &state.registry, name, cfg.maxcalls)?;
                 // Adopt the artifact's compiled layout; the rest of the
-                // config (tolerance, iterations, seed) applies as-is.
+                // config (tolerance, plan, seed) applies as-is.
                 let meta = backend.meta();
                 let mut run_cfg = cfg.clone();
                 run_cfg.maxcalls = meta.maxcalls;
@@ -410,7 +539,7 @@ impl Integrator {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::api::FnIntegrand;
+    use crate::api::{FnIntegrand, StopReason};
 
     #[test]
     fn builder_round_trips_config() {
@@ -418,9 +547,8 @@ mod tests {
             .unwrap()
             .maxcalls(4096)
             .tolerance(5e-3)
-            .max_iterations(9)
-            .adjust_iterations(6)
-            .skip_iterations(1)
+            .plan(RunPlan::classic(9, 6, 1))
+            .call_budget(1 << 20)
             .bins_per_axis(32)
             .blocks(4)
             .seed(7)
@@ -430,9 +558,9 @@ mod tests {
         let c = intg.job_config();
         assert_eq!(c.maxcalls, 4096);
         assert_eq!(c.tau_rel, 5e-3);
-        assert_eq!(c.itmax, 9);
-        assert_eq!(c.ita, 6);
-        assert_eq!(c.skip, 1);
+        assert_eq!(c.plan, RunPlan::classic(9, 6, 1));
+        assert_eq!(c.plan.total_iters(), 9);
+        assert_eq!(c.max_total_calls, Some(1 << 20));
         assert_eq!(c.nb, 32);
         assert_eq!(c.nblocks, 4);
         assert_eq!(c.seed, 7);
@@ -440,6 +568,26 @@ mod tests {
         assert_eq!(c.grid_mode, GridMode::Shared1D);
         assert_eq!(c.sampling, Sampling::VegasPlus { beta: 0.75 });
         assert_eq!(intg.spec().label(), "f4");
+    }
+
+    /// The sanctioned use of the deprecated flat knobs: pin the shims
+    /// to the classic plan they claim to build.
+    #[test]
+    #[allow(deprecated)]
+    fn deprecated_flat_knobs_build_a_classic_plan() {
+        let intg = Integrator::from_registry("f4", 5)
+            .unwrap()
+            .max_iterations(9)
+            .adjust_iterations(6)
+            .skip_iterations(1);
+        assert_eq!(intg.job_config().plan, RunPlan::classic(9, 6, 1));
+        // Order-independent: each shim call rebuilds from the triple.
+        let intg = Integrator::from_registry("f4", 5)
+            .unwrap()
+            .skip_iterations(1)
+            .max_iterations(9)
+            .adjust_iterations(6);
+        assert_eq!(intg.job_config().plan, RunPlan::classic(9, 6, 1));
     }
 
     #[test]
@@ -484,6 +632,24 @@ mod tests {
     }
 
     #[test]
+    fn session_on_pjrt_backend_is_rejected() {
+        let err = Integrator::from_registry("f4", 5)
+            .unwrap()
+            .backend(BackendSpec::pjrt_default())
+            .session()
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("native backend"), "{err}");
+        let err = Integrator::from_registry("f4", 5)
+            .unwrap()
+            .escalate(2, 4)
+            .session()
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("escalation"), "{err}");
+    }
+
+    #[test]
     fn vegas_plus_runs_through_the_facade() {
         use std::sync::{Arc, Mutex};
         let sink: Arc<Mutex<Vec<(u32, u32, usize)>>> = Arc::new(Mutex::new(Vec::new()));
@@ -492,9 +658,7 @@ mod tests {
             .unwrap()
             .maxcalls(4096)
             .tolerance(1e-12) // fixed work: run all iterations
-            .max_iterations(5)
-            .adjust_iterations(3)
-            .skip_iterations(0)
+            .plan(RunPlan::classic(5, 3, 0))
             .seed(3)
             .sampling(Sampling::vegas_plus())
             .observe(move |ev| {
@@ -535,6 +699,13 @@ mod tests {
             .unwrap_err()
             .to_string();
         assert!(err.contains("maxcalls"), "{err}");
+        let err = Integrator::from_registry("f4", 5)
+            .unwrap()
+            .plan(RunPlan::new(vec![]))
+            .run()
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("no stages"), "{err}");
     }
 
     #[test]
@@ -562,5 +733,47 @@ mod tests {
             count.load(Ordering::Relaxed),
             out.iterations + out2.iterations
         );
+    }
+
+    #[test]
+    fn aborting_observer_ends_the_run() {
+        let mut intg = Integrator::from_registry("f5", 4)
+            .unwrap()
+            .maxcalls(1 << 12)
+            .tolerance(1e-12)
+            .plan(RunPlan::classic(10, 6, 0))
+            .observe_ctrl(|ev| {
+                if ev.iteration >= 1 {
+                    ObserverControl::Abort
+                } else {
+                    ObserverControl::Continue
+                }
+            });
+        let outcome = intg.run_outcome().unwrap();
+        assert_eq!(outcome.stop, StopReason::ObserverAbort);
+        assert_eq!(outcome.output.iterations, 2);
+    }
+
+    #[test]
+    fn session_matches_blocking_run_bitwise() {
+        let builder = || {
+            Integrator::from_registry("f3", 3)
+                .unwrap()
+                .maxcalls(1 << 12)
+                .tolerance(1e-3)
+                .plan(RunPlan::classic(10, 6, 1))
+                .seed(13)
+        };
+        let blocking = builder().run().unwrap();
+        let mut session = builder().session().unwrap();
+        let mut steps = 0;
+        while session.step().unwrap().is_some() {
+            steps += 1;
+        }
+        let pulled = session.finish().unwrap().output;
+        assert_eq!(steps, blocking.iterations);
+        assert_eq!(blocking.integral.to_bits(), pulled.integral.to_bits());
+        assert_eq!(blocking.sigma.to_bits(), pulled.sigma.to_bits());
+        assert_eq!(blocking.chi2_dof.to_bits(), pulled.chi2_dof.to_bits());
     }
 }

@@ -28,6 +28,15 @@
 //!   stratification ([`Sampling::VegasPlus`]); VEGAS+ runs export
 //!   their allocation in [`GridState`] (as a [`StratSnapshot`]) and
 //!   report per-iteration [`AllocStats`] through observers.
+//! * **Resumable sessions** — [`Session`] turns a run inside out:
+//!   [`Session::step`] pulls one iteration at a time ([`Iteration`]
+//!   snapshots), [`Session::suspend`] exports a bitwise-resumable
+//!   [`Checkpoint`], and every run ends with a typed [`StopReason`].
+//! * **Composable plans** — [`RunPlan`] stages ([`Stage`]) replace the
+//!   flat `itmax`/`ita`/`skip` knobs; [`RunPlan::classic`] reproduces
+//!   them bitwise, [`RunPlan::warmup_then_final`] states the paper's
+//!   two-phase workflow directly, and stages may override the call
+//!   budget or sampling strategy mid-run (native engine).
 //!
 //! ## Migration table
 //!
@@ -58,11 +67,15 @@ mod grid_state;
 mod integrand;
 mod integrator;
 mod observer;
+mod plan;
+mod session;
 
 pub use grid_state::{GridState, StratSnapshot};
 pub use integrand::{FnBatchIntegrand, FnIntegrand, IntegrandSpec};
 pub use integrator::{BackendSpec, Integrator};
-pub use observer::IterationEvent;
+pub use observer::{IterationEvent, ObserverControl};
+pub use plan::{RunPlan, Stage};
+pub use session::{Checkpoint, Iteration, Session, StopReason};
 
 // Re-export the bounds type here too: it is the facade's vocabulary for
 // "where to integrate", even though it lives with the layout math.

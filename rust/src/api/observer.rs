@@ -2,28 +2,59 @@
 //! ad-hoc `DriverOutput` trace.
 //!
 //! The driver invokes the observer once per iteration, after grid
-//! adjustment and the convergence decision, so the event shows both the
-//! raw iteration estimate and the running weighted combination. Cheap
-//! by construction: the event borrows the live grid instead of cloning
-//! it; observers that want history copy what they need.
+//! adjustment and the stop decision, so the event shows both the raw
+//! iteration estimate and the running weighted combination. Cheap by
+//! construction: the event borrows the live grid instead of cloning it;
+//! observers that want history copy what they need.
+//!
+//! Observers return an [`ObserverControl`]: `Continue` keeps the run
+//! going, `Abort` ends it after the current iteration with
+//! [`StopReason::ObserverAbort`]. Unit-returning closures registered
+//! through `Integrator::observe` are wrapped to always continue;
+//! `Integrator::observe_ctrl` exposes the abort channel.
 
+use super::session::StopReason;
 use crate::estimator::IterationResult;
 use crate::grid::Bins;
 use crate::strat::AllocStats;
 
+/// What an observer wants the run to do next.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ObserverControl {
+    /// Keep iterating.
+    #[default]
+    Continue,
+    /// Stop after this iteration ([`StopReason::ObserverAbort`]).
+    Abort,
+}
+
 /// Snapshot of one driver iteration, delivered to observers.
+///
+/// `#[non_exhaustive]`: construct only inside the crate; future
+/// telemetry fields will not be breaking changes. For an owned
+/// equivalent (no grid borrow) see `api::Iteration`, returned by
+/// `Session::step`.
 #[derive(Debug, Clone, Copy)]
+#[non_exhaustive]
 pub struct IterationEvent<'a> {
     /// 0-based iteration index. When escalation is active the index is
     /// cumulative across levels.
     pub iteration: usize,
+    /// Index of the run-plan stage this iteration belongs to.
+    pub stage: usize,
+    /// Human-readable label of that stage ("adapt", "sample",
+    /// "+discard" suffix for discarded stages).
+    pub stage_label: &'a str,
     /// Whether this iteration accumulated the v^2 histogram and
     /// adjusted the grid (the two-phase split of Algorithm 2).
     pub adjusting: bool,
+    /// Whether this iteration was excluded from the weighted estimate
+    /// (a discarded warm-up stage).
+    pub discarded: bool,
     /// Raw estimate of this iteration alone.
     pub estimate: IterationResult,
     /// Running weighted integral. While the estimator is empty — the
-    /// `skip` warm-up iterations, or right after a chi^2 reset — the
+    /// discarded warm-up iterations, or right after a chi^2 reset — the
     /// running fields carry their empty-estimator sentinels:
     /// `integral` 0.0, `sigma`/`rel_err` infinity, `chi2_dof` 0.0.
     pub integral: f64,
@@ -34,10 +65,19 @@ pub struct IterationEvent<'a> {
     /// Running relative error |sigma / integral| (infinite until the
     /// first fold).
     pub rel_err: f64,
+    /// Total integrand evaluations consumed so far, this iteration
+    /// included.
+    pub calls_used: usize,
     /// The chi^2 guard fired and the estimator was reset this iteration.
     pub estimator_reset: bool,
     /// Convergence was declared on this iteration (it is the last one).
     pub converged: bool,
+    /// Why the run stops, when this is the final iteration; `None`
+    /// while the run continues. Exception: an
+    /// [`StopReason::ObserverAbort`] ending is decided *while* the
+    /// final event is being handled, so that event still carries
+    /// `None` — the abort reason appears on the `DriveOutcome`.
+    pub stop: Option<StopReason>,
     /// Per-cube sample-allocation summary (min/max/mean samples per
     /// cube) of this iteration — `Some` only under
     /// `Sampling::VegasPlus` (see `crate::strat::Sampling`), where the

@@ -1,0 +1,377 @@
+//! Composable run plans — the typed replacement for the flat
+//! `itmax`/`ita`/`skip` iteration knobs.
+//!
+//! Algorithm 2 is a two-phase loop: `ita` grid-adjustment iterations
+//! followed by frozen-grid iterations, with the first `skip` iterations
+//! excluded from the weighted estimate. [`RunPlan`] generalizes that to
+//! an ordered list of [`Stage`]s, each with its own iteration count,
+//! optional per-stage call budget, adjust/frozen switch, optional
+//! sampling-strategy override, and a discard flag:
+//!
+//! * [`RunPlan::classic`] reproduces the seed's `itmax`/`ita`/`skip`
+//!   behavior **bitwise** (it is also [`RunPlan::default`], so existing
+//!   configs keep their exact semantics).
+//! * [`RunPlan::warmup_then_final`] expresses the paper's
+//!   cheap-adjustment-then-frozen-grid workflow directly: a discarded
+//!   low-budget adapt stage, then full-budget frozen iterations.
+//! * Arbitrary plans chain `Stage::adapt(..)` / `Stage::sample(..)`
+//!   with per-stage `with_calls` / `with_sampling` overrides (native
+//!   engine only — fixed-layout backends such as PJRT artifacts reject
+//!   overrides).
+//!
+//! ```
+//! use mcubes::api::{RunPlan, Stage};
+//! use mcubes::strat::Sampling;
+//!
+//! // The default plan is exactly the seed's (15, 10, 2) triple.
+//! assert_eq!(RunPlan::default(), RunPlan::classic(15, 10, 2));
+//!
+//! // Paper workflow: 5 cheap discarded adjustment iterations at 2^12
+//! // calls, then 10 frozen-grid iterations at the configured budget.
+//! let plan = RunPlan::warmup_then_final(5, 1 << 12, 10);
+//! assert_eq!(plan.total_iters(), 15);
+//!
+//! // Fully custom: adapt uniformly, then refine with VEGAS+.
+//! let plan = RunPlan::new(vec![
+//!     Stage::adapt(4).discarded(),
+//!     Stage::sample(8).with_sampling(Sampling::vegas_plus()),
+//! ]);
+//! assert!(plan.validate().is_ok());
+//! ```
+
+use crate::error::{Error, Result};
+use crate::strat::Sampling;
+
+/// One contiguous span of driver iterations sharing the same policy.
+///
+/// Construct via [`Stage::adapt`] (grid adjustment on) or
+/// [`Stage::sample`] (frozen grid), then chain the `with_*`/`discarded`
+/// builders. The struct is `#[non_exhaustive]`: future policy fields
+/// will not be breaking changes.
+#[derive(Debug, Clone, PartialEq)]
+#[non_exhaustive]
+pub struct Stage {
+    /// Number of iterations this stage runs (must be >= 1).
+    pub iters: usize,
+    /// Per-iteration call budget override; `None` inherits the job's
+    /// `maxcalls`. Native engine only.
+    pub calls: Option<usize>,
+    /// Whether iterations in this stage accumulate the v^2 histogram
+    /// and adjust the importance grid (Algorithm 2's adjust phase).
+    pub adapt: bool,
+    /// Per-stage sampling-strategy override; `None` inherits the job's
+    /// `sampling`. Native engine only.
+    pub sampling: Option<Sampling>,
+    /// Exclude this stage's iterations from the weighted estimate
+    /// (the warm-up role of the classic `skip` knob).
+    pub discard: bool,
+}
+
+impl Stage {
+    /// A grid-adjusting stage of `iters` iterations.
+    pub fn adapt(iters: usize) -> Stage {
+        Stage {
+            iters,
+            calls: None,
+            adapt: true,
+            sampling: None,
+            discard: false,
+        }
+    }
+
+    /// A frozen-grid sampling stage of `iters` iterations.
+    pub fn sample(iters: usize) -> Stage {
+        Stage {
+            adapt: false,
+            ..Stage::adapt(iters)
+        }
+    }
+
+    /// Override the per-iteration call budget for this stage.
+    pub fn with_calls(mut self, calls: usize) -> Stage {
+        self.calls = Some(calls);
+        self
+    }
+
+    /// Override the sampling strategy for this stage.
+    pub fn with_sampling(mut self, sampling: Sampling) -> Stage {
+        self.sampling = Some(sampling);
+        self
+    }
+
+    /// Exclude this stage's iterations from the weighted estimate.
+    pub fn discarded(mut self) -> Stage {
+        self.discard = true;
+        self
+    }
+
+    /// Human-readable stage label ("adapt", "sample", "+discard"
+    /// suffix when the stage is excluded from the estimate).
+    pub fn label(&self) -> String {
+        let base = if self.adapt { "adapt" } else { "sample" };
+        if self.discard {
+            format!("{base}+discard")
+        } else {
+            base.to_string()
+        }
+    }
+}
+
+/// An ordered list of [`Stage`]s describing one full run.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RunPlan {
+    stages: Vec<Stage>,
+}
+
+impl Default for RunPlan {
+    /// The seed's default `(itmax, ita, skip) = (15, 10, 2)` schedule.
+    fn default() -> RunPlan {
+        RunPlan::classic(15, 10, 2)
+    }
+}
+
+impl RunPlan {
+    /// A plan from explicit stages.
+    pub fn new(stages: Vec<Stage>) -> RunPlan {
+        RunPlan { stages }
+    }
+
+    /// Append a stage (builder style).
+    pub fn then(mut self, stage: Stage) -> RunPlan {
+        self.stages.push(stage);
+        self
+    }
+
+    /// The seed's flat schedule, reproduced **bitwise**: `itmax` total
+    /// iterations, grid adjustment on iterations `0..ita`, the first
+    /// `skip` iterations excluded from the weighted estimate.
+    ///
+    /// `ita` and `skip` are clamped to `itmax` (adjusting or skipping
+    /// past the iteration cap is meaningless). A schedule that discards
+    /// everything (`skip >= itmax`) builds, but is rejected by
+    /// [`RunPlan::validate`].
+    pub fn classic(itmax: usize, ita: usize, skip: usize) -> RunPlan {
+        let ita = ita.min(itmax);
+        let skip = skip.min(itmax);
+        let b1 = ita.min(skip);
+        let b2 = ita.max(skip);
+        let mut stages = Vec::with_capacity(3);
+        if b1 > 0 {
+            // Iterations [0, b1): both adjusting and discarded.
+            stages.push(Stage::adapt(b1).discarded());
+        }
+        if b2 > b1 {
+            // Iterations [b1, b2): whichever of the two knobs reaches
+            // further — adjust-only (skip < ita) or discard-only.
+            stages.push(if ita > skip {
+                Stage::adapt(b2 - b1)
+            } else {
+                Stage::sample(b2 - b1).discarded()
+            });
+        }
+        if itmax > b2 {
+            // Iterations [b2, itmax): frozen grid, fully counted.
+            stages.push(Stage::sample(itmax - b2));
+        }
+        RunPlan { stages }
+    }
+
+    /// The paper's two-phase workflow stated directly: `warmup_iters`
+    /// cheap grid-adjustment iterations at `warmup_calls` per
+    /// iteration, discarded from the estimate, then `final_iters`
+    /// frozen-grid iterations at the job's full `maxcalls` budget.
+    pub fn warmup_then_final(
+        warmup_iters: usize,
+        warmup_calls: usize,
+        final_iters: usize,
+    ) -> RunPlan {
+        RunPlan::new(vec![
+            Stage::adapt(warmup_iters).with_calls(warmup_calls).discarded(),
+            Stage::sample(final_iters),
+        ])
+    }
+
+    /// The stages, in execution order.
+    pub fn stages(&self) -> &[Stage] {
+        &self.stages
+    }
+
+    /// Total iterations across all stages (the plan's `itmax`).
+    pub fn total_iters(&self) -> usize {
+        self.stages.iter().map(|s| s.iters).sum()
+    }
+
+    /// True when any stage overrides the per-iteration call budget or
+    /// the sampling strategy — such plans need a backend that can
+    /// re-layout between stages (the native engine session path).
+    pub fn has_overrides(&self) -> bool {
+        self.stages
+            .iter()
+            .any(|s| s.calls.is_some() || s.sampling.is_some())
+    }
+
+    /// Check plan invariants: at least one stage, every stage runs at
+    /// least one iteration, call-budget overrides are large enough to
+    /// stratify, sampling overrides are valid, and at least one stage
+    /// contributes to the estimate.
+    pub fn validate(&self) -> Result<()> {
+        if self.stages.is_empty() {
+            return Err(Error::Config(
+                "run plan has no stages (need at least one iteration)".into(),
+            ));
+        }
+        for (i, stage) in self.stages.iter().enumerate() {
+            if stage.iters == 0 {
+                return Err(Error::Config(format!(
+                    "run plan stage {i}: iters must be >= 1, got 0"
+                )));
+            }
+            if let Some(calls) = stage.calls {
+                if calls < 4 {
+                    return Err(Error::Config(format!(
+                        "run plan stage {i}: calls override must be >= 4 \
+                         (the layout needs at least 2 samples in at least \
+                         1 cube), got {calls}"
+                    )));
+                }
+            }
+            if let Some(sampling) = &stage.sampling {
+                sampling.validate()?;
+            }
+        }
+        if self.stages.iter().all(|s| s.discard) {
+            return Err(Error::Config(
+                "run plan discards every stage: the weighted estimate would \
+                 be empty — add at least one non-discard stage"
+                    .into(),
+            ));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Reference decomposition: replay a plan iteration by iteration
+    /// and compare (adapt, discard) flags against the classic triple.
+    fn flags(plan: &RunPlan) -> Vec<(bool, bool)> {
+        let mut out = Vec::new();
+        for s in plan.stages() {
+            for _ in 0..s.iters {
+                out.push((s.adapt, s.discard));
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn classic_reproduces_the_flat_triple() {
+        for (itmax, ita, skip) in [
+            (15, 10, 2),
+            (6, 3, 0),
+            (10, 0, 0),
+            (10, 10, 2),
+            (10, 2, 5),
+            (1, 1, 0),
+            (8, 8, 8), // discard-only: built, rejected by validate
+        ] {
+            let plan = RunPlan::classic(itmax, ita, skip);
+            let got = flags(&plan);
+            assert_eq!(got.len(), itmax, "({itmax},{ita},{skip})");
+            for (it, &(adapt, discard)) in got.iter().enumerate() {
+                assert_eq!(adapt, it < ita, "({itmax},{ita},{skip}) it {it}");
+                assert_eq!(discard, it < skip, "({itmax},{ita},{skip}) it {it}");
+            }
+            assert_eq!(plan.total_iters(), itmax);
+            assert!(!plan.has_overrides());
+        }
+    }
+
+    #[test]
+    fn classic_clamps_out_of_range_knobs() {
+        let plan = RunPlan::classic(5, 99, 2);
+        assert_eq!(plan.total_iters(), 5);
+        assert_eq!(flags(&plan), flags(&RunPlan::classic(5, 5, 2)));
+        assert!(plan.validate().is_ok());
+    }
+
+    #[test]
+    fn default_is_the_seed_schedule() {
+        assert_eq!(RunPlan::default(), RunPlan::classic(15, 10, 2));
+        assert!(RunPlan::default().validate().is_ok());
+    }
+
+    #[test]
+    fn warmup_then_final_shape() {
+        let plan = RunPlan::warmup_then_final(5, 4096, 10);
+        assert!(plan.validate().is_ok());
+        assert_eq!(plan.total_iters(), 15);
+        assert!(plan.has_overrides());
+        let s = plan.stages();
+        assert_eq!(s.len(), 2);
+        assert!(s[0].adapt && s[0].discard);
+        assert_eq!(s[0].calls, Some(4096));
+        assert!(!s[1].adapt && !s[1].discard);
+        assert_eq!(s[1].calls, None);
+        assert_eq!(s[0].label(), "adapt+discard");
+        assert_eq!(s[1].label(), "sample");
+    }
+
+    #[test]
+    fn validate_rejects_empty_plan() {
+        let err = RunPlan::new(vec![]).validate().unwrap_err().to_string();
+        assert!(err.contains("no stages"), "{err}");
+        // classic(0, ..) builds the empty plan too.
+        assert!(RunPlan::classic(0, 0, 0).validate().is_err());
+    }
+
+    #[test]
+    fn validate_rejects_zero_iteration_stage() {
+        let err = RunPlan::new(vec![Stage::adapt(0)])
+            .validate()
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("iters must be >= 1"), "{err}");
+    }
+
+    #[test]
+    fn validate_rejects_zero_calls_override() {
+        let err = RunPlan::new(vec![Stage::sample(3).with_calls(0)])
+            .validate()
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("calls override must be >= 4"), "{err}");
+        assert!(RunPlan::new(vec![Stage::sample(3).with_calls(4)])
+            .validate()
+            .is_ok());
+    }
+
+    #[test]
+    fn validate_rejects_discard_only_plan() {
+        let err = RunPlan::new(vec![Stage::adapt(4).discarded(), Stage::sample(2).discarded()])
+            .validate()
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("discards every stage"), "{err}");
+        // classic with skip >= itmax hits the same rejection.
+        assert!(RunPlan::classic(4, 2, 9).validate().is_err());
+    }
+
+    #[test]
+    fn validate_rejects_bad_sampling_override() {
+        let plan = RunPlan::new(vec![
+            Stage::adapt(2).with_sampling(Sampling::VegasPlus { beta: 7.0 })
+        ]);
+        let err = plan.validate().unwrap_err().to_string();
+        assert!(err.contains("beta"), "{err}");
+    }
+
+    #[test]
+    fn then_appends_stages() {
+        let plan = RunPlan::new(vec![Stage::adapt(2)]).then(Stage::sample(3));
+        assert_eq!(plan.stages().len(), 2);
+        assert_eq!(plan.total_iters(), 5);
+    }
+}

@@ -1,0 +1,558 @@
+//! Pull-based, resumable integration runs.
+//!
+//! A [`Session`] is one in-flight m-Cubes run turned inside out:
+//! instead of handing the driver a callback and blocking until it
+//! finishes, the caller *pulls* — [`Session::step`] advances exactly
+//! one iteration and returns a typed [`Iteration`] snapshot, and
+//! [`Session::finish`] drains whatever is left. Between steps the
+//! caller may inspect the running estimate, abort, interleave other
+//! sessions (the scheduler does exactly that), or [`Session::suspend`]
+//! the run into a [`Checkpoint`] — a superset of `GridState` carrying
+//! the importance grid, the VEGAS+ stratification snapshot, the
+//! weighted-estimator sums, and the RNG cursor — which
+//! [`Session::resume`] restores **bitwise**: a suspended-and-resumed
+//! run produces exactly the estimates the uninterrupted run would
+//! have (property-tested on both engines).
+//!
+//! ```
+//! use mcubes::prelude::*;
+//!
+//! let f = mcubes::integrands::by_name("f3", 3)?;
+//! let mut cfg = JobConfig::default();
+//! cfg.maxcalls = 1 << 12;
+//! cfg.plan = RunPlan::classic(8, 5, 1);
+//! cfg.seed = 7;
+//!
+//! let mut session = Session::new(f, cfg)?;
+//! while let Some(it) = session.step()? {
+//!     // Inspect (or persist) mid-run state between iterations.
+//!     if it.index == 2 {
+//!         let checkpoint = session.suspend();
+//!         assert_eq!(checkpoint.iteration(), 3); // 3 iterations done
+//!     }
+//! }
+//! let outcome = session.finish()?;
+//! assert!(outcome.output.calls_used > 0);
+//! # Ok::<(), mcubes::Error>(())
+//! ```
+
+use super::grid_state::{GridState, StratSnapshot};
+use super::observer::IterationEvent;
+use crate::coordinator::{
+    DriveOutcome, JobConfig, NativeBackend, SessionCore, StepRecord, StratifiedBackend,
+    VSampleBackend,
+};
+use crate::error::{Error, Result};
+use crate::estimator::{EstimatorState, IterationResult};
+use crate::integrands::IntegrandRef;
+use crate::strat::{AllocStats, Layout, Sampling};
+use crate::util::json::{ObjBuilder, Value};
+use std::path::Path;
+use std::time::Instant;
+
+/// Why a run ended.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum StopReason {
+    /// The convergence policy (tau target + chi^2 guard) was met.
+    Converged,
+    /// The run plan ran out of iterations before converging.
+    Exhausted,
+    /// `JobConfig::max_total_calls` was reached.
+    TargetCallsReached,
+    /// An observer returned `ObserverControl::Abort` (or the session
+    /// was aborted between steps).
+    ObserverAbort,
+}
+
+impl StopReason {
+    /// Stable label (used in checkpoint JSON and reports).
+    pub fn as_str(self) -> &'static str {
+        match self {
+            StopReason::Converged => "converged",
+            StopReason::Exhausted => "exhausted",
+            StopReason::TargetCallsReached => "target_calls_reached",
+            StopReason::ObserverAbort => "observer_abort",
+        }
+    }
+
+    fn from_label(s: &str) -> Option<StopReason> {
+        Some(match s {
+            "converged" => StopReason::Converged,
+            "exhausted" => StopReason::Exhausted,
+            "target_calls_reached" => StopReason::TargetCallsReached,
+            "observer_abort" => StopReason::ObserverAbort,
+            _ => return None,
+        })
+    }
+}
+
+/// Owned snapshot of one completed session iteration — what
+/// [`Session::step`] returns. The borrowing twin delivered to
+/// observers is `api::IterationEvent`.
+#[derive(Debug, Clone)]
+#[non_exhaustive]
+pub struct Iteration {
+    /// 0-based global iteration index (also the RNG stream cursor).
+    pub index: usize,
+    /// Index of the run-plan stage this iteration belongs to.
+    pub stage: usize,
+    /// Label of that stage ("adapt", "sample", "+discard" suffix).
+    pub stage_label: String,
+    /// Whether the importance grid was adjusted this iteration.
+    pub adjusting: bool,
+    /// Whether this iteration was excluded from the weighted estimate.
+    pub discarded: bool,
+    /// Raw estimate of this iteration alone.
+    pub estimate: IterationResult,
+    /// Running weighted integral (empty-estimator sentinel 0.0 during
+    /// discarded warm-up).
+    pub integral: f64,
+    /// Running combined sigma (infinite until the first fold).
+    pub sigma: f64,
+    /// Running chi^2 per degree of freedom.
+    pub chi2_dof: f64,
+    /// Running relative error (infinite until the first fold).
+    pub rel_err: f64,
+    /// Total integrand evaluations consumed so far.
+    pub calls_used: usize,
+    /// The chi^2 guard reset the estimator this iteration.
+    pub estimator_reset: bool,
+    /// Per-cube allocation stats (VEGAS+ stages only).
+    pub alloc: Option<AllocStats>,
+    /// `Some` when this was the final iteration.
+    pub stop: Option<StopReason>,
+}
+
+impl Iteration {
+    /// Convergence was declared on this iteration.
+    pub fn converged(&self) -> bool {
+        self.stop == Some(StopReason::Converged)
+    }
+}
+
+/// A suspended run: everything needed to continue bit-identically —
+/// the adapted importance grid, the VEGAS+ stratification snapshot
+/// (when present), the weighted-estimator sums, and the plan/RNG
+/// cursor. Serializes as a superset of the `GridState` JSON schema,
+/// so plain grid files (including pre-checkpoint ones) load as
+/// fresh-start checkpoints and a checkpoint file still works anywhere
+/// a grid warm start is accepted.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Checkpoint {
+    grid: GridState,
+    est: EstimatorState,
+    iteration: usize,
+    stage: usize,
+    stage_iter: usize,
+    calls_used: usize,
+    /// `Some` when the session had already ended when it was
+    /// suspended — resuming restores the finished state instead of
+    /// silently un-finishing the run.
+    stop: Option<StopReason>,
+}
+
+impl Checkpoint {
+    /// A fresh-start checkpoint from a bare grid — this is exactly how
+    /// grid warm starts are represented internally.
+    pub fn from_grid(grid: GridState) -> Checkpoint {
+        Checkpoint {
+            grid,
+            est: EstimatorState::default(),
+            iteration: 0,
+            stage: 0,
+            stage_iter: 0,
+            calls_used: 0,
+            stop: None,
+        }
+    }
+
+    /// Why the run had ended at suspension time, if it had.
+    pub fn stop(&self) -> Option<StopReason> {
+        self.stop
+    }
+
+    /// The importance grid (plus VEGAS+ snapshot, when present).
+    pub fn grid(&self) -> &GridState {
+        &self.grid
+    }
+
+    /// The weighted-estimator sums at suspension time.
+    pub fn estimator(&self) -> EstimatorState {
+        self.est
+    }
+
+    /// Completed iterations (equals the next RNG stream index).
+    pub fn iteration(&self) -> usize {
+        self.iteration
+    }
+
+    /// Run-plan stage the cursor sits in.
+    pub fn stage(&self) -> usize {
+        self.stage
+    }
+
+    /// Completed iterations within that stage.
+    pub fn stage_iter(&self) -> usize {
+        self.stage_iter
+    }
+
+    /// Total integrand evaluations consumed so far.
+    pub fn calls_used(&self) -> usize {
+        self.calls_used
+    }
+
+    /// Serialize (JSON value): the `GridState` schema plus a
+    /// `"session"` object with the cursor and estimator sums.
+    pub fn to_json(&self) -> Value {
+        let mut v = self.grid.to_json();
+        if let Value::Obj(fields) = &mut v {
+            let est = ObjBuilder::new()
+                .field("sum_w", self.est.sum_w)
+                .field("sum_wi", self.est.sum_wi)
+                .field("sum_wi2", self.est.sum_wi2)
+                .field("n", self.est.n)
+                .build();
+            let mut session = ObjBuilder::new()
+                .field("iteration", self.iteration)
+                .field("stage", self.stage)
+                .field("stage_iter", self.stage_iter)
+                .field("calls_used", self.calls_used)
+                .field("estimator", est);
+            if let Some(stop) = self.stop {
+                session = session.field("stop", stop.as_str());
+            }
+            fields.push(("session".to_string(), session.build()));
+        }
+        v
+    }
+
+    /// Restore from `to_json` output. A value without a `"session"`
+    /// field (any grid file, old or new) loads as a fresh-start
+    /// checkpoint.
+    pub fn from_json(v: &Value) -> Result<Checkpoint> {
+        let grid = GridState::from_json(v)?;
+        let Some(session) = v.get("session") else {
+            return Ok(Checkpoint::from_grid(grid));
+        };
+        let usz = |key: &str| -> Result<usize> {
+            session
+                .req(key)?
+                .as_usize()
+                .ok_or_else(|| Error::Manifest(format!("checkpoint session field `{key}`")))
+        };
+        let est_v = session.req("estimator")?;
+        let num = |key: &str| -> Result<f64> {
+            est_v
+                .req(key)?
+                .as_f64()
+                .ok_or_else(|| Error::Manifest(format!("checkpoint estimator field `{key}`")))
+        };
+        let est = EstimatorState {
+            sum_w: num("sum_w")?,
+            sum_wi: num("sum_wi")?,
+            sum_wi2: num("sum_wi2")?,
+            n: est_v
+                .req("n")?
+                .as_usize()
+                .ok_or_else(|| Error::Manifest("checkpoint estimator field `n`".into()))?,
+        };
+        est.validate().map_err(|e| {
+            Error::Manifest(format!("checkpoint estimator: {e}"))
+        })?;
+        let stop = match session.get("stop") {
+            None => None,
+            Some(v) => {
+                let label = v
+                    .as_str()
+                    .ok_or_else(|| Error::Manifest("checkpoint stop label".into()))?;
+                Some(StopReason::from_label(label).ok_or_else(|| {
+                    Error::Manifest(format!("unknown checkpoint stop reason `{label}`"))
+                })?)
+            }
+        };
+        Ok(Checkpoint {
+            grid,
+            est,
+            iteration: usz("iteration")?,
+            stage: usz("stage")?,
+            stage_iter: usz("stage_iter")?,
+            calls_used: usz("calls_used")?,
+            stop,
+        })
+    }
+
+    /// Save to a JSON file.
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        std::fs::write(path, self.to_json().to_json())?;
+        Ok(())
+    }
+
+    /// Load from a file written by `save` (or any grid file).
+    pub fn load(path: impl AsRef<Path>) -> Result<Checkpoint> {
+        let text = std::fs::read_to_string(path)?;
+        Checkpoint::from_json(&crate::util::json::parse(&text)?)
+    }
+}
+
+/// A resumable native-engine integration run (see the module docs).
+///
+/// Sessions are `Send`: the scheduler moves paused sessions between
+/// worker threads, and because the engine's reduction is bitwise
+/// thread-count-invariant, *where* a session is stepped never changes
+/// its numbers.
+pub struct Session {
+    f: IntegrandRef,
+    cfg: JobConfig,
+    /// Per-stage layouts, resolved and validated at construction.
+    layouts: Vec<Layout>,
+    core: SessionCore,
+    /// The backend serving the current stage; rebuilt lazily after
+    /// stage boundaries (per-stage calls/sampling may re-layout).
+    backend: Option<Box<dyn VSampleBackend + Send>>,
+    backend_label: &'static str,
+    /// Stratification state carried across stage boundaries and
+    /// checkpoint restores, consumed by the next VEGAS+ backend build.
+    pending_strat: Option<StratSnapshot>,
+    /// Accumulated wall time actually spent inside `step` (seconds).
+    active_time: f64,
+}
+
+impl Session {
+    /// Start a fresh run of `f` under `cfg` (validated eagerly).
+    pub fn new(f: IntegrandRef, cfg: JobConfig) -> Result<Session> {
+        let core = SessionCore::new(&cfg, f.dim(), cfg.nb, None)?;
+        Session::build(f, cfg, core, None)
+    }
+
+    /// Restore a suspended run. For bitwise continuation the caller
+    /// must pass the same integrand and config the suspended session
+    /// ran with; the grid/plan shape is validated, the integrand's
+    /// math is trusted.
+    pub fn resume(f: IntegrandRef, cfg: JobConfig, checkpoint: &Checkpoint) -> Result<Session> {
+        let core = SessionCore::restore(
+            &cfg,
+            f.dim(),
+            cfg.nb,
+            checkpoint.grid(),
+            checkpoint.estimator(),
+            checkpoint.stage(),
+            checkpoint.stage_iter(),
+            checkpoint.iteration(),
+            checkpoint.calls_used(),
+            checkpoint.stop(),
+        )?;
+        Session::build(f, cfg, core, checkpoint.grid().strat().cloned())
+    }
+
+    fn build(
+        f: IntegrandRef,
+        cfg: JobConfig,
+        core: SessionCore,
+        pending_strat: Option<StratSnapshot>,
+    ) -> Result<Session> {
+        // Resolve every stage's layout now so a bad per-stage calls
+        // override fails at construction, not three stages in.
+        let mut layouts = Vec::with_capacity(core.stages().len());
+        for stage in core.stages() {
+            layouts.push(Layout::compute(f.dim(), stage.calls, cfg.nb, cfg.nblocks)?);
+        }
+        Ok(Session {
+            f,
+            cfg,
+            layouts,
+            core,
+            backend: None,
+            backend_label: "native",
+            pending_strat,
+            active_time: 0.0,
+        })
+    }
+
+    /// Build (or rebuild) the backend for the current stage.
+    fn ensure_backend(&mut self) -> Result<()> {
+        if self.backend.is_some() {
+            return Ok(());
+        }
+        let idx = self.core.stage_idx();
+        let stage = &self.core.stages()[idx];
+        let layout = self.layouts[idx];
+        let backend: Box<dyn VSampleBackend + Send> = match stage.sampling {
+            Sampling::Uniform => Box::new(NativeBackend::new(
+                self.f.clone(),
+                layout,
+                self.cfg.threads,
+            )),
+            Sampling::VegasPlus { beta } => Box::new(StratifiedBackend::new(
+                self.f.clone(),
+                layout,
+                self.cfg.threads,
+                beta,
+                self.pending_strat.as_ref(),
+            )?),
+        };
+        self.backend_label = backend.name();
+        self.backend = Some(backend);
+        Ok(())
+    }
+
+    /// Advance exactly one iteration. Returns the iteration snapshot,
+    /// or `None` once the run has ended (check [`Session::stop_reason`]).
+    pub fn step(&mut self) -> Result<Option<Iteration>> {
+        if self.core.finished() {
+            return Ok(None);
+        }
+        let t0 = Instant::now();
+        self.ensure_backend()?;
+        let rec = {
+            let backend = self.backend.as_deref().expect("backend just ensured");
+            self.core.step(backend, &self.cfg)?
+        };
+        if rec.stage_changed {
+            // Stage boundary: retire the backend, carrying its
+            // stratification state into the next build.
+            if let Some(retired) = self.backend.take() {
+                if let Some(snap) = retired.strat_export() {
+                    self.pending_strat = Some(snap);
+                }
+            }
+        }
+        self.active_time += t0.elapsed().as_secs_f64();
+        Ok(Some(self.iteration_from(&rec)))
+    }
+
+    fn iteration_from(&self, rec: &StepRecord) -> Iteration {
+        Iteration {
+            index: rec.index,
+            stage: rec.stage,
+            stage_label: self.core.stages()[rec.stage].label.clone(),
+            adjusting: rec.adapting,
+            discarded: rec.discarded,
+            estimate: rec.estimate,
+            integral: rec.integral,
+            sigma: rec.sigma,
+            chi2_dof: rec.chi2_dof,
+            rel_err: rec.rel_err,
+            calls_used: rec.calls_used,
+            estimator_reset: rec.estimator_reset,
+            alloc: rec.alloc,
+            stop: rec.stop,
+        }
+    }
+
+    /// The borrowing observer event for an iteration this session just
+    /// produced (used by the facade's observer fan-out).
+    pub(crate) fn event<'s>(&'s self, it: &'s Iteration) -> IterationEvent<'s> {
+        IterationEvent {
+            iteration: it.index,
+            stage: it.stage,
+            stage_label: &it.stage_label,
+            adjusting: it.adjusting,
+            discarded: it.discarded,
+            estimate: it.estimate,
+            integral: it.integral,
+            sigma: it.sigma,
+            chi2_dof: it.chi2_dof,
+            rel_err: it.rel_err,
+            calls_used: it.calls_used,
+            estimator_reset: it.estimator_reset,
+            converged: it.converged(),
+            stop: it.stop,
+            alloc: it.alloc,
+            grid: self.core.bins(),
+        }
+    }
+
+    /// Drain any remaining iterations and assemble the final outcome.
+    pub fn finish(mut self) -> Result<DriveOutcome> {
+        while self.step()?.is_some() {}
+        let strat = self.current_strat();
+        Ok(self
+            .core
+            .into_outcome(self.backend_label, strat, self.active_time))
+    }
+
+    /// Export the complete run state for a later [`Session::resume`].
+    /// Valid at any point: before the first step it degenerates to a
+    /// grid warm start, and after the run has ended the checkpoint
+    /// remembers the [`StopReason`] (resuming restores the finished
+    /// state instead of running extra iterations).
+    pub fn suspend(&self) -> Checkpoint {
+        Checkpoint {
+            grid: self.grid(),
+            est: self.core.estimator_state(),
+            iteration: self.core.iteration(),
+            stage: self.core.stage_idx(),
+            stage_iter: self.core.stage_iter(),
+            calls_used: self.core.calls_used(),
+            stop: self.core.stop(),
+        }
+    }
+
+    fn current_strat(&self) -> Option<StratSnapshot> {
+        self.backend
+            .as_ref()
+            .and_then(|b| b.strat_export())
+            .or_else(|| self.pending_strat.clone())
+    }
+
+    /// End the run after the last completed iteration
+    /// ([`StopReason::ObserverAbort`]); no-op if already finished.
+    pub fn abort(&mut self) {
+        self.core.abort();
+    }
+
+    /// True once the run has ended (step will return `None`).
+    pub fn is_finished(&self) -> bool {
+        self.core.finished()
+    }
+
+    /// Why the run ended, once it has.
+    pub fn stop_reason(&self) -> Option<StopReason> {
+        self.core.stop()
+    }
+
+    /// Completed iterations so far.
+    pub fn iterations(&self) -> usize {
+        self.core.iteration()
+    }
+
+    /// Total integrand evaluations consumed so far.
+    pub fn calls_used(&self) -> usize {
+        self.core.calls_used()
+    }
+
+    /// Running weighted integral estimate.
+    pub fn integral(&self) -> f64 {
+        self.core.estimator().integral()
+    }
+
+    /// Running combined sigma.
+    pub fn sigma(&self) -> f64 {
+        self.core.estimator().sigma()
+    }
+
+    /// Running chi^2 per degree of freedom.
+    pub fn chi2_dof(&self) -> f64 {
+        self.core.estimator().chi2_dof()
+    }
+
+    /// Running relative error.
+    pub fn rel_err(&self) -> f64 {
+        self.core.estimator().rel_err()
+    }
+
+    /// The current adapted grid (with VEGAS+ snapshot when present) —
+    /// the same grid [`Session::suspend`] embeds.
+    pub fn grid(&self) -> GridState {
+        let mut grid = GridState::from_bins(self.core.bins().clone());
+        if let Some(s) = self.current_strat() {
+            grid = grid.with_strat(s);
+        }
+        grid
+    }
+
+    /// The configuration this session runs under.
+    pub fn config(&self) -> &JobConfig {
+        &self.cfg
+    }
+}

@@ -6,12 +6,16 @@
 //! accidentally inheriting coordinator parallelism.
 
 use super::BaselineResult;
+use crate::api::RunPlan;
 use crate::coordinator::{integrate_native_core, JobConfig};
-use crate::integrands::Integrand;
+use crate::integrands::IntegrandRef;
 
 /// Run serial VEGAS to `tau_rel` with the given per-iteration budget.
+///
+/// Takes the shared [`IntegrandRef`] handle (what `by_name` and the
+/// closure builders return) — the session core owns its integrand.
 pub fn vegas_serial_integrate(
-    f: &dyn Integrand,
+    f: &IntegrandRef,
     maxcalls: usize,
     tau_rel: f64,
     itmax: usize,
@@ -20,9 +24,11 @@ pub fn vegas_serial_integrate(
     let cfg = JobConfig {
         maxcalls,
         tau_rel,
-        itmax,
-        ita: (itmax * 2).div_ceil(3),
-        skip: if itmax > 4 { 2 } else { 0 },
+        plan: RunPlan::classic(
+            itmax,
+            (itmax * 2).div_ceil(3),
+            if itmax > 4 { 2 } else { 0 },
+        ),
         seed,
         threads: 1, // serial by definition
         ..Default::default()
@@ -55,7 +61,7 @@ mod tests {
     #[test]
     fn serial_vegas_converges() {
         let f = by_name("f4", 5).unwrap();
-        let r = vegas_serial_integrate(&*f, 1 << 16, 1e-3, 25, 3);
+        let r = vegas_serial_integrate(&f, 1 << 16, 1e-3, 25, 3);
         assert!(r.converged);
         let truth = f.true_value().unwrap();
         assert!(((r.integral - truth) / truth).abs() < 5e-3);

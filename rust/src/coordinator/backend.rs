@@ -12,13 +12,15 @@
 //! pipeline over [`crate::engine::PointBlock`]s — one virtual call per
 //! block, never one per point.
 
-use crate::engine::{NativeEngine, VSampleOpts};
+use crate::api::StratSnapshot;
+use crate::engine::{vsample_stratified, NativeEngine, VSampleOpts};
 use crate::error::Result;
 use crate::estimator::IterationResult;
 use crate::grid::Bins;
-use crate::integrands::Integrand;
+use crate::integrands::{Integrand, IntegrandRef};
 use crate::runtime::{ArtifactMeta, PjrtRuntime, Registry, VSampleExecutable};
-use crate::strat::{Bounds, Layout};
+use crate::strat::{Allocation, Bounds, Layout};
+use std::cell::RefCell;
 use std::sync::Arc;
 
 /// One V-Sample pass provider.
@@ -41,6 +43,13 @@ pub trait VSampleBackend {
     /// `Some` only for adaptively-stratified backends (VEGAS+). The
     /// driver forwards it to observers via `IterationEvent::alloc`.
     fn alloc_stats(&self) -> Option<crate::strat::AllocStats> {
+        None
+    }
+    /// Export the live per-cube allocation state, when this backend is
+    /// adaptively stratified — the session layer stores it in
+    /// `GridState`/`Checkpoint` so warm starts and suspended runs
+    /// resume the allocation bit-identically.
+    fn strat_export(&self) -> Option<StratSnapshot> {
         None
     }
 }
@@ -89,6 +98,112 @@ impl VSampleBackend for NativeBackend {
             threads: self.threads,
         };
         Ok(NativeEngine.vsample(&*self.integrand, &self.layout, bins, &opts))
+    }
+}
+
+/// Mutable per-run state of the stratified backend: the live
+/// allocation plus the stats snapshot of the iteration that just ran.
+struct StratCell {
+    alloc: Allocation,
+    last: Option<crate::strat::AllocStats>,
+}
+
+/// VEGAS+ adaptively-stratified twin of [`NativeBackend`]: drives
+/// `engine::stratified::vsample_stratified` with a live
+/// [`Allocation`], re-apportioning the per-iteration budget after
+/// every pass. The driver stays allocation-agnostic — it only sees the
+/// [`VSampleBackend`] contract plus `alloc_stats`/`strat_export`.
+pub struct StratifiedBackend {
+    integrand: IntegrandRef,
+    layout: Layout,
+    threads: usize,
+    beta: f64,
+    /// Per-iteration call budget (`layout.calls()`, matching the
+    /// uniform engine so `calls_used` accounting is identical).
+    budget: usize,
+    state: RefCell<StratCell>,
+}
+
+impl StratifiedBackend {
+    /// Build a stratified backend, resuming `resume`'s allocation when
+    /// its cube count matches `layout` (the re-apportionment is a pure
+    /// function of the damped accumulator, so a matching snapshot
+    /// restores the exact per-cube counts); any mismatch starts from
+    /// the uniform split.
+    pub fn new(
+        integrand: IntegrandRef,
+        layout: Layout,
+        threads: usize,
+        beta: f64,
+        resume: Option<&StratSnapshot>,
+    ) -> Result<StratifiedBackend> {
+        let alloc = match resume {
+            Some(s) if s.counts.len() == layout.m => {
+                let mut a = Allocation::from_parts(s.counts.clone(), s.damped.clone())?;
+                a.reallocate(layout.calls(), beta);
+                a
+            }
+            _ => Allocation::uniform(&layout),
+        };
+        Ok(StratifiedBackend {
+            integrand,
+            layout,
+            threads,
+            beta,
+            budget: layout.calls(),
+            state: RefCell::new(StratCell { alloc, last: None }),
+        })
+    }
+}
+
+impl VSampleBackend for StratifiedBackend {
+    fn layout(&self) -> Layout {
+        self.layout
+    }
+
+    fn bounds(&self) -> Bounds {
+        self.integrand.bounds()
+    }
+
+    fn name(&self) -> &'static str {
+        "native-vegas+"
+    }
+
+    fn run(
+        &self,
+        bins: &Bins,
+        seed: u32,
+        iteration: u32,
+        adjust: bool,
+    ) -> Result<(IterationResult, Option<Vec<f64>>)> {
+        let mut cell = self.state.borrow_mut();
+        let StratCell { alloc, last } = &mut *cell;
+        *last = Some(alloc.stats());
+        let opts = VSampleOpts {
+            seed,
+            iteration,
+            adjust,
+            threads: self.threads,
+        };
+        let out = vsample_stratified(&*self.integrand, &self.layout, bins, alloc, &opts);
+        // Re-apportion for the next iteration from the freshly damped
+        // accumulator (cheap; also leaves the exported snapshot ready
+        // for warm starts even when this was the final iteration).
+        alloc.reallocate(self.budget, self.beta);
+        Ok(out)
+    }
+
+    fn alloc_stats(&self) -> Option<crate::strat::AllocStats> {
+        self.state.borrow().last
+    }
+
+    fn strat_export(&self) -> Option<StratSnapshot> {
+        let cell = self.state.borrow();
+        Some(StratSnapshot {
+            beta: self.beta,
+            counts: cell.alloc.counts().to_vec(),
+            damped: cell.alloc.damped().to_vec(),
+        })
     }
 }
 

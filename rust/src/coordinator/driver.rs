@@ -1,30 +1,45 @@
-//! The m-Cubes iteration driver (Algorithm 2): two-phase loop with bin
-//! adjustment, weighted estimates, chi^2 guard, and convergence checks.
+//! The m-Cubes iteration driver (Algorithm 2) as a resumable state
+//! machine.
 //!
-//! `drive` is the single driver core. It accepts an optional warm-start
-//! grid (`api::GridState`) and an optional per-iteration observer
-//! (`api::IterationEvent`), and returns both the integration output and
-//! the final adapted grid. The free functions the seed shipped
-//! (`run_driver`, `run_driver_traced`, `integrate_native`,
-//! `integrate_native_adaptive`) remain as deprecated shims over it;
-//! new code goes through `api::Integrator`.
+//! The stepping logic lives in [`SessionCore`], a backend-agnostic
+//! state machine that advances exactly one iteration per `step` call
+//! over a [`RunPlan`]'s stages. Everything else is a thin loop over it:
+//!
+//! * [`drive`] runs a fixed-layout backend (PJRT artifacts, raw native
+//!   backends) to completion, firing observers each iteration.
+//! * `api::Session` (the public resumable handle) owns the integrand
+//!   and rebuilds native backends at stage boundaries, so plans may
+//!   change the per-iteration call budget or sampling strategy
+//!   mid-run; it also exports/restores [`api::Checkpoint`]s.
+//! * [`integrate_native_core`] — the shared core behind the facade,
+//!   the scheduler, and the deprecated shims — is `Session` plus an
+//!   observer loop.
+//!
+//! Every run ends with a typed [`StopReason`] carried on
+//! [`DriveOutcome`] and the final [`IterationEvent`].
 
 use super::backend::VSampleBackend;
-use crate::api::{GridState, IterationEvent, StratSnapshot};
-use crate::engine::vsample_stratified;
+use crate::api::{
+    Checkpoint, GridState, IterationEvent, ObserverControl, RunPlan, Session, StopReason,
+};
 use crate::error::{Error, Result};
-use crate::estimator::{Convergence, WeightedEstimator};
+use crate::estimator::{Convergence, EstimatorState, WeightedEstimator};
 use crate::grid::{Bins, GridMode};
-use crate::integrands::Integrand;
-use crate::strat::{AllocStats, Allocation, Layout, Sampling};
+use crate::integrands::IntegrandRef;
+use crate::strat::{AllocStats, Sampling};
 use crate::util::threadpool::default_threads;
-use std::cell::RefCell;
 use std::time::Instant;
 
 /// Everything the driver needs to know about one integration job.
+///
+/// `#[non_exhaustive]`: construct via [`JobConfig::default`] and
+/// mutate fields (or use the `api::Integrator` builder) — future knobs
+/// will not be breaking changes.
 #[derive(Debug, Clone)]
+#[non_exhaustive]
 pub struct JobConfig {
     /// Evaluation budget per iteration (Algorithm 2 `maxcalls`).
+    /// Stages may override it per stage (native engine only).
     pub maxcalls: usize,
     /// Importance bins per axis.
     pub nb: usize,
@@ -32,14 +47,15 @@ pub struct JobConfig {
     pub nblocks: usize,
     /// Target relative error.
     pub tau_rel: f64,
-    /// Total iteration cap (Algorithm 2 `itmax`).
-    pub itmax: usize,
-    /// Iterations with bin adjustment (Algorithm 2 `ita`).
-    pub ita: usize,
-    /// Iterations to discard from the weighted estimate (importance-grid
-    /// warm-up). Keeps early wildly-off iterations from polluting the
-    /// combined estimate (the paper's chi^2 criterion, §5.1).
-    pub skip: usize,
+    /// The iteration schedule. [`RunPlan::classic`] reproduces the
+    /// seed's flat `itmax`/`ita`/`skip` triple bitwise and is the
+    /// default (`classic(15, 10, 2)`).
+    pub plan: RunPlan,
+    /// Optional cap on total integrand evaluations: the run stops with
+    /// [`StopReason::TargetCallsReached`] at the end of the first
+    /// iteration that reaches it. `None` (default) leaves the plan as
+    /// the only budget.
+    pub max_total_calls: Option<usize>,
     /// Reset the estimator when chi2/dof blows past the convergence
     /// guard during the adjust phase (recovers from a bad warm-up).
     pub reset_on_inconsistency: bool,
@@ -50,7 +66,7 @@ pub struct JobConfig {
     /// Per-cube sample allocation: uniform m-Cubes (`Sampling::Uniform`)
     /// or VEGAS+ adaptive stratification (`Sampling::VegasPlus`).
     /// Native engine only — the PJRT artifacts compile the uniform
-    /// layout.
+    /// layout. Stages may override it per stage.
     pub sampling: Sampling,
     /// Worker threads for the native engine.
     pub threads: usize,
@@ -63,9 +79,8 @@ impl Default for JobConfig {
             nb: 50,
             nblocks: 8,
             tau_rel: 1e-3,
-            itmax: 15,
-            ita: 10,
-            skip: 2,
+            plan: RunPlan::default(),
+            max_total_calls: None,
             reset_on_inconsistency: true,
             seed: 42,
             grid_mode: GridMode::PerAxis,
@@ -76,6 +91,68 @@ impl Default for JobConfig {
 }
 
 impl JobConfig {
+    /// Chainable setter (the struct is `#[non_exhaustive]`, so
+    /// downstream code configures via `Default` + these setters or the
+    /// `api::Integrator` builder).
+    pub fn with_maxcalls(mut self, maxcalls: usize) -> Self {
+        self.maxcalls = maxcalls;
+        self
+    }
+
+    /// Chainable setter for the importance-bin count.
+    pub fn with_bins(mut self, nb: usize) -> Self {
+        self.nb = nb;
+        self
+    }
+
+    /// Chainable setter for the block count.
+    pub fn with_blocks(mut self, nblocks: usize) -> Self {
+        self.nblocks = nblocks;
+        self
+    }
+
+    /// Chainable setter for the target relative error.
+    pub fn with_tolerance(mut self, tau_rel: f64) -> Self {
+        self.tau_rel = tau_rel;
+        self
+    }
+
+    /// Chainable setter for the iteration schedule.
+    pub fn with_plan(mut self, plan: RunPlan) -> Self {
+        self.plan = plan;
+        self
+    }
+
+    /// Chainable setter for the total-call budget.
+    pub fn with_call_budget(mut self, max_total_calls: usize) -> Self {
+        self.max_total_calls = Some(max_total_calls);
+        self
+    }
+
+    /// Chainable setter for the RNG seed.
+    pub fn with_seed(mut self, seed: u32) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    /// Chainable setter for the grid mode.
+    pub fn with_grid_mode(mut self, grid_mode: GridMode) -> Self {
+        self.grid_mode = grid_mode;
+        self
+    }
+
+    /// Chainable setter for the sampling strategy.
+    pub fn with_sampling(mut self, sampling: Sampling) -> Self {
+        self.sampling = sampling;
+        self
+    }
+
+    /// Chainable setter for the native-engine worker-thread count.
+    pub fn with_threads(mut self, threads: usize) -> Self {
+        self.threads = threads;
+        self
+    }
+
     pub fn validate(&self) -> Result<()> {
         if self.maxcalls < 4 {
             return Err(Error::Config(format!(
@@ -95,25 +172,16 @@ impl JobConfig {
                 "nblocks (grid programs) must be >= 1, got 0".into(),
             ));
         }
-        if self.itmax == 0 {
-            return Err(Error::Config("itmax must be >= 1".into()));
-        }
-        if self.ita > self.itmax {
-            return Err(Error::Config(format!(
-                "ita {} > itmax {}",
-                self.ita, self.itmax
-            )));
-        }
         if !(self.tau_rel > 0.0) {
             return Err(Error::Config("tau_rel must be > 0".into()));
         }
-        if self.skip >= self.itmax {
-            return Err(Error::Config(format!(
-                "skip {} >= itmax {}",
-                self.skip, self.itmax
-            )));
+        if self.max_total_calls == Some(0) {
+            return Err(Error::Config(
+                "max_total_calls must be >= 1 (use None for unlimited)".into(),
+            ));
         }
         self.sampling.validate()?;
+        self.plan.validate()?;
         Ok(())
     }
 
@@ -150,289 +218,435 @@ pub struct DriverOutput {
     pub iteration_estimates: Vec<(f64, f64)>, // (I_j, sigma_j)
 }
 
-/// `drive` result: the integration output plus the adapted grid, ready
-/// to warm-start a later run.
+/// `drive` result: the integration output, the adapted grid (ready to
+/// warm-start a later run), and the typed reason the run ended.
+///
+/// `#[non_exhaustive]`: constructed only inside the crate.
 #[derive(Debug, Clone)]
+#[non_exhaustive]
 pub struct DriveOutcome {
     pub output: IntegrationOutput,
     pub grid: GridState,
+    /// Why the run ended.
+    pub stop: StopReason,
 }
 
-/// Run the two-phase m-Cubes loop on any backend.
+/// A [`RunPlan`] stage with its inherited fields resolved against the
+/// owning [`JobConfig`].
+#[derive(Debug, Clone)]
+pub(crate) struct ResolvedStage {
+    pub(crate) iters: usize,
+    pub(crate) calls: usize,
+    pub(crate) adapt: bool,
+    pub(crate) discard: bool,
+    pub(crate) sampling: Sampling,
+    pub(crate) label: String,
+}
+
+/// Everything one `SessionCore::step` produced — the owned raw
+/// material for both `api::Iteration` and [`IterationEvent`].
+#[derive(Debug, Clone)]
+pub(crate) struct StepRecord {
+    pub(crate) index: usize,
+    pub(crate) stage: usize,
+    pub(crate) adapting: bool,
+    pub(crate) discarded: bool,
+    pub(crate) estimate: crate::estimator::IterationResult,
+    pub(crate) integral: f64,
+    pub(crate) sigma: f64,
+    pub(crate) chi2_dof: f64,
+    pub(crate) rel_err: f64,
+    pub(crate) calls_used: usize,
+    pub(crate) estimator_reset: bool,
+    pub(crate) alloc: Option<AllocStats>,
+    /// The step finished its stage and the cursor moved to the next
+    /// one — backend-owning callers rebuild their backend now.
+    pub(crate) stage_changed: bool,
+    pub(crate) stop: Option<StopReason>,
+}
+
+/// The backend-agnostic m-Cubes iteration state machine: plan cursor,
+/// importance grid, weighted estimator, and stop bookkeeping. One
+/// `step` call advances exactly one iteration on whatever backend the
+/// caller hands in (the caller owns backend lifecycle, so fixed-layout
+/// drives and stage-switching sessions share this core).
+pub(crate) struct SessionCore {
+    stages: Vec<ResolvedStage>,
+    bins: Bins,
+    est: WeightedEstimator,
+    conv: Convergence,
+    stage_idx: usize,
+    stage_iter: usize,
+    iteration: usize,
+    calls_used: usize,
+    kernel_time: f64,
+    stop: Option<StopReason>,
+}
+
+impl SessionCore {
+    /// Fresh core for `cfg` over a `(d, nb)` grid, optionally seeded
+    /// with a warm-start grid (shape- and mode-checked).
+    pub(crate) fn new(
+        cfg: &JobConfig,
+        d: usize,
+        nb: usize,
+        warm: Option<&GridState>,
+    ) -> Result<SessionCore> {
+        cfg.validate()?;
+        let bins = match warm {
+            Some(gs) => {
+                gs.compatible(d, nb)?;
+                if gs.mode() != cfg.grid_mode {
+                    return Err(Error::Config(format!(
+                        "warm-start grid mode {:?} != configured grid mode {:?}; \
+                         adapt the donor in the same mode (or match grid_mode to \
+                         the donor)",
+                        gs.mode(),
+                        cfg.grid_mode
+                    )));
+                }
+                gs.bins().clone()
+            }
+            None => Bins::uniform_mode(d, nb, cfg.grid_mode),
+        };
+        let stages = cfg
+            .plan
+            .stages()
+            .iter()
+            .map(|s| ResolvedStage {
+                iters: s.iters,
+                calls: s.calls.unwrap_or(cfg.maxcalls),
+                adapt: s.adapt,
+                discard: s.discard,
+                sampling: s.sampling.unwrap_or(cfg.sampling),
+                label: s.label(),
+            })
+            .collect();
+        Ok(SessionCore {
+            stages,
+            bins,
+            est: WeightedEstimator::new(),
+            conv: cfg.convergence(),
+            stage_idx: 0,
+            stage_iter: 0,
+            iteration: 0,
+            calls_used: 0,
+            kernel_time: 0.0,
+            stop: None,
+        })
+    }
+
+    /// Rebuild a core from checkpoint state. The cursor must be
+    /// internally consistent (`iteration` equals the iterations the
+    /// completed stages plus `stage_iter` account for).
+    #[allow(clippy::too_many_arguments)]
+    pub(crate) fn restore(
+        cfg: &JobConfig,
+        d: usize,
+        nb: usize,
+        grid: &GridState,
+        est: EstimatorState,
+        stage_idx: usize,
+        stage_iter: usize,
+        iteration: usize,
+        calls_used: usize,
+        stop: Option<StopReason>,
+    ) -> Result<SessionCore> {
+        est.validate()?;
+        let mut core = SessionCore::new(cfg, d, nb, Some(grid))?;
+        if stage_idx > core.stages.len() {
+            return Err(Error::Config(format!(
+                "checkpoint stage {} out of range for a {}-stage plan",
+                stage_idx,
+                core.stages.len()
+            )));
+        }
+        if stage_idx < core.stages.len() && stage_iter >= core.stages[stage_idx].iters {
+            return Err(Error::Config(format!(
+                "checkpoint stage-iteration {} out of range for stage {} \
+                 ({} iterations)",
+                stage_iter, stage_idx, core.stages[stage_idx].iters
+            )));
+        }
+        let done: usize = core.stages[..stage_idx].iter().map(|s| s.iters).sum();
+        if iteration != done + stage_iter {
+            return Err(Error::Config(format!(
+                "checkpoint cursor inconsistent: iteration {iteration} != \
+                 {done} completed-stage iterations + stage_iter {stage_iter}"
+            )));
+        }
+        core.est = WeightedEstimator::from_state(est);
+        core.stage_idx = stage_idx;
+        core.stage_iter = stage_iter;
+        core.iteration = iteration;
+        core.calls_used = calls_used;
+        // A checkpoint of a finished run restores finished (never
+        // silently un-finish a converged/aborted session); one taken
+        // past the last stage is exhausted even without a recorded
+        // stop (pre-stop checkpoint files).
+        core.stop = stop;
+        if core.stop.is_none() && stage_idx >= core.stages.len() {
+            core.stop = Some(StopReason::Exhausted);
+        }
+        Ok(core)
+    }
+
+    pub(crate) fn stages(&self) -> &[ResolvedStage] {
+        &self.stages
+    }
+
+    pub(crate) fn stage_idx(&self) -> usize {
+        self.stage_idx
+    }
+
+    pub(crate) fn stage_iter(&self) -> usize {
+        self.stage_iter
+    }
+
+    pub(crate) fn iteration(&self) -> usize {
+        self.iteration
+    }
+
+    pub(crate) fn calls_used(&self) -> usize {
+        self.calls_used
+    }
+
+    pub(crate) fn bins(&self) -> &Bins {
+        &self.bins
+    }
+
+    pub(crate) fn estimator(&self) -> &WeightedEstimator {
+        &self.est
+    }
+
+    pub(crate) fn estimator_state(&self) -> EstimatorState {
+        self.est.state()
+    }
+
+    pub(crate) fn stop(&self) -> Option<StopReason> {
+        self.stop
+    }
+
+    pub(crate) fn finished(&self) -> bool {
+        self.stop.is_some()
+    }
+
+    /// End the run after the current iteration on the observer's
+    /// behalf (no-op when another stop reason already fired).
+    pub(crate) fn abort(&mut self) {
+        if self.stop.is_none() {
+            self.stop = Some(StopReason::ObserverAbort);
+        }
+    }
+
+    /// Advance exactly one iteration on `backend`. The caller
+    /// guarantees `backend` matches the current stage's layout and
+    /// sampling; `step` must not be called once `finished()`.
+    pub(crate) fn step(
+        &mut self,
+        backend: &dyn VSampleBackend,
+        cfg: &JobConfig,
+    ) -> Result<StepRecord> {
+        debug_assert!(self.stop.is_none(), "stepping a finished session");
+        let stage_idx = self.stage_idx;
+        let stage = &self.stages[stage_idx];
+        let t0 = Instant::now();
+        let (r, contrib) = backend.run(&self.bins, cfg.seed, self.iteration as u32, stage.adapt)?;
+        self.kernel_time += t0.elapsed().as_secs_f64();
+        self.calls_used += backend.layout().calls();
+        let index = self.iteration;
+        self.iteration += 1;
+        self.stage_iter += 1;
+
+        if !stage.discard {
+            self.est.push(r);
+        }
+
+        // Grid refinement happens before the stop decision so a
+        // converged final iteration still leaves an adapted grid behind.
+        let mut estimator_reset = false;
+        if stage.adapt {
+            if let Some(c) = contrib {
+                self.bins.adjust(&c);
+            }
+            if cfg.reset_on_inconsistency
+                && self.est.iterations() >= 2
+                && self.est.chi2_dof() > self.conv.max_chi2_dof
+            {
+                // Importance grid was still moving: drop the stale
+                // estimates, keep the (better) grid.
+                self.est.reset();
+                estimator_reset = true;
+            }
+        }
+
+        let stage_changed = if self.stage_iter >= stage.iters {
+            self.stage_idx += 1;
+            self.stage_iter = 0;
+            true
+        } else {
+            false
+        };
+
+        if self.conv.satisfied(&self.est) {
+            self.stop = Some(StopReason::Converged);
+        } else if cfg
+            .max_total_calls
+            .is_some_and(|target| self.calls_used >= target)
+        {
+            self.stop = Some(StopReason::TargetCallsReached);
+        } else if self.stage_idx >= self.stages.len() {
+            self.stop = Some(StopReason::Exhausted);
+        }
+
+        Ok(StepRecord {
+            index,
+            stage: stage_idx,
+            adapting: self.stages[stage_idx].adapt,
+            discarded: self.stages[stage_idx].discard,
+            estimate: r,
+            integral: self.est.integral(),
+            sigma: self.est.sigma(),
+            chi2_dof: self.est.chi2_dof(),
+            rel_err: self.est.rel_err(),
+            calls_used: self.calls_used,
+            estimator_reset,
+            alloc: backend.alloc_stats(),
+            stage_changed: stage_changed && self.stop.is_none(),
+            stop: self.stop,
+        })
+    }
+
+    /// Observer event for a step record (borrows the live grid).
+    pub(crate) fn event<'s>(&'s self, rec: &StepRecord) -> IterationEvent<'s> {
+        IterationEvent {
+            iteration: rec.index,
+            stage: rec.stage,
+            stage_label: &self.stages[rec.stage].label,
+            adjusting: rec.adapting,
+            discarded: rec.discarded,
+            estimate: rec.estimate,
+            integral: rec.integral,
+            sigma: rec.sigma,
+            chi2_dof: rec.chi2_dof,
+            rel_err: rec.rel_err,
+            calls_used: rec.calls_used,
+            estimator_reset: rec.estimator_reset,
+            converged: rec.stop == Some(StopReason::Converged),
+            stop: rec.stop,
+            alloc: rec.alloc,
+            grid: &self.bins,
+        }
+    }
+
+    /// Assemble the final output (the run must be finished).
+    pub(crate) fn into_outcome(
+        self,
+        backend_name: &'static str,
+        strat: Option<crate::api::StratSnapshot>,
+        total_time: f64,
+    ) -> DriveOutcome {
+        let stop = self.stop.unwrap_or(StopReason::Exhausted);
+        let output = IntegrationOutput {
+            integral: self.est.integral(),
+            sigma: self.est.sigma(),
+            chi2_dof: self.est.chi2_dof(),
+            rel_err: self.est.rel_err(),
+            iterations: self.iteration,
+            converged: stop == StopReason::Converged,
+            calls_used: self.calls_used,
+            total_time,
+            kernel_time: self.kernel_time,
+            backend: backend_name,
+        };
+        let mut grid = GridState::from_bins(self.bins);
+        if let Some(s) = strat {
+            grid = grid.with_strat(s);
+        }
+        DriveOutcome {
+            output,
+            grid,
+            stop,
+        }
+    }
+}
+
+/// Run the two-phase m-Cubes loop on any fixed-layout backend — a thin
+/// observer loop over [`SessionCore`].
 ///
 /// * `warm_start` — adapted grid from a previous run. Must match the
 ///   backend layout's `(d, nb)` and `cfg.grid_mode` — a mismatch is a
 ///   config error, never a silent override. `None` starts from a
 ///   uniform grid.
 /// * `observer` — called once per iteration with an
-///   [`IterationEvent`] after grid adjustment and the convergence
-///   decision.
+///   [`IterationEvent`] after grid adjustment and the stop decision;
+///   returning [`ObserverControl::Abort`] ends the run with
+///   [`StopReason::ObserverAbort`].
+///
+/// Because the backend's layout is fixed, plans with per-stage
+/// `calls`/`sampling` overrides are rejected here — use
+/// `api::Session` (native engine) for those.
 pub fn drive(
     backend: &dyn VSampleBackend,
     cfg: &JobConfig,
     warm_start: Option<&GridState>,
-    mut observer: Option<&mut dyn FnMut(&IterationEvent)>,
+    mut observer: Option<&mut dyn FnMut(&IterationEvent) -> ObserverControl>,
 ) -> Result<DriveOutcome> {
     cfg.validate()?;
+    for (i, stage) in cfg.plan.stages().iter().enumerate() {
+        let calls_override = stage.calls.is_some_and(|c| c != cfg.maxcalls);
+        let sampling_override = stage.sampling.is_some_and(|s| s != cfg.sampling);
+        if calls_override || sampling_override {
+            return Err(Error::Config(format!(
+                "run plan stage {i} overrides the per-stage calls/sampling, \
+                 but this backend's layout is fixed — per-stage overrides \
+                 require the native-engine session (`api::Session` / \
+                 `api::Integrator`)"
+            )));
+        }
+    }
     let layout = backend.layout();
-    let conv = cfg.convergence();
-    let mut bins = match warm_start {
-        Some(gs) => {
-            gs.compatible(layout.d, layout.nb)?;
-            if gs.mode() != cfg.grid_mode {
-                return Err(Error::Config(format!(
-                    "warm-start grid mode {:?} != configured grid mode {:?}; \
-                     adapt the donor in the same mode (or match grid_mode to \
-                     the donor)",
-                    gs.mode(),
-                    cfg.grid_mode
-                )));
-            }
-            gs.bins().clone()
-        }
-        None => Bins::uniform_mode(layout.d, layout.nb, cfg.grid_mode),
-    };
-    let mut est = WeightedEstimator::new();
-
+    let mut core = SessionCore::new(cfg, layout.d, layout.nb, warm_start)?;
     let t_start = Instant::now();
-    let mut kernel_time = 0.0f64;
-    let mut calls_used = 0usize;
-    let mut iterations = 0usize;
-    let mut converged = false;
-
-    for it in 0..cfg.itmax {
-        let adjust = it < cfg.ita;
-        let t0 = Instant::now();
-        let (r, contrib) = backend.run(&bins, cfg.seed, it as u32, adjust)?;
-        kernel_time += t0.elapsed().as_secs_f64();
-        calls_used += layout.calls();
-        iterations += 1;
-
-        if it >= cfg.skip {
-            est.push(r);
-        }
-
-        // Grid refinement happens before the convergence decision so a
-        // converged final iteration still leaves an adapted grid behind.
-        let mut estimator_reset = false;
-        if adjust {
-            if let Some(c) = contrib {
-                bins.adjust(&c);
-            }
-            if cfg.reset_on_inconsistency
-                && est.iterations() >= 2
-                && est.chi2_dof() > conv.max_chi2_dof
-            {
-                // Importance grid was still moving: drop the stale
-                // estimates, keep the (better) grid.
-                est.reset();
-                estimator_reset = true;
-            }
-        }
-
-        if conv.satisfied(&est) {
-            converged = true;
-        }
-
+    while !core.finished() {
+        let rec = core.step(backend, cfg)?;
         if let Some(cb) = observer.as_mut() {
-            cb(&IterationEvent {
-                iteration: it,
-                adjusting: adjust,
-                estimate: r,
-                integral: est.integral(),
-                sigma: est.sigma(),
-                chi2_dof: est.chi2_dof(),
-                rel_err: est.rel_err(),
-                estimator_reset,
-                converged,
-                alloc: backend.alloc_stats(),
-                grid: &bins,
-            });
-        }
-
-        if converged {
-            break;
+            if cb(&core.event(&rec)) == ObserverControl::Abort {
+                core.abort();
+            }
         }
     }
-
-    let output = IntegrationOutput {
-        integral: est.integral(),
-        sigma: est.sigma(),
-        chi2_dof: est.chi2_dof(),
-        rel_err: est.rel_err(),
-        iterations,
-        converged,
-        calls_used,
-        total_time: t_start.elapsed().as_secs_f64(),
-        kernel_time,
-        backend: backend.name(),
-    };
-    Ok(DriveOutcome {
-        output,
-        grid: GridState::from_bins(bins),
-    })
+    let strat = backend.strat_export();
+    Ok(core.into_outcome(backend.name(), strat, t_start.elapsed().as_secs_f64()))
 }
 
-/// Thin adapter: run a `&dyn Integrand` on the native engine without
-/// requiring an `Arc`.
-struct BorrowedNative<'a> {
-    f: &'a dyn Integrand,
-    layout: Layout,
-    threads: usize,
-}
-
-impl<'a> VSampleBackend for BorrowedNative<'a> {
-    fn layout(&self) -> Layout {
-        self.layout
-    }
-
-    fn bounds(&self) -> crate::strat::Bounds {
-        self.f.bounds()
-    }
-
-    fn name(&self) -> &'static str {
-        "native"
-    }
-
-    fn run(
-        &self,
-        bins: &Bins,
-        seed: u32,
-        iteration: u32,
-        adjust: bool,
-    ) -> Result<(crate::estimator::IterationResult, Option<Vec<f64>>)> {
-        let opts = crate::engine::VSampleOpts {
-            seed,
-            iteration,
-            adjust,
-            threads: self.threads,
-        };
-        Ok(crate::engine::NativeEngine.vsample(self.f, &self.layout, bins, &opts))
-    }
-}
-
-/// Mutable per-run state of the stratified backend: the live
-/// allocation plus the stats snapshot of the iteration that just ran.
-struct StratCell {
-    alloc: Allocation,
-    last: Option<AllocStats>,
-}
-
-/// VEGAS+ stratified twin of [`BorrowedNative`]: drives
-/// `engine::stratified::vsample_stratified` with a live [`Allocation`],
-/// re-apportioning the per-iteration budget after every pass. The
-/// driver itself stays allocation-agnostic — it only sees the
-/// `VSampleBackend` contract plus `alloc_stats` for observers.
-struct BorrowedStratified<'a> {
-    f: &'a dyn Integrand,
-    layout: Layout,
-    threads: usize,
-    beta: f64,
-    /// Per-iteration call budget (`layout.calls()`, matching the
-    /// uniform engine so `calls_used` accounting is identical).
-    budget: usize,
-    state: RefCell<StratCell>,
-}
-
-impl<'a> VSampleBackend for BorrowedStratified<'a> {
-    fn layout(&self) -> Layout {
-        self.layout
-    }
-
-    fn bounds(&self) -> crate::strat::Bounds {
-        self.f.bounds()
-    }
-
-    fn name(&self) -> &'static str {
-        "native-vegas+"
-    }
-
-    fn run(
-        &self,
-        bins: &Bins,
-        seed: u32,
-        iteration: u32,
-        adjust: bool,
-    ) -> Result<(crate::estimator::IterationResult, Option<Vec<f64>>)> {
-        let mut cell = self.state.borrow_mut();
-        let StratCell { alloc, last } = &mut *cell;
-        *last = Some(alloc.stats());
-        let opts = crate::engine::VSampleOpts {
-            seed,
-            iteration,
-            adjust,
-            threads: self.threads,
-        };
-        let out = vsample_stratified(self.f, &self.layout, bins, alloc, &opts);
-        // Re-apportion for the next iteration from the freshly damped
-        // accumulator (cheap; also leaves the exported snapshot ready
-        // for warm starts even when this was the final iteration).
-        alloc.reallocate(self.budget, self.beta);
-        Ok(out)
-    }
-
-    fn alloc_stats(&self) -> Option<AllocStats> {
-        self.state.borrow().last
-    }
-}
-
-/// Native-engine drive over a borrowed integrand — the shared core the
-/// facade, the service, and the deprecated shims all call. Dispatches
-/// on `cfg.sampling` between the uniform m-Cubes engine and the VEGAS+
-/// stratified path.
+/// Native-engine drive over an integrand handle — the shared core the
+/// facade, the scheduler, and the deprecated shims all call. Builds an
+/// `api::Session` (which dispatches per stage between the uniform
+/// m-Cubes engine and the VEGAS+ stratified path) and drains it,
+/// firing observers.
 pub(crate) fn integrate_native_core(
-    f: &dyn Integrand,
+    f: &IntegrandRef,
     cfg: &JobConfig,
     warm_start: Option<&GridState>,
-    observer: Option<&mut dyn FnMut(&IterationEvent)>,
+    mut observer: Option<&mut dyn FnMut(&IterationEvent) -> ObserverControl>,
 ) -> Result<DriveOutcome> {
-    cfg.validate()?;
-    let layout = Layout::compute(f.dim(), cfg.maxcalls, cfg.nb, cfg.nblocks)?;
-    match cfg.sampling {
-        Sampling::Uniform => {
-            let backend = BorrowedNative {
-                f,
-                layout,
-                threads: cfg.threads,
-            };
-            drive(&backend, cfg, warm_start, observer)
-        }
-        Sampling::VegasPlus { beta } => {
-            // Resume the donor's allocation when its layout matches;
-            // allocations are per-cube state, so a different cube
-            // count (different maxcalls) starts fresh while the
-            // importance grid still warm-starts. The re-apportion
-            // below is a pure function of (damped, budget, beta): for
-            // a matching budget it reproduces the snapshot's counts
-            // bit-for-bit, and for a same-m / different-p layout
-            // (escalation can hit this) it corrects the counts to the
-            // new call budget instead of silently under-sampling.
-            let alloc = match warm_start.and_then(|gs| gs.strat()) {
-                Some(s) if s.counts.len() == layout.m => {
-                    let mut a = Allocation::from_parts(s.counts.clone(), s.damped.clone())?;
-                    a.reallocate(layout.calls(), beta);
-                    a
-                }
-                _ => Allocation::uniform(&layout),
-            };
-            let backend = BorrowedStratified {
-                f,
-                layout,
-                threads: cfg.threads,
-                beta,
-                budget: layout.calls(),
-                state: RefCell::new(StratCell { alloc, last: None }),
-            };
-            let mut outcome = drive(&backend, cfg, warm_start, observer)?;
-            let cell = backend.state.into_inner();
-            outcome.grid = outcome.grid.with_strat(StratSnapshot {
-                beta,
-                counts: cell.alloc.counts().to_vec(),
-                damped: cell.alloc.damped().to_vec(),
-            });
-            Ok(outcome)
+    let mut session = match warm_start {
+        Some(grid) => Session::resume(
+            f.clone(),
+            cfg.clone(),
+            &Checkpoint::from_grid(grid.clone()),
+        )?,
+        None => Session::new(f.clone(), cfg.clone())?,
+    };
+    while let Some(iteration) = session.step()? {
+        if let Some(cb) = observer.as_mut() {
+            if cb(&session.event(&iteration)) == ObserverControl::Abort {
+                session.abort();
+            }
         }
     }
+    session.finish()
 }
 
 /// Escalating-precision native integration: runs the driver at
@@ -440,13 +654,14 @@ pub(crate) fn integrate_native_core(
 /// met, genuinely carrying the adapted grid across levels — the
 /// strategy behind the paper's high-precision runs (Fig. 1/2).
 /// Iteration indices in observer events are cumulative across levels.
+/// A `max_total_calls` budget spans all levels.
 pub(crate) fn escalate_native(
-    f: &dyn Integrand,
+    f: &IntegrandRef,
     base: &JobConfig,
     max_escalations: usize,
     factor: usize,
     warm_start: Option<&GridState>,
-    mut observer: Option<&mut dyn FnMut(&IterationEvent)>,
+    mut observer: Option<&mut dyn FnMut(&IterationEvent) -> ObserverControl>,
 ) -> Result<DriveOutcome> {
     if factor < 2 {
         return Err(Error::Config(format!(
@@ -461,6 +676,13 @@ pub(crate) fn escalate_native(
     let mut calls_used = 0;
     let mut iterations = 0;
     for level in 0..=max_escalations {
+        if let Some(target) = base.max_total_calls {
+            if calls_used >= target {
+                break;
+            }
+            // The budget spans levels: hand each level the remainder.
+            cfg.max_total_calls = Some(target - calls_used);
+        }
         let outcome = {
             let base_it = iterations;
             match observer.as_deref_mut() {
@@ -480,7 +702,7 @@ pub(crate) fn escalate_native(
         kernel_time += outcome.output.kernel_time;
         calls_used += outcome.output.calls_used;
         iterations += outcome.output.iterations;
-        let converged = outcome.output.converged;
+        let stop = outcome.stop;
         grid = Some(outcome.grid.clone());
         last = Some(DriveOutcome {
             output: IntegrationOutput {
@@ -491,8 +713,11 @@ pub(crate) fn escalate_native(
                 ..outcome.output
             },
             grid: outcome.grid,
+            stop,
         });
-        if converged {
+        // Escalate only past an exhausted plan; a converged run is
+        // done, and an abort or spent call budget must be honored.
+        if stop != StopReason::Exhausted {
             break;
         }
         if level < max_escalations {
@@ -528,6 +753,7 @@ pub fn run_driver_traced(
     let mut estimates: Vec<(f64, f64)> = Vec::new();
     let mut cb = |ev: &IterationEvent| {
         estimates.push((ev.estimate.integral, ev.estimate.variance.sqrt()));
+        ObserverControl::Continue
     };
     let outcome = drive(backend, cfg, None, Some(&mut cb))?;
     let trace = DriverOutput {
@@ -538,9 +764,15 @@ pub fn run_driver_traced(
 }
 
 /// Convenience: integrate `f` with the native engine.
+///
+/// Breaking in 0.3.0: the shim now takes the shared [`IntegrandRef`]
+/// handle (`by_name` and the `Fn*Integrand::into_ref` builders already
+/// return one) instead of `&dyn Integrand` — the session core owns its
+/// integrand across stage rebuilds. Call sites holding an
+/// `IntegrandRef` change `&*f` to `&f`.
 #[cfg(feature = "legacy-api")]
 #[deprecated(since = "0.2.0", note = "use `api::Integrator::new(f).run()` instead")]
-pub fn integrate_native(f: &dyn Integrand, cfg: &JobConfig) -> Result<IntegrationOutput> {
+pub fn integrate_native(f: &IntegrandRef, cfg: &JobConfig) -> Result<IntegrationOutput> {
     integrate_native_core(f, cfg, None, None).map(|o| o.output)
 }
 
@@ -551,7 +783,7 @@ pub fn integrate_native(f: &dyn Integrand, cfg: &JobConfig) -> Result<Integratio
     note = "use `api::Integrator::new(f).escalate(levels, factor).run()` instead"
 )]
 pub fn integrate_native_adaptive(
-    f: &dyn Integrand,
+    f: &IntegrandRef,
     base: &JobConfig,
     max_escalations: usize,
     escalation_factor: usize,
@@ -563,22 +795,26 @@ pub fn integrate_native_adaptive(
 mod tests {
     use super::*;
     use crate::integrands::by_name;
+    use crate::strat::Layout;
 
     fn cfg(calls: usize, tau: f64) -> JobConfig {
         JobConfig {
             maxcalls: calls,
             nb: 50,
             tau_rel: tau,
-            itmax: 15,
-            ita: 10,
-            skip: 2,
+            plan: RunPlan::classic(15, 10, 2),
             seed: 11,
             threads: 4,
             ..Default::default()
         }
     }
 
-    fn integrate(f: &dyn Integrand, c: &JobConfig) -> Result<IntegrationOutput> {
+    fn with_plan(mut c: JobConfig, itmax: usize, ita: usize, skip: usize) -> JobConfig {
+        c.plan = RunPlan::classic(itmax, ita, skip);
+        c
+    }
+
+    fn integrate(f: &IntegrandRef, c: &JobConfig) -> Result<IntegrationOutput> {
         integrate_native_core(f, c, None, None).map(|o| o.output)
     }
 
@@ -586,7 +822,7 @@ mod tests {
     fn converges_on_smooth_integrands() {
         for (name, d, calls) in [("f5", 8, 1 << 15), ("f3", 3, 1 << 14), ("f2", 6, 1 << 15)] {
             let f = by_name(name, d).unwrap();
-            let out = integrate(&*f, &cfg(calls, 1e-3)).unwrap();
+            let out = integrate(&f, &cfg(calls, 1e-3)).unwrap();
             assert!(out.converged, "{name} did not converge: {out:?}");
             let truth = f.true_value().unwrap();
             let rel = ((out.integral - truth) / truth).abs();
@@ -600,7 +836,7 @@ mod tests {
     fn error_estimate_is_honest() {
         // |estimate - truth| should usually be within ~3 claimed sigmas.
         let f = by_name("f4", 5).unwrap();
-        let out = integrate(&*f, &cfg(1 << 15, 1e-3)).unwrap();
+        let out = integrate(&f, &cfg(1 << 15, 1e-3)).unwrap();
         let truth = f.true_value().unwrap();
         assert!(
             (out.integral - truth).abs() < 4.0 * out.sigma,
@@ -613,11 +849,9 @@ mod tests {
     #[test]
     fn two_phase_runs_na_iterations() {
         let f = by_name("f5", 4).unwrap();
-        let mut c = cfg(1 << 12, 1e-12); // unreachable tau: run all iters
-        c.itmax = 6;
-        c.ita = 3;
-        c.skip = 0;
-        let out = integrate(&*f, &c).unwrap();
+        // unreachable tau: run all iters
+        let c = with_plan(cfg(1 << 12, 1e-12), 6, 3, 0);
+        let out = integrate(&f, &c).unwrap();
         assert!(!out.converged);
         assert_eq!(out.iterations, 6);
         assert_eq!(
@@ -627,63 +861,86 @@ mod tests {
     }
 
     #[test]
+    fn exhausted_and_converged_stop_reasons() {
+        let f = by_name("f5", 4).unwrap();
+        let c = with_plan(cfg(1 << 12, 1e-12), 4, 2, 0);
+        let out = integrate_native_core(&f, &c, None, None).unwrap();
+        assert_eq!(out.stop, StopReason::Exhausted);
+        assert!(!out.output.converged);
+
+        let c = cfg(1 << 14, 1e-3);
+        let out = integrate_native_core(&f, &c, None, None).unwrap();
+        assert_eq!(out.stop, StopReason::Converged);
+        assert!(out.output.converged);
+    }
+
+    #[test]
+    fn target_calls_budget_stops_the_run() {
+        let f = by_name("f5", 4).unwrap();
+        let mut c = with_plan(cfg(1 << 12, 1e-12), 10, 5, 0);
+        let per_iter = Layout::compute(4, 1 << 12, 50, 8).unwrap().calls();
+        c.max_total_calls = Some(3 * per_iter);
+        let out = integrate_native_core(&f, &c, None, None).unwrap();
+        assert_eq!(out.stop, StopReason::TargetCallsReached);
+        assert_eq!(out.output.iterations, 3);
+        assert_eq!(out.output.calls_used, 3 * per_iter);
+        // A budget that lands mid-iteration still finishes it.
+        c.max_total_calls = Some(3 * per_iter - 1);
+        let out = integrate_native_core(&f, &c, None, None).unwrap();
+        assert_eq!(out.output.iterations, 3);
+    }
+
+    #[test]
     fn validates_config() {
         let f = by_name("f4", 5).unwrap();
-        let mut c = cfg(1 << 12, 1e-3);
-        c.ita = 99;
-        c.itmax = 5;
-        assert!(integrate(&*f, &c).is_err());
-        let mut c2 = cfg(1 << 12, 1e-3);
-        c2.skip = 20;
-        c2.itmax = 10;
-        assert!(integrate(&*f, &c2).is_err());
+        // Discard-only classic schedule (skip >= itmax) is rejected.
+        let c2 = with_plan(cfg(1 << 12, 1e-3), 10, 7, 20);
+        let err = integrate(&f, &c2).unwrap_err().to_string();
+        assert!(err.contains("discards every stage"), "{err}");
+        // Empty plan (itmax 0) is rejected.
+        let c3 = with_plan(cfg(1 << 12, 1e-3), 0, 0, 0);
+        assert!(integrate(&f, &c3).is_err());
     }
 
     #[test]
     fn validate_rejects_zero_budget_and_shape() {
         assert!(JobConfig::default().validate().is_ok());
 
-        let zero_calls = JobConfig {
-            maxcalls: 0,
-            ..Default::default()
-        };
-        let err = zero_calls.validate().unwrap_err().to_string();
+        let err = JobConfig::default()
+            .with_maxcalls(0)
+            .validate()
+            .unwrap_err()
+            .to_string();
         assert!(err.contains("maxcalls"), "{err}");
-        assert!(JobConfig {
-            maxcalls: 3,
-            ..Default::default()
-        }
-        .validate()
-        .is_err());
+        assert!(JobConfig::default().with_maxcalls(3).validate().is_err());
 
-        let zero_nb = JobConfig {
-            nb: 0,
-            ..Default::default()
-        };
-        let err = zero_nb.validate().unwrap_err().to_string();
+        let err = JobConfig::default()
+            .with_bins(0)
+            .validate()
+            .unwrap_err()
+            .to_string();
         assert!(err.contains("nb"), "{err}");
-        assert!(JobConfig {
-            nb: 1,
-            ..Default::default()
-        }
-        .validate()
-        .is_err());
 
-        let zero_blocks = JobConfig {
-            nblocks: 0,
-            ..Default::default()
-        };
-        let err = zero_blocks.validate().unwrap_err().to_string();
+        let err = JobConfig::default()
+            .with_blocks(0)
+            .validate()
+            .unwrap_err()
+            .to_string();
         assert!(err.contains("nblocks"), "{err}");
+
+        let err = JobConfig::default()
+            .with_call_budget(0)
+            .validate()
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("max_total_calls"), "{err}");
     }
 
     #[test]
     fn adaptive_escalates_until_converged() {
         let f = by_name("f4", 8).unwrap();
-        let mut base = cfg(1 << 12, 1e-3);
-        base.itmax = 10;
-        base.ita = 8;
-        let out = escalate_native(&*f, &base, 4, 4, None, None).unwrap().output;
+        let base = with_plan(cfg(1 << 12, 1e-3), 10, 8, 2);
+        let out = escalate_native(&f, &base, 4, 4, None, None).unwrap().output;
         assert!(out.converged, "{out:?}");
         let truth = f.true_value().unwrap();
         let rel = ((out.integral - truth) / truth).abs();
@@ -693,10 +950,9 @@ mod tests {
     #[test]
     fn onedim_mode_works_on_symmetric() {
         let f = by_name("f4", 5).unwrap();
-        let mut c = cfg(1 << 15, 1e-3);
-        c.itmax = 20;
+        let mut c = with_plan(cfg(1 << 15, 1e-3), 20, 10, 2);
         c.grid_mode = GridMode::Shared1D;
-        let out = integrate(&*f, &c).unwrap();
+        let out = integrate(&f, &c).unwrap();
         assert!(out.converged, "{out:?}");
         let truth = f.true_value().unwrap();
         assert!(((out.integral - truth) / truth).abs() < 5e-3);
@@ -705,8 +961,8 @@ mod tests {
     #[test]
     fn seed_reproducibility() {
         let f = by_name("f3", 3).unwrap();
-        let a = integrate(&*f, &cfg(1 << 13, 1e-3)).unwrap();
-        let b = integrate(&*f, &cfg(1 << 13, 1e-3)).unwrap();
+        let a = integrate(&f, &cfg(1 << 13, 1e-3)).unwrap();
+        let b = integrate(&f, &cfg(1 << 13, 1e-3)).unwrap();
         assert_eq!(a.integral, b.integral);
         assert_eq!(a.sigma, b.sigma);
     }
@@ -714,59 +970,127 @@ mod tests {
     #[test]
     fn observer_sees_every_iteration() {
         let f = by_name("f5", 4).unwrap();
-        let mut c = cfg(1 << 12, 1e-12);
-        c.itmax = 5;
-        c.ita = 3;
-        c.skip = 0;
+        let c = with_plan(cfg(1 << 12, 1e-12), 5, 3, 0);
         let mut seen: Vec<(usize, bool, bool)> = Vec::new();
         let mut cb = |ev: &IterationEvent| {
             assert!(ev.grid.validate().is_ok());
             seen.push((ev.iteration, ev.adjusting, ev.converged));
+            ObserverControl::Continue
         };
-        let out = integrate_native_core(&*f, &c, None, Some(&mut cb))
+        let out = integrate_native_core(&f, &c, None, Some(&mut cb))
             .unwrap()
             .output;
         assert_eq!(seen.len(), out.iterations);
         for (i, &(it, adjusting, _)) in seen.iter().enumerate() {
             assert_eq!(it, i);
-            assert_eq!(adjusting, i < c.ita);
+            assert_eq!(adjusting, i < 3);
         }
         assert!(!seen.last().unwrap().2, "tau 1e-12 must not converge");
     }
 
     #[test]
+    fn observer_abort_stops_the_run() {
+        let f = by_name("f5", 4).unwrap();
+        let c = with_plan(cfg(1 << 12, 1e-12), 8, 4, 0);
+        let mut fired = 0usize;
+        let mut cb = |ev: &IterationEvent| {
+            fired += 1;
+            if ev.iteration >= 2 {
+                ObserverControl::Abort
+            } else {
+                ObserverControl::Continue
+            }
+        };
+        let out = integrate_native_core(&f, &c, None, Some(&mut cb)).unwrap();
+        assert_eq!(out.stop, StopReason::ObserverAbort);
+        assert_eq!(out.output.iterations, 3);
+        assert_eq!(fired, 3);
+        assert!(!out.output.converged);
+    }
+
+    #[test]
     fn warm_start_reuses_grid_shape() {
         let f = by_name("f4", 5).unwrap();
-        let donor = integrate_native_core(&*f, &cfg(1 << 13, 1e-3), None, None).unwrap();
+        let donor = integrate_native_core(&f, &cfg(1 << 13, 1e-3), None, None).unwrap();
         // Mismatched nb must be rejected with a clear error.
         let mut c = cfg(1 << 13, 1e-3);
         c.nb = 32;
-        let err = integrate_native_core(&*f, &c, Some(&donor.grid), None)
+        let err = integrate_native_core(&f, &c, Some(&donor.grid), None)
             .unwrap_err()
             .to_string();
         assert!(err.contains("warm-start"), "{err}");
         // Mismatched grid mode is rejected too (no silent override).
         let mut c_mode = cfg(1 << 13, 1e-3);
         c_mode.grid_mode = GridMode::Shared1D;
-        let err = integrate_native_core(&*f, &c_mode, Some(&donor.grid), None)
+        let err = integrate_native_core(&f, &c_mode, Some(&donor.grid), None)
             .unwrap_err()
             .to_string();
         assert!(err.contains("grid mode"), "{err}");
         // Matching shape is accepted.
-        let warm = integrate_native_core(&*f, &cfg(1 << 13, 1e-3), Some(&donor.grid), None);
+        let warm = integrate_native_core(&f, &cfg(1 << 13, 1e-3), Some(&donor.grid), None);
         assert!(warm.is_ok());
+    }
+
+    #[test]
+    fn per_stage_overrides_rejected_on_fixed_backends() {
+        use crate::api::Stage;
+        use crate::coordinator::NativeBackend;
+        let f = by_name("f3", 3).unwrap();
+        let mut c = cfg(1 << 12, 1e-3);
+        c.plan = RunPlan::warmup_then_final(2, 1 << 10, 3);
+        let layout = Layout::compute(3, c.maxcalls, c.nb, c.nblocks).unwrap();
+        let backend = NativeBackend::new(f.clone(), layout, 2);
+        let err = drive(&backend, &c, None, None).unwrap_err().to_string();
+        assert!(err.contains("per-stage overrides"), "{err}");
+        // A sampling override is equally rejected.
+        let mut c2 = cfg(1 << 12, 1e-3);
+        c2.plan = RunPlan::new(vec![
+            Stage::adapt(2).with_sampling(Sampling::vegas_plus()),
+            Stage::sample(2),
+        ]);
+        assert!(drive(&backend, &c2, None, None).is_err());
+        // ...but the same plan runs on the native session path.
+        let out = integrate_native_core(&f, &c, None, None).unwrap();
+        assert_eq!(out.output.iterations, 5);
+    }
+
+    #[test]
+    fn warmup_then_final_runs_both_stages() {
+        let f = by_name("f4", 5).unwrap();
+        let mut c = cfg(1 << 13, 1e-12); // unreachable tau: fixed work
+        c.plan = RunPlan::warmup_then_final(3, 1 << 11, 4);
+        let mut stages: Vec<(usize, String, bool, bool)> = Vec::new();
+        let mut cb = |ev: &IterationEvent| {
+            stages.push((
+                ev.stage,
+                ev.stage_label.to_string(),
+                ev.adjusting,
+                ev.discarded,
+            ));
+            ObserverControl::Continue
+        };
+        let out = integrate_native_core(&f, &c, None, Some(&mut cb)).unwrap();
+        assert_eq!(out.output.iterations, 7);
+        let warm_calls = Layout::compute(5, 1 << 11, 50, 8).unwrap().calls();
+        let final_calls = Layout::compute(5, 1 << 13, 50, 8).unwrap().calls();
+        assert_eq!(out.output.calls_used, 3 * warm_calls + 4 * final_calls);
+        for (i, (stage, label, adjusting, discarded)) in stages.iter().enumerate() {
+            if i < 3 {
+                assert_eq!((*stage, *adjusting, *discarded), (0, true, true), "{label}");
+            } else {
+                assert_eq!((*stage, *adjusting, *discarded), (1, false, false), "{label}");
+            }
+        }
     }
 
     #[test]
     fn vegas_plus_converges_and_is_honest() {
         let f = by_name("f4", 5).unwrap();
-        let mut c = cfg(1 << 16, 1e-3);
-        c.itmax = 20;
-        c.ita = 12;
+        let mut c = with_plan(cfg(1 << 16, 1e-3), 20, 12, 2);
         c.seed = 5;
         c.threads = 2;
         c.sampling = Sampling::vegas_plus();
-        let out = integrate(&*f, &c).unwrap();
+        let out = integrate(&f, &c).unwrap();
         assert!(out.converged, "{out:?}");
         assert_eq!(out.backend, "native-vegas+");
         let truth = f.true_value().unwrap();
@@ -784,12 +1108,10 @@ mod tests {
         // engines share the fixed-task reduction — whole runs agree
         // bit for bit, importance-grid evolution included.
         let f = by_name("f3", 3).unwrap();
-        let mut c = cfg(1 << 13, 1e-3);
-        c.itmax = 8;
-        c.ita = 5;
-        let uni = integrate(&*f, &c).unwrap();
+        let mut c = with_plan(cfg(1 << 13, 1e-3), 8, 5, 2);
+        let uni = integrate(&f, &c).unwrap();
         c.sampling = Sampling::VegasPlus { beta: 0.0 };
-        let vp = integrate(&*f, &c).unwrap();
+        let vp = integrate(&f, &c).unwrap();
         assert_eq!(uni.integral.to_bits(), vp.integral.to_bits());
         assert_eq!(uni.sigma.to_bits(), vp.sigma.to_bits());
         assert_eq!(uni.iterations, vp.iterations);
@@ -799,13 +1121,11 @@ mod tests {
     fn vegas_plus_bitwise_across_thread_counts() {
         let f = by_name("f4", 5).unwrap();
         let run = |threads: usize| {
-            let mut c = cfg(4096, 1e-15); // fixed work: run all iterations
-            c.itmax = 6;
-            c.ita = 4;
-            c.skip = 0;
+            // fixed work: run all iterations
+            let mut c = with_plan(cfg(4096, 1e-15), 6, 4, 0);
             c.threads = threads;
             c.sampling = Sampling::vegas_plus();
-            integrate(&*f, &c).unwrap()
+            integrate(&f, &c).unwrap()
         };
         let a = run(1);
         let b = run(4);
@@ -821,13 +1141,11 @@ mod tests {
         // sigma on a sharply peaked integrand.
         let f = by_name("f4", 5).unwrap();
         let mk = |sampling: Sampling| {
-            let mut c = cfg(4096, 1e-15);
-            c.itmax = 10;
-            c.ita = 8;
+            let mut c = with_plan(cfg(4096, 1e-15), 10, 8, 2);
             c.seed = 5;
             c.threads = 2;
             c.sampling = sampling;
-            integrate(&*f, &c).unwrap()
+            integrate(&f, &c).unwrap()
         };
         let uni = mk(Sampling::Uniform);
         let vp = mk(Sampling::vegas_plus());
@@ -846,7 +1164,7 @@ mod tests {
         for beta in [-0.5, 1.5, f64::NAN] {
             let mut c = cfg(1 << 12, 1e-3);
             c.sampling = Sampling::VegasPlus { beta };
-            let err = integrate(&*f, &c).unwrap_err().to_string();
+            let err = integrate(&f, &c).unwrap_err().to_string();
             assert!(err.contains("beta"), "{err}");
         }
     }
@@ -856,12 +1174,9 @@ mod tests {
         // f4 d=5 at 4096 calls: g=4, m=1024, p=4 — enough per-cube
         // headroom (p > 2) for the allocation to actually move.
         let f = by_name("f4", 5).unwrap();
-        let mut c = cfg(4096, 1e-15);
-        c.itmax = 6;
-        c.ita = 4;
-        c.skip = 0;
+        let mut c = with_plan(cfg(4096, 1e-15), 6, 4, 0);
         c.sampling = Sampling::vegas_plus();
-        let donor = integrate_native_core(&*f, &c, None, None).unwrap();
+        let donor = integrate_native_core(&f, &c, None, None).unwrap();
         let layout = Layout::compute(5, 4096, c.nb, c.nblocks).unwrap();
         let snap = donor.grid.strat().expect("strat snapshot").clone();
         assert_eq!(snap.beta, 0.75);
@@ -878,10 +1193,10 @@ mod tests {
         // Same layout: the snapshot resumes (first iteration samples
         // through the imported counts, so outputs differ from a fresh
         // uniform start).
-        let resumed = integrate_native_core(&*f, &c, Some(&donor.grid), None).unwrap();
+        let resumed = integrate_native_core(&f, &c, Some(&donor.grid), None).unwrap();
         assert!(resumed.grid.strat().is_some());
         let fresh_grid = donor.grid.clone().without_strat();
-        let fresh = integrate_native_core(&*f, &c, Some(&fresh_grid), None).unwrap();
+        let fresh = integrate_native_core(&f, &c, Some(&fresh_grid), None).unwrap();
         assert_ne!(
             resumed.output.integral.to_bits(),
             fresh.output.integral.to_bits(),
@@ -892,28 +1207,30 @@ mod tests {
         // silently refreshes to uniform for the new layout.
         let mut c2 = c.clone();
         c2.maxcalls = 1 << 13;
-        let refreshed = integrate_native_core(&*f, &c2, Some(&donor.grid), None).unwrap();
-        assert_eq!(refreshed.output.iterations, c2.itmax);
+        let refreshed = integrate_native_core(&f, &c2, Some(&donor.grid), None).unwrap();
+        assert_eq!(refreshed.output.iterations, 6);
     }
 
     #[test]
     fn uniform_runs_carry_no_strat_state_and_no_alloc_events() {
         let f = by_name("f5", 4).unwrap();
-        let mut c = cfg(1 << 12, 1e-3);
-        c.itmax = 4;
-        c.ita = 2;
-        c.skip = 0;
-        c.tau_rel = 1e-15;
+        let mut c = with_plan(cfg(1 << 12, 1e-15), 4, 2, 0);
         let mut allocs = Vec::new();
-        let mut cb = |ev: &IterationEvent| allocs.push(ev.alloc);
-        let out = integrate_native_core(&*f, &c, None, Some(&mut cb)).unwrap();
+        let mut cb = |ev: &IterationEvent| {
+            allocs.push(ev.alloc);
+            ObserverControl::Continue
+        };
+        let out = integrate_native_core(&f, &c, None, Some(&mut cb)).unwrap();
         assert!(out.grid.strat().is_none());
         assert!(allocs.iter().all(|a| a.is_none()));
 
         c.sampling = Sampling::vegas_plus();
         let mut allocs = Vec::new();
-        let mut cb = |ev: &IterationEvent| allocs.push(ev.alloc);
-        let out = integrate_native_core(&*f, &c, None, Some(&mut cb)).unwrap();
+        let mut cb = |ev: &IterationEvent| {
+            allocs.push(ev.alloc);
+            ObserverControl::Continue
+        };
+        let out = integrate_native_core(&f, &c, None, Some(&mut cb)).unwrap();
         assert!(out.grid.strat().is_some());
         assert_eq!(allocs.len(), out.output.iterations);
         for a in allocs {
@@ -930,8 +1247,9 @@ mod tests {
     #[cfg(feature = "legacy-api")]
     #[allow(deprecated)]
     mod legacy_shims {
-        use super::super::{integrate_native, run_driver_traced, BorrowedNative};
+        use super::super::{integrate_native, run_driver_traced};
         use super::{cfg, integrate};
+        use crate::coordinator::NativeBackend;
         use crate::integrands::by_name;
         use crate::strat::Layout;
 
@@ -939,17 +1257,13 @@ mod tests {
         fn deprecated_shims_still_delegate() {
             let f = by_name("f3", 3).unwrap();
             let c = cfg(1 << 12, 1e-3);
-            let new = integrate(&*f, &c).unwrap();
-            let old = integrate_native(&*f, &c).unwrap();
+            let new = integrate(&f, &c).unwrap();
+            let old = integrate_native(&f, &c).unwrap();
             assert_eq!(new.integral, old.integral);
             assert_eq!(new.sigma, old.sigma);
             let (traced, trace) = {
                 let layout = Layout::compute(3, c.maxcalls, c.nb, c.nblocks).unwrap();
-                let backend = BorrowedNative {
-                    f: &*f,
-                    layout,
-                    threads: c.threads,
-                };
+                let backend = NativeBackend::new(f.clone(), layout, c.threads);
                 run_driver_traced(&backend, &c).unwrap()
             };
             assert_eq!(traced.integral, new.integral);

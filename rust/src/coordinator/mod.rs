@@ -1,22 +1,27 @@
 //! L3 coordinator — the paper's host-side contribution: the two-phase
-//! m-Cubes iteration driver (Algorithm 2), backend abstraction over
-//! PJRT artifacts / the native engine, and an integration job service.
+//! m-Cubes iteration loop (Algorithm 2) as a resumable session core,
+//! backend abstraction over PJRT artifacts / the native engine, and
+//! the multi-job throughput [`Scheduler`].
 //!
-//! `drive` is the one driver core (warm-startable, observable); the
-//! seed's free functions remain as deprecated shims behind the
-//! on-by-default `legacy-api` cargo feature (build with
-//! `--no-default-features` to drop them). Most callers should go
-//! through `crate::api::Integrator` instead of using this module
-//! directly.
+//! The stepping state machine (`SessionCore`) is shared by
+//! `api::Session` (pull-based, suspend/resume) and [`drive`] (the
+//! blocking loop for fixed-layout backends); the seed's free
+//! functions remain as deprecated shims behind the on-by-default
+//! `legacy-api` cargo feature (build with `--no-default-features` to
+//! drop them). Most callers should go through `crate::api::Integrator`
+//! instead of using this module directly.
 
 mod backend;
 mod driver;
 mod service;
 
-pub use backend::{NativeBackend, PjrtBackend, VSampleBackend};
+pub use backend::{NativeBackend, PjrtBackend, StratifiedBackend, VSampleBackend};
 pub use driver::{drive, DriveOutcome, DriverOutput, IntegrationOutput, JobConfig};
 #[cfg(feature = "legacy-api")]
 #[allow(deprecated)]
 pub use driver::{integrate_native, integrate_native_adaptive, run_driver, run_driver_traced};
-pub(crate) use driver::{escalate_native, integrate_native_core};
-pub use service::{IntegrationService, JobRequest, JobResult, ServiceMetrics};
+pub(crate) use driver::{escalate_native, integrate_native_core, SessionCore, StepRecord};
+#[cfg(feature = "legacy-api")]
+#[allow(deprecated)]
+pub use service::IntegrationService;
+pub use service::{JobRequest, JobResult, ResultStream, Scheduler, ServiceMetrics};

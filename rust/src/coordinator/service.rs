@@ -1,25 +1,57 @@
-//! Integration job service: a leader queue + worker pool that runs
-//! many integration jobs concurrently and reports latency/throughput —
-//! the serving shell around the m-Cubes driver (exercised end-to-end by
+//! Multi-job throughput scheduler: many resumable [`Session`]s
+//! multiplexed round-robin over a shared worker pool — the serving
+//! shell around the m-Cubes driver (exercised end-to-end by
 //! `examples/service_demo.rs`).
 //!
-//! Jobs are described by `api::IntegrandSpec`, so the service accepts
-//! registry names *and* user-supplied closures/`IntegrandRef`s, and may
-//! carry an `api::GridState` warm start — repeated similar integrals
-//! skip the importance-grid warm-up, and each result returns its
-//! adapted grid for follow-up jobs.
+//! Where the old `IntegrationService` ran each job start-to-finish on
+//! whichever worker picked it up, the [`Scheduler`] slices: a worker
+//! steps a job's session until the job has consumed `calls_budget`
+//! integrand evaluations in this slice, then requeues it behind its
+//! priority peers and picks up the next job. Because sessions are
+//! pull-based and `Send`, a job may migrate between workers mid-run —
+//! and because the engine's reduction is bitwise
+//! thread-count-invariant, its numbers never change when it does.
+//!
+//! * **Priorities** — higher [`JobRequest::priority`] jobs are always
+//!   picked first; round-robin applies within a priority class.
+//! * **Fairness** — `calls_budget` caps how many integrand
+//!   evaluations one job may consume per scheduling slice, so one
+//!   huge integral cannot starve a queue of small ones.
+//! * **Streaming** — results arrive in *completion* order through
+//!   [`Scheduler::stream`] (an iterator) or
+//!   [`Scheduler::drain_with`] (a callback); [`Scheduler::drain`]
+//!   keeps the old collect-everything API.
+//! * **Isolation** — a panicking integrand fails only its own job;
+//!   the worker, the queue, and every other job survive.
+//!
+//! Jobs are described by `api::IntegrandSpec`, so the scheduler
+//! accepts registry names *and* user-supplied closures, and may carry
+//! an `api::GridState` warm start.
 
-use super::driver::{integrate_native_core, IntegrationOutput, JobConfig};
-use crate::api::{GridState, IntegrandSpec};
+use super::driver::{IntegrationOutput, JobConfig};
+use crate::api::{Checkpoint, GridState, IntegrandSpec, Session, StopReason};
 use crate::error::{Error, Result};
 use crate::integrands::IntegrandRef;
 use crate::util::benchkit::percentile_sorted;
-use crate::util::threadpool::WorkerPool;
+use std::cmp::Reverse;
+use std::collections::{BTreeMap, VecDeque};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::{self, JoinHandle};
 use std::time::Instant;
 
+/// Default fairness quantum: integrand evaluations one job may consume
+/// per scheduling slice (~8 default-budget iterations).
+pub const DEFAULT_CALLS_BUDGET: usize = 1 << 20;
+
 /// A queued integration request.
+///
+/// `#[non_exhaustive]`: construct via [`JobRequest::registry`] /
+/// [`JobRequest::custom`] and the `with_*` builders.
 #[derive(Debug, Clone)]
+#[non_exhaustive]
 pub struct JobRequest {
     pub id: u64,
     /// What to integrate: registry name or custom integrand.
@@ -27,6 +59,8 @@ pub struct JobRequest {
     pub config: JobConfig,
     /// Optional adapted grid from a previous run (same d, nb).
     pub warm_start: Option<GridState>,
+    /// Scheduling priority: higher runs first (default 0).
+    pub priority: i32,
 }
 
 impl JobRequest {
@@ -37,6 +71,7 @@ impl JobRequest {
             spec: IntegrandSpec::registry(name, dim),
             config,
             warm_start: None,
+            priority: 0,
         }
     }
 
@@ -47,6 +82,7 @@ impl JobRequest {
             spec: IntegrandSpec::custom(f),
             config,
             warm_start: None,
+            priority: 0,
         }
     }
 
@@ -55,10 +91,19 @@ impl JobRequest {
         self.warm_start = Some(grid);
         self
     }
+
+    /// Set the scheduling priority (higher runs first; default 0).
+    pub fn with_priority(mut self, priority: i32) -> JobRequest {
+        self.priority = priority;
+        self
+    }
 }
 
 /// The completed job with timing metadata.
+///
+/// `#[non_exhaustive]`: constructed only by the scheduler.
 #[derive(Debug, Clone)]
+#[non_exhaustive]
 pub struct JobResult {
     pub id: u64,
     /// Display label of the integrand (registry or custom name).
@@ -68,147 +113,510 @@ pub struct JobResult {
     /// Adapted grid after the run (successful jobs only) — feed it to a
     /// follow-up request's `warm_start`.
     pub grid: Option<GridState>,
-    /// Seconds spent queued before a worker picked the job up.
+    /// Why the run ended (successful jobs only).
+    pub stop: Option<StopReason>,
+    /// Seconds spent queued before a worker first picked the job up.
     pub queue_time: f64,
     /// End-to-end latency (enqueue -> completion), seconds.
     pub latency: f64,
+    /// Scheduling slices the job took (> 1 means it was time-sliced
+    /// against the `calls_budget` fairness cap).
+    pub slices: usize,
 }
 
-/// Aggregate service metrics.
+/// Aggregate scheduler metrics.
 #[derive(Debug, Clone)]
+#[non_exhaustive]
 pub struct ServiceMetrics {
     pub jobs: usize,
     pub failures: usize,
     pub wall_time: f64,
+    /// Completed jobs per second of wall time.
     pub throughput: f64,
+    /// Total integrand evaluations across all completed jobs.
+    pub total_calls: usize,
+    /// Integrand evaluations per second of wall time.
+    pub calls_per_sec: f64,
     pub latency_p50: f64,
     pub latency_p95: f64,
     pub latency_max: f64,
     pub mean_queue_time: f64,
 }
 
-/// The service: submit jobs, then `drain()` for results + metrics.
-pub struct IntegrationService {
-    pool: WorkerPool,
-    tx: Sender<JobResult>,
-    rx: Receiver<JobResult>,
+/// One job's life on the run queue.
+struct QueuedJob {
+    id: u64,
+    priority: i32,
+    label: String,
+    dim: usize,
+    enqueued: Instant,
+    queue_time: Option<f64>,
+    slices: usize,
+    state: JobState,
+}
+
+enum JobState {
+    /// Not yet started; the session is built on first pickup so spec
+    /// resolution and config validation fail as job errors, not
+    /// scheduler errors.
+    Pending {
+        spec: IntegrandSpec,
+        cfg: JobConfig,
+        warm: Option<GridState>,
+    },
+    Running(Box<Session>),
+    /// Transient placeholder while the session is consumed by
+    /// `finish()`.
+    Taken,
+}
+
+/// What one scheduling slice concluded.
+enum SliceResult {
+    /// Budget spent, job still running: requeue it.
+    Yield,
+    /// Job completed (or failed): ship the result.
+    Done(JobResult),
+}
+
+struct QueueState {
+    /// Run queue: highest priority first (BTreeMap ascending over
+    /// `Reverse(priority)`), round-robin within a priority class.
+    buckets: BTreeMap<Reverse<i32>, VecDeque<QueuedJob>>,
+    /// No further submissions; workers exit once idle and empty.
+    closed: bool,
+    /// Jobs currently held by workers (possibly to be requeued).
+    in_flight: usize,
+}
+
+struct Shared {
+    state: Mutex<QueueState>,
+    cv: Condvar,
+    calls_budget: AtomicUsize,
+}
+
+/// The multi-job throughput scheduler (see the module docs).
+pub struct Scheduler {
+    shared: Arc<Shared>,
+    workers: Vec<JoinHandle<()>>,
+    /// `Some` until `stream()` hands the receiver over.
+    rx: Option<Receiver<JobResult>>,
     submitted: usize,
     started: Instant,
 }
 
-impl IntegrationService {
-    /// Spawn a service with `workers` native-engine workers.
+impl Scheduler {
+    /// Spawn a scheduler with `workers` native-engine workers.
     ///
     /// Each job runs single-threaded internally (`config.threads` is
     /// overridden to 1) so throughput scales with the worker count —
     /// the batching strategy the paper's uniform-workload argument
     /// suggests for many concurrent integrals.
-    pub fn new(workers: usize) -> IntegrationService {
+    pub fn new(workers: usize) -> Scheduler {
+        let shared = Arc::new(Shared {
+            state: Mutex::new(QueueState {
+                buckets: BTreeMap::new(),
+                closed: false,
+                in_flight: 0,
+            }),
+            cv: Condvar::new(),
+            calls_budget: AtomicUsize::new(DEFAULT_CALLS_BUDGET),
+        });
         let (tx, rx) = channel();
-        IntegrationService {
-            pool: WorkerPool::new(workers),
-            tx,
-            rx,
+        let mut handles = Vec::with_capacity(workers.max(1));
+        for i in 0..workers.max(1) {
+            let shared = Arc::clone(&shared);
+            let tx: Sender<JobResult> = tx.clone();
+            handles.push(
+                thread::Builder::new()
+                    .name(format!("mcubes-sched-{i}"))
+                    .spawn(move || worker_loop(&shared, &tx))
+                    .expect("spawn scheduler worker"),
+            );
+        }
+        // Workers hold the only senders; `rx` drains until they exit.
+        drop(tx);
+        Scheduler {
+            shared,
+            workers: handles,
+            rx: Some(rx),
             submitted: 0,
             started: Instant::now(),
         }
     }
 
+    /// Set the fairness quantum: integrand evaluations one job may
+    /// consume per scheduling slice (default
+    /// [`DEFAULT_CALLS_BUDGET`]). Applies to slices started after the
+    /// call.
+    pub fn calls_budget(&mut self, calls: usize) {
+        self.shared
+            .calls_budget
+            .store(calls.max(1), Ordering::Relaxed);
+    }
+
     /// Enqueue one job.
     pub fn submit(&mut self, req: JobRequest) {
-        let tx = self.tx.clone();
-        let enqueued = Instant::now();
         self.submitted += 1;
-        self.pool.submit(move || {
-            let queue_time = enqueued.elapsed().as_secs_f64();
-            let mut cfg = req.config.clone();
-            cfg.threads = 1;
-            let label = req.spec.label();
-            let dim = req.spec.dim();
-            // User-supplied closures can panic; isolate the panic to
-            // this job so the batch (and the worker) survives and
-            // drain() still returns every result.
-            let run = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-                req.spec
-                    .resolve()
-                    .and_then(|f| integrate_native_core(&*f, &cfg, req.warm_start.as_ref(), None))
-            }));
-            let (outcome, grid) = match run {
-                Ok(Ok(o)) => (Ok(o.output), Some(o.grid)),
-                Ok(Err(e)) => (Err(e.to_string()), None),
-                Err(payload) => {
-                    let msg = payload
-                        .downcast_ref::<&str>()
-                        .map(|s| s.to_string())
-                        .or_else(|| payload.downcast_ref::<String>().cloned())
-                        .unwrap_or_else(|| "unknown panic payload".to_string());
-                    (Err(format!("integrand panicked: {msg}")), None)
-                }
-            };
-            let _ = tx.send(JobResult {
-                id: req.id,
-                integrand: label,
-                dim,
-                outcome,
-                grid,
-                queue_time,
-                latency: enqueued.elapsed().as_secs_f64(),
-            });
-        });
+        let job = QueuedJob {
+            id: req.id,
+            priority: req.priority,
+            label: req.spec.label(),
+            dim: req.spec.dim(),
+            enqueued: Instant::now(),
+            queue_time: None,
+            slices: 0,
+            state: JobState::Pending {
+                spec: req.spec,
+                cfg: req.config,
+                warm: req.warm_start,
+            },
+        };
+        {
+            let mut q = self.shared.state.lock().unwrap();
+            q.buckets
+                .entry(Reverse(job.priority))
+                .or_default()
+                .push_back(job);
+        }
+        self.shared.cv.notify_one();
+    }
+
+    /// Close the queue and stream results in **completion order**.
+    pub fn stream(mut self) -> ResultStream {
+        {
+            let mut q = self.shared.state.lock().unwrap();
+            q.closed = true;
+        }
+        self.shared.cv.notify_all();
+        ResultStream {
+            rx: self.rx.take().expect("receiver present until stream()"),
+            _shared: Arc::clone(&self.shared),
+            workers: std::mem::take(&mut self.workers),
+            total: self.submitted,
+            remaining: self.submitted,
+            started: self.started,
+            completed_at: None,
+            latencies: Vec::with_capacity(self.submitted),
+            queue_times: Vec::with_capacity(self.submitted),
+            failures: 0,
+            total_calls: 0,
+        }
+    }
+
+    /// Wait for all submitted jobs, calling `cb` with each result as
+    /// it completes, then return every result (sorted by id) plus
+    /// metrics.
+    pub fn drain_with(
+        self,
+        mut cb: impl FnMut(&JobResult),
+    ) -> Result<(Vec<JobResult>, ServiceMetrics)> {
+        let mut stream = self.stream();
+        let mut results = Vec::with_capacity(stream.total);
+        for r in stream.by_ref() {
+            cb(&r);
+            results.push(r);
+        }
+        if results.len() != stream.total {
+            return Err(Error::Runtime("worker channel closed early".into()));
+        }
+        let metrics = stream.metrics();
+        results.sort_by_key(|r| r.id);
+        Ok((results, metrics))
     }
 
     /// Wait for all submitted jobs and compute metrics.
     pub fn drain(self) -> Result<(Vec<JobResult>, ServiceMetrics)> {
-        let IntegrationService {
-            pool,
-            tx,
-            rx,
-            submitted,
-            started,
-        } = self;
-        drop(tx); // our clone; workers hold theirs until done
-        let mut results = Vec::with_capacity(submitted);
-        for _ in 0..submitted {
-            let r = rx
-                .recv()
-                .map_err(|_| Error::Runtime("worker channel closed early".into()))?;
-            results.push(r);
-        }
-        pool.shutdown();
-        let wall_time = started.elapsed().as_secs_f64();
+        self.drain_with(|_| {})
+    }
+}
 
-        let mut latencies: Vec<f64> = results.iter().map(|r| r.latency).collect();
+impl Drop for Scheduler {
+    fn drop(&mut self) {
+        {
+            let mut q = self.shared.state.lock().unwrap();
+            q.closed = true;
+        }
+        self.shared.cv.notify_all();
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Deprecated name for [`Scheduler`]. The old sequential service ran
+/// each job start-to-finish; the scheduler time-slices sessions
+/// round-robin with priorities — `new`/`submit`/`drain` are
+/// source-compatible.
+#[cfg(feature = "legacy-api")]
+#[deprecated(since = "0.3.0", note = "renamed to `Scheduler`")]
+pub type IntegrationService = Scheduler;
+
+/// Streaming results iterator (completion order). Workers are joined
+/// once the stream is exhausted or dropped.
+pub struct ResultStream {
+    rx: Receiver<JobResult>,
+    _shared: Arc<Shared>,
+    workers: Vec<JoinHandle<()>>,
+    total: usize,
+    remaining: usize,
+    started: Instant,
+    completed_at: Option<Instant>,
+    latencies: Vec<f64>,
+    queue_times: Vec<f64>,
+    failures: usize,
+    total_calls: usize,
+}
+
+impl ResultStream {
+    /// Jobs submitted before the stream was opened.
+    pub fn total(&self) -> usize {
+        self.total
+    }
+
+    /// Aggregate metrics over the results yielded so far (complete
+    /// once the iterator is exhausted).
+    pub fn metrics(&self) -> ServiceMetrics {
+        let wall_time = self
+            .completed_at
+            .unwrap_or_else(Instant::now)
+            .duration_since(self.started)
+            .as_secs_f64();
+        let mut latencies = self.latencies.clone();
         // total_cmp: a NaN timing (clock weirdness) must not panic the
         // whole drain; NaNs sort to the end and surface in latency_max.
         latencies.sort_by(f64::total_cmp);
-        let failures = results.iter().filter(|r| r.outcome.is_err()).count();
-        let metrics = ServiceMetrics {
-            jobs: results.len(),
-            failures,
+        let jobs = latencies.len();
+        ServiceMetrics {
+            jobs,
+            failures: self.failures,
             wall_time,
-            throughput: results.len() as f64 / wall_time.max(1e-9),
+            throughput: jobs as f64 / wall_time.max(1e-9),
+            total_calls: self.total_calls,
+            calls_per_sec: self.total_calls as f64 / wall_time.max(1e-9),
             latency_p50: percentile_sorted(&latencies, 50.0),
             latency_p95: percentile_sorted(&latencies, 95.0),
             latency_max: latencies.last().copied().unwrap_or(0.0),
-            mean_queue_time: results.iter().map(|r| r.queue_time).sum::<f64>()
-                / results.len().max(1) as f64,
+            mean_queue_time: self.queue_times.iter().sum::<f64>()
+                / self.queue_times.len().max(1) as f64,
+        }
+    }
+
+    fn join_workers(&mut self) {
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Iterator for ResultStream {
+    type Item = JobResult;
+
+    fn next(&mut self) -> Option<JobResult> {
+        if self.remaining == 0 {
+            self.join_workers();
+            return None;
+        }
+        match self.rx.recv() {
+            Ok(r) => {
+                self.remaining -= 1;
+                if self.remaining == 0 {
+                    self.completed_at = Some(Instant::now());
+                }
+                self.latencies.push(r.latency);
+                self.queue_times.push(r.queue_time);
+                match &r.outcome {
+                    Ok(o) => self.total_calls += o.calls_used,
+                    Err(_) => self.failures += 1,
+                }
+                Some(r)
+            }
+            Err(_) => {
+                // Every worker exited with results outstanding — a
+                // scheduler bug; end the stream so callers can notice
+                // the shortfall against `total()`.
+                self.remaining = 0;
+                self.join_workers();
+                None
+            }
+        }
+    }
+}
+
+impl Drop for ResultStream {
+    fn drop(&mut self) {
+        self.join_workers();
+    }
+}
+
+fn worker_loop(shared: &Shared, tx: &Sender<JobResult>) {
+    loop {
+        let mut job = {
+            let mut q = shared.state.lock().unwrap();
+            loop {
+                if let Some(job) = pop_next(&mut q) {
+                    q.in_flight += 1;
+                    break job;
+                }
+                if q.closed && q.in_flight == 0 {
+                    return;
+                }
+                q = shared.cv.wait(q).unwrap();
+            }
         };
-        results.sort_by_key(|r| r.id);
-        Ok((results, metrics))
+        let budget = shared.calls_budget.load(Ordering::Relaxed);
+        // User-supplied closures can panic; isolate the panic to this
+        // job so the batch (and the worker) survives and the stream
+        // still yields every result.
+        let slice = catch_unwind(AssertUnwindSafe(|| run_slice(&mut job, budget)));
+        match slice {
+            Ok(SliceResult::Yield) => {
+                {
+                    let mut q = shared.state.lock().unwrap();
+                    q.in_flight -= 1;
+                    q.buckets
+                        .entry(Reverse(job.priority))
+                        .or_default()
+                        .push_back(job);
+                }
+                shared.cv.notify_one();
+            }
+            Ok(SliceResult::Done(result)) => {
+                let _ = tx.send(result);
+                {
+                    let mut q = shared.state.lock().unwrap();
+                    q.in_flight -= 1;
+                }
+                shared.cv.notify_all();
+            }
+            Err(payload) => {
+                let msg = payload
+                    .downcast_ref::<&str>()
+                    .map(|s| s.to_string())
+                    .or_else(|| payload.downcast_ref::<String>().cloned())
+                    .unwrap_or_else(|| "unknown panic payload".to_string());
+                let _ = tx.send(job_result(
+                    &job,
+                    Err(format!("integrand panicked: {msg}")),
+                    None,
+                    None,
+                ));
+                {
+                    let mut q = shared.state.lock().unwrap();
+                    q.in_flight -= 1;
+                }
+                shared.cv.notify_all();
+            }
+        }
+    }
+}
+
+fn pop_next(q: &mut QueueState) -> Option<QueuedJob> {
+    let key = *q.buckets.keys().next()?;
+    let bucket = q.buckets.get_mut(&key).expect("bucket for existing key");
+    let job = bucket.pop_front();
+    if bucket.is_empty() {
+        q.buckets.remove(&key);
+    }
+    job
+}
+
+fn job_result(
+    job: &QueuedJob,
+    outcome: std::result::Result<IntegrationOutput, String>,
+    grid: Option<GridState>,
+    stop: Option<StopReason>,
+) -> JobResult {
+    JobResult {
+        id: job.id,
+        integrand: job.label.clone(),
+        dim: job.dim,
+        outcome,
+        grid,
+        stop,
+        queue_time: job.queue_time.unwrap_or(0.0),
+        latency: job.enqueued.elapsed().as_secs_f64(),
+        slices: job.slices,
+    }
+}
+
+/// Step one job's session until it finishes or spends `budget`
+/// integrand evaluations in this slice.
+fn run_slice(job: &mut QueuedJob, budget: usize) -> SliceResult {
+    job.slices += 1;
+    if job.queue_time.is_none() {
+        job.queue_time = Some(job.enqueued.elapsed().as_secs_f64());
+    }
+    if let JobState::Pending { spec, cfg, warm } = &job.state {
+        let mut cfg = cfg.clone();
+        cfg.threads = 1;
+        let built = spec.resolve().and_then(|f| match warm {
+            Some(grid) => Session::resume(f, cfg, &Checkpoint::from_grid(grid.clone())),
+            None => Session::new(f, cfg),
+        });
+        match built {
+            Ok(session) => job.state = JobState::Running(Box::new(session)),
+            Err(e) => return SliceResult::Done(job_result(job, Err(e.to_string()), None, None)),
+        }
+    }
+    // Step inside an inner scope so the session borrow provably ends
+    // before the job's result is assembled.
+    enum StepEnd {
+        Finished,
+        Yielded,
+        Failed(String),
+    }
+    let end = match &mut job.state {
+        JobState::Running(session) => {
+            let slice_start = session.calls_used();
+            loop {
+                match session.step() {
+                    Err(e) => break StepEnd::Failed(e.to_string()),
+                    Ok(None) => break StepEnd::Finished,
+                    Ok(Some(_)) => {
+                        if session.is_finished() {
+                            break StepEnd::Finished;
+                        }
+                        if session.calls_used() - slice_start >= budget {
+                            break StepEnd::Yielded;
+                        }
+                    }
+                }
+            }
+        }
+        _ => StepEnd::Failed("scheduler invariant violated: job state lost".into()),
+    };
+    match end {
+        StepEnd::Yielded => SliceResult::Yield,
+        StepEnd::Failed(msg) => SliceResult::Done(job_result(job, Err(msg), None, None)),
+        StepEnd::Finished => {
+            let JobState::Running(session) = std::mem::replace(&mut job.state, JobState::Taken)
+            else {
+                return SliceResult::Done(job_result(
+                    job,
+                    Err("scheduler invariant violated: job state lost".into()),
+                    None,
+                    None,
+                ));
+            };
+            match session.finish() {
+                Ok(o) => {
+                    SliceResult::Done(job_result(job, Ok(o.output), Some(o.grid), Some(o.stop)))
+                }
+                Err(e) => SliceResult::Done(job_result(job, Err(e.to_string()), None, None)),
+            }
+        }
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::api::FnIntegrand;
+    use crate::api::{FnIntegrand, RunPlan};
 
     fn quick_cfg() -> JobConfig {
         JobConfig {
             maxcalls: 1 << 12,
-            itmax: 8,
-            ita: 6,
-            skip: 1,
+            plan: RunPlan::classic(8, 6, 1),
             tau_rel: 5e-3,
             ..Default::default()
         }
@@ -216,34 +624,32 @@ mod tests {
 
     #[test]
     fn runs_batch_of_jobs() {
-        let mut svc = IntegrationService::new(4);
+        let mut svc = Scheduler::new(4);
         for i in 0..12u64 {
-            svc.submit(JobRequest::registry(
-                i,
-                "f5",
-                4,
-                JobConfig {
-                    seed: 100 + i as u32,
-                    ..quick_cfg()
-                },
-            ));
+            let mut cfg = quick_cfg();
+            cfg.seed = 100 + i as u32;
+            svc.submit(JobRequest::registry(i, "f5", 4, cfg));
         }
         let (results, metrics) = svc.drain().unwrap();
         assert_eq!(results.len(), 12);
         assert_eq!(metrics.jobs, 12);
         assert_eq!(metrics.failures, 0);
         assert!(metrics.throughput > 0.0);
+        assert!(metrics.total_calls > 0);
+        assert!(metrics.calls_per_sec > 0.0);
         // ids come back sorted
         for (i, r) in results.iter().enumerate() {
             assert_eq!(r.id, i as u64);
             assert!(r.outcome.is_ok());
             assert!(r.grid.is_some(), "successful jobs return their grid");
+            assert!(r.stop.is_some());
+            assert!(r.slices >= 1);
         }
     }
 
     #[test]
     fn bad_integrand_reports_failure_not_panic() {
-        let mut svc = IntegrationService::new(2);
+        let mut svc = Scheduler::new(2);
         svc.submit(JobRequest::registry(0, "nope", 3, quick_cfg()));
         svc.submit(JobRequest::registry(1, "f5", 3, quick_cfg()));
         let (results, metrics) = svc.drain().unwrap();
@@ -255,7 +661,7 @@ mod tests {
 
     #[test]
     fn latency_accounting_sane() {
-        let mut svc = IntegrationService::new(1);
+        let mut svc = Scheduler::new(1);
         for i in 0..3 {
             svc.submit(JobRequest::registry(i, "f3", 3, quick_cfg()));
         }
@@ -269,7 +675,7 @@ mod tests {
 
     #[test]
     fn custom_closure_jobs_run() {
-        let mut svc = IntegrationService::new(2);
+        let mut svc = Scheduler::new(2);
         let f = FnIntegrand::unit(3, |x: &[f64]| x.iter().sum::<f64>())
             .named("sum3")
             .with_true_value(1.5)
@@ -285,7 +691,7 @@ mod tests {
 
     #[test]
     fn panicking_closure_is_isolated_from_the_batch() {
-        let mut svc = IntegrationService::new(2);
+        let mut svc = Scheduler::new(2);
         let bomb = FnIntegrand::unit(3, |x: &[f64]| {
             // Out-of-range index: panics on the first evaluation.
             x[7]
@@ -305,30 +711,123 @@ mod tests {
     }
 
     #[test]
+    fn time_slicing_interleaves_and_preserves_results_bitwise() {
+        // The same batch, run-to-completion vs finely sliced on one
+        // worker: sessions are deterministic state machines, so the
+        // numbers must agree bit for bit — slicing only changes the
+        // schedule. The tiny quantum forces multiple slices per job.
+        let batch = |svc: &mut Scheduler| {
+            for i in 0..4u64 {
+                let mut cfg = quick_cfg();
+                cfg.tau_rel = 1e-12; // fixed work: run the whole plan
+                cfg.seed = 500 + i as u32;
+                svc.submit(JobRequest::registry(i, "f5", 4, cfg));
+            }
+        };
+        let mut whole = Scheduler::new(1);
+        whole.calls_budget(usize::MAX);
+        batch(&mut whole);
+        let (a, _) = whole.drain().unwrap();
+
+        let mut sliced = Scheduler::new(1);
+        sliced.calls_budget(1 << 12); // ~1 iteration per slice
+        batch(&mut sliced);
+        let (b, _) = sliced.drain().unwrap();
+
+        for (ra, rb) in a.iter().zip(&b) {
+            let (oa, ob) = (ra.outcome.as_ref().unwrap(), rb.outcome.as_ref().unwrap());
+            assert_eq!(oa.integral.to_bits(), ob.integral.to_bits());
+            assert_eq!(oa.sigma.to_bits(), ob.sigma.to_bits());
+            assert_eq!(oa.iterations, ob.iterations);
+            assert_eq!(ra.slices, 1, "uncapped jobs run in one slice");
+            assert!(rb.slices > 1, "capped jobs must be time-sliced");
+        }
+    }
+
+    #[test]
+    fn worker_count_does_not_change_results() {
+        let batch = |svc: &mut Scheduler| {
+            for i in 0..6u64 {
+                let mut cfg = quick_cfg();
+                cfg.seed = 40 + i as u32;
+                svc.submit(JobRequest::registry(i, "f4", 5, cfg));
+            }
+        };
+        let mut s1 = Scheduler::new(1);
+        batch(&mut s1);
+        let (a, _) = s1.drain().unwrap();
+        let mut s4 = Scheduler::new(4);
+        s4.calls_budget(1 << 13);
+        batch(&mut s4);
+        let (b, _) = s4.drain().unwrap();
+        for (ra, rb) in a.iter().zip(&b) {
+            let (oa, ob) = (ra.outcome.as_ref().unwrap(), rb.outcome.as_ref().unwrap());
+            assert_eq!(oa.integral.to_bits(), ob.integral.to_bits());
+            assert_eq!(oa.sigma.to_bits(), ob.sigma.to_bits());
+        }
+    }
+
+    #[test]
+    fn priorities_order_the_queue() {
+        // One worker, held busy by a chunky blocker while the rest of
+        // the batch is enqueued; when it frees up, the high-priority
+        // job must complete before the earlier-submitted low one.
+        let mut svc = Scheduler::new(1);
+        let mut blocker = quick_cfg();
+        blocker.maxcalls = 1 << 16;
+        blocker.tau_rel = 1e-12;
+        blocker.plan = RunPlan::classic(10, 6, 0);
+        svc.submit(JobRequest::registry(0, "f5", 6, blocker));
+        svc.submit(JobRequest::registry(1, "f3", 3, quick_cfg()).with_priority(-5));
+        svc.submit(JobRequest::registry(2, "f3", 3, quick_cfg()).with_priority(5));
+        let order: std::sync::Mutex<Vec<u64>> = std::sync::Mutex::new(Vec::new());
+        let (results, _) = svc
+            .drain_with(|r| order.lock().unwrap().push(r.id))
+            .unwrap();
+        assert_eq!(results.len(), 3);
+        let order = order.into_inner().unwrap();
+        let hi = order.iter().position(|&id| id == 2).unwrap();
+        let lo = order.iter().position(|&id| id == 1).unwrap();
+        assert!(hi < lo, "priority 5 must complete before priority -5: {order:?}");
+    }
+
+    #[test]
+    fn stream_yields_results_in_completion_order() {
+        let mut svc = Scheduler::new(2);
+        for i in 0..5u64 {
+            let mut cfg = quick_cfg();
+            cfg.seed = i as u32;
+            svc.submit(JobRequest::registry(i, "f3", 3, cfg));
+        }
+        let mut stream = svc.stream();
+        assert_eq!(stream.total(), 5);
+        let results: Vec<JobResult> = stream.by_ref().collect();
+        assert_eq!(results.len(), 5);
+        let metrics = stream.metrics();
+        assert_eq!(metrics.jobs, 5);
+        assert_eq!(metrics.failures, 0);
+    }
+
+    #[test]
     fn warm_started_job_reuses_donor_grid() {
         // Donor adapts a grid; a warm-started rerun of the same job
         // must converge at least as fast.
         let cold_cfg = JobConfig {
             maxcalls: 1 << 13,
-            itmax: 20,
-            ita: 12,
-            skip: 2,
+            plan: RunPlan::classic(20, 12, 2),
             tau_rel: 5e-3,
             seed: 5,
             ..Default::default()
         };
-        let mut svc = IntegrationService::new(1);
+        let mut svc = Scheduler::new(1);
         svc.submit(JobRequest::registry(0, "f4", 5, cold_cfg.clone()));
         let (results, _) = svc.drain().unwrap();
         let donor_grid = results[0].grid.clone().unwrap();
         let cold_iters = results[0].outcome.as_ref().unwrap().iterations;
 
-        let warm_cfg = JobConfig {
-            ita: 0,
-            skip: 0,
-            ..cold_cfg
-        };
-        let mut svc = IntegrationService::new(1);
+        let mut warm_cfg = cold_cfg;
+        warm_cfg.plan = RunPlan::classic(20, 0, 0);
+        let mut svc = Scheduler::new(1);
         svc.submit(JobRequest::registry(1, "f4", 5, warm_cfg).with_warm_start(donor_grid));
         let (results, metrics) = svc.drain().unwrap();
         assert_eq!(metrics.failures, 0);

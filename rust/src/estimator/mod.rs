@@ -25,6 +25,49 @@ pub struct WeightedEstimator {
     n: usize,
 }
 
+/// The estimator's complete accumulated state — the serializable
+/// currency of `api::Checkpoint`. Exporting with
+/// [`WeightedEstimator::state`] and restoring with
+/// [`WeightedEstimator::from_state`] round-trips bitwise, so a
+/// suspended run resumes with the exact weighted combination it left
+/// off with.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct EstimatorState {
+    /// Sum of inverse variances `1/sigma_j^2`.
+    pub sum_w: f64,
+    /// Sum of `I_j/sigma_j^2`.
+    pub sum_wi: f64,
+    /// Sum of `I_j^2/sigma_j^2`.
+    pub sum_wi2: f64,
+    /// Number of iterations folded in.
+    pub n: usize,
+}
+
+impl EstimatorState {
+    /// Check the sums are finite and the shape is plausible (an empty
+    /// estimator has all-zero sums).
+    pub fn validate(&self) -> crate::error::Result<()> {
+        if !self.sum_w.is_finite() || !self.sum_wi.is_finite() || !self.sum_wi2.is_finite() {
+            return Err(crate::error::Error::Config(format!(
+                "estimator state must be finite, got sums ({}, {}, {})",
+                self.sum_w, self.sum_wi, self.sum_wi2
+            )));
+        }
+        if self.sum_w < 0.0 || self.sum_wi2 < 0.0 {
+            return Err(crate::error::Error::Config(format!(
+                "estimator weight sums must be >= 0, got ({}, {})",
+                self.sum_w, self.sum_wi2
+            )));
+        }
+        if self.n == 0 && (self.sum_w != 0.0 || self.sum_wi != 0.0 || self.sum_wi2 != 0.0) {
+            return Err(crate::error::Error::Config(
+                "estimator state claims 0 iterations but carries non-zero sums".into(),
+            ));
+        }
+        Ok(())
+    }
+}
+
 /// Floor for variances to keep weights finite when an iteration
 /// happens to sample an exactly-constant region.
 const VAR_FLOOR: f64 = 1e-300;
@@ -92,6 +135,26 @@ impl WeightedEstimator {
     /// discard warm-up iterations, or when chi2 signals inconsistency).
     pub fn reset(&mut self) {
         *self = Self::default();
+    }
+
+    /// Export the complete accumulated state (for checkpoints).
+    pub fn state(&self) -> EstimatorState {
+        EstimatorState {
+            sum_w: self.sum_w,
+            sum_wi: self.sum_wi,
+            sum_wi2: self.sum_wi2,
+            n: self.n,
+        }
+    }
+
+    /// Rebuild an estimator from exported state, bitwise.
+    pub fn from_state(s: EstimatorState) -> WeightedEstimator {
+        WeightedEstimator {
+            sum_w: s.sum_w,
+            sum_wi: s.sum_wi,
+            sum_wi2: s.sum_wi2,
+            n: s.n,
+        }
     }
 }
 
@@ -242,5 +305,41 @@ mod tests {
         e.reset();
         assert_eq!(e.iterations(), 0);
         assert_eq!(e.integral(), 0.0);
+    }
+
+    #[test]
+    fn state_round_trips_bitwise() {
+        let mut e = WeightedEstimator::new();
+        e.push(r(1.000000000001, 0.3333333333333333));
+        e.push(r(-2.5e-7, 1.7e11));
+        e.push(r(3.14159, 0.125));
+        let s = e.state();
+        assert!(s.validate().is_ok());
+        let back = WeightedEstimator::from_state(s);
+        assert_eq!(back.integral().to_bits(), e.integral().to_bits());
+        assert_eq!(back.sigma().to_bits(), e.sigma().to_bits());
+        assert_eq!(back.chi2_dof().to_bits(), e.chi2_dof().to_bits());
+        assert_eq!(back.iterations(), 3);
+        assert_eq!(back.state(), s);
+    }
+
+    #[test]
+    fn state_validation_rejects_corrupt() {
+        let ok = EstimatorState::default();
+        assert!(ok.validate().is_ok());
+        for bad in [
+            EstimatorState {
+                sum_w: f64::NAN,
+                ..ok
+            },
+            EstimatorState {
+                sum_wi: f64::INFINITY,
+                ..ok
+            },
+            EstimatorState { sum_w: -1.0, n: 1, ..ok },
+            EstimatorState { sum_w: 2.0, n: 0, ..ok },
+        ] {
+            assert!(bad.validate().is_err(), "{bad:?}");
+        }
     }
 }

@@ -105,11 +105,38 @@
 //! let out = Integrator::from_registry("f4", 5)?
 //!     .seed(2)
 //!     .warm_start(grid)                           // skip the warm-up
-//!     .adjust_iterations(0)
-//!     .skip_iterations(0)
+//!     .plan(RunPlan::classic(15, 0, 0))
 //!     .observe(|ev| eprintln!("it {}: rel {:.2e}", ev.iteration, ev.rel_err))
 //!     .run()?;
 //! assert!(out.converged);
+//! # Ok::<(), mcubes::Error>(())
+//! ```
+//!
+//! ### Sessions, plans, and the scheduler
+//!
+//! Blocking `run()` is a convenience: the execution primitive is the
+//! resumable [`api::Session`] (`step()` one iteration at a time,
+//! `suspend()`/`resume()` through a bitwise [`api::Checkpoint`]),
+//! driven by an [`api::RunPlan`] of composable stages
+//! (`RunPlan::classic(itmax, ita, skip)` reproduces the seed's flat
+//! knobs bitwise and is the default). Many sessions multiplex over
+//! one machine through [`coordinator::Scheduler`] — priority-ordered,
+//! time-sliced by a `calls_budget` fairness quantum, streaming
+//! results in completion order. Every run ends with a typed
+//! [`api::StopReason`].
+//!
+//! ```no_run
+//! use mcubes::prelude::*;
+//!
+//! let mut session = Integrator::from_registry("f4", 5)?
+//!     .maxcalls(1 << 16)
+//!     .plan(RunPlan::warmup_then_final(5, 1 << 12, 10))
+//!     .session()?;
+//! while let Some(it) = session.step()? {
+//!     eprintln!("it {} [{}]: rel {:.2e}", it.index, it.stage_label, it.rel_err);
+//! }
+//! let outcome = session.finish()?;
+//! println!("I = {} ({:?})", outcome.output.integral, outcome.stop);
 //! # Ok::<(), mcubes::Error>(())
 //! ```
 //!
@@ -117,14 +144,16 @@
 //!
 //! The seed's free functions — `coordinator::integrate_native`,
 //! `integrate_native_adaptive`, `run_driver`, `run_driver_traced` —
-//! remain as `#[deprecated]` shims that delegate to the same core
-//! (`coordinator::drive`) the facade uses. They are gated behind the
-//! on-by-default `legacy-api` cargo feature; building with
+//! remain as `#[deprecated]` shims over the same session core the
+//! facade uses, and the flat `max_iterations`/`adjust_iterations`/
+//! `skip_iterations` builder knobs are `#[deprecated]` shims that
+//! rebuild a classic [`api::RunPlan`]. The free functions are gated
+//! behind the on-by-default `legacy-api` cargo feature; building with
 //! `--no-default-features` drops them entirely (the removal dry run),
 //! and they disappear for good once downstream callers migrate (see
-//! the migration table in [`api`]). `IntegrationService` takes
-//! [`api::IntegrandSpec`] (registry names *or* custom integrands)
-//! instead of bare name strings.
+//! the migration table in [`api`] and `docs/architecture.md`).
+//! `coordinator::IntegrationService` survives as a deprecated alias
+//! of the [`coordinator::Scheduler`].
 
 pub mod api;
 pub mod baselines;
@@ -145,12 +174,16 @@ pub use error::{Error, Result};
 /// Common imports for examples and benches.
 pub mod prelude {
     pub use crate::api::{
-        BackendSpec, Bounds, FnBatchIntegrand, FnIntegrand, GridState, IntegrandSpec, Integrator,
-        IterationEvent, PointBlock, StratSnapshot,
+        BackendSpec, Bounds, Checkpoint, FnBatchIntegrand, FnIntegrand, GridState, IntegrandSpec,
+        Integrator, Iteration, IterationEvent, ObserverControl, PointBlock, RunPlan, Session,
+        Stage, StopReason, StratSnapshot,
     };
-    pub use crate::coordinator::{DriveOutcome, IntegrationOutput, JobConfig};
+    pub use crate::coordinator::{
+        DriveOutcome, IntegrationOutput, JobConfig, JobRequest, JobResult, Scheduler,
+        ServiceMetrics,
+    };
     pub use crate::error::{Error, Result};
-    pub use crate::estimator::{Convergence, IterationResult, WeightedEstimator};
+    pub use crate::estimator::{Convergence, EstimatorState, IterationResult, WeightedEstimator};
     pub use crate::grid::{Bins, GridMode};
     pub use crate::integrands::{Integrand, IntegrandRef};
     pub use crate::strat::{AllocStats, Layout, Sampling};

@@ -1,9 +1,9 @@
-//! `mcubes` — the leader binary: CLI over the integration service,
-//! PJRT artifact runtime, native engine, and baselines.
+//! `mcubes` — the leader binary: CLI over the job scheduler, PJRT
+//! artifact runtime, native engine, and baselines.
 //!
 //! Subcommands:
 //!   integrate   run one integration job (native or pjrt backend)
-//!   serve       run a batch of jobs through the service, print metrics
+//!   serve       run a batch of jobs through the scheduler, print metrics
 //!   artifacts   list artifacts in the manifest
 //!   selftest    quick native-vs-pjrt cross-check on one artifact
 //!
@@ -15,9 +15,9 @@
 //!   mcubes artifacts
 //!   mcubes selftest
 
-use mcubes::api::{BackendSpec, GridState, Integrator};
+use mcubes::api::{BackendSpec, GridState, Integrator, RunPlan};
 use mcubes::baselines::{vegas_serial_integrate, zmc_integrate, ZmcConfig};
-use mcubes::coordinator::{drive, IntegrationService, JobConfig, JobRequest, PjrtBackend};
+use mcubes::coordinator::{drive, JobConfig, JobRequest, PjrtBackend, Scheduler};
 use mcubes::grid::GridMode;
 use mcubes::integrands::by_name;
 use mcubes::runtime::{PjrtRuntime, Registry, DEFAULT_ARTIFACT_DIR};
@@ -56,6 +56,7 @@ fn integrate_cli() -> Cli {
         .opt("tau", "1e-3", "target relative error")
         .opt("itmax", "15", "max iterations")
         .opt("ita", "10", "iterations with bin adjustment")
+        .opt("skip", "2", "warm-up iterations excluded from the estimate")
         .opt("seed", "42", "rng seed")
         .opt("backend", "native", "native | pjrt")
         .opt("artifacts", DEFAULT_ARTIFACT_DIR, "artifacts directory")
@@ -82,8 +83,11 @@ fn cmd_integrate(args: &[String]) -> i32 {
             .map_err(|e| e.to_string())?
             .maxcalls(p.get_usize("calls")?)
             .tolerance(p.get_f64("tau")?)
-            .max_iterations(p.get_usize("itmax")?)
-            .adjust_iterations(p.get_usize("ita")?)
+            .plan(RunPlan::classic(
+                p.get_usize("itmax")?,
+                p.get_usize("ita")?,
+                p.get_usize("skip")?,
+            ))
             .seed(p.get_u32("seed")?)
             .grid_mode(if p.is_set("onedim") {
                 GridMode::Shared1D
@@ -136,7 +140,13 @@ fn cmd_integrate(args: &[String]) -> i32 {
 
         if p.is_set("baseline-serial") {
             let cfg = intg.job_config();
-            let b = vegas_serial_integrate(&*f, cfg.maxcalls, cfg.tau_rel, cfg.itmax, cfg.seed);
+            let b = vegas_serial_integrate(
+                &f,
+                cfg.maxcalls,
+                cfg.tau_rel,
+                cfg.plan.total_iters(),
+                cfg.seed,
+            );
             println!(
                 "serial vegas: I={} sigma={} time={}",
                 fmt_sig(b.integral, 8),
@@ -165,11 +175,16 @@ fn cmd_integrate(args: &[String]) -> i32 {
 }
 
 fn cmd_serve(args: &[String]) -> i32 {
-    let cli = Cli::new("mcubes serve", "run a batch of jobs through the service")
+    let cli = Cli::new("mcubes serve", "run a batch of jobs through the scheduler")
         .opt("jobs", "16", "number of jobs")
         .opt("workers", "4", "worker threads")
         .opt("calls", "16384", "evaluation budget per iteration")
-        .opt("tau", "1e-3", "target relative error");
+        .opt("tau", "1e-3", "target relative error")
+        .opt(
+            "quantum",
+            "1048576",
+            "fairness cap: integrand calls per scheduling slice",
+        );
     let p = match cli.parse(args) {
         Ok(p) => p,
         Err(msg) => {
@@ -181,19 +196,18 @@ fn cmd_serve(args: &[String]) -> i32 {
     let workers = p.get_usize("workers").unwrap_or(4);
     let suite = ["f2", "f3", "f4", "f5", "f6"];
     let dims = [6, 3, 5, 8, 6];
-    let mut svc = IntegrationService::new(workers);
+    let mut svc = Scheduler::new(workers);
+    svc.calls_budget(p.get_usize("quantum").unwrap_or(1 << 20));
     for i in 0..jobs {
         let k = i % suite.len();
         svc.submit(JobRequest::registry(
             i as u64,
             suite[k],
             dims[k],
-            JobConfig {
-                maxcalls: p.get_usize("calls").unwrap_or(16384),
-                tau_rel: p.get_f64("tau").unwrap_or(1e-3),
-                seed: 1000 + i as u32,
-                ..Default::default()
-            },
+            JobConfig::default()
+                .with_maxcalls(p.get_usize("calls").unwrap_or(16384))
+                .with_tolerance(p.get_f64("tau").unwrap_or(1e-3))
+                .with_seed(1000 + i as u32),
         ));
     }
     match svc.drain() {
@@ -221,11 +235,13 @@ fn cmd_serve(args: &[String]) -> i32 {
             }
             println!("{}", t.render());
             println!(
-                "jobs={} failures={} wall={} throughput={:.1} jobs/s p50={} p95={}",
+                "jobs={} failures={} wall={} throughput={:.1} jobs/s \
+                 calls/s={:.2e} p50={} p95={}",
                 m.jobs,
                 m.failures,
                 fmt_ms(m.wall_time * 1e3),
                 m.throughput,
+                m.calls_per_sec,
                 fmt_ms(m.latency_p50 * 1e3),
                 fmt_ms(m.latency_p95 * 1e3)
             );
@@ -302,17 +318,13 @@ fn cmd_selftest(args: &[String]) -> i32 {
         let backend =
             PjrtBackend::load(&runtime, &registry, name, 0).map_err(|e| e.to_string())?;
         let meta = backend.meta().clone();
-        let cfg = JobConfig {
-            maxcalls: meta.maxcalls,
-            nb: meta.nb,
-            nblocks: meta.nblocks,
-            itmax: 5,
-            ita: 3,
-            skip: 0,
-            tau_rel: 1e-12, // run all 5 iterations
-            seed: 2024,
-            ..Default::default()
-        };
+        let cfg = JobConfig::default()
+            .with_maxcalls(meta.maxcalls)
+            .with_bins(meta.nb)
+            .with_blocks(meta.nblocks)
+            .with_plan(RunPlan::classic(5, 3, 0))
+            .with_tolerance(1e-12) // run all 5 iterations
+            .with_seed(2024);
         let pjrt_out = drive(&backend, &cfg, None, None)
             .map_err(|e| e.to_string())?
             .output;

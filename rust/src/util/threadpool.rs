@@ -1,8 +1,10 @@
 //! Minimal scoped data-parallel helpers (no rayon/tokio offline).
 //!
 //! The native engine splits V-Sample's cube range across OS threads via
-//! `parallel_chunks`; the coordinator's job service uses `WorkerPool`
-//! for long-lived workers fed by an MPSC channel.
+//! `parallel_chunks`. `WorkerPool` is a general long-lived worker pool
+//! fed by an MPSC channel; the coordinator's `Scheduler` runs its own
+//! priority/requeue-aware pool instead (plain FIFO can't time-slice),
+//! so `WorkerPool` remains as a utility for fire-and-forget workloads.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};

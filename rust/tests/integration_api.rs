@@ -1,6 +1,6 @@
 //! Facade-level integration tests: closure integrands over per-axis
-//! bounds, batch closures, grid export/warm-start, observers, and
-//! escalation through `api::Integrator`.
+//! bounds, batch closures, grid export/warm-start, observers,
+//! escalation, and resumable sessions through `api::Integrator`.
 
 use mcubes::prelude::*;
 
@@ -116,9 +116,7 @@ fn closure_agrees_with_rescaled_registry_integrand() {
     let mk_cfg = |intg: Integrator| {
         intg.maxcalls(1 << 14)
             .tolerance(1e-12) // run a fixed number of iterations
-            .max_iterations(6)
-            .adjust_iterations(4)
-            .skip_iterations(0)
+            .plan(RunPlan::classic(6, 4, 0))
             .seed(99)
     };
     let reference = mk_cfg(Integrator::new(f4.clone())).run().unwrap();
@@ -181,8 +179,7 @@ fn warm_start_is_seed_reproducible() {
             .tolerance(1e-3)
             .seed(1234)
             .warm_start(grid.clone())
-            .adjust_iterations(0)
-            .skip_iterations(0)
+            .plan(RunPlan::classic(15, 0, 0))
             .run()
             .unwrap()
     };
@@ -205,9 +202,7 @@ fn warm_start_converges_faster_than_cold() {
             .unwrap()
             .maxcalls(1 << 14)
             .tolerance(1e-3)
-            .max_iterations(20)
-            .adjust_iterations(12)
-            .skip_iterations(2)
+            .plan(RunPlan::classic(20, 12, 2))
             .seed(17)
     };
     let mut cold = cold_builder();
@@ -219,9 +214,7 @@ fn warm_start_converges_faster_than_cold() {
         .unwrap()
         .maxcalls(1 << 14)
         .tolerance(1e-3)
-        .max_iterations(20)
-        .adjust_iterations(0) // grid already adapted
-        .skip_iterations(0)
+        .plan(RunPlan::classic(20, 0, 0)) // grid already adapted
         .seed(18)
         .warm_start(grid)
         .run()
@@ -244,9 +237,7 @@ fn vegas_plus_grid_exports_and_round_trips_strat_state() {
         .unwrap()
         .maxcalls(4096) // g=4, m=1024, p=4: allocation headroom
         .tolerance(1e-12)
-        .max_iterations(6)
-        .adjust_iterations(4)
-        .skip_iterations(0)
+        .plan(RunPlan::classic(6, 4, 0))
         .seed(31)
         .sampling(Sampling::vegas_plus())
         .observe(|ev| {
@@ -270,9 +261,7 @@ fn vegas_plus_grid_exports_and_round_trips_strat_state() {
         .unwrap()
         .maxcalls(4096)
         .tolerance(1e-3)
-        .max_iterations(10)
-        .adjust_iterations(0)
-        .skip_iterations(0)
+        .plan(RunPlan::classic(10, 0, 0))
         .seed(32)
         .sampling(Sampling::vegas_plus())
         .warm_start(back)
@@ -352,6 +341,178 @@ fn baselines_honor_per_axis_bounds() {
         m.integral,
         m.sigma
     );
+}
+
+/// Sessions pull iterations one at a time; mid-run state is
+/// inspectable and the stage labels narrate the plan.
+#[test]
+fn session_steps_expose_typed_iterations() {
+    let mut session = Integrator::from_registry("f5", 4)
+        .unwrap()
+        .maxcalls(1 << 12)
+        .tolerance(1e-12) // fixed work
+        .plan(RunPlan::classic(6, 4, 1))
+        .seed(9)
+        .session()
+        .unwrap();
+    let mut labels = Vec::new();
+    while let Some(it) = session.step().unwrap() {
+        assert_eq!(it.index, labels.len());
+        assert_eq!(it.calls_used, session.calls_used());
+        labels.push((it.stage_label.clone(), it.adjusting, it.discarded));
+        if it.stop.is_none() {
+            assert!(!session.is_finished());
+        }
+    }
+    assert_eq!(labels.len(), 6);
+    assert_eq!(labels[0], ("adapt+discard".to_string(), true, true));
+    assert_eq!(labels[1], ("adapt".to_string(), true, false));
+    assert_eq!(labels[5], ("sample".to_string(), false, false));
+    assert_eq!(session.stop_reason(), Some(StopReason::Exhausted));
+    let outcome = session.finish().unwrap();
+    assert_eq!(outcome.stop, StopReason::Exhausted);
+    assert_eq!(outcome.output.iterations, 6);
+}
+
+/// Suspend/resume round-trips through the JSON checkpoint file and
+/// continues bit-identically (the full bitwise property sweep lives in
+/// rust/tests/properties.rs).
+#[test]
+fn checkpoint_file_round_trip_resumes_bitwise() {
+    let builder = || {
+        Integrator::from_registry("f4", 5)
+            .unwrap()
+            .maxcalls(1 << 12)
+            .tolerance(1e-12)
+            .plan(RunPlan::classic(7, 5, 1))
+            .seed(23)
+            .sampling(Sampling::vegas_plus())
+    };
+    let straight = builder().run().unwrap();
+
+    let mut session = builder().session().unwrap();
+    for _ in 0..3 {
+        session.step().unwrap().unwrap();
+    }
+    let path = std::env::temp_dir().join("mcubes_api_checkpoint.json");
+    session.suspend().save(&path).unwrap();
+    drop(session);
+
+    let checkpoint = Checkpoint::load(&path).unwrap();
+    assert_eq!(checkpoint.iteration(), 3);
+    let _ = std::fs::remove_file(&path);
+    let resumed = builder()
+        .resume_session(&checkpoint)
+        .unwrap()
+        .finish()
+        .unwrap()
+        .output;
+    assert_eq!(straight.integral.to_bits(), resumed.integral.to_bits());
+    assert_eq!(straight.sigma.to_bits(), resumed.sigma.to_bits());
+    assert_eq!(straight.iterations, resumed.iterations);
+}
+
+/// A checkpoint taken from a *finished* session stays finished when
+/// resumed (the stop reason round-trips through JSON), instead of
+/// silently un-finishing and folding extra iterations.
+#[test]
+fn resuming_a_finished_checkpoint_stays_finished() {
+    let builder = || {
+        Integrator::from_registry("f3", 3)
+            .unwrap()
+            .maxcalls(1 << 13)
+            .tolerance(1e-3)
+            .plan(RunPlan::classic(12, 8, 1))
+            .seed(6)
+    };
+    let mut session = builder().session().unwrap();
+    while session.step().unwrap().is_some() {}
+    assert_eq!(session.stop_reason(), Some(StopReason::Converged));
+    let final_integral = session.integral();
+    let final_iters = session.iterations();
+    let checkpoint = session.suspend();
+    assert_eq!(checkpoint.stop(), Some(StopReason::Converged));
+
+    let json = checkpoint.to_json().to_json();
+    let restored = Checkpoint::from_json(&mcubes::util::json::parse(&json).unwrap()).unwrap();
+    assert_eq!(restored, checkpoint);
+
+    let mut resumed = builder().resume_session(&restored).unwrap();
+    assert!(resumed.is_finished(), "finished checkpoints resume finished");
+    assert_eq!(resumed.stop_reason(), Some(StopReason::Converged));
+    assert!(resumed.step().unwrap().is_none(), "no extra iterations run");
+    let outcome = resumed.finish().unwrap();
+    assert_eq!(outcome.stop, StopReason::Converged);
+    assert_eq!(outcome.output.integral.to_bits(), final_integral.to_bits());
+    assert_eq!(outcome.output.iterations, final_iters);
+}
+
+/// Warm-start edge cases: a strat snapshot whose cube count doesn't
+/// match the new layout silently refreshes to the uniform allocation
+/// (the grid itself still warm-starts), and pre-checkpoint grid JSON
+/// (no "session" field, even no "strat" field) still loads.
+#[test]
+fn checkpoint_and_grid_state_edge_cases() {
+    // Donor at 4096 calls (m=1024); warm start at 2^13 (different m).
+    let mut donor = Integrator::from_registry("f4", 5)
+        .unwrap()
+        .maxcalls(4096)
+        .tolerance(1e-12)
+        .plan(RunPlan::classic(5, 3, 0))
+        .seed(41)
+        .sampling(Sampling::vegas_plus());
+    donor.run().unwrap();
+    let grid = donor.export_grid().unwrap();
+    assert!(grid.strat().is_some());
+
+    let mismatched = Integrator::from_registry("f4", 5)
+        .unwrap()
+        .maxcalls(1 << 13)
+        .tolerance(1e-12)
+        .plan(RunPlan::classic(3, 2, 0))
+        .seed(42)
+        .sampling(Sampling::vegas_plus())
+        .warm_start(grid.clone())
+        .run()
+        .unwrap();
+    assert_eq!(mismatched.iterations, 3, "mismatched-m strat refreshes to uniform");
+
+    // A bare Bins file (the pre-GridState, pre-Checkpoint schema)
+    // loads as both a GridState and a fresh-start Checkpoint.
+    let bins = Bins::uniform(5, 50);
+    let path = std::env::temp_dir().join("mcubes_api_legacy_bins.json");
+    bins.save(&path).unwrap();
+    let as_grid = GridState::load(&path).unwrap();
+    assert!(as_grid.strat().is_none());
+    let as_checkpoint = Checkpoint::load(&path).unwrap();
+    let _ = std::fs::remove_file(&path);
+    assert_eq!(as_checkpoint.iteration(), 0);
+    assert_eq!(as_checkpoint.calls_used(), 0);
+    assert_eq!(as_checkpoint.estimator(), EstimatorState::default());
+
+    // A checkpoint works anywhere a grid warm start does: resuming the
+    // fresh checkpoint equals running with the donor grid directly.
+    let from_ckpt = Integrator::from_registry("f4", 5)
+        .unwrap()
+        .maxcalls(4096)
+        .tolerance(1e-12)
+        .plan(RunPlan::classic(4, 2, 0))
+        .seed(77)
+        .resume_session(&Checkpoint::from_grid(grid.clone()))
+        .unwrap()
+        .finish()
+        .unwrap()
+        .output;
+    let from_grid = Integrator::from_registry("f4", 5)
+        .unwrap()
+        .maxcalls(4096)
+        .tolerance(1e-12)
+        .plan(RunPlan::classic(4, 2, 0))
+        .seed(77)
+        .warm_start(grid)
+        .run()
+        .unwrap();
+    assert_eq!(from_ckpt.integral.to_bits(), from_grid.integral.to_bits());
 }
 
 /// The legacy string-keyed flow still works through IntegrandSpec.

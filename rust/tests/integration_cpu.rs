@@ -2,7 +2,7 @@
 //! facade) on the native engine against the paper's integrand suite
 //! and known true values.
 
-use mcubes::api::Integrator;
+use mcubes::api::{Integrator, RunPlan};
 use mcubes::baselines::{
     gvegas_integrate, miser_integrate, plain_mc_integrate, vegas_serial_integrate, zmc_integrate,
     GvegasConfig, MiserConfig, PlainMcConfig, ZmcConfig,
@@ -14,9 +14,7 @@ fn facade(f: &IntegrandRef, calls: usize, tau: f64, seed: u32) -> Integrator {
     Integrator::new(f.clone())
         .maxcalls(calls)
         .tolerance(tau)
-        .max_iterations(20)
-        .adjust_iterations(12)
-        .skip_iterations(2)
+        .plan(RunPlan::classic(20, 12, 2))
         .seed(seed)
 }
 
@@ -123,7 +121,7 @@ fn baselines_agree_on_smooth_integrand() {
             "{label}: I={integral} truth={truth} sigma={sigma}"
         );
     };
-    let v = vegas_serial_integrate(&*f, 1 << 14, 1e-3, 20, 21);
+    let v = vegas_serial_integrate(&f, 1 << 14, 1e-3, 20, 21);
     check("vegas_serial", v.integral, v.sigma);
     let p = plain_mc_integrate(
         &*f,
@@ -171,9 +169,7 @@ fn gvegas_and_mcubes_share_the_stream() {
     // One iteration each, no adaptation: same estimate expected.
     let mc = Integrator::new(f.clone())
         .maxcalls(1 << 12)
-        .max_iterations(1)
-        .adjust_iterations(0)
-        .skip_iterations(0)
+        .plan(RunPlan::classic(1, 0, 0))
         .tolerance(1e-12)
         .seed(77)
         .run()
@@ -201,9 +197,7 @@ fn fa_table1_estimate() {
     let out = Integrator::new(f.clone())
         .maxcalls(1 << 17)
         .tolerance(2e-2)
-        .max_iterations(10)
-        .adjust_iterations(10)
-        .skip_iterations(1)
+        .plan(RunPlan::classic(10, 10, 1))
         .seed(33)
         .escalate(2, 4)
         .run()

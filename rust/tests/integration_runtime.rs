@@ -5,7 +5,7 @@
 //! skip politely if the directory is missing (e.g. plain `cargo test`
 //! in a fresh checkout).
 
-use mcubes::api::{BackendSpec, Integrator};
+use mcubes::api::{BackendSpec, Integrator, RunPlan};
 use mcubes::coordinator::{drive, JobConfig, PjrtBackend, VSampleBackend};
 use mcubes::grid::{Bins, GridMode};
 use mcubes::integrands::by_name;
@@ -180,17 +180,15 @@ fn pjrt_vs_native_full_driver() {
             Integrator::from_registry(&meta.integrand, meta.dim)
                 .unwrap()
                 .backend(backend)
-                .config(JobConfig {
-                    maxcalls: meta.maxcalls,
-                    nb: meta.nb,
-                    nblocks: meta.nblocks,
-                    itmax: 4,
-                    ita: 3,
-                    skip: 0,
-                    tau_rel: 1e-14, // force all iterations
-                    seed: 555,
-                    ..Default::default()
-                })
+                .config(
+                    JobConfig::default()
+                        .with_maxcalls(meta.maxcalls)
+                        .with_bins(meta.nb)
+                        .with_blocks(meta.nblocks)
+                        .with_plan(RunPlan::classic(4, 3, 0))
+                        .with_tolerance(1e-14) // force all iterations
+                        .with_seed(555),
+                )
                 .run()
                 .unwrap()
         };
@@ -213,17 +211,13 @@ fn drive_runs_raw_pjrt_backend() {
     let runtime = PjrtRuntime::cpu().unwrap();
     let backend = PjrtBackend::load(&runtime, &reg, "f4", 0).unwrap();
     let meta = backend.meta().clone();
-    let cfg = JobConfig {
-        maxcalls: meta.maxcalls,
-        nb: meta.nb,
-        nblocks: meta.nblocks,
-        itmax: 2,
-        ita: 1,
-        skip: 0,
-        tau_rel: 1e-14,
-        seed: 1,
-        ..Default::default()
-    };
+    let cfg = JobConfig::default()
+        .with_maxcalls(meta.maxcalls)
+        .with_bins(meta.nb)
+        .with_blocks(meta.nblocks)
+        .with_plan(RunPlan::classic(2, 1, 0))
+        .with_tolerance(1e-14)
+        .with_seed(1);
     let outcome = drive(&backend, &cfg, None, None).unwrap();
     assert_eq!(outcome.output.iterations, 2);
     assert_eq!(outcome.grid.d(), meta.dim);

@@ -1,19 +1,16 @@
-//! Service-level integration tests: batched jobs, mixed workloads,
-//! failure isolation, closure jobs, warm starts, and metric sanity.
+//! Scheduler-level integration tests: batched jobs, mixed workloads,
+//! time-slicing, priorities, failure isolation, closure jobs, warm
+//! starts, and metric sanity.
 
-use mcubes::api::FnIntegrand;
-use mcubes::coordinator::{IntegrationService, JobConfig, JobRequest};
+use mcubes::api::{FnIntegrand, RunPlan};
+use mcubes::coordinator::{JobConfig, JobRequest, Scheduler};
 
 fn quick(seed: u32) -> JobConfig {
-    JobConfig {
-        maxcalls: 1 << 12,
-        itmax: 10,
-        ita: 7,
-        skip: 1,
-        tau_rel: 5e-3,
-        seed,
-        ..Default::default()
-    }
+    JobConfig::default()
+        .with_maxcalls(1 << 12)
+        .with_plan(RunPlan::classic(10, 7, 1))
+        .with_tolerance(5e-3)
+        .with_seed(seed)
 }
 
 #[test]
@@ -26,7 +23,7 @@ fn mixed_suite_batch() {
         ("f6", 6),
         ("cosmo", 6),
     ];
-    let mut svc = IntegrationService::new(4);
+    let mut svc = Scheduler::new(4);
     let n = 18;
     for i in 0..n {
         let (name, d) = suite[i % suite.len()];
@@ -40,11 +37,13 @@ fn mixed_suite_batch() {
     let (results, metrics) = svc.drain().unwrap();
     assert_eq!(metrics.jobs, n);
     assert_eq!(metrics.failures, 0);
+    assert!(metrics.total_calls > 0);
     for r in &results {
         let out = r.outcome.as_ref().unwrap();
         assert!(out.integral.is_finite());
         assert!(out.sigma.is_finite());
         assert!(r.grid.is_some());
+        assert!(r.stop.is_some());
     }
 }
 
@@ -59,28 +58,24 @@ fn throughput_scales_with_workers() {
         eprintln!("SKIP: single-core machine, no parallel speedup possible");
         return;
     }
-    let make_batch = |svc: &mut IntegrationService| {
+    let make_batch = |svc: &mut Scheduler| {
         for i in 0..12u64 {
             svc.submit(JobRequest::registry(
                 i,
                 "f5",
                 6,
-                JobConfig {
-                    maxcalls: 1 << 17,
-                    itmax: 6,
-                    ita: 4,
-                    skip: 1,
-                    tau_rel: 1e-12, // run all iterations: fixed work
-                    seed: 40 + i as u32,
-                    ..Default::default()
-                },
+                JobConfig::default()
+                    .with_maxcalls(1 << 17)
+                    .with_plan(RunPlan::classic(6, 4, 1))
+                    .with_tolerance(1e-12) // run all iterations: fixed work
+                    .with_seed(40 + i as u32),
             ));
         }
     };
-    let mut s1 = IntegrationService::new(1);
+    let mut s1 = Scheduler::new(1);
     make_batch(&mut s1);
     let (_, m1) = s1.drain().unwrap();
-    let mut s4 = IntegrationService::new(4);
+    let mut s4 = Scheduler::new(4);
     make_batch(&mut s4);
     let (_, m4) = s4.drain().unwrap();
     assert!(
@@ -92,8 +87,45 @@ fn throughput_scales_with_workers() {
 }
 
 #[test]
+fn time_sliced_schedule_is_bitwise_equal_to_unsliced() {
+    // The scheduler's round-robin slicing must never change numbers:
+    // run the same mixed batch with a huge quantum (run-to-completion)
+    // and a one-iteration quantum (maximum interleaving) and compare
+    // every output bit for bit.
+    let batch = |svc: &mut Scheduler| {
+        for i in 0..6u64 {
+            let name = if i % 2 == 0 { "f4" } else { "f5" };
+            svc.submit(JobRequest::registry(
+                i,
+                name,
+                5,
+                quick(900 + i as u32).with_tolerance(1e-12),
+            ));
+        }
+    };
+    let mut coarse = Scheduler::new(2);
+    coarse.calls_budget(usize::MAX);
+    batch(&mut coarse);
+    let (a, _) = coarse.drain().unwrap();
+
+    let mut fine = Scheduler::new(2);
+    fine.calls_budget(1);
+    batch(&mut fine);
+    let (b, _) = fine.drain().unwrap();
+
+    for (ra, rb) in a.iter().zip(&b) {
+        assert_eq!(ra.id, rb.id);
+        let (oa, ob) = (ra.outcome.as_ref().unwrap(), rb.outcome.as_ref().unwrap());
+        assert_eq!(oa.integral.to_bits(), ob.integral.to_bits(), "job {}", ra.id);
+        assert_eq!(oa.sigma.to_bits(), ob.sigma.to_bits(), "job {}", ra.id);
+        assert_eq!(oa.iterations, ob.iterations);
+        assert!(rb.slices >= oa.iterations, "one-call quantum slices per iteration");
+    }
+}
+
+#[test]
 fn failures_are_isolated() {
-    let mut svc = IntegrationService::new(3);
+    let mut svc = Scheduler::new(3);
     for i in 0..9u64 {
         let name = if i % 3 == 0 { "doesnotexist" } else { "f3" };
         svc.submit(JobRequest::registry(i, name, 3, quick(i as u32)));
@@ -112,7 +144,7 @@ fn failures_are_isolated() {
 #[test]
 fn queue_time_reflects_backlog() {
     // With one worker and several jobs, later jobs must wait.
-    let mut svc = IntegrationService::new(1);
+    let mut svc = Scheduler::new(1);
     for i in 0..6u64 {
         svc.submit(JobRequest::registry(i, "f4", 5, quick(i as u32)));
     }
@@ -125,7 +157,7 @@ fn queue_time_reflects_backlog() {
 
 #[test]
 fn closure_jobs_mix_with_registry_jobs() {
-    let mut svc = IntegrationService::new(3);
+    let mut svc = Scheduler::new(3);
     svc.submit(JobRequest::registry(0, "f3", 3, quick(1)));
     svc.submit(JobRequest::custom(
         1,
@@ -144,43 +176,64 @@ fn closure_jobs_mix_with_registry_jobs() {
 }
 
 #[test]
-fn warm_start_round_trips_through_service() {
+fn results_stream_in_completion_order() {
+    // High-priority short jobs behind one long blocker on a single
+    // worker: the stream must yield them as they finish, not in
+    // submission order.
+    let mut svc = Scheduler::new(1);
+    svc.submit(JobRequest::registry(
+        0,
+        "f5",
+        6,
+        JobConfig::default()
+            .with_maxcalls(1 << 16)
+            .with_plan(RunPlan::classic(8, 5, 0))
+            .with_tolerance(1e-12),
+    ));
+    for i in 1..4u64 {
+        svc.submit(JobRequest::registry(i, "f3", 3, quick(i as u32)).with_priority(i as i32));
+    }
+    let stream = svc.stream();
+    assert_eq!(stream.total(), 4);
+    let ids: Vec<u64> = stream.map(|r| r.id).collect();
+    assert_eq!(ids.len(), 4);
+    // The blocker (id 0) was picked up first on the lone worker, but
+    // among the queued rest, priority order (3, 2, 1) must hold.
+    let pos = |id: u64| ids.iter().position(|&x| x == id).unwrap();
+    assert!(pos(3) < pos(2), "{ids:?}");
+    assert!(pos(2) < pos(1), "{ids:?}");
+}
+
+#[test]
+fn warm_start_round_trips_through_scheduler() {
     // Grid exported by one batch warm-starts the next; warm jobs skip
     // the adjust phase and still converge.
-    let mut svc = IntegrationService::new(2);
+    let mut svc = Scheduler::new(2);
     svc.submit(JobRequest::registry(
         0,
         "f4",
         5,
-        JobConfig {
-            maxcalls: 1 << 13,
-            itmax: 20,
-            ita: 12,
-            skip: 2,
-            tau_rel: 5e-3,
-            seed: 7,
-            ..Default::default()
-        },
+        JobConfig::default()
+            .with_maxcalls(1 << 13)
+            .with_plan(RunPlan::classic(20, 12, 2))
+            .with_tolerance(5e-3)
+            .with_seed(7),
     ));
     let (results, _) = svc.drain().unwrap();
     let grid = results[0].grid.clone().expect("donor grid");
 
-    let mut svc = IntegrationService::new(2);
+    let mut svc = Scheduler::new(2);
     for i in 0..3u64 {
         svc.submit(
             JobRequest::registry(
                 i,
                 "f4",
                 5,
-                JobConfig {
-                    maxcalls: 1 << 13,
-                    itmax: 20,
-                    ita: 0,
-                    skip: 0,
-                    tau_rel: 5e-3,
-                    seed: 70 + i as u32,
-                    ..Default::default()
-                },
+                JobConfig::default()
+                    .with_maxcalls(1 << 13)
+                    .with_plan(RunPlan::classic(20, 0, 0))
+                    .with_tolerance(5e-3)
+                    .with_seed(70 + i as u32),
             )
             .with_warm_start(grid.clone()),
         );

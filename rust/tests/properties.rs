@@ -4,11 +4,13 @@
 //! `eval_batch` path must be *bitwise* identical to the scalar default
 //! through the identical engine pipeline.
 
+use mcubes::api::{Checkpoint, Integrator, RunPlan, Session};
+use mcubes::coordinator::{JobConfig, NativeBackend, StratifiedBackend, VSampleBackend};
 use mcubes::engine::{vsample_stratified, NativeEngine, ScalarEval, VSampleOpts};
-use mcubes::estimator::{IterationResult, WeightedEstimator};
+use mcubes::estimator::{Convergence, IterationResult, WeightedEstimator};
 use mcubes::grid::{rebin, smooth_weights, Bins, GridMode};
 use mcubes::integrands::{by_name, ALL_NAMES};
-use mcubes::strat::{Allocation, Layout, MIN_SAMPLES_PER_CUBE};
+use mcubes::strat::{Allocation, Layout, Sampling, MIN_SAMPLES_PER_CUBE};
 use mcubes::util::prop::{property, Gen};
 
 /// Any rebin of a valid grid with positive weights stays a valid grid.
@@ -463,6 +465,271 @@ fn prop_stratified_thread_invariance_and_beta0_equivalence() {
                     return Err(format!("{name} d={d}: uniform histograms differ"));
                 }
             }
+        }
+        Ok(())
+    });
+}
+
+/// A frozen reimplementation of the *pre-redesign* driver loop
+/// (`itmax`/`ita`/`skip` flat knobs, built from the same public
+/// building blocks): the oracle the session-based rewrite must
+/// reproduce bitwise.
+#[allow(clippy::too_many_arguments)]
+fn legacy_driver_oracle(
+    backend: &dyn VSampleBackend,
+    d: usize,
+    nb: usize,
+    seed: u32,
+    tau: f64,
+    itmax: usize,
+    ita: usize,
+    skip: usize,
+) -> (WeightedEstimator, Bins, usize, bool) {
+    let conv = Convergence::with_tau(tau);
+    let mut bins = Bins::uniform(d, nb);
+    let mut est = WeightedEstimator::new();
+    let mut iterations = 0usize;
+    let mut converged = false;
+    for it in 0..itmax {
+        let adjust = it < ita;
+        let (r, contrib) = backend.run(&bins, seed, it as u32, adjust).unwrap();
+        iterations += 1;
+        if it >= skip {
+            est.push(r);
+        }
+        if adjust {
+            if let Some(c) = contrib {
+                bins.adjust(&c);
+            }
+            if est.iterations() >= 2 && est.chi2_dof() > conv.max_chi2_dof {
+                est.reset();
+            }
+        }
+        if conv.satisfied(&est) {
+            converged = true;
+        }
+        if converged {
+            break;
+        }
+    }
+    (est, bins, iterations, converged)
+}
+
+/// **Acceptance property.** `RunPlan::classic` driven through
+/// `Session::step()` (which is what `Integrator::run()` now drains) is
+/// bitwise identical — integral, sigma, chi^2/dof, iteration count,
+/// and the final importance grid — to the pre-redesign flat-knob
+/// driver loop, on BOTH engines (uniform m-Cubes and VEGAS+
+/// stratified), across random shapes, schedules, seeds, and thread
+/// counts.
+#[test]
+fn prop_classic_session_bitwise_matches_legacy_driver() {
+    property("classic_vs_legacy_driver", 16, |g: &mut Gen, i| {
+        let names = ["f2", "f3", "f4", "f5"];
+        let name = names[i % names.len()];
+        let d = g.usize_range(2, 5);
+        let calls = g.usize_range(1024, 8192);
+        let nb = g.usize_range(8, 40);
+        let nblocks = g.usize_range(1, 8);
+        let seed = g.usize_range(0, 1 << 30) as u32;
+        let itmax = g.usize_range(1, 8);
+        let ita = g.usize_range(0, itmax);
+        let skip = g.usize_range(0, itmax.saturating_sub(1));
+        // Loose tau sometimes converges mid-run; tiny tau never does —
+        // both stop paths must agree with the oracle.
+        let tau = if g.f64() < 0.5 { 5e-2 } else { 1e-12 };
+        let threads = g.usize_range(1, 4);
+        let vegas = g.f64() < 0.5;
+        let beta = g.f64_range(0.0, 1.0);
+        let f = by_name(name, d).map_err(|e| e.to_string())?;
+        let layout = Layout::compute(d, calls, nb, nblocks).map_err(|e| e.to_string())?;
+
+        let (est, bins, iters, converged) = if vegas {
+            let backend = StratifiedBackend::new(f.clone(), layout, threads, beta, None)
+                .map_err(|e| e.to_string())?;
+            legacy_driver_oracle(&backend, d, nb, seed, tau, itmax, ita, skip)
+        } else {
+            let backend = NativeBackend::new(f.clone(), layout, threads);
+            legacy_driver_oracle(&backend, d, nb, seed, tau, itmax, ita, skip)
+        };
+
+        let sampling = if vegas {
+            Sampling::VegasPlus { beta }
+        } else {
+            Sampling::Uniform
+        };
+        let cfg = JobConfig::default()
+            .with_maxcalls(calls)
+            .with_bins(nb)
+            .with_blocks(nblocks)
+            .with_tolerance(tau)
+            .with_plan(RunPlan::classic(itmax, ita, skip))
+            .with_seed(seed)
+            .with_threads(threads)
+            .with_sampling(sampling);
+
+        // Drive the plan one Session::step() at a time...
+        let mut session = Session::new(f.clone(), cfg.clone()).map_err(|e| e.to_string())?;
+        let mut stepped = 0usize;
+        while session.step().map_err(|e| e.to_string())?.is_some() {
+            stepped += 1;
+        }
+        let outcome = session.finish().map_err(|e| e.to_string())?;
+        let out = &outcome.output;
+
+        // ...and confirm the blocking facade is the same thing drained.
+        let facade = Integrator::new(f)
+            .config(cfg)
+            .run()
+            .map_err(|e| e.to_string())?;
+
+        let tag = format!(
+            "{name} d={d} calls={calls} nb={nb} ({itmax},{ita},{skip}) \
+             tau={tau:.0e} vegas={vegas}"
+        );
+        if stepped != out.iterations {
+            return Err(format!("{tag}: {stepped} steps != {} iterations", out.iterations));
+        }
+        if facade.integral.to_bits() != out.integral.to_bits()
+            || facade.sigma.to_bits() != out.sigma.to_bits()
+        {
+            return Err(format!("{tag}: facade run() != stepped session"));
+        }
+        if out.integral.to_bits() != est.integral().to_bits() {
+            return Err(format!(
+                "{tag}: integral {} != legacy {}",
+                out.integral,
+                est.integral()
+            ));
+        }
+        if out.sigma.to_bits() != est.sigma().to_bits() {
+            return Err(format!("{tag}: sigma {} != legacy {}", out.sigma, est.sigma()));
+        }
+        if out.chi2_dof.to_bits() != est.chi2_dof().to_bits() {
+            return Err(format!(
+                "{tag}: chi2 {} != legacy {}",
+                out.chi2_dof,
+                est.chi2_dof()
+            ));
+        }
+        if out.iterations != iters || out.converged != converged {
+            return Err(format!(
+                "{tag}: (iters, converged) ({}, {}) != legacy ({iters}, {converged})",
+                out.iterations, out.converged
+            ));
+        }
+        for (j, (a, b)) in outcome.grid.bins().flat().iter().zip(bins.flat()).enumerate() {
+            if a.to_bits() != b.to_bits() {
+                return Err(format!("{tag}: grid edge {j}: {a} != {b}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// **Acceptance property.** Suspend → JSON checkpoint → resume
+/// mid-run reproduces the uninterrupted run bitwise (estimates, grid,
+/// strat snapshot, call accounting) on both engines — including when
+/// the resuming config uses a different thread count (1 ↔ 4), since
+/// the engine reduction is thread-invariant.
+#[test]
+fn prop_suspend_resume_reproduces_uninterrupted_run_bitwise() {
+    property("suspend_resume_bitwise", 12, |g: &mut Gen, i| {
+        let names = ["f3", "f4", "f5"];
+        let name = names[i % names.len()];
+        let d = g.usize_range(2, 5);
+        let calls = g.usize_range(1024, 6144);
+        let nb = g.usize_range(8, 30);
+        let seed = g.usize_range(0, 1 << 30) as u32;
+        let itmax = g.usize_range(2, 8);
+        let ita = g.usize_range(0, itmax);
+        let skip = g.usize_range(0, itmax - 1);
+        let vegas = g.f64() < 0.5;
+        let f = by_name(name, d).map_err(|e| e.to_string())?;
+        let cfg = |threads: usize| {
+            JobConfig::default()
+                .with_maxcalls(calls)
+                .with_bins(nb)
+                .with_plan(RunPlan::classic(itmax, ita, skip))
+                .with_tolerance(1e-12) // fixed work: run the whole plan
+                .with_seed(seed)
+                .with_threads(threads)
+                .with_sampling(if vegas {
+                    Sampling::VegasPlus { beta: 0.75 }
+                } else {
+                    Sampling::Uniform
+                })
+        };
+        let tag = format!("{name} d={d} calls={calls} ({itmax},{ita},{skip}) vegas={vegas}");
+
+        let straight = Session::new(f.clone(), cfg(1))
+            .map_err(|e| e.to_string())?
+            .finish()
+            .map_err(|e| e.to_string())?;
+
+        // Step a twin up to a random cut, suspend, round-trip the
+        // checkpoint through its JSON form, resume on 4 threads.
+        let cut = g.usize_range(1, itmax - 1);
+        let mut first_leg = Session::new(f.clone(), cfg(1)).map_err(|e| e.to_string())?;
+        for _ in 0..cut {
+            if first_leg.step().map_err(|e| e.to_string())?.is_none() {
+                break;
+            }
+        }
+        let checkpoint = first_leg.suspend();
+        drop(first_leg);
+        let json = checkpoint.to_json().to_json();
+        let restored = Checkpoint::from_json(&mcubes::util::json::parse(&json).unwrap())
+            .map_err(|e| e.to_string())?;
+        if restored != checkpoint {
+            return Err(format!("{tag}: checkpoint JSON round-trip changed state"));
+        }
+        let resumed = Session::resume(f, cfg(4), &restored)
+            .map_err(|e| e.to_string())?
+            .finish()
+            .map_err(|e| e.to_string())?;
+
+        let (a, b) = (&straight.output, &resumed.output);
+        if a.integral.to_bits() != b.integral.to_bits()
+            || a.sigma.to_bits() != b.sigma.to_bits()
+            || a.chi2_dof.to_bits() != b.chi2_dof.to_bits()
+        {
+            return Err(format!(
+                "{tag} cut={cut}: resumed ({}, {}) != straight ({}, {})",
+                b.integral, b.sigma, a.integral, a.sigma
+            ));
+        }
+        if a.iterations != b.iterations || a.calls_used != b.calls_used {
+            return Err(format!(
+                "{tag} cut={cut}: accounting differs: ({}, {}) vs ({}, {})",
+                b.iterations, b.calls_used, a.iterations, a.calls_used
+            ));
+        }
+        for (j, (x, y)) in straight
+            .grid
+            .bins()
+            .flat()
+            .iter()
+            .zip(resumed.grid.bins().flat())
+            .enumerate()
+        {
+            if x.to_bits() != y.to_bits() {
+                return Err(format!("{tag} cut={cut}: grid edge {j} differs"));
+            }
+        }
+        match (straight.grid.strat(), resumed.grid.strat()) {
+            (None, None) => {}
+            (Some(sa), Some(sb)) => {
+                if sa.counts != sb.counts {
+                    return Err(format!("{tag} cut={cut}: strat counts differ"));
+                }
+                for (x, y) in sa.damped.iter().zip(&sb.damped) {
+                    if x.to_bits() != y.to_bits() {
+                        return Err(format!("{tag} cut={cut}: strat damped differs"));
+                    }
+                }
+            }
+            _ => return Err(format!("{tag} cut={cut}: strat presence differs")),
         }
         Ok(())
     });
