@@ -11,9 +11,12 @@
 
 use mcubes::api::{Integrator, RunPlan, Sampling};
 use mcubes::coordinator::{IntegrationOutput, JobConfig, JobRequest, Scheduler};
-use mcubes::engine::{NativeEngine, ScalarEval, VSampleOpts};
+use mcubes::engine::{
+    FillPath, NativeEngine, PointBlock, ScalarEval, VSampleOpts, VegasMap, BLOCK_POINTS,
+};
 use mcubes::grid::Bins;
 use mcubes::integrands::by_name;
+use mcubes::rng::philox_simd::LANES;
 use mcubes::rng::uniforms_into;
 use mcubes::strat::Layout;
 use mcubes::util::benchkit::{bench, black_box, emit_bench, BenchOpts};
@@ -35,7 +38,7 @@ fn main() {
             let mut buf = [0.0f64; 8];
             let mut acc = 0.0;
             for s in 0..n {
-                uniforms_into(s, 0, 42, &mut buf);
+                uniforms_into(s as u64, 0, 42, &mut buf);
                 acc += buf[0];
             }
             black_box(acc)
@@ -185,6 +188,138 @@ fn main() {
                 tag,
                 "batch_mevals_per_sec".into(),
                 format!("{mevals:.3}"),
+            ]);
+        }
+        println!("{}", table.render());
+    }
+
+    // ---- SIMD vs scalar fill (the lane-parallel sampling core) --------
+    // Two measurements per case. (1) The fill phase in isolation —
+    // Philox + VEGAS transform into a PointBlock, no evaluation and no
+    // reduction — comparing `VegasMap::fill_points` (lane-parallel)
+    // against `fill_points_scalar` (the per-point reference). This is
+    // the `simd_fill_speedup` series. (2) The whole V-Sample pass under
+    // each FillPath, which dilutes the win by the eval + reduce share.
+    // Both paths are bitwise identical (property-tested); only the
+    // schedule differs.
+    {
+        println!("\nSIMD vs scalar fill ({LANES} lanes, 1 thread):");
+        let mut table = Table::new(&[
+            "integrand", "d", "simd fill ms", "scalar fill ms", "fill speedup",
+            "vsample speedup",
+        ]);
+        for (name, d) in [("f4", 5), ("f4", 8), ("f5", 5), ("f5", 8)] {
+            let f = by_name(name, d).unwrap();
+            let calls = 1 << 17;
+            let layout = Layout::compute(d, calls, 50, 8).unwrap();
+            let bins = Bins::uniform(d, 50);
+            let map = VegasMap::new(&layout, &bins, &f.bounds());
+            let p = layout.p;
+            // Mirror the engine's block loop exactly: whole-cube
+            // batches with lane groups running across cube boundaries.
+            let cubes_per_block = (BLOCK_POINTS / p).max(1);
+            let cap = cubes_per_block * p;
+            let mut blk = PointBlock::with_capacity(d, cap);
+            let mut bidx = vec![0usize; cap * d];
+            let mut cube_coords = vec![0usize; cubes_per_block * d];
+            let mut coords = vec![0usize; d];
+            let mut bench_fill = |path: FillPath| {
+                bench(opts, || {
+                    let mut acc = 0.0;
+                    let mut cube = 0usize;
+                    while cube < layout.m {
+                        let ncubes = cubes_per_block.min(layout.m - cube);
+                        blk.reset(ncubes * p);
+                        for c in 0..ncubes {
+                            layout.cube_coords(cube + c, &mut coords);
+                            cube_coords[c * d..(c + 1) * d].copy_from_slice(&coords);
+                        }
+                        let base = cube as u64 * p as u64;
+                        match path {
+                            FillPath::Simd => map.fill_span(
+                                &cube_coords[..ncubes * d],
+                                ncubes,
+                                p,
+                                base,
+                                0,
+                                1,
+                                &mut blk,
+                                &mut bidx,
+                            ),
+                            FillPath::Scalar => {
+                                for c in 0..ncubes {
+                                    map.fill_points_scalar(
+                                        &cube_coords[c * d..(c + 1) * d],
+                                        base + (c * p) as u64,
+                                        p,
+                                        0,
+                                        1,
+                                        &mut blk,
+                                        c * p,
+                                        &mut bidx,
+                                    );
+                                }
+                            }
+                        }
+                        acc += blk.jac(0);
+                        cube += ncubes;
+                    }
+                    black_box(acc)
+                })
+            };
+            let t_fill_simd = bench_fill(FillPath::Simd);
+            let t_fill_scalar = bench_fill(FillPath::Scalar);
+            let fill_speedup = t_fill_scalar.median_ms() / t_fill_simd.median_ms();
+
+            let vopts = VSampleOpts {
+                seed: 1,
+                iteration: 0,
+                adjust: true,
+                threads: 1,
+            };
+            let t_vs_simd = bench(opts, || {
+                black_box(NativeEngine.vsample_with_fill(
+                    &*f,
+                    &layout,
+                    &bins,
+                    &vopts,
+                    FillPath::Simd,
+                ))
+            });
+            let t_vs_scalar = bench(opts, || {
+                black_box(NativeEngine.vsample_with_fill(
+                    &*f,
+                    &layout,
+                    &bins,
+                    &vopts,
+                    FillPath::Scalar,
+                ))
+            });
+            let vsample_speedup = t_vs_scalar.median_ms() / t_vs_simd.median_ms();
+
+            table.row(vec![
+                name.into(),
+                d.to_string(),
+                format!("{:.2}", t_fill_simd.median_ms()),
+                format!("{:.2}", t_fill_scalar.median_ms()),
+                format!("{fill_speedup:.2}x"),
+                format!("{vsample_speedup:.2}x"),
+            ]);
+            let tag = format!("simd_fill_{name}_d{d}");
+            emit_bench(&tag, "simd_fill_ms", t_fill_simd.median_ms(), "ms");
+            emit_bench(&tag, "scalar_fill_ms", t_fill_scalar.median_ms(), "ms");
+            emit_bench(&tag, "simd_fill_speedup", fill_speedup, "x");
+            emit_bench(&tag, "simd_vsample_speedup", vsample_speedup, "x");
+            emit_bench(&tag, "lanes", LANES as f64, "lanes");
+            csv.row(vec![
+                tag.clone(),
+                "simd_fill_speedup".into(),
+                format!("{fill_speedup:.4}"),
+            ]);
+            csv.row(vec![
+                tag,
+                "simd_vsample_speedup".into(),
+                format!("{vsample_speedup:.4}"),
             ]);
         }
         println!("{}", table.render());

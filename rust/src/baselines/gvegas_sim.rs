@@ -143,7 +143,7 @@ pub fn gvegas_integrate(f: &dyn Integrand, cfg: &GvegasConfig) -> BaselineResult
                         layout.cube_coords(cube, &mut coords[..d]);
                         for k in 0..p {
                             let j = c * p + k;
-                            let sidx = (cube * p + k) as u32;
+                            let sidx = (cube * p + k) as u64;
                             uniforms_into(sidx, it as u32, cfg.seed, &mut u[..d]);
                             map.fill_point(&coords[..d], &u[..d], &mut blk, j, &mut bidx);
                         }

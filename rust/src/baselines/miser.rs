@@ -38,7 +38,7 @@ impl Default for MiserConfig {
 struct MiserState<'a> {
     f: &'a dyn Integrand,
     seed: u32,
-    counter: u32,
+    counter: u64,
     calls_used: usize,
     /// Reused block-evaluation scratch (the recursion calls `plain`
     /// thousands of times; allocating per node would dominate).
@@ -62,7 +62,7 @@ impl<'a> MiserState<'a> {
             &mut self.block,
             &mut self.vals,
         );
-        self.counter = self.counter.wrapping_add(n as u32);
+        self.counter += n as u64;
         self.calls_used += n;
         let nf = n as f64;
         let mean = s1 / nf;

@@ -56,7 +56,7 @@ struct Block {
 struct ZmcState<'a> {
     f: &'a dyn Integrand,
     seed: u32,
-    counter: u32,
+    counter: u64,
     calls: usize,
     /// Reused block-evaluation scratch across the whole tree search.
     block: PointBlock,
@@ -76,7 +76,7 @@ impl<'a> ZmcState<'a> {
             &mut self.block,
             &mut self.vals,
         );
-        self.counter = self.counter.wrapping_add(n as u32);
+        self.counter += n as u64;
         self.calls += n;
         let nf = n as f64;
         let mean = s1 / nf;

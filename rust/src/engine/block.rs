@@ -36,7 +36,7 @@
 use super::MAX_DIM;
 use crate::grid::Bins;
 use crate::integrands::Integrand;
-use crate::rng::uniforms_into;
+use crate::rng::philox_simd::{uniforms_lanes, LANES};
 use crate::strat::{Bounds, Layout};
 
 /// Default number of points a block holds — sized so coords + jacobians
@@ -214,13 +214,15 @@ impl Integrand for ScalarEval<'_> {
 /// the stratified engine, and the gVegas simulator, so the batched fills
 /// stay bit-identical to the scalar loops they replaced.
 pub struct VegasMap<'a> {
-    edges: &'a [f64],
-    d: usize,
-    nb: usize,
-    inv_g: f64,
-    nbf: f64,
-    lo_ax: [f64; MAX_DIM],
-    span_ax: [f64; MAX_DIM],
+    // Internals shared with the lane-parallel fill in `engine::simd`
+    // (`VegasMap::fill_points` lives there, next to the SIMD core).
+    pub(super) edges: &'a [f64],
+    pub(super) d: usize,
+    pub(super) nb: usize,
+    pub(super) inv_g: f64,
+    pub(super) nbf: f64,
+    pub(super) lo_ax: [f64; MAX_DIM],
+    pub(super) span_ax: [f64; MAX_DIM],
     /// Volume of the physical box (the global Jacobian factor).
     pub vol: f64,
 }
@@ -290,9 +292,16 @@ impl<'a> VegasMap<'a> {
 /// `(counter0.., stream, seed)` and evaluating through
 /// `Integrand::eval_batch` in block-sized chunks.
 ///
+/// The fill runs through the lane-parallel SIMD core
+/// ([`crate::rng::philox_simd::uniforms_lanes`]) — the same counters
+/// in the same order as the scalar loop, so the sums stay
+/// bitwise-identical to the per-point loop this replaces in
+/// `plain_mc`, `miser`, and `zmc_sim`. The counter is 64-bit: for
+/// `counter0 + n < 2^32` the draws match the old `u32` stream exactly,
+/// and beyond it the stream extends instead of wrapping.
+///
 /// Returns `(sum v, sum v^2)` with `v = f(x) * vol`, accumulated in
-/// counter order — bitwise-identical to the scalar per-point loop it
-/// replaces in `plain_mc`, `miser`, and `zmc_sim`.
+/// counter order.
 #[allow(clippy::too_many_arguments)]
 pub fn accumulate_uniform_box(
     f: &dyn Integrand,
@@ -300,7 +309,7 @@ pub fn accumulate_uniform_box(
     hi: &[f64],
     seed: u32,
     stream: u32,
-    counter0: u32,
+    counter0: u64,
     n: usize,
     block: &mut PointBlock,
     vals: &mut Vec<f64>,
@@ -313,15 +322,15 @@ pub fn accumulate_uniform_box(
     if vals.len() < cap {
         vals.resize(cap, 0.0);
     }
-    // Stack scratch for the per-point uniforms (heap fallback above
+    // Stack scratch for the lane-group uniforms (heap fallback above
     // MAX_DIM) — this runs once per MISER/ZMC tree node, so a per-call
     // heap alloc here would undo the callers' reused-scratch design.
-    let mut u_small = [0.0f64; MAX_DIM];
+    let mut u_small = [[0.0f64; LANES]; MAX_DIM];
     let mut u_big;
-    let u: &mut [f64] = if d <= MAX_DIM {
+    let u: &mut [[f64; LANES]] = if d <= MAX_DIM {
         &mut u_small[..d]
     } else {
-        u_big = vec![0.0f64; d];
+        u_big = vec![[0.0f64; LANES]; d];
         &mut u_big
     };
     let mut s1 = 0.0;
@@ -330,13 +339,22 @@ pub fn accumulate_uniform_box(
     while done < n {
         let m = (n - done).min(cap);
         block.reset(m);
-        for k in 0..m {
-            let ctr = counter0.wrapping_add((done + k) as u32);
-            uniforms_into(ctr, stream, seed, u);
+        let mut filled = 0usize;
+        while filled < m {
+            let take = (m - filled).min(LANES);
+            uniforms_lanes::<LANES>(counter0 + (done + filled) as u64, stream, seed, u);
             for i in 0..d {
-                block.set_coord(i, k, lo[i] + u[i] * (hi[i] - lo[i]));
+                // Same per-point expression as the scalar loop
+                // (`lo + u * (hi - lo)`), one lane group at a time.
+                let (lo_i, w_i) = (lo[i], hi[i] - lo[i]);
+                for l in 0..take {
+                    block.set_coord(i, filled + l, lo_i + u[i][l] * w_i);
+                }
             }
-            block.set_jac(k, vol);
+            for l in 0..take {
+                block.set_jac(filled + l, vol);
+            }
+            filled += take;
         }
         f.eval_batch(block, &mut vals[..m]);
         for &fv in vals[..m].iter() {
@@ -353,6 +371,7 @@ pub fn accumulate_uniform_box(
 mod tests {
     use super::*;
     use crate::integrands::by_name;
+    use crate::rng::uniforms_into;
 
     #[test]
     fn block_layout_round_trips() {
@@ -426,13 +445,13 @@ mod tests {
         let hi = [1.0, 0.75, 0.9];
         let vol: f64 = lo.iter().zip(&hi).map(|(a, b)| b - a).product();
         let n = 777usize;
-        let (seed, stream, counter0) = (9u32, 2u32, 13u32);
+        let (seed, stream, counter0) = (9u32, 2u32, 13u64);
         let mut s1 = 0.0;
         let mut s2 = 0.0;
         let mut u = [0.0f64; 3];
         let mut x = [0.0f64; 3];
         for s in 0..n {
-            uniforms_into(counter0.wrapping_add(s as u32), stream, seed, &mut u);
+            uniforms_into(counter0 + s as u64, stream, seed, &mut u);
             for i in 0..3 {
                 x[i] = lo[i] + u[i] * (hi[i] - lo[i]);
             }

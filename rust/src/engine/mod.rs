@@ -25,21 +25,28 @@
 //! each worker fills a structure-of-arrays [`PointBlock`] with the
 //! VEGAS-transformed points of a batch of whole sub-cubes, evaluates
 //! the whole block through one `Integrand::eval_batch` call, then
-//! reduces per cube in sample order. The Philox streams, the transform,
-//! and the ordered reduction are unchanged, so results are bitwise
-//! identical to the scalar per-point loop this replaced (asserted by
-//! the batch-vs-scalar property tests).
+//! reduces per cube in sample order. The fill itself runs through the
+//! lane-parallel SIMD core ([`simd`]): [`crate::rng::philox_simd`]
+//! computes `LANES` Philox counters per step and
+//! [`VegasMap::fill_points`] applies the bin lookup + affine transform
+//! to the whole lane group. The Philox streams, the transform, and the
+//! ordered reduction are unchanged, so results are bitwise identical
+//! to the scalar per-point loop this replaced (asserted by the
+//! batch-vs-scalar and simd-vs-scalar property tests). Sample indices
+//! are 64-bit end to end — layouts above 2^32 calls draw distinct
+//! counters instead of silently truncating.
 
 pub mod block;
+pub mod simd;
 pub mod stratified;
 
 pub use block::{accumulate_uniform_box, PointBlock, ScalarEval, VegasMap, BLOCK_POINTS};
-pub use stratified::vsample_stratified;
+pub use simd::FillPath;
+pub use stratified::{vsample_stratified, vsample_stratified_with_fill};
 
 use crate::estimator::IterationResult;
 use crate::grid::Bins;
 use crate::integrands::Integrand;
-use crate::rng::uniforms_into;
 use crate::strat::Layout;
 use crate::util::threadpool::parallel_chunks;
 
@@ -106,7 +113,26 @@ impl NativeEngine {
         bins: &Bins,
         opts: &VSampleOpts,
     ) -> (IterationResult, Option<Vec<f64>>) {
+        self.vsample_with_fill(f, layout, bins, opts, FillPath::Simd)
+    }
+
+    /// [`NativeEngine::vsample`] with an explicit [`FillPath`].
+    ///
+    /// The two paths are bitwise identical (the SIMD determinism
+    /// contract, property-tested); `FillPath::Scalar` exists for the
+    /// equivalence tests and the `simd_fill_speedup` microbench.
+    pub fn vsample_with_fill(
+        &self,
+        f: &dyn Integrand,
+        layout: &Layout,
+        bins: &Bins,
+        opts: &VSampleOpts,
+        fill: FillPath,
+    ) -> (IterationResult, Option<Vec<f64>>) {
         assert!(layout.d <= MAX_DIM, "d > MAX_DIM");
+        if let Err(e) = layout.validate() {
+            panic!("invalid layout: {e}");
+        }
         assert_eq!(bins.d(), layout.d);
         assert_eq!(bins.nb(), layout.nb);
 
@@ -118,7 +144,7 @@ impl NativeEngine {
                 (t0..t1)
                     .map(|t| {
                         let (lo, hi) = reduction_task_span(layout.m, ntasks, t);
-                        sample_cube_range(f, layout, bins, opts, lo, hi)
+                        sample_cube_range(f, layout, bins, opts, lo, hi, fill)
                     })
                     .collect()
             });
@@ -149,8 +175,12 @@ impl NativeEngine {
 ///
 /// Batch pipeline: fill a [`PointBlock`] with the points of a batch of
 /// whole cubes → one `eval_batch` call → ordered per-cube reduction.
-/// Point order, Philox counters, and every accumulation order match the
-/// scalar loop this replaced, so partials are bitwise identical.
+/// The fill runs through the lane-parallel SIMD core by default
+/// (`FillPath::Simd`, see [`simd`]); point order, Philox counters, and
+/// every accumulation order match the scalar loop, so partials are
+/// bitwise identical either way. The global sample index is 64-bit —
+/// layouts beyond 2^32 calls keep distinct counters per sample instead
+/// of silently truncating.
 fn sample_cube_range(
     f: &dyn Integrand,
     layout: &Layout,
@@ -158,6 +188,7 @@ fn sample_cube_range(
     opts: &VSampleOpts,
     cube_lo: usize,
     cube_hi: usize,
+    fill: FillPath,
 ) -> Partial {
     let d = layout.d;
     let nb = layout.nb;
@@ -172,7 +203,6 @@ fn sample_cube_range(
     let mut integral = 0.0;
     let mut variance = 0.0;
 
-    let mut u = [0.0f64; MAX_DIM];
     let mut coords = [0usize; MAX_DIM];
 
     // Whole cubes per block: at least one cube, and as many as fit the
@@ -182,6 +212,10 @@ fn sample_cube_range(
     let mut blk = PointBlock::with_capacity(d, cap);
     let mut vals = vec![0.0f64; cap];
     let mut bidx = vec![0usize; cap * d];
+    // Row-major `[ncubes][d]` lattice coords of the block's cubes —
+    // the SIMD span fill reads each lane's cube from here, so lane
+    // groups stay full across cube boundaries (crucial when p is 2).
+    let mut cube_coords = vec![0usize; cubes_per_block * d];
 
     // Decode the first cube, then advance coords as a base-g odometer —
     // avoids d divisions per cube in the hot loop (perf pass).
@@ -194,21 +228,45 @@ fn sample_cube_range(
         let npts = ncubes * p;
         blk.reset(npts);
 
-        // Fill phase: the block's points in (cube, sample) order.
+        // Decode the block's cube coords (odometer, one step per cube).
         for c in 0..ncubes {
-            for k in 0..p {
-                let j = c * p + k;
-                let sidx = ((cube + c) * p + k) as u32;
-                uniforms_into(sidx, opts.iteration, opts.seed, &mut u[..d]);
-                map.fill_point(&coords[..d], &u[..d], &mut blk, j, &mut bidx);
-            }
-            // Advance the odometer to the next cube's lattice coords.
+            cube_coords[c * d..(c + 1) * d].copy_from_slice(&coords[..d]);
             for slot in coords.iter_mut().take(d) {
                 if *slot == gm1 {
                     *slot = 0;
                 } else {
                     *slot += 1;
                     break;
+                }
+            }
+        }
+
+        // Fill phase: the block's points in (cube, sample) order — the
+        // global sample indices run consecutively across the block.
+        let base_sidx = cube as u64 * p as u64;
+        match fill {
+            FillPath::Simd => map.fill_span(
+                &cube_coords[..ncubes * d],
+                ncubes,
+                p,
+                base_sidx,
+                opts.iteration,
+                opts.seed,
+                &mut blk,
+                &mut bidx,
+            ),
+            FillPath::Scalar => {
+                for c in 0..ncubes {
+                    map.fill_points_scalar(
+                        &cube_coords[c * d..(c + 1) * d],
+                        base_sidx + (c * p) as u64,
+                        p,
+                        opts.iteration,
+                        opts.seed,
+                        &mut blk,
+                        c * p,
+                        &mut bidx,
+                    );
                 }
             }
         }

@@ -1,0 +1,350 @@
+//! The SIMD sampling core — lane-parallel Philox + VEGAS transform
+//! fill for [`PointBlock`]s.
+//!
+//! The paper's performance story is keeping the sampling kernel
+//! saturated: the Philox counter RNG and the VEGAS change of variables
+//! fused in the hot loop, uniform work per processor. The scalar
+//! engine reproduced the math but generated points one Philox block at
+//! a time; this module fills a whole *lane group* per step —
+//! [`crate::rng::philox_simd::LANES`] consecutive sample counters
+//! through the lane-parallel Philox ([`philox4x32_lanes`]), then the
+//! bin lookup + affine transform for the group, written straight into
+//! the [`PointBlock`] SoA columns. No intrinsics: the kernels are
+//! autovectorizer-shaped array loops, so the same source runs
+//! everywhere and widens under `-C target-cpu=native`.
+//!
+//! ## Determinism contract
+//!
+//! The lane-parallel fill is **bitwise identical** to the scalar
+//! reference ([`VegasMap::fill_points_scalar`]) because nothing about
+//! the arithmetic changes — only its schedule:
+//!
+//! * **Same counters.** Lane `l` of a group based at sample `s` draws
+//!   Philox counter `s + l` — exactly the index the scalar loop used.
+//!   Philox is exact integer math, so the uniforms agree bit for bit.
+//! * **Same per-point fold order.** Each point's Jacobian is
+//!   accumulated axis-by-axis in axis order within its own lane
+//!   (`jac *= nbf * w` per axis), never across lanes, so the product
+//!   tree of every point is unchanged.
+//! * **Same destinations.** Lane `l` writes block slot `k0 + l` — the
+//!   slot the scalar loop wrote — so evaluation and reduction order
+//!   downstream are untouched.
+//!
+//! Property tests (`rust/tests/properties.rs`) assert engine results
+//! are bitwise equal under [`FillPath::Simd`] and [`FillPath::Scalar`]
+//! on both engines and both `Sampling` modes; docs/sampling.md states
+//! the contract at the algorithm level.
+//!
+//! [`philox4x32_lanes`]: crate::rng::philox_simd::philox4x32_lanes
+
+use super::block::{PointBlock, VegasMap};
+use super::MAX_DIM;
+use crate::rng::philox_simd::{uniforms_lanes, LANES};
+use crate::rng::uniforms_into;
+
+/// Which fill implementation a V-Sample pass drives.
+///
+/// Both paths are bitwise identical (see the [module docs](self));
+/// `Scalar` exists as the reference for the equivalence property tests
+/// and as the baseline the `perf_microbench` `simd_fill_speedup`
+/// series is measured against.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum FillPath {
+    /// Lane-parallel fill ([`VegasMap::fill_points`]): [`LANES`]
+    /// Philox counters per step with the VEGAS transform applied to
+    /// the whole lane group. The default everywhere.
+    #[default]
+    Simd,
+    /// The per-point reference loop ([`VegasMap::fill_points_scalar`]).
+    Scalar,
+}
+
+impl VegasMap<'_> {
+    /// Lane-parallel fill: transform the `n` consecutive samples
+    /// `base_sidx .. base_sidx + n` of the sub-cube at lattice
+    /// `coords` into block slots `k0 .. k0 + n` (coords + Jacobians)
+    /// and their flat `d * nb` histogram rows into
+    /// `bidx[(k0 + j) * d ..]` — bitwise identical to
+    /// [`VegasMap::fill_points_scalar`].
+    #[allow(clippy::too_many_arguments)]
+    pub fn fill_points(
+        &self,
+        coords: &[usize],
+        base_sidx: u64,
+        n: usize,
+        iteration: u32,
+        seed: u32,
+        block: &mut PointBlock,
+        k0: usize,
+        bidx: &mut [usize],
+    ) {
+        self.fill_lanes(coords, 1, n, base_sidx, iteration, seed, block, k0, bidx);
+    }
+
+    /// Lane-parallel fill of a whole multi-cube span: `ncubes`
+    /// consecutive sub-cubes with `p` samples each, drawing the
+    /// consecutive sample indices `base_sidx .. base_sidx + ncubes*p`
+    /// (the uniform engine's counter layout runs straight across cube
+    /// boundaries), with each cube's lattice coords provided row-major
+    /// in `cube_coords` (`[ncubes][d]`). Writes block slots
+    /// `0 .. ncubes*p`.
+    ///
+    /// This is the uniform engine's fill: lane groups stay full even
+    /// when `p` is tiny (the common `p = 2` regime would waste most of
+    /// a lane group under the per-cube [`VegasMap::fill_points`]).
+    /// Bitwise identical to per-cube scalar fills over the same span.
+    #[allow(clippy::too_many_arguments)]
+    pub fn fill_span(
+        &self,
+        cube_coords: &[usize],
+        ncubes: usize,
+        p: usize,
+        base_sidx: u64,
+        iteration: u32,
+        seed: u32,
+        block: &mut PointBlock,
+        bidx: &mut [usize],
+    ) {
+        self.fill_lanes(cube_coords, ncubes, p, base_sidx, iteration, seed, block, 0, bidx);
+    }
+
+    /// The one lane-parallel fill kernel behind [`VegasMap::fill_points`]
+    /// (`ncubes = 1`) and [`VegasMap::fill_span`] (`k0 = 0`): `ncubes`
+    /// consecutive sub-cubes × `p` samples with consecutive sample
+    /// indices, written to block slots `k0 ..`.
+    #[allow(clippy::too_many_arguments)]
+    fn fill_lanes(
+        &self,
+        cube_coords: &[usize],
+        ncubes: usize,
+        p: usize,
+        base_sidx: u64,
+        iteration: u32,
+        seed: u32,
+        block: &mut PointBlock,
+        k0: usize,
+        bidx: &mut [usize],
+    ) {
+        if ncubes == 0 || p == 0 {
+            return;
+        }
+        let d = self.d;
+        let nb = self.nb;
+        debug_assert_eq!(cube_coords.len(), ncubes * d);
+        debug_assert!(d <= MAX_DIM);
+        let n = ncubes * p;
+        let mut u = [[0.0f64; LANES]; MAX_DIM];
+        let mut cube_of = [0usize; LANES];
+        let mut done = 0usize;
+        // Full lane groups with *constant* inner-loop bounds — the
+        // shape the autovectorizer lowers to straight-line SIMD.
+        while done + LANES <= n {
+            uniforms_lanes::<LANES>(base_sidx + done as u64, iteration, seed, &mut u[..d]);
+            for (l, c) in cube_of.iter_mut().enumerate() {
+                *c = (done + l) / p;
+            }
+            let mut jac = [self.vol; LANES];
+            for i in 0..d {
+                let row = i * nb;
+                for l in 0..LANES {
+                    let ci = cube_coords[cube_of[l] * d + i] as f64;
+                    let z = (ci + u[i][l]) * self.inv_g;
+                    let loc = z * self.nbf;
+                    let b = (loc as usize).min(nb - 1);
+                    // SAFETY: i < d and b < nb, so row + b < d*nb ==
+                    // edges.len() (same bound as the scalar fill).
+                    let right = unsafe { *self.edges.get_unchecked(row + b) };
+                    let left = if b == 0 {
+                        0.0
+                    } else {
+                        unsafe { *self.edges.get_unchecked(row + b - 1) }
+                    };
+                    let w = right - left;
+                    let xt = left + (loc - b as f64) * w;
+                    jac[l] *= self.nbf * w;
+                    block.set_coord(i, k0 + done + l, self.lo_ax[i] + xt * self.span_ax[i]);
+                    bidx[(k0 + done + l) * d + i] = row + b;
+                }
+            }
+            for l in 0..LANES {
+                block.set_jac(k0 + done + l, jac[l]);
+            }
+            done += LANES;
+        }
+        // Ragged tail: per-point scalar math on each remaining
+        // point's own cube — identical expressions, bitwise equal.
+        while done < n {
+            let c = done / p;
+            self.fill_points_scalar(
+                &cube_coords[c * d..(c + 1) * d],
+                base_sidx + done as u64,
+                1,
+                iteration,
+                seed,
+                block,
+                k0 + done,
+                bidx,
+            );
+            done += 1;
+        }
+    }
+
+    /// The scalar reference fill: one [`uniforms_into`] +
+    /// [`VegasMap::fill_point`] per sample, in sample order — the loop
+    /// the engines ran before the SIMD core, kept as the bitwise
+    /// oracle for property tests and the microbench baseline.
+    #[allow(clippy::too_many_arguments)]
+    pub fn fill_points_scalar(
+        &self,
+        coords: &[usize],
+        base_sidx: u64,
+        n: usize,
+        iteration: u32,
+        seed: u32,
+        block: &mut PointBlock,
+        k0: usize,
+        bidx: &mut [usize],
+    ) {
+        let d = self.d;
+        debug_assert_eq!(coords.len(), d);
+        let mut u = [0.0f64; MAX_DIM];
+        for k in 0..n {
+            uniforms_into(base_sidx + k as u64, iteration, seed, &mut u[..d]);
+            self.fill_point(coords, &u[..d], block, k0 + k, bidx);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::grid::Bins;
+    use crate::integrands::by_name;
+    use crate::strat::Layout;
+
+    fn fill_pair(
+        layout: &Layout,
+        bins: &Bins,
+        base_sidx: u64,
+        n: usize,
+        cube: usize,
+    ) -> (PointBlock, Vec<usize>, PointBlock, Vec<usize>) {
+        let d = layout.d;
+        let f = by_name("f4", d).unwrap();
+        let map = VegasMap::new(layout, bins, &f.bounds());
+        let mut coords = vec![0usize; d];
+        layout.cube_coords(cube, &mut coords);
+        let mut simd = PointBlock::with_capacity(d, n);
+        let mut scalar = PointBlock::with_capacity(d, n);
+        simd.reset(n);
+        scalar.reset(n);
+        let mut bidx_simd = vec![0usize; n * d];
+        let mut bidx_scalar = vec![0usize; n * d];
+        map.fill_points(&coords, base_sidx, n, 3, 42, &mut simd, 0, &mut bidx_simd);
+        map.fill_points_scalar(&coords, base_sidx, n, 3, 42, &mut scalar, 0, &mut bidx_scalar);
+        (simd, bidx_simd, scalar, bidx_scalar)
+    }
+
+    #[test]
+    fn lane_fill_matches_scalar_fill_bitwise() {
+        // Partial lane groups on purpose: n not a multiple of LANES.
+        for (d, n) in [(1usize, 3usize), (4, 7), (7, 13), (16, 5)] {
+            let layout = Layout::compute(d, 2048, 16, 1).unwrap();
+            let bins = Bins::uniform(d, 16);
+            let (simd, bi_s, scalar, bi_r) = fill_pair(&layout, &bins, 11, n, layout.m / 2);
+            for k in 0..n {
+                assert_eq!(
+                    simd.jac(k).to_bits(),
+                    scalar.jac(k).to_bits(),
+                    "d={d} n={n} jac {k}"
+                );
+                for i in 0..d {
+                    assert_eq!(
+                        simd.coord(i, k).to_bits(),
+                        scalar.coord(i, k).to_bits(),
+                        "d={d} n={n} coord ({i}, {k})"
+                    );
+                }
+            }
+            assert_eq!(bi_s, bi_r, "d={d} n={n} histogram rows");
+        }
+    }
+
+    /// The multi-cube span fill (lane groups crossing cube boundaries,
+    /// the p = 2 workhorse) equals per-cube scalar fills bitwise.
+    #[test]
+    fn span_fill_matches_per_cube_scalar_bitwise() {
+        for (d, ncubes, p) in [(2usize, 5usize, 2usize), (3, 3, 3), (5, 7, 2), (1, 11, 4)] {
+            let layout = Layout::compute(d, 4096, 12, 1).unwrap();
+            let bins = Bins::uniform(d, 12);
+            let f = by_name("f4", d).unwrap();
+            let map = VegasMap::new(&layout, &bins, &f.bounds());
+            let n = ncubes * p;
+            let mut span = PointBlock::with_capacity(d, n);
+            let mut scalar = PointBlock::with_capacity(d, n);
+            span.reset(n);
+            scalar.reset(n);
+            let mut bidx_span = vec![0usize; n * d];
+            let mut bidx_scalar = vec![0usize; n * d];
+            // ncubes consecutive cubes starting mid-layout.
+            let cube0 = (layout.m / 3).min(layout.m - ncubes);
+            let mut cube_coords = vec![0usize; ncubes * d];
+            for c in 0..ncubes {
+                layout.cube_coords(cube0 + c, &mut cube_coords[c * d..(c + 1) * d]);
+            }
+            let base = (cube0 * p) as u64;
+            map.fill_span(&cube_coords, ncubes, p, base, 5, 9, &mut span, &mut bidx_span);
+            for c in 0..ncubes {
+                map.fill_points_scalar(
+                    &cube_coords[c * d..(c + 1) * d],
+                    base + (c * p) as u64,
+                    p,
+                    5,
+                    9,
+                    &mut scalar,
+                    c * p,
+                    &mut bidx_scalar,
+                );
+            }
+            for k in 0..n {
+                assert_eq!(
+                    span.jac(k).to_bits(),
+                    scalar.jac(k).to_bits(),
+                    "d={d} ncubes={ncubes} p={p} jac {k}"
+                );
+                for i in 0..d {
+                    assert_eq!(
+                        span.coord(i, k).to_bits(),
+                        scalar.coord(i, k).to_bits(),
+                        "d={d} ncubes={ncubes} p={p} coord ({i}, {k})"
+                    );
+                }
+            }
+            assert_eq!(bidx_span, bidx_scalar);
+        }
+    }
+
+    /// Regression for the truncation bug: a fill based just below the
+    /// 2^32 sample boundary must keep drawing *new* counters past it,
+    /// not wrap back to samples 0, 1, ..
+    #[test]
+    fn lane_fill_crosses_the_u32_boundary() {
+        let d = 4;
+        let layout = Layout::compute(d, 2048, 16, 1).unwrap();
+        let bins = Bins::uniform(d, 16);
+        let n = 6;
+        let base = (1u64 << 32) - 2; // straddles the boundary
+        let (simd, _, scalar, _) = fill_pair(&layout, &bins, base, n, 0);
+        // What the truncating `as u32` pipeline would have drawn for
+        // the samples past the boundary: indices 0, 1, 2, 3.
+        let (low, _, _, _) = fill_pair(&layout, &bins, 0, 4, 0);
+        let mut any_differs = false;
+        for k in 0..n {
+            assert_eq!(simd.coord(0, k).to_bits(), scalar.coord(0, k).to_bits());
+            if k >= 2 && simd.coord(0, k).to_bits() != low.coord(0, k - 2).to_bits() {
+                any_differs = true;
+            }
+        }
+        assert!(any_differs, "stream wrapped at 2^32 — counter truncated");
+    }
+}

@@ -4,11 +4,11 @@
 //! The uniform engine ([`crate::engine::NativeEngine::vsample`]) gives
 //! every sub-cube the same `p` samples. This path drives the identical
 //! fill-block → `eval_batch` → reduce pipeline with a per-cube
-//! [`Allocation`]: cube `k` draws `counts[k]` samples from the Philox
-//! indices `offsets[k] .. offsets[k] + counts[k]` (exclusive prefix
-//! sums of the counts), so the sample stream of every cube is a pure
-//! function of `(seed, iteration, allocation)` — never of the thread
-//! count. After the pass each cube's fresh variance observation
+//! [`Allocation`]: cube `k` draws `counts[k]` samples from the 64-bit
+//! Philox indices `offsets[k] .. offsets[k] + counts[k]` (exclusive
+//! prefix sums of the counts — no wrapping, even past 2^32 total
+//! calls), so the sample stream of every cube is a pure function of
+//! `(seed, iteration, allocation)` — never of the thread count. After the pass each cube's fresh variance observation
 //! `n_k * Var_k` is folded into the allocation's damped accumulator
 //! (`d_k <- d_k/2 + n_k Var_k / 2`); the *caller* decides when to
 //! [`Allocation::reallocate`] with weights `d_k^beta`
@@ -27,11 +27,11 @@
 //!   `rust/tests/properties.rs`).
 
 use super::block::{PointBlock, VegasMap, BLOCK_POINTS};
+use super::simd::FillPath;
 use super::{reduction_task_span, reduction_tasks, VSampleOpts, MAX_DIM};
 use crate::estimator::IterationResult;
 use crate::grid::Bins;
 use crate::integrands::Integrand;
-use crate::rng::uniforms_into;
 use crate::strat::{Allocation, Layout};
 use crate::util::threadpool::parallel_chunks;
 
@@ -60,7 +60,24 @@ pub fn vsample_stratified(
     alloc: &mut Allocation,
     opts: &VSampleOpts,
 ) -> (IterationResult, Option<Vec<f64>>) {
+    vsample_stratified_with_fill(f, layout, bins, alloc, opts, FillPath::Simd)
+}
+
+/// [`vsample_stratified`] with an explicit [`FillPath`] — the two
+/// paths are bitwise identical (SIMD determinism contract); `Scalar`
+/// exists for the equivalence property tests and the microbench.
+pub fn vsample_stratified_with_fill(
+    f: &dyn Integrand,
+    layout: &Layout,
+    bins: &Bins,
+    alloc: &mut Allocation,
+    opts: &VSampleOpts,
+    fill: FillPath,
+) -> (IterationResult, Option<Vec<f64>>) {
     assert!(layout.d <= MAX_DIM, "d > MAX_DIM");
+    if let Err(e) = layout.validate() {
+        panic!("invalid layout: {e}");
+    }
     assert_eq!(bins.d(), layout.d);
     assert_eq!(bins.nb(), layout.nb);
     assert_eq!(alloc.m(), layout.m, "allocation cube count != layout");
@@ -78,7 +95,6 @@ pub fn vsample_stratified(
             let mut blk = PointBlock::with_capacity(d, BLOCK_POINTS);
             let mut vals = vec![0.0f64; BLOCK_POINTS];
             let mut bidx = vec![0usize; BLOCK_POINTS * d];
-            let mut u = [0.0f64; MAX_DIM];
             let mut coords = [0usize; MAX_DIM];
             (t0..t1)
                 .map(|t| {
@@ -104,16 +120,31 @@ pub fn vsample_stratified(
                         while k0 < n {
                             let chunk = (n - k0).min(BLOCK_POINTS as u32);
                             blk.reset(chunk as usize);
-                            for k in 0..chunk {
-                                let sidx = offsets[cube].wrapping_add(k0 + k);
-                                uniforms_into(sidx, opts.iteration, opts.seed, &mut u[..d]);
-                                map.fill_point(
+                            // The cube's sample stream starts at its
+                            // 64-bit prefix-sum offset — no wrapping,
+                            // even past 2^32 total calls.
+                            let base_sidx = offsets[cube] + k0 as u64;
+                            match fill {
+                                FillPath::Simd => map.fill_points(
                                     &coords[..d],
-                                    &u[..d],
+                                    base_sidx,
+                                    chunk as usize,
+                                    opts.iteration,
+                                    opts.seed,
                                     &mut blk,
-                                    k as usize,
+                                    0,
                                     &mut bidx,
-                                );
+                                ),
+                                FillPath::Scalar => map.fill_points_scalar(
+                                    &coords[..d],
+                                    base_sidx,
+                                    chunk as usize,
+                                    opts.iteration,
+                                    opts.seed,
+                                    &mut blk,
+                                    0,
+                                    &mut bidx,
+                                ),
                             }
                             f.eval_batch(&blk, &mut vals[..chunk as usize]);
                             for j in 0..chunk as usize {

@@ -56,16 +56,34 @@ pub fn smooth_weights<'a>(contrib: &[f64], scratch: &'a mut [f64]) -> Option<&'a
 /// Re-partition one axis's right edges so each new bin carries an equal
 /// share of `weights`. `edges` holds the nb right edges (left edge 0
 /// implicit, last edge stays exactly 1.0).
+///
+/// Robust against fp drift: when the running weight sum rounds below
+/// `target` on the final marks, the `j < nb` guard exits the consume
+/// loop early and `acc` goes negative, which would interpolate a mark
+/// *past* 1.0 (or, with degenerate weights, produce a non-finite or
+/// non-increasing mark). Every mark is therefore clamped strictly
+/// inside `(previous mark, 1.0)`, so the grid stays strictly monotone
+/// with its final edge exactly 1.0 for any weight vector — one-hot,
+/// TINY-floored, and near-equal vectors are property-tested. A weight
+/// vector with no usable signal (all-zero / non-finite total) leaves
+/// the grid unchanged, matching `smooth_weights`' `None`.
 pub fn rebin(edges: &mut [f64], weights: &[f64]) {
     let nb = edges.len();
     assert_eq!(weights.len(), nb);
     let total: f64 = weights.iter().sum();
+    if !(total > 0.0) || !total.is_finite() {
+        // No usable signal (all-zero, negative-sum, or non-finite
+        // weights): leave the grid unchanged, matching the
+        // `smooth_weights` -> `None` contract upstream.
+        return;
+    }
     let target = total / nb as f64;
 
     let mut new_edges = vec![0.0; nb];
     let mut acc = 0.0; // weight accumulated so far
     let mut j = 0usize; // old bin cursor (0-based; consumed bins < j)
     let mut prev_edge = 0.0;
+    let mut last_new = 0.0; // previous mark — enforced lower bound
     for k in 0..nb - 1 {
         // Consume old bins until we pass the (k+1)-th equal-weight mark.
         // (j < nb guards fp drift on the final marks.)
@@ -78,7 +96,20 @@ pub fn rebin(edges: &mut [f64], weights: &[f64]) {
         // We overshot inside old bin j-1: interpolate back.
         let right = edges[j - 1];
         let width = right - prev_edge;
-        new_edges[k] = right - acc / weights[j - 1] * width;
+        let mut e = right - acc / weights[j - 1] * width;
+        if !(e > last_new && e < 1.0) {
+            // fp drift (negative `acc` after an early exit above, or a
+            // zero-weight division) pushed the mark out of range; pin
+            // it to the midpoint of what remains so later marks still
+            // have room.
+            e = last_new + (1.0 - last_new) * 0.5;
+        }
+        debug_assert!(
+            e > last_new && e < 1.0,
+            "rebin mark {k} = {e} escaped ({last_new}, 1)"
+        );
+        new_edges[k] = e;
+        last_new = e;
     }
     new_edges[nb - 1] = 1.0;
     edges.copy_from_slice(&new_edges);
@@ -150,6 +181,58 @@ mod tests {
                 "bin [{prev},{e}] mass {got} != {target}"
             );
             prev = e;
+        }
+    }
+
+    #[test]
+    fn rebin_one_hot_weights_stay_strictly_monotone() {
+        // One-hot with exact zeros elsewhere: the consume loop can run
+        // off the end (zero bins add nothing), leaving `acc` negative —
+        // unclamped, the final marks land at or above 1.0.
+        for hot in [0usize, 7, 15] {
+            let nb = 16;
+            let mut edges: Vec<f64> = (1..=nb).map(|i| i as f64 / nb as f64).collect();
+            let mut w = vec![0.0; nb];
+            w[hot] = 3.0;
+            rebin(&mut edges, &w);
+            let mut prev = 0.0;
+            for &e in &edges {
+                assert!(e > prev && e <= 1.0, "hot={hot}: edges {edges:?}");
+                prev = e;
+            }
+            assert_eq!(edges[nb - 1], 1.0);
+        }
+    }
+
+    #[test]
+    fn rebin_without_signal_leaves_grid_unchanged() {
+        let mut edges: Vec<f64> = (1..=8).map(|i| (i as f64 / 8.0).powi(2)).collect();
+        edges[7] = 1.0;
+        let before = edges.clone();
+        rebin(&mut edges, &[0.0; 8]);
+        assert_eq!(edges, before);
+        rebin(&mut edges, &[f64::NAN; 8]);
+        assert_eq!(edges, before);
+    }
+
+    #[test]
+    fn rebin_survives_repeated_near_equal_weights() {
+        // Compound hundreds of rebins with weights a few ulps apart —
+        // the drift regime where the running sum rounds below target
+        // on the last mark.
+        let nb = 48;
+        let mut edges: Vec<f64> = (1..=nb).map(|i| i as f64 / nb as f64).collect();
+        for round in 0..300 {
+            let w: Vec<f64> = (0..nb)
+                .map(|i| 1.0 + ((i + round) % 7) as f64 * 1e-16)
+                .collect();
+            rebin(&mut edges, &w);
+            let mut prev = 0.0;
+            for &e in &edges {
+                assert!(e > prev && e <= 1.0, "round {round}: {edges:?}");
+                prev = e;
+            }
+            assert_eq!(edges[nb - 1], 1.0);
         }
     }
 

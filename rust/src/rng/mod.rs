@@ -5,7 +5,18 @@
 //! baselines) draws the *same* uniform for (seed, iteration, sample,
 //! dim), which is what makes the cross-layer equivalence tests possible
 //! and keeps results reproducible across backends.
+//!
+//! Sample indices are 64-bit — split across two counter words, low
+//! word first, with the high bits packed above the draw-block byte
+//! (see [`BLOCK_BITS`] / [`MAX_SAMPLE_INDEX`]) — and [`philox_simd`]
+//! carries the lane-parallel implementation the engine's SIMD fill
+//! path uses; both are bitwise identical to the scalar 32-bit-era
+//! stream for indices below 2^32.
 
 mod philox;
+pub mod philox_simd;
 
-pub use philox::{philox4x32, uniform_for, uniforms_into, PhiloxStream, CTR_MAGIC, KEY_MAGIC};
+pub use philox::{
+    philox4x32, u32_to_unit_f64, uniform_for, uniforms_into, PhiloxStream, BLOCK_BITS,
+    CTR_MAGIC, KEY_MAGIC, MAX_SAMPLE_INDEX, MAX_UNIFORM_DIMS,
+};

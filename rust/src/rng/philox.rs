@@ -1,20 +1,69 @@
 //! Philox4x32-10 (Random123 / curand family).
 //!
-//! Counter layout must match `python/compile/philox.py`:
-//!   ctr = (sample_idx, draw_block, iteration, CTR_MAGIC)
+//! Counter layout:
+//!   ctr = (sample_lo, draw_block | sample_hi << BLOCK_BITS, iteration, CTR_MAGIC)
 //!   key = (seed, KEY_MAGIC)
 //! Each call yields 4 words; a d-dimensional sample consumes
 //! ceil(d/4) calls. Word w of block j is dimension 4*j + w.
+//! For sample indices below 2^32 (`sample_hi == 0`) this is exactly
+//! the layout of `python/compile/philox.py`, whose device-side indices
+//! are uint32 — the registry caps PJRT artifacts at 2^32 calls, so the
+//! kernel and this module agree on every counter either can draw.
+//!
+//! ## 64-bit sample indices
+//!
+//! The sample index is 64-bit, split across the first two counter
+//! words: word 0 carries bits 0..32, and bits 32..56 sit above the
+//! draw-block byte in word 1 (see [`BLOCK_BITS`]). For indices below
+//! 2^32 the high part is zero and the counter is identical to the
+//! original 32-bit layout, so every existing seed reproduces its
+//! historical stream exactly; above 2^32 the stream *continues* instead
+//! of silently truncating back to sample 0 (the bug this layout fixes —
+//! GPU-scale runs in the cuVegas / ZMCintegral regime routinely exceed
+//! 2^32 calls per iteration). The packing addresses up to
+//! [`MAX_SAMPLE_INDEX`] samples and 2^[`BLOCK_BITS`] draw blocks
+//! (d <= 1024).
 
-const M0: u32 = 0xD251_1F53;
-const M1: u32 = 0xCD9E_8D57;
-const W0: u32 = 0x9E37_79B9;
-const W1: u32 = 0xBB67_AE85;
+pub(super) const M0: u32 = 0xD251_1F53;
+pub(super) const M1: u32 = 0xCD9E_8D57;
+pub(super) const W0: u32 = 0x9E37_79B9;
+pub(super) const W1: u32 = 0xBB67_AE85;
 
 /// Domain-separation constant in counter word 3 ("mCUB").
 pub const CTR_MAGIC: u32 = 0x6D43_5542;
 /// Key word 1 constant ("mcub").
 pub const KEY_MAGIC: u32 = 0x6D63_7562;
+
+/// Bits of counter word 1 reserved for the draw-block index (so
+/// d <= 4 * 2^BLOCK_BITS = 1024); bits 32..56 of the sample index are
+/// packed above them.
+pub const BLOCK_BITS: u32 = 8;
+
+/// One past the largest addressable sample index (2^56): 32 bits in
+/// counter word 0 plus the 24 bits of word 1 above the draw-block byte.
+/// `strat::Layout::validate` rejects layouts whose total calls exceed
+/// this, so the engine can never wrap a counter stream.
+pub const MAX_SAMPLE_INDEX: u64 = 1 << (32 + 32 - BLOCK_BITS);
+
+/// Pack a 64-bit sample index and a draw-block index into counter
+/// words 0 and 1. For `sample_idx < 2^32` this is exactly the legacy
+/// `(sample_idx as u32, block)` layout.
+#[inline(always)]
+pub(crate) fn ctr_words(sample_idx: u64, block: u32) -> (u32, u32) {
+    debug_assert!(
+        block < (1 << BLOCK_BITS),
+        "draw block {block} overflows the counter packing (d > {})",
+        4 << BLOCK_BITS
+    );
+    debug_assert!(
+        sample_idx < MAX_SAMPLE_INDEX,
+        "sample index {sample_idx} exceeds the 2^56 counter capacity"
+    );
+    (
+        sample_idx as u32,
+        block | (((sample_idx >> 32) as u32) << BLOCK_BITS),
+    )
+}
 
 #[inline(always)]
 fn mulhilo(a: u32, b: u32) -> (u32, u32) {
@@ -51,31 +100,37 @@ pub fn u32_to_unit_f64(u: u32) -> f64 {
     (u as f64 + 0.5) * (1.0 / 4294967296.0)
 }
 
+/// Hard cap on dimensions per sample: the draw-block index lives in
+/// the low [`BLOCK_BITS`] bits of counter word 1, so a larger `d`
+/// would collide with the packed sample-index high bits. Enforced
+/// with a real assert at the public entry points — silent stream
+/// corruption is exactly what this module exists to rule out.
+pub const MAX_UNIFORM_DIMS: usize = 4 << BLOCK_BITS;
+
 /// The uniform for (sample, iteration, seed, dim) — identical to word
 /// `dim % 4` of Philox block `dim / 4` in the Python sampler.
 #[inline]
-pub fn uniform_for(sample_idx: u32, iteration: u32, seed: u32, dim: usize) -> f64 {
+pub fn uniform_for(sample_idx: u64, iteration: u32, seed: u32, dim: usize) -> f64 {
+    assert!(dim < MAX_UNIFORM_DIMS, "dim {dim} >= {MAX_UNIFORM_DIMS}");
     let block = (dim / 4) as u32;
     let word = dim % 4;
-    let out = philox4x32(
-        [sample_idx, block, iteration, CTR_MAGIC],
-        [seed, KEY_MAGIC],
-    );
+    let (w0, w1) = ctr_words(sample_idx, block);
+    let out = philox4x32([w0, w1, iteration, CTR_MAGIC], [seed, KEY_MAGIC]);
     u32_to_unit_f64(out[word])
 }
 
 /// Fill `out[0..d]` with the d uniforms of one sample. Amortizes the
-/// Philox call over 4 dims — this is the engine hot path.
+/// Philox call over 4 dims — this is the engine hot path (the
+/// lane-parallel twin is [`crate::rng::philox_simd::uniforms_lanes`]).
 #[inline]
-pub fn uniforms_into(sample_idx: u32, iteration: u32, seed: u32, out: &mut [f64]) {
+pub fn uniforms_into(sample_idx: u64, iteration: u32, seed: u32, out: &mut [f64]) {
     let d = out.len();
+    assert!(d <= MAX_UNIFORM_DIMS, "d = {d} > {MAX_UNIFORM_DIMS} dims per sample");
     let mut j = 0u32;
     let mut i = 0usize;
     while i < d {
-        let blk = philox4x32(
-            [sample_idx, j, iteration, CTR_MAGIC],
-            [seed, KEY_MAGIC],
-        );
+        let (w0, w1) = ctr_words(sample_idx, j);
+        let blk = philox4x32([w0, w1, iteration, CTR_MAGIC], [seed, KEY_MAGIC]);
         let n = (d - i).min(4);
         for w in 0..n {
             out[i + w] = u32_to_unit_f64(blk[w]);
@@ -99,7 +154,7 @@ impl PhiloxStream {
 
     /// Uniforms for global sample index `s` into `out`.
     #[inline]
-    pub fn sample(&self, s: u32, out: &mut [f64]) {
+    pub fn sample(&self, s: u64, out: &mut [f64]) {
         uniforms_into(s, self.iteration, self.seed, out);
     }
 }
@@ -136,6 +191,42 @@ mod tests {
         }
     }
 
+    /// Below 2^32 the counter is exactly the legacy 32-bit layout —
+    /// every pre-widening seed reproduces its historical stream.
+    #[test]
+    fn low_indices_reproduce_legacy_counter_layout() {
+        for s in [0u64, 1, 12345, u32::MAX as u64] {
+            for dim in 0..8usize {
+                let legacy = philox4x32(
+                    [s as u32, (dim / 4) as u32, 7, CTR_MAGIC],
+                    [99, KEY_MAGIC],
+                );
+                let got = uniform_for(s, 7, 99, dim);
+                assert_eq!(got, u32_to_unit_f64(legacy[dim % 4]), "s={s} dim={dim}");
+            }
+        }
+    }
+
+    /// Regression for the sample-counter truncation bug: indices that
+    /// collide mod 2^32 must draw *different* uniforms (the old `as
+    /// u32` pipeline made sample 2^32 + k replay sample k's stream).
+    #[test]
+    fn high_word_extends_the_stream() {
+        let mut lo = [0.0; 6];
+        let mut hi = [0.0; 6];
+        for k in [0u64, 5, 4096] {
+            uniforms_into(k, 0, 42, &mut lo);
+            uniforms_into((1u64 << 32) + k, 0, 42, &mut hi);
+            assert_ne!(lo, hi, "k={k}: high sample word was dropped");
+        }
+        // And the packing really lands in counter word 1 above the
+        // draw-block byte.
+        let (w0, w1) = ctr_words((3u64 << 32) | 9, 2);
+        assert_eq!(w0, 9);
+        assert_eq!(w1, 2 | (3 << BLOCK_BITS));
+        assert_eq!(ctr_words(7, 1), (7, 1));
+    }
+
     #[test]
     fn mean_and_variance() {
         let mut sum = 0.0;
@@ -143,7 +234,7 @@ mod tests {
         let n = 100_000u32;
         let mut buf = [0.0; 2];
         for s in 0..n {
-            uniforms_into(s, 0, 7, &mut buf);
+            uniforms_into(s as u64, 0, 7, &mut buf);
             for &v in &buf {
                 sum += v;
                 sq += v * v;

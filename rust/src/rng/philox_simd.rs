@@ -1,0 +1,183 @@
+//! Lane-parallel Philox4x32-10 — the RNG half of the SIMD sampling
+//! core (`engine::simd` owns the transform half).
+//!
+//! [`philox4x32_lanes`] runs `L` independent Philox blocks with every
+//! round expressed over `[u32; L]` arrays in structure-of-arrays form.
+//! The per-lane loop bodies are branch-free integer ops on fixed-size
+//! arrays — exactly the shape LLVM's autovectorizer lowers to SSE2 /
+//! AVX2 (the 32x32→64 `mulhilo` pair becomes `vpmuludq`). There are no
+//! intrinsics and no unsafe: the same source compiles on every target
+//! and simply gets wider with `-C target-cpu=native`.
+//!
+//! ## Lane width dispatch
+//!
+//! [`LANES`] is 8 when the crate is compiled with AVX2 available
+//! (`cfg(target_feature = "avx2")`, e.g. via `-C target-cpu=native`)
+//! and 4 otherwise (one SSE2 register of u32s — the x86_64 baseline).
+//! Because each lane computes *exactly* the scalar [`philox4x32`]
+//! function, results are bitwise identical for any lane width — the
+//! width only changes throughput, never a single output bit. That is
+//! the foundation of the engine's SIMD determinism contract
+//! (docs/sampling.md).
+
+use super::philox::{
+    ctr_words, u32_to_unit_f64, CTR_MAGIC, KEY_MAGIC, M0, M1, MAX_UNIFORM_DIMS, W0, W1,
+};
+
+/// Lane width the engine's fill path instantiates: 8 under AVX2, 4
+/// otherwise. Purely a throughput knob — see the module docs.
+#[cfg(all(target_arch = "x86_64", target_feature = "avx2"))]
+pub const LANES: usize = 8;
+/// Lane width the engine's fill path instantiates: 8 under AVX2, 4
+/// otherwise. Purely a throughput knob — see the module docs.
+#[cfg(not(all(target_arch = "x86_64", target_feature = "avx2")))]
+pub const LANES: usize = 4;
+
+/// `L` independent Philox4x32-10 blocks, counters in lane-major SoA
+/// form: `ctr[w][l]` is counter word `w` of lane `l`. Every lane
+/// produces exactly `philox4x32([ctr[0][l], .., ctr[3][l]], key)`.
+#[inline]
+pub fn philox4x32_lanes<const L: usize>(ctr: &[[u32; L]; 4], key: [u32; 2]) -> [[u32; L]; 4] {
+    let [mut c0, mut c1, mut c2, mut c3] = *ctr;
+    let [mut k0, mut k1] = key;
+    for _ in 0..10 {
+        let mut n0 = [0u32; L];
+        let mut n1 = [0u32; L];
+        let mut n2 = [0u32; L];
+        let mut n3 = [0u32; L];
+        for l in 0..L {
+            let p0 = (c0[l] as u64) * (M0 as u64);
+            let p1 = (c2[l] as u64) * (M1 as u64);
+            n0[l] = ((p1 >> 32) as u32) ^ c1[l] ^ k0;
+            n1[l] = p1 as u32;
+            n2[l] = ((p0 >> 32) as u32) ^ c3[l] ^ k1;
+            n3[l] = p0 as u32;
+        }
+        c0 = n0;
+        c1 = n1;
+        c2 = n2;
+        c3 = n3;
+        k0 = k0.wrapping_add(W0);
+        k1 = k1.wrapping_add(W1);
+    }
+    [c0, c1, c2, c3]
+}
+
+/// Fill `out[dim][lane]` with the `out.len()` uniforms of the `L`
+/// consecutive sample indices `base .. base + L` — the lane-parallel
+/// twin of [`crate::rng::uniforms_into`], bitwise identical per lane
+/// (same counters, same conversion).
+#[inline]
+pub fn uniforms_lanes<const L: usize>(base: u64, iteration: u32, seed: u32, out: &mut [[f64; L]]) {
+    let d = out.len();
+    assert!(
+        d <= MAX_UNIFORM_DIMS,
+        "d = {d} > {MAX_UNIFORM_DIMS} dims per sample"
+    );
+    let key = [seed, KEY_MAGIC];
+    // Counter words 0/1 per lane; only the draw-block byte of word 1
+    // changes across blocks, so pack the sample words once.
+    let mut w0 = [0u32; L];
+    let mut w1base = [0u32; L];
+    for (l, (a, b)) in w0.iter_mut().zip(w1base.iter_mut()).enumerate() {
+        let (lo, hi) = ctr_words(base + l as u64, 0);
+        *a = lo;
+        *b = hi;
+    }
+    let mut ctr = [[0u32; L]; 4];
+    ctr[0] = w0;
+    ctr[2] = [iteration; L];
+    ctr[3] = [CTR_MAGIC; L];
+    let mut j = 0u32;
+    let mut i = 0usize;
+    while i < d {
+        for l in 0..L {
+            ctr[1][l] = w1base[l] | j;
+        }
+        let blk = philox4x32_lanes(&ctr, key);
+        let n = (d - i).min(4);
+        for (w, words) in blk.iter().enumerate().take(n) {
+            for l in 0..L {
+                out[i + w][l] = u32_to_unit_f64(words[l]);
+            }
+        }
+        i += n;
+        j += 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::{philox4x32, uniforms_into};
+
+    /// Random123 known-answer vectors, every lane at once.
+    #[test]
+    fn lanes_reproduce_scalar_kats() {
+        let zeros = philox4x32_lanes::<4>(&[[0; 4]; 4], [0, 0]);
+        let ones = philox4x32_lanes::<8>(&[[u32::MAX; 8]; 4], [u32::MAX; 2]);
+        for l in 0..4 {
+            assert_eq!(
+                [zeros[0][l], zeros[1][l], zeros[2][l], zeros[3][l]],
+                [0x6627_E8D5, 0xE169_C58D, 0xBC57_AC4C, 0x9B00_DBD8]
+            );
+        }
+        for l in 0..8 {
+            assert_eq!(
+                [ones[0][l], ones[1][l], ones[2][l], ones[3][l]],
+                [0x408F_276D, 0x41C8_3B0E, 0xA20B_C7C6, 0x6D54_51FD]
+            );
+        }
+    }
+
+    /// Distinct per-lane counters: each lane equals the scalar block.
+    #[test]
+    fn lanes_match_scalar_per_lane() {
+        let mut ctr = [[0u32; LANES]; 4];
+        for l in 0..LANES {
+            ctr[0][l] = 1000 + l as u32;
+            ctr[1][l] = l as u32;
+            ctr[2][l] = 7;
+            ctr[3][l] = CTR_MAGIC;
+        }
+        let out = philox4x32_lanes(&ctr, [42, KEY_MAGIC]);
+        for l in 0..LANES {
+            let scalar = philox4x32(
+                [ctr[0][l], ctr[1][l], ctr[2][l], ctr[3][l]],
+                [42, KEY_MAGIC],
+            );
+            for w in 0..4 {
+                assert_eq!(out[w][l], scalar[w], "lane {l} word {w}");
+            }
+        }
+    }
+
+    /// uniforms_lanes == uniforms_into per lane, including across the
+    /// 2^32 sample-index boundary and partial trailing Philox blocks.
+    #[test]
+    fn uniform_lanes_match_scalar_across_boundary() {
+        for base in [0u64, 3, u32::MAX as u64 - 2, (1u64 << 32) - 2, (1u64 << 40) + 5] {
+            for d in [1usize, 4, 7, 16] {
+                let mut lanes = vec![[0.0f64; LANES]; d];
+                uniforms_lanes::<LANES>(base, 9, 77, &mut lanes);
+                let mut buf = vec![0.0f64; d];
+                for l in 0..LANES {
+                    uniforms_into(base + l as u64, 9, 77, &mut buf);
+                    for dim in 0..d {
+                        assert_eq!(
+                            lanes[dim][l].to_bits(),
+                            buf[dim].to_bits(),
+                            "base={base} d={d} lane={l} dim={dim}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn lane_width_is_a_supported_value() {
+        let lanes = LANES;
+        assert!(lanes == 4 || lanes == 8, "unexpected lane width {lanes}");
+    }
+}

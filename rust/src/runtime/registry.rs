@@ -106,6 +106,20 @@ impl ArtifactMeta {
                 l
             )));
         }
+        // The Pallas kernel draws uint32 sample indices
+        // (`python/compile/philox.py`); only the native engine carries
+        // the 64-bit counter pipeline. Reject artifacts whose layouts
+        // would wrap on device rather than integrate them silently
+        // wrong (no compiled artifact comes close to this today).
+        if (l.m as u128) * (l.p as u128) > u32::MAX as u128 {
+            return Err(Error::Manifest(format!(
+                "{}: {} calls per iteration exceeds the PJRT kernel's \
+                 32-bit sample counter — run layouts past 2^32 calls on \
+                 the native engine",
+                self.name,
+                l.m as u128 * l.p as u128
+            )));
+        }
         Ok(())
     }
 }
@@ -262,6 +276,29 @@ mod tests {
         meta.verify_layout().expect("sample should be consistent");
         meta.g = 5;
         assert!(meta.verify_layout().is_err());
+    }
+
+    /// The device kernel draws uint32 sample indices; a manifest whose
+    /// layout exceeds 2^32 calls must be refused, not wrapped.
+    #[test]
+    #[cfg(target_pointer_width = "64")]
+    fn verify_layout_rejects_32bit_counter_overflow() {
+        let root = parse(SAMPLE).unwrap();
+        let mut meta =
+            ArtifactMeta::from_json(&root.req("artifacts").unwrap().as_arr().unwrap()[0]).unwrap();
+        // d=1 keeps the Rust layout rule consistent: g = maxcalls/2.
+        meta.dim = 1;
+        meta.maxcalls = 1 << 33;
+        meta.g = 1 << 32;
+        meta.m = 1 << 32;
+        meta.p = 2;
+        meta.nblocks = 8;
+        meta.cpb = meta.m.div_ceil(8);
+        let err = meta.verify_layout().unwrap_err();
+        assert!(
+            err.to_string().contains("32-bit sample counter"),
+            "unexpected error: {err}"
+        );
     }
 
     #[test]

@@ -116,9 +116,10 @@ pub struct AllocStats {
 pub struct Allocation {
     /// Samples allocated to each cube this iteration.
     counts: Vec<u32>,
-    /// Exclusive prefix sums of `counts` — the Philox counter offset of
-    /// each cube's first sample (wrapping, like the counter itself).
-    offsets: Vec<u32>,
+    /// Exclusive prefix sums of `counts` — the 64-bit Philox counter
+    /// offset of each cube's first sample (the engine's sample-index
+    /// pipeline is 64-bit, so budgets past 2^32 never wrap).
+    offsets: Vec<u64>,
     /// Damped per-cube variance accumulator `d_k` driving reallocation.
     damped: Vec<f64>,
 }
@@ -126,7 +127,29 @@ pub struct Allocation {
 impl Allocation {
     /// The uniform m-Cubes allocation for `layout` (`p` samples per
     /// cube, zeroed accumulator).
+    ///
+    /// Panics when `layout.p < MIN_SAMPLES_PER_CUBE` — a cube with
+    /// fewer than two samples has no variance estimate and would turn
+    /// the per-cube reduction's `1 / (p - 1)` into NaN.
+    /// `Layout::compute` never produces such a layout; hand-built ones
+    /// must pass `Layout::validate()` first.
     pub fn uniform(layout: &Layout) -> Allocation {
+        assert!(
+            layout.p as u64 >= MIN_SAMPLES_PER_CUBE as u64,
+            "layout has p = {} samples per cube; the per-cube variance \
+             divides by p - 1, so p >= {MIN_SAMPLES_PER_CUBE} is required \
+             (validate hand-built layouts with Layout::validate())",
+            layout.p
+        );
+        // Per-cube counts are u32 (the engine's 64-bit sample space is
+        // addressed via the u64 prefix-sum offsets); a single cube can
+        // hold at most u32::MAX samples.
+        assert!(
+            layout.p <= u32::MAX as usize,
+            "layout has p = {} samples per cube, beyond the u32 per-cube \
+             count range — use more cubes (smaller p) for this budget",
+            layout.p
+        );
         let counts = vec![layout.p as u32; layout.m];
         let offsets = prefix_sums(&counts);
         Allocation {
@@ -177,9 +200,9 @@ impl Allocation {
         &self.counts
     }
 
-    /// Per-cube Philox stream offsets (exclusive prefix sums of
+    /// Per-cube 64-bit Philox stream offsets (exclusive prefix sums of
     /// [`Allocation::counts`]).
-    pub fn offsets(&self) -> &[u32] {
+    pub fn offsets(&self) -> &[u64] {
         &self.offsets
     }
 
@@ -228,6 +251,18 @@ impl Allocation {
     pub fn reallocate(&mut self, budget: usize, beta: f64) {
         let m = self.counts.len();
         let floor = MIN_SAMPLES_PER_CUBE as usize;
+        // Per-cube counts are u32; the 64-bit sample space is reached
+        // through the u64 prefix-sum offsets. A budget no cube split
+        // can hold is a caller error — refuse it instead of letting
+        // the `as u32` casts below wrap (the silent-truncation bug
+        // class this crate rejects everywhere else).
+        let ceil = u32::MAX as usize;
+        assert!(
+            (budget as u128) <= (m as u128) * (ceil as u128)
+                && (budget as u128) <= crate::rng::MAX_SAMPLE_INDEX as u128,
+            "budget {budget} exceeds the sample-count capacity of {m} \
+             cubes (u32 per cube, 2^56 Philox counters total)"
+        );
         let weights: Vec<f64> = self.damped.iter().map(|&d| d.max(0.0).powf(beta)).collect();
         let total_w: f64 = weights.iter().sum();
         if beta == 0.0 || !(total_w > 0.0) || !total_w.is_finite() {
@@ -253,22 +288,40 @@ impl Allocation {
             let share = spendable as f64 * (weights[i] / total_w);
             let base = share.floor();
             fracs[i] = share - base;
-            let base = (base as usize).min(spendable);
+            let base = (base as usize).min(spendable).min(ceil - floor);
             self.counts[i] = (floor + base) as u32;
             allocated += base;
         }
         // Largest-remainder rounding for the leftover samples; ties
         // break toward the lower cube index, so the result is a pure
-        // function of the accumulator.
+        // function of the accumulator. (Uncapped shares leave at most
+        // one unit per cube here, so the single pass reproduces the
+        // historical cycling loop bit for bit.)
         if allocated < budget {
             let mut order: Vec<usize> = (0..m).collect();
             order.sort_by(|&a, &b| fracs[b].total_cmp(&fracs[a]).then(a.cmp(&b)));
             let mut left = budget - allocated;
-            let mut idx = 0usize;
-            while left > 0 {
-                self.counts[order[idx % m]] += 1;
-                idx += 1;
-                left -= 1;
+            for &i in &order {
+                if left == 0 {
+                    break;
+                }
+                if (self.counts[i] as usize) < ceil {
+                    self.counts[i] += 1;
+                    left -= 1;
+                }
+            }
+            // Anything still left means shares were clipped at the
+            // u32 ceiling (cubes wanting > 2^32 samples): top cubes up
+            // in index order, whole chunks — still deterministic.
+            if left > 0 {
+                for c in self.counts.iter_mut() {
+                    if left == 0 {
+                        break;
+                    }
+                    let grant = (ceil - *c as usize).min(left);
+                    *c += grant as u32;
+                    left -= grant;
+                }
             }
         } else if allocated > budget {
             // Floating-point slop can only over-floor by a hair; shave
@@ -295,12 +348,12 @@ impl Allocation {
     }
 }
 
-fn prefix_sums(counts: &[u32]) -> Vec<u32> {
+fn prefix_sums(counts: &[u32]) -> Vec<u64> {
     let mut offsets = Vec::with_capacity(counts.len());
-    let mut acc = 0u32;
+    let mut acc = 0u64;
     for &c in counts {
         offsets.push(acc);
-        acc = acc.wrapping_add(c);
+        acc += c as u64;
     }
     offsets
 }
@@ -316,7 +369,7 @@ mod tests {
         assert_eq!(a.m(), layout.m);
         assert_eq!(a.total(), layout.m * layout.p);
         assert_eq!(a.offsets()[0], 0);
-        assert_eq!(a.offsets()[1], layout.p as u32);
+        assert_eq!(a.offsets()[1], layout.p as u64);
         let s = a.stats();
         assert_eq!(s.min, layout.p as u32);
         assert_eq!(s.max, layout.p as u32);
@@ -343,7 +396,10 @@ mod tests {
             a.counts()[100]
         );
         for i in 1..a.m() {
-            assert_eq!(a.offsets()[i], a.offsets()[i - 1] + a.counts()[i - 1]);
+            assert_eq!(
+                a.offsets()[i],
+                a.offsets()[i - 1] + a.counts()[i - 1] as u64
+            );
         }
     }
 
@@ -395,6 +451,43 @@ mod tests {
         let a = Allocation::from_parts(vec![2, 5], vec![0.1, 0.9]).unwrap();
         assert_eq!(a.offsets(), &[0, 2]);
         assert_eq!(a.total(), 7);
+    }
+
+    /// A hot cube whose share exceeds u32::MAX is clipped at the
+    /// per-cube ceiling and the excess redistributed — never wrapped.
+    #[test]
+    #[cfg(target_pointer_width = "64")]
+    fn reallocate_clips_shares_at_the_u32_ceiling() {
+        let mut a = Allocation::from_parts(vec![2, 2, 2], vec![1e12, 1e-6, 1e-6]).unwrap();
+        let budget = 5_000_000_000usize; // > u32::MAX, < 3 * u32::MAX
+        a.reallocate(budget, 1.0);
+        assert_eq!(a.total(), budget);
+        assert!(a.counts().iter().all(|&c| c >= MIN_SAMPLES_PER_CUBE));
+        // The hot cube saturates; the spill lands deterministically.
+        assert_eq!(a.counts()[0], u32::MAX);
+        let mut acc = 0u64;
+        for (&o, &c) in a.offsets().iter().zip(a.counts()) {
+            assert_eq!(o, acc);
+            acc += c as u64;
+        }
+    }
+
+    #[test]
+    #[cfg(target_pointer_width = "64")]
+    #[should_panic(expected = "sample-count capacity")]
+    fn reallocate_rejects_budgets_beyond_count_capacity() {
+        let mut a = Allocation::from_parts(vec![2, 2], vec![1.0, 1.0]).unwrap();
+        a.reallocate(2 * u32::MAX as usize + 1, DEFAULT_BETA);
+    }
+
+    #[test]
+    #[should_panic(expected = "p >= 2 is required")]
+    fn uniform_rejects_sub_floor_layouts() {
+        // A hand-built layout with p = 1 (Layout::compute never emits
+        // one) must be refused before it can poison a reduction.
+        let mut layout = Layout::compute(2, 64, 4, 1).unwrap();
+        layout.p = 1;
+        let _ = Allocation::uniform(&layout);
     }
 
     #[test]

@@ -183,18 +183,24 @@ impl Layout {
         }
         let mut g = ((maxcalls as f64 / 2.0).powf(1.0 / d as f64)).floor() as usize;
         g = g.max(1);
-        // Guard fp rounding, same as the Python twin.
-        while (g + 1).pow(d as u32) <= maxcalls / 2 {
+        // Guard fp rounding, same as the Python twin (checked_pow: an
+        // overflowing candidate can never satisfy `<= maxcalls / 2`).
+        while (g + 1)
+            .checked_pow(d as u32)
+            .is_some_and(|v| v <= maxcalls / 2)
+        {
             g += 1;
         }
-        let m = g.pow(d as u32);
+        let m = g.checked_pow(d as u32).ok_or_else(|| {
+            Error::Config(format!("cube count g^d = {g}^{d} overflows usize"))
+        })?;
         let p = (maxcalls / m).max(2);
         let nblocks = nblocks.clamp(1, m);
         let cpb = m.div_ceil(nblocks);
         // Shrink away fully-empty trailing blocks (cpb rounding can
         // leave grid programs with zero cubes).
         let nblocks = m.div_ceil(cpb);
-        Ok(Layout {
+        let layout = Layout {
             d,
             nb,
             g,
@@ -202,7 +208,63 @@ impl Layout {
             p,
             nblocks,
             cpb,
-        })
+        };
+        // Total calls are bounded by the 64-bit Philox counter
+        // capacity (2^56 sample indices); beyond that the stream would
+        // wrap, so refuse loudly instead of sampling garbage.
+        layout.validate()?;
+        Ok(layout)
+    }
+
+    /// Validate a layout's invariants — the checks [`Layout::compute`]
+    /// guarantees by construction, made explicit so hand-built layouts
+    /// (the fields are public) can't smuggle degenerate shapes into
+    /// the engines:
+    ///
+    /// * `d >= 1`, `g >= 1`, `m == g^d`;
+    /// * `p >= 2` — the per-cube variance estimate divides by
+    ///   `p - 1`, so a single-sample cube would turn the whole
+    ///   estimate into NaN;
+    /// * total calls `m * p` fit the 64-bit Philox counter capacity
+    ///   ([`crate::rng::MAX_SAMPLE_INDEX`], 2^56) — sample indices are
+    ///   64-bit end to end, so layouts beyond 2^32 calls integrate
+    ///   correctly, and only the (astronomical) 2^56 cap is rejected.
+    ///
+    /// Both engines assert this on entry.
+    pub fn validate(&self) -> Result<()> {
+        if self.d < 1 {
+            return Err(Error::Config(format!(
+                "layout dimension must be >= 1, got {}",
+                self.d
+            )));
+        }
+        if self.g < 1 {
+            return Err(Error::Config(format!(
+                "layout needs g >= 1 stratification intervals, got {}",
+                self.g
+            )));
+        }
+        if self.g.checked_pow(self.d as u32) != Some(self.m) {
+            return Err(Error::Config(format!(
+                "layout cube count m = {} != g^d = {}^{}",
+                self.m, self.g, self.d
+            )));
+        }
+        if self.p < 2 {
+            return Err(Error::Config(format!(
+                "layout has p = {} samples per cube; the per-cube variance \
+                 estimate divides by p - 1, so p >= 2 is required",
+                self.p
+            )));
+        }
+        let total = (self.m as u128) * (self.p as u128);
+        if total > crate::rng::MAX_SAMPLE_INDEX as u128 {
+            return Err(Error::Config(format!(
+                "layout asks for {total} calls per iteration, beyond the \
+                 2^56 Philox sample-counter capacity — shrink maxcalls"
+            )));
+        }
+        Ok(())
     }
 
     /// Function evaluations per iteration.
@@ -330,6 +392,57 @@ mod tests {
     fn rejects_bad_input() {
         assert!(Layout::compute(0, 100, 50, 8).is_err());
         assert!(Layout::compute(3, 2, 50, 8).is_err());
+    }
+
+    /// Regression for the sample-counter truncation bug: a layout
+    /// straddling the 2^32-call boundary is valid (the sample-index
+    /// pipeline is 64-bit) and reports its call count untruncated.
+    #[test]
+    #[cfg(target_pointer_width = "64")]
+    fn layout_past_u32_calls_is_valid_and_untruncated() {
+        let l = Layout::compute(1, 1usize << 33, 50, 8).unwrap();
+        assert_eq!(l.calls(), 1usize << 33);
+        assert!(l.calls() > u32::MAX as usize);
+        assert!(l.validate().is_ok());
+        // The old pipeline computed `(cube * p + k) as u32`; make sure
+        // the layout arithmetic itself can't collapse below 2^32.
+        assert_eq!((l.m as u64) * (l.p as u64), 1u64 << 33);
+    }
+
+    /// Beyond the 2^56 Philox counter capacity the layout is rejected
+    /// with a clear message — never a silent wrap.
+    #[test]
+    #[cfg(target_pointer_width = "64")]
+    fn layout_beyond_counter_capacity_is_rejected() {
+        let err = Layout::compute(1, 1usize << 60, 50, 8).unwrap_err();
+        assert!(
+            err.to_string().contains("counter capacity"),
+            "unexpected error: {err}"
+        );
+    }
+
+    #[test]
+    fn validate_rejects_single_sample_cubes() {
+        let mut l = Layout::compute(3, 4096, 20, 4).unwrap();
+        assert!(l.validate().is_ok());
+        l.p = 1;
+        let err = l.validate().unwrap_err();
+        assert!(
+            err.to_string().contains("p >= 2 is required"),
+            "unexpected error: {err}"
+        );
+        l.p = 0;
+        assert!(l.validate().is_err());
+    }
+
+    #[test]
+    fn validate_rejects_inconsistent_cube_count() {
+        let mut l = Layout::compute(3, 4096, 20, 4).unwrap();
+        l.m += 1;
+        assert!(l.validate().is_err());
+        l.m = 0;
+        l.g = 0;
+        assert!(l.validate().is_err());
     }
 
     #[test]

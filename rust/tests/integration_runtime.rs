@@ -79,7 +79,7 @@ fn philox_golden_vectors() {
     assert_eq!(vals.len(), n * ndim);
     let mut buf = vec![0.0; ndim];
     for s in 0..n {
-        mcubes::rng::uniforms_into(s as u32, it, seed, &mut buf);
+        mcubes::rng::uniforms_into(s as u64, it, seed, &mut buf);
         for d in 0..ndim {
             assert_eq!(
                 buf[d],

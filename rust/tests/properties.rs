@@ -6,7 +6,10 @@
 
 use mcubes::api::{Checkpoint, Integrator, RunPlan, Session};
 use mcubes::coordinator::{JobConfig, NativeBackend, StratifiedBackend, VSampleBackend};
-use mcubes::engine::{vsample_stratified, NativeEngine, ScalarEval, VSampleOpts};
+use mcubes::engine::{
+    vsample_stratified, vsample_stratified_with_fill, FillPath, NativeEngine, ScalarEval,
+    VSampleOpts,
+};
 use mcubes::estimator::{Convergence, IterationResult, WeightedEstimator};
 use mcubes::grid::{rebin, smooth_weights, Bins, GridMode};
 use mcubes::integrands::{by_name, ALL_NAMES};
@@ -288,6 +291,152 @@ fn prop_batch_engine_bitwise_matches_scalar() {
     });
 }
 
+/// **SIMD determinism contract.** The lane-parallel fill
+/// (`FillPath::Simd`, the default) is *bitwise* identical to the
+/// scalar per-point reference (`FillPath::Scalar`) — integral,
+/// variance, every histogram cell, and (stratified) every damped
+/// accumulator entry — on BOTH engines and BOTH `Sampling` modes.
+/// `d ∈ {1, 4, 7, 16}` pins the partial-lane-group and
+/// partial-Philox-block shapes: d=1 uses 1 of 4 words per block, d=7
+/// spans two blocks with a ragged tail, d=16 is `MAX_DIM` (m = 1, so
+/// one cube absorbs the whole budget and every lane tail shows up).
+#[test]
+fn prop_simd_fill_bitwise_matches_scalar() {
+    let dims = [1usize, 4, 7, 16];
+    let names = ["f1", "f3", "f4", "f5"];
+    property("simd_vs_scalar_fill", 24, |g: &mut Gen, i| {
+        let d = dims[i % dims.len()];
+        let name = names[(i / dims.len()) % names.len()];
+        let calls = g.usize_range(512, 8192);
+        let nb = g.usize_range(2, 40);
+        let seed = g.usize_range(0, 1 << 30) as u32;
+        let iteration = g.usize_range(0, 25) as u32;
+        let adjust = g.f64() < 0.7;
+        let threads = g.usize_range(1, 4);
+        let f = by_name(name, d).map_err(|e| e.to_string())?;
+        let layout = Layout::compute(d, calls, nb, 4).map_err(|e| e.to_string())?;
+        let bins = Bins::uniform(d, nb);
+        let opts = VSampleOpts {
+            seed,
+            iteration,
+            adjust,
+            threads,
+        };
+        let tag = format!("{name} d={d} calls={calls} nb={nb}");
+
+        // Engine 1, Sampling::Uniform: the uniform m-Cubes engine.
+        let simd = NativeEngine.vsample_with_fill(&*f, &layout, &bins, &opts, FillPath::Simd);
+        let scal = NativeEngine.vsample_with_fill(&*f, &layout, &bins, &opts, FillPath::Scalar);
+        check_bitwise(&tag, "uniform engine", &simd, &scal)?;
+
+        // Engine 2, Sampling::VegasPlus: the stratified engine on a
+        // skewed allocation (wild per-cube counts → ragged lane tails).
+        let mut a_simd = skewed_allocation(g, &layout, 0.75);
+        let mut a_scal = a_simd.clone();
+        let s1 =
+            vsample_stratified_with_fill(&*f, &layout, &bins, &mut a_simd, &opts, FillPath::Simd);
+        let s2 =
+            vsample_stratified_with_fill(&*f, &layout, &bins, &mut a_scal, &opts, FillPath::Scalar);
+        check_bitwise(&tag, "stratified skewed", &s1, &s2)?;
+        for (j, (x, y)) in a_simd.damped().iter().zip(a_scal.damped()).enumerate() {
+            if x.to_bits() != y.to_bits() {
+                return Err(format!("{tag}: damped {j}: {x} != {y}"));
+            }
+        }
+
+        // Stratified engine with the uniform allocation (the
+        // `VegasPlus { beta: 0 }` ≡ `Uniform` mode) — and it must also
+        // equal the uniform engine, closing the triangle.
+        let mut b_simd = Allocation::uniform(&layout);
+        let mut b_scal = b_simd.clone();
+        let u1 =
+            vsample_stratified_with_fill(&*f, &layout, &bins, &mut b_simd, &opts, FillPath::Simd);
+        let u2 =
+            vsample_stratified_with_fill(&*f, &layout, &bins, &mut b_scal, &opts, FillPath::Scalar);
+        check_bitwise(&tag, "stratified uniform", &u1, &u2)?;
+        check_bitwise(&tag, "uniform-vs-stratified", &simd, &u1)?;
+        Ok(())
+    });
+}
+
+/// Bitwise comparison of two engine passes (estimate + histogram) for
+/// the simd-vs-scalar property above.
+fn check_bitwise(
+    tag: &str,
+    label: &str,
+    a: &(IterationResult, Option<Vec<f64>>),
+    b: &(IterationResult, Option<Vec<f64>>),
+) -> Result<(), String> {
+    if a.0.integral.to_bits() != b.0.integral.to_bits()
+        || a.0.variance.to_bits() != b.0.variance.to_bits()
+    {
+        return Err(format!(
+            "{tag} [{label}]: simd ({}, {}) != scalar ({}, {})",
+            a.0.integral, a.0.variance, b.0.integral, b.0.variance
+        ));
+    }
+    match (&a.1, &b.1) {
+        (None, None) => Ok(()),
+        (Some(ha), Some(hb)) => {
+            for (j, (x, y)) in ha.iter().zip(hb).enumerate() {
+                if x.to_bits() != y.to_bits() {
+                    return Err(format!("{tag} [{label}]: histogram cell {j}: {x} != {y}"));
+                }
+            }
+            Ok(())
+        }
+        _ => Err(format!("{tag} [{label}]: histogram presence differs")),
+    }
+}
+
+/// Adversarial `rebin` weight vectors — one-hot (exact zeros
+/// elsewhere), TINY-floored one-hot, and near-equal (a few ulps
+/// apart) — must always leave a strictly monotone grid ending exactly
+/// at 1.0, even when fp drift runs the consume loop off the end.
+#[test]
+fn prop_rebin_adversarial_weights_keep_grid_valid() {
+    property("rebin_adversarial", 300, |g: &mut Gen, i| {
+        let nb = g.usize_range(2, 64);
+        // Random monotone starting grid ending at 1.
+        let mut edges: Vec<f64> = (0..nb).map(|_| g.f64_range(1e-9, 1.0)).collect();
+        edges.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        for k in 0..nb {
+            let min = if k == 0 { 0.0 } else { edges[k - 1] };
+            if edges[k] <= min {
+                edges[k] = min + 1e-9;
+            }
+        }
+        edges[nb - 1] = 1.0;
+        let hot = g.usize_range(0, nb - 1);
+        let w: Vec<f64> = match i % 3 {
+            0 => (0..nb).map(|k| if k == hot { 7.5 } else { 0.0 }).collect(),
+            1 => (0..nb)
+                .map(|k| if k == hot { 1.0 } else { 1e-30 })
+                .collect(),
+            _ => (0..nb)
+                .map(|k| 1.0 + ((k * 31 + i) % 11) as f64 * 1e-16)
+                .collect(),
+        };
+        // Compound a few rounds so drift accumulates.
+        for round in 0..5 {
+            rebin(&mut edges, &w);
+            let mut prev = 0.0;
+            for (k, &e) in edges.iter().enumerate() {
+                if !(e > prev && e <= 1.0) {
+                    return Err(format!(
+                        "round {round} edge {k}: {e} not in ({prev}, 1] ({w:?})"
+                    ));
+                }
+                prev = e;
+            }
+            if edges[nb - 1] != 1.0 {
+                return Err(format!("last edge {} != 1.0", edges[nb - 1]));
+            }
+        }
+        Ok(())
+    });
+}
+
 /// Build a deliberately skewed allocation (random damped accumulator,
 /// one hot cube) so per-cube counts differ wildly, then re-apportion.
 fn skewed_allocation(g: &mut Gen, layout: &Layout, beta: f64) -> Allocation {
@@ -380,12 +529,12 @@ fn prop_allocation_invariants() {
         if let Some(&c) = alloc.counts().iter().find(|&&c| c < MIN_SAMPLES_PER_CUBE) {
             return Err(format!("count {c} below floor"));
         }
-        let mut acc = 0u32;
+        let mut acc = 0u64;
         for (i, (&o, &c)) in alloc.offsets().iter().zip(alloc.counts()).enumerate() {
             if o != acc {
                 return Err(format!("offset {i}: {o} != prefix sum {acc}"));
             }
-            acc = acc.wrapping_add(c);
+            acc += c as u64;
         }
         // beta = 0: exact uniform split (p everywhere for this budget).
         let mut zero = alloc.clone();
