@@ -14,6 +14,10 @@
 //! Results are recorded in EXPERIMENTS.md §E2E. Run:
 //!   cargo run --offline --release --example service_demo
 
+// Narrowing / float→int casts in this file are deliberate and
+// audited by `cargo xtask lint` (MC001); see docs/invariants.md.
+#![allow(clippy::cast_possible_truncation)]
+
 use mcubes::coordinator::{JobRequest, Scheduler};
 use mcubes::prelude::*;
 use mcubes::runtime::{PjrtRuntime, Registry, DEFAULT_ARTIFACT_DIR};

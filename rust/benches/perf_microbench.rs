@@ -9,6 +9,10 @@
 //! the batch-vs-scalar and sampling-strategy series for the perf
 //! trajectory.
 
+// Narrowing / float→int casts in this file are deliberate and
+// audited by `cargo xtask lint` (MC001); see docs/invariants.md.
+#![allow(clippy::cast_possible_truncation)]
+
 use mcubes::api::{Integrator, RunPlan, Sampling};
 use mcubes::coordinator::{IntegrationOutput, JobConfig, JobRequest, Scheduler};
 use mcubes::engine::{

@@ -62,6 +62,7 @@ where
 
     /// Wrap `f` over the unit box `[0, 1]^dim`.
     pub fn unit(dim: usize, f: F) -> FnIntegrand<F> {
+        // lint:allow(MC005, structurally infallible — Bounds::unit(dim) always has exactly dim axes)
         Self::new(dim, Bounds::unit(dim), f).expect("unit bounds always match")
     }
 
@@ -176,6 +177,7 @@ where
 
     /// Wrap a batch closure over the unit box `[0, 1]^dim`.
     pub fn unit(dim: usize, f: F) -> FnBatchIntegrand<F> {
+        // lint:allow(MC005, structurally infallible — Bounds::unit(dim) always has exactly dim axes)
         Self::new(dim, Bounds::unit(dim), f).expect("unit bounds always match")
     }
 

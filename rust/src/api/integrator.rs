@@ -520,6 +520,7 @@ impl Integrator {
                         runtime: PjrtRuntime::cpu()?,
                     });
                 }
+                // lint:allow(MC005, the stale-check block directly above guarantees Some)
                 let state = pjrt.as_ref().expect("pjrt state just ensured");
                 let backend =
                     PjrtBackend::load(&state.runtime, &state.registry, name, cfg.maxcalls)?;

@@ -404,6 +404,7 @@ impl Session {
         let t0 = Instant::now();
         self.ensure_backend()?;
         let rec = {
+            // lint:allow(MC005, ensure_backend() on the previous line guarantees Some)
             let backend = self.backend.as_deref().expect("backend just ensured");
             self.core.step(backend, &self.cfg)?
         };

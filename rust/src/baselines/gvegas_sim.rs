@@ -21,6 +21,10 @@
 //! matches m-Cubes; only the organization differs — exactly the paper's
 //! claim.
 
+// Narrowing casts (staged-buffer u16 bin indices, iteration counters)
+// are audited by `cargo xtask lint` (MC001); see docs/invariants.md.
+#![allow(clippy::cast_possible_truncation)]
+
 use super::BaselineResult;
 use crate::engine::{PointBlock, VegasMap, BLOCK_POINTS};
 use crate::estimator::{Convergence, WeightedEstimator};
@@ -29,7 +33,7 @@ use crate::integrands::Integrand;
 use crate::rng::uniforms_into;
 use crate::strat::Layout;
 use crate::util::threadpool::parallel_chunks;
-use std::time::Instant;
+use std::time::Instant; // lint:allow(MC003, wall-clock timing of the baseline run for reports; never feeds sampling — Philox is the only entropy source)
 
 #[derive(Debug, Clone, Copy)]
 pub struct GvegasConfig {
@@ -77,6 +81,7 @@ pub fn gvegas_integrate(f: &dyn Integrand, cfg: &GvegasConfig) -> BaselineResult
     // therefore computed from the cap, and the iteration budget grows
     // so the *total* allowed calls matches the uncapped configuration.
     let per_iter_calls = cfg.maxcalls.min(cfg.launch_cap);
+    // lint:allow(MC005, baseline bench harness — configs come from the bench drivers and a bad layout should fail fast, not propagate)
     let layout = Layout::compute(d, per_iter_calls, cfg.nb, 1).expect("layout");
     let nb = cfg.nb;
 
@@ -153,6 +158,7 @@ pub fn gvegas_integrate(f: &dyn Integrand, cfg: &GvegasConfig) -> BaselineResult
                         let mut rec = EvalRecord::default();
                         for i in 0..d {
                             // bidx holds i*nb + b; the record keeps b.
+                            // lint:allow(MC001, bin index b < nb <= a few hundred — u16 staging mirrors gVegas's compact device records)
                             rec.bins[i] = (bidx[j * d + i] - i * nb) as u16;
                         }
                         rec.v = vals[j] * blk.jac(j);
@@ -162,6 +168,7 @@ pub fn gvegas_integrate(f: &dyn Integrand, cfg: &GvegasConfig) -> BaselineResult
                         // buffer's (cube, k) addressing in the host pass.
                         local.push(((rel_cube + j / p) * p + j % p, rec));
                     }
+                    // lint:allow(MC004, chunk-local integer cube cursor — not a floating-point accumulator)
                     rel_cube += ncubes;
                 }
                 local

@@ -8,7 +8,7 @@
 use super::BaselineResult;
 use crate::engine::{accumulate_uniform_box, PointBlock, BLOCK_POINTS};
 use crate::integrands::Integrand;
-use std::time::Instant;
+use std::time::Instant; // lint:allow(MC003, wall-clock timing of the baseline run for reports; never feeds sampling — Philox is the only entropy source)
 
 #[derive(Debug, Clone, Copy)]
 pub struct PlainMcConfig {

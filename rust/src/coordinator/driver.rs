@@ -18,6 +18,10 @@
 //! Every run ends with a typed [`StopReason`] carried on
 //! [`DriveOutcome`] and the final [`IterationEvent`].
 
+// The iteration-counter narrowing cast below is audited by
+// `cargo xtask lint` (MC001); see docs/invariants.md.
+#![allow(clippy::cast_possible_truncation)]
+
 use super::backend::VSampleBackend;
 use crate::api::{
     Checkpoint, GridState, IterationEvent, ObserverControl, RunPlan, Session, StopReason,
@@ -451,6 +455,7 @@ impl SessionCore {
         let stage_idx = self.stage_idx;
         let stage = &self.stages[stage_idx];
         let t0 = Instant::now();
+        // lint:allow(MC001, iteration index — bounded far below 2^32 by RunPlan validation (per-stage iters sum); the Philox counter word and PJRT kernel ABI are u32)
         let (r, contrib) = backend.run(&self.bins, cfg.seed, self.iteration as u32, stage.adapt)?;
         self.kernel_time += t0.elapsed().as_secs_f64();
         self.calls_used += backend.layout().calls();

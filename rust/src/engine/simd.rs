@@ -37,6 +37,10 @@
 //!
 //! [`philox4x32_lanes`]: crate::rng::philox_simd::philox4x32_lanes
 
+// Narrowing / float→int casts in this file are deliberate and
+// audited by `cargo xtask lint` (MC001); see docs/invariants.md.
+#![allow(clippy::cast_possible_truncation)]
+
 use super::block::{PointBlock, VegasMap};
 use super::MAX_DIM;
 use crate::rng::philox_simd::{uniforms_lanes, LANES};

@@ -26,6 +26,10 @@
 //!   bitwise identical to `NativeEngine::vsample` (property-tested in
 //!   `rust/tests/properties.rs`).
 
+// Narrowing / float→int casts in this file are deliberate and
+// audited by `cargo xtask lint` (MC001); see docs/invariants.md.
+#![allow(clippy::cast_possible_truncation)]
+
 use super::block::{PointBlock, VegasMap, BLOCK_POINTS};
 use super::simd::FillPath;
 use super::{reduction_task_span, reduction_tasks, VSampleOpts, MAX_DIM};

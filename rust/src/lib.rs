@@ -204,3 +204,7 @@ mod architecture_doctests {}
 #[cfg(doctest)]
 #[doc = include_str!("../../docs/sampling.md")]
 mod sampling_doctests {}
+
+#[cfg(doctest)]
+#[doc = include_str!("../../docs/invariants.md")]
+mod invariants_doctests {}

@@ -21,7 +21,7 @@ pub struct BoxStats {
 impl BoxStats {
     pub fn from_samples(samples: &[f64]) -> BoxStats {
         let mut s: Vec<f64> = samples.iter().copied().filter(|x| x.is_finite()).collect();
-        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        s.sort_by(f64::total_cmp);
         if s.is_empty() {
             return BoxStats {
                 n: 0,
@@ -50,7 +50,7 @@ impl BoxStats {
             q1,
             median: percentile_sorted(&s, 50.0),
             q3,
-            max: *s.last().unwrap(),
+            max: s[s.len() - 1],
             mean: s.iter().sum::<f64>() / s.len() as f64,
             outliers,
         }

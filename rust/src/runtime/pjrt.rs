@@ -26,7 +26,12 @@ mod imp {
     use crate::estimator::IterationResult;
     use crate::grid::Bins;
     use crate::runtime::registry::{ArtifactMeta, Registry};
-    use std::collections::HashMap;
+    // BTreeMap rather than HashMap: the compile cache is only ever hit
+    // by exact key, but a deterministic container keeps every
+    // collection in the runtime iteration-order-stable by construction
+    // (the MC002 determinism rule bans hashed iteration outright in the
+    // core modules; the runtime follows the same discipline).
+    use std::collections::BTreeMap;
     use std::sync::{Arc, Mutex};
 
     fn xerr(e: xla::Error) -> Error {
@@ -36,7 +41,7 @@ mod imp {
     /// Owns the PJRT CPU client and a compile cache keyed by artifact name.
     pub struct PjrtRuntime {
         client: xla::PjRtClient,
-        cache: Mutex<HashMap<String, Arc<VSampleExecutable>>>,
+        cache: Mutex<BTreeMap<String, Arc<VSampleExecutable>>>,
     }
 
     impl PjrtRuntime {
@@ -45,7 +50,7 @@ mod imp {
             let client = xla::PjRtClient::cpu().map_err(xerr)?;
             Ok(PjrtRuntime {
                 client,
-                cache: Mutex::new(HashMap::new()),
+                cache: Mutex::new(BTreeMap::new()),
             })
         }
 

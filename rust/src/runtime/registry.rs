@@ -193,11 +193,15 @@ impl Registry {
             });
         }
         candidates.sort_by_key(|a| a.maxcalls);
-        Ok(candidates
+        candidates
             .iter()
             .find(|a| a.maxcalls >= min_calls)
+            .or_else(|| candidates.last())
             .copied()
-            .unwrap_or(*candidates.last().unwrap()))
+            .ok_or_else(|| Error::Unknown {
+                kind: "artifact for integrand",
+                name: format!("{integrand} (adjust={adjust})"),
+            })
     }
 
     /// Path to an artifact's HLO text.

@@ -6,6 +6,10 @@
 //! JSON lines via [`bench_json_line`] / [`emit_bench`] so the perf
 //! trajectory of a series can be recorded across runs.
 
+// Narrowing / float→int casts in this file are deliberate and
+// audited by `cargo xtask lint` (MC001); see docs/invariants.md.
+#![allow(clippy::cast_possible_truncation)]
+
 use crate::util::json::ObjBuilder;
 use std::time::{Duration, Instant};
 

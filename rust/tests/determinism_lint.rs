@@ -1,0 +1,67 @@
+//! Tier-1 determinism gate: run `cargo xtask lint` (as a library
+//! call) from the root package's own test suite, so plain
+//! `cargo test -q` fails on a contract violation even when nobody
+//! invokes the linter or tests the workspace members.
+//!
+//! The full per-rule fixture matrix lives in
+//! `tools/xtask/tests/lint_rules.rs`; this file keeps tier-1 honest
+//! with the gate itself plus one smoke check per direction (a rule
+//! fires, a reasoned suppression holds, a malformed suppression is an
+//! error). See docs/invariants.md for the rules (MC001–MC005) and the
+//! `lint:allow(RULE, reason)` syntax.
+
+use std::path::Path;
+
+use xtask_lint::{lint_root, lint_source};
+
+/// The real tree lints clean: every violation is fixed or carries a
+/// reasoned `lint:allow`, and no suppression is stale.
+#[test]
+fn rust_src_lints_clean() {
+    let root = Path::new(env!("CARGO_MANIFEST_DIR")).join("rust/src");
+    let r = lint_root(&root, "rust/src").expect("rust/src readable");
+    assert!(
+        r.diagnostics.is_empty(),
+        "determinism lint violations:\n{:#?}\nfix the code or add \
+         `// lint:allow(RULE, reason)` — see docs/invariants.md",
+        r.diagnostics
+    );
+    assert!(
+        r.warnings.is_empty(),
+        "stale suppressions (nothing left to suppress):\n{:#?}",
+        r.warnings
+    );
+}
+
+/// The gate is live: the PR 5 truncation pattern still fires.
+#[test]
+fn truncation_pattern_still_fires() {
+    let r = lint_source(
+        "engine/mod.rs",
+        "let key = (cube_idx * samples_per_cube + i) as u32;\n",
+    );
+    assert_eq!(r.diagnostics.len(), 1, "{:#?}", r.diagnostics);
+    assert_eq!(r.diagnostics[0].rule, "MC001");
+}
+
+/// A reasoned suppression holds, and is consumed (no stale warning).
+#[test]
+fn reasoned_suppression_holds() {
+    let r = lint_source(
+        "engine/mod.rs",
+        "let lo = sample_idx as u32; // lint:allow(MC001, low half of a deliberately split counter)\n",
+    );
+    assert!(r.diagnostics.is_empty(), "{:#?}", r.diagnostics);
+    assert!(r.warnings.is_empty(), "{:?}", r.warnings);
+}
+
+/// A typo'd suppression is an error, and suppresses nothing.
+#[test]
+fn malformed_suppression_is_an_error() {
+    let r = lint_source(
+        "api/session.rs",
+        "let v = o.unwrap(); // lint:allow(MC05, typo in the rule id)\n",
+    );
+    let rules: Vec<&str> = r.diagnostics.iter().map(|d| d.rule).collect();
+    assert_eq!(rules, ["MC000", "MC005"], "{:#?}", r.diagnostics);
+}

@@ -4,6 +4,10 @@
 //! `eval_batch` path must be *bitwise* identical to the scalar default
 //! through the identical engine pipeline.
 
+// Narrowing / float→int casts in this file are deliberate and
+// audited by `cargo xtask lint` (MC001); see docs/invariants.md.
+#![allow(clippy::cast_possible_truncation)]
+
 use mcubes::api::{Checkpoint, Integrator, RunPlan, Session};
 use mcubes::coordinator::{JobConfig, NativeBackend, StratifiedBackend, VSampleBackend};
 use mcubes::engine::{

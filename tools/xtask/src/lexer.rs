@@ -1,0 +1,411 @@
+//! A minimal Rust lexer — just enough structure for the determinism
+//! lint rules (tools/xtask), with zero dependencies so the workspace
+//! keeps building fully offline (no `syn`, no `proc-macro2`).
+//!
+//! The token stream deliberately stays close to the source text:
+//! comments and string/char literals are recognized (so rule patterns
+//! never match inside them) but their contents are not interpreted,
+//! and numeric literals are single opaque tokens. Line numbers are
+//! tracked through every multi-line construct (block comments, plain
+//! and raw strings) because diagnostics and `lint:allow` suppression
+//! are line-addressed.
+
+/// Token classification — only as fine-grained as the rules need.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TokKind {
+    Ident,
+    Num,
+    Str,
+    CharLit,
+    Lifetime,
+    Punct,
+}
+
+/// One source token with its starting line (1-based).
+#[derive(Debug, Clone)]
+pub struct Tok {
+    pub kind: TokKind,
+    pub text: String,
+    pub line: usize,
+}
+
+/// One `//` comment (block comments are skipped entirely — suppression
+/// directives must be line comments).
+#[derive(Debug, Clone)]
+pub struct Comment {
+    /// Full comment text including the leading `//`.
+    pub text: String,
+    /// Line the comment starts on (1-based).
+    pub line: usize,
+    /// True when a token precedes the comment on the same line — a
+    /// trailing comment annotates its own line, a full-line comment
+    /// annotates the line directly below it.
+    pub trailing: bool,
+}
+
+fn is_ident_start(c: char) -> bool {
+    c.is_ascii_alphabetic() || c == '_'
+}
+
+fn is_ident_cont(c: char) -> bool {
+    c.is_ascii_alphanumeric() || c == '_'
+}
+
+/// Length (in chars) and newline count of a double-quoted string
+/// starting at `c[0] == '"'`.
+fn dq_string_len(c: &[char]) -> (usize, usize) {
+    let mut i = 1;
+    let mut nl = 0;
+    while i < c.len() {
+        match c[i] {
+            '\\' => {
+                if c.get(i + 1) == Some(&'\n') {
+                    nl += 1;
+                }
+                i += 2;
+            }
+            '"' => return (i + 1, nl),
+            '\n' => {
+                nl += 1;
+                i += 1;
+            }
+            _ => i += 1,
+        }
+    }
+    (c.len(), nl)
+}
+
+/// Length of a char/byte literal starting at `c[0] == '\''`.
+fn char_lit_len(c: &[char]) -> usize {
+    let mut i = 1;
+    while i < c.len() {
+        match c[i] {
+            '\\' => i += 2,
+            '\'' => return i + 1,
+            _ => i += 1,
+        }
+    }
+    c.len()
+}
+
+/// Recognize `r".."`, `r#".."#`, `br".."`, ... starting at `c[0]`.
+/// Returns the total length and newline count, or `None` if this is
+/// not a raw string (e.g. an identifier that merely starts with `r`).
+fn raw_string_len(c: &[char]) -> Option<(usize, usize)> {
+    let mut i = 0;
+    if c.get(i) == Some(&'b') {
+        i += 1;
+    }
+    if c.get(i) != Some(&'r') {
+        return None;
+    }
+    i += 1;
+    let mut hashes = 0;
+    while c.get(i) == Some(&'#') {
+        hashes += 1;
+        i += 1;
+    }
+    if c.get(i) != Some(&'"') {
+        return None;
+    }
+    i += 1;
+    let mut nl = 0;
+    loop {
+        match c.get(i) {
+            None => return Some((i, nl)),
+            Some('\n') => {
+                nl += 1;
+                i += 1;
+            }
+            Some('"') => {
+                i += 1;
+                let mut h = 0;
+                while h < hashes && c.get(i) == Some(&'#') {
+                    h += 1;
+                    i += 1;
+                }
+                if h == hashes {
+                    return Some((i, nl));
+                }
+            }
+            Some(_) => i += 1,
+        }
+    }
+}
+
+/// Multi-character punctuation recognized as single tokens. Kept
+/// deliberately small: the rule engine's backward expression scan
+/// treats a bare `=` as a statement boundary, so `==` is left as two
+/// `=` tokens (a comparison also ends the expression being cast).
+const MULTI_PUNCT: &[&str] = &[
+    "+=", "-=", "*=", "/=", "::", "->", "=>", "..", "&&", "||", "<<", ">>",
+];
+
+/// Tokenize `src`, returning the token stream and the line comments.
+pub fn lex(src: &str) -> (Vec<Tok>, Vec<Comment>) {
+    let c: Vec<char> = src.chars().collect();
+    let n = c.len();
+    let mut toks: Vec<Tok> = Vec::new();
+    let mut comments: Vec<Comment> = Vec::new();
+    let mut i = 0;
+    let mut line = 1;
+    let mut last_tok_line = 0;
+
+    while i < n {
+        let ch = c[i];
+        if ch == '\n' {
+            line += 1;
+            i += 1;
+            continue;
+        }
+        if ch == ' ' || ch == '\t' || ch == '\r' {
+            i += 1;
+            continue;
+        }
+        // Line comment (also covers `///` and `//!` docs).
+        if ch == '/' && c.get(i + 1) == Some(&'/') {
+            let start = i;
+            while i < n && c[i] != '\n' {
+                i += 1;
+            }
+            comments.push(Comment {
+                text: c[start..i].iter().collect(),
+                line,
+                trailing: last_tok_line == line,
+            });
+            continue;
+        }
+        // Block comment, nesting allowed.
+        if ch == '/' && c.get(i + 1) == Some(&'*') {
+            let mut depth = 1;
+            i += 2;
+            while i < n && depth > 0 {
+                if c[i] == '/' && c.get(i + 1) == Some(&'*') {
+                    depth += 1;
+                    i += 2;
+                } else if c[i] == '*' && c.get(i + 1) == Some(&'/') {
+                    depth -= 1;
+                    i += 2;
+                } else {
+                    if c[i] == '\n' {
+                        line += 1;
+                    }
+                    i += 1;
+                }
+            }
+            continue;
+        }
+        // Raw strings and byte strings/chars before plain identifiers,
+        // since they share their first characters with idents.
+        if ch == 'r' || ch == 'b' {
+            if let Some((len, nl)) = raw_string_len(&c[i..]) {
+                toks.push(Tok {
+                    kind: TokKind::Str,
+                    text: String::new(),
+                    line,
+                });
+                line += nl;
+                last_tok_line = line;
+                i += len;
+                continue;
+            }
+            if ch == 'b' && c.get(i + 1) == Some(&'"') {
+                let (len, nl) = dq_string_len(&c[i + 1..]);
+                toks.push(Tok {
+                    kind: TokKind::Str,
+                    text: String::new(),
+                    line,
+                });
+                line += nl;
+                last_tok_line = line;
+                i += 1 + len;
+                continue;
+            }
+            if ch == 'b' && c.get(i + 1) == Some(&'\'') {
+                let len = char_lit_len(&c[i + 1..]);
+                toks.push(Tok {
+                    kind: TokKind::CharLit,
+                    text: String::new(),
+                    line,
+                });
+                last_tok_line = line;
+                i += 1 + len;
+                continue;
+            }
+            // Fall through: plain identifier starting with r/b.
+        }
+        if ch == '"' {
+            let (len, nl) = dq_string_len(&c[i..]);
+            toks.push(Tok {
+                kind: TokKind::Str,
+                text: String::new(),
+                line,
+            });
+            line += nl;
+            last_tok_line = line;
+            i += len;
+            continue;
+        }
+        if ch == '\'' {
+            // Lifetime (`'a`, `'static`) vs char literal (`'x'`, `'\n'`).
+            if i + 1 < n && is_ident_start(c[i + 1]) {
+                let mut j = i + 1;
+                while j < n && is_ident_cont(c[j]) {
+                    j += 1;
+                }
+                if c.get(j) == Some(&'\'') {
+                    toks.push(Tok {
+                        kind: TokKind::CharLit,
+                        text: String::new(),
+                        line,
+                    });
+                    last_tok_line = line;
+                    i = j + 1;
+                } else {
+                    toks.push(Tok {
+                        kind: TokKind::Lifetime,
+                        text: c[i..j].iter().collect(),
+                        line,
+                    });
+                    last_tok_line = line;
+                    i = j;
+                }
+                continue;
+            }
+            let len = char_lit_len(&c[i..]);
+            toks.push(Tok {
+                kind: TokKind::CharLit,
+                text: String::new(),
+                line,
+            });
+            last_tok_line = line;
+            i += len;
+            continue;
+        }
+        if is_ident_start(ch) {
+            let mut j = i + 1;
+            while j < n && is_ident_cont(c[j]) {
+                j += 1;
+            }
+            toks.push(Tok {
+                kind: TokKind::Ident,
+                text: c[i..j].iter().collect(),
+                line,
+            });
+            last_tok_line = line;
+            i = j;
+            continue;
+        }
+        if ch.is_ascii_digit() {
+            let mut j = i + 1;
+            while j < n && (c[j].is_ascii_alphanumeric() || c[j] == '_') {
+                j += 1;
+            }
+            // Fractional part — but `0..n` is a range and `1.max(2)` a
+            // method call, so the dot must not be followed by another
+            // dot or an identifier start.
+            if c.get(j) == Some(&'.')
+                && !matches!(c.get(j + 1), Some(&d) if d == '.' || is_ident_start(d))
+            {
+                j += 1;
+                while j < n && (c[j].is_ascii_alphanumeric() || c[j] == '_') {
+                    j += 1;
+                }
+            }
+            toks.push(Tok {
+                kind: TokKind::Num,
+                text: c[i..j].iter().collect(),
+                line,
+            });
+            last_tok_line = line;
+            i = j;
+            continue;
+        }
+        // Punctuation: longest match first.
+        let mut matched = false;
+        for p in MULTI_PUNCT {
+            let pc: Vec<char> = p.chars().collect();
+            if c[i..].starts_with(&pc) {
+                toks.push(Tok {
+                    kind: TokKind::Punct,
+                    text: (*p).to_string(),
+                    line,
+                });
+                last_tok_line = line;
+                i += pc.len();
+                matched = true;
+                break;
+            }
+        }
+        if !matched {
+            toks.push(Tok {
+                kind: TokKind::Punct,
+                text: ch.to_string(),
+                line,
+            });
+            last_tok_line = line;
+            i += 1;
+        }
+    }
+    (toks, comments)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn texts(src: &str) -> Vec<String> {
+        lex(src).0.into_iter().map(|t| t.text).collect()
+    }
+
+    #[test]
+    fn idents_and_casts() {
+        assert_eq!(texts("let x = idx as u32;"), ["let", "x", "=", "idx", "as", "u32", ";"]);
+    }
+
+    #[test]
+    fn range_vs_float() {
+        assert_eq!(texts("0..10"), ["0", "..", "10"]);
+        assert_eq!(texts("1.5e3"), ["1.5e3"]);
+        assert_eq!(texts("1.max(2)"), ["1", ".", "max", "(", "2", ")"]);
+    }
+
+    #[test]
+    fn strings_and_chars_are_opaque() {
+        let (toks, _) = lex("f(\"as u32 // not a comment\", 'x', b'\\n')");
+        assert!(toks.iter().all(|t| t.text != "u32"));
+    }
+
+    #[test]
+    fn raw_string_with_hashes() {
+        let (toks, comments) = lex("let s = r#\"multi\nline // no\"#; // yes");
+        assert!(toks.iter().any(|t| t.kind == TokKind::Str));
+        assert_eq!(comments.len(), 1);
+        assert_eq!(comments[0].line, 2);
+        assert!(comments[0].trailing);
+    }
+
+    #[test]
+    fn lifetimes_are_not_char_literals() {
+        let (toks, _) = lex("fn f<'a>(x: &'a str) -> &'a str { x }");
+        assert_eq!(toks.iter().filter(|t| t.kind == TokKind::Lifetime).count(), 3);
+    }
+
+    #[test]
+    fn comment_lines_and_trailing() {
+        let (_, comments) = lex("// top\nlet x = 1; // side\n// bottom\n");
+        assert_eq!(comments.len(), 3);
+        assert!(!comments[0].trailing);
+        assert!(comments[1].trailing);
+        assert_eq!(comments[1].line, 2);
+        assert!(!comments[2].trailing);
+        assert_eq!(comments[2].line, 3);
+    }
+
+    #[test]
+    fn block_comments_nest_and_count_lines() {
+        let (toks, _) = lex("/* a /* b\n */ c\n*/ token");
+        assert_eq!(toks.len(), 1);
+        assert_eq!(toks[0].line, 3);
+    }
+}

@@ -1,0 +1,313 @@
+//! `xtask_lint` — the m-Cubes determinism-invariant linter behind
+//! `cargo xtask lint`.
+//!
+//! The reproducibility contract (docs/invariants.md) promises that a
+//! `(seed, grid, call-budget)` triple fully determines every sample
+//! and therefore every result, independent of thread count, chunk
+//! size, and SIMD lane width. Five rule IDs guard the code patterns
+//! that historically break that promise:
+//!
+//! * **MC001** — lossy narrowing casts on sample-index/counter/offset
+//!   expressions (the PR 5 truncation bug class).
+//! * **MC002** — HashMap/HashSet in deterministic core modules.
+//! * **MC003** — wall clocks or foreign RNGs in core sampling modules.
+//! * **MC004** — `+=` accumulation inside parallel closures outside
+//!   the blessed reduction modules.
+//! * **MC005** — `unwrap()`/`expect()` in non-test library code.
+//!
+//! False positives are suppressed in-source with a written reason:
+//!
+//! ```text
+//! let lo = sample_idx as u32; // lint:allow(MC001, deliberate split — low 32 bits)
+//! ```
+//!
+//! A trailing directive suppresses its own line; a directive on a line
+//! of its own suppresses the line directly below it. The reason is
+//! mandatory, unknown rule IDs are themselves an error (**MC000**),
+//! and suppressions that match nothing are reported as warnings so
+//! stale allows surface when the code under them improves.
+
+pub mod lexer;
+pub mod rules;
+
+use std::fs;
+use std::io;
+use std::path::Path;
+
+pub use rules::{Finding, RuleInfo, RULES};
+
+/// A finding that survived suppression, tagged with its file.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Diagnostic {
+    pub file: String,
+    pub line: usize,
+    pub rule: &'static str,
+    pub message: String,
+}
+
+/// Lint result for one file or one whole tree.
+#[derive(Debug, Default)]
+pub struct Report {
+    pub diagnostics: Vec<Diagnostic>,
+    /// Non-fatal notes (currently: unused suppressions).
+    pub warnings: Vec<String>,
+}
+
+impl Report {
+    pub fn is_clean(&self) -> bool {
+        self.diagnostics.is_empty()
+    }
+}
+
+/// One parsed `lint:allow(RULE, reason)` directive.
+#[derive(Debug)]
+struct Directive {
+    /// Line the directive suppresses (its own line if trailing, the
+    /// next line otherwise).
+    applies_to: usize,
+    rule: String,
+    used: bool,
+}
+
+const DIRECTIVE: &str = "lint:allow(";
+
+/// Parse every directive out of the file's line comments. Malformed
+/// directives become MC000 findings — a suppression that silently
+/// failed to parse must not look like a clean file.
+fn parse_directives(comments: &[lexer::Comment]) -> (Vec<Directive>, Vec<Finding>) {
+    let mut dirs = Vec::new();
+    let mut errors = Vec::new();
+    for c in comments {
+        let mut rest = c.text.as_str();
+        while let Some(pos) = rest.find(DIRECTIVE) {
+            let body = &rest[pos + DIRECTIVE.len()..];
+            // Directive arguments run to the matching close paren
+            // (reasons may contain balanced parentheses).
+            let mut depth = 1usize;
+            let mut end = None;
+            for (i, ch) in body.char_indices() {
+                match ch {
+                    '(' => depth += 1,
+                    ')' => {
+                        depth -= 1;
+                        if depth == 0 {
+                            end = Some(i);
+                            break;
+                        }
+                    }
+                    _ => {}
+                }
+            }
+            let Some(end) = end else {
+                errors.push(Finding {
+                    rule: "MC000",
+                    line: c.line,
+                    message: "unterminated lint:allow directive — missing `)`".into(),
+                });
+                break;
+            };
+            let args = &body[..end];
+            rest = &body[end + 1..];
+            let (rule, reason) = match args.split_once(',') {
+                Some((r, why)) => (r.trim(), why.trim()),
+                None => (args.trim(), ""),
+            };
+            if !rules::is_known_rule(rule) {
+                errors.push(Finding {
+                    rule: "MC000",
+                    line: c.line,
+                    message: format!(
+                        "unknown rule `{rule}` in lint:allow (known: MC001..MC005)"
+                    ),
+                });
+                continue;
+            }
+            if reason.is_empty() {
+                errors.push(Finding {
+                    rule: "MC000",
+                    line: c.line,
+                    message: format!(
+                        "lint:allow({rule}) without a reason — write down why the \
+                         invariant holds here"
+                    ),
+                });
+                continue;
+            }
+            dirs.push(Directive {
+                applies_to: if c.trailing { c.line } else { c.line + 1 },
+                rule: rule.to_string(),
+                used: false,
+            });
+        }
+    }
+    (dirs, errors)
+}
+
+/// Lint one file's source text. `rel` is its path relative to the scan
+/// root using `/` separators — rule scoping matches on it, and it
+/// becomes the `file` field of each diagnostic.
+pub fn lint_source(rel: &str, src: &str) -> Report {
+    let (toks, comments) = lexer::lex(src);
+    let findings = rules::check_tokens(rel, &toks);
+    let (mut dirs, directive_errors) = parse_directives(&comments);
+
+    let mut report = Report::default();
+    for f in findings {
+        let mut suppressed = false;
+        for d in dirs
+            .iter_mut()
+            .filter(|d| d.rule == f.rule && d.applies_to == f.line)
+        {
+            d.used = true;
+            suppressed = true;
+        }
+        if !suppressed {
+            report.diagnostics.push(Diagnostic {
+                file: rel.to_string(),
+                line: f.line,
+                rule: f.rule,
+                message: f.message,
+            });
+        }
+    }
+    for e in directive_errors {
+        report.diagnostics.push(Diagnostic {
+            file: rel.to_string(),
+            line: e.line,
+            rule: e.rule,
+            message: e.message,
+        });
+    }
+    for d in dirs.iter().filter(|d| !d.used) {
+        report.warnings.push(format!(
+            "{rel}:{line}: unused lint:allow({rule}) — nothing to suppress here",
+            line = d.applies_to,
+            rule = d.rule,
+        ));
+    }
+    report
+        .diagnostics
+        .sort_by(|a, b| (&a.file, a.line, a.rule).cmp(&(&b.file, b.line, b.rule)));
+    report
+}
+
+/// Collect `*.rs` files under `root`, sorted by relative path so runs
+/// are deterministic regardless of directory-entry order.
+fn walk(root: &Path) -> io::Result<Vec<std::path::PathBuf>> {
+    let mut files = Vec::new();
+    let mut stack = vec![root.to_path_buf()];
+    while let Some(dir) = stack.pop() {
+        for entry in fs::read_dir(&dir)? {
+            let path = entry?.path();
+            if path.is_dir() {
+                stack.push(path);
+            } else if path.extension().is_some_and(|e| e == "rs") {
+                files.push(path);
+            }
+        }
+    }
+    files.sort();
+    Ok(files)
+}
+
+/// Lint every `*.rs` file under `root`. Diagnostics carry paths of the
+/// form `{prefix}/{relative}` so output is readable from the repo root
+/// (pass `prefix = "rust/src"` when scanning that tree).
+pub fn lint_root(root: &Path, prefix: &str) -> io::Result<Report> {
+    let mut total = Report::default();
+    for path in walk(root)? {
+        let rel = path
+            .strip_prefix(root)
+            .unwrap_or(&path)
+            .to_string_lossy()
+            .replace('\\', "/");
+        let display = if prefix.is_empty() {
+            rel
+        } else {
+            format!("{}/{rel}", prefix.trim_end_matches('/'))
+        };
+        let src = fs::read_to_string(&path)?;
+        // Scoping matches on the root-relative path, display on the
+        // prefixed one; both agree on every suffix the rules test.
+        let mut rep = lint_source(&display, &src);
+        total.diagnostics.append(&mut rep.diagnostics);
+        total.warnings.append(&mut rep.warnings);
+    }
+    total
+        .diagnostics
+        .sort_by(|a, b| (&a.file, a.line, a.rule).cmp(&(&b.file, b.line, b.rule)));
+    Ok(total)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn trailing_directive_suppresses_own_line() {
+        let r = lint_source(
+            "engine/x.rs",
+            "let a = sample_idx as u32; // lint:allow(MC001, low half of a split counter)\n",
+        );
+        assert!(r.is_clean(), "{:?}", r.diagnostics);
+        assert!(r.warnings.is_empty());
+    }
+
+    #[test]
+    fn own_line_directive_suppresses_next_line() {
+        let r = lint_source(
+            "engine/x.rs",
+            "// lint:allow(MC001, low half of a split counter)\nlet a = sample_idx as u32;\n",
+        );
+        assert!(r.is_clean(), "{:?}", r.diagnostics);
+    }
+
+    #[test]
+    fn directive_does_not_reach_past_one_line() {
+        let r = lint_source(
+            "engine/x.rs",
+            "// lint:allow(MC001, too far away)\n\nlet a = sample_idx as u32;\n",
+        );
+        assert_eq!(r.diagnostics.len(), 1);
+        assert_eq!(r.diagnostics[0].line, 3);
+        assert_eq!(r.warnings.len(), 1);
+    }
+
+    #[test]
+    fn unknown_rule_is_mc000() {
+        let r = lint_source("api/x.rs", "// lint:allow(MC999, bogus)\nfn f() {}\n");
+        assert_eq!(r.diagnostics.len(), 1);
+        assert_eq!(r.diagnostics[0].rule, "MC000");
+    }
+
+    #[test]
+    fn missing_reason_is_mc000() {
+        let r = lint_source(
+            "api/x.rs",
+            "let v = o.unwrap(); // lint:allow(MC005)\n",
+        );
+        assert_eq!(r.diagnostics.len(), 2, "{:?}", r.diagnostics);
+        assert!(r.diagnostics.iter().any(|d| d.rule == "MC000"));
+        assert!(r.diagnostics.iter().any(|d| d.rule == "MC005"));
+    }
+
+    #[test]
+    fn wrong_rule_does_not_suppress() {
+        let r = lint_source(
+            "api/x.rs",
+            "let v = o.unwrap(); // lint:allow(MC001, wrong rule)\n",
+        );
+        assert!(r.diagnostics.iter().any(|d| d.rule == "MC005"));
+        assert_eq!(r.warnings.len(), 1);
+    }
+
+    #[test]
+    fn unused_suppression_warns_but_passes() {
+        let r = lint_source(
+            "api/x.rs",
+            "// lint:allow(MC005, nothing here anymore)\nlet v = 1;\n",
+        );
+        assert!(r.is_clean());
+        assert_eq!(r.warnings.len(), 1);
+    }
+}

@@ -1,0 +1,169 @@
+//! `cargo xtask lint` — CLI front end for the determinism linter.
+//!
+//! Exit codes: 0 clean, 1 findings, 2 usage/IO error.
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+use xtask_lint::{lint_root, Report, RULES};
+
+const USAGE: &str = "\
+usage: cargo xtask lint [--root DIR] [--format text|json] [--list-rules]
+
+Lints rust/src (or DIR) against the determinism invariants MC001..MC005.
+See docs/invariants.md for the rules and the lint:allow(RULE, reason)
+suppression syntax.
+
+  --root DIR      scan DIR instead of the repo's rust/src
+  --format FMT    text (default) or json (one object per line)
+  --list-rules    print the rule table and exit
+";
+
+enum Format {
+    Text,
+    Json,
+}
+
+struct Opts {
+    root: Option<PathBuf>,
+    format: Format,
+    list_rules: bool,
+}
+
+fn parse_opts(args: &[String]) -> Result<Opts, String> {
+    let mut opts = Opts {
+        root: None,
+        format: Format::Text,
+        list_rules: false,
+    };
+    let mut it = args.iter();
+    while let Some(a) = it.next() {
+        match a.as_str() {
+            "--root" => {
+                let dir = it.next().ok_or("--root requires a directory")?;
+                opts.root = Some(PathBuf::from(dir));
+            }
+            "--format" => match it.next().map(String::as_str) {
+                Some("text") => opts.format = Format::Text,
+                Some("json") => opts.format = Format::Json,
+                _ => return Err("--format requires `text` or `json`".into()),
+            },
+            "--list-rules" => opts.list_rules = true,
+            "--help" | "-h" => return Err(String::new()),
+            other => return Err(format!("unknown flag `{other}`")),
+        }
+    }
+    Ok(opts)
+}
+
+/// Minimal JSON string escaping — the only JSON this binary emits.
+fn json_str(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    out.push('"');
+    for ch in s.chars() {
+        match ch {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            '\r' => out.push_str("\\r"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+    out
+}
+
+fn emit(report: &Report, format: &Format) {
+    match format {
+        Format::Text => {
+            for d in &report.diagnostics {
+                println!("{}:{}: {} {}", d.file, d.line, d.rule, d.message);
+            }
+            for w in &report.warnings {
+                println!("warning: {w}");
+            }
+            if report.is_clean() {
+                println!(
+                    "xtask lint: clean ({} warning{})",
+                    report.warnings.len(),
+                    if report.warnings.len() == 1 { "" } else { "s" },
+                );
+            } else {
+                println!(
+                    "xtask lint: {} finding{}",
+                    report.diagnostics.len(),
+                    if report.diagnostics.len() == 1 { "" } else { "s" },
+                );
+            }
+        }
+        Format::Json => {
+            for d in &report.diagnostics {
+                println!(
+                    "{{\"level\":\"error\",\"rule\":{},\"file\":{},\"line\":{},\"message\":{}}}",
+                    json_str(d.rule),
+                    json_str(&d.file),
+                    d.line,
+                    json_str(&d.message),
+                );
+            }
+            for w in &report.warnings {
+                println!(
+                    "{{\"level\":\"warning\",\"message\":{}}}",
+                    json_str(w),
+                );
+            }
+        }
+    }
+}
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if args.first().map(String::as_str) != Some("lint") {
+        eprint!("{USAGE}");
+        return ExitCode::from(2);
+    }
+    let opts = match parse_opts(&args[1..]) {
+        Ok(o) => o,
+        Err(msg) => {
+            if !msg.is_empty() {
+                eprintln!("error: {msg}\n");
+            }
+            eprint!("{USAGE}");
+            return ExitCode::from(2);
+        }
+    };
+
+    if opts.list_rules {
+        for r in RULES {
+            println!("{}  {}\n       scope: {}", r.id, r.summary, r.scope);
+        }
+        return ExitCode::SUCCESS;
+    }
+
+    // Default scan root: the repo's rust/src, located relative to this
+    // crate so the command works from any working directory.
+    let (root, prefix) = match &opts.root {
+        Some(dir) => (dir.clone(), dir.to_string_lossy().into_owned()),
+        None => (
+            PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("../../rust/src"),
+            "rust/src".to_string(),
+        ),
+    };
+
+    match lint_root(&root, &prefix) {
+        Ok(report) => {
+            emit(&report, &opts.format);
+            if report.is_clean() {
+                ExitCode::SUCCESS
+            } else {
+                ExitCode::FAILURE
+            }
+        }
+        Err(err) => {
+            eprintln!("error: cannot lint {}: {err}", root.display());
+            ExitCode::from(2)
+        }
+    }
+}

@@ -1,0 +1,434 @@
+//! The determinism-invariant rules (MC001–MC005).
+//!
+//! Each rule is a small token-pattern check over the lexed stream from
+//! [`crate::lexer`]. They over-approximate on purpose: a false positive
+//! costs one `// lint:allow(RULE, reason)` line with a written
+//! justification, while a false negative silently re-opens a bug class
+//! this project has already shipped once (the PR 5 sample-counter
+//! truncation). docs/invariants.md maps every rule to the
+//! reproducibility contract clause it protects.
+
+use crate::lexer::{Tok, TokKind};
+
+/// A single rule finding or directive error, before suppression.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Finding {
+    pub rule: &'static str,
+    pub line: usize,
+    pub message: String,
+}
+
+/// Static description of one rule, for `--list-rules` and docs tests.
+pub struct RuleInfo {
+    pub id: &'static str,
+    pub summary: &'static str,
+    pub scope: &'static str,
+}
+
+/// Every real rule. `MC000` (malformed/unknown `lint:allow`) is a
+/// meta-rule emitted by the directive parser, not listed here.
+pub const RULES: &[RuleInfo] = &[
+    RuleInfo {
+        id: "MC001",
+        summary: "no lossy narrowing cast on sample-index/counter/offset expressions",
+        scope: "all of rust/src",
+    },
+    RuleInfo {
+        id: "MC002",
+        summary: "no HashMap/HashSet in deterministic core modules",
+        scope: "engine/, strat/, estimator/, grid/",
+    },
+    RuleInfo {
+        id: "MC003",
+        summary: "no std::time, rand::, or thread_rng in core sampling modules",
+        scope: "rng/, engine/, strat/, grid/, estimator/, baselines/",
+    },
+    RuleInfo {
+        id: "MC004",
+        summary: "no `+=` accumulation inside parallel closures outside blessed reduction modules",
+        scope: "all of rust/src except engine/, estimator/",
+    },
+    RuleInfo {
+        id: "MC005",
+        summary: "no unwrap()/expect() in non-test library code",
+        scope: "all of rust/src except util/, main.rs",
+    },
+];
+
+/// True if `id` names a suppressible rule.
+pub fn is_known_rule(id: &str) -> bool {
+    RULES.iter().any(|r| r.id == id)
+}
+
+/// Narrow integer types whose `as` casts can truncate a 64-bit index.
+const NARROW: &[&str] = &["u8", "u16", "u32", "i8", "i16", "i32", "usize"];
+
+/// Identifier substrings that mark an expression as index/counter-like.
+const INDEX_WORDS: &[&str] = &[
+    "sample",
+    "sidx",
+    "idx",
+    "index",
+    "counter",
+    "offset",
+    "cube",
+    "iteration",
+    "ncall",
+    "total_calls",
+];
+
+/// Tokens that end the backward scan for the expression being cast
+/// (statement/argument boundaries at nesting depth zero).
+const EXPR_STOP: &[&str] = &[
+    ",", ";", "=", "{", "}", "=>", "let", "return", "+=", "..",
+];
+
+fn path_in(rel: &str, prefixes: &[&str]) -> bool {
+    prefixes.iter().any(|p| rel.contains(p))
+}
+
+fn in_spans(spans: &[(usize, usize)], i: usize) -> bool {
+    spans.iter().any(|&(a, b)| a <= i && i <= b)
+}
+
+/// Token-index spans covered by `#[cfg(test)]` items and `#[test]`
+/// functions — rule findings inside them are dropped (tests may use
+/// unwrap, HashMap scratch state, wall clocks, ...).
+pub fn test_spans(toks: &[Tok]) -> Vec<(usize, usize)> {
+    let mut spans = Vec::new();
+    let mut i = 0;
+    while i < toks.len() {
+        if toks[i].text != "#" || toks.get(i + 1).map(|t| t.text.as_str()) != Some("[") {
+            i += 1;
+            continue;
+        }
+        // Collect the attribute tokens up to the matching `]`.
+        let mut j = i + 2;
+        let mut depth = 1;
+        let mut attr: Vec<&str> = Vec::new();
+        while j < toks.len() && depth > 0 {
+            match toks[j].text.as_str() {
+                "[" => depth += 1,
+                "]" => depth -= 1,
+                _ => {}
+            }
+            if depth > 0 {
+                attr.push(&toks[j].text);
+            }
+            j += 1;
+        }
+        // `test` counts unless it is negated as `not(test)` (the
+        // `#[cfg(not(test))]` guard marks *production*-only code).
+        let is_test = attr.iter().enumerate().any(|(k, t)| {
+            *t == "test"
+                && !(k >= 2 && attr[k - 2] == "not" && attr[k - 1] == "(")
+        });
+        if !is_test {
+            i = j;
+            continue;
+        }
+        // Span runs to the `}` closing the first `{` after the
+        // attribute (the annotated fn/mod body).
+        let mut k = j;
+        while k < toks.len() && toks[k].text != "{" {
+            k += 1;
+        }
+        let open = k;
+        let mut braces = 0;
+        while k < toks.len() {
+            match toks[k].text.as_str() {
+                "{" => braces += 1,
+                "}" => {
+                    braces -= 1;
+                    if braces == 0 {
+                        break;
+                    }
+                }
+                _ => {}
+            }
+            k += 1;
+        }
+        spans.push((open, k));
+        i = j;
+    }
+    spans
+}
+
+/// MC001 — walk backwards from each `as <narrow-int>` collecting the
+/// identifiers of the expression being cast; flag the cast if any of
+/// them looks like a sample index, counter, or offset.
+fn mc001(toks: &[Tok], spans: &[(usize, usize)], out: &mut Vec<Finding>) {
+    for i in 0..toks.len() {
+        if toks[i].text != "as" || toks[i].kind != TokKind::Ident {
+            continue;
+        }
+        let Some(ty) = toks.get(i + 1) else { continue };
+        if !NARROW.contains(&ty.text.as_str()) || in_spans(spans, i) {
+            continue;
+        }
+        let mut idents: Vec<&str> = Vec::new();
+        let mut depth = 0usize;
+        let mut j = i;
+        while j > 0 {
+            j -= 1;
+            let t = toks[j].text.as_str();
+            if t == ")" || t == "]" {
+                depth += 1;
+            } else if t == "(" || t == "[" {
+                if depth == 0 {
+                    break;
+                }
+                depth -= 1;
+            } else if depth == 0 && EXPR_STOP.contains(&t) {
+                break;
+            } else if toks[j].kind == TokKind::Ident {
+                idents.push(t);
+            }
+        }
+        let hit = idents.iter().find(|id| {
+            let lower = id.to_ascii_lowercase();
+            INDEX_WORDS.iter().any(|w| lower.contains(w))
+        });
+        if let Some(id) = hit {
+            out.push(Finding {
+                rule: "MC001",
+                line: toks[i].line,
+                message: format!(
+                    "lossy `as {}` cast on index-like expression (involves `{id}`); \
+                     use u64 end-to-end or prove the bound and lint:allow with the proof",
+                    ty.text
+                ),
+            });
+        }
+    }
+}
+
+/// MC002 — hash containers iterate in randomized order; the
+/// deterministic core must use BTreeMap/BTreeSet/Vec instead.
+fn mc002(rel: &str, toks: &[Tok], spans: &[(usize, usize)], out: &mut Vec<Finding>) {
+    if !path_in(rel, &["engine/", "strat/", "estimator/", "grid/"]) {
+        return;
+    }
+    for (i, t) in toks.iter().enumerate() {
+        if (t.text == "HashMap" || t.text == "HashSet") && !in_spans(spans, i) {
+            out.push(Finding {
+                rule: "MC002",
+                line: t.line,
+                message: format!(
+                    "`{}` in a deterministic core module — iteration order is \
+                     randomized per-process; use BTreeMap/BTreeSet or a Vec",
+                    t.text
+                ),
+            });
+        }
+    }
+}
+
+/// MC003 — core sampling modules must draw entropy from Philox only
+/// and must not read wall clocks.
+fn mc003(rel: &str, toks: &[Tok], spans: &[(usize, usize)], out: &mut Vec<Finding>) {
+    if !path_in(
+        rel,
+        &["rng/", "engine/", "strat/", "grid/", "estimator/", "baselines/"],
+    ) {
+        return;
+    }
+    for i in 0..toks.len() {
+        if in_spans(spans, i) {
+            continue;
+        }
+        let t = toks[i].text.as_str();
+        let next = toks.get(i + 1).map(|t| t.text.as_str());
+        let hit = if t == "std"
+            && next == Some("::")
+            && toks.get(i + 2).map(|t| t.text.as_str()) == Some("time")
+        {
+            Some("std::time")
+        } else if t == "rand" && next == Some("::") {
+            Some("rand::")
+        } else if t == "thread_rng" {
+            Some("thread_rng")
+        } else {
+            None
+        };
+        if let Some(what) = hit {
+            out.push(Finding {
+                rule: "MC003",
+                line: toks[i].line,
+                message: format!(
+                    "`{what}` in a core sampling module — Philox counters are the \
+                     only entropy source and runs must not depend on wall clocks"
+                ),
+            });
+        }
+    }
+}
+
+/// MC004 — `+=` inside the argument list of `spawn(..)` or
+/// `parallel_chunks(..)` outside the blessed reduction modules.
+/// Over-approximates (any `+=`, not just f64): accumulation order
+/// inside parallel closures is exactly what the fixed 64-task
+/// reduction partition exists to control.
+fn mc004(rel: &str, toks: &[Tok], spans: &[(usize, usize)], out: &mut Vec<Finding>) {
+    if path_in(rel, &["engine/", "estimator/"]) {
+        return;
+    }
+    for i in 0..toks.len() {
+        if toks[i].kind != TokKind::Ident
+            || (toks[i].text != "spawn" && toks[i].text != "parallel_chunks")
+            || toks.get(i + 1).map(|t| t.text.as_str()) != Some("(")
+        {
+            continue;
+        }
+        let callee = &toks[i].text;
+        let mut depth = 0i64;
+        let mut j = i + 1;
+        while j < toks.len() {
+            match toks[j].text.as_str() {
+                "(" => depth += 1,
+                ")" => {
+                    depth -= 1;
+                    if depth == 0 {
+                        break;
+                    }
+                }
+                "+=" => {
+                    if !in_spans(spans, j) {
+                        out.push(Finding {
+                            rule: "MC004",
+                            line: toks[j].line,
+                            message: format!(
+                                "`+=` inside a `{callee}(..)` closure — parallel \
+                                 accumulation belongs in the fixed reduction \
+                                 partition (engine/, estimator/)"
+                            ),
+                        });
+                    }
+                }
+                _ => {}
+            }
+            j += 1;
+        }
+    }
+}
+
+/// MC005 — panicking extractors in non-test library code. `util/` and
+/// `main.rs` are allowlisted (dev harness + CLI top level), and the
+/// `.lock().unwrap()` idiom is exempt: lock poisoning already means a
+/// sibling thread panicked, so propagating is the right move.
+fn mc005(rel: &str, toks: &[Tok], spans: &[(usize, usize)], out: &mut Vec<Finding>) {
+    if path_in(rel, &["util/"]) || rel.ends_with("main.rs") {
+        return;
+    }
+    for i in 0..toks.len() {
+        if toks[i].kind != TokKind::Ident
+            || (toks[i].text != "unwrap" && toks[i].text != "expect")
+            || i == 0
+            || toks[i - 1].text != "."
+            || toks.get(i + 1).map(|t| t.text.as_str()) != Some("(")
+            || in_spans(spans, i)
+        {
+            continue;
+        }
+        let after_lock = i >= 4
+            && toks[i - 2].text == ")"
+            && toks[i - 3].text == "("
+            && toks[i - 4].text == "lock";
+        if after_lock {
+            continue;
+        }
+        out.push(Finding {
+            rule: "MC005",
+            line: toks[i].line,
+            message: format!(
+                "`.{}()` in library code — return Error (see rust/src/error.rs) \
+                 or prove infallibility and lint:allow with the proof",
+                toks[i].text
+            ),
+        });
+    }
+}
+
+/// Run every rule over one file. `rel` is the path relative to the
+/// scan root, with `/` separators (used for module scoping).
+pub fn check_tokens(rel: &str, toks: &[Tok]) -> Vec<Finding> {
+    let spans = test_spans(toks);
+    let mut out = Vec::new();
+    mc001(toks, &spans, &mut out);
+    mc002(rel, toks, &spans, &mut out);
+    mc003(rel, toks, &spans, &mut out);
+    mc004(rel, toks, &spans, &mut out);
+    mc005(rel, toks, &spans, &mut out);
+    out.sort_by(|a, b| (a.line, a.rule).cmp(&(b.line, b.rule)));
+    // Nested `spawn(spawn(..))` style code can report one site twice;
+    // a (rule, line) pair is one finding.
+    out.dedup_by(|a, b| a.rule == b.rule && a.line == b.line);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lexer::lex;
+
+    fn run(rel: &str, src: &str) -> Vec<Finding> {
+        check_tokens(rel, &lex(src).0)
+    }
+
+    #[test]
+    fn mc001_flags_index_cast_and_spares_dim_cast() {
+        let f = run("engine/block.rs", "let a = sample_idx as u32;\nlet b = dim as u32;\n");
+        assert_eq!(f.len(), 1);
+        assert_eq!(f[0].rule, "MC001");
+        assert_eq!(f[0].line, 1);
+    }
+
+    #[test]
+    fn mc001_scan_stops_at_argument_boundary() {
+        // The comma separates `total_calls` from the expression
+        // actually being cast.
+        let f = run("engine/block.rs", "f(total_calls, dim as u32);\n");
+        assert!(f.is_empty());
+    }
+
+    #[test]
+    fn mc002_only_in_core_modules() {
+        let src = "use std::collections::HashMap;\n";
+        assert_eq!(run("strat/mod.rs", src).len(), 1);
+        assert!(run("report/mod.rs", src).is_empty());
+    }
+
+    #[test]
+    fn mc003_patterns() {
+        let src = "use std::time::Instant;\nlet r = rand::random();\nlet t = thread_rng();\n";
+        assert_eq!(run("rng/philox.rs", src).len(), 3);
+        assert!(run("api/session.rs", src).is_empty());
+    }
+
+    #[test]
+    fn mc004_blessed_modules_pass() {
+        let src = "pool.spawn(move || { acc += x; });\n";
+        assert_eq!(run("coordinator/service.rs", src).len(), 1);
+        assert!(run("engine/mod.rs", src).is_empty());
+    }
+
+    #[test]
+    fn mc005_lock_unwrap_exempt() {
+        let src = "let g = m.lock().unwrap();\nlet v = o.unwrap();\n";
+        let f = run("api/session.rs", src);
+        assert_eq!(f.len(), 1);
+        assert_eq!(f[0].line, 2);
+    }
+
+    #[test]
+    fn test_code_is_skipped() {
+        let src = "#[cfg(test)]\nmod tests {\n    fn f() { o.unwrap(); }\n}\n";
+        assert!(run("api/session.rs", src).is_empty());
+    }
+
+    #[test]
+    fn cfg_not_test_is_production_code() {
+        let src = "#[cfg(not(test))]\nfn f() { o.unwrap(); }\n";
+        assert_eq!(run("api/session.rs", src).len(), 1);
+    }
+}

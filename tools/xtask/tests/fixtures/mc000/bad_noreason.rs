@@ -1,0 +1,5 @@
+// A directive without a reason is an error (MC000): the written
+// justification is the point of the mechanism.
+fn f(slot: Option<u32>) -> u32 {
+    slot.unwrap() // lint:allow(MC005)
+}

@@ -1,0 +1,4 @@
+// An unknown rule ID in a directive is itself an error (MC000): a
+// typo'd suppression must not silently do nothing.
+// lint:allow(MC999, this rule does not exist)
+fn f() {}

@@ -1,0 +1,6 @@
+// MC001 true positive: narrowing a 64-bit sample index.
+fn offsets(sample_idx: u64, counter: u64) -> (u32, u32) {
+    let lo = sample_idx as u32;
+    let c = (counter * 4) as u32;
+    (lo, c)
+}

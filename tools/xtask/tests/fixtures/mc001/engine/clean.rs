@@ -1,0 +1,23 @@
+// No index-like identifier feeds these casts.
+fn shape(dim: usize, lanes: u64) -> (u32, u32) {
+    (dim as u32, lanes as u32)
+}
+
+// The comma ends the expression scan: `total_calls` is a sibling
+// argument, not part of the cast operand.
+fn call(total_calls: u64, dim: usize) -> u64 {
+    total_calls + pack(total_calls, dim as u32)
+}
+
+fn pack(a: u64, b: u32) -> u64 {
+    a + u64::from(b)
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn casts_in_tests_are_fine() {
+        let sample_idx = 7u64;
+        assert_eq!(sample_idx as u32, 7);
+    }
+}

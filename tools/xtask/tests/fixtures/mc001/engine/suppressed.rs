@@ -1,0 +1,7 @@
+// MC001 suppressed: both placements of the directive.
+fn offsets(sample_idx: u64, counter: u64) -> (u32, u32) {
+    let lo = sample_idx as u32; // lint:allow(MC001, low half of a deliberately split counter)
+    // lint:allow(MC001, bounded by the 4-draw block size asserted above)
+    let c = (counter * 4) as u32;
+    (lo, c)
+}

@@ -1,0 +1,10 @@
+// MC002 true positive: hash containers in a core module.
+use std::collections::HashMap;
+
+fn tally(keys: &[u64]) -> HashMap<u64, usize> {
+    let mut m = HashMap::new();
+    for k in keys {
+        *m.entry(*k).or_insert(0) += 1;
+    }
+    m
+}

@@ -1,0 +1,11 @@
+// HashMap outside the deterministic core (report/) is not MC002's
+// business — output formatting may hash freely.
+use std::collections::HashMap;
+
+fn counts(xs: &[u32]) -> HashMap<u32, usize> {
+    let mut m = HashMap::new();
+    for x in xs {
+        *m.entry(*x).or_insert(0) += 1;
+    }
+    m
+}

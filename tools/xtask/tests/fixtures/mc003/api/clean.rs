@@ -1,0 +1,7 @@
+// std::time outside the core sampling modules (api/) is allowed —
+// MC003 scopes to rng/, engine/, strat/, grid/, estimator/, baselines/.
+use std::time::Instant;
+
+fn stamp() -> Instant {
+    Instant::now()
+}

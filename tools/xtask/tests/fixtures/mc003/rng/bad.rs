@@ -1,0 +1,9 @@
+// MC003 true positives: wall clock + foreign RNG in a core module.
+use std::time::Instant;
+
+fn jitter() -> f64 {
+    let t = Instant::now();
+    let r: f64 = rand::random();
+    let mut g = thread_rng();
+    r + f64::from(t.elapsed().subsec_millis()) + g.gen::<f64>()
+}

@@ -1,0 +1,8 @@
+// MC003 suppressed: timing a report, never feeding the sampler.
+use std::time::Instant; // lint:allow(MC003, wall-clock timing for throughput reports only — never feeds sampling)
+
+fn timed<R>(f: impl FnOnce() -> R) -> (R, f64) {
+    let t0 = Instant::now();
+    let r = f();
+    (r, t0.elapsed().as_secs_f64())
+}

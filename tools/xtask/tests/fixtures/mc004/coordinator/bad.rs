@@ -1,0 +1,11 @@
+// MC004 true positive: accumulation inside a parallel closure outside
+// the blessed reduction modules.
+fn total(pool: &Pool, xs: &[f64]) -> f64 {
+    let mut acc = 0.0;
+    pool.spawn(|| {
+        for x in xs {
+            acc += x;
+        }
+    });
+    acc
+}

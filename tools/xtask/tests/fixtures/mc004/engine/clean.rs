@@ -1,0 +1,11 @@
+// engine/ is a blessed reduction module: the fixed 64-task partition
+// lives here, so `+=` inside its spawn closures is the design.
+fn reduce(pool: &Pool, parts: &[f64]) -> f64 {
+    let mut acc = 0.0;
+    pool.spawn(|| {
+        for p in parts {
+            acc += p;
+        }
+    });
+    acc
+}

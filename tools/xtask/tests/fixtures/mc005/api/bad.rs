@@ -1,0 +1,6 @@
+// MC005 true positives: panicking extractors in library code.
+fn read(path: &str) -> String {
+    let text = std::fs::read_to_string(path).unwrap();
+    let first = text.lines().next().expect("non-empty file");
+    first.to_string()
+}

@@ -1,0 +1,19 @@
+// MC005 suppressed and exempt forms.
+use std::sync::Mutex;
+
+fn get(slot: &Option<u32>, m: &Mutex<u32>) -> u32 {
+    // The .lock().unwrap() idiom is exempt without any directive:
+    // poisoning means a sibling thread already panicked.
+    let held = *m.lock().unwrap();
+    // lint:allow(MC005, checked is_some() on the previous line of the real call site)
+    held + slot.as_ref().expect("slot just checked")
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn unwrap_in_tests_is_fine() {
+        let v: Option<u32> = Some(3);
+        assert_eq!(v.unwrap(), 3);
+    }
+}

@@ -1,0 +1,4 @@
+// util/ is allowlisted: the in-repo dev harnesses may panic freely.
+fn parse(s: &str) -> u32 {
+    s.trim().parse().unwrap()
+}

@@ -1,0 +1,138 @@
+//! Fixture-based tests for the determinism linter, plus the self-lint
+//! gate: the repo's own `rust/src` tree must lint clean, so `cargo
+//! test` fails the moment a new violation lands without a reasoned
+//! `lint:allow`.
+//!
+//! Each rule gets three fixtures under `tests/fixtures/mcNNN/`:
+//! a true positive (`bad.rs`), the same pattern suppressed with
+//! written reasons (`suppressed.rs`), and code the rule must leave
+//! alone (`clean.rs` — wrong pattern, exempt idiom, or out-of-scope
+//! module). Fixture subdirectories (`engine/`, `rng/`, ...) exercise
+//! the path-based rule scoping.
+
+use std::path::{Path, PathBuf};
+
+use xtask_lint::{lint_root, Report};
+
+fn fixtures(sub: &str) -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("tests/fixtures")
+        .join(sub)
+}
+
+fn lint_fixture(sub: &str) -> Report {
+    lint_root(&fixtures(sub), "").expect("fixture tree readable")
+}
+
+fn keys(r: &Report) -> Vec<(&str, usize, &str)> {
+    r.diagnostics
+        .iter()
+        .map(|d| (d.file.as_str(), d.line, d.rule))
+        .collect()
+}
+
+#[test]
+fn mc001_fires_suppresses_and_spares() {
+    let r = lint_fixture("mc001");
+    assert_eq!(
+        keys(&r),
+        [("engine/bad.rs", 3, "MC001"), ("engine/bad.rs", 4, "MC001")],
+        "{:#?}",
+        r.diagnostics
+    );
+    assert!(r.warnings.is_empty(), "{:?}", r.warnings);
+}
+
+#[test]
+fn mc002_fires_suppresses_and_spares() {
+    let r = lint_fixture("mc002");
+    assert_eq!(
+        keys(&r),
+        [
+            ("engine/bad.rs", 2, "MC002"),
+            ("engine/bad.rs", 4, "MC002"),
+            ("engine/bad.rs", 5, "MC002"),
+        ],
+        "{:#?}",
+        r.diagnostics
+    );
+    assert!(r.warnings.is_empty(), "{:?}", r.warnings);
+}
+
+#[test]
+fn mc003_fires_suppresses_and_spares() {
+    let r = lint_fixture("mc003");
+    assert_eq!(
+        keys(&r),
+        [
+            ("rng/bad.rs", 2, "MC003"),
+            ("rng/bad.rs", 6, "MC003"),
+            ("rng/bad.rs", 7, "MC003"),
+        ],
+        "{:#?}",
+        r.diagnostics
+    );
+    assert!(r.warnings.is_empty(), "{:?}", r.warnings);
+}
+
+#[test]
+fn mc004_fires_suppresses_and_spares() {
+    let r = lint_fixture("mc004");
+    assert_eq!(
+        keys(&r),
+        [("coordinator/bad.rs", 7, "MC004")],
+        "{:#?}",
+        r.diagnostics
+    );
+    assert!(r.warnings.is_empty(), "{:?}", r.warnings);
+}
+
+#[test]
+fn mc005_fires_suppresses_and_spares() {
+    let r = lint_fixture("mc005");
+    assert_eq!(
+        keys(&r),
+        [("api/bad.rs", 3, "MC005"), ("api/bad.rs", 4, "MC005")],
+        "{:#?}",
+        r.diagnostics
+    );
+    assert!(r.warnings.is_empty(), "{:?}", r.warnings);
+}
+
+#[test]
+fn mc000_rejects_unknown_rules_and_missing_reasons() {
+    let r = lint_fixture("mc000");
+    // The broken suppression does not suppress: the MC005 finding
+    // under it still surfaces alongside the MC000 directive error.
+    assert_eq!(
+        keys(&r),
+        [
+            ("bad_noreason.rs", 4, "MC000"),
+            ("bad_noreason.rs", 4, "MC005"),
+            ("bad_unknown.rs", 3, "MC000"),
+        ],
+        "{:#?}",
+        r.diagnostics
+    );
+}
+
+/// The gate: the real tree lints clean. Every narrowing cast, hash
+/// container, clock read, parallel accumulation, and panicking
+/// extractor in rust/src is either fixed or carries a reasoned
+/// lint:allow — and no suppression is stale.
+#[test]
+fn repo_tree_lints_clean() {
+    let root = Path::new(env!("CARGO_MANIFEST_DIR")).join("../../rust/src");
+    let r = lint_root(&root, "rust/src").expect("rust/src readable");
+    assert!(
+        r.diagnostics.is_empty(),
+        "determinism lint violations:\n{:#?}\nfix the code or add \
+         `// lint:allow(RULE, reason)` — see docs/invariants.md",
+        r.diagnostics
+    );
+    assert!(
+        r.warnings.is_empty(),
+        "stale suppressions (nothing left to suppress):\n{:#?}",
+        r.warnings
+    );
+}
