@@ -1,237 +1,133 @@
-//! End-to-end system driver (the repo's E2E validation workload):
+//! End-to-end demo of the persistent integration service: the durable
+//! store, the spool-driven daemon, crash recovery, and the
+//! content-addressed result cache.
 //!
-//! 1. Loads the AOT artifact registry and checks the PJRT runtime.
-//! 2. Cross-validates PJRT vs native on one artifact through the
-//!    `Integrator` facade (the three-layer stack composes).
-//! 3. Pushes a realistic batch of integration jobs (the paper's test
-//!    suite at 3 digits of precision, many seeds) through the
-//!    throughput scheduler — time-sliced round-robin sessions with a
-//!    priority lane and a streamed result feed — including a closure
-//!    integrand and a warm-started repeat batch — and reports
-//!    latency/throughput plus per-integrand accuracy vs the analytic
-//!    values.
+//! 1. Submits a small job suite to a fresh store and "kills" the
+//!    daemon mid-run at a durable checkpoint — exactly the on-disk
+//!    state a real `kill -9` leaves behind.
+//! 2. Restarts a fresh daemon over the same store: every job resumes
+//!    from its checkpoint and finishes. A control store that was never
+//!    interrupted proves the recovery is **bitwise** — identical
+//!    estimate, sigma, and chi2/dof.
+//! 3. Re-submits the same work under new job ids: each is answered
+//!    from the content-addressed cache with zero integrand
+//!    evaluations.
 //!
-//! Results are recorded in EXPERIMENTS.md §E2E. Run:
+//! Run:
 //!   cargo run --offline --release --example service_demo
 
-// Narrowing / float→int casts in this file are deliberate and
-// audited by `cargo xtask lint` (MC001); see docs/invariants.md.
-#![allow(clippy::cast_possible_truncation)]
-
-use mcubes::coordinator::{JobRequest, Scheduler};
+use mcubes::coordinator::{read_result, submit_job, Daemon};
 use mcubes::prelude::*;
-use mcubes::runtime::{PjrtRuntime, Registry, DEFAULT_ARTIFACT_DIR};
-use mcubes::util::table::{fmt_ms, Table};
+use mcubes::util::table::Table;
+use std::path::PathBuf;
+
+/// The demo workload: (job id, integrand, dim, maxcalls).
+const SUITE: &[(&str, &str, usize, usize)] = &[
+    ("osc", "f3", 3, 1 << 16),
+    ("gauss", "f4", 5, 1 << 16),
+    ("expo", "f5", 8, 1 << 15),
+];
+
+fn job(id: &str, integrand: &str, dim: usize, maxcalls: usize) -> JobManifest {
+    let cfg = JobConfig::default()
+        .with_maxcalls(maxcalls)
+        .with_tolerance(1e-12) // never converge early: fixed-length runs
+        .with_plan(RunPlan::classic(10, 6, 1))
+        .with_seed(42);
+    JobManifest::new(id, integrand, dim, cfg).with_checkpoint_interval(2)
+}
+
+fn store_root(tag: &str) -> PathBuf {
+    let p = std::env::temp_dir().join(format!("mcubes-service-demo-{}-{tag}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&p);
+    p
+}
 
 fn main() -> Result<()> {
-    // ---- Stage 1: artifact registry + PJRT sanity --------------------
-    let registry = Registry::load(DEFAULT_ARTIFACT_DIR)
-        .map_err(|e| Error::Runtime(format!("{e}\nhint: run `make artifacts` first")))?;
-    println!(
-        "[1/3] registry: {} artifacts from {}",
-        registry.all().len(),
-        registry.dir().display()
-    );
-    let runtime = PjrtRuntime::cpu()?;
-    println!(
-        "      pjrt: platform={} devices={}",
-        runtime.platform_name(),
-        runtime.device_count()
-    );
-
-    // ---- Stage 2: cross-backend validation through the facade --------
-    // Same compiled layout on both sides: adopt the smallest f4
-    // artifact's (maxcalls, nb, nblocks) for the native run too.
-    let meta = registry.select("f4", true, 4)?.clone();
-    let xcheck = |backend: BackendSpec| -> Result<IntegrationOutput> {
-        Integrator::from_registry("f4", 5)?
-            .backend(backend)
-            .maxcalls(meta.maxcalls)
-            .bins_per_axis(meta.nb)
-            .blocks(meta.nblocks)
-            .plan(RunPlan::classic(4, 3, 0))
-            .tolerance(1e-14)
-            .seed(999)
-            .run()
-    };
-    let pjrt = xcheck(BackendSpec::Pjrt {
-        artifacts_dir: DEFAULT_ARTIFACT_DIR.into(),
-    })?;
-    let native = xcheck(BackendSpec::Native)?;
-    let rel = ((pjrt.integral - native.integral) / native.integral).abs();
-    println!(
-        "[2/3] cross-backend check on f4: pjrt={:.12e} native={:.12e} rel diff={:.2e}",
-        pjrt.integral, native.integral, rel
-    );
-    assert!(rel < 1e-9, "backends disagree");
-
-    // ---- Stage 3: batched service workload ----------------------------
-    let suite: &[(&str, usize, usize)] = &[
-        ("f2", 6, 1 << 15),
-        ("f3", 3, 1 << 14),
-        ("f3", 8, 1 << 16),
-        ("f4", 5, 1 << 16),
-        ("f5", 8, 1 << 15),
-        ("f6", 6, 1 << 16),
-        ("cosmo", 6, 1 << 14),
-    ];
-    let seeds_per_case = 4usize;
-    let workers = std::thread::available_parallelism()
-        .map(|n| n.get())
-        .unwrap_or(2)
-        .clamp(1, 8);
-    let mut svc = Scheduler::new(workers);
-    // Fairness quantum: no job may hog a worker for more than ~4
-    // default iterations before yielding to its priority peers.
-    svc.calls_budget(1 << 18);
-    let mut id = 0u64;
-    for (name, d, calls) in suite {
-        for s in 0..seeds_per_case {
-            svc.submit(JobRequest::registry(
-                id,
-                *name,
-                *d,
-                JobConfig::default()
-                    .with_maxcalls(*calls)
-                    .with_tolerance(1e-3)
-                    .with_plan(RunPlan::classic(20, 12, 2))
-                    .with_seed(7000 + id as u32 + s as u32),
-            ));
-            id += 1;
-        }
+    // ---- Stage 1: submit, then die mid-run ---------------------------
+    let victim_root = store_root("victim");
+    for (id, integrand, dim, calls) in SUITE {
+        submit_job(&victim_root, &job(id, integrand, *dim, *calls))?;
     }
-    // A closure job rides along — no registry entry needed — on the
-    // high-priority lane (it jumps the queued registry jobs).
-    let closure_id = id;
-    svc.submit(
-        JobRequest::custom(
-            closure_id,
-            FnIntegrand::unit(4, |x: &[f64]| {
-                (-(x.iter().map(|v| (v - 0.5) * (v - 0.5)).sum::<f64>()) * 20.0).exp()
-            })
-            .named("gauss4")
-            .into_ref(),
-            JobConfig::default()
-                .with_maxcalls(1 << 14)
-                .with_tolerance(1e-3)
-                .with_plan(RunPlan::classic(20, 12, 2))
-                .with_seed(4242),
-        )
-        .with_priority(10),
-    );
-    id += 1;
+    let mut victim = Daemon::open(&victim_root)?
+        .with_threads(3)
+        .with_crash_after_flushes(2); // "kill -9" after the 2nd flush
+    let report = victim.run_pending()?;
+    assert!(report.crashed);
+    let spooled = victim.store().spool().pending()?.len();
+    let checkpoints = victim.store().checkpoints().digests()?.len();
+    drop(victim);
     println!(
-        "[3/3] scheduler: {} jobs ({} integrand cases x {} seeds + 1 priority closure) \
-         on {} workers, quantum 2^18 calls",
-        id,
-        suite.len(),
-        seeds_per_case,
-        workers
+        "[1/3] daemon killed mid-run: {spooled} submissions still spooled, \
+         {checkpoints} durable checkpoint(s), no results published"
     );
-    // Stream results as they complete (completion order, not id order).
-    let mut completed = 0usize;
-    let (results, metrics) = svc.drain_with(|r| {
-        completed += 1;
-        if completed % 8 == 0 {
-            println!("      ... {completed} jobs done (latest: {} #{})", r.integrand, r.id);
-        }
-    })?;
 
-    let mut t = Table::new(&[
-        "integrand",
-        "jobs",
-        "converged",
-        "max |rel err| vs truth",
-        "median latency",
-    ]);
-    for (name, d, _) in suite {
-        let f = mcubes::integrands::by_name(name, *d)?;
-        let truth = f.true_value().unwrap();
-        let mut rels: Vec<f64> = Vec::new();
-        let mut lats: Vec<f64> = Vec::new();
-        let mut conv = 0;
-        let key = name.to_string();
-        for r in results.iter().filter(|r| r.integrand == key && r.dim == *d) {
-            if let Ok(o) = &r.outcome {
-                if o.calls_used > 0 {
-                    rels.push(((o.integral - truth) / truth).abs());
-                    lats.push(r.latency);
-                    conv += usize::from(o.converged);
-                }
-            }
-        }
-        lats.sort_by(f64::total_cmp);
-        let max_rel = rels.iter().cloned().fold(0.0f64, f64::max);
+    // An uninterrupted control run of the identical suite, different
+    // thread count on purpose (results are thread-count invariant).
+    let control_root = store_root("control");
+    for (id, integrand, dim, calls) in SUITE {
+        submit_job(&control_root, &job(id, integrand, *dim, *calls))?;
+    }
+    let report = Daemon::open(&control_root)?.with_threads(1).run_pending()?;
+    assert_eq!(report.completed, SUITE.len());
+
+    // ---- Stage 2: restart, resume, prove bitwise recovery ------------
+    let mut revived = Daemon::open(&victim_root)?.with_threads(2);
+    let report = revived.run_pending()?;
+    println!(
+        "[2/3] restarted daemon drained the store: {} completed, {} resumed from checkpoints",
+        report.completed, report.resumed
+    );
+    assert_eq!(report.completed, SUITE.len());
+    assert!(report.resumed >= 1, "at least the killed job must resume");
+
+    let mut t = Table::new(&["job", "integrand", "I (resumed)", "sigma", "resumed@", "bitwise"]);
+    for (id, integrand, dim, _) in SUITE {
+        let resumed = read_result(&victim_root, id)?.expect("published result");
+        let control = read_result(&control_root, id)?.expect("control result");
+        let a = resumed.outcome.clone().expect("resumed run succeeds");
+        let b = control.outcome.expect("control run succeeds");
+        let bitwise = a.integral.to_bits() == b.integral.to_bits()
+            && a.sigma.to_bits() == b.sigma.to_bits()
+            && a.chi2_dof.to_bits() == b.chi2_dof.to_bits();
+        assert!(bitwise, "{id}: crash/resume changed the numbers");
         t.row(vec![
-            format!("{name} (d={d})"),
-            rels.len().to_string(),
-            format!("{conv}/{}", rels.len()),
-            format!("{max_rel:.2e}"),
-            fmt_ms(lats.get(lats.len() / 2).copied().unwrap_or(0.0) * 1e3),
+            id.to_string(),
+            format!("{integrand} (d={dim})"),
+            format!("{:.12e}", a.integral),
+            format!("{:.3e}", a.sigma),
+            resumed.resumed_iteration.to_string(),
+            "yes".to_string(),
         ]);
     }
-    println!("\n{}", t.render());
-    let closure_result = results.iter().find(|r| r.id == closure_id).unwrap();
-    println!(
-        "closure job `{}`: {}",
-        closure_result.integrand,
-        match &closure_result.outcome {
-            Ok(o) => format!("I = {:.6e} (converged: {})", o.integral, o.converged),
-            Err(e) => format!("ERROR: {e}"),
-        }
-    );
-    println!(
-        "throughput: {:.2} jobs/s | {:.2e} calls/s | wall {} | p50 {} | p95 {} | failures {}",
-        metrics.throughput,
-        metrics.calls_per_sec,
-        fmt_ms(metrics.wall_time * 1e3),
-        fmt_ms(metrics.latency_p50 * 1e3),
-        fmt_ms(metrics.latency_p95 * 1e3),
-        metrics.failures
-    );
-    assert_eq!(metrics.failures, 0);
+    println!("{}", t.render());
 
-    // ---- Warm-started repeat batch: the grid-reuse serving win -------
-    let donor_grid = results
-        .iter()
-        .find(|r| r.integrand == "f4" && r.outcome.is_ok())
-        .and_then(|r| r.grid.clone())
-        .expect("f4 grid");
-    let mut svc = Scheduler::new(workers);
-    for i in 0..4u64 {
-        svc.submit(
-            JobRequest::registry(
-                i,
-                "f4",
-                5,
-                JobConfig::default()
-                    .with_maxcalls(1 << 16)
-                    .with_tolerance(1e-3)
-                    // grid already adapted: no adjust, no discard
-                    .with_plan(RunPlan::classic(20, 0, 0))
-                    .with_seed(9900 + i as u32),
-            )
-            .with_warm_start(donor_grid.clone()),
-        );
+    // ---- Stage 3: identical resubmission is a cache hit --------------
+    let mut daemon = Daemon::open(&victim_root)?;
+    for (id, integrand, dim, calls) in SUITE {
+        // Same semantics, new job id and service metadata: the content
+        // address ignores both.
+        let resubmission = job(&format!("{id}-again"), integrand, *dim, *calls)
+            .with_priority(5)
+            .with_checkpoint_interval(7);
+        submit_job(&victim_root, &resubmission)?;
     }
-    let (warm_results, warm_metrics) = svc.drain()?;
-    let mean_iters: f64 = warm_results
-        .iter()
-        .filter_map(|r| r.outcome.as_ref().ok())
-        .map(|o| o.iterations as f64)
-        .sum::<f64>()
-        / warm_results.len() as f64;
+    let report = daemon.run_pending()?;
+    assert_eq!(report.cache_hits, SUITE.len(), "every resubmission must hit");
+    for (id, ..) in SUITE {
+        let hit = read_result(&victim_root, &format!("{id}-again"))?.expect("cached result");
+        assert!(hit.cached);
+        let first = read_result(&victim_root, id)?.expect("original result");
+        let (a, b) = (first.outcome.expect("ok"), hit.outcome.expect("ok"));
+        assert_eq!(a.integral.to_bits(), b.integral.to_bits());
+    }
     println!(
-        "warm-started f4 batch: {} jobs, mean {:.1} iterations (cold runs take the full \
-         adjust phase), p50 {}",
-        warm_metrics.jobs,
-        mean_iters,
-        fmt_ms(warm_metrics.latency_p50 * 1e3)
+        "[3/3] resubmitted the whole suite under new ids: {} cache hits, zero re-integration",
+        report.cache_hits
     );
-    assert_eq!(warm_metrics.failures, 0);
 
-    println!(
-        "\nservice_demo OK — full stack (artifacts -> PJRT -> coordinator -> scheduler) validated"
-    );
+    let _ = std::fs::remove_dir_all(&victim_root);
+    let _ = std::fs::remove_dir_all(&control_root);
+    println!("\nservice_demo OK — submit -> crash -> bitwise resume -> cache hit validated");
     Ok(())
 }

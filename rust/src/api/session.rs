@@ -75,7 +75,8 @@ impl StopReason {
         }
     }
 
-    fn from_label(s: &str) -> Option<StopReason> {
+    /// Inverse of [`StopReason::as_str`] (manifest/checkpoint readers).
+    pub(crate) fn from_label(s: &str) -> Option<StopReason> {
         Some(match s {
             "converged" => StopReason::Converged,
             "exhausted" => StopReason::Exhausted,
@@ -152,6 +153,13 @@ pub struct Checkpoint {
 }
 
 impl Checkpoint {
+    /// Newest checkpoint JSON schema this build writes and reads.
+    /// Files carry it as a top-level `"schema_version"` field; files
+    /// without one (written before the field existed) are read as
+    /// version 1, whose layout is frozen — see the
+    /// `checkpoint_v1_fixture_loads_forever` test.
+    pub const SCHEMA_VERSION: usize = 1;
+
     /// A fresh-start checkpoint from a bare grid — this is exactly how
     /// grid warm starts are represented internally.
     pub fn from_grid(grid: GridState) -> Checkpoint {
@@ -206,6 +214,13 @@ impl Checkpoint {
     pub fn to_json(&self) -> Value {
         let mut v = self.grid.to_json();
         if let Value::Obj(fields) = &mut v {
+            fields.insert(
+                0,
+                (
+                    "schema_version".to_string(),
+                    Value::from(Checkpoint::SCHEMA_VERSION),
+                ),
+            );
             let est = ObjBuilder::new()
                 .field("sum_w", self.est.sum_w)
                 .field("sum_wi", self.est.sum_wi)
@@ -230,6 +245,21 @@ impl Checkpoint {
     /// field (any grid file, old or new) loads as a fresh-start
     /// checkpoint.
     pub fn from_json(v: &Value) -> Result<Checkpoint> {
+        // Version gate first: reject files from a future layout before
+        // touching any field (a v2 writer may have changed all of
+        // them). Absent field = version 1, so every pre-field file —
+        // and every bare grid file — keeps loading.
+        if let Some(ver) = v.get("schema_version") {
+            let ver = ver.as_usize().ok_or_else(|| {
+                Error::Manifest("checkpoint schema_version must be a non-negative integer".into())
+            })?;
+            if ver > Checkpoint::SCHEMA_VERSION {
+                return Err(Error::Manifest(format!(
+                    "checkpoint schema_version {ver} is newer than supported {}",
+                    Checkpoint::SCHEMA_VERSION
+                )));
+            }
+        }
         let grid = GridState::from_json(v)?;
         let Some(session) = v.get("session") else {
             return Ok(Checkpoint::from_grid(grid));

@@ -1,0 +1,390 @@
+//! Spool-driven integration daemon.
+//!
+//! A [`Daemon`] owns a [`ServiceStore`] and drains its spool: each
+//! `spool/*.json` job manifest is answered from the content-addressed
+//! result cache when possible, resumed from a durable checkpoint when
+//! one exists, and run cold otherwise — flushing a crash-safe
+//! checkpoint every `checkpoint_interval` iterations and publishing a
+//! sealed result manifest to the outbox. The per-job step order makes
+//! *every* crash point recoverable on restart:
+//!
+//! 1. cache hit → publish (re-stamped) result → remove spool file
+//! 2. run → periodic checkpoint flushes (durable before the next step)
+//! 3. finish → cache put → outbox publish → checkpoint remove → spool
+//!    remove
+//!
+//! Killed between 2 and 3: the restart finds spool file + checkpoint,
+//! resumes bitwise. Killed inside 3: the restart finds spool file +
+//! cache entry, serves the hit. Killed after the spool removal:
+//! nothing is pending. No step requires the previous one to have
+//! *not* happened — which is the whole crash-recovery state machine
+//! (drawn out in docs/service.md).
+//!
+//! [`Daemon::run_pending`] is a single deterministic drain — no clocks
+//! and no ambient randomness, so a given store content always produces
+//! the same results (bitwise). The *watch* loop (poll, sleep, repeat)
+//! lives in the `serve` CLI, keeping this module pure enough to test
+//! exhaustively; crashes are injected through
+//! [`Daemon::with_crash_after_flushes`], which stops the process-local
+//! world with no cleanup at a durable instant, exactly like `kill -9`.
+
+use crate::api::Session;
+use crate::error::Result;
+use crate::integrands::IntegrandRef;
+use crate::store::manifest::{ResultManifest, ResultNumbers};
+use crate::store::{JobManifest, ServiceStore, StoreResult};
+use std::path::Path;
+
+/// Resolves a job manifest's `integrand` name to an implementation.
+/// The default resolver is `integrands::by_name`; embedders inject
+/// their own to serve custom integrands (the tests use this to count
+/// evaluations).
+pub type IntegrandResolver = Box<dyn Fn(&JobManifest) -> Result<IntegrandRef> + Send>;
+
+/// Tally of one [`Daemon::run_pending`] drain.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+#[non_exhaustive]
+pub struct DaemonReport {
+    /// Spool files consumed (completed, failed, or cache-answered).
+    pub processed: usize,
+    /// Successful results published (including cache hits).
+    pub completed: usize,
+    /// Results served from the content-addressed cache with zero new
+    /// integrand evaluations.
+    pub cache_hits: usize,
+    /// Jobs that resumed from a durable checkpoint instead of starting
+    /// cold.
+    pub resumed: usize,
+    /// Jobs answered with an error result (bad manifest, unknown
+    /// integrand, engine failure).
+    pub failures: usize,
+    /// The injected crash fired: the drain stopped mid-scan with no
+    /// cleanup (test hook; always false in production).
+    pub crashed: bool,
+}
+
+/// The spool-driven service front-end. See the module docs for the
+/// crash-recovery contract.
+pub struct Daemon {
+    store: ServiceStore,
+    threads: usize,
+    resolver: IntegrandResolver,
+    /// Simulated `kill -9` after the Nth durable checkpoint flush.
+    crash_after_flushes: Option<usize>,
+    /// Flushes so far, across all jobs of this daemon's lifetime.
+    flushes: usize,
+}
+
+impl Daemon {
+    /// Open (creating as needed) the store at `root` and build a
+    /// daemon over it with the default integrand registry resolver.
+    pub fn open(root: impl AsRef<Path>) -> Result<Daemon> {
+        let store = ServiceStore::open(root)?;
+        Ok(Daemon {
+            store,
+            threads: 1,
+            resolver: Box::new(|job| crate::integrands::by_name(&job.integrand, job.dim)),
+            crash_after_flushes: None,
+            flushes: 0,
+        })
+    }
+
+    /// Worker threads per job. Results are bitwise thread-count
+    /// invariant, so this is purely a throughput knob.
+    pub fn with_threads(mut self, threads: usize) -> Daemon {
+        self.threads = threads.max(1);
+        self
+    }
+
+    /// Replace the integrand resolver (custom integrands, eval
+    /// counters).
+    pub fn with_resolver(
+        mut self,
+        resolver: impl Fn(&JobManifest) -> Result<IntegrandRef> + Send + 'static,
+    ) -> Daemon {
+        self.resolver = Box::new(resolver);
+        self
+    }
+
+    /// Test hook: stop the drain with **no cleanup** immediately after
+    /// the `n`-th durable checkpoint flush (counted across jobs),
+    /// leaving the store exactly as a `kill -9` at that instant would.
+    /// The durability tests restart a fresh daemon on the same store
+    /// and assert bitwise-identical results.
+    pub fn with_crash_after_flushes(mut self, n: usize) -> Daemon {
+        self.crash_after_flushes = Some(n);
+        self
+    }
+
+    /// The store this daemon operates on.
+    pub fn store(&self) -> &ServiceStore {
+        &self.store
+    }
+
+    /// Drain the spool once: load every pending submission (ordered by
+    /// descending priority, then job id) and answer each. Per-job
+    /// failures become error results in the outbox; only store-level
+    /// I/O trouble (submission left in place, retried on the next
+    /// drain) surfaces in [`DaemonReport::failures`] without an outbox
+    /// entry.
+    pub fn run_pending(&mut self) -> Result<DaemonReport> {
+        let mut report = DaemonReport::default();
+        let mut jobs: Vec<(std::path::PathBuf, Option<JobManifest>)> = Vec::new();
+        for path in self.store.spool().pending()? {
+            let job = self.store.spool().load(&path).ok();
+            jobs.push((path, job));
+        }
+        // Higher priority first; ties (and unreadable submissions,
+        // sorted as priority 0) break by file name for determinism.
+        jobs.sort_by(|a, b| {
+            let pa = a.1.as_ref().map_or(0, |j| j.priority);
+            let pb = b.1.as_ref().map_or(0, |j| j.priority);
+            pb.cmp(&pa).then_with(|| a.0.cmp(&b.0))
+        });
+        for (path, job) in jobs {
+            match job {
+                Some(job) => self.run_job(&path, &job, &mut report)?,
+                None => self.reject_unreadable(&path, &mut report)?,
+            }
+            if report.crashed {
+                break;
+            }
+        }
+        Ok(report)
+    }
+
+    /// Answer a submission that failed to parse or validate: publish
+    /// an error result under the file's stem (when that is a legal job
+    /// id) and consume the file — never retry a manifest that can't
+    /// ever become readable.
+    fn reject_unreadable(&self, path: &Path, report: &mut DaemonReport) -> Result<()> {
+        report.processed += 1;
+        report.failures += 1;
+        let detail = match self.store.spool().load(path) {
+            Err(e) => e.to_string(),
+            Ok(_) => "submission became readable mid-drain".to_string(),
+        };
+        let stem = path
+            .file_stem()
+            .and_then(std::ffi::OsStr::to_str)
+            .unwrap_or_default();
+        if crate::store::check_job_key(stem).is_ok() {
+            let result = ResultManifest::failure(stem, "", 0, detail);
+            self.store.spool().publish(&result)?;
+        }
+        self.store.spool().complete(path)?;
+        Ok(())
+    }
+
+    /// Answer one readable submission (see module docs for the step
+    /// order and why it is crash-safe).
+    fn run_job(&mut self, path: &Path, job: &JobManifest, report: &mut DaemonReport) -> Result<()> {
+        report.processed += 1;
+        let digest = job.digest();
+
+        // 1. Content-addressed cache: identical semantics → stored
+        //    numbers, zero evaluations. A corrupt entry is treated as
+        //    a miss and repaired by the recompute below.
+        if let Ok(Some(hit)) = self.store.results().get(&digest) {
+            let mut answered = hit;
+            answered.job_id = job.job_id.clone();
+            answered.cached = true;
+            self.store.spool().publish(&answered)?;
+            self.store.spool().complete(path)?;
+            report.completed += 1;
+            report.cache_hits += 1;
+            return Ok(());
+        }
+
+        let f = match (self.resolver)(job) {
+            Ok(f) => f,
+            Err(e) => return self.publish_failure(path, job, e.to_string(), report),
+        };
+        let cfg = job.to_config(self.threads);
+
+        // 2. Durable checkpoint → bitwise resume. A corrupt or
+        //    incompatible checkpoint degrades to a cold start (the
+        //    recompute overwrites it at the next flush).
+        let mut resumed_iteration = 0;
+        let session = match self.store.checkpoints().load(&digest) {
+            Ok(Some(cp)) => match Session::resume(f.clone(), cfg.clone(), &cp) {
+                Ok(s) => {
+                    resumed_iteration = cp.iteration();
+                    Some(s)
+                }
+                Err(_) => None,
+            },
+            _ => None,
+        };
+        let mut session = match session {
+            Some(s) => s,
+            None => match Session::new(f, cfg) {
+                Ok(s) => s,
+                Err(e) => return self.publish_failure(path, job, e.to_string(), report),
+            },
+        };
+        if resumed_iteration > 0 {
+            report.resumed += 1;
+        }
+
+        // 3. Step loop with periodic durable flushes.
+        let mut since_flush = 0;
+        loop {
+            match session.step() {
+                Ok(Some(_)) => {
+                    since_flush += 1;
+                    if since_flush >= job.checkpoint_interval {
+                        self.store.checkpoints().save(&digest, &session.suspend())?;
+                        since_flush = 0;
+                        self.flushes += 1;
+                        if self.crash_after_flushes.is_some_and(|n| self.flushes >= n) {
+                            // Simulated kill -9: stop the world at a
+                            // durable instant, clean up nothing.
+                            report.crashed = true;
+                            return Ok(());
+                        }
+                    }
+                }
+                Ok(None) => break,
+                Err(e) => {
+                    self.store.checkpoints().remove(&digest)?;
+                    return self.publish_failure(path, job, e.to_string(), report);
+                }
+            }
+        }
+        let outcome = match session.finish() {
+            Ok(o) => o,
+            Err(e) => {
+                self.store.checkpoints().remove(&digest)?;
+                return self.publish_failure(path, job, e.to_string(), report);
+            }
+        };
+
+        // 4. Durable completion: cache → outbox → drop checkpoint →
+        //    consume submission.
+        let numbers = ResultNumbers::from_output(&outcome.output, outcome.stop);
+        let mut result = ResultManifest::success(job, digest.clone(), numbers);
+        result.resumed_iteration = resumed_iteration;
+        self.store.results().put(&digest, &result)?;
+        self.store.spool().publish(&result)?;
+        self.store.checkpoints().remove(&digest)?;
+        self.store.spool().complete(path)?;
+        report.completed += 1;
+        Ok(())
+    }
+
+    /// Publish an error result and consume the submission.
+    fn publish_failure(
+        &self,
+        path: &Path,
+        job: &JobManifest,
+        detail: String,
+        report: &mut DaemonReport,
+    ) -> Result<()> {
+        let result = ResultManifest::failure(&job.job_id, &job.integrand, job.dim, detail);
+        self.store.spool().publish(&result)?;
+        self.store.spool().complete(path)?;
+        report.failures += 1;
+        Ok(())
+    }
+}
+
+/// Convenience: submit a job to a store root without holding a daemon
+/// (what the `serve --demo-jobs` path and the examples use).
+pub fn submit_job(root: impl AsRef<Path>, job: &JobManifest) -> Result<std::path::PathBuf> {
+    let store = ServiceStore::open(root)?;
+    let path = store.spool().submit(job)?;
+    Ok(path)
+}
+
+/// Convenience twin of [`submit_job`]: read a published result back.
+pub fn read_result(root: impl AsRef<Path>, job_id: &str) -> Result<Option<ResultManifest>> {
+    let store = ServiceStore::open(root)?;
+    let r: StoreResult<Option<ResultManifest>> = store.spool().result(job_id);
+    Ok(r?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::JobConfig;
+
+    fn scratch(tag: &str) -> std::path::PathBuf {
+        let p = std::env::temp_dir().join(format!("mcubes-daemon-{}-{tag}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&p);
+        p
+    }
+
+    fn small_job(id: &str, integrand: &str, dim: usize) -> JobManifest {
+        let mut cfg = JobConfig::default();
+        cfg.maxcalls = 1 << 12;
+        cfg.plan = crate::api::RunPlan::classic(5, 3, 1);
+        cfg.tau_rel = 1e-12; // never converges early → deterministic length
+        JobManifest::new(id, integrand, dim, cfg)
+    }
+
+    #[test]
+    fn drains_spool_and_publishes_results() {
+        let root = scratch("drain");
+        submit_job(&root, &small_job("b-second", "f3", 3)).unwrap();
+        submit_job(&root, &small_job("a-first", "f4", 5).with_priority(1)).unwrap();
+        let mut d = Daemon::open(&root).unwrap();
+        let report = d.run_pending().unwrap();
+        assert_eq!((report.processed, report.completed), (2, 2));
+        assert_eq!((report.cache_hits, report.failures), (0, 0));
+        assert!(!report.crashed);
+        let r = read_result(&root, "a-first").unwrap().unwrap();
+        assert!(r.outcome.is_ok());
+        assert!(!r.cached);
+        // Spool drained, checkpoints cleaned up.
+        assert!(d.store().spool().pending().unwrap().is_empty());
+        assert!(d.store().checkpoints().digests().unwrap().is_empty());
+    }
+
+    #[test]
+    fn unknown_integrand_becomes_error_result() {
+        let root = scratch("unknown");
+        submit_job(&root, &small_job("nope", "no_such_integrand", 3)).unwrap();
+        let mut d = Daemon::open(&root).unwrap();
+        let report = d.run_pending().unwrap();
+        assert_eq!((report.processed, report.failures), (1, 1));
+        let r = read_result(&root, "nope").unwrap().unwrap();
+        assert!(r.outcome.is_err());
+        assert!(d.store().spool().pending().unwrap().is_empty());
+    }
+
+    #[test]
+    fn garbage_submission_is_consumed_not_retried() {
+        let root = scratch("garbage");
+        let store = ServiceStore::open(&root).unwrap();
+        std::fs::write(store.spool().inbox_dir().join("mangled.json"), "{oops").unwrap();
+        let mut d = Daemon::open(&root).unwrap();
+        let report = d.run_pending().unwrap();
+        assert_eq!((report.processed, report.failures), (1, 1));
+        assert!(d.store().spool().pending().unwrap().is_empty());
+        let r = read_result(&root, "mangled").unwrap().unwrap();
+        assert!(r.outcome.is_err());
+    }
+
+    #[test]
+    fn identical_resubmission_hits_cache() {
+        let root = scratch("cachehit");
+        submit_job(&root, &small_job("orig", "f3", 3)).unwrap();
+        let mut d = Daemon::open(&root).unwrap();
+        d.run_pending().unwrap();
+        let first = read_result(&root, "orig").unwrap().unwrap();
+        // Same semantics, different id and service metadata.
+        let again = small_job("again", "f3", 3)
+            .with_priority(9)
+            .with_checkpoint_interval(4);
+        submit_job(&root, &again).unwrap();
+        let report = d.run_pending().unwrap();
+        assert_eq!((report.completed, report.cache_hits), (1, 1));
+        let hit = read_result(&root, "again").unwrap().unwrap();
+        assert!(hit.cached);
+        let (a, b) = (first.outcome.unwrap(), hit.outcome.unwrap());
+        assert_eq!(a.integral.to_bits(), b.integral.to_bits());
+        assert_eq!(a.sigma.to_bits(), b.sigma.to_bits());
+        assert_eq!(a.calls_used, b.calls_used);
+    }
+}

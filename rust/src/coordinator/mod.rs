@@ -12,10 +12,12 @@
 //! instead of using this module directly.
 
 mod backend;
+mod daemon;
 mod driver;
 mod service;
 
 pub use backend::{NativeBackend, PjrtBackend, StratifiedBackend, VSampleBackend};
+pub use daemon::{read_result, submit_job, Daemon, DaemonReport, IntegrandResolver};
 pub use driver::{drive, DriveOutcome, DriverOutput, IntegrationOutput, JobConfig};
 #[cfg(feature = "legacy-api")]
 #[allow(deprecated)]

@@ -32,6 +32,10 @@ pub enum Error {
 
     /// Underlying I/O failure.
     Io(std::io::Error),
+
+    /// Persistent-store failure (durable checkpoint/result store) —
+    /// see `crate::store::StoreError` for the typed detail.
+    Store(crate::store::StoreError),
 }
 
 impl fmt::Display for Error {
@@ -54,6 +58,7 @@ impl fmt::Display for Error {
                  rel-err {relerr:.3e} > target {target:.3e}"
             ),
             Error::Io(e) => write!(f, "io error: {e}"),
+            Error::Store(e) => write!(f, "store error: {e}"),
         }
     }
 }
@@ -62,6 +67,7 @@ impl std::error::Error for Error {
     fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
         match self {
             Error::Io(e) => Some(e),
+            Error::Store(e) => Some(e),
             _ => None,
         }
     }

@@ -166,6 +166,7 @@ pub mod integrands;
 pub mod report;
 pub mod rng;
 pub mod runtime;
+pub mod store;
 pub mod strat;
 pub mod util;
 
@@ -179,13 +180,14 @@ pub mod prelude {
         Stage, StopReason, StratSnapshot,
     };
     pub use crate::coordinator::{
-        DriveOutcome, IntegrationOutput, JobConfig, JobRequest, JobResult, Scheduler,
-        ServiceMetrics,
+        Daemon, DaemonReport, DriveOutcome, IntegrationOutput, JobConfig, JobRequest, JobResult,
+        Scheduler, ServiceMetrics,
     };
     pub use crate::error::{Error, Result};
     pub use crate::estimator::{Convergence, EstimatorState, IterationResult, WeightedEstimator};
     pub use crate::grid::{Bins, GridMode};
     pub use crate::integrands::{Integrand, IntegrandRef};
+    pub use crate::store::{JobManifest, ResultManifest, ResultNumbers, ServiceStore, StoreError};
     pub use crate::strat::{AllocStats, Layout, Sampling};
 }
 
@@ -208,3 +210,7 @@ mod sampling_doctests {}
 #[cfg(doctest)]
 #[doc = include_str!("../../docs/invariants.md")]
 mod invariants_doctests {}
+
+#[cfg(doctest)]
+#[doc = include_str!("../../docs/service.md")]
+mod service_doctests {}

@@ -3,7 +3,8 @@
 //!
 //! Subcommands:
 //!   integrate   run one integration job (native or pjrt backend)
-//!   serve       run a batch of jobs through the scheduler, print metrics
+//!   serve       run a batch of jobs through the scheduler, print metrics;
+//!               with --store, run the durable spool daemon instead
 //!   artifacts   list artifacts in the manifest
 //!   selftest    quick native-vs-pjrt cross-check on one artifact
 //!
@@ -12,6 +13,7 @@
 //!   mcubes integrate --backend pjrt --integrand f4 --dim 5
 //!   mcubes integrate --integrand f4 --dim 5 --grid-out /tmp/f4.grid.json
 //!   mcubes integrate --integrand f4 --dim 5 --grid-in /tmp/f4.grid.json --ita 0
+//!   mcubes serve --store /var/lib/mcubes --demo-jobs 3 --once
 //!   mcubes artifacts
 //!   mcubes selftest
 
@@ -21,9 +23,10 @@
 
 use mcubes::api::{BackendSpec, GridState, Integrator, RunPlan};
 use mcubes::baselines::{vegas_serial_integrate, zmc_integrate, ZmcConfig};
-use mcubes::coordinator::{drive, JobConfig, JobRequest, PjrtBackend, Scheduler};
+use mcubes::coordinator::{drive, Daemon, JobConfig, JobRequest, PjrtBackend, Scheduler};
 use mcubes::grid::GridMode;
 use mcubes::integrands::by_name;
+use mcubes::store::JobManifest;
 use mcubes::runtime::{PjrtRuntime, Registry, DEFAULT_ARTIFACT_DIR};
 use mcubes::util::cli::Cli;
 use mcubes::util::table::{fmt_ms, fmt_sig, Table};
@@ -188,7 +191,16 @@ fn cmd_serve(args: &[String]) -> i32 {
             "quantum",
             "1048576",
             "fairness cap: integrand calls per scheduling slice",
-        );
+        )
+        .opt_opt(
+            "store",
+            "durable store root — switches to the spool daemon (see docs/service.md)",
+        )
+        .opt("poll-ms", "500", "daemon: spool poll interval")
+        .opt("threads", "1", "daemon: worker threads per job")
+        .opt("demo-jobs", "0", "daemon: submit N deterministic demo jobs before serving")
+        .opt("demo-calls", "262144", "daemon: per-iteration budget of the demo jobs")
+        .flag("once", "daemon: drain the spool once and exit instead of watching");
     let p = match cli.parse(args) {
         Ok(p) => p,
         Err(msg) => {
@@ -196,6 +208,10 @@ fn cmd_serve(args: &[String]) -> i32 {
             return 2;
         }
     };
+    if let Some(root) = p.get("store") {
+        let root = root.to_string();
+        return cmd_serve_daemon(&root, &p);
+    }
     let jobs = p.get_usize("jobs").unwrap_or(16);
     let workers = p.get_usize("workers").unwrap_or(4);
     let suite = ["f2", "f3", "f4", "f5", "f6"];
@@ -253,6 +269,109 @@ fn cmd_serve(args: &[String]) -> i32 {
         }
         Err(e) => {
             eprintln!("error: {e}");
+            1
+        }
+    }
+}
+
+/// The deterministic demo-job suite for `--demo-jobs`: a pure function
+/// of the index, so two stores fed the same count hold byte-identical
+/// submissions (what the CI durability harness compares).
+fn demo_job(i: usize, calls: usize) -> JobManifest {
+    let suite = [("f4", 5), ("f5", 8), ("f3", 3)];
+    let (integrand, dim) = suite[i % suite.len()];
+    let cfg = JobConfig::default()
+        .with_maxcalls(calls)
+        .with_tolerance(1e-12) // run the full plan — deterministic length
+        .with_plan(RunPlan::classic(8, 5, 1))
+        .with_seed(1000 + i as u32);
+    JobManifest::new(format!("demo-{i:03}"), integrand, dim, cfg)
+}
+
+/// `serve --store <root>`: the durable spool daemon. Watches
+/// `<root>/spool/` for job manifests, answers them through the
+/// checkpoint store / result cache, and publishes sealed result
+/// manifests to `<root>/outbox/` (full flow: docs/service.md). With
+/// `--once` it drains the current spool and exits — the mode the
+/// durability CI and the examples use; without it, it polls forever.
+fn cmd_serve_daemon(root: &str, p: &mcubes::util::cli::Parsed) -> i32 {
+    let run = || -> Result<i32, String> {
+        let poll_ms = p.get_usize("poll-ms")?.max(1);
+        let threads = p.get_usize("threads")?.max(1);
+        let demo_jobs = p.get_usize("demo-jobs")?;
+        let demo_calls = p.get_usize("demo-calls")?;
+        let mut daemon = Daemon::open(root)
+            .map_err(|e| e.to_string())?
+            .with_threads(threads);
+        for i in 0..demo_jobs {
+            let job = demo_job(i, demo_calls);
+            // Skip jobs that already have a published result so a
+            // restarted demo run does not resubmit answered work.
+            let answered = daemon
+                .store()
+                .spool()
+                .result(&job.job_id)
+                .map_err(|e| e.to_string())?
+                .is_some();
+            if !answered {
+                daemon
+                    .store()
+                    .spool()
+                    .submit(&job)
+                    .map_err(|e| e.to_string())?;
+                println!("submitted {} ({} d={})", job.job_id, job.integrand, job.dim);
+            }
+        }
+        println!(
+            "serving store {root} (threads={threads}, poll={poll_ms}ms, once={})",
+            p.is_set("once")
+        );
+        loop {
+            let report = daemon.run_pending().map_err(|e| e.to_string())?;
+            if report.processed > 0 {
+                println!(
+                    "drained {}: completed={} cache_hits={} resumed={} failures={}",
+                    report.processed, report.completed, report.cache_hits, report.resumed,
+                    report.failures
+                );
+            }
+            if p.is_set("once") {
+                let results = daemon
+                    .store()
+                    .spool()
+                    .results()
+                    .map_err(|e| e.to_string())?;
+                let mut t = Table::new(&["job", "integrand", "I", "sigma", "cached", "resumed@"]);
+                for r in &results {
+                    match &r.outcome {
+                        Ok(n) => t.row(vec![
+                            r.job_id.clone(),
+                            r.integrand.clone(),
+                            fmt_sig(n.integral, 10),
+                            fmt_sig(n.sigma, 4),
+                            r.cached.to_string(),
+                            r.resumed_iteration.to_string(),
+                        ]),
+                        Err(e) => t.row(vec![
+                            r.job_id.clone(),
+                            r.integrand.clone(),
+                            format!("ERROR: {e}"),
+                            "-".into(),
+                            r.cached.to_string(),
+                            "-".into(),
+                        ]),
+                    };
+                }
+                println!("{}", t.render());
+                return Ok(0);
+            }
+            std::thread::sleep(std::time::Duration::from_millis(poll_ms as u64));
+        }
+    };
+    match run() {
+        Ok(c) => c,
+        Err(msg) => {
+            eprintln!("error: {msg}");
             1
         }
     }

@@ -1,0 +1,199 @@
+//! Durable mid-run checkpoints, keyed by job digest.
+//!
+//! One file per in-flight job: `<dir>/<digest>.json`, a sealed
+//! envelope (`$schema = mcubes/checkpoint-file/v1`) wrapping the
+//! [`Checkpoint`]'s own JSON. The daemon flushes here every
+//! `checkpoint_interval` iterations; after a crash, [`CheckpointStore::load`]
+//! hands back the last durable iteration and `Session::resume`
+//! continues bitwise. The envelope echoes the digest so a file that
+//! was renamed (or copied under the wrong key) is rejected as corrupt
+//! instead of silently resuming the wrong job.
+
+use super::{read_sealed, seal, write_atomic, StoreError, StoreResult};
+use crate::api::Checkpoint;
+use crate::util::json::{ObjBuilder, Value};
+use std::path::{Path, PathBuf};
+
+/// `$schema` tag of the sealed checkpoint envelope.
+pub const CHECKPOINT_FILE_SCHEMA: &str = "mcubes/checkpoint-file/v1";
+
+/// The checkpoint half of a [`super::ServiceStore`] (usable
+/// standalone: any directory works as a root).
+pub struct CheckpointStore {
+    dir: PathBuf,
+}
+
+impl CheckpointStore {
+    /// Open (creating if needed) the checkpoint directory.
+    pub fn open(dir: impl AsRef<Path>) -> StoreResult<CheckpointStore> {
+        let dir = dir.as_ref().to_path_buf();
+        std::fs::create_dir_all(&dir).map_err(|e| StoreError::Io {
+            path: dir.clone(),
+            source: e,
+        })?;
+        Ok(CheckpointStore { dir })
+    }
+
+    /// The directory this store persists into.
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    fn path_for(&self, digest: &str) -> StoreResult<PathBuf> {
+        super::check_digest_key(digest)?;
+        Ok(self.dir.join(format!("{digest}.json")))
+    }
+
+    /// Durably persist `cp` under `digest` (write-temp + fsync +
+    /// atomic rename; replaces any previous checkpoint for the key).
+    /// On return the checkpoint has reached disk: a crash at any later
+    /// point resumes from *at least* this iteration.
+    pub fn save(&self, digest: &str, cp: &Checkpoint) -> StoreResult<()> {
+        let path = self.path_for(digest)?;
+        let envelope = ObjBuilder::new()
+            .field("$schema", CHECKPOINT_FILE_SCHEMA)
+            .field("digest", digest)
+            .field("checkpoint", cp.to_json())
+            .build();
+        write_atomic(&path, &seal(envelope).to_json())
+    }
+
+    /// Load the durable checkpoint for `digest`, if one exists.
+    /// `Ok(None)` means "no checkpoint" (cold start); every malformed
+    /// on-disk state is a typed [`StoreError`].
+    pub fn load(&self, digest: &str) -> StoreResult<Option<Checkpoint>> {
+        let path = self.path_for(digest)?;
+        let Some(body) = read_sealed(&path, CHECKPOINT_FILE_SCHEMA)? else {
+            return Ok(None);
+        };
+        let corrupt = |detail: String| StoreError::Corrupt {
+            path: path.clone(),
+            detail,
+        };
+        match body.get("digest").and_then(Value::as_str) {
+            Some(found) if found == digest => {}
+            Some(found) => {
+                return Err(corrupt(format!(
+                    "envelope digest {found} does not match key {digest}"
+                )))
+            }
+            None => return Err(corrupt("missing envelope digest".to_string())),
+        }
+        let cp_json = body
+            .get("checkpoint")
+            .ok_or_else(|| corrupt("missing checkpoint payload".to_string()))?;
+        let cp = Checkpoint::from_json(cp_json)
+            .map_err(|e| corrupt(format!("checkpoint payload: {e}")))?;
+        Ok(Some(cp))
+    }
+
+    /// Delete the checkpoint for `digest` (idempotent: deleting a
+    /// missing key is `Ok` — the daemon calls this after publishing a
+    /// result, and a crash between publish and delete must not wedge
+    /// the restart).
+    pub fn remove(&self, digest: &str) -> StoreResult<()> {
+        let path = self.path_for(digest)?;
+        match std::fs::remove_file(&path) {
+            Ok(()) => Ok(()),
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => Ok(()),
+            Err(e) => Err(StoreError::Io { path, source: e }),
+        }
+    }
+
+    /// Digests with a durable checkpoint, sorted (deterministic
+    /// startup scan order).
+    pub fn digests(&self) -> StoreResult<Vec<String>> {
+        let mut out = Vec::new();
+        for path in super::list_json_sorted(&self.dir)? {
+            if let Some(stem) = path.file_stem().and_then(std::ffi::OsStr::to_str) {
+                if super::check_digest_key(stem).is_ok() {
+                    out.push(stem.to_string());
+                }
+            }
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::api::{RunPlan, Session};
+    use crate::coordinator::JobConfig;
+
+    fn scratch(tag: &str) -> PathBuf {
+        let p = std::env::temp_dir().join(format!(
+            "mcubes-store-ckpt-{}-{tag}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&p);
+        p
+    }
+
+    fn digest_key(fill: char) -> String {
+        fill.to_string().repeat(64)
+    }
+
+    fn suspended_checkpoint() -> Checkpoint {
+        let f = crate::integrands::by_name("f3", 3).unwrap();
+        let mut cfg = JobConfig::default();
+        cfg.maxcalls = 1 << 12;
+        cfg.plan = RunPlan::classic(6, 4, 1);
+        cfg.seed = 9;
+        let mut s = Session::new(f, cfg).unwrap();
+        for _ in 0..3 {
+            s.step().unwrap();
+        }
+        s.suspend()
+    }
+
+    #[test]
+    fn save_load_roundtrip_is_exact() {
+        let store = CheckpointStore::open(scratch("roundtrip")).unwrap();
+        let cp = suspended_checkpoint();
+        let key = digest_key('a');
+        assert!(store.load(&key).unwrap().is_none());
+        store.save(&key, &cp).unwrap();
+        let back = store.load(&key).unwrap().unwrap();
+        assert_eq!(back, cp);
+        assert_eq!(store.digests().unwrap(), vec![key.clone()]);
+        // Overwrite with a later checkpoint replaces, not appends.
+        store.save(&key, &cp).unwrap();
+        assert_eq!(store.digests().unwrap().len(), 1);
+        store.remove(&key).unwrap();
+        store.remove(&key).unwrap(); // idempotent
+        assert!(store.load(&key).unwrap().is_none());
+    }
+
+    #[test]
+    fn renamed_file_is_rejected() {
+        let store = CheckpointStore::open(scratch("renamed")).unwrap();
+        let cp = suspended_checkpoint();
+        let (a, b) = (digest_key('a'), digest_key('b'));
+        store.save(&a, &cp).unwrap();
+        std::fs::rename(
+            store.dir().join(format!("{a}.json")),
+            store.dir().join(format!("{b}.json")),
+        )
+        .unwrap();
+        // The seal still verifies (the bytes are intact), but the
+        // envelope digest exposes the mismatch.
+        assert!(matches!(
+            store.load(&b),
+            Err(StoreError::Corrupt { .. })
+        ));
+    }
+
+    #[test]
+    fn bad_keys_are_typed_errors() {
+        let store = CheckpointStore::open(scratch("badkey")).unwrap();
+        assert!(matches!(
+            store.load("not-a-digest"),
+            Err(StoreError::BadKey { .. })
+        ));
+        assert!(matches!(
+            store.save("UPPER", &suspended_checkpoint()),
+            Err(StoreError::BadKey { .. })
+        ));
+    }
+}

@@ -1,0 +1,726 @@
+//! `$schema`-versioned job and result manifests, and the canonical
+//! content-address digest of a job.
+//!
+//! A [`JobManifest`] is what a client drops into the spool: integrand
+//! name + the semantic [`JobConfig`] fields + service metadata
+//! (checkpoint interval, priority). A [`ResultManifest`] is what the
+//! daemon publishes to the outbox and stores in the result cache.
+//! Both carry an explicit `$schema` tag (`mcubes/job-manifest/v1`,
+//! `mcubes/result-manifest/v1`) and are read by *tolerant* readers:
+//! unknown fields are ignored, optional fields default — the frozen v1
+//! fixture strings in this module's tests must load forever.
+//!
+//! [`JobManifest::digest`] is the store's content address: SHA-256
+//! over the canonical JSON (`util::json::to_canonical_json` — sorted
+//! keys, fixed float format) of the fields that determine the
+//! *numbers* — integrand, dim, seed, budgets, tolerance, grid mode,
+//! sampling, plan. Service metadata (job id, priority, checkpoint
+//! interval) and the engine thread count (results are bitwise
+//! thread-count-invariant) are deliberately excluded: two submissions
+//! that would compute the same answer share one digest, one
+//! checkpoint, and one cache entry.
+
+use crate::api::{RunPlan, Stage, StopReason};
+use crate::coordinator::{IntegrationOutput, JobConfig};
+use crate::error::{Error, Result};
+use crate::grid::GridMode;
+use crate::strat::Sampling;
+use crate::util::digest::sha256_hex;
+use crate::util::json::{to_canonical_json, ObjBuilder, Value};
+
+/// `$schema` tag written by [`JobManifest::to_json`].
+pub const JOB_MANIFEST_SCHEMA: &str = "mcubes/job-manifest/v1";
+/// `$schema` tag written by [`ResultManifest::to_json`].
+pub const RESULT_MANIFEST_SCHEMA: &str = "mcubes/result-manifest/v1";
+/// `$schema` tag of the digest input document (versioning the digest
+/// rules themselves: changing what the digest covers bumps this and
+/// thereby invalidates — rather than silently aliasing — old cache
+/// entries).
+pub const JOB_DIGEST_SCHEMA: &str = "mcubes/job-digest/v1";
+
+/// A job submission: *what* to integrate plus service metadata.
+#[derive(Debug, Clone)]
+#[non_exhaustive]
+pub struct JobManifest {
+    /// Client-chosen id; names the spool and outbox files. Validated
+    /// by the store: 1–100 chars of `[A-Za-z0-9._-]`.
+    pub job_id: String,
+    /// Registry integrand name (or a name the daemon's resolver
+    /// understands — see `coordinator::Daemon::with_resolver`).
+    pub integrand: String,
+    /// Integrand dimension.
+    pub dim: usize,
+    /// The run configuration. The `threads` field is ignored on
+    /// submission (the daemon decides; results are thread-invariant).
+    pub config: JobConfig,
+    /// Iterations between durable checkpoint flushes (>= 1).
+    pub checkpoint_interval: usize,
+    /// Spool ordering hint: higher runs first (ties break by job id).
+    pub priority: i64,
+}
+
+impl JobManifest {
+    /// A manifest with service defaults (checkpoint every iteration,
+    /// priority 0).
+    pub fn new(
+        job_id: impl Into<String>,
+        integrand: impl Into<String>,
+        dim: usize,
+        config: JobConfig,
+    ) -> JobManifest {
+        JobManifest {
+            job_id: job_id.into(),
+            integrand: integrand.into(),
+            dim,
+            config,
+            checkpoint_interval: 1,
+            priority: 0,
+        }
+    }
+
+    /// Set the checkpoint flush interval (iterations, >= 1).
+    pub fn with_checkpoint_interval(mut self, iters: usize) -> JobManifest {
+        self.checkpoint_interval = iters;
+        self
+    }
+
+    /// Set the spool priority.
+    pub fn with_priority(mut self, priority: i64) -> JobManifest {
+        self.priority = priority;
+        self
+    }
+
+    /// Validate the manifest (id naming rules, config invariants,
+    /// interval >= 1).
+    pub fn validate(&self) -> Result<()> {
+        super::check_job_key(&self.job_id).map_err(|e| Error::Manifest(e.to_string()))?;
+        if self.integrand.is_empty() {
+            return Err(Error::Manifest("job manifest: empty integrand name".into()));
+        }
+        if self.dim == 0 {
+            return Err(Error::Manifest("job manifest: dim must be >= 1".into()));
+        }
+        if self.checkpoint_interval == 0 {
+            return Err(Error::Manifest(
+                "job manifest: checkpoint_interval must be >= 1".into(),
+            ));
+        }
+        self.config.validate()
+    }
+
+    /// The run configuration this job executes under: the manifest's
+    /// semantic fields with the daemon-chosen thread count.
+    pub fn to_config(&self, threads: usize) -> JobConfig {
+        let mut cfg = self.config.clone();
+        cfg.threads = threads.max(1);
+        cfg
+    }
+
+    /// The content-address of this job: SHA-256 (hex) of the canonical
+    /// JSON of its semantic fields. See the module docs for what is —
+    /// and deliberately is not — covered.
+    pub fn digest(&self) -> String {
+        let doc = ObjBuilder::new()
+            .field("$schema", JOB_DIGEST_SCHEMA)
+            .field("integrand", self.integrand.as_str())
+            .field("dim", self.dim)
+            .field("seed", i64::from(self.config.seed))
+            .field("maxcalls", self.config.maxcalls)
+            .field("nb", self.config.nb)
+            .field("nblocks", self.config.nblocks)
+            .field("tau_rel", self.config.tau_rel)
+            .field("max_total_calls", opt_usize(self.config.max_total_calls))
+            .field("reset_on_inconsistency", self.config.reset_on_inconsistency)
+            .field("grid_mode", grid_mode_label(self.config.grid_mode))
+            .field("sampling", sampling_to_json(&self.config.sampling))
+            .field("plan", plan_to_json(&self.config.plan))
+            .build();
+        sha256_hex(to_canonical_json(&doc).as_bytes())
+    }
+
+    /// Serialize (v1 schema).
+    pub fn to_json(&self) -> Value {
+        ObjBuilder::new()
+            .field("$schema", JOB_MANIFEST_SCHEMA)
+            .field("job_id", self.job_id.as_str())
+            .field("integrand", self.integrand.as_str())
+            .field("dim", self.dim)
+            .field("seed", i64::from(self.config.seed))
+            .field("maxcalls", self.config.maxcalls)
+            .field("nb", self.config.nb)
+            .field("nblocks", self.config.nblocks)
+            .field("tau_rel", self.config.tau_rel)
+            .field("max_total_calls", opt_usize(self.config.max_total_calls))
+            .field("reset_on_inconsistency", self.config.reset_on_inconsistency)
+            .field("grid_mode", grid_mode_label(self.config.grid_mode))
+            .field("sampling", sampling_to_json(&self.config.sampling))
+            .field("plan", plan_to_json(&self.config.plan))
+            .field("checkpoint_interval", self.checkpoint_interval)
+            .field("priority", self.priority)
+            .build()
+    }
+
+    /// Tolerant v1 reader: `$schema`, `job_id`, `integrand`, and `dim`
+    /// are required; every other field defaults to
+    /// [`JobConfig::default`] semantics; unknown fields are ignored
+    /// (forward compatibility within v1).
+    pub fn from_json(v: &Value) -> Result<JobManifest> {
+        check_manifest_schema(v, JOB_MANIFEST_SCHEMA)?;
+        let job_id = req_str(v, "job_id")?;
+        let integrand = req_str(v, "integrand")?;
+        let dim = req_usize(v, "dim")?;
+        let defaults = JobConfig::default();
+        let mut config = defaults.clone();
+        config.seed = match v.get("seed") {
+            None => defaults.seed,
+            Some(s) => u32::try_from(s.as_i64().unwrap_or(-1))
+                .map_err(|_| Error::Manifest("job manifest: seed must fit u32".into()))?,
+        };
+        config.maxcalls = opt_usize_field(v, "maxcalls")?.unwrap_or(defaults.maxcalls);
+        config.nb = opt_usize_field(v, "nb")?.unwrap_or(defaults.nb);
+        config.nblocks = opt_usize_field(v, "nblocks")?.unwrap_or(defaults.nblocks);
+        if let Some(t) = v.get("tau_rel") {
+            config.tau_rel = t
+                .as_f64()
+                .ok_or_else(|| Error::Manifest("job manifest: tau_rel must be a number".into()))?;
+        }
+        config.max_total_calls = match v.get("max_total_calls") {
+            None | Some(Value::Null) => None,
+            Some(n) => Some(n.as_usize().ok_or_else(|| {
+                Error::Manifest(
+                    "job manifest: max_total_calls must be a non-negative integer".into(),
+                )
+            })?),
+        };
+        if let Some(r) = v.get("reset_on_inconsistency") {
+            config.reset_on_inconsistency = r.as_bool().ok_or_else(|| {
+                Error::Manifest("job manifest: reset_on_inconsistency must be a bool".into())
+            })?;
+        }
+        if let Some(g) = v.get("grid_mode") {
+            config.grid_mode = grid_mode_from_json(g)?;
+        }
+        if let Some(s) = v.get("sampling") {
+            config.sampling = sampling_from_json(s)?;
+        }
+        if let Some(p) = v.get("plan") {
+            config.plan = plan_from_json(p)?;
+        }
+        let checkpoint_interval = opt_usize_field(v, "checkpoint_interval")?.unwrap_or(1);
+        let priority = match v.get("priority") {
+            None => 0,
+            Some(p) => p.as_i64().ok_or_else(|| {
+                Error::Manifest("job manifest: priority must be an integer".into())
+            })?,
+        };
+        Ok(JobManifest {
+            job_id,
+            integrand,
+            dim,
+            config,
+            checkpoint_interval,
+            priority,
+        })
+    }
+}
+
+/// The reproducible numbers of a completed run — everything in
+/// [`IntegrationOutput`] except the wall-clock timings, which are
+/// deliberately excluded so result manifests (like everything else in
+/// the store) are bit-reproducible.
+#[derive(Debug, Clone, PartialEq)]
+#[non_exhaustive]
+pub struct ResultNumbers {
+    pub integral: f64,
+    pub sigma: f64,
+    pub chi2_dof: f64,
+    pub rel_err: f64,
+    pub iterations: usize,
+    pub converged: bool,
+    pub calls_used: usize,
+    pub stop: StopReason,
+}
+
+impl ResultNumbers {
+    /// Extract the reproducible subset of a run outcome.
+    pub fn from_output(o: &IntegrationOutput, stop: StopReason) -> ResultNumbers {
+        ResultNumbers {
+            integral: o.integral,
+            sigma: o.sigma,
+            chi2_dof: o.chi2_dof,
+            rel_err: o.rel_err,
+            iterations: o.iterations,
+            converged: o.converged,
+            calls_used: o.calls_used,
+            stop,
+        }
+    }
+}
+
+/// What the daemon publishes to the outbox (and, for successes, the
+/// result cache): the job's numbers or its error, plus provenance.
+#[derive(Debug, Clone)]
+#[non_exhaustive]
+pub struct ResultManifest {
+    /// The job id this result answers.
+    pub job_id: String,
+    /// The content-address digest of the job (cache key).
+    pub digest: String,
+    /// Integrand name, echoed from the manifest.
+    pub integrand: String,
+    /// Dimension, echoed from the manifest.
+    pub dim: usize,
+    /// The numbers, or the job's error message.
+    pub outcome: std::result::Result<ResultNumbers, String>,
+    /// True when this result was served from the content-addressed
+    /// cache (zero new integrand evaluations).
+    pub cached: bool,
+    /// Checkpoint iteration the run resumed from (0 = cold start).
+    pub resumed_iteration: usize,
+}
+
+impl ResultManifest {
+    /// A success result.
+    pub fn success(
+        job: &JobManifest,
+        digest: impl Into<String>,
+        numbers: ResultNumbers,
+    ) -> ResultManifest {
+        ResultManifest {
+            job_id: job.job_id.clone(),
+            digest: digest.into(),
+            integrand: job.integrand.clone(),
+            dim: job.dim,
+            outcome: Ok(numbers),
+            cached: false,
+            resumed_iteration: 0,
+        }
+    }
+
+    /// A failure result (also used for unreadable submissions, where
+    /// only the spool file stem is known).
+    pub fn failure(
+        job_id: impl Into<String>,
+        integrand: impl Into<String>,
+        dim: usize,
+        error: impl Into<String>,
+    ) -> ResultManifest {
+        ResultManifest {
+            job_id: job_id.into(),
+            digest: String::new(),
+            integrand: integrand.into(),
+            dim,
+            outcome: Err(error.into()),
+            cached: false,
+            resumed_iteration: 0,
+        }
+    }
+
+    /// Serialize (v1 schema). Note: no timings, by design — see
+    /// [`ResultNumbers`].
+    pub fn to_json(&self) -> Value {
+        let mut b = ObjBuilder::new()
+            .field("$schema", RESULT_MANIFEST_SCHEMA)
+            .field("job_id", self.job_id.as_str())
+            .field("digest", self.digest.as_str())
+            .field("integrand", self.integrand.as_str())
+            .field("dim", self.dim);
+        match &self.outcome {
+            Ok(n) => {
+                b = b
+                    .field("status", "ok")
+                    .field("integral", n.integral)
+                    .field("sigma", n.sigma)
+                    .field("chi2_dof", n.chi2_dof)
+                    .field("rel_err", n.rel_err)
+                    .field("iterations", n.iterations)
+                    .field("converged", n.converged)
+                    .field("calls_used", n.calls_used)
+                    .field("stop", n.stop.as_str());
+            }
+            Err(msg) => {
+                b = b.field("status", "error").field("error", msg.as_str());
+            }
+        }
+        b.field("cached", self.cached)
+            .field("resumed_iteration", self.resumed_iteration)
+            .build()
+    }
+
+    /// Tolerant v1 reader (mirror of [`ResultManifest::to_json`]).
+    pub fn from_json(v: &Value) -> Result<ResultManifest> {
+        check_manifest_schema(v, RESULT_MANIFEST_SCHEMA)?;
+        let job_id = req_str(v, "job_id")?;
+        let digest = req_str(v, "digest")?;
+        let integrand = req_str(v, "integrand")?;
+        let dim = req_usize(v, "dim")?;
+        let status = req_str(v, "status")?;
+        let outcome = match status.as_str() {
+            "ok" => {
+                let num = |key: &str| -> Result<f64> {
+                    v.req(key)?.as_f64().ok_or_else(|| {
+                        Error::Manifest(format!("result manifest: `{key}` must be a number"))
+                    })
+                };
+                let stop_label = req_str(v, "stop")?;
+                let stop = StopReason::from_label(&stop_label).ok_or_else(|| {
+                    Error::Manifest(format!("result manifest: unknown stop `{stop_label}`"))
+                })?;
+                Ok(ResultNumbers {
+                    integral: num("integral")?,
+                    sigma: num("sigma")?,
+                    chi2_dof: num("chi2_dof")?,
+                    rel_err: num("rel_err")?,
+                    iterations: req_usize(v, "iterations")?,
+                    converged: v.req("converged")?.as_bool().ok_or_else(|| {
+                        Error::Manifest("result manifest: `converged` must be a bool".into())
+                    })?,
+                    calls_used: req_usize(v, "calls_used")?,
+                    stop,
+                })
+            }
+            "error" => Err(req_str(v, "error")?),
+            other => {
+                return Err(Error::Manifest(format!(
+                    "result manifest: unknown status `{other}`"
+                )))
+            }
+        };
+        let cached = v.get("cached").and_then(Value::as_bool).unwrap_or(false);
+        let resumed_iteration = opt_usize_field(v, "resumed_iteration")?.unwrap_or(0);
+        Ok(ResultManifest {
+            job_id,
+            digest,
+            integrand,
+            dim,
+            outcome,
+            cached,
+            resumed_iteration,
+        })
+    }
+}
+
+// ---- JSON helpers for the config sub-schemas ------------------------
+
+fn opt_usize(v: Option<usize>) -> Value {
+    match v {
+        Some(n) => Value::from(n),
+        None => Value::Null,
+    }
+}
+
+fn req_str(v: &Value, key: &str) -> Result<String> {
+    v.req(key)?
+        .as_str()
+        .map(str::to_string)
+        .ok_or_else(|| Error::Manifest(format!("manifest field `{key}` must be a string")))
+}
+
+fn req_usize(v: &Value, key: &str) -> Result<usize> {
+    v.req(key)?.as_usize().ok_or_else(|| {
+        Error::Manifest(format!(
+            "manifest field `{key}` must be a non-negative integer"
+        ))
+    })
+}
+
+fn opt_usize_field(v: &Value, key: &str) -> Result<Option<usize>> {
+    match v.get(key) {
+        None => Ok(None),
+        Some(n) => n.as_usize().map(Some).ok_or_else(|| {
+            Error::Manifest(format!(
+                "manifest field `{key}` must be a non-negative integer"
+            ))
+        }),
+    }
+}
+
+/// Require `$schema` to be the expected v1 tag, with a distinct error
+/// for a same-family-but-newer tag (forward-compat contract: v1
+/// readers reject, never misread, v2 files).
+fn check_manifest_schema(v: &Value, expected: &'static str) -> Result<()> {
+    let found = v
+        .get("$schema")
+        .and_then(Value::as_str)
+        .ok_or_else(|| Error::Manifest("manifest: missing $schema".into()))?;
+    if found == expected {
+        return Ok(());
+    }
+    let family = expected.rsplit_once('/').map_or(expected, |(fam, _)| fam);
+    if found.starts_with(family) {
+        return Err(Error::Manifest(format!(
+            "manifest schema `{found}` is newer than supported `{expected}`"
+        )));
+    }
+    Err(Error::Manifest(format!(
+        "manifest: expected schema `{expected}`, found `{found}`"
+    )))
+}
+
+fn grid_mode_label(m: GridMode) -> &'static str {
+    match m {
+        GridMode::PerAxis => "per_axis",
+        GridMode::Shared1D => "shared_1d",
+    }
+}
+
+fn grid_mode_from_json(v: &Value) -> Result<GridMode> {
+    match v.as_str() {
+        Some("per_axis") => Ok(GridMode::PerAxis),
+        Some("shared_1d") => Ok(GridMode::Shared1D),
+        _ => Err(Error::Manifest(format!(
+            "manifest: grid_mode must be \"per_axis\" or \"shared_1d\", got {}",
+            v.to_json()
+        ))),
+    }
+}
+
+fn sampling_to_json(s: &Sampling) -> Value {
+    match s {
+        Sampling::Uniform => ObjBuilder::new().field("kind", "uniform").build(),
+        Sampling::VegasPlus { beta } => ObjBuilder::new()
+            .field("kind", "vegas_plus")
+            .field("beta", *beta)
+            .build(),
+    }
+}
+
+fn sampling_from_json(v: &Value) -> Result<Sampling> {
+    match v.get("kind").and_then(Value::as_str) {
+        Some("uniform") => Ok(Sampling::Uniform),
+        Some("vegas_plus") => {
+            let beta = match v.get("beta") {
+                None => return Ok(Sampling::vegas_plus()),
+                Some(b) => b.as_f64().ok_or_else(|| {
+                    Error::Manifest("manifest: sampling beta must be a number".into())
+                })?,
+            };
+            Ok(Sampling::VegasPlus { beta })
+        }
+        _ => Err(Error::Manifest(format!(
+            "manifest: sampling kind must be \"uniform\" or \"vegas_plus\", got {}",
+            v.to_json()
+        ))),
+    }
+}
+
+fn stage_to_json(s: &Stage) -> Value {
+    let mut b = ObjBuilder::new()
+        .field("iters", s.iters)
+        .field("adapt", s.adapt)
+        .field("discard", s.discard);
+    if let Some(c) = s.calls {
+        b = b.field("calls", c);
+    }
+    if let Some(sm) = &s.sampling {
+        b = b.field("sampling", sampling_to_json(sm));
+    }
+    b.build()
+}
+
+fn stage_from_json(v: &Value) -> Result<Stage> {
+    let iters = req_usize(v, "iters")?;
+    let adapt = v
+        .req("adapt")?
+        .as_bool()
+        .ok_or_else(|| Error::Manifest("manifest: stage adapt must be a bool".into()))?;
+    let mut stage = if adapt {
+        Stage::adapt(iters)
+    } else {
+        Stage::sample(iters)
+    };
+    if v.get("discard").and_then(Value::as_bool) == Some(true) {
+        stage = stage.discarded();
+    }
+    match v.get("calls") {
+        None | Some(Value::Null) => {}
+        Some(c) => {
+            stage = stage.with_calls(c.as_usize().ok_or_else(|| {
+                Error::Manifest("manifest: stage calls must be a non-negative integer".into())
+            })?);
+        }
+    }
+    match v.get("sampling") {
+        None | Some(Value::Null) => {}
+        Some(sv) => stage = stage.with_sampling(sampling_from_json(sv)?),
+    }
+    Ok(stage)
+}
+
+fn plan_to_json(p: &RunPlan) -> Value {
+    Value::Arr(p.stages().iter().map(stage_to_json).collect())
+}
+
+fn plan_from_json(v: &Value) -> Result<RunPlan> {
+    let arr = v
+        .as_arr()
+        .ok_or_else(|| Error::Manifest("manifest: plan must be an array of stages".into()))?;
+    let mut stages = Vec::with_capacity(arr.len());
+    for s in arr {
+        stages.push(stage_from_json(s)?);
+    }
+    Ok(RunPlan::new(stages))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::api::RunPlan;
+
+    fn demo_manifest() -> JobManifest {
+        let mut cfg = JobConfig::default()
+            .with_maxcalls(1 << 14)
+            .with_tolerance(1e-4)
+            .with_seed(7)
+            .with_sampling(Sampling::vegas_plus());
+        cfg.plan = RunPlan::warmup_then_final(3, 1 << 10, 6);
+        cfg.max_total_calls = Some(1 << 20);
+        JobManifest::new("job-001", "f4", 5, cfg)
+            .with_checkpoint_interval(2)
+            .with_priority(5)
+    }
+
+    #[test]
+    fn job_manifest_roundtrip_is_exact() {
+        let m = demo_manifest();
+        assert!(m.validate().is_ok());
+        let round = JobManifest::from_json(&m.to_json()).unwrap();
+        // Byte-identical re-serialization is the strongest equality we
+        // can assert without PartialEq on JobConfig.
+        assert_eq!(m.to_json().to_json(), round.to_json().to_json());
+        assert_eq!(m.digest(), round.digest());
+    }
+
+    /// FROZEN v1 fixture — do not regenerate. v1 job manifests on disk
+    /// must load forever, including ones with fields this build has
+    /// never heard of.
+    const JOB_FIXTURE_V1: &str = r#"{
+        "$schema": "mcubes/job-manifest/v1",
+        "job_id": "fixture-v1",
+        "integrand": "f3",
+        "dim": 3,
+        "seed": 11,
+        "maxcalls": 8192,
+        "tau_rel": 1e-5,
+        "grid_mode": "per_axis",
+        "sampling": {"kind": "vegas_plus", "beta": 0.75},
+        "plan": [
+            {"iters": 4, "adapt": true, "discard": true, "calls": 1024},
+            {"iters": 8, "adapt": false, "discard": false}
+        ],
+        "checkpoint_interval": 3,
+        "future_field_from_v1_point_5": {"ignored": true}
+    }"#;
+
+    #[test]
+    fn v1_fixture_loads_forever() {
+        let v = crate::util::json::parse(JOB_FIXTURE_V1).unwrap();
+        let m = JobManifest::from_json(&v).unwrap();
+        assert_eq!(m.job_id, "fixture-v1");
+        assert_eq!((m.integrand.as_str(), m.dim), ("f3", 3));
+        assert_eq!(m.config.seed, 11);
+        assert_eq!(m.config.maxcalls, 8192);
+        assert_eq!(m.config.tau_rel, 1e-5);
+        // Omitted fields take defaults.
+        assert_eq!(m.config.nb, JobConfig::default().nb);
+        assert_eq!(m.config.max_total_calls, None);
+        assert_eq!(m.priority, 0);
+        assert_eq!(m.checkpoint_interval, 3);
+        assert!(matches!(m.config.sampling, Sampling::VegasPlus { beta } if beta == 0.75));
+        assert_eq!(m.config.plan.stages().len(), 2);
+        assert_eq!(m.config.plan.stages()[0].calls, Some(1024));
+        assert!(m.validate().is_ok());
+    }
+
+    #[test]
+    fn newer_schema_is_rejected_not_misread() {
+        let v = crate::util::json::parse(
+            r#"{"$schema": "mcubes/job-manifest/v2", "job_id": "x", "integrand": "f3", "dim": 3}"#,
+        )
+        .unwrap();
+        let err = JobManifest::from_json(&v).unwrap_err().to_string();
+        assert!(err.contains("newer than supported"), "{err}");
+        let v = crate::util::json::parse(r#"{"job_id": "x"}"#).unwrap();
+        assert!(JobManifest::from_json(&v).is_err());
+    }
+
+    #[test]
+    fn digest_covers_semantics_only() {
+        let base = demo_manifest();
+        let d = base.digest();
+        assert_eq!(d.len(), 64);
+        // Service metadata does not change the digest...
+        let mut m = demo_manifest();
+        m.job_id = "renamed".into();
+        m.priority = -3;
+        m.checkpoint_interval = 7;
+        m.config.threads = 16;
+        assert_eq!(m.digest(), d);
+        // ...semantic fields do.
+        let mut m = demo_manifest();
+        m.config.seed = 8;
+        assert_ne!(m.digest(), d);
+        let mut m = demo_manifest();
+        m.config.sampling = Sampling::Uniform;
+        assert_ne!(m.digest(), d);
+        let mut m = demo_manifest();
+        m.config.plan = RunPlan::classic(9, 4, 1);
+        assert_ne!(m.digest(), d);
+        let mut m = demo_manifest();
+        m.integrand = "f5".into();
+        assert_ne!(m.digest(), d);
+    }
+
+    #[test]
+    fn digest_is_stable_across_field_order() {
+        // A hand-written manifest with fields in a scrambled order
+        // digests identically to the writer's order: the canonical
+        // form, not the file bytes, is hashed.
+        let m = demo_manifest();
+        let v = m.to_json();
+        let Value::Obj(mut fields) = v else {
+            panic!("manifest json is an object")
+        };
+        fields.reverse();
+        let scrambled = JobManifest::from_json(&Value::Obj(fields)).unwrap();
+        assert_eq!(scrambled.digest(), m.digest());
+    }
+
+    /// FROZEN v1 result fixture — do not regenerate.
+    const RESULT_FIXTURE_V1: &str = r#"{
+        "$schema": "mcubes/result-manifest/v1",
+        "job_id": "fixture-v1",
+        "digest": "0000000000000000000000000000000000000000000000000000000000000000",
+        "integrand": "f3",
+        "dim": 3,
+        "status": "ok",
+        "integral": 1.25,
+        "sigma": 3.5e-4,
+        "chi2_dof": 0.9,
+        "rel_err": 2.8e-4,
+        "iterations": 12,
+        "converged": true,
+        "calls_used": 98304,
+        "stop": "converged",
+        "cached": false,
+        "resumed_iteration": 4
+    }"#;
+
+    #[test]
+    fn result_manifest_fixture_and_roundtrip() {
+        let v = crate::util::json::parse(RESULT_FIXTURE_V1).unwrap();
+        let r = ResultManifest::from_json(&v).unwrap();
+        let n = r.outcome.as_ref().unwrap();
+        assert_eq!(n.integral, 1.25);
+        assert_eq!(n.stop, StopReason::Converged);
+        assert_eq!(r.resumed_iteration, 4);
+        let round = ResultManifest::from_json(&r.to_json()).unwrap();
+        assert_eq!(round.to_json().to_json(), r.to_json().to_json());
+
+        // Error results round-trip too.
+        let e = ResultManifest::failure("bad-job", "nope", 2, "unknown integrand: nope");
+        let round = ResultManifest::from_json(&e.to_json()).unwrap();
+        assert_eq!(round.outcome, e.outcome);
+        assert!(!round.cached);
+    }
+}

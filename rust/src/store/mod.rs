@@ -1,0 +1,425 @@
+//! Durable persistence for the integration service.
+//!
+//! The paper frames m-Cubes as a component for "complicated pipelines
+//! with easy to define stateful integrals"; this module is where that
+//! state becomes *durable*. It turns the bitwise-resumable
+//! [`crate::api::Checkpoint`] into a crash-safe on-disk product with
+//! four parts (see docs/service.md for schemas and the full
+//! crash-recovery state machine):
+//!
+//! * [`manifest`] — `$schema`-versioned job/result manifests
+//!   ([`JobManifest`], [`ResultManifest`]) plus the canonical
+//!   content-address digest of a job's *semantic* fields.
+//! * [`checkpoint_store`] — mid-run [`crate::api::Checkpoint`]s keyed
+//!   by job digest; a killed run resumes bitwise from the last durable
+//!   iteration.
+//! * [`result_cache`] — completed results keyed by the same digest; a
+//!   re-submitted identical job is answered with **zero** new
+//!   integrand evaluations.
+//! * [`spool`] — the daemon's inbox/outbox directories
+//!   (`spool/*.json` in, `outbox/*.json` out).
+//!
+//! Every write follows the same crash-safety discipline: serialize,
+//! write to `<final>.tmp` through a `BufWriter`, `flush` + `sync_all`,
+//! then atomically `rename` over the final path (and fsync the parent
+//! directory on unix). A reader therefore sees either the previous
+//! durable file or the complete new one — never a torn mix. Store-own
+//! files additionally carry a `sha256` seal over their canonical JSON
+//! (`util::json::to_canonical_json`), so even a corrupted-in-place
+//! file is detected and surfaced as a typed [`StoreError`], never a
+//! panic or a half-read checkpoint.
+//!
+//! Determinism: this module is in the MC003 lint scope (`cargo xtask
+//! lint`) — no wall clocks and no ambient randomness. Digests are pure
+//! functions of manifest bytes, temp-file names are derived from final
+//! names, and directory listings are sorted before use.
+
+pub mod checkpoint_store;
+pub mod manifest;
+pub mod result_cache;
+pub mod spool;
+
+pub use checkpoint_store::CheckpointStore;
+pub use manifest::{JobManifest, ResultManifest, ResultNumbers};
+pub use result_cache::ResultCache;
+pub use spool::Spool;
+
+use crate::util::digest::sha256_hex;
+use crate::util::json::{self, to_canonical_json, Value};
+use std::fmt;
+use std::fs::File;
+use std::io::Write as _;
+use std::path::{Path, PathBuf};
+
+/// Typed failure of a store operation. The durability contract of the
+/// torn-write test suite: every malformed on-disk state maps to one of
+/// these variants (or to the previous durable state) — never a panic.
+#[derive(Debug)]
+pub enum StoreError {
+    /// Underlying filesystem failure at `path` (including undecodable
+    /// non-UTF-8 file contents).
+    Io {
+        path: PathBuf,
+        source: std::io::Error,
+    },
+    /// The file exists but cannot be trusted: JSON syntax error,
+    /// checksum mismatch, or a payload that fails validation.
+    Corrupt { path: PathBuf, detail: String },
+    /// The file is well-formed but declares a `$schema` this build
+    /// does not speak (typically: written by a newer version).
+    UnsupportedSchema {
+        path: PathBuf,
+        found: String,
+        expected: &'static str,
+    },
+    /// A store key (job id or digest) violates the naming rules, or a
+    /// manifest refused an operation (e.g. caching a failed result).
+    BadKey { key: String, detail: String },
+}
+
+impl fmt::Display for StoreError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            StoreError::Io { path, source } => {
+                write!(f, "io failure at {}: {source}", path.display())
+            }
+            StoreError::Corrupt { path, detail } => {
+                write!(f, "corrupt store file {}: {detail}", path.display())
+            }
+            StoreError::UnsupportedSchema {
+                path,
+                found,
+                expected,
+            } => write!(
+                f,
+                "unsupported schema in {}: found `{found}`, this build speaks `{expected}`",
+                path.display()
+            ),
+            StoreError::BadKey { key, detail } => write!(f, "bad store key `{key}`: {detail}"),
+        }
+    }
+}
+
+impl std::error::Error for StoreError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            StoreError::Io { source, .. } => Some(source),
+            _ => None,
+        }
+    }
+}
+
+impl From<StoreError> for crate::error::Error {
+    fn from(e: StoreError) -> Self {
+        crate::error::Error::Store(e)
+    }
+}
+
+/// Store-local result alias.
+pub type StoreResult<T> = std::result::Result<T, StoreError>;
+
+/// One service store root: `spool/` + `outbox/` + `checkpoints/` +
+/// `results/` under a single directory (created on open). This is the
+/// layout `mcubes serve --store <root>` operates on.
+pub struct ServiceStore {
+    root: PathBuf,
+    checkpoints: CheckpointStore,
+    results: ResultCache,
+    spool: Spool,
+}
+
+impl ServiceStore {
+    /// Open (creating directories as needed) the store rooted at `root`.
+    pub fn open(root: impl AsRef<Path>) -> StoreResult<ServiceStore> {
+        let root = root.as_ref().to_path_buf();
+        let checkpoints = CheckpointStore::open(root.join("checkpoints"))?;
+        let results = ResultCache::open(root.join("results"))?;
+        let spool = Spool::open(root.join("spool"), root.join("outbox"))?;
+        Ok(ServiceStore {
+            root,
+            checkpoints,
+            results,
+            spool,
+        })
+    }
+
+    /// The store root directory.
+    pub fn root(&self) -> &Path {
+        &self.root
+    }
+
+    /// The mid-run checkpoint store (keyed by job digest).
+    pub fn checkpoints(&self) -> &CheckpointStore {
+        &self.checkpoints
+    }
+
+    /// The content-addressed result cache (keyed by job digest).
+    pub fn results(&self) -> &ResultCache {
+        &self.results
+    }
+
+    /// The job spool and result outbox.
+    pub fn spool(&self) -> &Spool {
+        &self.spool
+    }
+}
+
+/// Name of the integrity-seal field appended to store-own files.
+pub(crate) const SEAL_FIELD: &str = "sha256";
+
+/// Append the integrity seal: `sha256` over the canonical
+/// serialization of the object *without* the seal field itself.
+/// Verification re-derives exactly that (parse → strip seal →
+/// canonicalize → hash), which is byte-stable because the canonical
+/// number format round-trips f64 exactly.
+pub(crate) fn seal(v: Value) -> Value {
+    let hex = sha256_hex(to_canonical_json(&v).as_bytes());
+    match v {
+        Value::Obj(mut fields) => {
+            fields.push((SEAL_FIELD.to_string(), Value::Str(hex)));
+            Value::Obj(fields)
+        }
+        other => other,
+    }
+}
+
+/// Read, parse, checksum-verify, and schema-check a sealed store file.
+/// `Ok(None)` when the file does not exist; the returned value has the
+/// seal field stripped.
+pub(crate) fn read_sealed(
+    path: &Path,
+    expected_schema: &'static str,
+) -> StoreResult<Option<Value>> {
+    let text = match std::fs::read_to_string(path) {
+        Ok(t) => t,
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(None),
+        Err(e) => {
+            return Err(StoreError::Io {
+                path: path.to_path_buf(),
+                source: e,
+            })
+        }
+    };
+    let corrupt = |detail: String| StoreError::Corrupt {
+        path: path.to_path_buf(),
+        detail,
+    };
+    let v = json::parse(&text).map_err(|e| corrupt(format!("{e}")))?;
+    let Value::Obj(fields) = v else {
+        return Err(corrupt("top level is not a json object".to_string()));
+    };
+    let mut body = Vec::with_capacity(fields.len());
+    let mut recorded = None;
+    for (k, val) in fields {
+        if k == SEAL_FIELD {
+            match val.as_str() {
+                Some(s) => recorded = Some(s.to_string()),
+                None => return Err(corrupt("sha256 seal is not a string".to_string())),
+            }
+        } else {
+            body.push((k, val));
+        }
+    }
+    let Some(recorded) = recorded else {
+        return Err(corrupt("missing sha256 seal".to_string()));
+    };
+    let body = Value::Obj(body);
+    let computed = sha256_hex(to_canonical_json(&body).as_bytes());
+    if computed != recorded {
+        return Err(corrupt(format!(
+            "checksum mismatch (recorded {recorded}, computed {computed})"
+        )));
+    }
+    match body.get("$schema").and_then(Value::as_str) {
+        Some(found) if found == expected_schema => Ok(Some(body)),
+        Some(found) => Err(StoreError::UnsupportedSchema {
+            path: path.to_path_buf(),
+            found: found.to_string(),
+            expected: expected_schema,
+        }),
+        None => Err(corrupt("missing $schema".to_string())),
+    }
+}
+
+/// Crash-safe file replacement: write `<path>.tmp` through a
+/// `BufWriter`, flush + fsync, atomically rename over `path`, then
+/// fsync the parent directory (unix). The temp name is derived from
+/// the final name — deterministic, and a crashed leftover is simply
+/// overwritten by the next attempt (readers never look at `.tmp`).
+pub(crate) fn write_atomic(path: &Path, contents: &str) -> StoreResult<()> {
+    let tmp = tmp_path(path);
+    {
+        let file = File::create(&tmp).map_err(|e| StoreError::Io {
+            path: tmp.clone(),
+            source: e,
+        })?;
+        let mut w = std::io::BufWriter::new(file);
+        w.write_all(contents.as_bytes())
+            .and_then(|()| w.flush())
+            .and_then(|()| w.get_ref().sync_all())
+            .map_err(|e| StoreError::Io {
+                path: tmp.clone(),
+                source: e,
+            })?;
+    }
+    std::fs::rename(&tmp, path).map_err(|e| StoreError::Io {
+        path: path.to_path_buf(),
+        source: e,
+    })?;
+    #[cfg(unix)]
+    if let Some(dir) = path.parent() {
+        // Make the rename itself durable. Failure here is not fatal to
+        // correctness (the rename is atomic either way), so errors are
+        // deliberately ignored.
+        if let Ok(d) = File::open(dir) {
+            let _ = d.sync_all();
+        }
+    }
+    Ok(())
+}
+
+/// The deterministic temp-file twin of `path` (`<name>.tmp`).
+pub(crate) fn tmp_path(path: &Path) -> PathBuf {
+    let mut name = path
+        .file_name()
+        .map(std::ffi::OsStr::to_os_string)
+        .unwrap_or_default();
+    name.push(".tmp");
+    path.with_file_name(name)
+}
+
+/// Validate a content-address digest key: exactly 64 lowercase hex
+/// characters (what `sha256_hex` produces).
+pub(crate) fn check_digest_key(digest: &str) -> StoreResult<()> {
+    let ok = digest.len() == 64
+        && digest
+            .bytes()
+            .all(|b| b.is_ascii_digit() || (b'a'..=b'f').contains(&b));
+    if ok {
+        Ok(())
+    } else {
+        Err(StoreError::BadKey {
+            key: digest.to_string(),
+            detail: "digest keys are 64 lowercase hex chars".to_string(),
+        })
+    }
+}
+
+/// Validate a job id used as a spool/outbox file stem: 1–100 chars of
+/// `[A-Za-z0-9._-]`, not starting with `.` (no hidden files, no path
+/// separators, portable across filesystems).
+pub(crate) fn check_job_key(job_id: &str) -> StoreResult<()> {
+    let ok = !job_id.is_empty()
+        && job_id.len() <= 100
+        && !job_id.starts_with('.')
+        && job_id
+            .bytes()
+            .all(|b| b.is_ascii_alphanumeric() || b == b'.' || b == b'_' || b == b'-');
+    if ok {
+        Ok(())
+    } else {
+        Err(StoreError::BadKey {
+            key: job_id.to_string(),
+            detail: "job ids are 1-100 chars of [A-Za-z0-9._-], not starting with `.`".to_string(),
+        })
+    }
+}
+
+/// Sorted `*.json` files directly under `dir` (deterministic listing
+/// order; `.tmp` leftovers and subdirectories are ignored).
+pub(crate) fn list_json_sorted(dir: &Path) -> StoreResult<Vec<PathBuf>> {
+    let io_err = |e: std::io::Error| StoreError::Io {
+        path: dir.to_path_buf(),
+        source: e,
+    };
+    let mut out = Vec::new();
+    for entry in std::fs::read_dir(dir).map_err(io_err)? {
+        let entry = entry.map_err(io_err)?;
+        let path = entry.path();
+        if path.extension().and_then(std::ffi::OsStr::to_str) == Some("json") {
+            out.push(path);
+        }
+    }
+    out.sort();
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::ObjBuilder;
+
+    fn scratch(tag: &str) -> PathBuf {
+        let p = std::env::temp_dir().join(format!("mcubes-store-mod-{}-{tag}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&p);
+        std::fs::create_dir_all(&p).unwrap();
+        p
+    }
+
+    #[test]
+    fn seal_roundtrip_and_tamper_detection() {
+        let dir = scratch("seal");
+        let path = dir.join("x.json");
+        let doc = ObjBuilder::new()
+            .field("$schema", "mcubes/test/v1")
+            .field("value", 0.5)
+            .build();
+        write_atomic(&path, &seal(doc).to_json()).unwrap();
+        let back = read_sealed(&path, "mcubes/test/v1").unwrap().unwrap();
+        assert_eq!(back.get("value").and_then(Value::as_f64), Some(0.5));
+        // Wrong expected schema is a typed error.
+        assert!(matches!(
+            read_sealed(&path, "mcubes/test/v2"),
+            Err(StoreError::UnsupportedSchema { .. })
+        ));
+        // Tamper with the payload: checksum catches it.
+        let text = std::fs::read_to_string(&path).unwrap();
+        std::fs::write(&path, text.replace("5.00000000000000000e-1", "2.5")).unwrap();
+        assert!(matches!(
+            read_sealed(&path, "mcubes/test/v1"),
+            Err(StoreError::Corrupt { .. })
+        ));
+        // Missing file is None, not an error.
+        assert!(read_sealed(&dir.join("absent.json"), "mcubes/test/v1")
+            .unwrap()
+            .is_none());
+    }
+
+    #[test]
+    fn tmp_leftover_is_invisible_to_listings() {
+        let dir = scratch("tmp");
+        std::fs::write(dir.join("a.json"), "{}").unwrap();
+        std::fs::write(dir.join("b.json.tmp"), "garbage").unwrap();
+        std::fs::write(dir.join("c.json"), "{}").unwrap();
+        let listed = list_json_sorted(&dir).unwrap();
+        let names: Vec<_> = listed
+            .iter()
+            .map(|p| p.file_name().unwrap().to_str().unwrap().to_string())
+            .collect();
+        assert_eq!(names, vec!["a.json", "c.json"]);
+    }
+
+    #[test]
+    fn key_validation() {
+        assert!(check_digest_key(&"a".repeat(64)).is_ok());
+        assert!(check_digest_key("xyz").is_err());
+        assert!(check_digest_key(&"A".repeat(64)).is_err());
+        assert!(check_job_key("nightly-f4_01.a").is_ok());
+        assert!(check_job_key("").is_err());
+        assert!(check_job_key(".hidden").is_err());
+        assert!(check_job_key("a/b").is_err());
+        assert!(check_job_key(&"x".repeat(101)).is_err());
+    }
+
+    #[test]
+    fn error_display_and_conversion() {
+        let e = StoreError::BadKey {
+            key: "k".into(),
+            detail: "d".into(),
+        };
+        assert!(e.to_string().contains("bad store key"));
+        let lib: crate::Error = e.into();
+        assert!(lib.to_string().contains("store error"));
+        assert!(std::error::Error::source(&lib).is_some());
+    }
+}

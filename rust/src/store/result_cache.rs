@@ -1,0 +1,187 @@
+//! Content-addressed cache of completed results.
+//!
+//! One file per distinct job content: `<dir>/<digest>.json`, the
+//! sealed JSON of a successful [`ResultManifest`]. The key is
+//! [`super::JobManifest::digest`] — a hash of the job's *semantic*
+//! fields only — so any re-submission that would compute the same
+//! numbers (regardless of job id, priority, checkpoint interval, or
+//! thread count) is answered from here with zero new integrand
+//! evaluations. Only successes are cached: failures depend on
+//! transient conditions (unknown integrand names get registered,
+//! resolvers change) and must re-run.
+
+use super::{read_sealed, seal, write_atomic, ResultManifest, StoreError, StoreResult};
+use std::path::{Path, PathBuf};
+
+/// `$schema` tag of cache entries — the result-manifest schema itself
+/// (a cache entry *is* a sealed result manifest).
+pub use super::manifest::RESULT_MANIFEST_SCHEMA;
+
+/// The result-cache half of a [`super::ServiceStore`] (usable
+/// standalone: any directory works as a root).
+pub struct ResultCache {
+    dir: PathBuf,
+}
+
+impl ResultCache {
+    /// Open (creating if needed) the cache directory.
+    pub fn open(dir: impl AsRef<Path>) -> StoreResult<ResultCache> {
+        let dir = dir.as_ref().to_path_buf();
+        std::fs::create_dir_all(&dir).map_err(|e| StoreError::Io {
+            path: dir.clone(),
+            source: e,
+        })?;
+        Ok(ResultCache { dir })
+    }
+
+    /// The directory this cache persists into.
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    fn path_for(&self, digest: &str) -> StoreResult<PathBuf> {
+        super::check_digest_key(digest)?;
+        Ok(self.dir.join(format!("{digest}.json")))
+    }
+
+    /// Durably cache a *successful* result under its digest. Failed
+    /// results are refused ([`StoreError::BadKey`]): a cache must
+    /// never pin an error. The manifest's own `digest` field must
+    /// match the key.
+    pub fn put(&self, digest: &str, result: &ResultManifest) -> StoreResult<()> {
+        let path = self.path_for(digest)?;
+        if result.outcome.is_err() {
+            return Err(StoreError::BadKey {
+                key: digest.to_string(),
+                detail: "refusing to cache a failed result".to_string(),
+            });
+        }
+        if result.digest != digest {
+            return Err(StoreError::BadKey {
+                key: digest.to_string(),
+                detail: format!("manifest digest {} does not match key", result.digest),
+            });
+        }
+        write_atomic(&path, &seal(result.to_json()).to_json())
+    }
+
+    /// Look up a cached result. `Ok(None)` on a miss; a hit returns
+    /// the stored manifest verbatim (the caller re-stamps `job_id` and
+    /// the `cached` flag when answering a new submission). A renamed
+    /// or cross-copied entry is rejected as corrupt via the embedded
+    /// digest, mirroring the checkpoint store.
+    pub fn get(&self, digest: &str) -> StoreResult<Option<ResultManifest>> {
+        let path = self.path_for(digest)?;
+        let Some(body) = read_sealed(&path, RESULT_MANIFEST_SCHEMA)? else {
+            return Ok(None);
+        };
+        let corrupt = |detail: String| StoreError::Corrupt {
+            path: path.clone(),
+            detail,
+        };
+        let result = ResultManifest::from_json(&body)
+            .map_err(|e| corrupt(format!("cache payload: {e}")))?;
+        if result.digest != digest {
+            return Err(corrupt(format!(
+                "entry digest {} does not match key {digest}",
+                result.digest
+            )));
+        }
+        if result.outcome.is_err() {
+            return Err(corrupt("cache entry holds a failed result".to_string()));
+        }
+        Ok(Some(result))
+    }
+
+    /// Cached digests, sorted (deterministic listing order).
+    pub fn digests(&self) -> StoreResult<Vec<String>> {
+        let mut out = Vec::new();
+        for path in super::list_json_sorted(&self.dir)? {
+            if let Some(stem) = path.file_stem().and_then(std::ffi::OsStr::to_str) {
+                if super::check_digest_key(stem).is_ok() {
+                    out.push(stem.to_string());
+                }
+            }
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::api::StopReason;
+    use crate::coordinator::JobConfig;
+    use crate::store::{JobManifest, ResultNumbers};
+
+    fn scratch(tag: &str) -> PathBuf {
+        let p = std::env::temp_dir().join(format!(
+            "mcubes-store-cache-{}-{tag}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&p);
+        p
+    }
+
+    fn demo_result() -> (String, ResultManifest) {
+        let job = JobManifest::new("cache-test", "f3", 3, JobConfig::default());
+        let digest = job.digest();
+        let numbers = ResultNumbers {
+            integral: 1.5,
+            sigma: 1e-4,
+            chi2_dof: 1.1,
+            rel_err: 6.7e-5,
+            iterations: 10,
+            converged: true,
+            calls_used: 123_456,
+            stop: StopReason::Converged,
+        };
+        let result = ResultManifest::success(&job, digest.clone(), numbers);
+        (digest, result)
+    }
+
+    #[test]
+    fn put_get_roundtrip() {
+        let cache = ResultCache::open(scratch("roundtrip")).unwrap();
+        let (digest, result) = demo_result();
+        assert!(cache.get(&digest).unwrap().is_none());
+        cache.put(&digest, &result).unwrap();
+        let hit = cache.get(&digest).unwrap().unwrap();
+        assert_eq!(hit.to_json().to_json(), result.to_json().to_json());
+        assert_eq!(cache.digests().unwrap(), vec![digest]);
+    }
+
+    #[test]
+    fn failed_results_are_refused() {
+        let cache = ResultCache::open(scratch("refuse")).unwrap();
+        let (digest, _) = demo_result();
+        let failed = ResultManifest::failure("x", "f3", 3, "boom");
+        assert!(matches!(
+            cache.put(&digest, &failed),
+            Err(StoreError::BadKey { .. })
+        ));
+    }
+
+    #[test]
+    fn digest_mismatch_is_refused_and_detected() {
+        let cache = ResultCache::open(scratch("mismatch")).unwrap();
+        let (digest, result) = demo_result();
+        let wrong_key = "b".repeat(64);
+        // put under a key that doesn't match the manifest's digest
+        assert!(matches!(
+            cache.put(&wrong_key, &result),
+            Err(StoreError::BadKey { .. })
+        ));
+        // a cross-copied entry fails get() despite an intact seal
+        cache.put(&digest, &result).unwrap();
+        std::fs::copy(
+            cache.dir().join(format!("{digest}.json")),
+            cache.dir().join(format!("{wrong_key}.json")),
+        )
+        .unwrap();
+        assert!(matches!(
+            cache.get(&wrong_key),
+            Err(StoreError::Corrupt { .. })
+        ));
+    }
+}

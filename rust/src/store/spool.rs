@@ -1,0 +1,219 @@
+//! The daemon's inbox and outbox.
+//!
+//! Submissions are `spool/<job_id>.json` — a **plain** (unsealed)
+//! [`JobManifest`], deliberately hand-writable: any client that can
+//! emit JSON and rename a file can submit work (writers should still
+//! write-then-rename; [`Spool::submit`] does). Results leave through
+//! `outbox/<job_id>.json` as **sealed** [`ResultManifest`]s — those
+//! are store-authored, so they get the full integrity treatment.
+//!
+//! A spool file is removed ([`Spool::complete`]) only *after* the
+//! job's result is durably published, so every crash point leaves
+//! either the submission or the result (or, briefly, both — the
+//! restart re-scan then answers the leftover submission from the
+//! result cache). Removal is idempotent for exactly that reason.
+
+use super::{read_sealed, seal, write_atomic, JobManifest, ResultManifest, StoreError, StoreResult};
+use crate::util::json;
+use std::path::{Path, PathBuf};
+
+/// The inbox/outbox half of a [`super::ServiceStore`].
+pub struct Spool {
+    inbox: PathBuf,
+    outbox: PathBuf,
+}
+
+impl Spool {
+    /// Open (creating if needed) the spool and outbox directories.
+    pub fn open(inbox: impl AsRef<Path>, outbox: impl AsRef<Path>) -> StoreResult<Spool> {
+        let inbox = inbox.as_ref().to_path_buf();
+        let outbox = outbox.as_ref().to_path_buf();
+        for dir in [&inbox, &outbox] {
+            std::fs::create_dir_all(dir).map_err(|e| StoreError::Io {
+                path: dir.clone(),
+                source: e,
+            })?;
+        }
+        Ok(Spool { inbox, outbox })
+    }
+
+    /// The inbox directory (watched by the daemon).
+    pub fn inbox_dir(&self) -> &Path {
+        &self.inbox
+    }
+
+    /// The outbox directory (read by clients).
+    pub fn outbox_dir(&self) -> &Path {
+        &self.outbox
+    }
+
+    /// Validate and atomically drop a submission into the inbox.
+    /// Returns the spool file path.
+    pub fn submit(&self, job: &JobManifest) -> StoreResult<PathBuf> {
+        job.validate().map_err(|e| StoreError::BadKey {
+            key: job.job_id.clone(),
+            detail: e.to_string(),
+        })?;
+        let path = self.inbox.join(format!("{}.json", job.job_id));
+        write_atomic(&path, &job.to_json().to_json())?;
+        Ok(path)
+    }
+
+    /// Pending submission files, sorted by file name (the daemon
+    /// re-sorts by priority after loading; this order is just a
+    /// deterministic scan).
+    pub fn pending(&self) -> StoreResult<Vec<PathBuf>> {
+        super::list_json_sorted(&self.inbox)
+    }
+
+    /// Parse one submission. Unreadable or invalid submissions are
+    /// typed errors — the daemon answers those with an error result
+    /// rather than retrying forever.
+    pub fn load(&self, path: &Path) -> StoreResult<JobManifest> {
+        let corrupt = |detail: String| StoreError::Corrupt {
+            path: path.to_path_buf(),
+            detail,
+        };
+        let text = std::fs::read_to_string(path).map_err(|e| StoreError::Io {
+            path: path.to_path_buf(),
+            source: e,
+        })?;
+        let v = json::parse(&text).map_err(|e| corrupt(e.to_string()))?;
+        let job = JobManifest::from_json(&v).map_err(|e| corrupt(e.to_string()))?;
+        job.validate().map_err(|e| corrupt(e.to_string()))?;
+        // The file stem is the service-side identity; a manifest
+        // claiming a different id would publish under a name the
+        // submitter never watches.
+        let stem = path.file_stem().and_then(std::ffi::OsStr::to_str);
+        if stem != Some(job.job_id.as_str()) {
+            return Err(corrupt(format!(
+                "job_id `{}` does not match spool file name",
+                job.job_id
+            )));
+        }
+        Ok(job)
+    }
+
+    /// Remove a consumed submission (idempotent — see module docs).
+    pub fn complete(&self, path: &Path) -> StoreResult<()> {
+        match std::fs::remove_file(path) {
+            Ok(()) => Ok(()),
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => Ok(()),
+            Err(e) => Err(StoreError::Io {
+                path: path.to_path_buf(),
+                source: e,
+            }),
+        }
+    }
+
+    /// Durably publish a result to the outbox (sealed; replaces any
+    /// previous result for the job id). Returns the outbox path.
+    pub fn publish(&self, result: &ResultManifest) -> StoreResult<PathBuf> {
+        super::check_job_key(&result.job_id)?;
+        let path = self.outbox.join(format!("{}.json", result.job_id));
+        write_atomic(&path, &seal(result.to_json()).to_json())?;
+        Ok(path)
+    }
+
+    /// Read back a published result by job id (`Ok(None)` if absent).
+    pub fn result(&self, job_id: &str) -> StoreResult<Option<ResultManifest>> {
+        super::check_job_key(job_id)?;
+        let path = self.outbox.join(format!("{job_id}.json"));
+        let Some(body) = read_sealed(&path, super::manifest::RESULT_MANIFEST_SCHEMA)? else {
+            return Ok(None);
+        };
+        let result = ResultManifest::from_json(&body).map_err(|e| StoreError::Corrupt {
+            path,
+            detail: format!("outbox payload: {e}"),
+        })?;
+        Ok(Some(result))
+    }
+
+    /// All published results, sorted by job id.
+    pub fn results(&self) -> StoreResult<Vec<ResultManifest>> {
+        let mut out = Vec::new();
+        for path in super::list_json_sorted(&self.outbox)? {
+            if let Some(stem) = path.file_stem().and_then(std::ffi::OsStr::to_str) {
+                if super::check_job_key(stem).is_ok() {
+                    if let Some(r) = self.result(stem)? {
+                        out.push(r);
+                    }
+                }
+            }
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::JobConfig;
+
+    fn scratch(tag: &str) -> Spool {
+        let p = std::env::temp_dir().join(format!(
+            "mcubes-store-spool-{}-{tag}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&p);
+        Spool::open(p.join("spool"), p.join("outbox")).unwrap()
+    }
+
+    #[test]
+    fn submit_load_complete_cycle() {
+        let spool = scratch("cycle");
+        let job = JobManifest::new("alpha", "f3", 3, JobConfig::default());
+        let path = spool.submit(&job).unwrap();
+        assert_eq!(spool.pending().unwrap(), vec![path.clone()]);
+        let back = spool.load(&path).unwrap();
+        assert_eq!(back.to_json().to_json(), job.to_json().to_json());
+        spool.complete(&path).unwrap();
+        spool.complete(&path).unwrap(); // idempotent
+        assert!(spool.pending().unwrap().is_empty());
+    }
+
+    #[test]
+    fn hand_written_submissions_are_accepted() {
+        let spool = scratch("handwritten");
+        // Minimal unsealed manifest, fields in arbitrary order — what
+        // a shell script might drop in.
+        let path = spool.inbox_dir().join("manual.json");
+        std::fs::write(
+            &path,
+            r#"{"dim": 3, "integrand": "f3", "job_id": "manual",
+               "$schema": "mcubes/job-manifest/v1", "seed": 5}"#,
+        )
+        .unwrap();
+        let job = spool.load(&path).unwrap();
+        assert_eq!(job.job_id, "manual");
+        assert_eq!(job.config.seed, 5);
+    }
+
+    #[test]
+    fn mismatched_or_garbage_submissions_are_typed_errors() {
+        let spool = scratch("garbage");
+        let bad = spool.inbox_dir().join("bad.json");
+        std::fs::write(&bad, "{not json").unwrap();
+        assert!(matches!(spool.load(&bad), Err(StoreError::Corrupt { .. })));
+        // job_id / file-name mismatch
+        let sneaky = spool.inbox_dir().join("sneaky.json");
+        let job = JobManifest::new("other-name", "f3", 3, JobConfig::default());
+        std::fs::write(&sneaky, job.to_json().to_json()).unwrap();
+        assert!(matches!(
+            spool.load(&sneaky),
+            Err(StoreError::Corrupt { .. })
+        ));
+    }
+
+    #[test]
+    fn publish_and_read_back() {
+        let spool = scratch("publish");
+        let r = ResultManifest::failure("job-9", "f3", 3, "unknown integrand");
+        let path = spool.publish(&r).unwrap();
+        assert!(path.ends_with("job-9.json"));
+        let back = spool.result("job-9").unwrap().unwrap();
+        assert_eq!(back.outcome, r.outcome);
+        assert!(spool.result("absent").unwrap().is_none());
+        assert_eq!(spool.results().unwrap().len(), 1);
+    }
+}

@@ -436,6 +436,40 @@ fn utf8_len(first: u8) -> usize {
     }
 }
 
+/// Recursively sort every object's fields by key (arrays keep their
+/// order — array position is semantic, field order is not). Duplicate
+/// keys keep their relative order (the sort is stable); the writers in
+/// this crate never emit duplicates.
+///
+/// This is the normalization half of the store's canonical form: two
+/// `Value`s that differ only in field order canonicalize identically.
+pub fn canonicalize(v: &Value) -> Value {
+    match v {
+        Value::Arr(items) => Value::Arr(items.iter().map(canonicalize).collect()),
+        Value::Obj(fields) => {
+            let mut sorted: Vec<(String, Value)> = fields
+                .iter()
+                .map(|(k, val)| (k.clone(), canonicalize(val)))
+                .collect();
+            sorted.sort_by(|a, b| a.0.cmp(&b.0));
+            Value::Obj(sorted)
+        }
+        other => other.clone(),
+    }
+}
+
+/// Canonical serialization: sorted keys ([`canonicalize`]) + the
+/// compact writer's fixed number format (`write_num`: integers with
+/// |n| < 1e15 as plain integers, everything else as 17-significant-
+/// digit scientific notation, which round-trips f64 exactly). The
+/// same `Value` — however its fields were ordered, on whatever
+/// platform — always yields the same bytes, so this is the input both
+/// to the store's content-address digests and to its anti-torn-write
+/// checksums (see `store::` and docs/service.md).
+pub fn to_canonical_json(v: &Value) -> String {
+    canonicalize(v).to_json()
+}
+
 /// Group object fields into a BTreeMap for order-insensitive comparison.
 pub fn to_map(v: &Value) -> BTreeMap<String, Value> {
     match v {
@@ -536,5 +570,50 @@ mod tests {
         let v = parse("{\"a\": 1}").unwrap();
         assert!(v.req("a").is_ok());
         assert!(v.req("b").is_err());
+    }
+
+    #[test]
+    fn canonical_is_field_order_invariant() {
+        let a = parse(r#"{"b": 1, "a": {"y": true, "x": [1, {"q": 2, "p": 3}]}}"#).unwrap();
+        let b = parse(r#"{"a": {"x": [1, {"p": 3, "q": 2}], "y": true}, "b": 1}"#).unwrap();
+        assert_eq!(to_canonical_json(&a), to_canonical_json(&b));
+        assert_eq!(
+            to_canonical_json(&a),
+            r#"{"a":{"x":[1,{"p":3,"q":2}],"y":true},"b":1}"#
+        );
+    }
+
+    #[test]
+    fn canonical_preserves_array_order() {
+        let a = parse("[1, 2, 3]").unwrap();
+        let b = parse("[3, 2, 1]").unwrap();
+        assert_ne!(to_canonical_json(&a), to_canonical_json(&b));
+    }
+
+    #[test]
+    fn canonical_number_format_is_fixed() {
+        // The same f64 reached through different decimal spellings
+        // serializes identically — cache keys cannot depend on how a
+        // hand-written manifest formatted its numbers.
+        let a = parse(r#"{"t": 0.5, "n": 42, "big": 1e300}"#).unwrap();
+        let b = parse(r#"{"n": 42.0, "big": 10e299, "t": 5e-1}"#).unwrap();
+        assert_eq!(to_canonical_json(&a), to_canonical_json(&b));
+        let canon = to_canonical_json(&a);
+        assert!(canon.contains(r#""n":42"#), "{canon}");
+        assert!(canon.contains(r#""t":5.00000000000000000e-1"#), "{canon}");
+    }
+
+    #[test]
+    fn canonical_roundtrips_through_parse() {
+        // parse(canonical(v)) re-canonicalizes to the same bytes: the
+        // property the store's checksum verification relies on.
+        let doc = ObjBuilder::new()
+            .field("z", 1.0 / 3.0)
+            .field("a", vec![1.5f64, -0.0, 2e-308])
+            .field("m", ObjBuilder::new().field("k", "v").build())
+            .build();
+        let canon = to_canonical_json(&doc);
+        let back = parse(&canon).unwrap();
+        assert_eq!(to_canonical_json(&back), canon);
     }
 }

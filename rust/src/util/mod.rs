@@ -4,6 +4,7 @@
 
 pub mod benchkit;
 pub mod cli;
+pub mod digest;
 pub mod json;
 pub mod prop;
 pub mod table;

@@ -1,0 +1,195 @@
+//! End-to-end daemon durability (the PR 7 acceptance criteria):
+//!
+//! * **Bitwise crash recovery, both engines** — run a job N iterations,
+//!   kill the daemon at a durable checkpoint with zero cleanup
+//!   (exactly what `kill -9` leaves behind), restart a fresh daemon on
+//!   the same store, and the resumed run publishes estimate/sigma/chi2
+//!   bitwise-identical to an uninterrupted run — on the Uniform
+//!   m-Cubes engine and the VEGAS+ stratified engine alike.
+//! * **Cache hits cost zero evaluations** — re-submitting a
+//!   semantically identical manifest (different job id, priority,
+//!   checkpoint interval) is answered from the content-addressed
+//!   cache without calling the integrand once, asserted with an
+//!   evaluation counter compiled into the resolver.
+
+use mcubes::api::{FnIntegrand, RunPlan};
+use mcubes::coordinator::{read_result, submit_job, Daemon, JobConfig};
+use mcubes::store::JobManifest;
+use mcubes::strat::Sampling;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+
+fn scratch(tag: &str) -> PathBuf {
+    let p = PathBuf::from(env!("CARGO_TARGET_TMPDIR")).join(format!("daemon-{tag}"));
+    let _ = std::fs::remove_dir_all(&p);
+    p
+}
+
+fn job(id: &str, sampling: Sampling) -> JobManifest {
+    let mut cfg = JobConfig::default();
+    cfg.maxcalls = 1 << 12;
+    cfg.plan = RunPlan::classic(6, 3, 1);
+    cfg.tau_rel = 1e-12; // never converges early → fixed iteration count
+    cfg.seed = 11;
+    cfg.sampling = sampling;
+    JobManifest::new(id, "f4", 5, cfg).with_checkpoint_interval(1)
+}
+
+/// One full crash/restart cycle for a given engine: asserts the
+/// resumed run is bitwise-identical to an uninterrupted one.
+fn crash_and_resume(tag: &str, sampling: Sampling) {
+    // Uninterrupted reference run (single-threaded).
+    let base_root = scratch(&format!("{tag}-base"));
+    submit_job(&base_root, &job("steady", sampling)).unwrap();
+    let mut base = Daemon::open(&base_root).unwrap().with_threads(1);
+    let report = base.run_pending().unwrap();
+    assert_eq!((report.completed, report.resumed), (1, 0));
+    let reference = read_result(&base_root, "steady").unwrap().unwrap();
+    let reference = reference.outcome.expect("reference run succeeds");
+
+    // Same job on a second store; the daemon "dies" (no cleanup at
+    // all) right after the second durable checkpoint flush. More
+    // worker threads on purpose: results are thread-count invariant.
+    let killed_root = scratch(&format!("{tag}-killed"));
+    submit_job(&killed_root, &job("steady", sampling)).unwrap();
+    let mut victim = Daemon::open(&killed_root)
+        .unwrap()
+        .with_threads(3)
+        .with_crash_after_flushes(2);
+    let report = victim.run_pending().unwrap();
+    assert!(report.crashed, "the injected kill must fire");
+    assert_eq!(report.completed, 0);
+    drop(victim);
+
+    // The kill left the exact on-disk state a real SIGKILL would:
+    // submission still spooled, no result, a durable checkpoint.
+    assert!(read_result(&killed_root, "steady").unwrap().is_none());
+    let inspect = Daemon::open(&killed_root).unwrap();
+    assert_eq!(inspect.store().spool().pending().unwrap().len(), 1);
+    assert_eq!(inspect.store().checkpoints().digests().unwrap().len(), 1);
+    drop(inspect);
+
+    // Restart: a fresh daemon re-scans the store and finishes the job
+    // from the checkpoint.
+    let mut revived = Daemon::open(&killed_root).unwrap().with_threads(2);
+    let report = revived.run_pending().unwrap();
+    assert_eq!((report.completed, report.resumed), (1, 1));
+    let resumed = read_result(&killed_root, "steady").unwrap().unwrap();
+    assert!(
+        resumed.resumed_iteration > 0,
+        "the revived run must start from a checkpoint, not from scratch"
+    );
+    let resumed = resumed.outcome.expect("resumed run succeeds");
+
+    // The acceptance bar: bitwise equality, not tolerance equality.
+    assert_eq!(
+        reference.integral.to_bits(),
+        resumed.integral.to_bits(),
+        "integral differs after crash/resume ({tag})"
+    );
+    assert_eq!(reference.sigma.to_bits(), resumed.sigma.to_bits());
+    assert_eq!(reference.chi2_dof.to_bits(), resumed.chi2_dof.to_bits());
+    assert_eq!(reference.calls_used, resumed.calls_used);
+    assert_eq!(reference.iterations, resumed.iterations);
+    assert_eq!(reference.stop, resumed.stop);
+
+    // Cleanup happened on completion: no leftover checkpoint or spool.
+    let done = Daemon::open(&killed_root).unwrap();
+    assert!(done.store().spool().pending().unwrap().is_empty());
+    assert!(done.store().checkpoints().digests().unwrap().is_empty());
+}
+
+#[test]
+fn crash_resume_is_bitwise_on_the_uniform_engine() {
+    crash_and_resume("uniform", Sampling::Uniform);
+}
+
+#[test]
+fn crash_resume_is_bitwise_on_the_vegas_plus_engine() {
+    crash_and_resume("vegasplus", Sampling::vegas_plus());
+}
+
+/// A resolver that counts every single integrand evaluation.
+fn counting_resolver(
+    counter: Arc<AtomicUsize>,
+) -> impl Fn(&JobManifest) -> mcubes::Result<mcubes::integrands::IntegrandRef> + Send + 'static {
+    move |manifest: &JobManifest| {
+        if manifest.integrand != "counted" {
+            return Err(mcubes::Error::Unknown {
+                kind: "integrand",
+                name: manifest.integrand.clone(),
+            });
+        }
+        let counter = counter.clone();
+        let f = FnIntegrand::unit(3, move |x: &[f64]| {
+            counter.fetch_add(1, Ordering::Relaxed);
+            x[0] * x[1] + x[2]
+        })
+        .named("counted");
+        Ok(Arc::new(f))
+    }
+}
+
+#[test]
+fn cache_hit_serves_identical_resubmission_with_zero_evaluations() {
+    let root = scratch("zero-evals");
+    let evals = Arc::new(AtomicUsize::new(0));
+
+    let mut cfg = JobConfig::default();
+    cfg.maxcalls = 1 << 12;
+    cfg.plan = RunPlan::classic(5, 3, 1);
+    cfg.tau_rel = 1e-12;
+    cfg.seed = 3;
+
+    submit_job(&root, &JobManifest::new("first", "counted", 3, cfg.clone())).unwrap();
+    let mut daemon = Daemon::open(&root)
+        .unwrap()
+        .with_resolver(counting_resolver(evals.clone()));
+    let report = daemon.run_pending().unwrap();
+    assert_eq!(report.completed, 1);
+    let first = read_result(&root, "first").unwrap().unwrap();
+    assert!(!first.cached);
+    let evals_after_first = evals.load(Ordering::Relaxed);
+    assert!(evals_after_first > 0, "the first run must actually sample");
+
+    // Semantically identical job, different id + service metadata —
+    // and a *daemon restart* in between: the cache is durable, not an
+    // in-memory memo.
+    let resubmission = JobManifest::new("second", "counted", 3, cfg)
+        .with_priority(7)
+        .with_checkpoint_interval(3);
+    submit_job(&root, &resubmission).unwrap();
+    drop(daemon);
+    let mut daemon = Daemon::open(&root)
+        .unwrap()
+        .with_resolver(counting_resolver(evals.clone()));
+    let report = daemon.run_pending().unwrap();
+    assert_eq!((report.completed, report.cache_hits), (1, 1));
+
+    let second = read_result(&root, "second").unwrap().unwrap();
+    assert!(second.cached, "resubmission must be served from the cache");
+    assert_eq!(
+        evals.load(Ordering::Relaxed),
+        evals_after_first,
+        "a cache hit must cost ZERO integrand evaluations"
+    );
+    let (a, b) = (first.outcome.unwrap(), second.outcome.unwrap());
+    assert_eq!(a.integral.to_bits(), b.integral.to_bits());
+    assert_eq!(a.sigma.to_bits(), b.sigma.to_bits());
+    assert_eq!(a.calls_used, b.calls_used);
+
+    // A different seed is a different content address: it must MISS.
+    let mut other_cfg = JobConfig::default();
+    other_cfg.maxcalls = 1 << 12;
+    other_cfg.plan = RunPlan::classic(5, 3, 1);
+    other_cfg.tau_rel = 1e-12;
+    other_cfg.seed = 4;
+    submit_job(&root, &JobManifest::new("third", "counted", 3, other_cfg)).unwrap();
+    let report = daemon.run_pending().unwrap();
+    assert_eq!((report.completed, report.cache_hits), (1, 0));
+    assert!(
+        evals.load(Ordering::Relaxed) > evals_after_first,
+        "a different seed must re-integrate"
+    );
+}

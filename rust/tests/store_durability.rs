@@ -1,0 +1,280 @@
+//! Durability suite for the persistent store (`rust/src/store/`):
+//!
+//! * checkpoint-file schema versioning — the frozen pre-`schema_version`
+//!   fixture must load forever, future versions must be rejected,
+//!   never misread (satellite of PR 7);
+//! * the torn-write contract — for *every* byte-level mutilation of a
+//!   store file (prefix truncation, bit corruption, digit swaps,
+//!   leftover temp files) the store returns either the previous
+//!   durable state or a typed `StoreError`. Never a panic, never a
+//!   half-read checkpoint.
+
+use mcubes::api::{Checkpoint, RunPlan, Session, StopReason};
+use mcubes::coordinator::JobConfig;
+use mcubes::integrands::by_name;
+use mcubes::store::{
+    CheckpointStore, JobManifest, ResultCache, ResultManifest, ResultNumbers, ServiceStore,
+    StoreError,
+};
+use mcubes::strat::Sampling;
+use mcubes::util::json::parse;
+use std::path::PathBuf;
+
+fn scratch(tag: &str) -> PathBuf {
+    let p = PathBuf::from(env!("CARGO_TARGET_TMPDIR")).join(format!("store-durability-{tag}"));
+    let _ = std::fs::remove_dir_all(&p);
+    p
+}
+
+/// A checkpoint with real content: an adapted grid, a VEGAS+
+/// stratification snapshot, and non-trivial estimator sums.
+fn suspended_checkpoint(steps: usize) -> Checkpoint {
+    let f = by_name("f3", 3).unwrap();
+    let mut cfg = JobConfig::default();
+    cfg.maxcalls = 1 << 12;
+    cfg.nb = 8;
+    cfg.nblocks = 4;
+    cfg.plan = RunPlan::classic(6, 3, 1);
+    cfg.seed = 7;
+    cfg.sampling = Sampling::vegas_plus();
+    let mut s = Session::new(f, cfg).unwrap();
+    for _ in 0..steps {
+        s.step().unwrap();
+    }
+    s.suspend()
+}
+
+// ---------------------------------------------------------------- //
+// Satellite: explicit checkpoint schema versioning                 //
+// ---------------------------------------------------------------- //
+
+/// FROZEN: a checkpoint file exactly as written *before* the
+/// `schema_version` field existed. Do not regenerate — this string is
+/// the backward-compatibility contract.
+const PRE_VERSION_CHECKPOINT: &str = r#"{"d":1,"nb":2,"mode":"per_axis","edges":[0.5,1],"session":{"iteration":3,"stage":1,"stage_iter":1,"calls_used":12288,"estimator":{"sum_w":2,"sum_wi":3,"sum_wi2":5,"n":2}}}"#;
+
+#[test]
+fn pre_schema_version_checkpoint_loads_forever() {
+    let cp = Checkpoint::from_json(&parse(PRE_VERSION_CHECKPOINT).unwrap()).unwrap();
+    assert_eq!(cp.iteration(), 3);
+    assert_eq!((cp.stage(), cp.stage_iter()), (1, 1));
+    assert_eq!(cp.calls_used(), 12288);
+    assert_eq!(cp.estimator().n, 2);
+    assert_eq!(cp.estimator().sum_wi, 3.0);
+    assert_eq!(cp.stop(), None);
+    // Re-serializing stamps the current version; the result still
+    // round-trips to the same checkpoint.
+    let v = cp.to_json();
+    assert_eq!(
+        v.get("schema_version").and_then(|x| x.as_usize()),
+        Some(Checkpoint::SCHEMA_VERSION)
+    );
+    assert_eq!(Checkpoint::from_json(&v).unwrap(), cp);
+}
+
+#[test]
+fn bare_grid_file_loads_as_fresh_start() {
+    let v = parse(r#"{"d":1,"nb":2,"mode":"per_axis","edges":[0.5,1]}"#).unwrap();
+    let cp = Checkpoint::from_json(&v).unwrap();
+    assert_eq!(cp.iteration(), 0);
+    assert_eq!(cp.calls_used(), 0);
+}
+
+#[test]
+fn future_schema_version_is_rejected_not_misread() {
+    let with_version = PRE_VERSION_CHECKPOINT.replacen('{', r#"{"schema_version":99,"#, 1);
+    let err = Checkpoint::from_json(&parse(&with_version).unwrap()).unwrap_err();
+    assert!(
+        err.to_string().contains("newer than supported"),
+        "got: {err}"
+    );
+    // An explicit current version loads normally.
+    let current = PRE_VERSION_CHECKPOINT.replacen('{', r#"{"schema_version":1,"#, 1);
+    assert!(Checkpoint::from_json(&parse(&current).unwrap()).is_ok());
+    // A malformed version field is an error, not a silent default.
+    let garbage = PRE_VERSION_CHECKPOINT.replacen('{', r#"{"schema_version":"new","#, 1);
+    assert!(Checkpoint::from_json(&parse(&garbage).unwrap()).is_err());
+}
+
+#[test]
+fn round_trip_through_the_store_is_bitwise() {
+    let store = CheckpointStore::open(scratch("roundtrip")).unwrap();
+    let key = "c".repeat(64);
+    for steps in [0, 1, 4] {
+        let cp = suspended_checkpoint(steps);
+        store.save(&key, &cp).unwrap();
+        assert_eq!(store.load(&key).unwrap().unwrap(), cp);
+    }
+}
+
+// ---------------------------------------------------------------- //
+// Satellite: the torn-write suite                                  //
+// ---------------------------------------------------------------- //
+
+/// Assert the store's durability contract against one mutilated file
+/// state: a load yields the intact original, or a typed error — never
+/// a panic, never `Ok(None)` (the file *exists*), never a half-read.
+fn assert_all_or_nothing(
+    store: &CheckpointStore,
+    key: &str,
+    original: &Checkpoint,
+    what: &str,
+) -> bool {
+    match store.load(key) {
+        Ok(Some(read)) => {
+            assert_eq!(&read, original, "{what}: returned a DIFFERENT checkpoint");
+            true
+        }
+        Ok(None) => panic!("{what}: file exists but the store reported it absent"),
+        Err(e) => {
+            // Exercise Display while we're here — it must not panic
+            // either, and every variant names its file or key.
+            assert!(!e.to_string().is_empty());
+            false
+        }
+    }
+}
+
+#[test]
+fn truncation_at_every_byte_boundary_is_all_or_nothing() {
+    let dir = scratch("truncate");
+    let store = CheckpointStore::open(&dir).unwrap();
+    let key = "a".repeat(64);
+    let cp = suspended_checkpoint(3);
+    store.save(&key, &cp).unwrap();
+    let path = dir.join(format!("{key}.json"));
+    let bytes = std::fs::read(&path).unwrap();
+    let mut intact_reads = 0;
+    for len in 0..=bytes.len() {
+        std::fs::write(&path, &bytes[..len]).unwrap();
+        if assert_all_or_nothing(&store, &key, &cp, &format!("truncated to {len} bytes")) {
+            intact_reads += 1;
+            assert_eq!(len, bytes.len(), "a PROPER prefix read back as intact");
+        }
+    }
+    assert_eq!(intact_reads, 1, "only the full file may load");
+}
+
+#[test]
+fn bit_corruption_at_every_byte_is_detected() {
+    let dir = scratch("bitflip");
+    let store = CheckpointStore::open(&dir).unwrap();
+    let key = "b".repeat(64);
+    let cp = suspended_checkpoint(2);
+    store.save(&key, &cp).unwrap();
+    let path = dir.join(format!("{key}.json"));
+    let bytes = std::fs::read(&path).unwrap();
+    for i in 0..bytes.len() {
+        let mut mutated = bytes.clone();
+        mutated[i] ^= 0xFF;
+        std::fs::write(&path, &mutated).unwrap();
+        // An XORed ASCII byte is never valid UTF-8 in context, so
+        // every one of these must surface as a typed error.
+        let intact = assert_all_or_nothing(&store, &key, &cp, &format!("byte {i} xor 0xFF"));
+        assert!(!intact, "byte {i}: corruption read back as intact");
+    }
+}
+
+#[test]
+fn digit_swaps_are_caught_by_the_seal() {
+    let dir = scratch("digits");
+    let store = CheckpointStore::open(&dir).unwrap();
+    let key = "d".repeat(64);
+    let cp = suspended_checkpoint(3);
+    store.save(&key, &cp).unwrap();
+    let path = dir.join(format!("{key}.json"));
+    let bytes = std::fs::read(&path).unwrap();
+    for i in 0..bytes.len() {
+        if !bytes[i].is_ascii_digit() {
+            continue;
+        }
+        let mut mutated = bytes.clone();
+        mutated[i] = if bytes[i] == b'0' { b'1' } else { b'0' };
+        std::fs::write(&path, &mutated).unwrap();
+        // Still valid UTF-8 and (almost always) valid JSON — only the
+        // sha256 seal can tell. The one legitimate `true` outcome is a
+        // swap deep in a float's 17-digit tail that rounds to the
+        // *identical* f64: the canonical re-serialization then matches
+        // and the value really is the original, which the helper
+        // asserts.
+        assert_all_or_nothing(&store, &key, &cp, &format!("digit swap at byte {i}"));
+    }
+}
+
+#[test]
+fn leftover_tmp_garbage_is_invisible() {
+    let dir = scratch("tmpfile");
+    let store = CheckpointStore::open(&dir).unwrap();
+    let key = "e".repeat(64);
+    let cp = suspended_checkpoint(2);
+    store.save(&key, &cp).unwrap();
+    // Simulate a crash mid-write of the NEXT save: a torn temp file
+    // sits beside the intact final file.
+    std::fs::write(dir.join(format!("{key}.json.tmp")), b"{\"torn\":").unwrap();
+    assert_eq!(store.load(&key).unwrap().unwrap(), cp);
+    assert_eq!(store.digests().unwrap(), vec![key.clone()]);
+    // And a crash BEFORE the first rename: only a temp file, no final
+    // file — the store correctly reports "no checkpoint".
+    let key2 = "f".repeat(64);
+    std::fs::write(dir.join(format!("{key2}.json.tmp")), b"{\"torn\":").unwrap();
+    assert!(store.load(&key2).unwrap().is_none());
+}
+
+#[test]
+fn result_cache_truncation_is_all_or_nothing() {
+    let dir = scratch("cache-torn");
+    let cache = ResultCache::open(&dir).unwrap();
+    let job = JobManifest::new("torn", "f3", 3, JobConfig::default());
+    let digest = job.digest();
+    let result = ResultManifest::success(
+        &job,
+        digest.clone(),
+        ResultNumbers {
+            integral: 1.0 / 3.0,
+            sigma: 2.5e-5,
+            chi2_dof: 0.875,
+            rel_err: 7.5e-5,
+            iterations: 12,
+            converged: true,
+            calls_used: 98304,
+            stop: StopReason::Converged,
+        },
+    );
+    cache.put(&digest, &result).unwrap();
+    let path = dir.join(format!("{digest}.json"));
+    let bytes = std::fs::read(&path).unwrap();
+    let reference = result.to_json().to_json();
+    for len in 0..bytes.len() {
+        std::fs::write(&path, &bytes[..len]).unwrap();
+        match cache.get(&digest) {
+            Ok(Some(read)) => {
+                assert_eq!(read.to_json().to_json(), reference);
+                panic!("proper prefix {len} read back as intact");
+            }
+            Ok(None) => panic!("prefix {len}: file exists but cache reported a miss"),
+            Err(StoreError::Corrupt { .. } | StoreError::Io { .. }) => {}
+            Err(e) => panic!("prefix {len}: unexpected error class: {e}"),
+        }
+    }
+    std::fs::write(&path, &bytes).unwrap();
+    assert!(cache.get(&digest).unwrap().is_some());
+}
+
+#[test]
+fn spool_submission_truncation_is_a_typed_error() {
+    let root = scratch("spool-torn");
+    let store = ServiceStore::open(&root).unwrap();
+    let job = JobManifest::new("torn-sub", "f4", 5, JobConfig::default());
+    let path = store.spool().submit(&job).unwrap();
+    let bytes = std::fs::read(&path).unwrap();
+    for len in 0..bytes.len() {
+        std::fs::write(&path, &bytes[..len]).unwrap();
+        match store.spool().load(&path) {
+            Ok(_) => panic!("proper prefix {len} parsed as a complete manifest"),
+            Err(StoreError::Corrupt { .. } | StoreError::Io { .. }) => {}
+            Err(e) => panic!("prefix {len}: unexpected error class: {e}"),
+        }
+    }
+    std::fs::write(&path, &bytes).unwrap();
+    assert_eq!(store.spool().load(&path).unwrap().job_id, "torn-sub");
+}

@@ -1,0 +1,82 @@
+#!/usr/bin/env python3
+"""Compare two mcubes service outboxes for semantic equality.
+
+Usage: compare_outbox.py <outbox-dir-a> <outbox-dir-b>
+
+The CI `service-durability` job runs the same demo job suite in two
+stores — one uninterrupted, one `kill -9`-ed mid-run and restarted —
+and this script asserts the published results are identical where the
+durability contract says they must be: same jobs, same digests, and
+bit-for-bit the same numbers (the store writes floats in a canonical
+round-trippable format, so string equality of a number field IS f64
+bit equality).
+
+Delivery metadata is deliberately ignored: `cached` and
+`resumed_iteration` legitimately differ between an interrupted and an
+uninterrupted run, and the `sha256` seal differs with them.
+"""
+
+import json
+import sys
+from pathlib import Path
+
+# The fields the durability contract covers. Everything else in the
+# result manifest is delivery metadata.
+SEMANTIC_FIELDS = [
+    "$schema",
+    "job_id",
+    "digest",
+    "integrand",
+    "dim",
+    "status",
+    "integral",
+    "sigma",
+    "chi2_dof",
+    "rel_err",
+    "iterations",
+    "converged",
+    "calls_used",
+    "stop",
+    "error",
+]
+
+
+def load_outbox(d):
+    out = {}
+    for p in sorted(Path(d).glob("*.json")):
+        # parse_float=str keeps the canonical text of every number, so
+        # the comparison below is bitwise, not within-epsilon.
+        out[p.stem] = json.loads(p.read_text(), parse_float=str)
+    return out
+
+
+def main():
+    if len(sys.argv) != 3:
+        print(__doc__.strip(), file=sys.stderr)
+        return 2
+    a_dir, b_dir = sys.argv[1], sys.argv[2]
+    a, b = load_outbox(a_dir), load_outbox(b_dir)
+    failures = []
+
+    if set(a) != set(b):
+        only_a = sorted(set(a) - set(b))
+        only_b = sorted(set(b) - set(a))
+        failures.append(f"job sets differ: only in {a_dir}: {only_a}; only in {b_dir}: {only_b}")
+
+    for job in sorted(set(a) & set(b)):
+        for field in SEMANTIC_FIELDS:
+            va, vb = a[job].get(field), b[job].get(field)
+            if va != vb:
+                failures.append(f"{job}.{field}: {va!r} != {vb!r}")
+
+    if failures:
+        print(f"outbox mismatch ({a_dir} vs {b_dir}):")
+        for f in failures:
+            print(f"  {f}")
+        return 1
+    print(f"outboxes match: {len(a)} job(s), bitwise-identical semantic fields")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -41,7 +41,7 @@ pub const RULES: &[RuleInfo] = &[
     RuleInfo {
         id: "MC003",
         summary: "no std::time, rand::, or thread_rng in core sampling modules",
-        scope: "rng/, engine/, strat/, grid/, estimator/, baselines/",
+        scope: "rng/, engine/, strat/, grid/, estimator/, baselines/, store/",
     },
     RuleInfo {
         id: "MC004",
@@ -229,7 +229,7 @@ fn mc002(rel: &str, toks: &[Tok], spans: &[(usize, usize)], out: &mut Vec<Findin
 fn mc003(rel: &str, toks: &[Tok], spans: &[(usize, usize)], out: &mut Vec<Finding>) {
     if !path_in(
         rel,
-        &["rng/", "engine/", "strat/", "grid/", "estimator/", "baselines/"],
+        &["rng/", "engine/", "strat/", "grid/", "estimator/", "baselines/", "store/"],
     ) {
         return;
     }
