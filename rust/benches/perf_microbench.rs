@@ -16,7 +16,7 @@
 use mcubes::api::{Integrator, RunPlan, Sampling};
 use mcubes::coordinator::{IntegrationOutput, JobConfig, JobRequest, Scheduler};
 use mcubes::engine::{
-    FillPath, NativeEngine, PointBlock, ScalarEval, VSampleOpts, VegasMap, BLOCK_POINTS,
+    ExecPath, FillPath, NativeEngine, PointBlock, ScalarEval, VSampleOpts, VegasMap, BLOCK_POINTS,
 };
 use mcubes::grid::Bins;
 use mcubes::integrands::by_name;
@@ -325,6 +325,81 @@ fn main() {
                 "simd_vsample_speedup".into(),
                 format!("{vsample_speedup:.4}"),
             ]);
+        }
+        println!("{}", table.render());
+    }
+
+    // ---- Streaming vs block execution schedule ------------------------
+    // The fused streaming tile loop (engine::streaming, the default
+    // ExecPath) against the historical whole-block pipeline, on the
+    // cheap integrands where the block path is memory-bandwidth-bound.
+    // Results are bitwise identical (property-tested); this series is
+    // the tentpole's throughput evidence and the regression gate's
+    // primary input (tools/ci/check_bench_regression.py).
+    {
+        println!("\nstreaming vs block execution (fused tile loop, f1/f2/f4 d=8):");
+        let mut table = Table::new(&[
+            "integrand", "d", "threads", "block ms", "stream ms", "speedup", "Mevals/s",
+        ]);
+        for (name, d) in [("f1", 8), ("f2", 8), ("f4", 8)] {
+            let f = by_name(name, d).unwrap();
+            let calls = 1 << 17;
+            let layout = Layout::compute(d, calls, 50, 8).unwrap();
+            let bins = Bins::uniform(d, 50);
+            for threads in [1usize, 8] {
+                let vopts = VSampleOpts {
+                    seed: 1,
+                    iteration: 0,
+                    adjust: true,
+                    threads,
+                };
+                let t_block = bench(opts, || {
+                    black_box(NativeEngine.vsample_exec(
+                        &*f,
+                        &layout,
+                        &bins,
+                        &vopts,
+                        FillPath::Simd,
+                        ExecPath::Block,
+                    ))
+                });
+                let t_stream = bench(opts, || {
+                    black_box(NativeEngine.vsample_exec(
+                        &*f,
+                        &layout,
+                        &bins,
+                        &vopts,
+                        FillPath::Simd,
+                        ExecPath::Streaming,
+                    ))
+                });
+                let speedup = t_block.median_ms() / t_stream.median_ms();
+                let mevals = layout.calls() as f64 / (t_stream.median_ms() / 1e3) / 1e6;
+                table.row(vec![
+                    name.into(),
+                    d.to_string(),
+                    threads.to_string(),
+                    format!("{:.2}", t_block.median_ms()),
+                    format!("{:.2}", t_stream.median_ms()),
+                    format!("{speedup:.2}x"),
+                    format!("{mevals:.2}"),
+                ]);
+                let tag = format!("streaming_{name}_d{d}_t{threads}");
+                emit_bench(&tag, "block_ms", t_block.median_ms(), "ms");
+                emit_bench(&tag, "streaming_ms", t_stream.median_ms(), "ms");
+                emit_bench(&tag, "streaming_speedup", speedup, "x");
+                emit_bench(&tag, "streaming_mevals_per_sec", mevals * 1e6, "evals/s");
+                csv.row(vec![
+                    tag.clone(),
+                    "streaming_speedup".into(),
+                    format!("{speedup:.4}"),
+                ]);
+                csv.row(vec![
+                    tag,
+                    "streaming_mevals_per_sec".into(),
+                    format!("{mevals:.3}"),
+                ]);
+            }
         }
         println!("{}", table.render());
     }

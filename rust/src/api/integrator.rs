@@ -44,6 +44,7 @@ use crate::coordinator::{
     drive, escalate_native, integrate_native_core, DriveOutcome, IntegrationOutput, JobConfig,
     PjrtBackend,
 };
+use crate::engine::ExecPath;
 use crate::error::{Error, Result};
 use crate::grid::GridMode;
 use crate::integrands::IntegrandRef;
@@ -302,6 +303,18 @@ impl Integrator {
         self
     }
 
+    /// Native-engine execution schedule: the fused streaming tile loop
+    /// ([`ExecPath::Streaming`], default) or the historical whole-block
+    /// pipeline ([`ExecPath::Block`]). The two are bitwise identical
+    /// (property-tested on both engines and both `Sampling` modes), so
+    /// this is purely a performance knob — `Block` survives as the
+    /// reference the equivalence suite and the microbench compare
+    /// against.
+    pub fn exec(mut self, exec: ExecPath) -> Self {
+        self.cfg.exec = exec;
+        self
+    }
+
     /// Replace the whole job configuration at once.
     pub fn config(mut self, cfg: JobConfig) -> Self {
         self.cfg = cfg;
@@ -555,7 +568,8 @@ mod tests {
             .seed(7)
             .threads(2)
             .grid_mode(GridMode::Shared1D)
-            .sampling(Sampling::vegas_plus());
+            .sampling(Sampling::vegas_plus())
+            .exec(ExecPath::Block);
         let c = intg.job_config();
         assert_eq!(c.maxcalls, 4096);
         assert_eq!(c.tau_rel, 5e-3);
@@ -568,6 +582,8 @@ mod tests {
         assert_eq!(c.threads, 2);
         assert_eq!(c.grid_mode, GridMode::Shared1D);
         assert_eq!(c.sampling, Sampling::VegasPlus { beta: 0.75 });
+        assert_eq!(c.exec, ExecPath::Block);
+        assert_eq!(JobConfig::default().exec, ExecPath::Streaming);
         assert_eq!(intg.spec().label(), "f4");
     }
 

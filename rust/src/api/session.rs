@@ -407,18 +407,20 @@ impl Session {
         let stage = &self.core.stages()[idx];
         let layout = self.layouts[idx];
         let backend: Box<dyn VSampleBackend + Send> = match stage.sampling {
-            Sampling::Uniform => Box::new(NativeBackend::new(
-                self.f.clone(),
-                layout,
-                self.cfg.threads,
-            )),
-            Sampling::VegasPlus { beta } => Box::new(StratifiedBackend::new(
-                self.f.clone(),
-                layout,
-                self.cfg.threads,
-                beta,
-                self.pending_strat.as_ref(),
-            )?),
+            Sampling::Uniform => Box::new(
+                NativeBackend::new(self.f.clone(), layout, self.cfg.threads)
+                    .with_exec(self.cfg.exec),
+            ),
+            Sampling::VegasPlus { beta } => Box::new(
+                StratifiedBackend::new(
+                    self.f.clone(),
+                    layout,
+                    self.cfg.threads,
+                    beta,
+                    self.pending_strat.as_ref(),
+                )?
+                .with_exec(self.cfg.exec),
+            ),
         };
         self.backend_label = backend.name();
         self.backend = Some(backend);

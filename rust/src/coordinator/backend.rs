@@ -13,7 +13,7 @@
 //! block, never one per point.
 
 use crate::api::StratSnapshot;
-use crate::engine::{vsample_stratified, NativeEngine, VSampleOpts};
+use crate::engine::{vsample_stratified_exec, ExecPath, FillPath, NativeEngine, VSampleOpts};
 use crate::error::Result;
 use crate::estimator::IterationResult;
 use crate::grid::Bins;
@@ -59,6 +59,7 @@ pub struct NativeBackend {
     integrand: Arc<dyn Integrand>,
     layout: Layout,
     threads: usize,
+    exec: ExecPath,
 }
 
 impl NativeBackend {
@@ -67,7 +68,17 @@ impl NativeBackend {
             integrand,
             layout,
             threads,
+            exec: ExecPath::default(),
         }
+    }
+
+    /// Chainable override of the execution schedule (default:
+    /// streaming). Both paths are bitwise identical — this is a
+    /// performance knob, surfaced through `JobConfig::exec`.
+    #[must_use]
+    pub fn with_exec(mut self, exec: ExecPath) -> Self {
+        self.exec = exec;
+        self
     }
 }
 
@@ -97,7 +108,14 @@ impl VSampleBackend for NativeBackend {
             adjust,
             threads: self.threads,
         };
-        Ok(NativeEngine.vsample(&*self.integrand, &self.layout, bins, &opts))
+        Ok(NativeEngine.vsample_exec(
+            &*self.integrand,
+            &self.layout,
+            bins,
+            &opts,
+            FillPath::Simd,
+            self.exec,
+        ))
     }
 }
 
@@ -109,7 +127,8 @@ struct StratCell {
 }
 
 /// VEGAS+ adaptively-stratified twin of [`NativeBackend`]: drives
-/// `engine::stratified::vsample_stratified` with a live
+/// the stratified V-Sample pass (fused streaming schedule by default,
+/// selectable via [`StratifiedBackend::with_exec`]) with a live
 /// [`Allocation`], re-apportioning the per-iteration budget after
 /// every pass. The driver stays allocation-agnostic — it only sees the
 /// [`VSampleBackend`] contract plus `alloc_stats`/`strat_export`.
@@ -118,6 +137,7 @@ pub struct StratifiedBackend {
     layout: Layout,
     threads: usize,
     beta: f64,
+    exec: ExecPath,
     /// Per-iteration call budget (`layout.calls()`, matching the
     /// uniform engine so `calls_used` accounting is identical).
     budget: usize,
@@ -150,9 +170,18 @@ impl StratifiedBackend {
             layout,
             threads,
             beta,
+            exec: ExecPath::default(),
             budget: layout.calls(),
             state: RefCell::new(StratCell { alloc, last: None }),
         })
+    }
+
+    /// Chainable override of the execution schedule (default:
+    /// streaming) — same contract as [`NativeBackend::with_exec`].
+    #[must_use]
+    pub fn with_exec(mut self, exec: ExecPath) -> Self {
+        self.exec = exec;
+        self
     }
 }
 
@@ -185,7 +214,15 @@ impl VSampleBackend for StratifiedBackend {
             adjust,
             threads: self.threads,
         };
-        let out = vsample_stratified(&*self.integrand, &self.layout, bins, alloc, &opts);
+        let out = vsample_stratified_exec(
+            &*self.integrand,
+            &self.layout,
+            bins,
+            alloc,
+            &opts,
+            FillPath::Simd,
+            self.exec,
+        );
         // Re-apportion for the next iteration from the freshly damped
         // accumulator (cheap; also leaves the exported snapshot ready
         // for warm starts even when this was the final iteration).

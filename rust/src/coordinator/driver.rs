@@ -27,6 +27,7 @@ use crate::api::{
     Checkpoint, GridState, IterationEvent, ObserverControl, RunPlan, Session, StopReason,
 };
 use crate::error::{Error, Result};
+use crate::engine::ExecPath;
 use crate::estimator::{Convergence, EstimatorState, WeightedEstimator};
 use crate::grid::{Bins, GridMode};
 use crate::integrands::IntegrandRef;
@@ -74,6 +75,11 @@ pub struct JobConfig {
     pub sampling: Sampling,
     /// Worker threads for the native engine.
     pub threads: usize,
+    /// Native-engine execution schedule: the fused streaming tile loop
+    /// (default) or the historical whole-block pipeline. Bitwise
+    /// identical either way (property-tested) — a performance knob,
+    /// never a results knob, so it is not part of the checkpoint.
+    pub exec: ExecPath,
 }
 
 impl Default for JobConfig {
@@ -90,6 +96,7 @@ impl Default for JobConfig {
             grid_mode: GridMode::PerAxis,
             sampling: Sampling::Uniform,
             threads: default_threads(),
+            exec: ExecPath::default(),
         }
     }
 }
@@ -154,6 +161,12 @@ impl JobConfig {
     /// Chainable setter for the native-engine worker-thread count.
     pub fn with_threads(mut self, threads: usize) -> Self {
         self.threads = threads;
+        self
+    }
+
+    /// Chainable setter for the native-engine execution schedule.
+    pub fn with_exec(mut self, exec: ExecPath) -> Self {
+        self.exec = exec;
         self
     }
 

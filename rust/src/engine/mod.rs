@@ -35,14 +35,25 @@
 //! batch-vs-scalar and simd-vs-scalar property tests). Sample indices
 //! are 64-bit end to end — layouts above 2^32 calls draw distinct
 //! counters instead of silently truncating.
+//!
+//! The default execution schedule is the fused streaming tile loop
+//! ([`streaming`]): fill → eval → reduce over small cache-resident
+//! tiles instead of whole blocks, bitwise identical to the block
+//! pipeline described above (which survives as [`ExecPath::Block`],
+//! the reference the equivalence suite compares against).
 
 pub mod block;
 pub mod simd;
 pub mod stratified;
+pub mod streaming;
 
 pub use block::{accumulate_uniform_box, PointBlock, ScalarEval, VegasMap, BLOCK_POINTS};
 pub use simd::FillPath;
 pub use stratified::{vsample_stratified, vsample_stratified_with_fill};
+pub use streaming::{
+    vsample_stratified_exec, vsample_stratified_streaming, vsample_stratified_streaming_with_fill,
+    vsample_streaming, vsample_streaming_with_fill, ExecPath, STREAM_TILE,
+};
 
 use crate::estimator::IterationResult;
 use crate::grid::Bins;
@@ -122,6 +133,39 @@ impl NativeEngine {
     /// contract, property-tested); `FillPath::Scalar` exists for the
     /// equivalence tests and the `simd_fill_speedup` microbench.
     pub fn vsample_with_fill(
+        &self,
+        f: &dyn Integrand,
+        layout: &Layout,
+        bins: &Bins,
+        opts: &VSampleOpts,
+        fill: FillPath,
+    ) -> (IterationResult, Option<Vec<f64>>) {
+        self.vsample_exec(f, layout, bins, opts, fill, ExecPath::default())
+    }
+
+    /// [`NativeEngine::vsample`] with explicit fill and execution
+    /// paths. `ExecPath::Streaming` (the default) runs the fused
+    /// streaming tile loop ([`streaming`]); `ExecPath::Block` runs the
+    /// historical whole-block pipeline. Bitwise identical either way
+    /// (property-tested), so the choice is purely a performance knob.
+    pub fn vsample_exec(
+        &self,
+        f: &dyn Integrand,
+        layout: &Layout,
+        bins: &Bins,
+        opts: &VSampleOpts,
+        fill: FillPath,
+        exec: ExecPath,
+    ) -> (IterationResult, Option<Vec<f64>>) {
+        match exec {
+            ExecPath::Streaming => streaming::vsample_streaming_with_fill(f, layout, bins, opts, fill),
+            ExecPath::Block => self.vsample_block(f, layout, bins, opts, fill),
+        }
+    }
+
+    /// The block pipeline: materialize a whole-cube batch, then
+    /// evaluate and reduce it — the reference [`ExecPath::Block`] body.
+    fn vsample_block(
         &self,
         f: &dyn Integrand,
         layout: &Layout,

@@ -112,6 +112,26 @@ impl VegasMap<'_> {
         self.fill_lanes(cube_coords, ncubes, p, base_sidx, iteration, seed, block, 0, bidx);
     }
 
+    /// [`VegasMap::fill_span`] writing to block slots `k0 ..` — the
+    /// streaming engine's whole-cube-run fill. Lane groups run across
+    /// cube boundaries exactly as in `fill_span`; per the determinism
+    /// contract the grouping leaves every point's bits unchanged.
+    #[allow(clippy::too_many_arguments)]
+    pub(crate) fn fill_span_at(
+        &self,
+        cube_coords: &[usize],
+        ncubes: usize,
+        p: usize,
+        base_sidx: u64,
+        iteration: u32,
+        seed: u32,
+        block: &mut PointBlock,
+        k0: usize,
+        bidx: &mut [usize],
+    ) {
+        self.fill_lanes(cube_coords, ncubes, p, base_sidx, iteration, seed, block, k0, bidx);
+    }
+
     /// The one lane-parallel fill kernel behind [`VegasMap::fill_points`]
     /// (`ncubes = 1`) and [`VegasMap::fill_span`] (`k0 = 0`): `ncubes`
     /// consecutive sub-cubes × `p` samples with consecutive sample

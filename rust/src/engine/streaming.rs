@@ -1,0 +1,711 @@
+//! Fused streaming fill→eval→reduce execution path — the
+//! cache-resident twin of the block engines.
+//!
+//! The block pipeline ([`super::NativeEngine::vsample`]'s historical
+//! path, kept as [`ExecPath::Block`]) materializes a whole
+//! [`super::BLOCK_POINTS`]-point [`PointBlock`] per batch of cubes,
+//! then evaluates and reduces it in separate passes. For cheap
+//! integrands that is memory-bandwidth-bound: at d = 8 a full block is
+//! ~16 KiB of coordinates plus as much again of histogram rows — the
+//! fill pass streams it out of L1 before `eval_batch` streams it back
+//! in. This module fuses the three phases over a small
+//! [`STREAM_TILE`]-point tile that stays cache-resident end to end,
+//! and hoists the per-task scratch to per-*worker* scratch (the block
+//! uniform path re-allocated its block once per reduction task).
+//!
+//! ## Why the stream is bitwise identical to the block path
+//!
+//! Nothing about the arithmetic changes — only its schedule:
+//!
+//! * **Same partition, same fold.** The cube range is split into the
+//!   engine's fixed [`super::REDUCTION_TASKS`] spans and per-task
+//!   partials are folded in task order, exactly as the block engines
+//!   do, so the cross-task reduction tree is unchanged (and results
+//!   stay independent of the thread count).
+//! * **Same counters, lane grouping immaterial.** Tile boundaries cut
+//!   cubes at different points than block boundaries did, so the SIMD
+//!   fill sees different lane groups — but per the SIMD determinism
+//!   contract ([`super::simd`]) every point's bits depend only on its
+//!   own 64-bit Philox counter, never on its lane neighbours. The
+//!   uniform stream keeps drawing counter `cube * p + k`, the
+//!   stratified stream `offsets[cube] + k`; both unchanged.
+//! * **Same accumulation orders.** Within a cube, `s1`/`s2` and the
+//!   v² histogram accumulate in sample order; the open cube's partial
+//!   sums are *carried across tile boundaries* (exactly like the
+//!   stratified block path carries them across block-sized chunks), so
+//!   each cube's sum is the same left-to-right fold. Per task,
+//!   cube means fold in cube order. Nothing is re-associated.
+//!
+//! The equivalence is enforced three ways: unit tests here, the
+//! `streaming == block` property tests in `rust/tests/properties.rs`
+//! (both engines, both `Sampling` modes, partial lane groups,
+//! suspend/resume mid-stream), and the golden-value suite
+//! (`rust/tests/golden_values.rs`) that pins the numbers themselves.
+
+use super::block::{PointBlock, VegasMap};
+use super::simd::FillPath;
+use super::{reduction_task_span, reduction_tasks, VSampleOpts, MAX_DIM};
+use crate::estimator::IterationResult;
+use crate::grid::Bins;
+use crate::integrands::Integrand;
+use crate::strat::{Allocation, Layout};
+use crate::util::threadpool::parallel_chunks;
+
+/// Which fused-loop structure a native V-Sample pass executes.
+///
+/// Both paths are bitwise identical (see the [module docs](self));
+/// `Block` survives as the reference the equivalence suite and the
+/// `streaming_speedup` microbench compare against.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ExecPath {
+    /// Fused streaming tiles ([`vsample_streaming`]): fill → eval →
+    /// reduce over one [`STREAM_TILE`]-point tile at a time. The
+    /// default everywhere.
+    #[default]
+    Streaming,
+    /// The block pipeline: materialize a whole-cube batch of up to
+    /// [`super::BLOCK_POINTS`] points, then evaluate and reduce it.
+    Block,
+}
+
+/// Points per streaming tile.
+///
+/// Small enough that tile coordinates, Jacobians, values, and
+/// histogram rows all stay L1-resident even at `d = MAX_DIM`
+/// (64 × 16 × 8 B = 8 KiB of coordinates), large enough to amortize
+/// the `eval_batch` virtual call and keep SIMD lane groups full.
+pub const STREAM_TILE: usize = 64;
+
+/// One reduction task's partial output (uniform stream).
+struct Partial {
+    integral: f64,
+    variance: f64,
+    contrib: Option<Vec<f64>>,
+}
+
+/// One reduction task's partial output (stratified stream).
+struct StratPartial {
+    cube_lo: usize,
+    integral: f64,
+    variance: f64,
+    contrib: Option<Vec<f64>>,
+    /// Fresh per-cube variance observations `n_k * Var_k`, indexed
+    /// relative to `cube_lo`.
+    d_new: Vec<f64>,
+}
+
+/// Advance a base-`g` odometer of lattice coords by one cube.
+#[inline]
+fn advance_odometer(coords: &mut [usize], gm1: usize) {
+    for slot in coords.iter_mut() {
+        if *slot == gm1 {
+            *slot = 0;
+        } else {
+            *slot += 1;
+            break;
+        }
+    }
+}
+
+/// One uniform V-Sample pass over every sub-cube in `layout`, fused
+/// streaming schedule — bitwise identical to
+/// [`super::NativeEngine::vsample`]'s block path.
+pub fn vsample_streaming(
+    f: &dyn Integrand,
+    layout: &Layout,
+    bins: &Bins,
+    opts: &VSampleOpts,
+) -> (IterationResult, Option<Vec<f64>>) {
+    vsample_streaming_with_fill(f, layout, bins, opts, FillPath::Simd)
+}
+
+/// [`vsample_streaming`] with an explicit [`FillPath`].
+pub fn vsample_streaming_with_fill(
+    f: &dyn Integrand,
+    layout: &Layout,
+    bins: &Bins,
+    opts: &VSampleOpts,
+    fill: FillPath,
+) -> (IterationResult, Option<Vec<f64>>) {
+    assert!(layout.d <= MAX_DIM, "d > MAX_DIM");
+    if let Err(e) = layout.validate() {
+        panic!("invalid layout: {e}");
+    }
+    assert_eq!(bins.d(), layout.d);
+    assert_eq!(bins.nb(), layout.nb);
+    let d = layout.d;
+    let nb = layout.nb;
+    let m = layout.m as f64;
+    let p = layout.p;
+    let pf = p as f64;
+
+    let ntasks = reduction_tasks(layout.m);
+    let task_partials: Vec<Vec<Partial>> = parallel_chunks(ntasks, opts.threads, |t0, t1| {
+        // Per-worker scratch, shared across this worker's tasks — one
+        // cache-resident tile (the threaded SIMD fill writes into it,
+        // eval reads it back while still hot).
+        let map = VegasMap::new(layout, bins, &f.bounds());
+        let mut blk = PointBlock::with_capacity(d, STREAM_TILE);
+        let mut vals = [0.0f64; STREAM_TILE];
+        let mut bidx = vec![0usize; STREAM_TILE * d];
+        let mut coords = [0usize; MAX_DIM];
+        // Row-major `[ncubes][d]` lattice coords of the tile's run of
+        // whole cubes — the span fill keeps lane groups full across
+        // cube boundaries (crucial when p is 2).
+        let mut cube_coords = vec![0usize; STREAM_TILE * d];
+        let gm1 = layout.g - 1;
+        (t0..t1)
+            .map(|t| {
+                let (cube_lo, cube_hi) = reduction_task_span(layout.m, ntasks, t);
+                let mut contrib = opts.adjust.then(|| vec![0.0; d * nb]);
+                let mut integral = 0.0;
+                let mut variance = 0.0;
+                // Decode the first cube, then advance as a base-g
+                // odometer (same as the block path).
+                layout.cube_coords(cube_lo, &mut coords[..d]);
+                // Stream cursor: next tile starts `off` samples into
+                // `cube`. The open cube's running sums are carried
+                // across tile boundaries so its accumulation order
+                // matches the block path's exactly.
+                let mut cube = cube_lo;
+                let mut off = 0usize;
+                let mut s1 = 0.0;
+                let mut s2 = 0.0;
+                while cube < cube_hi {
+                    let remaining = (cube_hi - cube) * p - off;
+                    let tile_len = remaining.min(STREAM_TILE);
+                    blk.reset(tile_len);
+
+                    // Fill phase: the head of the open cube, a span of
+                    // whole cubes (lane groups running straight across
+                    // cube boundaries), then a partial tail cube. All
+                    // three draw the same consecutive 64-bit counters
+                    // `cube * p + k` the block path drew.
+                    let mut fc = cube;
+                    let mut foff = off;
+                    let mut j = 0usize;
+                    if foff > 0 {
+                        let take = (p - foff).min(tile_len);
+                        let base = fc as u64 * p as u64 + foff as u64;
+                        match fill {
+                            FillPath::Simd => map.fill_points(
+                                &coords[..d],
+                                base,
+                                take,
+                                opts.iteration,
+                                opts.seed,
+                                &mut blk,
+                                j,
+                                &mut bidx,
+                            ),
+                            FillPath::Scalar => map.fill_points_scalar(
+                                &coords[..d],
+                                base,
+                                take,
+                                opts.iteration,
+                                opts.seed,
+                                &mut blk,
+                                j,
+                                &mut bidx,
+                            ),
+                        }
+                        j += take;
+                        foff += take;
+                        if foff == p {
+                            foff = 0;
+                            fc += 1;
+                            advance_odometer(&mut coords[..d], gm1);
+                        }
+                    }
+                    let whole = (tile_len - j) / p;
+                    if j < tile_len && whole > 0 {
+                        for c in 0..whole {
+                            cube_coords[c * d..(c + 1) * d].copy_from_slice(&coords[..d]);
+                            advance_odometer(&mut coords[..d], gm1);
+                        }
+                        let base = fc as u64 * p as u64;
+                        match fill {
+                            FillPath::Simd => map.fill_span_at(
+                                &cube_coords[..whole * d],
+                                whole,
+                                p,
+                                base,
+                                opts.iteration,
+                                opts.seed,
+                                &mut blk,
+                                j,
+                                &mut bidx,
+                            ),
+                            FillPath::Scalar => {
+                                for c in 0..whole {
+                                    map.fill_points_scalar(
+                                        &cube_coords[c * d..(c + 1) * d],
+                                        base + (c * p) as u64,
+                                        p,
+                                        opts.iteration,
+                                        opts.seed,
+                                        &mut blk,
+                                        j + c * p,
+                                        &mut bidx,
+                                    );
+                                }
+                            }
+                        }
+                        j += whole * p;
+                        fc += whole;
+                    }
+                    if j < tile_len {
+                        let take = tile_len - j;
+                        let base = fc as u64 * p as u64;
+                        match fill {
+                            FillPath::Simd => map.fill_points(
+                                &coords[..d],
+                                base,
+                                take,
+                                opts.iteration,
+                                opts.seed,
+                                &mut blk,
+                                j,
+                                &mut bidx,
+                            ),
+                            FillPath::Scalar => map.fill_points_scalar(
+                                &coords[..d],
+                                base,
+                                take,
+                                opts.iteration,
+                                opts.seed,
+                                &mut blk,
+                                j,
+                                &mut bidx,
+                            ),
+                        }
+                    }
+
+                    // Eval phase: one virtual call per tile, while the
+                    // tile is still L1-hot from the fill.
+                    f.eval_batch(&blk, &mut vals[..tile_len]);
+
+                    // Reduce phase: sample order, finalizing each cube
+                    // as its last sample streams past.
+                    let mut k = 0usize;
+                    while k < tile_len {
+                        let take = (p - off).min(tile_len - k);
+                        for jj in k..k + take {
+                            let v = vals[jj] * blk.jac(jj);
+                            s1 += v;
+                            s2 += v * v;
+                            if let Some(cacc) = contrib.as_mut() {
+                                let v2 = v * v;
+                                for i in 0..d {
+                                    // SAFETY: bidx slots hold i*nb + b
+                                    // with b < nb, so each is < d*nb ==
+                                    // cacc.len() (same bound as the
+                                    // block path).
+                                    unsafe { *cacc.get_unchecked_mut(bidx[jj * d + i]) += v2 };
+                                }
+                            }
+                        }
+                        k += take;
+                        off += take;
+                        if off == p {
+                            let mean = s1 / pf;
+                            let var = ((s2 / pf - mean * mean).max(0.0)) / (pf - 1.0);
+                            integral += mean / m;
+                            variance += var / (m * m);
+                            s1 = 0.0;
+                            s2 = 0.0;
+                            off = 0;
+                            cube += 1;
+                        }
+                    }
+                }
+                Partial {
+                    integral,
+                    variance,
+                    contrib,
+                }
+            })
+            .collect()
+    });
+
+    let mut integral = 0.0;
+    let mut variance = 0.0;
+    let mut contrib = opts.adjust.then(|| vec![0.0; d * nb]);
+    for part in task_partials.into_iter().flatten() {
+        integral += part.integral;
+        variance += part.variance;
+        if let (Some(acc), Some(pc)) = (contrib.as_mut(), part.contrib.as_ref()) {
+            for (x, y) in acc.iter_mut().zip(pc) {
+                *x += y;
+            }
+        }
+    }
+    (
+        IterationResult {
+            integral,
+            variance,
+        },
+        contrib,
+    )
+}
+
+/// One VEGAS+ V-Sample pass with variable per-cube counts, fused
+/// streaming schedule — bitwise identical to
+/// [`super::stratified::vsample_stratified`]'s block path, including
+/// the damped-accumulator updates folded into `alloc` in task order.
+pub fn vsample_stratified_streaming(
+    f: &dyn Integrand,
+    layout: &Layout,
+    bins: &Bins,
+    alloc: &mut Allocation,
+    opts: &VSampleOpts,
+) -> (IterationResult, Option<Vec<f64>>) {
+    vsample_stratified_streaming_with_fill(f, layout, bins, alloc, opts, FillPath::Simd)
+}
+
+/// [`vsample_stratified_streaming`] with an explicit [`FillPath`].
+pub fn vsample_stratified_streaming_with_fill(
+    f: &dyn Integrand,
+    layout: &Layout,
+    bins: &Bins,
+    alloc: &mut Allocation,
+    opts: &VSampleOpts,
+    fill: FillPath,
+) -> (IterationResult, Option<Vec<f64>>) {
+    assert!(layout.d <= MAX_DIM, "d > MAX_DIM");
+    if let Err(e) = layout.validate() {
+        panic!("invalid layout: {e}");
+    }
+    assert_eq!(bins.d(), layout.d);
+    assert_eq!(bins.nb(), layout.nb);
+    assert_eq!(alloc.m(), layout.m, "allocation cube count != layout");
+    let d = layout.d;
+    let nb = layout.nb;
+    let m = layout.m as f64;
+
+    let ntasks = reduction_tasks(layout.m);
+    let task_partials: Vec<Vec<StratPartial>> = {
+        let counts = alloc.counts();
+        let offsets = alloc.offsets();
+        parallel_chunks(ntasks, opts.threads, |t0, t1| {
+            // Per-worker scratch, shared across this worker's tasks.
+            let map = VegasMap::new(layout, bins, &f.bounds());
+            let mut blk = PointBlock::with_capacity(d, STREAM_TILE);
+            let mut vals = [0.0f64; STREAM_TILE];
+            let mut bidx = vec![0usize; STREAM_TILE * d];
+            let mut coords = [0usize; MAX_DIM];
+            let gm1 = layout.g - 1;
+            (t0..t1)
+                .map(|t| {
+                    let (cube_lo, cube_hi) = reduction_task_span(layout.m, ntasks, t);
+                    let mut out = StratPartial {
+                        cube_lo,
+                        integral: 0.0,
+                        variance: 0.0,
+                        contrib: opts.adjust.then(|| vec![0.0; d * nb]),
+                        d_new: Vec::with_capacity(cube_hi - cube_lo),
+                    };
+                    layout.cube_coords(cube_lo, &mut coords[..d]);
+                    let mut cube = cube_lo;
+                    let mut off = 0usize;
+                    let mut s1 = 0.0;
+                    let mut s2 = 0.0;
+                    while cube < cube_hi {
+                        // Measure the tile (counts arithmetic only).
+                        let mut tile_len = 0usize;
+                        {
+                            let (mut mc, mut mo) = (cube, off);
+                            while tile_len < STREAM_TILE && mc < cube_hi {
+                                let n = counts[mc].max(2) as usize;
+                                let take = (n - mo).min(STREAM_TILE - tile_len);
+                                tile_len += take;
+                                mo += take;
+                                if mo == n {
+                                    mo = 0;
+                                    mc += 1;
+                                }
+                            }
+                        }
+                        blk.reset(tile_len);
+
+                        // Fill phase: per-cube segments — each cube's
+                        // stream starts at its own 64-bit prefix-sum
+                        // offset, exactly like the block path.
+                        {
+                            let (mut fc, mut fo) = (cube, off);
+                            let mut j = 0usize;
+                            while j < tile_len {
+                                let n = counts[fc].max(2) as usize;
+                                let take = (n - fo).min(tile_len - j);
+                                let base = offsets[fc] + fo as u64;
+                                match fill {
+                                    FillPath::Simd => map.fill_points(
+                                        &coords[..d],
+                                        base,
+                                        take,
+                                        opts.iteration,
+                                        opts.seed,
+                                        &mut blk,
+                                        j,
+                                        &mut bidx,
+                                    ),
+                                    FillPath::Scalar => map.fill_points_scalar(
+                                        &coords[..d],
+                                        base,
+                                        take,
+                                        opts.iteration,
+                                        opts.seed,
+                                        &mut blk,
+                                        j,
+                                        &mut bidx,
+                                    ),
+                                }
+                                j += take;
+                                fo += take;
+                                if fo == n {
+                                    fo = 0;
+                                    fc += 1;
+                                    advance_odometer(&mut coords[..d], gm1);
+                                }
+                            }
+                        }
+
+                        f.eval_batch(&blk, &mut vals[..tile_len]);
+
+                        // Reduce phase: sample order, carrying the open
+                        // cube's sums across tile boundaries (the block
+                        // path carries them across chunk boundaries —
+                        // same fold, different chunking).
+                        let mut k = 0usize;
+                        while k < tile_len {
+                            let n = counts[cube].max(2) as usize;
+                            let nf = n as f64;
+                            let take = (n - off).min(tile_len - k);
+                            for jj in k..k + take {
+                                let v = vals[jj] * blk.jac(jj);
+                                s1 += v;
+                                s2 += v * v;
+                                if let Some(cacc) = out.contrib.as_mut() {
+                                    let v2 = v * v;
+                                    for i in 0..d {
+                                        cacc[bidx[jj * d + i]] += v2;
+                                    }
+                                }
+                            }
+                            k += take;
+                            off += take;
+                            if off == n {
+                                let mean = s1 / nf;
+                                let var = ((s2 / nf - mean * mean).max(0.0)) / (nf - 1.0);
+                                out.integral += mean / m;
+                                out.variance += var / (m * m);
+                                // Variance of the cube total — Lepage's
+                                // d_k observation for the allocator.
+                                out.d_new.push(var * nf);
+                                s1 = 0.0;
+                                s2 = 0.0;
+                                off = 0;
+                                cube += 1;
+                            }
+                        }
+                    }
+                    out
+                })
+                .collect()
+        })
+    };
+
+    let mut integral = 0.0;
+    let mut variance = 0.0;
+    let mut contrib = opts.adjust.then(|| vec![0.0; d * nb]);
+    for part in task_partials.into_iter().flatten() {
+        integral += part.integral;
+        variance += part.variance;
+        if let (Some(acc), Some(pc)) = (contrib.as_mut(), part.contrib.as_ref()) {
+            for (x, y) in acc.iter_mut().zip(pc) {
+                *x += y;
+            }
+        }
+        for (i, &dn) in part.d_new.iter().enumerate() {
+            alloc.absorb(part.cube_lo + i, dn);
+        }
+    }
+    (
+        IterationResult {
+            integral,
+            variance,
+        },
+        contrib,
+    )
+}
+
+/// Dispatch a stratified V-Sample pass on an explicit [`ExecPath`] —
+/// the two paths are bitwise identical (property-tested); `Block` is
+/// the reference.
+pub fn vsample_stratified_exec(
+    f: &dyn Integrand,
+    layout: &Layout,
+    bins: &Bins,
+    alloc: &mut Allocation,
+    opts: &VSampleOpts,
+    fill: FillPath,
+    exec: ExecPath,
+) -> (IterationResult, Option<Vec<f64>>) {
+    match exec {
+        ExecPath::Streaming => vsample_stratified_streaming_with_fill(f, layout, bins, alloc, opts, fill),
+        ExecPath::Block => super::stratified::vsample_stratified_with_fill(f, layout, bins, alloc, opts, fill),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::NativeEngine;
+    use crate::integrands::by_name;
+
+    fn opts(seed: u32, it: u32, threads: usize) -> VSampleOpts {
+        VSampleOpts {
+            seed,
+            iteration: it,
+            adjust: true,
+            threads,
+        }
+    }
+
+    fn assert_bitwise(
+        a: &(IterationResult, Option<Vec<f64>>),
+        b: &(IterationResult, Option<Vec<f64>>),
+        tag: &str,
+    ) {
+        assert_eq!(a.0.integral.to_bits(), b.0.integral.to_bits(), "{tag}: integral");
+        assert_eq!(a.0.variance.to_bits(), b.0.variance.to_bits(), "{tag}: variance");
+        match (&a.1, &b.1) {
+            (Some(ca), Some(cb)) => {
+                for (i, (x, y)) in ca.iter().zip(cb).enumerate() {
+                    assert_eq!(x.to_bits(), y.to_bits(), "{tag}: contrib[{i}]");
+                }
+            }
+            (None, None) => {}
+            _ => panic!("{tag}: histogram presence differs"),
+        }
+    }
+
+    #[test]
+    fn streaming_matches_block_uniform_bitwise() {
+        // p = 5 here (d=6 @4096 -> m=729, p=5), so tiles split cubes:
+        // head / whole-span / tail segments and carried sums all run.
+        for (name, d, calls) in [("f3", 4usize, 4096usize), ("f1", 6, 4096), ("f4", 5, 4096)] {
+            let f = by_name(name, d).unwrap();
+            let layout = Layout::compute(d, calls, 16, 2).unwrap();
+            let bins = Bins::uniform(d, 16);
+            let block = NativeEngine.vsample_exec(
+                &*f,
+                &layout,
+                &bins,
+                &opts(42, 1, 2),
+                FillPath::Simd,
+                ExecPath::Block,
+            );
+            for threads in [1usize, 3, 8] {
+                let stream =
+                    vsample_streaming_with_fill(&*f, &layout, &bins, &opts(42, 1, threads), FillPath::Simd);
+                assert_bitwise(&block, &stream, &format!("{name} d={d} threads={threads}"));
+            }
+            // Scalar fill path streams identically too.
+            let stream_scalar =
+                vsample_streaming_with_fill(&*f, &layout, &bins, &opts(42, 1, 2), FillPath::Scalar);
+            assert_bitwise(&block, &stream_scalar, &format!("{name} d={d} scalar"));
+        }
+    }
+
+    #[test]
+    fn streaming_reproduces_python_anchor() {
+        // Same pinned numbers as the block engine's
+        // `matches_python_first_iteration_estimate`.
+        let f = by_name("f4", 5).unwrap();
+        let layout = Layout::compute(5, 4096, 20, 4).unwrap();
+        let bins = Bins::uniform(5, 20);
+        let (r, _) = vsample_streaming(&*f, &layout, &bins, &opts(42, 0, 2));
+        assert!(
+            ((r.integral - 2.7858176280788316e-05) / 2.7858176280788316e-05).abs() < 1e-12,
+            "I = {}",
+            r.integral
+        );
+        assert!(
+            ((r.variance - 7.757123669326781e-10) / 7.757123669326781e-10).abs() < 1e-10,
+            "Var = {}",
+            r.variance
+        );
+    }
+
+    #[test]
+    fn streaming_matches_block_stratified_bitwise() {
+        let f = by_name("f3", 4).unwrap();
+        let layout = Layout::compute(4, 4096, 16, 1).unwrap();
+        let bins = Bins::uniform(4, 16);
+        // Skewed allocation: wildly different per-cube counts, so tile
+        // segmentation differs completely from block chunking.
+        let mut seed_alloc = Allocation::uniform(&layout);
+        seed_alloc.absorb(0, 100.0);
+        for cube in 1..seed_alloc.m() {
+            seed_alloc.absorb(cube, 0.01 * (cube % 7) as f64);
+        }
+        seed_alloc.reallocate(layout.calls(), crate::strat::DEFAULT_BETA);
+        let mut a_block = seed_alloc.clone();
+        let mut a_stream = seed_alloc.clone();
+        let block = vsample_stratified_exec(
+            &*f,
+            &layout,
+            &bins,
+            &mut a_block,
+            &opts(9, 3, 2),
+            FillPath::Simd,
+            ExecPath::Block,
+        );
+        let stream = vsample_stratified_streaming_with_fill(
+            &*f,
+            &layout,
+            &bins,
+            &mut a_stream,
+            &opts(9, 3, 5),
+            FillPath::Simd,
+        );
+        assert_bitwise(&block, &stream, "stratified f3 d=4");
+        // The damped accumulator (checkpoint state) must match too.
+        for (a, b) in a_block.damped().iter().zip(a_stream.damped()) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn streaming_stratified_uniform_alloc_matches_uniform_stream() {
+        // beta = 0 / initial allocation: offsets collapse to cube * p
+        // and the stratified stream equals the uniform stream bitwise
+        // (the same contract the block paths hold).
+        let f = by_name("f5", 5).unwrap();
+        let layout = Layout::compute(5, 4096, 20, 4).unwrap();
+        let bins = Bins::uniform(5, 20);
+        let uni = vsample_streaming(&*f, &layout, &bins, &opts(42, 0, 2));
+        let mut alloc = Allocation::uniform(&layout);
+        let strat =
+            vsample_stratified_streaming(&*f, &layout, &bins, &mut alloc, &opts(42, 0, 3));
+        assert_bitwise(&uni, &strat, "uniform-alloc f5 d=5");
+    }
+
+    #[test]
+    fn no_adjust_skips_histogram() {
+        let f = by_name("f5", 4).unwrap();
+        let layout = Layout::compute(4, 2048, 10, 2).unwrap();
+        let bins = Bins::uniform(4, 10);
+        let (_, c) = vsample_streaming(
+            &*f,
+            &layout,
+            &bins,
+            &VSampleOpts {
+                adjust: false,
+                ..opts(1, 0, 2)
+            },
+        );
+        assert!(c.is_none());
+    }
+}

@@ -183,6 +183,7 @@ pub mod prelude {
         Daemon, DaemonReport, DriveOutcome, IntegrationOutput, JobConfig, JobRequest, JobResult,
         Scheduler, ServiceMetrics,
     };
+    pub use crate::engine::{ExecPath, FillPath};
     pub use crate::error::{Error, Result};
     pub use crate::estimator::{Convergence, EstimatorState, IterationResult, WeightedEstimator};
     pub use crate::grid::{Bins, GridMode};

@@ -11,8 +11,8 @@
 use mcubes::api::{Checkpoint, Integrator, RunPlan, Session};
 use mcubes::coordinator::{JobConfig, NativeBackend, StratifiedBackend, VSampleBackend};
 use mcubes::engine::{
-    vsample_stratified, vsample_stratified_with_fill, FillPath, NativeEngine, ScalarEval,
-    VSampleOpts,
+    vsample_stratified, vsample_stratified_exec, vsample_stratified_with_fill, ExecPath, FillPath,
+    NativeEngine, ScalarEval, VSampleOpts,
 };
 use mcubes::estimator::{Convergence, IterationResult, WeightedEstimator};
 use mcubes::grid::{rebin, smooth_weights, Bins, GridMode};
@@ -849,6 +849,215 @@ fn prop_suspend_resume_reproduces_uninterrupted_run_bitwise() {
         {
             return Err(format!(
                 "{tag} cut={cut}: resumed ({}, {}) != straight ({}, {})",
+                b.integral, b.sigma, a.integral, a.sigma
+            ));
+        }
+        if a.iterations != b.iterations || a.calls_used != b.calls_used {
+            return Err(format!(
+                "{tag} cut={cut}: accounting differs: ({}, {}) vs ({}, {})",
+                b.iterations, b.calls_used, a.iterations, a.calls_used
+            ));
+        }
+        for (j, (x, y)) in straight
+            .grid
+            .bins()
+            .flat()
+            .iter()
+            .zip(resumed.grid.bins().flat())
+            .enumerate()
+        {
+            if x.to_bits() != y.to_bits() {
+                return Err(format!("{tag} cut={cut}: grid edge {j} differs"));
+            }
+        }
+        match (straight.grid.strat(), resumed.grid.strat()) {
+            (None, None) => {}
+            (Some(sa), Some(sb)) => {
+                if sa.counts != sb.counts {
+                    return Err(format!("{tag} cut={cut}: strat counts differ"));
+                }
+                for (x, y) in sa.damped.iter().zip(&sb.damped) {
+                    if x.to_bits() != y.to_bits() {
+                        return Err(format!("{tag} cut={cut}: strat damped differs"));
+                    }
+                }
+            }
+            _ => return Err(format!("{tag} cut={cut}: strat presence differs")),
+        }
+        Ok(())
+    });
+}
+
+/// **Tentpole acceptance property.** The fused streaming schedule
+/// (`ExecPath::Streaming`, the default) is *bitwise* identical to the
+/// materialized block reference (`ExecPath::Block`) — integral,
+/// variance, every histogram cell, and (stratified) every damped
+/// accumulator entry — on BOTH engines, BOTH fill paths, and across
+/// thread counts {1, 4, 8}. `d ∈ {1, 4, 7, 16}` pins the
+/// partial-lane-group shapes (d=1 packs 4 points per Philox block,
+/// d=7 spans two blocks with a ragged tail, d=16 is `MAX_DIM` with
+/// m = 1 so a single cube absorbs the entire budget and every tile
+/// boundary lands mid-cube).
+#[test]
+fn prop_streaming_thread_invariance_bitwise_matches_block() {
+    let dims = [1usize, 4, 7, 16];
+    let names = ["f1", "f3", "f4", "f5"];
+    property("streaming_vs_block", 16, |g: &mut Gen, i| {
+        let d = dims[i % dims.len()];
+        let name = names[(i / dims.len()) % names.len()];
+        let calls = g.usize_range(512, 8192);
+        let nb = g.usize_range(2, 40);
+        let seed = g.usize_range(0, 1 << 30) as u32;
+        let iteration = g.usize_range(0, 25) as u32;
+        let adjust = g.f64() < 0.7;
+        let f = by_name(name, d).map_err(|e| e.to_string())?;
+        let layout = Layout::compute(d, calls, nb, 4).map_err(|e| e.to_string())?;
+        let bins = Bins::uniform(d, nb);
+        let opts = |threads: usize| VSampleOpts {
+            seed,
+            iteration,
+            adjust,
+            threads,
+        };
+        let tag = format!("{name} d={d} calls={calls} nb={nb}");
+
+        // Uniform engine: block reference at one thread count vs the
+        // streaming schedule across several.
+        let block =
+            NativeEngine.vsample_exec(&*f, &layout, &bins, &opts(1), FillPath::Simd, ExecPath::Block);
+        for threads in [1usize, 4, 8] {
+            let stream = NativeEngine.vsample_exec(
+                &*f,
+                &layout,
+                &bins,
+                &opts(threads),
+                FillPath::Simd,
+                ExecPath::Streaming,
+            );
+            check_bitwise(&tag, &format!("uniform streaming t={threads}"), &stream, &block)?;
+        }
+
+        // Scalar fill: the schedule equivalence must hold per fill path.
+        let sb = NativeEngine.vsample_exec(
+            &*f,
+            &layout,
+            &bins,
+            &opts(3),
+            FillPath::Scalar,
+            ExecPath::Block,
+        );
+        let ss = NativeEngine.vsample_exec(
+            &*f,
+            &layout,
+            &bins,
+            &opts(8),
+            FillPath::Scalar,
+            ExecPath::Streaming,
+        );
+        check_bitwise(&tag, "uniform scalar fill", &ss, &sb)?;
+
+        // Stratified engine on a skewed allocation: wildly uneven
+        // per-cube counts make tiles split cubes at every offset.
+        let alloc0 = skewed_allocation(g, &layout, 0.75);
+        let mut a_block = alloc0.clone();
+        let r_block = vsample_stratified_exec(
+            &*f,
+            &layout,
+            &bins,
+            &mut a_block,
+            &opts(4),
+            FillPath::Simd,
+            ExecPath::Block,
+        );
+        for threads in [1usize, 8] {
+            let mut a_stream = alloc0.clone();
+            let r_stream = vsample_stratified_exec(
+                &*f,
+                &layout,
+                &bins,
+                &mut a_stream,
+                &opts(threads),
+                FillPath::Simd,
+                ExecPath::Streaming,
+            );
+            check_bitwise(&tag, &format!("stratified streaming t={threads}"), &r_stream, &r_block)?;
+            for (j, (x, y)) in a_stream.damped().iter().zip(a_block.damped()).enumerate() {
+                if x.to_bits() != y.to_bits() {
+                    return Err(format!("{tag}: stratified damped {j}: {x} != {y}"));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+/// **Tentpole acceptance property.** Suspending a *streaming* session
+/// mid-plan, round-tripping the checkpoint through JSON, and resuming
+/// under the *block* schedule on a different thread count reproduces
+/// the uninterrupted streaming run bitwise (estimates, grid, strat
+/// snapshot, call accounting) — the schedule is a performance knob,
+/// never a results knob, so checkpoints are freely portable between
+/// the two.
+#[test]
+fn prop_streaming_suspend_resume_matches_block_resume_bitwise() {
+    property("streaming_suspend_resume", 10, |g: &mut Gen, i| {
+        let names = ["f3", "f4", "f5"];
+        let name = names[i % names.len()];
+        let d = g.usize_range(2, 5);
+        let calls = g.usize_range(1024, 6144);
+        let nb = g.usize_range(8, 30);
+        let seed = g.usize_range(0, 1 << 30) as u32;
+        let itmax = g.usize_range(2, 6);
+        let ita = g.usize_range(0, itmax);
+        let vegas = g.f64() < 0.5;
+        let f = by_name(name, d).map_err(|e| e.to_string())?;
+        let cfg = |threads: usize, exec: ExecPath| {
+            JobConfig::default()
+                .with_maxcalls(calls)
+                .with_bins(nb)
+                .with_plan(RunPlan::classic(itmax, ita, 0))
+                .with_tolerance(1e-12) // fixed work: run the whole plan
+                .with_seed(seed)
+                .with_threads(threads)
+                .with_exec(exec)
+                .with_sampling(if vegas {
+                    Sampling::VegasPlus { beta: 0.75 }
+                } else {
+                    Sampling::Uniform
+                })
+        };
+        let tag = format!("{name} d={d} calls={calls} ({itmax},{ita}) vegas={vegas}");
+
+        let straight = Session::new(f.clone(), cfg(2, ExecPath::Streaming))
+            .map_err(|e| e.to_string())?
+            .finish()
+            .map_err(|e| e.to_string())?;
+
+        let cut = g.usize_range(1, itmax - 1);
+        let mut first_leg =
+            Session::new(f.clone(), cfg(8, ExecPath::Streaming)).map_err(|e| e.to_string())?;
+        for _ in 0..cut {
+            if first_leg.step().map_err(|e| e.to_string())?.is_none() {
+                break;
+            }
+        }
+        let checkpoint = first_leg.suspend();
+        drop(first_leg);
+        let json = checkpoint.to_json().to_json();
+        let restored = Checkpoint::from_json(&mcubes::util::json::parse(&json).unwrap())
+            .map_err(|e| e.to_string())?;
+        let resumed = Session::resume(f, cfg(1, ExecPath::Block), &restored)
+            .map_err(|e| e.to_string())?
+            .finish()
+            .map_err(|e| e.to_string())?;
+
+        let (a, b) = (&straight.output, &resumed.output);
+        if a.integral.to_bits() != b.integral.to_bits()
+            || a.sigma.to_bits() != b.sigma.to_bits()
+            || a.chi2_dof.to_bits() != b.chi2_dof.to_bits()
+        {
+            return Err(format!(
+                "{tag} cut={cut}: block-resumed ({}, {}) != streaming ({}, {})",
                 b.integral, b.sigma, a.integral, a.sigma
             ));
         }

@@ -413,6 +413,24 @@ mod tests {
     }
 
     #[test]
+    fn streaming_kernel_is_in_rule_scope() {
+        // The fused streaming kernel (engine/streaming.rs) must sit
+        // inside the same fences as the rest of engine/: MC002/MC003
+        // flag hash containers and clocks there, while MC004 blesses
+        // its per-task tile accumulation (it *is* the fixed 64-task
+        // reduction partition) — and keeps flagging everyone else.
+        let clock = "use std::time::Instant;\n";
+        let f = run("engine/streaming.rs", clock);
+        assert_eq!(f.len(), 1);
+        assert_eq!(f[0].rule, "MC003");
+        let hash = "use std::collections::HashMap;\n";
+        assert_eq!(run("engine/streaming.rs", hash)[0].rule, "MC002");
+        let acc = "parallel_chunks(n, t, |a, b| { s += a; });\n";
+        assert!(run("engine/streaming.rs", acc).is_empty());
+        assert_eq!(run("coordinator/backend.rs", acc).len(), 1);
+    }
+
+    #[test]
     fn mc005_lock_unwrap_exempt() {
         let src = "let g = m.lock().unwrap();\nlet v = o.unwrap();\n";
         let f = run("api/session.rs", src);
