@@ -1,0 +1,86 @@
+//! Sharded execution demo: one 2^33-call integral (past the 32-bit
+//! sample-index boundary) split across 8 in-process shard workers,
+//! then checked bitwise against the single-worker run.
+//!
+//! The shard plan partitions the iteration's reduction-task index
+//! space into contiguous spans, each owning a disjoint Philox counter
+//! sub-range — so the merged N-shard fold is the single-worker fold,
+//! bit for bit (see docs/sharding.md). At 2^33 calls the layout holds
+//! ~2^32 sub-cubes, so the demo uses the paper's uniform allocation
+//! (VEGAS+ would need a per-cube table; sharded VEGAS+ equivalence is
+//! pinned at saner sizes in rust/tests/shard_equivalence.rs).
+//!
+//! Run: cargo run --offline --release --example sharded_run
+//!
+//! The default 2^33 evaluations per pass take minutes on a laptop; set
+//! MCUBES_SHARD_DEMO_CALLS to shrink the demo (CI uses 2^21):
+//!
+//!   MCUBES_SHARD_DEMO_CALLS=2097152 cargo run --release --example sharded_run
+
+use mcubes::prelude::*;
+
+fn run(calls: usize, shards: usize) -> Result<IntegrationOutput> {
+    Integrator::from_registry("f4", 8)?
+        .maxcalls(calls)
+        .tolerance(1e-12) // never converges early: one full-budget pass
+        .plan(RunPlan::classic(1, 0, 0))
+        .seed(2026)
+        .threads(8)
+        .shards(shards)
+        .run()
+}
+
+fn main() -> Result<()> {
+    let calls = match std::env::var("MCUBES_SHARD_DEMO_CALLS") {
+        Ok(v) => v
+            .parse()
+            .map_err(|_| Error::Config(format!("MCUBES_SHARD_DEMO_CALLS: bad value `{v}`")))?,
+        Err(_) => 1usize << 33, // past the 2^32 sample-index boundary
+    };
+    let shards = 8;
+
+    // The plan is a pure function of the layout — show the partition
+    // before burning any cycles on it.
+    let layout = Layout::compute(8, calls, 500, 1 << 12)?;
+    let plan = ShardPlan::uniform(&layout, shards);
+    println!(
+        "layout: {} cubes x {} samples = {} calls/iteration ({} reduction tasks)",
+        layout.m,
+        layout.p,
+        layout.calls(),
+        plan.ntasks()
+    );
+    for sp in plan.spans() {
+        println!(
+            "  shard {}: tasks [{:>2}, {:>2})  cubes [{:>10}, {:>10})  counters [{:>10}, {:>10})",
+            sp.shard, sp.task_lo, sp.task_hi, sp.cube_lo, sp.cube_hi, sp.counter_lo, sp.counter_hi
+        );
+    }
+
+    println!("\n{shards}-shard run:");
+    let sharded = run(calls, shards)?;
+    println!(
+        "  I = {:.6e} ± {:.1e}  ({} iterations, {} calls) via {}",
+        sharded.integral, sharded.sigma, sharded.iterations, sharded.calls_used, sharded.backend
+    );
+
+    println!("single-worker reference:");
+    let single = run(calls, 1)?;
+    println!(
+        "  I = {:.6e} ± {:.1e}  ({} iterations, {} calls) via {}",
+        single.integral, single.sigma, single.iterations, single.calls_used, single.backend
+    );
+
+    assert_eq!(
+        sharded.integral.to_bits(),
+        single.integral.to_bits(),
+        "sharded integral must be bitwise equal to the single worker"
+    );
+    assert_eq!(
+        sharded.sigma.to_bits(),
+        single.sigma.to_bits(),
+        "sharded sigma must be bitwise equal to the single worker"
+    );
+    println!("\nbitwise check: {shards}-shard == single worker (integral and sigma)");
+    Ok(())
+}

@@ -5,6 +5,7 @@
 //!   * bin-adjustment (smooth+rebin) cost
 //!   * batched vs scalar-default evaluation (the PointBlock redesign)
 //!   * uniform m-Cubes vs VEGAS+ adaptive stratification (calls to tau)
+//!   * shard scaling (one iteration over N in-process shard workers)
 //! CSV: results/perf_microbench.csv; `BENCH {...}` JSON lines record
 //! the batch-vs-scalar and sampling-strategy series for the perf
 //! trajectory.
@@ -14,7 +15,7 @@
 #![allow(clippy::cast_possible_truncation)]
 
 use mcubes::api::{Integrator, RunPlan, Sampling};
-use mcubes::coordinator::{IntegrationOutput, JobConfig, JobRequest, Scheduler};
+use mcubes::coordinator::{IntegrationOutput, JobConfig, JobRequest, Scheduler, VSampleBackend};
 use mcubes::engine::{
     ExecPath, FillPath, NativeEngine, PointBlock, ScalarEval, VSampleOpts, VegasMap, BLOCK_POINTS,
 };
@@ -22,6 +23,7 @@ use mcubes::grid::Bins;
 use mcubes::integrands::by_name;
 use mcubes::rng::philox_simd::LANES;
 use mcubes::rng::uniforms_into;
+use mcubes::shard::ShardedBackend;
 use mcubes::strat::Layout;
 use mcubes::util::benchkit::{bench, black_box, emit_bench, BenchOpts};
 use mcubes::util::table::Table;
@@ -580,6 +582,59 @@ fn main() {
                 "calls_per_sec".into(),
                 format!("{:.1}", m.calls_per_sec),
             ]);
+        }
+        println!("{}", table.render());
+    }
+
+    // ---- Shard scaling (one integral, N shard workers) ----------------
+    // One full iteration (adjust variant) through the sharded backend
+    // at shards = threads = N: the parallelism axis is the shard span,
+    // each span worker runs single-threaded. The result bytes are
+    // identical at every N (rust/tests/shard_equivalence.rs); this
+    // series is the wall-clock evidence that the split actually scales.
+    {
+        println!("\nshard scaling: one iteration split across N in-process shards:");
+        let mut table = Table::new(&["integrand", "d", "shards", "ms/iter", "Mevals/s", "scaling"]);
+        for (name, d) in [("f4", 8), ("f5", 8)] {
+            let f = by_name(name, d).unwrap();
+            let calls = 1 << 17;
+            let layout = Layout::compute(d, calls, 50, 8).unwrap();
+            let bins = Bins::uniform(d, 50);
+            let mut base_ms = 0.0f64;
+            for shards in [1usize, 2, 4, 8] {
+                let backend = ShardedBackend::new(
+                    f.clone(),
+                    layout,
+                    shards,
+                    shards,
+                    Sampling::Uniform,
+                    None,
+                )
+                .unwrap();
+                let stats = bench(opts, || {
+                    black_box(backend.run(&bins, 1, 0, true).unwrap())
+                });
+                let ms = stats.median_ms();
+                if shards == 1 {
+                    base_ms = ms;
+                }
+                let scaling = base_ms / ms;
+                let mevals = layout.calls() as f64 / (ms / 1e3) / 1e6;
+                table.row(vec![
+                    name.into(),
+                    d.to_string(),
+                    shards.to_string(),
+                    format!("{ms:.2}"),
+                    format!("{mevals:.2}"),
+                    format!("{scaling:.2}x"),
+                ]);
+                let tag = format!("shard_{name}_d{d}_s{shards}");
+                emit_bench(&tag, "ms", ms, "ms");
+                emit_bench(&tag, "mevals_per_sec", mevals * 1e6, "evals/s");
+                emit_bench(&tag, "scaling", scaling, "x");
+                csv.row(vec![tag.clone(), "ms".into(), format!("{ms:.4}")]);
+                csv.row(vec![tag, "scaling".into(), format!("{scaling:.4}")]);
+            }
         }
         println!("{}", table.render());
     }

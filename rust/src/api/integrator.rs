@@ -267,6 +267,24 @@ impl Integrator {
         self
     }
 
+    /// Shard workers the native engine splits each iteration across
+    /// (default 1 = single worker). The N-shard merge is bitwise the
+    /// single-worker run on both engines and both sampling modes, so —
+    /// like [`Integrator::threads`] — this is purely an execution knob.
+    pub fn shards(mut self, shards: usize) -> Self {
+        self.cfg.shards = shards;
+        self
+    }
+
+    /// Spool directory for sharded runs: scatter sealed task files for
+    /// external `mcubes shard-worker` processes instead of the
+    /// in-process pool (stragglers are recomputed locally). Only
+    /// meaningful with [`Integrator::shards`] > 1.
+    pub fn shard_dir(mut self, dir: impl Into<String>) -> Self {
+        self.cfg.shard_dir = Some(dir.into());
+        self
+    }
+
     /// Per-axis (m-Cubes) or shared (m-Cubes1D) importance grid.
     pub fn grid_mode(mut self, mode: GridMode) -> Self {
         self.cfg.grid_mode = mode;
@@ -567,6 +585,8 @@ mod tests {
             .blocks(4)
             .seed(7)
             .threads(2)
+            .shards(4)
+            .shard_dir("/tmp/shard-spool")
             .grid_mode(GridMode::Shared1D)
             .sampling(Sampling::vegas_plus())
             .exec(ExecPath::Block);
@@ -580,6 +600,9 @@ mod tests {
         assert_eq!(c.nblocks, 4);
         assert_eq!(c.seed, 7);
         assert_eq!(c.threads, 2);
+        assert_eq!(c.shards, 4);
+        assert_eq!(c.shard_dir.as_deref(), Some("/tmp/shard-spool"));
+        assert_eq!(JobConfig::default().shards, 1);
         assert_eq!(c.grid_mode, GridMode::Shared1D);
         assert_eq!(c.sampling, Sampling::VegasPlus { beta: 0.75 });
         assert_eq!(c.exec, ExecPath::Block);

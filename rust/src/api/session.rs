@@ -45,6 +45,7 @@ use crate::coordinator::{
 use crate::error::{Error, Result};
 use crate::estimator::{EstimatorState, IterationResult};
 use crate::integrands::IntegrandRef;
+use crate::shard::{ShardStats, ShardedBackend, SpoolOptions, SpoolTransport};
 use crate::strat::{AllocStats, Layout, Sampling};
 use crate::util::json::{ObjBuilder, Value};
 use std::path::Path;
@@ -343,6 +344,9 @@ pub struct Session {
     /// Stratification state carried across stage boundaries and
     /// checkpoint restores, consumed by the next VEGAS+ backend build.
     pending_strat: Option<StratSnapshot>,
+    /// Shard accounting folded from backends retired at stage
+    /// boundaries (`Session::shard_stats` adds the live backend's).
+    shard_stats_acc: ShardStats,
     /// Accumulated wall time actually spent inside `step` (seconds).
     active_time: f64,
 }
@@ -394,6 +398,7 @@ impl Session {
             backend: None,
             backend_label: "native",
             pending_strat,
+            shard_stats_acc: ShardStats::default(),
             active_time: 0.0,
         })
     }
@@ -406,21 +411,39 @@ impl Session {
         let idx = self.core.stage_idx();
         let stage = &self.core.stages()[idx];
         let layout = self.layouts[idx];
-        let backend: Box<dyn VSampleBackend + Send> = match stage.sampling {
-            Sampling::Uniform => Box::new(
-                NativeBackend::new(self.f.clone(), layout, self.cfg.threads)
+        let backend: Box<dyn VSampleBackend + Send> = if self.cfg.shards > 1 {
+            // Sharded execution covers both sampling modes with one
+            // backend; its merge is bitwise equal to the single-worker
+            // backends below (see crate::shard).
+            let mut b = ShardedBackend::new(
+                self.f.clone(),
+                layout,
+                self.cfg.shards,
+                self.cfg.threads,
+                stage.sampling,
+                self.pending_strat.as_ref(),
+            )?;
+            if let Some(dir) = &self.cfg.shard_dir {
+                b = b.with_spool(SpoolTransport::open(dir, SpoolOptions::default())?);
+            }
+            Box::new(b)
+        } else {
+            match stage.sampling {
+                Sampling::Uniform => Box::new(
+                    NativeBackend::new(self.f.clone(), layout, self.cfg.threads)
+                        .with_exec(self.cfg.exec),
+                ),
+                Sampling::VegasPlus { beta } => Box::new(
+                    StratifiedBackend::new(
+                        self.f.clone(),
+                        layout,
+                        self.cfg.threads,
+                        beta,
+                        self.pending_strat.as_ref(),
+                    )?
                     .with_exec(self.cfg.exec),
-            ),
-            Sampling::VegasPlus { beta } => Box::new(
-                StratifiedBackend::new(
-                    self.f.clone(),
-                    layout,
-                    self.cfg.threads,
-                    beta,
-                    self.pending_strat.as_ref(),
-                )?
-                .with_exec(self.cfg.exec),
-            ),
+                ),
+            }
         };
         self.backend_label = backend.name();
         self.backend = Some(backend);
@@ -446,6 +469,9 @@ impl Session {
             if let Some(retired) = self.backend.take() {
                 if let Some(snap) = retired.strat_export() {
                     self.pending_strat = Some(snap);
+                }
+                if let Some(stats) = retired.shard_stats() {
+                    self.shard_stats_acc.absorb(stats);
                 }
             }
         }
@@ -526,6 +552,16 @@ impl Session {
             .as_ref()
             .and_then(|b| b.strat_export())
             .or_else(|| self.pending_strat.clone())
+    }
+
+    /// Cumulative shard-execution accounting (zeroed default when the
+    /// run is not sharded): stage-retired backends plus the live one.
+    pub fn shard_stats(&self) -> ShardStats {
+        let mut stats = self.shard_stats_acc;
+        if let Some(live) = self.backend.as_ref().and_then(|b| b.shard_stats()) {
+            stats.absorb(live);
+        }
+        stats
     }
 
     /// End the run after the last completed iteration

@@ -52,6 +52,13 @@ pub trait VSampleBackend {
     fn strat_export(&self) -> Option<StratSnapshot> {
         None
     }
+    /// Cumulative shard-execution accounting — `Some` only for the
+    /// sharded backend ([`crate::shard::ShardedBackend`]). The session
+    /// layer folds it across stages; the service layer surfaces it in
+    /// `ServiceMetrics`.
+    fn shard_stats(&self) -> Option<crate::shard::ShardStats> {
+        None
+    }
 }
 
 /// Native-engine backend.

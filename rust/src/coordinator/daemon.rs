@@ -68,6 +68,12 @@ pub struct DaemonReport {
 pub struct Daemon {
     store: ServiceStore,
     threads: usize,
+    /// Shard workers per job (1 = ordinary single-worker backends).
+    shards: usize,
+    /// Spool directory handed to sharded jobs (external
+    /// `mcubes shard-worker` processes); `None` keeps shards
+    /// in-process.
+    shard_dir: Option<String>,
     resolver: IntegrandResolver,
     /// Simulated `kill -9` after the Nth durable checkpoint flush.
     crash_after_flushes: Option<usize>,
@@ -83,6 +89,8 @@ impl Daemon {
         Ok(Daemon {
             store,
             threads: 1,
+            shards: 1,
+            shard_dir: None,
             resolver: Box::new(|job| crate::integrands::by_name(&job.integrand, job.dim)),
             crash_after_flushes: None,
             flushes: 0,
@@ -93,6 +101,24 @@ impl Daemon {
     /// invariant, so this is purely a throughput knob.
     pub fn with_threads(mut self, threads: usize) -> Daemon {
         self.threads = threads.max(1);
+        self
+    }
+
+    /// Shard workers per job. Like `threads`, an execution knob the
+    /// daemon owns (it is excluded from the job digest): the N-shard
+    /// merge is bitwise the single-worker run, so sharded and
+    /// unsharded daemons share cache entries and checkpoints.
+    pub fn with_shards(mut self, shards: usize) -> Daemon {
+        self.shards = shards.max(1);
+        self
+    }
+
+    /// Spool directory for sharded jobs: tasks are scattered there for
+    /// external `mcubes shard-worker` processes, with in-process
+    /// recompute covering stragglers. Only meaningful with
+    /// [`Daemon::with_shards`] > 1.
+    pub fn with_shard_dir(mut self, dir: impl Into<String>) -> Daemon {
+        self.shard_dir = Some(dir.into());
         self
     }
 
@@ -200,7 +226,9 @@ impl Daemon {
             Ok(f) => f,
             Err(e) => return self.publish_failure(path, job, e.to_string(), report),
         };
-        let cfg = job.to_config(self.threads);
+        let mut cfg = job.to_config(self.threads);
+        cfg.shards = self.shards;
+        cfg.shard_dir = self.shard_dir.clone();
 
         // 2. Durable checkpoint → bitwise resume. A corrupt or
         //    incompatible checkpoint degrades to a cold start (the
@@ -364,6 +392,27 @@ mod tests {
         assert!(d.store().spool().pending().unwrap().is_empty());
         let r = read_result(&root, "mangled").unwrap().unwrap();
         assert!(r.outcome.is_err());
+    }
+
+    #[test]
+    fn sharded_daemon_matches_single_worker_bitwise() {
+        let root_a = scratch("shard-a");
+        submit_job(&root_a, &small_job("j", "f4", 5)).unwrap();
+        let mut d = Daemon::open(&root_a).unwrap();
+        d.run_pending().unwrap();
+        let a = read_result(&root_a, "j").unwrap().unwrap();
+
+        let root_b = scratch("shard-b");
+        submit_job(&root_b, &small_job("j", "f4", 5)).unwrap();
+        let mut d = Daemon::open(&root_b).unwrap().with_shards(8);
+        d.run_pending().unwrap();
+        let b = read_result(&root_b, "j").unwrap().unwrap();
+
+        assert_eq!(a.digest, b.digest, "shards are excluded from the digest");
+        let (na, nb) = (a.outcome.unwrap(), b.outcome.unwrap());
+        assert_eq!(na.integral.to_bits(), nb.integral.to_bits());
+        assert_eq!(na.sigma.to_bits(), nb.sigma.to_bits());
+        assert_eq!(na.calls_used, nb.calls_used);
     }
 
     #[test]

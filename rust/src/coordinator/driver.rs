@@ -80,6 +80,18 @@ pub struct JobConfig {
     /// identical either way (property-tested) — a performance knob,
     /// never a results knob, so it is not part of the checkpoint.
     pub exec: ExecPath,
+    /// Shard workers the native engine splits each iteration across
+    /// (`1`, the default, runs the ordinary single-worker backends).
+    /// Like `threads`/`exec` this is an execution knob, never a results
+    /// knob — the N-shard merge is bitwise equal to the single-worker
+    /// run — so it is excluded from the manifest digest.
+    pub shards: usize,
+    /// Spool directory for sharded runs: when set (and `shards > 1`)
+    /// the sharded backend scatters sealed task files there and gathers
+    /// reports written by external `mcubes shard-worker` processes,
+    /// falling back to in-process recompute for stragglers. `None`
+    /// (default) keeps the shard pool in-process.
+    pub shard_dir: Option<String>,
 }
 
 impl Default for JobConfig {
@@ -97,6 +109,8 @@ impl Default for JobConfig {
             sampling: Sampling::Uniform,
             threads: default_threads(),
             exec: ExecPath::default(),
+            shards: 1,
+            shard_dir: None,
         }
     }
 }
@@ -170,6 +184,19 @@ impl JobConfig {
         self
     }
 
+    /// Chainable setter for the shard-worker count.
+    pub fn with_shards(mut self, shards: usize) -> Self {
+        self.shards = shards;
+        self
+    }
+
+    /// Chainable setter for the shard spool directory (implies the
+    /// process transport when `shards > 1`).
+    pub fn with_shard_dir(mut self, dir: impl Into<String>) -> Self {
+        self.shard_dir = Some(dir.into());
+        self
+    }
+
     pub fn validate(&self) -> Result<()> {
         if self.maxcalls < 4 {
             return Err(Error::Config(format!(
@@ -195,6 +222,11 @@ impl JobConfig {
         if self.max_total_calls == Some(0) {
             return Err(Error::Config(
                 "max_total_calls must be >= 1 (use None for unlimited)".into(),
+            ));
+        }
+        if self.shards == 0 {
+            return Err(Error::Config(
+                "shards must be >= 1 (1 means single-worker), got 0".into(),
             ));
         }
         self.sampling.validate()?;

@@ -36,6 +36,7 @@ use super::driver::{IntegrationOutput, JobConfig};
 use crate::api::{Checkpoint, GridState, IntegrandSpec, Session, StopReason};
 use crate::error::{Error, Result};
 use crate::integrands::IntegrandRef;
+use crate::shard::ShardStats;
 use crate::util::benchkit::percentile_sorted;
 use std::cmp::Reverse;
 use std::collections::{BTreeMap, VecDeque};
@@ -126,6 +127,9 @@ pub struct JobResult {
     /// Scheduling slices the job took (> 1 means it was time-sliced
     /// against the `calls_budget` fairness cap).
     pub slices: usize,
+    /// Shard-execution accounting (all-zero when the job ran on the
+    /// ordinary single-worker backends).
+    pub shard_stats: ShardStats,
 }
 
 /// Aggregate scheduler metrics.
@@ -137,14 +141,27 @@ pub struct ServiceMetrics {
     pub wall_time: f64,
     /// Completed jobs per second of wall time.
     pub throughput: f64,
-    /// Total integrand evaluations across all completed jobs.
+    /// Total integrand evaluations consumed by every scheduling slice
+    /// so far — recorded slice-by-slice on a shared counter, so the
+    /// figure is monotone across `metrics()` calls and counts work done
+    /// by still-running and failed jobs, not just completed ones.
     pub total_calls: usize,
-    /// Integrand evaluations per second of wall time.
+    /// Integrand evaluations per second of wall time (same monotone
+    /// slice-level accounting as `total_calls`).
     pub calls_per_sec: f64,
     pub latency_p50: f64,
     pub latency_p95: f64,
     pub latency_max: f64,
     pub mean_queue_time: f64,
+    /// Largest effective shard count any completed job ran with
+    /// (0 when no job used the sharded backend).
+    pub shards: usize,
+    /// Total wall-clock milliseconds completed jobs spent merging
+    /// shard partials.
+    pub merge_ms: f64,
+    /// Shard spans recovered through the coordinator's straggler path
+    /// across completed jobs.
+    pub straggler_retries: usize,
 }
 
 /// One job's life on the run queue.
@@ -196,6 +213,11 @@ struct Shared {
     state: Mutex<QueueState>,
     cv: Condvar,
     calls_budget: AtomicUsize,
+    /// Integrand evaluations recorded at the end of every scheduling
+    /// slice — the monotone source for `ServiceMetrics::calls_per_sec`
+    /// (completion-time accounting would drop in-flight and failed
+    /// jobs, making the rate jumpy and non-monotone).
+    calls_done: AtomicUsize,
 }
 
 /// The multi-job throughput scheduler (see the module docs).
@@ -224,6 +246,7 @@ impl Scheduler {
             }),
             cv: Condvar::new(),
             calls_budget: AtomicUsize::new(DEFAULT_CALLS_BUDGET),
+            calls_done: AtomicUsize::new(0),
         });
         let (tx, rx) = channel();
         let mut handles = Vec::with_capacity(workers.max(1));
@@ -296,7 +319,7 @@ impl Scheduler {
         ResultStream {
             // lint:allow(MC005, stream() consumes self — take() can only run once per Scheduler)
             rx: self.rx.take().expect("receiver present until stream()"),
-            _shared: Arc::clone(&self.shared),
+            shared: Arc::clone(&self.shared),
             workers: std::mem::take(&mut self.workers),
             total: self.submitted,
             remaining: self.submitted,
@@ -305,7 +328,7 @@ impl Scheduler {
             latencies: Vec::with_capacity(self.submitted),
             queue_times: Vec::with_capacity(self.submitted),
             failures: 0,
-            total_calls: 0,
+            shard: ShardStats::default(),
         }
     }
 
@@ -361,7 +384,7 @@ pub type IntegrationService = Scheduler;
 /// once the stream is exhausted or dropped.
 pub struct ResultStream {
     rx: Receiver<JobResult>,
-    _shared: Arc<Shared>,
+    shared: Arc<Shared>,
     workers: Vec<JoinHandle<()>>,
     total: usize,
     remaining: usize,
@@ -370,7 +393,7 @@ pub struct ResultStream {
     latencies: Vec<f64>,
     queue_times: Vec<f64>,
     failures: usize,
-    total_calls: usize,
+    shard: ShardStats,
 }
 
 impl ResultStream {
@@ -392,18 +415,22 @@ impl ResultStream {
         // whole drain; NaNs sort to the end and surface in latency_max.
         latencies.sort_by(f64::total_cmp);
         let jobs = latencies.len();
+        let total_calls = self.shared.calls_done.load(Ordering::Relaxed);
         ServiceMetrics {
             jobs,
             failures: self.failures,
             wall_time,
             throughput: jobs as f64 / wall_time.max(1e-9),
-            total_calls: self.total_calls,
-            calls_per_sec: self.total_calls as f64 / wall_time.max(1e-9),
+            total_calls,
+            calls_per_sec: total_calls as f64 / wall_time.max(1e-9),
             latency_p50: percentile_sorted(&latencies, 50.0),
             latency_p95: percentile_sorted(&latencies, 95.0),
             latency_max: latencies.last().copied().unwrap_or(0.0),
             mean_queue_time: self.queue_times.iter().sum::<f64>()
                 / self.queue_times.len().max(1) as f64,
+            shards: self.shard.shards,
+            merge_ms: self.shard.merge_ms,
+            straggler_retries: self.shard.straggler_retries,
         }
     }
 
@@ -430,9 +457,9 @@ impl Iterator for ResultStream {
                 }
                 self.latencies.push(r.latency);
                 self.queue_times.push(r.queue_time);
-                match &r.outcome {
-                    Ok(o) => self.total_calls += o.calls_used,
-                    Err(_) => self.failures += 1,
+                self.shard.absorb(r.shard_stats);
+                if r.outcome.is_err() {
+                    self.failures += 1;
                 }
                 Some(r)
             }
@@ -474,7 +501,9 @@ fn worker_loop(shared: &Shared, tx: &Sender<JobResult>) {
         // User-supplied closures can panic; isolate the panic to this
         // job so the batch (and the worker) survives and the stream
         // still yields every result.
-        let slice = catch_unwind(AssertUnwindSafe(|| run_slice(&mut job, budget)));
+        let slice = catch_unwind(AssertUnwindSafe(|| {
+            run_slice(&mut job, budget, &shared.calls_done)
+        }));
         match slice {
             Ok(SliceResult::Yield) => {
                 {
@@ -542,12 +571,14 @@ fn job_result(
         queue_time: job.queue_time.unwrap_or(0.0),
         latency: job.enqueued.elapsed().as_secs_f64(),
         slices: job.slices,
+        shard_stats: ShardStats::default(),
     }
 }
 
 /// Step one job's session until it finishes or spends `budget`
-/// integrand evaluations in this slice.
-fn run_slice(job: &mut QueuedJob, budget: usize) -> SliceResult {
+/// integrand evaluations in this slice. Evaluations consumed by the
+/// slice are recorded on `calls_done` before it returns.
+fn run_slice(job: &mut QueuedJob, budget: usize, calls_done: &AtomicUsize) -> SliceResult {
     job.slices += 1;
     if job.queue_time.is_none() {
         job.queue_time = Some(job.enqueued.elapsed().as_secs_f64());
@@ -574,7 +605,7 @@ fn run_slice(job: &mut QueuedJob, budget: usize) -> SliceResult {
     let end = match &mut job.state {
         JobState::Running(session) => {
             let slice_start = session.calls_used();
-            loop {
+            let end = loop {
                 match session.step() {
                     Err(e) => break StepEnd::Failed(e.to_string()),
                     Ok(None) => break StepEnd::Finished,
@@ -587,7 +618,9 @@ fn run_slice(job: &mut QueuedJob, budget: usize) -> SliceResult {
                         }
                     }
                 }
-            }
+            };
+            calls_done.fetch_add(session.calls_used() - slice_start, Ordering::Relaxed);
+            end
         }
         _ => StepEnd::Failed("scheduler invariant violated: job state lost".into()),
     };
@@ -604,9 +637,12 @@ fn run_slice(job: &mut QueuedJob, budget: usize) -> SliceResult {
                     None,
                 ));
             };
+            let shard_stats = session.shard_stats();
             match session.finish() {
                 Ok(o) => {
-                    SliceResult::Done(job_result(job, Ok(o.output), Some(o.grid), Some(o.stop)))
+                    let mut r = job_result(job, Ok(o.output), Some(o.grid), Some(o.stop));
+                    r.shard_stats = shard_stats;
+                    SliceResult::Done(r)
                 }
                 Err(e) => SliceResult::Done(job_result(job, Err(e.to_string()), None, None)),
             }
@@ -812,6 +848,58 @@ mod tests {
         let metrics = stream.metrics();
         assert_eq!(metrics.jobs, 5);
         assert_eq!(metrics.failures, 0);
+    }
+
+    #[test]
+    fn sharded_jobs_surface_stats_and_match_unsharded_bitwise() {
+        let run = |shards: usize| {
+            let mut svc = Scheduler::new(2);
+            let mut cfg = quick_cfg();
+            cfg.tau_rel = 1e-12; // fixed work: run the whole plan
+            cfg.shards = shards;
+            svc.submit(JobRequest::registry(0, "f4", 5, cfg));
+            svc.drain().unwrap()
+        };
+        let (a, ma) = run(1);
+        let (b, mb) = run(8);
+        let oa = a[0].outcome.as_ref().unwrap();
+        let ob = b[0].outcome.as_ref().unwrap();
+        assert_eq!(oa.integral.to_bits(), ob.integral.to_bits());
+        assert_eq!(oa.sigma.to_bits(), ob.sigma.to_bits());
+        assert_eq!(ma.shards, 0, "single-worker batch reports no shards");
+        assert_eq!(mb.shards, 8, "sharded batch surfaces its shard count");
+        assert_eq!(b[0].shard_stats.shards, 8);
+        assert_eq!(mb.straggler_retries, 0, "in-process pool never straggles");
+        // The slice-level counter must account for all completed work.
+        assert!(ma.total_calls >= oa.calls_used);
+        assert!(mb.total_calls >= ob.calls_used);
+    }
+
+    #[test]
+    fn failed_jobs_still_count_their_calls() {
+        // A custom integrand that panics during its second iteration:
+        // completion-time accounting would report zero calls for it;
+        // the slice-level counter must still show the first slice's
+        // work (the tiny quantum makes each iteration its own slice).
+        let mut svc = Scheduler::new(1);
+        svc.calls_budget(1 << 10);
+        let hits = std::sync::Arc::new(AtomicUsize::new(0));
+        let h = std::sync::Arc::clone(&hits);
+        let f = FnIntegrand::unit(3, move |x: &[f64]| {
+            let n = h.fetch_add(1, Ordering::Relaxed);
+            assert!(n < 5_000, "bomb");
+            x[0]
+        })
+        .named("late-bomb")
+        .into_ref();
+        svc.submit(JobRequest::custom(0, f, quick_cfg()));
+        let (results, metrics) = svc.drain().unwrap();
+        assert_eq!(metrics.failures, 1);
+        assert!(results[0].outcome.is_err());
+        assert!(
+            metrics.total_calls > 0,
+            "calls burned before the failure must be visible"
+        );
     }
 
     #[test]

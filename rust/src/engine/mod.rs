@@ -46,6 +46,7 @@ pub mod block;
 pub mod simd;
 pub mod stratified;
 pub mod streaming;
+pub mod tasks;
 
 pub use block::{accumulate_uniform_box, PointBlock, ScalarEval, VegasMap, BLOCK_POINTS};
 pub use simd::FillPath;
@@ -54,6 +55,7 @@ pub use streaming::{
     vsample_stratified_exec, vsample_stratified_streaming, vsample_stratified_streaming_with_fill,
     vsample_streaming, vsample_streaming_with_fill, ExecPath, STREAM_TILE,
 };
+pub use tasks::{merge_task_partials, vsample_stratified_tasks, vsample_tasks, TaskPartial};
 
 use crate::estimator::IterationResult;
 use crate::grid::Bins;
@@ -73,16 +75,36 @@ pub const MAX_DIM: usize = 16;
 /// per-task scratch stays negligible next to the sampling work.
 pub const REDUCTION_TASKS: usize = 64;
 
-/// Number of reduction tasks for an `m`-cube layout.
+/// Number of reduction tasks for an `m`-cube layout:
+/// `min(m, REDUCTION_TASKS)`, at least 1.
+///
+/// Public because the shard subsystem ([`crate::shard`]) partitions
+/// exactly this task index space across workers — the task, not the
+/// cube, is the unit of distribution, which is what makes an N-shard
+/// merge reproduce the single-worker fold bitwise.
+///
+/// ```
+/// use mcubes::engine::{reduction_tasks, REDUCTION_TASKS};
+/// assert_eq!(reduction_tasks(3), 3);
+/// assert_eq!(reduction_tasks(1_000_000), REDUCTION_TASKS);
+/// ```
 #[inline]
-pub(crate) fn reduction_tasks(m: usize) -> usize {
+pub fn reduction_tasks(m: usize) -> usize {
     m.min(REDUCTION_TASKS).max(1)
 }
 
 /// Cube span `[lo, hi)` of reduction task `t` (balanced partition of
-/// `m` cubes into `ntasks` contiguous spans).
+/// `m` cubes into `ntasks` contiguous spans: the first `m % ntasks`
+/// tasks hold one extra cube).
+///
+/// ```
+/// use mcubes::engine::reduction_task_span;
+/// // 10 cubes over 4 tasks: spans of 3, 3, 2, 2 — contiguous, exact.
+/// let spans: Vec<_> = (0..4).map(|t| reduction_task_span(10, 4, t)).collect();
+/// assert_eq!(spans, vec![(0, 3), (3, 6), (6, 8), (8, 10)]);
+/// ```
 #[inline]
-pub(crate) fn reduction_task_span(m: usize, ntasks: usize, t: usize) -> (usize, usize) {
+pub fn reduction_task_span(m: usize, ntasks: usize, t: usize) -> (usize, usize) {
     let q = m / ntasks;
     let r = m % ntasks;
     let lo = t * q + t.min(r);

@@ -39,15 +39,114 @@ use crate::integrands::Integrand;
 use crate::strat::{Allocation, Layout};
 use crate::util::threadpool::parallel_chunks;
 
-/// One reduction task's partial output.
-struct Partial {
-    cube_lo: usize,
-    integral: f64,
-    variance: f64,
-    contrib: Option<Vec<f64>>,
+/// One reduction task's partial output. `pub(super)` so the
+/// task-subrange entry points ([`super::tasks`]) reuse the exact same
+/// per-task body the full pass runs.
+pub(super) struct Partial {
+    pub(super) cube_lo: usize,
+    pub(super) integral: f64,
+    pub(super) variance: f64,
+    pub(super) contrib: Option<Vec<f64>>,
     /// Fresh per-cube variance observations `n_k * Var_k`, indexed
     /// relative to `cube_lo`.
-    d_new: Vec<f64>,
+    pub(super) d_new: Vec<f64>,
+}
+
+/// One reduction task's body: sample cubes `[cube_lo, cube_hi)` under
+/// the per-cube allocation view (`counts`/`offsets`) and return the
+/// task partial. This is THE stratified per-task arithmetic — both the
+/// full pass below and the shard workers ([`super::tasks`]) call it, so
+/// an N-shard merge folds bit-identical partials. Scratch is owned per
+/// call; allocation placement never changes the float stream.
+#[allow(clippy::too_many_arguments)]
+pub(super) fn sample_task_stratified(
+    f: &dyn Integrand,
+    layout: &Layout,
+    bins: &Bins,
+    counts: &[u32],
+    offsets: &[u64],
+    opts: &VSampleOpts,
+    fill: FillPath,
+    cube_lo: usize,
+    cube_hi: usize,
+) -> Partial {
+    let d = layout.d;
+    let nb = layout.nb;
+    let m = layout.m as f64;
+    let map = VegasMap::new(layout, bins, &f.bounds());
+    let mut blk = PointBlock::with_capacity(d, BLOCK_POINTS);
+    let mut vals = vec![0.0f64; BLOCK_POINTS];
+    let mut bidx = vec![0usize; BLOCK_POINTS * d];
+    let mut coords = [0usize; MAX_DIM];
+    let mut out = Partial {
+        cube_lo,
+        integral: 0.0,
+        variance: 0.0,
+        contrib: opts.adjust.then(|| vec![0.0; d * nb]),
+        d_new: Vec::with_capacity(cube_hi - cube_lo),
+    };
+    for cube in cube_lo..cube_hi {
+        layout.cube_coords(cube, &mut coords[..d]);
+        let n = counts[cube].max(2);
+        let nf = n as f64;
+        let mut s1 = 0.0;
+        let mut s2 = 0.0;
+        // A cube's (variable-size) sample set is processed in
+        // block-sized chunks, carrying s1/s2 across chunks so the
+        // accumulation order matches the uniform engine's.
+        let mut k0 = 0u32;
+        while k0 < n {
+            let chunk = (n - k0).min(BLOCK_POINTS as u32);
+            blk.reset(chunk as usize);
+            // The cube's sample stream starts at its 64-bit
+            // prefix-sum offset — no wrapping, even past 2^32 total
+            // calls.
+            let base_sidx = offsets[cube] + k0 as u64;
+            match fill {
+                FillPath::Simd => map.fill_points(
+                    &coords[..d],
+                    base_sidx,
+                    chunk as usize,
+                    opts.iteration,
+                    opts.seed,
+                    &mut blk,
+                    0,
+                    &mut bidx,
+                ),
+                FillPath::Scalar => map.fill_points_scalar(
+                    &coords[..d],
+                    base_sidx,
+                    chunk as usize,
+                    opts.iteration,
+                    opts.seed,
+                    &mut blk,
+                    0,
+                    &mut bidx,
+                ),
+            }
+            f.eval_batch(&blk, &mut vals[..chunk as usize]);
+            for j in 0..chunk as usize {
+                let v = vals[j] * blk.jac(j);
+                s1 += v;
+                s2 += v * v;
+                if let Some(cacc) = out.contrib.as_mut() {
+                    let v2 = v * v;
+                    for i in 0..d {
+                        cacc[bidx[j * d + i]] += v2;
+                    }
+                }
+            }
+            k0 += chunk;
+        }
+        let mean = s1 / nf;
+        let var = ((s2 / nf - mean * mean).max(0.0)) / (nf - 1.0);
+        out.integral += mean / m;
+        out.variance += var / (m * m);
+        // Variance of the *cube total* — Lepage's d_k observation
+        // driving the next allocation.
+        out.d_new.push(var * nf);
+    }
+    out
 }
 
 /// One VEGAS+ V-Sample pass over every sub-cube in `layout`.
@@ -87,92 +186,18 @@ pub fn vsample_stratified_with_fill(
     assert_eq!(alloc.m(), layout.m, "allocation cube count != layout");
     let d = layout.d;
     let nb = layout.nb;
-    let m = layout.m as f64;
 
     let ntasks = reduction_tasks(layout.m);
     let task_partials: Vec<Vec<Partial>> = {
         let counts = alloc.counts();
         let offsets = alloc.offsets();
         parallel_chunks(ntasks, opts.threads, |t0, t1| {
-            // Per-worker scratch, shared across this worker's tasks.
-            let map = VegasMap::new(layout, bins, &f.bounds());
-            let mut blk = PointBlock::with_capacity(d, BLOCK_POINTS);
-            let mut vals = vec![0.0f64; BLOCK_POINTS];
-            let mut bidx = vec![0usize; BLOCK_POINTS * d];
-            let mut coords = [0usize; MAX_DIM];
             (t0..t1)
                 .map(|t| {
                     let (cube_lo, cube_hi) = reduction_task_span(layout.m, ntasks, t);
-                    let mut out = Partial {
-                        cube_lo,
-                        integral: 0.0,
-                        variance: 0.0,
-                        contrib: opts.adjust.then(|| vec![0.0; d * nb]),
-                        d_new: Vec::with_capacity(cube_hi - cube_lo),
-                    };
-                    for cube in cube_lo..cube_hi {
-                        layout.cube_coords(cube, &mut coords[..d]);
-                        let n = counts[cube].max(2);
-                        let nf = n as f64;
-                        let mut s1 = 0.0;
-                        let mut s2 = 0.0;
-                        // A cube's (variable-size) sample set is
-                        // processed in block-sized chunks, carrying
-                        // s1/s2 across chunks so the accumulation
-                        // order matches the uniform engine's.
-                        let mut k0 = 0u32;
-                        while k0 < n {
-                            let chunk = (n - k0).min(BLOCK_POINTS as u32);
-                            blk.reset(chunk as usize);
-                            // The cube's sample stream starts at its
-                            // 64-bit prefix-sum offset — no wrapping,
-                            // even past 2^32 total calls.
-                            let base_sidx = offsets[cube] + k0 as u64;
-                            match fill {
-                                FillPath::Simd => map.fill_points(
-                                    &coords[..d],
-                                    base_sidx,
-                                    chunk as usize,
-                                    opts.iteration,
-                                    opts.seed,
-                                    &mut blk,
-                                    0,
-                                    &mut bidx,
-                                ),
-                                FillPath::Scalar => map.fill_points_scalar(
-                                    &coords[..d],
-                                    base_sidx,
-                                    chunk as usize,
-                                    opts.iteration,
-                                    opts.seed,
-                                    &mut blk,
-                                    0,
-                                    &mut bidx,
-                                ),
-                            }
-                            f.eval_batch(&blk, &mut vals[..chunk as usize]);
-                            for j in 0..chunk as usize {
-                                let v = vals[j] * blk.jac(j);
-                                s1 += v;
-                                s2 += v * v;
-                                if let Some(cacc) = out.contrib.as_mut() {
-                                    let v2 = v * v;
-                                    for i in 0..d {
-                                        cacc[bidx[j * d + i]] += v2;
-                                    }
-                                }
-                            }
-                            k0 += chunk;
-                        }
-                        let mean = s1 / nf;
-                        let var = ((s2 / nf - mean * mean).max(0.0)) / (nf - 1.0);
-                        out.integral += mean / m;
-                        out.variance += var / (m * m);
-                        // Variance of the *cube total* — Lepage's d_k
-                        // observation driving the next allocation.
-                        out.d_new.push(var * nf);
-                    }
-                    out
+                    sample_task_stratified(
+                        f, layout, bins, counts, offsets, opts, fill, cube_lo, cube_hi,
+                    )
                 })
                 .collect()
         })

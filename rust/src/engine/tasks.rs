@@ -1,0 +1,325 @@
+//! Task-subrange entry points — the engine surface the shard subsystem
+//! ([`crate::shard`]) is built on.
+//!
+//! The full-pass engines ([`crate::engine::NativeEngine::vsample`],
+//! [`super::stratified::vsample_stratified`], and the streaming twins)
+//! all share one reduction contract: the cube range is partitioned
+//! into the fixed task spans of [`super::reduction_task_span`], every
+//! per-task accumulator starts fresh per task, and the coordinator
+//! folds per-task partials in global task order. That contract means a
+//! *subrange* of tasks can be computed anywhere — another thread,
+//! another worker, another process — and as long as the partials come
+//! back and are folded in the same global task order, the result is
+//! bitwise identical to the single-worker pass.
+//!
+//! This module exposes exactly that: [`vsample_tasks`] /
+//! [`vsample_stratified_tasks`] compute the partials of tasks
+//! `[task_lo, task_hi)` (each task runs the *identical* per-task body
+//! the full pass runs), and [`merge_task_partials`] reproduces the full
+//! pass's fold over any complete, task-ordered collection of partials.
+//! Philox counters are a pure function of the cube index (uniform:
+//! `cube * p + k`; stratified: `offsets[cube] + k`), so disjoint task
+//! spans draw disjoint counter sub-ranges by construction — no counter
+//! is ever drawn twice across shards.
+
+use super::simd::FillPath;
+use super::{reduction_task_span, reduction_tasks, sample_cube_range, VSampleOpts, MAX_DIM};
+use crate::estimator::IterationResult;
+use crate::grid::Bins;
+use crate::integrands::Integrand;
+use crate::strat::Layout;
+use crate::util::threadpool::parallel_chunks;
+
+/// One reduction task's partial, in transportable form: everything the
+/// coordinator needs to reproduce the single-worker fold — and nothing
+/// tied to the process that computed it.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TaskPartial {
+    /// Global reduction-task index (`0..reduction_tasks(m)`).
+    pub task: usize,
+    /// First cube of the task span.
+    pub cube_lo: usize,
+    /// One past the last cube of the task span.
+    pub cube_hi: usize,
+    /// Task partial of the iteration integral estimate.
+    pub integral: f64,
+    /// Task partial of the iteration variance estimate.
+    pub variance: f64,
+    /// Row-major `[d][nb]` bin-contribution histogram partial
+    /// (`Some` iff the pass ran with `opts.adjust`).
+    pub contrib: Option<Vec<f64>>,
+    /// Fresh per-cube variance observations `n_k * Var_k`, indexed
+    /// relative to `cube_lo`. Empty on the uniform path (the uniform
+    /// engine keeps no per-cube allocation state).
+    pub d_new: Vec<f64>,
+}
+
+fn check_task_range(layout: &Layout, bins: &Bins, task_lo: usize, task_hi: usize) -> usize {
+    assert!(layout.d <= MAX_DIM, "d > MAX_DIM");
+    if let Err(e) = layout.validate() {
+        panic!("invalid layout: {e}");
+    }
+    assert_eq!(bins.d(), layout.d);
+    assert_eq!(bins.nb(), layout.nb);
+    let ntasks = reduction_tasks(layout.m);
+    assert!(
+        task_lo <= task_hi && task_hi <= ntasks,
+        "task range [{task_lo}, {task_hi}) outside 0..{ntasks}"
+    );
+    ntasks
+}
+
+/// Uniform-allocation partials of reduction tasks `[task_lo, task_hi)`.
+///
+/// Each task runs the identical per-task body the full pass runs
+/// (fill → `eval_batch` → ordered per-cube reduction), so for any
+/// partition of `0..reduction_tasks(m)` into subranges, concatenating
+/// the returned vectors reproduces the full pass's partials bitwise.
+/// Internal parallelism (`opts.threads`) never changes the numbers.
+pub fn vsample_tasks(
+    f: &dyn Integrand,
+    layout: &Layout,
+    bins: &Bins,
+    opts: &VSampleOpts,
+    fill: FillPath,
+    task_lo: usize,
+    task_hi: usize,
+) -> Vec<TaskPartial> {
+    let ntasks = check_task_range(layout, bins, task_lo, task_hi);
+    let span = task_hi - task_lo;
+    let nested: Vec<Vec<TaskPartial>> = parallel_chunks(span, opts.threads, |u0, u1| {
+        (u0..u1)
+            .map(|u| {
+                let t = task_lo + u;
+                let (cube_lo, cube_hi) = reduction_task_span(layout.m, ntasks, t);
+                let p = sample_cube_range(f, layout, bins, opts, cube_lo, cube_hi, fill);
+                TaskPartial {
+                    task: t,
+                    cube_lo,
+                    cube_hi,
+                    integral: p.integral,
+                    variance: p.variance,
+                    contrib: p.contrib,
+                    d_new: Vec::new(),
+                }
+            })
+            .collect()
+    });
+    nested.into_iter().flatten().collect()
+}
+
+/// Stratified (VEGAS+) partials of reduction tasks `[task_lo, task_hi)`
+/// under an *immutable* allocation view.
+///
+/// Unlike [`super::stratified::vsample_stratified`], this does **not**
+/// fold the fresh `d_new` observations into an allocation — they ride
+/// back inside each [`TaskPartial`] so the coordinator can absorb every
+/// task's slice in global task order (each cube is observed exactly
+/// once, so absorb placement is bitwise-neutral; see
+/// `strat::Allocation::absorb_span`).
+#[allow(clippy::too_many_arguments)]
+pub fn vsample_stratified_tasks(
+    f: &dyn Integrand,
+    layout: &Layout,
+    bins: &Bins,
+    counts: &[u32],
+    offsets: &[u64],
+    opts: &VSampleOpts,
+    fill: FillPath,
+    task_lo: usize,
+    task_hi: usize,
+) -> Vec<TaskPartial> {
+    let ntasks = check_task_range(layout, bins, task_lo, task_hi);
+    assert_eq!(counts.len(), layout.m, "allocation cube count != layout");
+    assert_eq!(offsets.len(), layout.m, "allocation offsets != layout");
+    let span = task_hi - task_lo;
+    let nested: Vec<Vec<TaskPartial>> = parallel_chunks(span, opts.threads, |u0, u1| {
+        (u0..u1)
+            .map(|u| {
+                let t = task_lo + u;
+                let (cube_lo, cube_hi) = reduction_task_span(layout.m, ntasks, t);
+                let p = super::stratified::sample_task_stratified(
+                    f, layout, bins, counts, offsets, opts, fill, cube_lo, cube_hi,
+                );
+                TaskPartial {
+                    task: t,
+                    cube_lo,
+                    cube_hi,
+                    integral: p.integral,
+                    variance: p.variance,
+                    contrib: p.contrib,
+                    d_new: p.d_new,
+                }
+            })
+            .collect()
+    });
+    nested.into_iter().flatten().collect()
+}
+
+/// Fold a complete, task-ordered collection of partials exactly the way
+/// the full-pass engines do: `integral` and `variance` accumulate in
+/// task order, histogram partials add elementwise in task order.
+///
+/// The caller is responsible for task order and completeness (the shard
+/// coordinator verifies both before merging); `d_new` slices are *not*
+/// consumed here — stratified callers absorb them into their
+/// `Allocation` in the same task order.
+pub fn merge_task_partials(
+    d: usize,
+    nb: usize,
+    adjust: bool,
+    partials: &[TaskPartial],
+) -> (IterationResult, Option<Vec<f64>>) {
+    let mut integral = 0.0;
+    let mut variance = 0.0;
+    let mut contrib = adjust.then(|| vec![0.0; d * nb]);
+    for p in partials {
+        integral += p.integral;
+        variance += p.variance;
+        if let (Some(acc), Some(part)) = (contrib.as_mut(), p.contrib.as_ref()) {
+            for (x, y) in acc.iter_mut().zip(part) {
+                *x += y;
+            }
+        }
+    }
+    (
+        IterationResult {
+            integral,
+            variance,
+        },
+        contrib,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::NativeEngine;
+    use crate::integrands::by_name;
+    use crate::strat::Allocation;
+
+    fn opts(seed: u32, it: u32, threads: usize) -> VSampleOpts {
+        VSampleOpts {
+            seed,
+            iteration: it,
+            adjust: true,
+            threads,
+        }
+    }
+
+    #[test]
+    fn subrange_concat_matches_full_pass_bitwise_uniform() {
+        let f = by_name("f4", 5).unwrap();
+        let layout = Layout::compute(5, 4096, 20, 4).unwrap();
+        let bins = Bins::uniform(5, 20);
+        let o = opts(42, 0, 2);
+        let (full, full_contrib) = NativeEngine.vsample(&*f, &layout, &bins, &o);
+
+        let ntasks = reduction_tasks(layout.m);
+        // Three uneven subranges, computed independently.
+        let cuts = [0, ntasks / 3, ntasks / 2 + 1, ntasks];
+        let mut partials = Vec::new();
+        for w in cuts.windows(2) {
+            partials.extend(vsample_tasks(&*f, &layout, &bins, &o, FillPath::Simd, w[0], w[1]));
+        }
+        assert_eq!(partials.len(), ntasks);
+        for (t, p) in partials.iter().enumerate() {
+            assert_eq!(p.task, t);
+            assert!(p.d_new.is_empty());
+        }
+        let (merged, contrib) = merge_task_partials(layout.d, layout.nb, true, &partials);
+        assert_eq!(full.integral.to_bits(), merged.integral.to_bits());
+        assert_eq!(full.variance.to_bits(), merged.variance.to_bits());
+        for (a, b) in full_contrib.unwrap().iter().zip(&contrib.unwrap()) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn subrange_concat_matches_full_pass_bitwise_stratified() {
+        let f = by_name("f3", 4).unwrap();
+        let layout = Layout::compute(4, 4096, 16, 1).unwrap();
+        let bins = Bins::uniform(4, 16);
+        let o = opts(9, 3, 2);
+        // Skewed allocation so counts differ wildly across cubes.
+        let mut reference = Allocation::uniform(&layout);
+        reference.absorb(0, 100.0);
+        for cube in 1..reference.m() {
+            reference.absorb(cube, 0.01);
+        }
+        reference.reallocate(layout.calls(), crate::strat::DEFAULT_BETA);
+        let mut sharded = reference.clone();
+
+        let (full, full_contrib) =
+            super::super::vsample_stratified(&*f, &layout, &bins, &mut reference, &o);
+
+        let ntasks = reduction_tasks(layout.m);
+        let mid = ntasks / 2;
+        let mut partials = vsample_stratified_tasks(
+            &*f,
+            &layout,
+            &bins,
+            sharded.counts(),
+            sharded.offsets(),
+            &o,
+            FillPath::Simd,
+            0,
+            mid,
+        );
+        partials.extend(vsample_stratified_tasks(
+            &*f,
+            &layout,
+            &bins,
+            sharded.counts(),
+            sharded.offsets(),
+            &o,
+            FillPath::Simd,
+            mid,
+            ntasks,
+        ));
+        let (merged, contrib) = merge_task_partials(layout.d, layout.nb, true, &partials);
+        for p in &partials {
+            sharded.absorb_span(p.cube_lo, &p.d_new);
+        }
+        assert_eq!(full.integral.to_bits(), merged.integral.to_bits());
+        assert_eq!(full.variance.to_bits(), merged.variance.to_bits());
+        for (a, b) in full_contrib.unwrap().iter().zip(&contrib.unwrap()) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        for (a, b) in reference.damped().iter().zip(sharded.damped()) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn internal_threads_never_change_partials() {
+        let f = by_name("f5", 4).unwrap();
+        let layout = Layout::compute(4, 2048, 10, 2).unwrap();
+        let bins = Bins::uniform(4, 10);
+        let ntasks = reduction_tasks(layout.m);
+        let a = vsample_tasks(&*f, &layout, &bins, &opts(1, 0, 1), FillPath::Simd, 0, ntasks);
+        let b = vsample_tasks(&*f, &layout, &bins, &opts(1, 0, 7), FillPath::Simd, 0, ntasks);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.integral.to_bits(), y.integral.to_bits());
+            assert_eq!(x.variance.to_bits(), y.variance.to_bits());
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "task range")]
+    fn out_of_range_task_span_panics() {
+        let f = by_name("f3", 3).unwrap();
+        let layout = Layout::compute(3, 512, 8, 1).unwrap();
+        let bins = Bins::uniform(3, 8);
+        let ntasks = reduction_tasks(layout.m);
+        vsample_tasks(
+            &*f,
+            &layout,
+            &bins,
+            &opts(1, 0, 1),
+            FillPath::Simd,
+            0,
+            ntasks + 1,
+        );
+    }
+}

@@ -36,6 +36,10 @@ pub enum Error {
     /// Persistent-store failure (durable checkpoint/result store) —
     /// see `crate::store::StoreError` for the typed detail.
     Store(crate::store::StoreError),
+
+    /// Sharded-execution failure: a shard worker went missing, timed
+    /// out past its retry budget, or returned an inconsistent report.
+    Shard(String),
 }
 
 impl fmt::Display for Error {
@@ -59,6 +63,7 @@ impl fmt::Display for Error {
             ),
             Error::Io(e) => write!(f, "io error: {e}"),
             Error::Store(e) => write!(f, "store error: {e}"),
+            Error::Shard(msg) => write!(f, "shard error: {msg}"),
         }
     }
 }
@@ -105,6 +110,10 @@ mod tests {
             msg: "oops".into(),
         };
         assert!(e.to_string().contains("byte 7"));
+        assert_eq!(
+            Error::Shard("worker 3 missing".into()).to_string(),
+            "shard error: worker 3 missing"
+        );
     }
 
     #[test]

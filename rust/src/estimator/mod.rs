@@ -66,6 +66,25 @@ impl EstimatorState {
         }
         Ok(())
     }
+
+    /// Fold another state's sums into this one, component-wise and in
+    /// place — the merge primitive the shard coordinator builds on.
+    ///
+    /// Merging is exact in a precisely scoped sense (property-tested in
+    /// this module): folding *singleton* states (one push each) into an
+    /// empty state in iteration order performs the identical sequence
+    /// of additions as pushing the iterations sequentially, so the
+    /// result is bitwise equal. Merging the empty state is a bitwise
+    /// no-op. General regrouping of multi-iteration states is NOT
+    /// claimed to be bitwise-neutral (f64 addition does not
+    /// re-associate); the coordinator therefore always merges in the
+    /// fixed task order, never in arrival order.
+    pub fn merge(&mut self, other: &EstimatorState) {
+        self.sum_w += other.sum_w;
+        self.sum_wi += other.sum_wi;
+        self.sum_wi2 += other.sum_wi2;
+        self.n += other.n;
+    }
 }
 
 /// Floor for variances to keep weights finite when an iteration
@@ -321,6 +340,70 @@ mod tests {
         assert_eq!(back.chi2_dof().to_bits(), e.chi2_dof().to_bits());
         assert_eq!(back.iterations(), 3);
         assert_eq!(back.state(), s);
+    }
+
+    /// Property: merging the empty state is a bitwise no-op, from
+    /// either side.
+    #[test]
+    fn merge_identity_is_bitwise_exact() {
+        let mut e = WeightedEstimator::new();
+        e.push(r(1.0 / 3.0, 0.7));
+        e.push(r(-2.5e-7, 1.7e11));
+        let s = e.state();
+
+        let mut left = s;
+        left.merge(&EstimatorState::default());
+        assert_eq!(left, s);
+        assert_eq!(left.sum_w.to_bits(), s.sum_w.to_bits());
+        assert_eq!(left.sum_wi.to_bits(), s.sum_wi.to_bits());
+        assert_eq!(left.sum_wi2.to_bits(), s.sum_wi2.to_bits());
+
+        let mut right = EstimatorState::default();
+        right.merge(&s);
+        assert_eq!(right.sum_w.to_bits(), s.sum_w.to_bits());
+        assert_eq!(right.sum_wi.to_bits(), s.sum_wi.to_bits());
+        assert_eq!(right.sum_wi2.to_bits(), s.sum_wi2.to_bits());
+        assert_eq!(right.n, s.n);
+    }
+
+    /// Property: left-folding singleton states over the fixed 64-task
+    /// partition order performs the exact addition sequence of
+    /// sequential pushes — the coordinator's merge order is
+    /// bitwise-neutral relative to the single-worker estimator.
+    #[test]
+    fn merge_of_ordered_singletons_matches_sequential_pushes_bitwise() {
+        // Awkward values: subnormal-adjacent, huge, negative, repeating
+        // fractions — anything where re-association would show.
+        let iters: Vec<IterationResult> = (0..64)
+            .map(|k| {
+                let kf = k as f64;
+                r(
+                    (kf - 31.5) * (1.0 / 3.0) + 1e-13 * kf.sin(),
+                    (kf + 1.0).powi(3) * 0.7e-5,
+                )
+            })
+            .collect();
+
+        let mut sequential = WeightedEstimator::new();
+        for &it in &iters {
+            sequential.push(it);
+        }
+
+        let mut merged = EstimatorState::default();
+        for &it in &iters {
+            let mut single = WeightedEstimator::new();
+            single.push(it);
+            merged.merge(&single.state());
+        }
+
+        let want = sequential.state();
+        assert_eq!(merged.sum_w.to_bits(), want.sum_w.to_bits());
+        assert_eq!(merged.sum_wi.to_bits(), want.sum_wi.to_bits());
+        assert_eq!(merged.sum_wi2.to_bits(), want.sum_wi2.to_bits());
+        assert_eq!(merged.n, want.n);
+        let back = WeightedEstimator::from_state(merged);
+        assert_eq!(back.integral().to_bits(), sequential.integral().to_bits());
+        assert_eq!(back.sigma().to_bits(), sequential.sigma().to_bits());
     }
 
     #[test]

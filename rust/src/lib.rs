@@ -166,6 +166,7 @@ pub mod integrands;
 pub mod report;
 pub mod rng;
 pub mod runtime;
+pub mod shard;
 pub mod store;
 pub mod strat;
 pub mod util;
@@ -188,6 +189,10 @@ pub mod prelude {
     pub use crate::estimator::{Convergence, EstimatorState, IterationResult, WeightedEstimator};
     pub use crate::grid::{Bins, GridMode};
     pub use crate::integrands::{Integrand, IntegrandRef};
+    pub use crate::shard::{
+        run_spool_worker, spool_close, ShardPlan, ShardStats, ShardedBackend, SpoolOptions,
+        SpoolTransport,
+    };
     pub use crate::store::{JobManifest, ResultManifest, ResultNumbers, ServiceStore, StoreError};
     pub use crate::strat::{AllocStats, Layout, Sampling};
 }
@@ -215,3 +220,7 @@ mod invariants_doctests {}
 #[cfg(doctest)]
 #[doc = include_str!("../../docs/service.md")]
 mod service_doctests {}
+
+#[cfg(doctest)]
+#[doc = include_str!("../../docs/sharding.md")]
+mod sharding_doctests {}

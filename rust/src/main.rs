@@ -2,17 +2,22 @@
 //! artifact runtime, native engine, and baselines.
 //!
 //! Subcommands:
-//!   integrate   run one integration job (native or pjrt backend)
-//!   serve       run a batch of jobs through the scheduler, print metrics;
-//!               with --store, run the durable spool daemon instead
-//!   artifacts   list artifacts in the manifest
-//!   selftest    quick native-vs-pjrt cross-check on one artifact
+//!   integrate     run one integration job (native or pjrt backend)
+//!   serve         run a batch of jobs through the scheduler, print metrics;
+//!                 with --store, run the durable spool daemon instead
+//!   shard-worker  serve shard tasks from a spool directory (pair with
+//!                 `integrate --shards N --shard-dir <dir>`)
+//!   artifacts     list artifacts in the manifest
+//!   selftest      quick native-vs-pjrt cross-check on one artifact
 //!
 //! Examples:
 //!   mcubes integrate --integrand f4 --dim 5 --calls 131072 --tau 1e-3
 //!   mcubes integrate --backend pjrt --integrand f4 --dim 5
 //!   mcubes integrate --integrand f4 --dim 5 --grid-out /tmp/f4.grid.json
 //!   mcubes integrate --integrand f4 --dim 5 --grid-in /tmp/f4.grid.json --ita 0
+//!   mcubes integrate --integrand f4 --dim 8 --shards 8
+//!   mcubes shard-worker --dir /tmp/shard-spool &
+//!   mcubes integrate --integrand f4 --dim 8 --shards 4 --shard-dir /tmp/shard-spool
 //!   mcubes serve --store /var/lib/mcubes --demo-jobs 3 --once
 //!   mcubes artifacts
 //!   mcubes selftest
@@ -38,11 +43,12 @@ fn main() {
     let code = match sub {
         "integrate" => cmd_integrate(rest),
         "serve" => cmd_serve(rest),
+        "shard-worker" => cmd_shard_worker(rest),
         "artifacts" => cmd_artifacts(rest),
         "selftest" => cmd_selftest(rest),
         _ => {
             eprintln!(
-                "usage: mcubes <integrate|serve|artifacts|selftest> [options]\n\
+                "usage: mcubes <integrate|serve|shard-worker|artifacts|selftest> [options]\n\
                  run `mcubes <subcommand> --help` for options"
             );
             if sub == "help" {
@@ -67,6 +73,12 @@ fn integrate_cli() -> Cli {
         .opt("seed", "42", "rng seed")
         .opt("backend", "native", "native | pjrt")
         .opt("artifacts", DEFAULT_ARTIFACT_DIR, "artifacts directory")
+        .opt("shards", "1", "shard workers per iteration (1 = single worker)")
+        .opt_opt(
+            "shard-dir",
+            "shard spool directory: scatter tasks for external \
+             `mcubes shard-worker` processes",
+        )
         .opt_opt("grid-in", "warm-start grid file (from --grid-out)")
         .opt_opt("grid-out", "save the adapted grid to this file")
         .flag("onedim", "use the m-Cubes1D shared-axis grid")
@@ -96,11 +108,16 @@ fn cmd_integrate(args: &[String]) -> i32 {
                 p.get_usize("skip")?,
             ))
             .seed(p.get_u32("seed")?)
+            .shards(p.get_usize("shards")?)
             .grid_mode(if p.is_set("onedim") {
                 GridMode::Shared1D
             } else {
                 GridMode::PerAxis
             });
+        let shard_dir = p.get("shard-dir").map(str::to_string);
+        if let Some(dir) = &shard_dir {
+            intg = intg.shard_dir(dir.clone());
+        }
         if p.get("backend").unwrap() == "pjrt" {
             intg = intg.backend(BackendSpec::Pjrt {
                 artifacts_dir: p.get("artifacts").unwrap().to_string(),
@@ -114,6 +131,11 @@ fn cmd_integrate(args: &[String]) -> i32 {
         }
 
         let out = intg.run().map_err(|e| e.to_string())?;
+        if let Some(dir) = &shard_dir {
+            // Drop the stop marker so attached shard workers exit
+            // instead of polling an idle spool forever.
+            mcubes::shard::spool_close(std::path::Path::new(dir)).map_err(|e| e.to_string())?;
+        }
         if let Some(path) = p.get("grid-out") {
             intg.export_grid()
                 .expect("grid present after a successful run")
@@ -198,6 +220,7 @@ fn cmd_serve(args: &[String]) -> i32 {
         )
         .opt("poll-ms", "500", "daemon: spool poll interval")
         .opt("threads", "1", "daemon: worker threads per job")
+        .opt("shards", "1", "daemon: shard workers per job (1 = single worker)")
         .opt("demo-jobs", "0", "daemon: submit N deterministic demo jobs before serving")
         .opt("demo-calls", "262144", "daemon: per-iteration budget of the demo jobs")
         .flag("once", "daemon: drain the spool once and exit instead of watching");
@@ -298,11 +321,13 @@ fn cmd_serve_daemon(root: &str, p: &mcubes::util::cli::Parsed) -> i32 {
     let run = || -> Result<i32, String> {
         let poll_ms = p.get_usize("poll-ms")?.max(1);
         let threads = p.get_usize("threads")?.max(1);
+        let shards = p.get_usize("shards")?.max(1);
         let demo_jobs = p.get_usize("demo-jobs")?;
         let demo_calls = p.get_usize("demo-calls")?;
         let mut daemon = Daemon::open(root)
             .map_err(|e| e.to_string())?
-            .with_threads(threads);
+            .with_threads(threads)
+            .with_shards(shards);
         for i in 0..demo_jobs {
             let job = demo_job(i, demo_calls);
             // Skip jobs that already have a published result so a
@@ -323,7 +348,7 @@ fn cmd_serve_daemon(root: &str, p: &mcubes::util::cli::Parsed) -> i32 {
             }
         }
         println!(
-            "serving store {root} (threads={threads}, poll={poll_ms}ms, once={})",
+            "serving store {root} (threads={threads}, shards={shards}, poll={poll_ms}ms, once={})",
             p.is_set("once")
         );
         loop {
@@ -367,6 +392,63 @@ fn cmd_serve_daemon(root: &str, p: &mcubes::util::cli::Parsed) -> i32 {
             }
             std::thread::sleep(std::time::Duration::from_millis(poll_ms as u64));
         }
+    };
+    match run() {
+        Ok(c) => c,
+        Err(msg) => {
+            eprintln!("error: {msg}");
+            1
+        }
+    }
+}
+
+/// `mcubes shard-worker --dir <spool>`: serve shard tasks scattered by
+/// a sharded coordinator (`integrate --shards N --shard-dir <dir>`).
+/// Polls the spool, answers each sealed task file with a sealed
+/// report (idempotently — tasks that already have a report are
+/// skipped), and exits once the coordinator drops the stop marker, or
+/// after `--idle-ms` with no work.
+fn cmd_shard_worker(args: &[String]) -> i32 {
+    let cli = Cli::new(
+        "mcubes shard-worker",
+        "serve shard tasks from a spool directory",
+    )
+    .opt_opt("dir", "spool directory (required; shared with the coordinator)")
+    .opt("threads", "1", "worker threads per task")
+    .opt("poll-ms", "5", "spool poll interval")
+    .opt(
+        "idle-ms",
+        "0",
+        "exit after this long with no work (0 = wait for the stop marker)",
+    );
+    let p = match cli.parse(args) {
+        Ok(p) => p,
+        Err(msg) => {
+            eprintln!("{msg}");
+            return 2;
+        }
+    };
+    let run = || -> Result<i32, String> {
+        let dir = p
+            .get("dir")
+            .ok_or("missing required option --dir <spool directory>")?
+            .to_string();
+        let threads = p.get_usize("threads")?.max(1);
+        let poll = std::time::Duration::from_millis(p.get_usize("poll-ms")?.max(1) as u64);
+        let idle = p.get_usize("idle-ms")?;
+        let max_idle = if idle == 0 {
+            None
+        } else {
+            Some(std::time::Duration::from_millis(idle as u64))
+        };
+        let out =
+            mcubes::shard::run_spool_worker(std::path::Path::new(&dir), threads, poll, max_idle)
+                .map_err(|e| e.to_string())?;
+        println!(
+            "shard worker done: processed={} skipped={}",
+            out.processed, out.skipped
+        );
+        Ok(0)
     };
     match run() {
         Ok(c) => c,

@@ -1,0 +1,443 @@
+//! The sharded execution backend: one [`VSampleBackend`] that splits
+//! every iteration across N shard workers and merges their partials
+//! back bitwise.
+//!
+//! Both transports produce the same bytes:
+//!
+//! * **In-process** (default): the shard spans run on a scoped thread
+//!   pool inside this process — one worker per span.
+//! * **Spool** ([`ShardedBackend::with_spool`]): spans are scattered
+//!   as sealed task files and gathered as sealed reports, so external
+//!   `mcubes shard-worker` processes can join; missing or corrupt
+//!   reports take the coordinator's straggler path.
+//!
+//! Determinism: every shard draws its own Philox counter sub-range
+//! (disjoint by construction — see [`super::ShardPlan`]), per-task
+//! partials are bitwise independent of who computed them, and the
+//! merge folds them in global task order. The N-shard result is
+//! therefore bitwise equal to the single-worker pass on both sampling
+//! modes; `rust/tests/shard_equivalence.rs` pins this.
+
+// lint:allow(MC003, merge-time accounting only — no time value ever feeds the sample stream)
+use std::time::Instant;
+
+use super::coordinator::{ReportShape, SpoolTransport};
+use super::plan::{ShardPlan, ShardSpan};
+use super::report::ShardTask;
+use super::worker::run_span;
+use super::ShardStats;
+use crate::api::{GridState, StratSnapshot};
+use crate::coordinator::VSampleBackend;
+use crate::engine::{merge_task_partials, TaskPartial, VSampleOpts};
+use crate::error::{Error, Result};
+use crate::estimator::IterationResult;
+use crate::grid::Bins;
+use crate::integrands::IntegrandRef;
+use crate::strat::{AllocStats, Allocation, Bounds, Layout, Sampling};
+use crate::util::threadpool::parallel_chunks;
+use std::cell::RefCell;
+
+/// Mutable per-run state: the live VEGAS+ allocation (when adaptive),
+/// the stats snapshot of the iteration that just ran, and the
+/// cumulative shard accounting.
+struct ShardCell {
+    alloc: Option<Allocation>,
+    last: Option<AllocStats>,
+    stats: ShardStats,
+}
+
+/// Sharded twin of `NativeBackend`/`StratifiedBackend`: same
+/// [`VSampleBackend`] contract, N-worker execution.
+pub struct ShardedBackend {
+    integrand: IntegrandRef,
+    layout: Layout,
+    shards: usize,
+    threads: usize,
+    /// `Some(beta)` for VEGAS+ adaptive stratification.
+    beta: Option<f64>,
+    /// Per-iteration call budget (`layout.calls()`, matching the
+    /// single-worker backends so `calls_used` accounting is
+    /// identical).
+    budget: usize,
+    spool: Option<SpoolTransport>,
+    cell: RefCell<ShardCell>,
+}
+
+impl ShardedBackend {
+    /// Build a sharded backend for `shards` workers. For
+    /// [`Sampling::VegasPlus`], `resume` restores a matching-layout
+    /// allocation exactly as `StratifiedBackend::new` does.
+    pub fn new(
+        integrand: IntegrandRef,
+        layout: Layout,
+        shards: usize,
+        threads: usize,
+        sampling: Sampling,
+        resume: Option<&StratSnapshot>,
+    ) -> Result<ShardedBackend> {
+        let beta = match sampling {
+            Sampling::Uniform => None,
+            Sampling::VegasPlus { beta } => Some(beta),
+        };
+        let alloc = match beta {
+            Some(b) => Some(match resume {
+                Some(s) if s.counts.len() == layout.m => {
+                    let mut a = Allocation::from_parts(s.counts.clone(), s.damped.clone())?;
+                    a.reallocate(layout.calls(), b);
+                    a
+                }
+                _ => Allocation::uniform(&layout),
+            }),
+            None => None,
+        };
+        Ok(ShardedBackend {
+            integrand,
+            layout,
+            shards,
+            threads,
+            beta,
+            budget: layout.calls(),
+            spool: None,
+            cell: RefCell::new(ShardCell {
+                alloc,
+                last: None,
+                stats: ShardStats::default(),
+            }),
+        })
+    }
+
+    /// Route iterations through a spool directory so external worker
+    /// processes can compute spans (chainable).
+    #[must_use]
+    pub fn with_spool(mut self, spool: SpoolTransport) -> Self {
+        self.spool = Some(spool);
+        self
+    }
+
+    /// The shard plan the next iteration will scatter (pure function
+    /// of the layout and the live allocation).
+    pub fn plan(&self) -> ShardPlan {
+        let cell = self.cell.borrow();
+        match &cell.alloc {
+            Some(a) => ShardPlan::stratified(&self.layout, a.counts(), a.offsets())
+                .shards(self.shards),
+            None => ShardPlan::uniform(&self.layout, self.shards),
+        }
+    }
+
+    /// In-process fan-out: one scoped worker per span, results in
+    /// span (= global task) order.
+    fn run_in_process(
+        &self,
+        plan: &ShardPlan,
+        bins: &Bins,
+        alloc: Option<&Allocation>,
+        opts: &VSampleOpts,
+    ) -> Vec<TaskPartial> {
+        let spans = plan.spans();
+        // Bind the Sync captures explicitly: the closure must not
+        // capture `self` (the RefCell makes it !Sync).
+        let f: &dyn crate::integrands::Integrand = &*self.integrand;
+        let layout = &self.layout;
+        let per_shard: Vec<Vec<Vec<TaskPartial>>> =
+            parallel_chunks(spans.len(), spans.len(), |s0, s1| {
+                (s0..s1)
+                    .map(|s| {
+                        run_span(
+                            f,
+                            layout,
+                            bins,
+                            alloc,
+                            opts,
+                            spans[s].task_lo,
+                            spans[s].task_hi,
+                        )
+                    })
+                    .collect()
+            });
+        per_shard.into_iter().flatten().flatten().collect()
+    }
+
+    /// Spool fan-out: scatter sealed tasks, gather sealed reports
+    /// (straggler policy inside), partials in global task order.
+    fn run_spooled(
+        &self,
+        spool: &SpoolTransport,
+        plan: &ShardPlan,
+        bins: &Bins,
+        alloc: Option<&Allocation>,
+        opts: &VSampleOpts,
+        stats: &mut ShardStats,
+    ) -> Result<Vec<TaskPartial>> {
+        let grid = match alloc {
+            Some(a) => GridState::from_bins(bins.clone()).with_strat(StratSnapshot {
+                beta: self.beta.unwrap_or(0.0),
+                counts: a.counts().to_vec(),
+                damped: a.damped().to_vec(),
+            }),
+            None => GridState::from_bins(bins.clone()),
+        };
+        let tasks: Vec<ShardTask> = plan
+            .spans()
+            .iter()
+            .map(|sp| ShardTask {
+                integrand: self.integrand.name().to_string(),
+                layout: self.layout,
+                grid: grid.clone(),
+                seed: opts.seed,
+                iteration: opts.iteration,
+                adjust: opts.adjust,
+                shard: sp.shard,
+                task_lo: sp.task_lo,
+                task_hi: sp.task_hi,
+            })
+            .collect();
+        spool.scatter(&tasks)?;
+        let shape = ReportShape {
+            contrib_len: if opts.adjust {
+                Some(self.layout.d * self.layout.nb)
+            } else {
+                None
+            },
+            stratified: alloc.is_some(),
+        };
+        // Bind the Sync captures explicitly: the closure must not
+        // capture `self` (the RefCell makes it !Sync).
+        let f: &dyn crate::integrands::Integrand = &*self.integrand;
+        let layout = &self.layout;
+        let fallback =
+            |sp: &ShardSpan| run_span(f, layout, bins, alloc, opts, sp.task_lo, sp.task_hi);
+        let partials = spool.gather(plan, &self.layout, opts.iteration, &shape, &fallback, stats)?;
+        spool.cleanup(plan, opts.iteration);
+        Ok(partials)
+    }
+}
+
+impl VSampleBackend for ShardedBackend {
+    fn layout(&self) -> Layout {
+        self.layout
+    }
+
+    fn bounds(&self) -> Bounds {
+        self.integrand.bounds()
+    }
+
+    fn name(&self) -> &'static str {
+        if self.beta.is_some() {
+            "native-sharded-vegas+"
+        } else {
+            "native-sharded"
+        }
+    }
+
+    fn run(
+        &self,
+        bins: &Bins,
+        seed: u32,
+        iteration: u32,
+        adjust: bool,
+    ) -> Result<(IterationResult, Option<Vec<f64>>)> {
+        let mut cell = self.cell.borrow_mut();
+        let ShardCell { alloc, last, stats } = &mut *cell;
+        if let Some(a) = alloc.as_ref() {
+            *last = Some(a.stats());
+        }
+        let plan = match alloc.as_ref() {
+            Some(a) => {
+                ShardPlan::stratified(&self.layout, a.counts(), a.offsets()).shards(self.shards)
+            }
+            None => ShardPlan::uniform(&self.layout, self.shards),
+        };
+        // Give each in-process span worker an equal slice of the
+        // thread budget (bitwise-neutral either way).
+        let opts = VSampleOpts {
+            seed,
+            iteration,
+            adjust,
+            threads: (self.threads / plan.nshards()).max(1),
+        };
+        let partials = match &self.spool {
+            Some(spool) => {
+                self.run_spooled(spool, &plan, bins, alloc.as_ref(), &opts, stats)?
+            }
+            None => self.run_in_process(&plan, bins, alloc.as_ref(), &opts),
+        };
+        // The merge refuses to fold anything but the complete,
+        // in-order task partition (shard bugs must not become silent
+        // numeric drift).
+        if partials.len() != plan.ntasks()
+            || partials.iter().enumerate().any(|(i, p)| p.task != i)
+        {
+            return Err(Error::Shard(format!(
+                "gathered {} partials for {} tasks (or out of order)",
+                partials.len(),
+                plan.ntasks()
+            )));
+        }
+        let merge_start = Instant::now();
+        let out = merge_task_partials(self.layout.d, self.layout.nb, adjust, &partials);
+        if let Some(a) = alloc.as_mut() {
+            // Absorb in global task order — the same per-cube absorb
+            // stream as the single-worker stratified pass.
+            for p in &partials {
+                a.absorb_span(p.cube_lo, &p.d_new);
+            }
+            if let Some(b) = self.beta {
+                a.reallocate(self.budget, b);
+            }
+        }
+        stats.merge_ms += merge_start.elapsed().as_secs_f64() * 1e3;
+        stats.shards = stats.shards.max(plan.nshards());
+        Ok(out)
+    }
+
+    fn alloc_stats(&self) -> Option<AllocStats> {
+        self.cell.borrow().last
+    }
+
+    fn strat_export(&self) -> Option<StratSnapshot> {
+        let cell = self.cell.borrow();
+        match (&cell.alloc, self.beta) {
+            (Some(a), Some(beta)) => Some(StratSnapshot {
+                beta,
+                counts: a.counts().to_vec(),
+                damped: a.damped().to_vec(),
+            }),
+            _ => None,
+        }
+    }
+
+    fn shard_stats(&self) -> Option<ShardStats> {
+        Some(self.cell.borrow().stats)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{NativeBackend, StratifiedBackend};
+    use crate::integrands::by_name;
+    use crate::strat::DEFAULT_BETA;
+
+    fn bitwise_eq(a: &(IterationResult, Option<Vec<f64>>), b: &(IterationResult, Option<Vec<f64>>)) {
+        assert_eq!(a.0.integral.to_bits(), b.0.integral.to_bits());
+        assert_eq!(a.0.variance.to_bits(), b.0.variance.to_bits());
+        match (&a.1, &b.1) {
+            (Some(x), Some(y)) => {
+                assert_eq!(x.len(), y.len());
+                for (u, v) in x.iter().zip(y.iter()) {
+                    assert_eq!(u.to_bits(), v.to_bits());
+                }
+            }
+            (None, None) => {}
+            _ => panic!("contrib presence mismatch"),
+        }
+    }
+
+    #[test]
+    fn sharded_uniform_matches_native_backend_bitwise() {
+        let layout = Layout::compute(4, 4096, 16, 1).unwrap();
+        let f = by_name("f4", 4).unwrap();
+        let bins = Bins::uniform(4, 16);
+        let reference = NativeBackend::new(f.clone(), layout, 3);
+        let sharded =
+            ShardedBackend::new(f, layout, 8, 4, Sampling::Uniform, None).unwrap();
+        for it in 0..3u32 {
+            let want = reference.run(&bins, 17, it, true).unwrap();
+            let got = sharded.run(&bins, 17, it, true).unwrap();
+            bitwise_eq(&got, &want);
+        }
+        let stats = sharded.shard_stats().unwrap();
+        assert_eq!(stats.shards, 8);
+        assert_eq!(stats.straggler_retries, 0);
+        assert!(sharded.strat_export().is_none());
+    }
+
+    #[test]
+    fn sharded_vegas_plus_matches_stratified_backend_bitwise() {
+        let layout = Layout::compute(5, 4096, 20, 4).unwrap();
+        let f = by_name("f5", 5).unwrap();
+        let bins = Bins::uniform(5, 20);
+        let reference =
+            StratifiedBackend::new(f.clone(), layout, 2, DEFAULT_BETA, None).unwrap();
+        let sharded = ShardedBackend::new(
+            f,
+            layout,
+            8,
+            8,
+            Sampling::VegasPlus { beta: DEFAULT_BETA },
+            None,
+        )
+        .unwrap();
+        // Multiple adaptive iterations: the allocation evolves and the
+        // plans diverge from uniform — the merge must still track the
+        // single-worker stream bitwise.
+        for it in 0..4u32 {
+            let want = reference.run(&bins, 99, it, true).unwrap();
+            let got = sharded.run(&bins, 99, it, true).unwrap();
+            bitwise_eq(&got, &want);
+            // Allocation state stays in lockstep, iteration by
+            // iteration.
+            let (se, re) = (sharded.strat_export().unwrap(), reference.strat_export().unwrap());
+            assert_eq!(se.counts, re.counts);
+            for (x, y) in se.damped.iter().zip(re.damped.iter()) {
+                assert_eq!(x.to_bits(), y.to_bits());
+            }
+        }
+        assert_eq!(
+            sharded.alloc_stats().map(|s| s.total),
+            reference.alloc_stats().map(|s| s.total)
+        );
+    }
+
+    #[test]
+    fn shard_count_does_not_change_the_bits() {
+        let layout = Layout::compute(4, 2048, 10, 2).unwrap();
+        let f = by_name("f2", 4).unwrap();
+        let bins = Bins::uniform(4, 10);
+        let one = ShardedBackend::new(f.clone(), layout, 1, 1, Sampling::Uniform, None).unwrap();
+        let want = one.run(&bins, 4, 0, false).unwrap();
+        for shards in [2, 3, 5, 64, 1000] {
+            let b =
+                ShardedBackend::new(f.clone(), layout, shards, 2, Sampling::Uniform, None)
+                    .unwrap();
+            let got = b.run(&bins, 4, 0, false).unwrap();
+            bitwise_eq(&got, &want);
+        }
+    }
+
+    #[test]
+    fn resume_restores_the_allocation_like_the_stratified_backend() {
+        let layout = Layout::compute(3, 2048, 12, 1).unwrap();
+        let f = by_name("f3", 3).unwrap();
+        let bins = Bins::uniform(3, 12);
+        // Run two iterations, export, resume both backend kinds.
+        let donor = ShardedBackend::new(
+            f.clone(),
+            layout,
+            4,
+            2,
+            Sampling::VegasPlus { beta: 0.5 },
+            None,
+        )
+        .unwrap();
+        for it in 0..2u32 {
+            donor.run(&bins, 31, it, true).unwrap();
+        }
+        let snap = donor.strat_export().unwrap();
+        let resumed_ref =
+            StratifiedBackend::new(f.clone(), layout, 2, 0.5, Some(&snap)).unwrap();
+        let resumed_sharded = ShardedBackend::new(
+            f,
+            layout,
+            4,
+            2,
+            Sampling::VegasPlus { beta: 0.5 },
+            Some(&snap),
+        )
+        .unwrap();
+        let want = resumed_ref.run(&bins, 31, 2, true).unwrap();
+        let got = resumed_sharded.run(&bins, 31, 2, true).unwrap();
+        bitwise_eq(&got, &want);
+    }
+}

@@ -1,0 +1,465 @@
+//! Shard coordinator: scatter spans, gather sealed reports, survive
+//! stragglers.
+//!
+//! The coordinator side of the spool (process) transport. One
+//! iteration proceeds as:
+//!
+//! 1. **Scatter** — write one sealed [`ShardTask`] per shard span into
+//!    `<dir>/tasks/` (atomic rename; workers never observe a torn
+//!    task).
+//! 2. **Gather** — poll `<dir>/reports/` for each shard's sealed
+//!    [`ShardReport`]. A corrupt or inconsistent report is deleted and
+//!    counted against that shard's retry budget (the file's absence
+//!    re-opens the task for any live worker). A shard that is still
+//!    missing at the deadline — or that exhausts its retry budget — is
+//!    recomputed by a fresh in-process worker when `local_fallback` is
+//!    on, and surfaces as a typed [`Error::Shard`] when it is off.
+//!    Either way the coordinator never hangs and never merges a
+//!    partial iteration.
+//! 3. **Cleanup** — the iteration's task + report files are removed
+//!    after a successful merge, bounding spool growth.
+//!
+//! Determinism: a recomputed span is bitwise identical to what the
+//! missing worker would have reported (same plan, same Philox counter
+//! sub-range), so retries and fallbacks never change the merged
+//! result — only `straggler_retries` in [`super::ShardStats`].
+
+// lint:allow(MC003, gather deadline/poll cadence only — no time value ever feeds the sample stream)
+use std::time::{Duration, Instant};
+
+use super::plan::{ShardPlan, ShardSpan};
+use super::report::{ShardReport, ShardTask};
+use super::worker::{reports_dir, stop_path, tasks_dir};
+use super::ShardStats;
+use crate::engine::TaskPartial;
+use crate::error::{Error, Result};
+use std::path::{Path, PathBuf};
+
+/// Spool-transport tuning knobs.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SpoolOptions {
+    /// Per-iteration gather deadline; shards still missing when it
+    /// expires take the straggler path.
+    pub timeout: Duration,
+    /// Sleep between report-directory sweeps.
+    pub poll: Duration,
+    /// Corrupt/inconsistent reports tolerated per shard per iteration
+    /// before the shard takes the straggler path.
+    pub max_retries: usize,
+    /// Recompute missing spans with a fresh in-process worker
+    /// (`true`, the default) instead of failing the iteration with
+    /// [`Error::Shard`] (`false` — for tests and strict deployments).
+    pub local_fallback: bool,
+}
+
+impl Default for SpoolOptions {
+    fn default() -> SpoolOptions {
+        SpoolOptions {
+            timeout: Duration::from_secs(30),
+            poll: Duration::from_millis(10),
+            max_retries: 2,
+            local_fallback: true,
+        }
+    }
+}
+
+/// What a well-formed report must contain, so shape violations are
+/// caught before they can silently truncate the merge's zip folds.
+pub(crate) struct ReportShape {
+    /// `Some(d * nb)` when the pass accumulates the adjust histogram.
+    pub contrib_len: Option<usize>,
+    /// Whether per-cube damped observations are expected (VEGAS+).
+    pub stratified: bool,
+}
+
+/// Canonical spool file name of (iteration, shard) — shared by
+/// coordinator, workers, and the CI outbox comparison.
+pub fn spool_file_name(iteration: u32, shard: usize) -> String {
+    format!("it{iteration:08}-s{shard:03}.json")
+}
+
+/// Write the stop marker: spool workers exit once it exists and every
+/// visible task has a report.
+pub fn spool_close(dir: &Path) -> Result<()> {
+    std::fs::create_dir_all(dir)?;
+    std::fs::write(stop_path(dir), b"stop\n")?;
+    Ok(())
+}
+
+/// Coordinator handle on one spool directory.
+pub struct SpoolTransport {
+    dir: PathBuf,
+    opts: SpoolOptions,
+}
+
+impl SpoolTransport {
+    /// Open (creating `tasks/` + `reports/` as needed) a spool rooted
+    /// at `dir`, and clear any stale stop marker so workers launched
+    /// afterwards stay alive.
+    pub fn open(dir: impl AsRef<Path>, opts: SpoolOptions) -> Result<SpoolTransport> {
+        let dir = dir.as_ref().to_path_buf();
+        std::fs::create_dir_all(tasks_dir(&dir))?;
+        std::fs::create_dir_all(reports_dir(&dir))?;
+        let _ = std::fs::remove_file(stop_path(&dir));
+        Ok(SpoolTransport { dir, opts })
+    }
+
+    /// The spool root.
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// The transport's tuning knobs.
+    pub fn options(&self) -> SpoolOptions {
+        self.opts
+    }
+
+    /// Scatter one iteration's work orders.
+    pub(crate) fn scatter(&self, tasks: &[ShardTask]) -> Result<()> {
+        for t in tasks {
+            super::report::check_spool_layout(&t.layout)?;
+            // Fail fast on integrands a fresh worker process cannot
+            // resolve (closure integrands have no registry name).
+            crate::integrands::by_name(&t.integrand, t.layout.d).map_err(|_| {
+                Error::Shard(format!(
+                    "integrand `{}` is not registry-resolvable; the spool transport \
+                     needs `by_name` (use in-process sharding for closures)",
+                    t.integrand
+                ))
+            })?;
+            t.save(&tasks_dir(&self.dir).join(spool_file_name(t.iteration, t.shard)))?;
+        }
+        Ok(())
+    }
+
+    /// Gather every shard's report for `iteration`, applying the
+    /// corruption/straggler policy. `fallback` recomputes one span
+    /// in-process; `shape` pins the expected report geometry. Returns
+    /// the full iteration's partials in global task order.
+    pub(crate) fn gather(
+        &self,
+        plan: &ShardPlan,
+        layout: &crate::strat::Layout,
+        iteration: u32,
+        shape: &ReportShape,
+        fallback: &(dyn Fn(&ShardSpan) -> Vec<TaskPartial> + Sync),
+        stats: &mut ShardStats,
+    ) -> Result<Vec<TaskPartial>> {
+        let reports = reports_dir(&self.dir);
+        let nshards = plan.nshards();
+        let mut collected: Vec<Option<Vec<TaskPartial>>> = Vec::new();
+        collected.resize_with(nshards, || None);
+        let mut retries = vec![0usize; nshards];
+        let deadline = Instant::now() + self.opts.timeout;
+        loop {
+            let mut missing = 0usize;
+            for span in plan.spans() {
+                if collected[span.shard].is_some() {
+                    continue;
+                }
+                let path = reports.join(spool_file_name(iteration, span.shard));
+                match ShardReport::load(&path) {
+                    Ok(Some(rep)) => match check_report(&rep, span, iteration, layout, shape) {
+                        Ok(()) => collected[span.shard] = Some(rep.into_partials(layout)),
+                        Err(detail) => {
+                            // Inconsistent ≙ corrupt: drop the file so a
+                            // live worker recomputes it, burn one retry.
+                            let _ = std::fs::remove_file(&path);
+                            retries[span.shard] += 1;
+                            if retries[span.shard] > self.opts.max_retries {
+                                self.straggle(span, &detail, fallback, stats, &mut collected)?;
+                            } else {
+                                missing += 1;
+                            }
+                        }
+                    },
+                    Ok(None) => missing += 1,
+                    Err(_) => {
+                        // Torn mid-write or tampered: same policy as an
+                        // inconsistent report.
+                        let _ = std::fs::remove_file(&path);
+                        retries[span.shard] += 1;
+                        if retries[span.shard] > self.opts.max_retries {
+                            self.straggle(span, "corrupt report", fallback, stats, &mut collected)?;
+                        } else {
+                            missing += 1;
+                        }
+                    }
+                }
+            }
+            if missing == 0 && collected.iter().all(Option::is_some) {
+                break;
+            }
+            if Instant::now() >= deadline {
+                for span in plan.spans() {
+                    if collected[span.shard].is_none() {
+                        self.straggle(
+                            span,
+                            "no report before the deadline",
+                            fallback,
+                            stats,
+                            &mut collected,
+                        )?;
+                    }
+                }
+                break;
+            }
+            std::thread::sleep(self.opts.poll);
+        }
+        let mut out = Vec::with_capacity(plan.ntasks());
+        for got in collected {
+            match got {
+                Some(partials) => out.extend(partials),
+                None => return Err(Error::Shard("gather ended with a missing shard".into())),
+            }
+        }
+        Ok(out)
+    }
+
+    /// Straggler path for one span: recompute in-process when allowed,
+    /// typed failure otherwise.
+    fn straggle(
+        &self,
+        span: &ShardSpan,
+        why: &str,
+        fallback: &(dyn Fn(&ShardSpan) -> Vec<TaskPartial> + Sync),
+        stats: &mut ShardStats,
+        collected: &mut [Option<Vec<TaskPartial>>],
+    ) -> Result<()> {
+        if !self.opts.local_fallback {
+            return Err(Error::Shard(format!(
+                "shard {} failed ({why}) and local fallback is disabled",
+                span.shard
+            )));
+        }
+        stats.straggler_retries += 1;
+        collected[span.shard] = Some(fallback(span));
+        Ok(())
+    }
+
+    /// Remove one iteration's task + report files after a successful
+    /// merge (failures are ignored: leftovers are harmless and the
+    /// next open sweeps nothing — names are iteration-scoped).
+    pub(crate) fn cleanup(&self, plan: &ShardPlan, iteration: u32) {
+        for span in plan.spans() {
+            let name = spool_file_name(iteration, span.shard);
+            let _ = std::fs::remove_file(tasks_dir(&self.dir).join(&name));
+            let _ = std::fs::remove_file(reports_dir(&self.dir).join(&name));
+        }
+    }
+}
+
+/// Validate one report against its span and the expected geometry.
+fn check_report(
+    rep: &ShardReport,
+    span: &ShardSpan,
+    iteration: u32,
+    layout: &crate::strat::Layout,
+    shape: &ReportShape,
+) -> std::result::Result<(), String> {
+    if rep.shard != span.shard || rep.iteration != iteration {
+        return Err(format!(
+            "report identity (shard {}, iteration {}) != expected (shard {}, iteration {})",
+            rep.shard, rep.iteration, span.shard, iteration
+        ));
+    }
+    if rep.tasks.len() != span.ntasks() {
+        return Err(format!(
+            "report covers {} tasks, span owns {}",
+            rep.tasks.len(),
+            span.ntasks()
+        ));
+    }
+    let ntasks = crate::engine::reduction_tasks(layout.m);
+    for (i, t) in rep.tasks.iter().enumerate() {
+        if t.task != span.task_lo + i {
+            return Err(format!("task {} out of order (expected {})", t.task, span.task_lo + i));
+        }
+        match (shape.contrib_len, &t.contrib) {
+            (Some(want), Some(c)) if c.len() == want => {}
+            (None, None) => {}
+            _ => return Err(format!("task {} contrib shape mismatch", t.task)),
+        }
+        let (cube_lo, cube_hi) = crate::engine::reduction_task_span(layout.m, ntasks, t.task);
+        let want_dnew = if shape.stratified { cube_hi - cube_lo } else { 0 };
+        if t.d_new.len() != want_dnew {
+            return Err(format!(
+                "task {} carries {} damped observations, expected {want_dnew}",
+                t.task,
+                t.d_new.len()
+            ));
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::api::GridState;
+    use crate::engine::VSampleOpts;
+    use crate::grid::Bins;
+    use crate::integrands::by_name;
+    use crate::strat::Layout;
+
+    fn scratch(tag: &str) -> PathBuf {
+        let p = std::env::temp_dir().join(format!(
+            "mcubes-shard-coord-{}-{tag}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&p);
+        std::fs::create_dir_all(&p).unwrap();
+        p
+    }
+
+    fn fast_opts(local_fallback: bool) -> SpoolOptions {
+        SpoolOptions {
+            timeout: Duration::from_millis(50),
+            poll: Duration::from_millis(1),
+            max_retries: 1,
+            local_fallback,
+        }
+    }
+
+    fn setting() -> (Layout, Bins, ShardPlan, Vec<ShardTask>) {
+        let layout = Layout::compute(3, 512, 8, 1).unwrap();
+        let bins = Bins::uniform(3, 8);
+        let plan = ShardPlan::uniform(&layout, 4);
+        let tasks: Vec<ShardTask> = plan
+            .spans()
+            .iter()
+            .map(|sp| ShardTask {
+                integrand: "f3".to_string(),
+                layout,
+                grid: GridState::from_bins(bins.clone()),
+                seed: 5,
+                iteration: 1,
+                adjust: false,
+                shard: sp.shard,
+                task_lo: sp.task_lo,
+                task_hi: sp.task_hi,
+            })
+            .collect();
+        (layout, bins, plan, tasks)
+    }
+
+    fn run_gather(
+        t: &SpoolTransport,
+        layout: &Layout,
+        bins: &Bins,
+        plan: &ShardPlan,
+        stats: &mut ShardStats,
+    ) -> Result<Vec<TaskPartial>> {
+        let f = by_name("f3", 3).unwrap();
+        let opts = VSampleOpts {
+            seed: 5,
+            iteration: 1,
+            adjust: false,
+            threads: 1,
+        };
+        let shape = ReportShape {
+            contrib_len: None,
+            stratified: false,
+        };
+        let fallback = move |sp: &ShardSpan| {
+            super::super::worker::run_span(&*f, layout, bins, None, &opts, sp.task_lo, sp.task_hi)
+        };
+        t.gather(plan, layout, 1, &shape, &fallback, stats)
+    }
+
+    #[test]
+    fn gather_falls_back_for_missing_and_corrupt_reports() {
+        let dir = scratch("fallback");
+        let t = SpoolTransport::open(&dir, fast_opts(true)).unwrap();
+        let (layout, bins, plan, tasks) = setting();
+        t.scatter(&tasks).unwrap();
+        // Worker answers shards 0 and 1 only; shard 1's report is torn.
+        for task in &tasks[..2] {
+            super::super::worker::process_task(task, 1)
+                .unwrap()
+                .save(&reports_dir(&dir).join(spool_file_name(1, task.shard)))
+                .unwrap();
+        }
+        let torn = reports_dir(&dir).join(spool_file_name(1, 1));
+        let bytes = std::fs::read(&torn).unwrap();
+        std::fs::write(&torn, &bytes[..bytes.len() / 3]).unwrap();
+        let mut stats = ShardStats::default();
+        let partials = run_gather(&t, &layout, &bins, &plan, &mut stats).unwrap();
+        // Shards 1 (corrupt, retries exhausted at deadline), 2, 3
+        // (never reported) all took the straggler path.
+        assert_eq!(stats.straggler_retries, 3);
+        // The merged fold is still the single-worker fold, bitwise.
+        assert_eq!(partials.len(), plan.ntasks());
+        let f = by_name("f3", 3).unwrap();
+        let opts = VSampleOpts {
+            seed: 5,
+            iteration: 1,
+            adjust: false,
+            threads: 1,
+        };
+        let (merged, _) =
+            crate::engine::merge_task_partials(layout.d, layout.nb, false, &partials);
+        let (reference, _) = crate::engine::NativeEngine.vsample(&*f, &layout, &bins, &opts);
+        assert_eq!(merged.integral.to_bits(), reference.integral.to_bits());
+        assert_eq!(merged.variance.to_bits(), reference.variance.to_bits());
+        t.cleanup(&plan, 1);
+        assert!(crate::store::list_json_sorted(&tasks_dir(&dir))
+            .unwrap()
+            .is_empty());
+        let _ = std::fs::remove_dir_all(dir);
+    }
+
+    #[test]
+    fn strict_mode_surfaces_a_typed_shard_error() {
+        let dir = scratch("strict");
+        let t = SpoolTransport::open(&dir, fast_opts(false)).unwrap();
+        let (layout, bins, plan, tasks) = setting();
+        t.scatter(&tasks).unwrap();
+        let mut stats = ShardStats::default();
+        let err = run_gather(&t, &layout, &bins, &plan, &mut stats).unwrap_err();
+        assert!(matches!(err, Error::Shard(_)), "got {err}");
+        assert!(err.to_string().contains("shard"));
+        let _ = std::fs::remove_dir_all(dir);
+    }
+
+    #[test]
+    fn inconsistent_reports_are_rejected_not_merged() {
+        let dir = scratch("inconsistent");
+        let t = SpoolTransport::open(&dir, fast_opts(true)).unwrap();
+        let (layout, bins, plan, tasks) = setting();
+        t.scatter(&tasks).unwrap();
+        // Shard 0 reports shard 3's span: identity mismatch.
+        let mut rogue = super::super::worker::process_task(&tasks[3], 1).unwrap();
+        rogue.shard = 0;
+        rogue
+            .save(&reports_dir(&dir).join(spool_file_name(1, 0)))
+            .unwrap();
+        let mut stats = ShardStats::default();
+        let partials = run_gather(&t, &layout, &bins, &plan, &mut stats).unwrap();
+        assert!(stats.straggler_retries >= 1);
+        let (merged, _) =
+            crate::engine::merge_task_partials(layout.d, layout.nb, false, &partials);
+        let f = by_name("f3", 3).unwrap();
+        let opts = VSampleOpts {
+            seed: 5,
+            iteration: 1,
+            adjust: false,
+            threads: 1,
+        };
+        let (reference, _) = crate::engine::NativeEngine.vsample(&*f, &layout, &bins, &opts);
+        assert_eq!(merged.integral.to_bits(), reference.integral.to_bits());
+        let _ = std::fs::remove_dir_all(dir);
+    }
+
+    #[test]
+    fn scatter_rejects_unresolvable_integrands_up_front() {
+        let dir = scratch("unresolvable");
+        let t = SpoolTransport::open(&dir, fast_opts(true)).unwrap();
+        let (layout, bins, _, mut tasks) = setting();
+        let _ = (layout, bins);
+        tasks[0].integrand = "no-such-integrand".to_string();
+        let err = t.scatter(&tasks).unwrap_err();
+        assert!(matches!(err, Error::Shard(_)), "got {err}");
+        let _ = std::fs::remove_dir_all(dir);
+    }
+}

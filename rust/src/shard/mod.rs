@@ -1,0 +1,63 @@
+//! Sharded multi-worker execution: split one integral across N shard
+//! workers with a bitwise-deterministic merge.
+//!
+//! The engine folds every V-Sample pass over a fixed partition of the
+//! cube range into reduction tasks ([`crate::engine::reduction_tasks`])
+//! and merges per-task partials in task order, so the float stream is
+//! a pure function of the layout — never of the thread count. This
+//! module distributes exactly that task index space:
+//!
+//! * [`ShardPlan`] — deterministic partition of the tasks (and, for
+//!   VEGAS+, the per-cube allocation's Philox counter sub-ranges) into
+//!   N contiguous shard spans; no counter is drawn twice.
+//! * [`ShardedBackend`] — a `VSampleBackend` that scatters spans to
+//!   workers (in-process pool, or external processes via the spool
+//!   transport), gathers sealed [`ShardReport`]s, and merges partials
+//!   in global task order — bitwise equal to the single-worker run on
+//!   both engines and both sampling modes.
+//! * [`SpoolTransport`] / [`run_spool_worker`] — the process
+//!   transport: sealed `$schema`-versioned task/report files with the
+//!   store's canonical-JSON + sha256 integrity machinery, per-shard
+//!   timeout, bounded retry, and a typed [`crate::Error::Shard`]
+//!   straggler path instead of a hang.
+//!
+//! See `docs/sharding.md` for partition rules, counter sub-ranges,
+//! merge order, and crash/straggler semantics; and
+//! `examples/sharded_run.rs` for an end-to-end 2^33-call run.
+
+mod backend;
+mod coordinator;
+mod plan;
+mod report;
+mod worker;
+
+pub use backend::ShardedBackend;
+pub use coordinator::{spool_close, spool_file_name, SpoolOptions, SpoolTransport};
+pub use plan::{ShardPlan, ShardSpan};
+pub use report::{ShardReport, ShardTask, TaskReport, SHARD_REPORT_SCHEMA, SHARD_TASK_SCHEMA};
+pub use worker::{process_task, run_span, run_spool_worker, WorkerOutcome};
+
+/// Cumulative shard-execution accounting for one run, surfaced
+/// through `VSampleBackend::shard_stats`, `api::Session`, and the
+/// service layer's `ServiceMetrics`.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct ShardStats {
+    /// Largest effective shard count any iteration ran with.
+    pub shards: usize,
+    /// Total wall-clock milliseconds spent merging gathered partials
+    /// (and absorbing damped observations) across iterations.
+    pub merge_ms: f64,
+    /// Spans recomputed by the coordinator's straggler path (timeout,
+    /// corrupt report, or retry-budget exhaustion).
+    pub straggler_retries: usize,
+}
+
+impl ShardStats {
+    /// Fold another run segment's accounting into this one (used when
+    /// a session retires one backend per stage).
+    pub fn absorb(&mut self, other: ShardStats) {
+        self.shards = self.shards.max(other.shards);
+        self.merge_ms += other.merge_ms;
+        self.straggler_retries += other.straggler_retries;
+    }
+}

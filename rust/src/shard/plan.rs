@@ -1,0 +1,236 @@
+//! Deterministic shard partition of one iteration's work.
+//!
+//! The engine already folds every V-Sample pass over a fixed partition
+//! of the cube range into [`reduction_tasks`] contiguous *reduction
+//! tasks* (the float stream is a pure function of the layout, never of
+//! the thread count). A [`ShardPlan`] regroups that same task index
+//! space into `N` contiguous shard spans — the task, not the cube, is
+//! the unit of distribution. Because the coordinator merges per-task
+//! partials back in global task order, an N-shard run reproduces the
+//! single-worker fold bitwise; see `docs/sharding.md`.
+//!
+//! Each span also records its Philox counter sub-range so the
+//! no-counter-drawn-twice invariant is visible (and testable) at the
+//! plan level: uniform sampling draws counters `cube * p + k`,
+//! stratified sampling draws `offsets[cube] + k` — disjoint contiguous
+//! cube spans therefore own disjoint contiguous counter sub-ranges by
+//! construction.
+
+use crate::engine::{reduction_task_span, reduction_tasks};
+use crate::strat::Layout;
+
+/// One shard's slice of an iteration: a contiguous run of reduction
+/// tasks, the cube span they cover, and the Philox sample-counter
+/// sub-range those cubes draw from.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ShardSpan {
+    /// Shard index in `0..nshards`.
+    pub shard: usize,
+    /// First reduction task owned by this shard.
+    pub task_lo: usize,
+    /// One past the last reduction task owned by this shard.
+    pub task_hi: usize,
+    /// First cube of `task_lo`.
+    pub cube_lo: usize,
+    /// One past the last cube of `task_hi - 1`.
+    pub cube_hi: usize,
+    /// First Philox sample counter drawn by this shard.
+    pub counter_lo: u64,
+    /// One past the last Philox sample counter drawn by this shard.
+    pub counter_hi: u64,
+}
+
+impl ShardSpan {
+    /// Number of reduction tasks in the span.
+    pub fn ntasks(&self) -> usize {
+        self.task_hi - self.task_lo
+    }
+
+    /// Number of cubes in the span.
+    pub fn ncubes(&self) -> usize {
+        self.cube_hi - self.cube_lo
+    }
+}
+
+/// Deterministic partition of one iteration's reduction-task index
+/// space into `N` contiguous shard spans. Pure function of
+/// `(layout, allocation, shards)` — every participant (in-process
+/// pool, spool coordinator, external `mcubes shard-worker` processes)
+/// derives the identical plan independently.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ShardPlan {
+    ntasks: usize,
+    spans: Vec<ShardSpan>,
+}
+
+impl ShardPlan {
+    /// Plan for the uniform (paper) allocation: every cube draws
+    /// `layout.p` samples, so the counter range of cube span
+    /// `[lo, hi)` is `[lo * p, hi * p)`.
+    pub fn uniform(layout: &Layout, shards: usize) -> ShardPlan {
+        let p = layout.p as u64;
+        Self::build(layout.m, shards, |cube| cube as u64 * p)
+    }
+
+    /// Plan for a VEGAS+ adaptive allocation: cube `c` draws
+    /// `counts[c]` samples starting at `offsets[c]` (exclusive prefix
+    /// sum), so the counter range of cube span `[lo, hi)` is
+    /// `[offsets[lo], offsets[hi])` (with the final boundary closed by
+    /// `offsets[m-1] + counts[m-1]`).
+    pub fn stratified(layout: &Layout, counts: &[u32], offsets: &[u64]) -> ShardPlanBuilder<'_> {
+        ShardPlanBuilder {
+            layout: *layout,
+            counts,
+            offsets,
+        }
+    }
+
+    fn build(m: usize, shards: usize, counter_at: impl Fn(usize) -> u64) -> ShardPlan {
+        let ntasks = reduction_tasks(m);
+        let nshards = shards.min(ntasks).max(1);
+        let spans = (0..nshards)
+            .map(|shard| {
+                let (task_lo, task_hi) = reduction_task_span(ntasks, nshards, shard);
+                let (cube_lo, _) = reduction_task_span(m, ntasks, task_lo);
+                let (_, cube_hi) = reduction_task_span(m, ntasks, task_hi - 1);
+                ShardSpan {
+                    shard,
+                    task_lo,
+                    task_hi,
+                    cube_lo,
+                    cube_hi,
+                    counter_lo: counter_at(cube_lo),
+                    counter_hi: counter_at(cube_hi),
+                }
+            })
+            .collect();
+        ShardPlan { ntasks, spans }
+    }
+
+    /// Number of reduction tasks being distributed
+    /// (`reduction_tasks(layout.m)`).
+    pub fn ntasks(&self) -> usize {
+        self.ntasks
+    }
+
+    /// Effective shard count: the requested count clamped to
+    /// `[1, ntasks]` (a shard always owns at least one task).
+    pub fn nshards(&self) -> usize {
+        self.spans.len()
+    }
+
+    /// The shard spans, in shard order. Task and cube spans are
+    /// contiguous, ascending, and partition their index spaces
+    /// exactly.
+    pub fn spans(&self) -> &[ShardSpan] {
+        &self.spans
+    }
+}
+
+/// Borrow-carrying builder for [`ShardPlan::stratified`] (keeps the
+/// two slice arguments next to their validation).
+pub struct ShardPlanBuilder<'a> {
+    layout: Layout,
+    counts: &'a [u32],
+    offsets: &'a [u64],
+}
+
+impl ShardPlanBuilder<'_> {
+    /// Finish the stratified plan for `shards` workers.
+    ///
+    /// # Panics
+    /// When `counts`/`offsets` do not match the layout's cube count —
+    /// a caller bug (the allocation and layout travel together).
+    pub fn shards(self, shards: usize) -> ShardPlan {
+        let m = self.layout.m;
+        assert_eq!(self.counts.len(), m, "counts/layout cube mismatch");
+        assert_eq!(self.offsets.len(), m, "offsets/layout cube mismatch");
+        let total = self.offsets[m - 1] + u64::from(self.counts[m - 1]);
+        let offsets = self.offsets;
+        ShardPlan::build(m, shards, move |cube| {
+            if cube < m {
+                offsets[cube]
+            } else {
+                total
+            }
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::strat::{Allocation, DEFAULT_BETA};
+
+    #[test]
+    fn uniform_plan_partitions_tasks_cubes_and_counters_exactly() {
+        // d=4, 4096 calls: m = 1296 cubes, p = 3 samples per cube.
+        let layout = Layout::compute(4, 4096, 16, 1).unwrap();
+        for shards in [1, 2, 3, 8, 64] {
+            let plan = ShardPlan::uniform(&layout, shards);
+            assert_eq!(plan.nshards(), shards.min(plan.ntasks()));
+            let spans = plan.spans();
+            assert_eq!(spans[0].task_lo, 0);
+            assert_eq!(spans[0].cube_lo, 0);
+            assert_eq!(spans[0].counter_lo, 0);
+            for w in spans.windows(2) {
+                assert_eq!(w[0].task_hi, w[1].task_lo);
+                assert_eq!(w[0].cube_hi, w[1].cube_lo);
+                assert_eq!(w[0].counter_hi, w[1].counter_lo);
+                assert!(w[0].ntasks() >= 1);
+            }
+            let last = spans[spans.len() - 1];
+            assert_eq!(last.task_hi, plan.ntasks());
+            assert_eq!(last.cube_hi, layout.m);
+            assert_eq!(last.counter_hi, (layout.m * layout.p) as u64);
+        }
+    }
+
+    #[test]
+    fn shard_count_is_clamped_to_task_count() {
+        let layout = Layout::compute(1, 64, 10, 1).unwrap();
+        // Tiny layout: fewer tasks than requested shards.
+        let ntasks = reduction_tasks(layout.m);
+        let plan = ShardPlan::uniform(&layout, 1000);
+        assert_eq!(plan.nshards(), ntasks);
+        // Degenerate request: 0 shards still yields one.
+        assert_eq!(ShardPlan::uniform(&layout, 0).nshards(), 1);
+    }
+
+    #[test]
+    fn stratified_plan_counters_follow_the_allocation() {
+        let layout = Layout::compute(3, 8000, 20, 1).unwrap();
+        let mut alloc = Allocation::uniform(&layout);
+        // Skew the allocation so offsets are genuinely non-uniform.
+        alloc.absorb(0, 250.0);
+        alloc.absorb(layout.m / 2, 40.0);
+        alloc.reallocate(layout.calls(), DEFAULT_BETA);
+        let plan = ShardPlan::stratified(&layout, alloc.counts(), alloc.offsets()).shards(8);
+        let total: u64 = alloc.counts().iter().map(|&c| u64::from(c)).sum();
+        let spans = plan.spans();
+        assert_eq!(spans[0].counter_lo, 0);
+        assert_eq!(spans[spans.len() - 1].counter_hi, total);
+        for sp in spans {
+            assert_eq!(sp.counter_lo, alloc.offsets()[sp.cube_lo]);
+            // Span width == sum of its cubes' counts: no counter is
+            // drawn twice, none is skipped.
+            let width: u64 = alloc.counts()[sp.cube_lo..sp.cube_hi]
+                .iter()
+                .map(|&c| u64::from(c))
+                .sum();
+            assert_eq!(sp.counter_hi - sp.counter_lo, width);
+        }
+        for w in spans.windows(2) {
+            assert_eq!(w[0].counter_hi, w[1].counter_lo);
+        }
+    }
+
+    #[test]
+    fn plan_is_a_pure_function_of_its_inputs() {
+        let layout = Layout::compute(5, 4096, 20, 4).unwrap();
+        assert_eq!(
+            ShardPlan::uniform(&layout, 8),
+            ShardPlan::uniform(&layout, 8)
+        );
+    }
+}

@@ -1,0 +1,476 @@
+//! Sealed shard-task and shard-report documents — the spool-transport
+//! wire format of the shard subsystem.
+//!
+//! Both document families ride the store's canonical-JSON + sha256
+//! seal machinery (`crate::store`): every file carries a `$schema`
+//! version tag and an integrity seal, so a torn or tampered write
+//! surfaces as a typed corruption error at read time instead of a
+//! silently wrong merge.
+//!
+//! Numeric fidelity: the JSON writer emits every non-integral f64 with
+//! 17 significant digits (exact round-trip) and integers below `1e15`
+//! verbatim, so estimator partials, histogram contributions, and the
+//! damped-variance observations cross the process boundary bitwise.
+//! Task indices are tiny (at most [`crate::engine::REDUCTION_TASKS`]);
+//! cube spans are *not* serialized — both sides re-derive them from
+//! the layout, which also keeps reports independent of how the cube
+//! range was balanced.
+
+use crate::engine::{reduction_task_span, reduction_tasks, TaskPartial};
+use crate::error::{Error, Result};
+use crate::strat::Layout;
+use crate::api::GridState;
+use crate::util::json::{ObjBuilder, Value};
+use std::path::Path;
+
+/// Schema tag of a sealed shard-task file (coordinator → worker).
+pub const SHARD_TASK_SCHEMA: &str = "mcubes/shard-task/v1";
+
+/// Schema tag of a sealed shard-report file (worker → coordinator).
+pub const SHARD_REPORT_SCHEMA: &str = "mcubes/shard-report/v1";
+
+/// Largest integer the JSON number lane carries exactly (f64
+/// mantissa). Layout fields beyond this cannot ride the spool
+/// transport; [`check_spool_layout`] rejects them up front.
+const MAX_JSON_EXACT: usize = 1 << 53;
+
+/// Reject layouts whose fields would lose precision in JSON (cube
+/// counts beyond 2^53 — far past any realistic configuration, but the
+/// failure must be typed, not silent).
+pub(crate) fn check_spool_layout(layout: &Layout) -> Result<()> {
+    if layout.m > MAX_JSON_EXACT || layout.calls() > MAX_JSON_EXACT {
+        return Err(Error::Shard(format!(
+            "layout too large for the spool transport: m = {} (limit 2^53)",
+            layout.m
+        )));
+    }
+    Ok(())
+}
+
+fn layout_to_json(l: &Layout) -> Value {
+    ObjBuilder::new()
+        .field("d", l.d)
+        .field("nb", l.nb)
+        .field("g", l.g)
+        .field("m", l.m)
+        .field("p", l.p)
+        .field("nblocks", l.nblocks)
+        .field("cpb", l.cpb)
+        .build()
+}
+
+fn req_usize(v: &Value, key: &str) -> Result<usize> {
+    v.req(key)?
+        .as_usize()
+        .ok_or_else(|| Error::Manifest(format!("field `{key}` is not a non-negative integer")))
+}
+
+fn req_f64(v: &Value, key: &str) -> Result<f64> {
+    v.req(key)?
+        .as_f64()
+        .ok_or_else(|| Error::Manifest(format!("field `{key}` is not a number")))
+}
+
+fn req_u32(v: &Value, key: &str) -> Result<u32> {
+    let n = req_usize(v, key)?;
+    u32::try_from(n).map_err(|_| Error::Manifest(format!("field `{key}` exceeds u32: {n}")))
+}
+
+fn layout_from_json(v: &Value) -> Result<Layout> {
+    let layout = Layout {
+        d: req_usize(v, "d")?,
+        nb: req_usize(v, "nb")?,
+        g: req_usize(v, "g")?,
+        m: req_usize(v, "m")?,
+        p: req_usize(v, "p")?,
+        nblocks: req_usize(v, "nblocks")?,
+        cpb: req_usize(v, "cpb")?,
+    };
+    layout.validate()?;
+    Ok(layout)
+}
+
+/// One shard's work order for one iteration: everything a fresh
+/// process needs to reproduce its slice of the pass bitwise —
+/// integrand (by registry name), layout, grid + optional VEGAS+
+/// allocation snapshot, Philox seed, and the owned task range.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ShardTask {
+    /// Registry name of the integrand (`crate::integrands::by_name`).
+    pub integrand: String,
+    /// The iteration's stratification layout, shipped field-for-field
+    /// (never re-derived from a call budget, which could re-balance).
+    pub layout: Layout,
+    /// Importance grid; carries the per-cube allocation snapshot
+    /// (counts + damped accumulator) when the pass is VEGAS+.
+    pub grid: GridState,
+    /// Philox seed of the run.
+    pub seed: u32,
+    /// Iteration index (part of the counter derivation).
+    pub iteration: u32,
+    /// Whether to accumulate the adjustment histogram.
+    pub adjust: bool,
+    /// Shard index in `0..nshards`.
+    pub shard: usize,
+    /// First owned reduction task.
+    pub task_lo: usize,
+    /// One past the last owned reduction task.
+    pub task_hi: usize,
+}
+
+impl ShardTask {
+    /// Serialize (unsealed; `save` adds the seal).
+    pub fn to_json(&self) -> Value {
+        ObjBuilder::new()
+            .field("$schema", SHARD_TASK_SCHEMA)
+            .field("integrand", self.integrand.as_str())
+            .field("layout", layout_to_json(&self.layout))
+            .field("grid", self.grid.to_json())
+            .field("seed", i64::from(self.seed))
+            .field("iteration", i64::from(self.iteration))
+            .field("adjust", self.adjust)
+            .field("shard", self.shard)
+            .field("task_lo", self.task_lo)
+            .field("task_hi", self.task_hi)
+            .build()
+    }
+
+    /// Restore from `to_json` output, validating the layout and the
+    /// task range.
+    pub fn from_json(v: &Value) -> Result<ShardTask> {
+        let layout = layout_from_json(v.req("layout")?)?;
+        let task = ShardTask {
+            integrand: v
+                .req("integrand")?
+                .as_str()
+                .ok_or_else(|| Error::Manifest("integrand name".into()))?
+                .to_string(),
+            layout,
+            grid: GridState::from_json(v.req("grid")?)?,
+            seed: req_u32(v, "seed")?,
+            iteration: req_u32(v, "iteration")?,
+            adjust: v
+                .req("adjust")?
+                .as_bool()
+                .ok_or_else(|| Error::Manifest("adjust flag".into()))?,
+            shard: req_usize(v, "shard")?,
+            task_lo: req_usize(v, "task_lo")?,
+            task_hi: req_usize(v, "task_hi")?,
+        };
+        let ntasks = reduction_tasks(task.layout.m);
+        if task.task_lo >= task.task_hi || task.task_hi > ntasks {
+            return Err(Error::Manifest(format!(
+                "shard task range [{}, {}) outside 0..{ntasks}",
+                task.task_lo, task.task_hi
+            )));
+        }
+        Ok(task)
+    }
+
+    /// Seal and atomically write to `path`.
+    pub fn save(&self, path: &Path) -> Result<()> {
+        let sealed = crate::store::seal(self.to_json());
+        crate::store::write_atomic(path, &sealed.to_json())?;
+        Ok(())
+    }
+
+    /// Load a sealed task file; `Ok(None)` when absent, a typed store
+    /// error when torn, tampered, or schema-mismatched.
+    pub fn load(path: &Path) -> Result<Option<ShardTask>> {
+        match crate::store::read_sealed(path, SHARD_TASK_SCHEMA)? {
+            Some(v) => Ok(Some(ShardTask::from_json(&v)?)),
+            None => Ok(None),
+        }
+    }
+}
+
+/// One reduction task's partial sums, as carried by a shard report.
+/// The cube span is re-derived from the layout on import — see
+/// [`ShardReport::into_partials`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct TaskReport {
+    /// Global reduction-task index.
+    pub task: usize,
+    /// Partial integral estimate.
+    pub integral: f64,
+    /// Partial variance estimate.
+    pub variance: f64,
+    /// Partial `d * nb` adjustment histogram (adjust passes only).
+    pub contrib: Option<Vec<f64>>,
+    /// Per-cube damped-variance observations (VEGAS+ passes only;
+    /// one entry per cube of the task's span, in cube order).
+    pub d_new: Vec<f64>,
+}
+
+impl From<TaskPartial> for TaskReport {
+    fn from(p: TaskPartial) -> TaskReport {
+        TaskReport {
+            task: p.task,
+            integral: p.integral,
+            variance: p.variance,
+            contrib: p.contrib,
+            d_new: p.d_new,
+        }
+    }
+}
+
+/// One shard's sealed result for one iteration: the per-task partial
+/// sums of every reduction task it owns, in task order.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ShardReport {
+    /// Shard index the report answers for.
+    pub shard: usize,
+    /// Iteration the partials belong to.
+    pub iteration: u32,
+    /// Per-task partials, ascending by task index.
+    pub tasks: Vec<TaskReport>,
+}
+
+impl ShardReport {
+    /// Package a worker's partials (already in task order).
+    pub fn from_partials(shard: usize, iteration: u32, partials: Vec<TaskPartial>) -> ShardReport {
+        ShardReport {
+            shard,
+            iteration,
+            tasks: partials.into_iter().map(TaskReport::from).collect(),
+        }
+    }
+
+    /// Rehydrate engine partials, re-deriving each task's cube span
+    /// from `layout` (`reduction_task_span` is a pure function, so
+    /// every participant derives the same spans).
+    pub fn into_partials(self, layout: &Layout) -> Vec<TaskPartial> {
+        let ntasks = reduction_tasks(layout.m);
+        self.tasks
+            .into_iter()
+            .map(|t| {
+                let (cube_lo, cube_hi) = reduction_task_span(layout.m, ntasks, t.task);
+                TaskPartial {
+                    task: t.task,
+                    cube_lo,
+                    cube_hi,
+                    integral: t.integral,
+                    variance: t.variance,
+                    contrib: t.contrib,
+                    d_new: t.d_new,
+                }
+            })
+            .collect()
+    }
+
+    /// Serialize (unsealed; `save` adds the seal).
+    pub fn to_json(&self) -> Value {
+        let tasks: Vec<Value> = self
+            .tasks
+            .iter()
+            .map(|t| {
+                let mut b = ObjBuilder::new()
+                    .field("task", t.task)
+                    .field("integral", t.integral)
+                    .field("variance", t.variance);
+                if let Some(c) = &t.contrib {
+                    b = b.field("contrib", c.clone());
+                }
+                b.field("d_new", t.d_new.clone()).build()
+            })
+            .collect();
+        ObjBuilder::new()
+            .field("$schema", SHARD_REPORT_SCHEMA)
+            .field("shard", self.shard)
+            .field("iteration", i64::from(self.iteration))
+            .field("tasks", tasks)
+            .build()
+    }
+
+    /// Restore from `to_json` output.
+    pub fn from_json(v: &Value) -> Result<ShardReport> {
+        let raw = v
+            .req("tasks")?
+            .as_arr()
+            .ok_or_else(|| Error::Manifest("shard report tasks".into()))?;
+        let mut tasks = Vec::with_capacity(raw.len());
+        for tv in raw {
+            let contrib = match tv.get("contrib") {
+                Some(c) => Some(
+                    c.as_f64_vec()
+                        .ok_or_else(|| Error::Manifest("task contrib".into()))?,
+                ),
+                None => None,
+            };
+            tasks.push(TaskReport {
+                task: req_usize(tv, "task")?,
+                integral: req_f64(tv, "integral")?,
+                variance: req_f64(tv, "variance")?,
+                contrib,
+                d_new: tv
+                    .req("d_new")?
+                    .as_f64_vec()
+                    .ok_or_else(|| Error::Manifest("task d_new".into()))?,
+            });
+        }
+        Ok(ShardReport {
+            shard: req_usize(v, "shard")?,
+            iteration: req_u32(v, "iteration")?,
+            tasks,
+        })
+    }
+
+    /// Seal and atomically write to `path`.
+    pub fn save(&self, path: &Path) -> Result<()> {
+        let sealed = crate::store::seal(self.to_json());
+        crate::store::write_atomic(path, &sealed.to_json())?;
+        Ok(())
+    }
+
+    /// Load a sealed report file; `Ok(None)` when absent, a typed
+    /// store error when torn, tampered, or schema-mismatched.
+    pub fn load(path: &Path) -> Result<Option<ShardReport>> {
+        match crate::store::read_sealed(path, SHARD_REPORT_SCHEMA)? {
+            Some(v) => Ok(Some(ShardReport::from_json(&v)?)),
+            None => Ok(None),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::api::StratSnapshot;
+    use crate::grid::Bins;
+
+    fn scratch(tag: &str) -> std::path::PathBuf {
+        let p = std::env::temp_dir().join(format!(
+            "mcubes-shard-report-{}-{tag}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&p);
+        std::fs::create_dir_all(&p).unwrap();
+        p
+    }
+
+    fn awkward(k: usize) -> f64 {
+        let kf = k as f64;
+        (kf - 17.5) * (1.0 / 3.0) + 1e-13 * kf.sin()
+    }
+
+    #[test]
+    fn task_file_roundtrips_bitwise_including_strat_snapshot() {
+        let layout = Layout::compute(4, 4096, 16, 1).unwrap();
+        let grid = GridState::from_bins(Bins::uniform(4, 16)).with_strat(StratSnapshot {
+            beta: 0.75,
+            counts: vec![3; layout.m],
+            damped: (0..layout.m).map(|k| awkward(k).abs()).collect(),
+        });
+        let task = ShardTask {
+            integrand: "f4".to_string(),
+            layout,
+            grid,
+            seed: 42,
+            iteration: 3,
+            adjust: true,
+            shard: 5,
+            task_lo: 40,
+            task_hi: 48,
+        };
+        let dir = scratch("task");
+        let path = dir.join("it00000003-s005.json");
+        task.save(&path).unwrap();
+        let back = ShardTask::load(&path).unwrap().unwrap();
+        assert_eq!(back, task);
+        let s = back.grid.strat().unwrap();
+        for (a, b) in s.damped.iter().zip(task.grid.strat().unwrap().damped.iter()) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        let _ = std::fs::remove_dir_all(dir);
+    }
+
+    #[test]
+    fn report_roundtrips_bitwise_and_rederives_cube_spans() {
+        let layout = Layout::compute(4, 4096, 16, 1).unwrap();
+        let ntasks = reduction_tasks(layout.m);
+        let partials: Vec<TaskPartial> = (10..14)
+            .map(|t| {
+                let (cube_lo, cube_hi) = reduction_task_span(layout.m, ntasks, t);
+                TaskPartial {
+                    task: t,
+                    cube_lo,
+                    cube_hi,
+                    integral: awkward(t),
+                    variance: awkward(t + 1).abs(),
+                    contrib: Some((0..layout.d * layout.nb).map(awkward).collect()),
+                    d_new: (cube_lo..cube_hi).map(awkward).collect(),
+                }
+            })
+            .collect();
+        let rep = ShardReport::from_partials(2, 7, partials.clone());
+        let dir = scratch("report");
+        let path = dir.join("it00000007-s002.json");
+        rep.save(&path).unwrap();
+        let back = ShardReport::load(&path).unwrap().unwrap();
+        assert_eq!(back.shard, 2);
+        assert_eq!(back.iteration, 7);
+        let restored = back.into_partials(&layout);
+        assert_eq!(restored.len(), partials.len());
+        for (a, b) in restored.iter().zip(partials.iter()) {
+            assert_eq!(a.task, b.task);
+            assert_eq!(a.cube_lo, b.cube_lo);
+            assert_eq!(a.cube_hi, b.cube_hi);
+            assert_eq!(a.integral.to_bits(), b.integral.to_bits());
+            assert_eq!(a.variance.to_bits(), b.variance.to_bits());
+            let (ca, cb) = (a.contrib.as_ref().unwrap(), b.contrib.as_ref().unwrap());
+            for (x, y) in ca.iter().zip(cb.iter()) {
+                assert_eq!(x.to_bits(), y.to_bits());
+            }
+            for (x, y) in a.d_new.iter().zip(b.d_new.iter()) {
+                assert_eq!(x.to_bits(), y.to_bits());
+            }
+        }
+        let _ = std::fs::remove_dir_all(dir);
+    }
+
+    #[test]
+    fn torn_and_tampered_files_surface_typed_errors() {
+        let layout = Layout::compute(3, 512, 8, 1).unwrap();
+        let rep = ShardReport::from_partials(
+            0,
+            1,
+            vec![TaskPartial {
+                task: 0,
+                cube_lo: 0,
+                cube_hi: 9,
+                integral: 1.25,
+                variance: 0.5,
+                contrib: None,
+                d_new: Vec::new(),
+            }],
+        );
+        let dir = scratch("torn");
+        let path = dir.join("it00000001-s000.json");
+        rep.save(&path).unwrap();
+        let good = std::fs::read(&path).unwrap();
+        // Truncation (torn write) → corrupt, never a silent partial.
+        std::fs::write(&path, &good[..good.len() / 2]).unwrap();
+        assert!(ShardReport::load(&path).is_err());
+        // Bit flip inside the payload → seal mismatch.
+        let mut flipped = good.clone();
+        let mid = flipped.len() / 2;
+        flipped[mid] ^= 0x01;
+        std::fs::write(&path, &flipped).unwrap();
+        assert!(ShardReport::load(&path).is_err());
+        // Wrong schema family → UnsupportedSchema, not a parse of
+        // look-alike fields (restore the intact report bytes first so
+        // the seal verifies and only the schema check can fire).
+        std::fs::write(&path, &good).unwrap();
+        assert!(ShardTask::load(&path).is_err());
+        // Missing file → Ok(None).
+        let _ = std::fs::remove_dir_all(&dir);
+        assert!(ShardReport::load(&path).unwrap().is_none());
+        // Oversized layouts are rejected up front.
+        assert!(check_spool_layout(&layout).is_ok());
+        let huge = Layout {
+            m: (1usize << 53) + 1,
+            ..layout
+        };
+        assert!(check_spool_layout(&huge).is_err());
+    }
+}

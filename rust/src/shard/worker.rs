@@ -1,0 +1,301 @@
+//! Shard workers: compute one shard span of one iteration.
+//!
+//! Two flavours share the same span computation:
+//!
+//! * [`run_span`] — in-process: called directly by the
+//!   [`crate::shard::ShardedBackend`] pool and by the coordinator's
+//!   straggler fallback.
+//! * [`run_spool_worker`] — process-transport: scans a spool
+//!   directory for sealed [`ShardTask`] files, computes each span, and
+//!   writes the sealed [`ShardReport`] next to it. This is what the
+//!   `mcubes shard-worker` CLI runs; any number of worker processes
+//!   may watch the same directory — reports are atomic, idempotent
+//!   (identical bytes for identical tasks), and written only when
+//!   absent, so racing workers waste work but never corrupt it.
+
+// lint:allow(MC003, worker polling cadence only — no time value ever feeds the sample stream)
+use std::time::{Duration, Instant};
+
+use super::report::{ShardReport, ShardTask};
+use crate::engine::{vsample_stratified_tasks, vsample_tasks, FillPath, TaskPartial, VSampleOpts};
+use crate::error::{Error, Result};
+use crate::grid::Bins;
+use crate::integrands::Integrand;
+use crate::strat::{Allocation, Layout};
+use std::path::{Path, PathBuf};
+
+/// Compute the per-task partials of one shard span. Pure function of
+/// its arguments: the result is bitwise independent of `opts.threads`
+/// and of which process runs it.
+pub fn run_span(
+    f: &dyn Integrand,
+    layout: &Layout,
+    bins: &Bins,
+    alloc: Option<&Allocation>,
+    opts: &VSampleOpts,
+    task_lo: usize,
+    task_hi: usize,
+) -> Vec<TaskPartial> {
+    match alloc {
+        Some(a) => vsample_stratified_tasks(
+            f,
+            layout,
+            bins,
+            a.counts(),
+            a.offsets(),
+            opts,
+            FillPath::Simd,
+            task_lo,
+            task_hi,
+        ),
+        None => vsample_tasks(f, layout, bins, opts, FillPath::Simd, task_lo, task_hi),
+    }
+}
+
+/// Execute one sealed shard task end to end: resolve the integrand
+/// from the registry, rebuild the allocation from the task's grid
+/// snapshot (when VEGAS+), compute the span, and package the report.
+pub fn process_task(task: &ShardTask, threads: usize) -> Result<ShardReport> {
+    let f = crate::integrands::by_name(&task.integrand, task.layout.d)?;
+    let alloc = match task.grid.strat() {
+        Some(s) => {
+            if s.counts.len() != task.layout.m {
+                return Err(Error::Shard(format!(
+                    "shard task allocation has {} cubes, layout has {}",
+                    s.counts.len(),
+                    task.layout.m
+                )));
+            }
+            Some(Allocation::from_parts(s.counts.clone(), s.damped.clone())?)
+        }
+        None => None,
+    };
+    let opts = VSampleOpts {
+        seed: task.seed,
+        iteration: task.iteration,
+        adjust: task.adjust,
+        threads,
+    };
+    let partials = run_span(
+        &*f,
+        &task.layout,
+        task.grid.bins(),
+        alloc.as_ref(),
+        &opts,
+        task.task_lo,
+        task.task_hi,
+    );
+    Ok(ShardReport::from_partials(
+        task.shard,
+        task.iteration,
+        partials,
+    ))
+}
+
+/// What one spool-worker invocation did.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct WorkerOutcome {
+    /// Task files computed and reported by this worker.
+    pub processed: usize,
+    /// Task files skipped (report already present, or unreadable —
+    /// the coordinator's retry path owns unreadable tasks).
+    pub skipped: usize,
+}
+
+/// Tasks sub-directory of a spool root.
+pub(crate) fn tasks_dir(dir: &Path) -> PathBuf {
+    dir.join("tasks")
+}
+
+/// Reports sub-directory of a spool root.
+pub(crate) fn reports_dir(dir: &Path) -> PathBuf {
+    dir.join("reports")
+}
+
+/// Stop-marker path of a spool root (written by
+/// [`crate::shard::spool_close`]).
+pub(crate) fn stop_path(dir: &Path) -> PathBuf {
+    dir.join("stop")
+}
+
+/// Run a spool worker loop over `dir` until the coordinator writes the
+/// stop marker (and every visible task has a report), or until
+/// `max_idle` passes without any new work. Returns what it did.
+///
+/// The loop is crash-tolerant by construction: a worker killed
+/// mid-computation leaves no report (the coordinator's timeout +
+/// retry path covers the span), and a worker killed mid-write leaves
+/// only a `.tmp` file the atomic-rename protocol ignores.
+pub fn run_spool_worker(
+    dir: &Path,
+    threads: usize,
+    poll: Duration,
+    max_idle: Option<Duration>,
+) -> Result<WorkerOutcome> {
+    let tasks = tasks_dir(dir);
+    let reports = reports_dir(dir);
+    std::fs::create_dir_all(&tasks)?;
+    std::fs::create_dir_all(&reports)?;
+    let mut out = WorkerOutcome::default();
+    let mut last_progress = Instant::now();
+    loop {
+        let mut pending = 0usize;
+        let mut progressed = false;
+        for task_path in crate::store::list_json_sorted(&tasks)? {
+            let Some(name) = task_path.file_name() else {
+                continue;
+            };
+            let report_path = reports.join(name);
+            if report_path.exists() {
+                continue;
+            }
+            pending += 1;
+            // A torn/corrupt task file is the coordinator's to replace;
+            // skip it rather than dying (another sweep may see the
+            // rewritten version).
+            let Ok(Some(task)) = ShardTask::load(&task_path) else {
+                out.skipped += 1;
+                continue;
+            };
+            process_task(&task, threads)?.save(&report_path)?;
+            out.processed += 1;
+            pending -= 1;
+            progressed = true;
+        }
+        if progressed {
+            last_progress = Instant::now();
+            continue; // re-scan immediately: more tasks may have landed
+        }
+        if pending == 0 && stop_path(dir).exists() {
+            return Ok(out);
+        }
+        if let Some(idle) = max_idle {
+            if last_progress.elapsed() >= idle {
+                return Ok(out);
+            }
+        }
+        std::thread::sleep(poll);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::api::GridState;
+    use crate::engine::{reduction_tasks, NativeEngine};
+
+    fn scratch(tag: &str) -> PathBuf {
+        let p = std::env::temp_dir().join(format!(
+            "mcubes-shard-worker-{}-{tag}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&p);
+        std::fs::create_dir_all(&p).unwrap();
+        p
+    }
+
+    #[test]
+    fn process_task_matches_in_process_span_bitwise() {
+        let layout = Layout::compute(4, 4096, 16, 1).unwrap();
+        let bins = Bins::uniform(4, 16);
+        let f = crate::integrands::by_name("f4", 4).unwrap();
+        let opts = VSampleOpts {
+            seed: 91,
+            iteration: 2,
+            adjust: true,
+            threads: 2,
+        };
+        let ntasks = reduction_tasks(layout.m);
+        let (lo, hi) = (ntasks / 4, ntasks / 2);
+        let direct = run_span(&*f, &layout, &bins, None, &opts, lo, hi);
+        let task = ShardTask {
+            integrand: "f4".to_string(),
+            layout,
+            grid: GridState::from_bins(bins.clone()),
+            seed: 91,
+            iteration: 2,
+            adjust: true,
+            shard: 1,
+            task_lo: lo,
+            task_hi: hi,
+        };
+        let rep = process_task(&task, 1).unwrap();
+        let via_report = rep.into_partials(&layout);
+        assert_eq!(via_report.len(), direct.len());
+        for (a, b) in via_report.iter().zip(direct.iter()) {
+            assert_eq!(a.task, b.task);
+            assert_eq!(a.integral.to_bits(), b.integral.to_bits());
+            assert_eq!(a.variance.to_bits(), b.variance.to_bits());
+        }
+    }
+
+    #[test]
+    fn spool_worker_drains_tasks_and_stops_on_marker() {
+        let layout = Layout::compute(3, 512, 8, 1).unwrap();
+        let bins = Bins::uniform(3, 8);
+        let dir = scratch("drain");
+        std::fs::create_dir_all(tasks_dir(&dir)).unwrap();
+        std::fs::create_dir_all(reports_dir(&dir)).unwrap();
+        let ntasks = reduction_tasks(layout.m);
+        for shard in 0..2 {
+            let (lo, hi) = crate::engine::reduction_task_span(ntasks, 2, shard);
+            let task = ShardTask {
+                integrand: "f3".to_string(),
+                layout,
+                grid: GridState::from_bins(bins.clone()),
+                seed: 7,
+                iteration: 0,
+                adjust: false,
+                shard,
+                task_lo: lo,
+                task_hi: hi,
+            };
+            task.save(&tasks_dir(&dir).join(format!("it00000000-s{shard:03}.json")))
+                .unwrap();
+        }
+        std::fs::write(stop_path(&dir), b"").unwrap();
+        let out = run_spool_worker(&dir, 1, Duration::from_millis(1), None).unwrap();
+        assert_eq!(out.processed, 2);
+        // Reports reproduce the full single-pass fold when merged.
+        let mut partials = Vec::new();
+        for shard in 0..2 {
+            let rep = ShardReport::load(
+                &reports_dir(&dir).join(format!("it00000000-s{shard:03}.json")),
+            )
+            .unwrap()
+            .unwrap();
+            partials.extend(rep.into_partials(&layout));
+        }
+        let opts = VSampleOpts {
+            seed: 7,
+            iteration: 0,
+            adjust: false,
+            threads: 1,
+        };
+        let f = crate::integrands::by_name("f3", 3).unwrap();
+        let (merged, _) =
+            crate::engine::merge_task_partials(layout.d, layout.nb, false, &partials);
+        let (reference, _) = NativeEngine.vsample(&*f, &layout, &bins, &opts);
+        assert_eq!(merged.integral.to_bits(), reference.integral.to_bits());
+        assert_eq!(merged.variance.to_bits(), reference.variance.to_bits());
+        // Second worker pass: everything already reported → no work,
+        // immediate exit on the stop marker.
+        let again = run_spool_worker(&dir, 1, Duration::from_millis(1), None).unwrap();
+        assert_eq!(again.processed, 0);
+        let _ = std::fs::remove_dir_all(dir);
+    }
+
+    #[test]
+    fn idle_timeout_returns_instead_of_hanging() {
+        let dir = scratch("idle");
+        let out = run_spool_worker(
+            &dir,
+            1,
+            Duration::from_millis(1),
+            Some(Duration::from_millis(20)),
+        )
+        .unwrap();
+        assert_eq!(out, WorkerOutcome::default());
+        let _ = std::fs::remove_dir_all(dir);
+    }
+}

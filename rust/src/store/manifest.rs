@@ -15,10 +15,11 @@
 //! keys, fixed float format) of the fields that determine the
 //! *numbers* — integrand, dim, seed, budgets, tolerance, grid mode,
 //! sampling, plan. Service metadata (job id, priority, checkpoint
-//! interval) and the engine thread count (results are bitwise
-//! thread-count-invariant) are deliberately excluded: two submissions
-//! that would compute the same answer share one digest, one
-//! checkpoint, and one cache entry.
+//! interval) and the execution knobs — thread count, exec schedule,
+//! shard count, shard spool directory (results are bitwise invariant
+//! to all of them) — are deliberately excluded: two submissions that
+//! would compute the same answer share one digest, one checkpoint,
+//! and one cache entry.
 
 use crate::api::{RunPlan, Stage, StopReason};
 use crate::coordinator::{IntegrationOutput, JobConfig};
@@ -50,8 +51,9 @@ pub struct JobManifest {
     pub integrand: String,
     /// Integrand dimension.
     pub dim: usize,
-    /// The run configuration. The `threads` field is ignored on
-    /// submission (the daemon decides; results are thread-invariant).
+    /// The run configuration. The execution knobs (`threads`,
+    /// `shards`, `shard_dir`, `exec`) are ignored on submission — the
+    /// daemon decides; results are invariant to all of them.
     pub config: JobConfig,
     /// Iterations between durable checkpoint flushes (>= 1).
     pub checkpoint_interval: usize,
@@ -655,6 +657,13 @@ mod tests {
         m.priority = -3;
         m.checkpoint_interval = 7;
         m.config.threads = 16;
+        assert_eq!(m.digest(), d);
+        // ...nor do the other execution knobs: an 8-shard spooled run
+        // is bitwise the single-worker run, so it shares its cache
+        // entry and checkpoint.
+        let mut m = demo_manifest();
+        m.config.shards = 8;
+        m.config.shard_dir = Some("/tmp/spool".into());
         assert_eq!(m.digest(), d);
         // ...semantic fields do.
         let mut m = demo_manifest();

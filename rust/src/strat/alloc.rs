@@ -241,6 +241,21 @@ impl Allocation {
         *d = (1.0 - DAMPING) * *d + DAMPING * d_new.max(0.0);
     }
 
+    /// Fold a contiguous span of fresh variance observations, one per
+    /// cube starting at `cube_lo` — the damped-accumulator merge the
+    /// shard coordinator uses to absorb each shard's `d_new` slice.
+    ///
+    /// Within one iteration every cube is observed exactly once, and
+    /// [`Allocation::absorb`] touches only `damped[cube]`; absorbing
+    /// disjoint spans in *any* order therefore produces bitwise the
+    /// same accumulator as the single-worker engine's interleaved
+    /// per-cube absorbs (property-tested below).
+    pub fn absorb_span(&mut self, cube_lo: usize, d_new: &[f64]) {
+        for (i, &dn) in d_new.iter().enumerate() {
+            self.absorb(cube_lo + i, dn);
+        }
+    }
+
     /// Re-apportion `budget` samples across cubes from the damped
     /// accumulator with weights `d_k^beta`.
     ///
@@ -505,6 +520,40 @@ mod tests {
         assert_eq!(a.damped()[0], 6.0);
         a.absorb(0, -3.0); // negative observations clamp to zero
         assert_eq!(a.damped()[0], 3.0);
+    }
+
+    /// Property: one observation per cube, delivered as disjoint spans
+    /// in *any* span order, damps bitwise identically to the engine's
+    /// interleaved per-cube absorbs — the coordinator's merge freedom.
+    #[test]
+    fn absorb_span_order_is_bitwise_neutral_across_disjoint_spans() {
+        let layout = Layout::compute(3, 8000, 20, 1).unwrap();
+        let obs: Vec<f64> = (0..layout.m)
+            .map(|k| ((k * 2654435761usize % 997) as f64) * 0.013 + 1e-9)
+            .collect();
+
+        let mut reference = Allocation::uniform(&layout);
+        reference.absorb(3, 42.0); // pre-existing accumulator state
+        for (cube, &dn) in obs.iter().enumerate() {
+            reference.absorb(cube, dn);
+        }
+
+        // Same observations as 5 uneven spans, absorbed back-to-front.
+        let mut spans = Allocation::uniform(&layout);
+        spans.absorb(3, 42.0);
+        let cuts = [0, 7, layout.m / 3, layout.m / 2, layout.m - 1, layout.m];
+        for w in cuts.windows(2).rev() {
+            spans.absorb_span(w[0], &obs[w[0]..w[1]]);
+        }
+
+        for (a, b) in reference.damped().iter().zip(spans.damped()) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        // And the downstream reallocation is therefore identical too.
+        reference.reallocate(8000, DEFAULT_BETA);
+        spans.reallocate(8000, DEFAULT_BETA);
+        assert_eq!(reference.counts(), spans.counts());
+        assert_eq!(reference.offsets(), spans.offsets());
     }
 
     #[test]

@@ -1,0 +1,221 @@
+//! Shard-execution equivalence suite: an N-shard run must be bitwise
+//! identical to the single-worker run — through the facade, on both
+//! execution schedules, on both sampling modes, over both transports
+//! (in-process pool and spool directory), across straggler fallbacks,
+//! and through a suspend/checkpoint/resume cycle.
+//!
+//! The unit layers (rust/src/shard/*) pin the per-component contracts;
+//! this suite pins the end-to-end ones the README advertises.
+
+use mcubes::coordinator::VSampleBackend;
+use mcubes::integrands::by_name;
+use mcubes::prelude::*;
+use mcubes::shard::spool_file_name;
+use std::path::PathBuf;
+use std::time::Duration;
+
+fn scratch(tag: &str) -> PathBuf {
+    let p = std::env::temp_dir().join(format!("mcubes-shard-equiv-{}-{tag}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&p);
+    std::fs::create_dir_all(&p).unwrap();
+    p
+}
+
+fn assert_same_bits(a: &IntegrationOutput, b: &IntegrationOutput) {
+    assert_eq!(a.integral.to_bits(), b.integral.to_bits());
+    assert_eq!(a.sigma.to_bits(), b.sigma.to_bits());
+    assert_eq!(a.iterations, b.iterations);
+}
+
+/// The headline contract: 8 shards reproduce the single worker
+/// bitwise through the `Integrator` facade, for every combination of
+/// sampling mode (uniform m-Cubes, VEGAS+) and execution schedule
+/// (fused streaming, block pipeline).
+#[test]
+fn eight_shards_match_single_worker_across_modes_and_schedules() {
+    for sampling in [Sampling::Uniform, Sampling::vegas_plus()] {
+        for exec in [ExecPath::Streaming, ExecPath::Block] {
+            let run = |shards: usize| {
+                Integrator::from_registry("f4", 5)
+                    .unwrap()
+                    .maxcalls(1 << 12)
+                    .tolerance(1e-12)
+                    .plan(RunPlan::classic(5, 3, 0))
+                    .seed(23)
+                    .threads(2)
+                    .sampling(sampling)
+                    .exec(exec)
+                    .shards(shards)
+                    .run()
+                    .unwrap()
+            };
+            let single = run(1);
+            let sharded = run(8);
+            assert_same_bits(&sharded, &single);
+        }
+    }
+}
+
+/// Shard planning stays exact past the 2^32-call boundary (the PR 5
+/// truncation-bug class): a d=1 layout with 2^33 total calls
+/// partitions tasks, cubes, and 64-bit Philox counters with no
+/// overlap and no loss. Pure arithmetic — nothing is evaluated.
+#[test]
+fn plan_arithmetic_is_exact_past_two_to_the_32_calls() {
+    let layout = Layout::compute(1, 1usize << 33, 50, 8).unwrap();
+    assert!(layout.calls() > 1usize << 32, "layout must exceed 2^32 calls");
+    let plan = ShardPlan::uniform(&layout, 8);
+    assert_eq!(plan.nshards(), 8);
+    let spans = plan.spans();
+    assert_eq!(spans[0].task_lo, 0);
+    assert_eq!(spans[0].cube_lo, 0);
+    assert_eq!(spans[0].counter_lo, 0);
+    for w in spans.windows(2) {
+        assert_eq!(w[0].task_hi, w[1].task_lo);
+        assert_eq!(w[0].cube_hi, w[1].cube_lo);
+        assert_eq!(w[0].counter_hi, w[1].counter_lo);
+    }
+    let last = spans[spans.len() - 1];
+    assert_eq!(last.task_hi, plan.ntasks());
+    assert_eq!(last.cube_hi, layout.m);
+    assert_eq!(last.counter_hi, layout.calls() as u64);
+    assert!(last.counter_hi > u64::from(u32::MAX), "counters span past u32");
+}
+
+/// The spool (process) transport reproduces both the in-process
+/// sharded run and the single worker bitwise, with an external-style
+/// worker loop (here: a thread running the same `run_spool_worker`
+/// the `mcubes shard-worker` CLI calls) computing every span.
+#[test]
+fn spool_transport_matches_in_process_and_single_worker_bitwise() {
+    let run = |shards: usize, dir: Option<&PathBuf>| {
+        let mut intg = Integrator::from_registry("f4", 4)
+            .unwrap()
+            .maxcalls(1 << 11)
+            .tolerance(1e-12)
+            .plan(RunPlan::classic(4, 2, 0))
+            .seed(77)
+            .threads(2)
+            .sampling(Sampling::vegas_plus())
+            .shards(shards);
+        if let Some(d) = dir {
+            intg = intg.shard_dir(d.to_str().unwrap());
+        }
+        intg.run().unwrap()
+    };
+    let single = run(1, None);
+    let in_process = run(4, None);
+    assert_same_bits(&in_process, &single);
+
+    let dir = scratch("spool-run");
+    let worker_dir = dir.clone();
+    let worker = std::thread::spawn(move || {
+        run_spool_worker(&worker_dir, 1, Duration::from_millis(1), None).unwrap()
+    });
+    let spooled = run(4, Some(&dir));
+    spool_close(&dir).unwrap();
+    let outcome = worker.join().unwrap();
+    assert_same_bits(&spooled, &single);
+    assert!(outcome.processed > 0, "the spool worker computed spans");
+    let _ = std::fs::remove_dir_all(dir);
+}
+
+/// Straggler policy: with no live worker and a pre-poisoned (torn)
+/// report in the spool, every shard takes the local-fallback path —
+/// and the merged result is still bitwise the in-process one.
+#[test]
+fn torn_reports_and_dead_workers_fall_back_bitwise() {
+    let layout = Layout::compute(4, 2048, 10, 2).unwrap();
+    let bins = Bins::uniform(4, 10);
+    let f = by_name("f2", 4).unwrap();
+    let reference = ShardedBackend::new(f.clone(), layout, 4, 2, Sampling::Uniform, None).unwrap();
+    let want = reference.run(&bins, 11, 0, true).unwrap();
+
+    let dir = scratch("straggler");
+    let opts = SpoolOptions {
+        timeout: Duration::from_millis(100),
+        poll: Duration::from_millis(1),
+        max_retries: 1,
+        local_fallback: true,
+    };
+    let transport = SpoolTransport::open(&dir, opts).unwrap();
+    // Shard 0's report is already present but torn mid-write.
+    std::fs::write(dir.join("reports").join(spool_file_name(0, 0)), b"{\"$schema").unwrap();
+    let spooled = ShardedBackend::new(f, layout, 4, 2, Sampling::Uniform, None)
+        .unwrap()
+        .with_spool(transport);
+    let got = spooled.run(&bins, 11, 0, true).unwrap();
+    assert_eq!(got.0.integral.to_bits(), want.0.integral.to_bits());
+    assert_eq!(got.0.variance.to_bits(), want.0.variance.to_bits());
+    let stats = spooled.shard_stats().unwrap();
+    assert_eq!(stats.straggler_retries, 4, "all four spans took the fallback");
+    let _ = std::fs::remove_dir_all(dir);
+}
+
+/// Strict deployments (`local_fallback: false`) surface a typed
+/// `Error::Shard` instead of silently recomputing — and instead of
+/// hanging.
+#[test]
+fn strict_spool_mode_fails_typed_instead_of_hanging() {
+    let layout = Layout::compute(3, 1024, 8, 1).unwrap();
+    let bins = Bins::uniform(3, 8);
+    let f = by_name("f3", 3).unwrap();
+    let dir = scratch("strict");
+    let opts = SpoolOptions {
+        timeout: Duration::from_millis(50),
+        poll: Duration::from_millis(1),
+        max_retries: 1,
+        local_fallback: false,
+    };
+    let transport = SpoolTransport::open(&dir, opts).unwrap();
+    let strict = ShardedBackend::new(f, layout, 4, 1, Sampling::Uniform, None)
+        .unwrap()
+        .with_spool(transport);
+    let err = strict.run(&bins, 3, 0, false).unwrap_err();
+    assert!(matches!(err, Error::Shard(_)), "got {err}");
+    let _ = std::fs::remove_dir_all(dir);
+}
+
+/// A sharded session survives suspend → JSON checkpoint → resume with
+/// no bit of drift: the resumed 8-shard run equals both the
+/// uninterrupted 8-shard run and the single worker.
+#[test]
+fn sharded_checkpoint_resumes_bitwise() {
+    let builder = |shards: usize| {
+        Integrator::from_registry("f4", 5)
+            .unwrap()
+            .maxcalls(1 << 12)
+            .tolerance(1e-12)
+            .plan(RunPlan::classic(7, 5, 1))
+            .seed(41)
+            .threads(4)
+            .sampling(Sampling::vegas_plus())
+            .shards(shards)
+    };
+    let single = builder(1).run().unwrap();
+    let straight = builder(8).run().unwrap();
+    assert_same_bits(&straight, &single);
+
+    let mut session = builder(8).session().unwrap();
+    for _ in 0..3 {
+        session.step().unwrap().unwrap();
+    }
+    assert_eq!(session.shard_stats().shards, 8);
+    let path = std::env::temp_dir().join(format!(
+        "mcubes-shard-equiv-{}-checkpoint.json",
+        std::process::id()
+    ));
+    session.suspend().save(&path).unwrap();
+    drop(session);
+
+    let checkpoint = Checkpoint::load(&path).unwrap();
+    let _ = std::fs::remove_file(&path);
+    assert_eq!(checkpoint.iteration(), 3);
+    let resumed = builder(8)
+        .resume_session(&checkpoint)
+        .unwrap()
+        .finish()
+        .unwrap()
+        .output;
+    assert_same_bits(&resumed, &straight);
+}

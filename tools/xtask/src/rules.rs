@@ -36,12 +36,12 @@ pub const RULES: &[RuleInfo] = &[
     RuleInfo {
         id: "MC002",
         summary: "no HashMap/HashSet in deterministic core modules",
-        scope: "engine/, strat/, estimator/, grid/",
+        scope: "engine/, strat/, estimator/, grid/, shard/",
     },
     RuleInfo {
         id: "MC003",
         summary: "no std::time, rand::, or thread_rng in core sampling modules",
-        scope: "rng/, engine/, strat/, grid/, estimator/, baselines/, store/",
+        scope: "rng/, engine/, strat/, grid/, estimator/, baselines/, store/, shard/",
     },
     RuleInfo {
         id: "MC004",
@@ -206,7 +206,7 @@ fn mc001(toks: &[Tok], spans: &[(usize, usize)], out: &mut Vec<Finding>) {
 /// MC002 — hash containers iterate in randomized order; the
 /// deterministic core must use BTreeMap/BTreeSet/Vec instead.
 fn mc002(rel: &str, toks: &[Tok], spans: &[(usize, usize)], out: &mut Vec<Finding>) {
-    if !path_in(rel, &["engine/", "strat/", "estimator/", "grid/"]) {
+    if !path_in(rel, &["engine/", "strat/", "estimator/", "grid/", "shard/"]) {
         return;
     }
     for (i, t) in toks.iter().enumerate() {
@@ -229,7 +229,9 @@ fn mc002(rel: &str, toks: &[Tok], spans: &[(usize, usize)], out: &mut Vec<Findin
 fn mc003(rel: &str, toks: &[Tok], spans: &[(usize, usize)], out: &mut Vec<Finding>) {
     if !path_in(
         rel,
-        &["rng/", "engine/", "strat/", "grid/", "estimator/", "baselines/", "store/"],
+        &[
+            "rng/", "engine/", "strat/", "grid/", "estimator/", "baselines/", "store/", "shard/",
+        ],
     ) {
         return;
     }
@@ -428,6 +430,21 @@ mod tests {
         let acc = "parallel_chunks(n, t, |a, b| { s += a; });\n";
         assert!(run("engine/streaming.rs", acc).is_empty());
         assert_eq!(run("coordinator/backend.rs", acc).len(), 1);
+    }
+
+    #[test]
+    fn shard_module_is_in_rule_scope() {
+        // shard/ merges the distributed partials, so it sits inside
+        // the same determinism fences as the engine core: hash
+        // containers, clocks, and parallel `+=` are all flagged there
+        // (the shard sources justify their timeout clocks with
+        // per-line lint:allow directives).
+        let hash = "use std::collections::HashMap;\n";
+        assert_eq!(run("shard/plan.rs", hash)[0].rule, "MC002");
+        let clock = "use std::time::Instant;\n";
+        assert_eq!(run("shard/worker.rs", clock)[0].rule, "MC003");
+        let acc = "parallel_chunks(n, t, |a, b| { s += a; });\n";
+        assert_eq!(run("shard/backend.rs", acc)[0].rule, "MC004");
     }
 
     #[test]
