@@ -130,12 +130,17 @@ fn cmd_integrate(args: &[String]) -> i32 {
             intg = intg.warm_start(grid);
         }
 
-        let out = intg.run().map_err(|e| e.to_string())?;
+        let run_result = intg.run();
         if let Some(dir) = &shard_dir {
             // Drop the stop marker so attached shard workers exit
-            // instead of polling an idle spool forever.
-            mcubes::shard::spool_close(std::path::Path::new(dir)).map_err(|e| e.to_string())?;
+            // instead of polling an idle spool forever — on failed
+            // runs too (a close error must not mask the run's error).
+            let closed = mcubes::shard::spool_close(std::path::Path::new(dir));
+            if run_result.is_ok() {
+                closed.map_err(|e| e.to_string())?;
+            }
         }
+        let out = run_result.map_err(|e| e.to_string())?;
         if let Some(path) = p.get("grid-out") {
             intg.export_grid()
                 .expect("grid present after a successful run")

@@ -207,7 +207,8 @@ impl ShardedBackend {
         let layout = &self.layout;
         let fallback =
             |sp: &ShardSpan| run_span(f, layout, bins, alloc, opts, sp.task_lo, sp.task_hi);
-        let partials = spool.gather(plan, &self.layout, opts.iteration, &shape, &fallback, stats)?;
+        let partials =
+            spool.gather(plan, &tasks, &self.layout, opts.iteration, &shape, &fallback, stats)?;
         spool.cleanup(plan, opts.iteration);
         Ok(partials)
     }

@@ -8,9 +8,14 @@
 //!    `<dir>/tasks/` (atomic rename; workers never observe a torn
 //!    task).
 //! 2. **Gather** — poll `<dir>/reports/` for each shard's sealed
-//!    [`ShardReport`]. A corrupt or inconsistent report is deleted and
-//!    counted against that shard's retry budget (the file's absence
-//!    re-opens the task for any live worker). A shard that is still
+//!    [`ShardReport`]. Every report must carry the
+//!    [`ShardTask::digest`] of the task it answers, so a stale report
+//!    left over from another run (different seed, integrand, grid, or
+//!    layout — spool file names are only (iteration, shard)-scoped) is
+//!    rejected instead of silently merged. A corrupt or inconsistent
+//!    report is deleted and counted against that shard's retry budget
+//!    (the file's absence re-opens the task for any live worker). A
+//!    shard that is still
 //!    missing at the deadline — or that exhausts its retry budget — is
 //!    recomputed by a fresh in-process worker when `local_fallback` is
 //!    on, and surfaces as a typed [`Error::Shard`] when it is off.
@@ -78,8 +83,9 @@ pub fn spool_file_name(iteration: u32, shard: usize) -> String {
     format!("it{iteration:08}-s{shard:03}.json")
 }
 
-/// Write the stop marker: spool workers exit once it exists and every
-/// visible task has a report.
+/// Write the stop marker: spool workers exit once it exists and no
+/// serveable task is left (tasks they can never answer don't keep
+/// them alive — see [`super::run_spool_worker`]).
 pub fn spool_close(dir: &Path) -> Result<()> {
     std::fs::create_dir_all(dir)?;
     std::fs::write(stop_path(dir), b"stop\n")?;
@@ -94,12 +100,28 @@ pub struct SpoolTransport {
 
 impl SpoolTransport {
     /// Open (creating `tasks/` + `reports/` as needed) a spool rooted
-    /// at `dir`, and clear any stale stop marker so workers launched
-    /// afterwards stay alive.
+    /// at `dir`, clear any stale stop marker so workers launched
+    /// afterwards stay alive, and purge leftover task/report/`.tmp`
+    /// files from earlier runs — a run that errored out mid-iteration
+    /// (cleanup only runs after a successful merge) or a straggler
+    /// that reported after cleanup must not seed the next run's
+    /// directory. (The gather path additionally rejects any stale
+    /// report by its [`ShardTask::digest`], so the purge is hygiene,
+    /// not the safety mechanism.)
     pub fn open(dir: impl AsRef<Path>, opts: SpoolOptions) -> Result<SpoolTransport> {
         let dir = dir.as_ref().to_path_buf();
-        std::fs::create_dir_all(tasks_dir(&dir))?;
-        std::fs::create_dir_all(reports_dir(&dir))?;
+        for sub in [tasks_dir(&dir), reports_dir(&dir)] {
+            std::fs::create_dir_all(&sub)?;
+            for entry in std::fs::read_dir(&sub)? {
+                let path = entry?.path();
+                let stale = path
+                    .extension()
+                    .is_some_and(|e| e == "json" || e == "tmp");
+                if stale {
+                    let _ = std::fs::remove_file(&path);
+                }
+            }
+        }
         let _ = std::fs::remove_file(stop_path(&dir));
         Ok(SpoolTransport { dir, opts })
     }
@@ -133,12 +155,16 @@ impl SpoolTransport {
     }
 
     /// Gather every shard's report for `iteration`, applying the
-    /// corruption/straggler policy. `fallback` recomputes one span
-    /// in-process; `shape` pins the expected report geometry. Returns
-    /// the full iteration's partials in global task order.
+    /// corruption/straggler policy. `tasks` are the scattered work
+    /// orders — each report must echo its task's digest, which is what
+    /// rejects stale reports computed for a different run. `fallback`
+    /// recomputes one span in-process; `shape` pins the expected
+    /// report geometry. Returns the full iteration's partials in
+    /// global task order.
     pub(crate) fn gather(
         &self,
         plan: &ShardPlan,
+        tasks: &[ShardTask],
         layout: &crate::strat::Layout,
         iteration: u32,
         shape: &ReportShape,
@@ -147,6 +173,13 @@ impl SpoolTransport {
     ) -> Result<Vec<TaskPartial>> {
         let reports = reports_dir(&self.dir);
         let nshards = plan.nshards();
+        // One digest per shard, computed once (not per poll sweep).
+        let mut digests: Vec<Option<String>> = vec![None; nshards];
+        for t in tasks {
+            if t.shard < nshards {
+                digests[t.shard] = Some(t.digest());
+            }
+        }
         let mut collected: Vec<Option<Vec<TaskPartial>>> = Vec::new();
         collected.resize_with(nshards, || None);
         let mut retries = vec![0usize; nshards];
@@ -157,9 +190,16 @@ impl SpoolTransport {
                 if collected[span.shard].is_some() {
                     continue;
                 }
+                let Some(want_sha) = digests[span.shard].as_deref() else {
+                    return Err(Error::Shard(format!(
+                        "gather has no scattered task for shard {}",
+                        span.shard
+                    )));
+                };
                 let path = reports.join(spool_file_name(iteration, span.shard));
                 match ShardReport::load(&path) {
-                    Ok(Some(rep)) => match check_report(&rep, span, iteration, layout, shape) {
+                    Ok(Some(rep)) => match check_report(&rep, span, iteration, want_sha, layout, shape)
+                    {
                         Ok(()) => collected[span.shard] = Some(rep.into_partials(layout)),
                         Err(detail) => {
                             // Inconsistent ≙ corrupt: drop the file so a
@@ -238,8 +278,8 @@ impl SpoolTransport {
     }
 
     /// Remove one iteration's task + report files after a successful
-    /// merge (failures are ignored: leftovers are harmless and the
-    /// next open sweeps nothing — names are iteration-scoped).
+    /// merge (failures are ignored: the next `open` purges leftovers,
+    /// and `gather` rejects any stale report by its task digest).
     pub(crate) fn cleanup(&self, plan: &ShardPlan, iteration: u32) {
         for span in plan.spans() {
             let name = spool_file_name(iteration, span.shard);
@@ -249,11 +289,13 @@ impl SpoolTransport {
     }
 }
 
-/// Validate one report against its span and the expected geometry.
+/// Validate one report against its span, its task's digest, and the
+/// expected geometry.
 fn check_report(
     rep: &ShardReport,
     span: &ShardSpan,
     iteration: u32,
+    want_sha: &str,
     layout: &crate::strat::Layout,
     shape: &ReportShape,
 ) -> std::result::Result<(), String> {
@@ -261,6 +303,17 @@ fn check_report(
         return Err(format!(
             "report identity (shard {}, iteration {}) != expected (shard {}, iteration {})",
             rep.shard, rep.iteration, span.shard, iteration
+        ));
+    }
+    // The digest binds the report to the *content* of the task it
+    // answered — seed, integrand, layout, grid, span — so a stale
+    // report from another run sharing the spool (file names are only
+    // (iteration, shard)-scoped) can never be merged.
+    if rep.task_sha != want_sha {
+        return Err(format!(
+            "report answers task {} but the scattered task is {want_sha} \
+             (stale report from a different run?)",
+            rep.task_sha
         ));
     }
     if rep.tasks.len() != span.ntasks() {
@@ -348,6 +401,7 @@ mod tests {
         layout: &Layout,
         bins: &Bins,
         plan: &ShardPlan,
+        tasks: &[ShardTask],
         stats: &mut ShardStats,
     ) -> Result<Vec<TaskPartial>> {
         let f = by_name("f3", 3).unwrap();
@@ -364,7 +418,7 @@ mod tests {
         let fallback = move |sp: &ShardSpan| {
             super::super::worker::run_span(&*f, layout, bins, None, &opts, sp.task_lo, sp.task_hi)
         };
-        t.gather(plan, layout, 1, &shape, &fallback, stats)
+        t.gather(plan, tasks, layout, 1, &shape, &fallback, stats)
     }
 
     #[test]
@@ -384,7 +438,7 @@ mod tests {
         let bytes = std::fs::read(&torn).unwrap();
         std::fs::write(&torn, &bytes[..bytes.len() / 3]).unwrap();
         let mut stats = ShardStats::default();
-        let partials = run_gather(&t, &layout, &bins, &plan, &mut stats).unwrap();
+        let partials = run_gather(&t, &layout, &bins, &plan, &tasks, &mut stats).unwrap();
         // Shards 1 (corrupt, retries exhausted at deadline), 2, 3
         // (never reported) all took the straggler path.
         assert_eq!(stats.straggler_retries, 3);
@@ -416,7 +470,7 @@ mod tests {
         let (layout, bins, plan, tasks) = setting();
         t.scatter(&tasks).unwrap();
         let mut stats = ShardStats::default();
-        let err = run_gather(&t, &layout, &bins, &plan, &mut stats).unwrap_err();
+        let err = run_gather(&t, &layout, &bins, &plan, &tasks, &mut stats).unwrap_err();
         assert!(matches!(err, Error::Shard(_)), "got {err}");
         assert!(err.to_string().contains("shard"));
         let _ = std::fs::remove_dir_all(dir);
@@ -435,7 +489,7 @@ mod tests {
             .save(&reports_dir(&dir).join(spool_file_name(1, 0)))
             .unwrap();
         let mut stats = ShardStats::default();
-        let partials = run_gather(&t, &layout, &bins, &plan, &mut stats).unwrap();
+        let partials = run_gather(&t, &layout, &bins, &plan, &tasks, &mut stats).unwrap();
         assert!(stats.straggler_retries >= 1);
         let (merged, _) =
             crate::engine::merge_task_partials(layout.d, layout.nb, false, &partials);
@@ -448,6 +502,70 @@ mod tests {
         };
         let (reference, _) = crate::engine::NativeEngine.vsample(&*f, &layout, &bins, &opts);
         assert_eq!(merged.integral.to_bits(), reference.integral.to_bits());
+        let _ = std::fs::remove_dir_all(dir);
+    }
+
+    #[test]
+    fn stale_reports_from_a_different_run_are_rejected_by_digest() {
+        let dir = scratch("stale");
+        let t = SpoolTransport::open(&dir, fast_opts(true)).unwrap();
+        let (layout, bins, plan, tasks) = setting();
+        t.scatter(&tasks).unwrap();
+        // A straggler from a *previous run with a different seed* wrote
+        // its report under the same (iteration, shard) file name. Its
+        // identity and shapes all line up — only the task digest can
+        // tell it apart from the real answer.
+        for task in &tasks {
+            let stale_task = ShardTask {
+                seed: task.seed + 1,
+                ..task.clone()
+            };
+            super::super::worker::process_task(&stale_task, 1)
+                .unwrap()
+                .save(&reports_dir(&dir).join(spool_file_name(1, task.shard)))
+                .unwrap();
+        }
+        let mut stats = ShardStats::default();
+        let partials = run_gather(&t, &layout, &bins, &plan, &tasks, &mut stats).unwrap();
+        // Every stale report was rejected (never merged) and the spans
+        // recomputed — the merge is still the seed-5 single-worker
+        // fold, bitwise.
+        assert_eq!(stats.straggler_retries, plan.nshards());
+        let (merged, _) =
+            crate::engine::merge_task_partials(layout.d, layout.nb, false, &partials);
+        let f = by_name("f3", 3).unwrap();
+        let opts = VSampleOpts {
+            seed: 5,
+            iteration: 1,
+            adjust: false,
+            threads: 1,
+        };
+        let (reference, _) = crate::engine::NativeEngine.vsample(&*f, &layout, &bins, &opts);
+        assert_eq!(merged.integral.to_bits(), reference.integral.to_bits());
+        assert_eq!(merged.variance.to_bits(), reference.variance.to_bits());
+        let _ = std::fs::remove_dir_all(dir);
+    }
+
+    #[test]
+    fn open_purges_leftover_spool_files() {
+        let dir = scratch("purge");
+        // Seed the directory with a prior run's leftovers: a task, a
+        // report, a torn .tmp, and a stop marker.
+        std::fs::create_dir_all(tasks_dir(&dir)).unwrap();
+        std::fs::create_dir_all(reports_dir(&dir)).unwrap();
+        std::fs::write(tasks_dir(&dir).join("it00000000-s000.json"), b"{}").unwrap();
+        std::fs::write(reports_dir(&dir).join("it00000000-s000.json"), b"{}").unwrap();
+        std::fs::write(reports_dir(&dir).join("it00000000-s001.json.tmp"), b"{").unwrap();
+        std::fs::write(stop_path(&dir), b"stop\n").unwrap();
+        let _ = SpoolTransport::open(&dir, fast_opts(true)).unwrap();
+        assert!(crate::store::list_json_sorted(&tasks_dir(&dir))
+            .unwrap()
+            .is_empty());
+        assert!(crate::store::list_json_sorted(&reports_dir(&dir))
+            .unwrap()
+            .is_empty());
+        assert!(!reports_dir(&dir).join("it00000000-s001.json.tmp").exists());
+        assert!(!stop_path(&dir).exists());
         let _ = std::fs::remove_dir_all(dir);
     }
 

@@ -20,7 +20,8 @@ use crate::engine::{reduction_task_span, reduction_tasks, TaskPartial};
 use crate::error::{Error, Result};
 use crate::strat::Layout;
 use crate::api::GridState;
-use crate::util::json::{ObjBuilder, Value};
+use crate::util::digest::sha256_hex;
+use crate::util::json::{to_canonical_json, ObjBuilder, Value};
 use std::path::Path;
 
 /// Schema tag of a sealed shard-task file (coordinator → worker).
@@ -167,6 +168,16 @@ impl ShardTask {
         Ok(task)
     }
 
+    /// Content digest of this task: sha256 over its canonical JSON —
+    /// by construction the same hex the store's seal records in the
+    /// task file. Reports carry it back ([`ShardReport::task_sha`]) so
+    /// the coordinator can reject a report computed for a *different*
+    /// task (stale spool leftovers from another run, seed, grid, or
+    /// layout) no matter how its file is named.
+    pub fn digest(&self) -> String {
+        sha256_hex(to_canonical_json(&self.to_json()).as_bytes())
+    }
+
     /// Seal and atomically write to `path`.
     pub fn save(&self, path: &Path) -> Result<()> {
         let sealed = crate::store::seal(self.to_json());
@@ -222,16 +233,27 @@ pub struct ShardReport {
     pub shard: usize,
     /// Iteration the partials belong to.
     pub iteration: u32,
+    /// [`ShardTask::digest`] of the task this report answers — binds
+    /// the report to the full work order (integrand, layout, grid,
+    /// seed, span), not just to a file name.
+    pub task_sha: String,
     /// Per-task partials, ascending by task index.
     pub tasks: Vec<TaskReport>,
 }
 
 impl ShardReport {
-    /// Package a worker's partials (already in task order).
-    pub fn from_partials(shard: usize, iteration: u32, partials: Vec<TaskPartial>) -> ShardReport {
+    /// Package a worker's partials (already in task order) as the
+    /// answer to the task whose [`ShardTask::digest`] is `task_sha`.
+    pub fn from_partials(
+        shard: usize,
+        iteration: u32,
+        task_sha: String,
+        partials: Vec<TaskPartial>,
+    ) -> ShardReport {
         ShardReport {
             shard,
             iteration,
+            task_sha,
             tasks: partials.into_iter().map(TaskReport::from).collect(),
         }
     }
@@ -278,6 +300,7 @@ impl ShardReport {
             .field("$schema", SHARD_REPORT_SCHEMA)
             .field("shard", self.shard)
             .field("iteration", i64::from(self.iteration))
+            .field("task_sha", self.task_sha.as_str())
             .field("tasks", tasks)
             .build()
     }
@@ -311,6 +334,11 @@ impl ShardReport {
         Ok(ShardReport {
             shard: req_usize(v, "shard")?,
             iteration: req_u32(v, "iteration")?,
+            task_sha: v
+                .req("task_sha")?
+                .as_str()
+                .ok_or_else(|| Error::Manifest("task_sha digest".into()))?
+                .to_string(),
             tasks,
         })
     }
@@ -385,6 +413,36 @@ mod tests {
     }
 
     #[test]
+    fn task_digest_matches_the_file_seal_and_tracks_content() {
+        let layout = Layout::compute(3, 512, 8, 1).unwrap();
+        let task = ShardTask {
+            integrand: "f3".to_string(),
+            layout,
+            grid: GridState::from_bins(Bins::uniform(3, 8)),
+            seed: 5,
+            iteration: 1,
+            adjust: false,
+            shard: 0,
+            task_lo: 0,
+            task_hi: 4,
+        };
+        let dir = scratch("digest");
+        let path = dir.join("it00000001-s000.json");
+        task.save(&path).unwrap();
+        // digest() is exactly the sha256 seal the store wrote.
+        let text = std::fs::read_to_string(&path).unwrap();
+        let sealed = crate::util::json::parse(&text).unwrap();
+        assert_eq!(
+            sealed.get("sha256").and_then(Value::as_str),
+            Some(task.digest().as_str())
+        );
+        // Any semantic change — here the seed — moves the digest.
+        let other = ShardTask { seed: 6, ..task.clone() };
+        assert_ne!(task.digest(), other.digest());
+        let _ = std::fs::remove_dir_all(dir);
+    }
+
+    #[test]
     fn report_roundtrips_bitwise_and_rederives_cube_spans() {
         let layout = Layout::compute(4, 4096, 16, 1).unwrap();
         let ntasks = reduction_tasks(layout.m);
@@ -402,13 +460,14 @@ mod tests {
                 }
             })
             .collect();
-        let rep = ShardReport::from_partials(2, 7, partials.clone());
+        let rep = ShardReport::from_partials(2, 7, "a".repeat(64), partials.clone());
         let dir = scratch("report");
         let path = dir.join("it00000007-s002.json");
         rep.save(&path).unwrap();
         let back = ShardReport::load(&path).unwrap().unwrap();
         assert_eq!(back.shard, 2);
         assert_eq!(back.iteration, 7);
+        assert_eq!(back.task_sha, rep.task_sha);
         let restored = back.into_partials(&layout);
         assert_eq!(restored.len(), partials.len());
         for (a, b) in restored.iter().zip(partials.iter()) {
@@ -434,6 +493,7 @@ mod tests {
         let rep = ShardReport::from_partials(
             0,
             1,
+            "b".repeat(64),
             vec![TaskPartial {
                 task: 0,
                 cube_lo: 0,

@@ -88,6 +88,7 @@ pub fn process_task(task: &ShardTask, threads: usize) -> Result<ShardReport> {
     Ok(ShardReport::from_partials(
         task.shard,
         task.iteration,
+        task.digest(),
         partials,
     ))
 }
@@ -97,8 +98,11 @@ pub fn process_task(task: &ShardTask, threads: usize) -> Result<ShardReport> {
 pub struct WorkerOutcome {
     /// Task files computed and reported by this worker.
     pub processed: usize,
-    /// Task files skipped (report already present, or unreadable —
-    /// the coordinator's retry path owns unreadable tasks).
+    /// Skip events: a task that was unreadable, semantically
+    /// unserveable (unresolvable integrand, layout/allocation
+    /// mismatch), or whose report failed to write — the coordinator's
+    /// retry/straggler path owns every one of them. A task skipped on
+    /// several sweeps counts once per sweep.
     pub skipped: usize,
 }
 
@@ -119,13 +123,19 @@ pub(crate) fn stop_path(dir: &Path) -> PathBuf {
 }
 
 /// Run a spool worker loop over `dir` until the coordinator writes the
-/// stop marker (and every visible task has a report), or until
+/// stop marker (and every *serveable* task has a report), or until
 /// `max_idle` passes without any new work. Returns what it did.
 ///
 /// The loop is crash-tolerant by construction: a worker killed
 /// mid-computation leaves no report (the coordinator's timeout +
 /// retry path covers the span), and a worker killed mid-write leaves
-/// only a `.tmp` file the atomic-rename protocol ignores.
+/// only a `.tmp` file the atomic-rename protocol ignores. A task that
+/// cannot be served — unreadable file, unresolvable integrand,
+/// inconsistent allocation — is counted in
+/// [`WorkerOutcome::skipped`] and left for the coordinator's
+/// retry/straggler path; it never kills the loop and never blocks the
+/// stop marker (a pending-but-unserveable task must not pin a worker
+/// to a finished spool forever).
 pub fn run_spool_worker(
     dir: &Path,
     threads: usize,
@@ -140,6 +150,7 @@ pub fn run_spool_worker(
     let mut last_progress = Instant::now();
     loop {
         let mut pending = 0usize;
+        let mut unserved = 0usize; // pending tasks this sweep could not answer
         let mut progressed = false;
         for task_path in crate::store::list_json_sorted(&tasks)? {
             let Some(name) = task_path.file_name() else {
@@ -155,18 +166,33 @@ pub fn run_spool_worker(
             // rewritten version).
             let Ok(Some(task)) = ShardTask::load(&task_path) else {
                 out.skipped += 1;
+                unserved += 1;
                 continue;
             };
-            process_task(&task, threads)?.save(&report_path)?;
-            out.processed += 1;
-            pending -= 1;
-            progressed = true;
+            // Same policy for a task that loads but cannot be served
+            // (bad integrand name, allocation mismatch) or whose
+            // report fails to write: skip, keep sweeping — the
+            // coordinator's straggler path owns the span.
+            match process_task(&task, threads).and_then(|rep| rep.save(&report_path)) {
+                Ok(()) => {
+                    out.processed += 1;
+                    pending -= 1;
+                    progressed = true;
+                }
+                Err(_) => {
+                    out.skipped += 1;
+                    unserved += 1;
+                }
+            }
         }
         if progressed {
             last_progress = Instant::now();
             continue; // re-scan immediately: more tasks may have landed
         }
-        if pending == 0 && stop_path(dir).exists() {
+        // Stop once the coordinator says so and nothing serveable is
+        // left — tasks that only ever fail to load/serve must not pin
+        // the worker to a finished spool.
+        if pending == unserved && stop_path(dir).exists() {
             return Ok(out);
         }
         if let Some(idle) = max_idle {
@@ -282,6 +308,49 @@ mod tests {
         // immediate exit on the stop marker.
         let again = run_spool_worker(&dir, 1, Duration::from_millis(1), None).unwrap();
         assert_eq!(again.processed, 0);
+        let _ = std::fs::remove_dir_all(dir);
+    }
+
+    #[test]
+    fn unserveable_tasks_are_skipped_and_do_not_block_the_stop_marker() {
+        let layout = Layout::compute(3, 512, 8, 1).unwrap();
+        let bins = Bins::uniform(3, 8);
+        let dir = scratch("unserveable");
+        std::fs::create_dir_all(tasks_dir(&dir)).unwrap();
+        std::fs::create_dir_all(reports_dir(&dir)).unwrap();
+        let ntasks = reduction_tasks(layout.m);
+        let good = ShardTask {
+            integrand: "f3".to_string(),
+            layout,
+            grid: GridState::from_bins(bins.clone()),
+            seed: 7,
+            iteration: 0,
+            adjust: false,
+            shard: 0,
+            task_lo: 0,
+            task_hi: ntasks,
+        };
+        good.save(&tasks_dir(&dir).join("it00000000-s000.json"))
+            .unwrap();
+        // Loads fine but cannot be served: no such integrand in the
+        // registry (e.g. a task scattered by a newer build).
+        let bad = ShardTask {
+            integrand: "no-such-integrand".to_string(),
+            shard: 1,
+            ..good.clone()
+        };
+        bad.save(&tasks_dir(&dir).join("it00000000-s001.json"))
+            .unwrap();
+        // And one that never parses at all.
+        std::fs::write(tasks_dir(&dir).join("it00000000-s002.json"), b"{ torn").unwrap();
+        std::fs::write(stop_path(&dir), b"").unwrap();
+        // With idle timeout *disabled*, only the stop-marker path can
+        // end the loop — the two unserveable tasks must not pin it.
+        let out = run_spool_worker(&dir, 1, Duration::from_millis(1), None).unwrap();
+        assert_eq!(out.processed, 1);
+        assert!(out.skipped >= 2, "both bad tasks were skipped: {out:?}");
+        assert!(reports_dir(&dir).join("it00000000-s000.json").exists());
+        assert!(!reports_dir(&dir).join("it00000000-s001.json").exists());
         let _ = std::fs::remove_dir_all(dir);
     }
 
