@@ -6,10 +6,11 @@
 //!  4. a pull-based `Session`: step, suspend to a checkpoint, resume.
 //!
 //! The seed-era free functions (`integrate_native`, `run_driver`, ...)
-//! and the flat `max_iterations`/`adjust_iterations`/`skip_iterations`
-//! builder knobs still exist but are `#[deprecated]` shims over
-//! `RunPlan` and the same session core — new code should look like
-//! this file.
+//! have been removed (see the migration table in the `api` module
+//! docs); the flat `max_iterations`/`adjust_iterations`/
+//! `skip_iterations` builder knobs remain as `#[deprecated]` shims
+//! over `RunPlan` and the same session core — new code should look
+//! like this file.
 //!
 //! Run: cargo run --offline --release --example quickstart
 

@@ -6,6 +6,7 @@
 //!   * batched vs scalar-default evaluation (the PointBlock redesign)
 //!   * uniform m-Cubes vs VEGAS+ adaptive stratification (calls to tau)
 //!   * shard scaling (one iteration over N in-process shard workers)
+//!   * Engine dispatch overhead (static vs `Box<dyn Engine>` vtable)
 //! CSV: results/perf_microbench.csv; `BENCH {...}` JSON lines record
 //! the batch-vs-scalar and sampling-strategy series for the perf
 //! trajectory.
@@ -17,7 +18,8 @@
 use mcubes::api::{Integrator, RunPlan, Sampling};
 use mcubes::coordinator::{IntegrationOutput, JobConfig, JobRequest, Scheduler, VSampleBackend};
 use mcubes::engine::{
-    ExecPath, FillPath, NativeEngine, PointBlock, ScalarEval, VSampleOpts, VegasMap, BLOCK_POINTS,
+    Engine, ExecPath, FillPath, NativeEngine, PointBlock, ScalarEval, UniformEngine, VSampleOpts,
+    VegasMap, BLOCK_POINTS,
 };
 use mcubes::grid::Bins;
 use mcubes::integrands::by_name;
@@ -284,21 +286,23 @@ fn main() {
                 threads: 1,
             };
             let t_vs_simd = bench(opts, || {
-                black_box(NativeEngine.vsample_with_fill(
+                black_box(NativeEngine.vsample_exec(
                     &*f,
                     &layout,
                     &bins,
                     &vopts,
                     FillPath::Simd,
+                    ExecPath::default(),
                 ))
             });
             let t_vs_scalar = bench(opts, || {
-                black_box(NativeEngine.vsample_with_fill(
+                black_box(NativeEngine.vsample_exec(
                     &*f,
                     &layout,
                     &bins,
                     &vopts,
                     FillPath::Scalar,
+                    ExecPath::default(),
                 ))
             });
             let vsample_speedup = t_vs_scalar.median_ms() / t_vs_simd.median_ms();
@@ -332,7 +336,7 @@ fn main() {
     }
 
     // ---- Streaming vs block execution schedule ------------------------
-    // The fused streaming tile loop (engine::streaming, the default
+    // The fused streaming tile loop (engine::walk, the default
     // ExecPath) against the historical whole-block pipeline, on the
     // cheap integrands where the block path is memory-bandwidth-bound.
     // Results are bitwise identical (property-tested); this series is
@@ -602,7 +606,7 @@ fn main() {
             let bins = Bins::uniform(d, 50);
             let mut base_ms = 0.0f64;
             for shards in [1usize, 2, 4, 8] {
-                let backend = ShardedBackend::new(
+                let mut backend = ShardedBackend::new(
                     f.clone(),
                     layout,
                     shards,
@@ -637,6 +641,66 @@ fn main() {
             }
         }
         println!("{}", table.render());
+    }
+
+    // ---- Engine dispatch overhead (static vs trait object) ------------
+    // The tentpole routed every native pass through the `Engine` trait;
+    // the driver is generic (`EngineBackend<E>`) so the common case is
+    // still static dispatch, but `Box<dyn Engine>` is supported for
+    // runtime engine selection. This series pins how much the vtable
+    // costs on a full V-Sample pass (expected: noise — one virtual call
+    // per task range, amortized over ~10^5 evaluations).
+    {
+        println!("\nengine dispatch overhead: static vs Box<dyn Engine> (f4 d=8):");
+        let f = by_name("f4", 8).unwrap();
+        let calls = 1 << 17;
+        let layout = Layout::compute(8, calls, 50, 8).unwrap();
+        let bins = Bins::uniform(8, 50);
+        let vopts = VSampleOpts {
+            seed: 1,
+            iteration: 0,
+            adjust: true,
+            threads: 1,
+        };
+        let mut static_engine = UniformEngine::new(layout);
+        let t_static = bench(opts, || {
+            black_box(static_engine.vsample(
+                &*f,
+                &bins,
+                &vopts,
+                FillPath::Simd,
+                ExecPath::default(),
+            ))
+        });
+        let mut dyn_engine: Box<dyn Engine> = Box::new(UniformEngine::new(layout));
+        let t_dyn = bench(opts, || {
+            black_box(dyn_engine.vsample(
+                &*f,
+                &bins,
+                &vopts,
+                FillPath::Simd,
+                ExecPath::default(),
+            ))
+        });
+        let overhead = t_dyn.median_ms() / t_static.median_ms();
+        println!(
+            "static {:.2} ms vs dyn {:.2} ms ({overhead:.3}x)",
+            t_static.median_ms(),
+            t_dyn.median_ms()
+        );
+        let tag = "dispatch_overhead_f4_d8";
+        emit_bench(tag, "static_ms", t_static.median_ms(), "ms");
+        emit_bench(tag, "dyn_ms", t_dyn.median_ms(), "ms");
+        emit_bench(tag, "dyn_over_static", overhead, "x");
+        // The gated ratio is the reciprocal: the regression checker
+        // treats unit `x` as higher-is-better, so gate "how close dyn
+        // stays to static" — growing vtable overhead drives it down.
+        emit_bench(tag, "static_over_dyn", 1.0 / overhead, "x");
+        csv.row(vec![
+            tag.into(),
+            "dyn_over_static".into(),
+            format!("{overhead:.4}"),
+        ]);
     }
 
     let _ = csv.write_csv("results/perf_microbench.csv");

@@ -32,7 +32,7 @@ fn main() {
     let mut csv = Table::new(&["integrand", "platform", "kernel_ms", "total_ms"]);
 
     for name in ["fA", "fB"] {
-        let backend = PjrtBackend::load(&runtime, &reg, name, 0).expect("artifact");
+        let mut backend = PjrtBackend::load(&runtime, &reg, name, 0).expect("artifact");
         let meta = backend.meta().clone();
         let cfg = JobConfig::default()
             .with_maxcalls(meta.maxcalls)
@@ -45,8 +45,8 @@ fn main() {
             .expect("integrand")
             .config(cfg.clone());
         // Warm both paths (compile cache, page faults).
-        let _ = drive(&backend, &cfg, None, None).unwrap();
-        let pjrt_out = drive(&backend, &cfg, None, None).unwrap().output;
+        let _ = drive(&mut backend, &cfg, None, None).unwrap();
+        let pjrt_out = drive(&mut backend, &cfg, None, None).unwrap().output;
         let _ = native.run().unwrap();
         let native_out = native.run().unwrap();
 

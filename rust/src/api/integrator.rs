@@ -553,7 +553,7 @@ impl Integrator {
                 }
                 // lint:allow(MC005, the stale-check block directly above guarantees Some)
                 let state = pjrt.as_ref().expect("pjrt state just ensured");
-                let backend =
+                let mut backend =
                     PjrtBackend::load(&state.runtime, &state.registry, name, cfg.maxcalls)?;
                 // Adopt the artifact's compiled layout; the rest of the
                 // config (tolerance, plan, seed) applies as-is.
@@ -562,7 +562,7 @@ impl Integrator {
                 run_cfg.maxcalls = meta.maxcalls;
                 run_cfg.nb = meta.nb;
                 run_cfg.nblocks = meta.nblocks;
-                drive(&backend, &run_cfg, warm, observer)
+                drive(&mut backend, &run_cfg, warm, observer)
             }
         }
     }

@@ -2,8 +2,9 @@
 //!
 //! One entry point — [`Integrator`] — subsumes the seed's scattered
 //! free functions (`integrate_native`, `integrate_native_adaptive`,
-//! `run_driver`, `run_driver_traced`), which survive only as deprecated
-//! shims. The facade adds what they couldn't express:
+//! `run_driver`, `run_driver_traced`), which have now been removed
+//! (see the migration table below). The facade adds what they
+//! couldn't express:
 //!
 //! * **Closure integrands** — [`FnIntegrand`] adapts any
 //!   `Fn(&[f64]) -> f64` into the [`crate::integrands::Integrand`]
@@ -40,19 +41,25 @@
 //!
 //! ## Migration table
 //!
-//! The seed's free functions map onto the builder like so (the batch
-//! column is the fastest path for custom integrands):
+//! The deprecated seed-era APIs (last shipped behind the since-removed
+//! `legacy-api` cargo feature) are gone. Each maps onto a current call
+//! like so:
 //!
-//! | Seed free function | Builder call | Batch builder call |
-//! |---|---|---|
-//! | `integrate_native(&f, &cfg)` | `Integrator::new(f).config(cfg).run()` | `Integrator::custom_batch(d, bounds, \|blk, out\| …)?.config(cfg).run()` |
-//! | `integrate_native_adaptive(&f, &cfg, l, k)` | `Integrator::new(f).config(cfg).escalate(l, k).run()` | same, via `custom_batch(..)` + `.escalate(l, k)` |
-//! | `run_driver(&backend, &cfg)` | `coordinator::drive(&backend, &cfg, None, None)` | backends already evaluate through `eval_batch` |
-//! | `run_driver_traced(&backend, &cfg)` | `drive(.., Some(&mut observer))` or `Integrator::observe(..)` | — |
+//! | Removed API | Use instead |
+//! |---|---|
+//! | `integrate_native(&f, &cfg)` | `Integrator::new(f).config(cfg).run()` (or `Integrator::custom_batch(d, bounds, \|blk, out\| …)?.config(cfg).run()` for the fastest custom-integrand path) |
+//! | `integrate_native_adaptive(&f, &cfg, l, k)` | `Integrator::new(f).config(cfg).escalate(l, k).run()` |
+//! | `run_driver(&backend, &cfg)` | `coordinator::drive(&mut backend, &cfg, None, None)` |
+//! | `run_driver_traced(&backend, &cfg)` | `drive(.., Some(&mut observer))` or `Integrator::observe(..)` |
+//! | `DriverOutput` trace rows | [`IterationEvent`] observer callbacks / [`Session::step`] [`Iteration`] snapshots |
+//! | `IntegrationService` (alias) | `coordinator::Scheduler` (same type, its real name) |
+//! | `engine::vsample_with_fill(..)` | `engine::NativeEngine.vsample_exec(f, &layout, &bins, &opts, fill, exec)` — or build a `crate::engine::UniformEngine` and call `Engine::vsample` |
+//! | `engine::vsample_stratified_with_fill(..)` | `crate::engine::VegasPlusEngine` + `Engine::vsample` (one pass incl. reallocation), or `engine::vsample_stratified(..)` for a pass over a caller-owned `Allocation` |
 //!
-//! The free functions survive behind the on-by-default `legacy-api`
-//! cargo feature; build with `--no-default-features` to verify no code
-//! path still needs them.
+//! Engine construction now goes through the [`crate::engine::Engine`]
+//! trait: `EngineBackend::uniform` / `EngineBackend::vegas_plus` (or
+//! `EngineBackend::new` over any custom engine) replace the historical
+//! `NativeBackend` / `StratifiedBackend` pair.
 //!
 //! ## `PointBlock` SoA layout contract
 //!

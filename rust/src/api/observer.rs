@@ -1,5 +1,5 @@
 //! Per-iteration observer hooks — the structured replacement for the
-//! ad-hoc `DriverOutput` trace.
+//! seed's ad-hoc per-iteration trace rows.
 //!
 //! The driver invokes the observer once per iteration, after grid
 //! adjustment and the stop decision, so the event shows both the raw

@@ -39,8 +39,7 @@
 use super::grid_state::{GridState, StratSnapshot};
 use super::observer::IterationEvent;
 use crate::coordinator::{
-    DriveOutcome, JobConfig, NativeBackend, SessionCore, StepRecord, StratifiedBackend,
-    VSampleBackend,
+    DriveOutcome, EngineBackend, JobConfig, SessionCore, StepRecord, VSampleBackend,
 };
 use crate::error::{Error, Result};
 use crate::estimator::{EstimatorState, IterationResult};
@@ -430,11 +429,11 @@ impl Session {
         } else {
             match stage.sampling {
                 Sampling::Uniform => Box::new(
-                    NativeBackend::new(self.f.clone(), layout, self.cfg.threads)
+                    EngineBackend::uniform(self.f.clone(), layout, self.cfg.threads)
                         .with_exec(self.cfg.exec),
                 ),
                 Sampling::VegasPlus { beta } => Box::new(
-                    StratifiedBackend::new(
+                    EngineBackend::vegas_plus(
                         self.f.clone(),
                         layout,
                         self.cfg.threads,
@@ -460,7 +459,7 @@ impl Session {
         self.ensure_backend()?;
         let rec = {
             // lint:allow(MC005, ensure_backend() on the previous line guarantees Some)
-            let backend = self.backend.as_deref().expect("backend just ensured");
+            let backend = self.backend.as_deref_mut().expect("backend just ensured");
             self.core.step(backend, &self.cfg)?
         };
         if rec.stage_changed {

@@ -10,23 +10,32 @@
 //!    accumulated on the "host pass" over the staged buffer, serially.
 //! 3. **Per-launch sample cap from GPU memory** — gVegas could only fit
 //!    a limited number of evaluations per launch because the buffer
-//!    lives in device memory; when `maxcalls` exceeds the cap the
-//!    iteration is split into multiple launches, each paying the
-//!    staging + reduction overhead again.
-//! 4. **One thread per sub-cube, no batching** — parallel work items
-//!    are per-cube closures rather than contiguous batched loops
-//!    (boxed-task dispatch overhead mirrors the poor occupancy).
+//!    lives in device memory; when the span exceeds the cap it is
+//!    split into multiple launches, each paying the staging +
+//!    reduction overhead again.
+//! 4. **One thread per sub-cube, no batching** — samples are filled one
+//!    scalar point at a time (no SIMD span batching) and reduced
+//!    serially from the staged records.
 //!
-//! The VEGAS math itself is identical to the engine, so accuracy
-//! matches m-Cubes; only the organization differs — exactly the paper's
-//! claim.
+//! The simulator is the third [`Engine`] impl: [`GvegasSimEngine`]
+//! plugs into the same `sample_tasks` / `update` contract as the
+//! uniform and VEGAS+ engines, so it runs under `EngineBackend`, the
+//! shard coordinator, and `Box<dyn Engine>` dispatch unchanged — the
+//! landing pad a future PAGANI engine would use. The VEGAS math itself
+//! is identical to the engine, so accuracy matches m-Cubes; only the
+//! organization differs — exactly the paper's claim. Unlike the native
+//! engines its results carry **no bitwise contract** (scalar staging
+//! reorders the accumulation), so its tests assert wide tolerances.
 
 // Narrowing casts (staged-buffer u16 bin indices, iteration counters)
 // are audited by `cargo xtask lint` (MC001); see docs/invariants.md.
 #![allow(clippy::cast_possible_truncation)]
 
 use super::BaselineResult;
-use crate::engine::{PointBlock, VegasMap, BLOCK_POINTS};
+use crate::engine::{
+    reduction_tasks, reduction_task_span, Engine, ExecPath, FillPath, PointBlock, TaskPartial,
+    VSampleOpts, VegasMap, BLOCK_POINTS,
+};
 use crate::estimator::{Convergence, WeightedEstimator};
 use crate::grid::Bins;
 use crate::integrands::Integrand;
@@ -71,6 +80,195 @@ struct EvalRecord {
     bins: [u16; 10], // up to 10 dims recorded, like gVegas's fixed dims
 }
 
+/// The gVegas organization as an [`Engine`]: uniform per-cube sample
+/// counts (like [`crate::engine::UniformEngine`]) but every evaluation
+/// staged through a launch-capped host buffer with a serial host-side
+/// reduce — the anti-pattern the paper measures. Stateless beyond the
+/// layout ([`Engine::update`] is a no-op; no allocation state).
+#[derive(Debug, Clone)]
+pub struct GvegasSimEngine {
+    layout: Layout,
+    launch_cap: usize,
+}
+
+impl GvegasSimEngine {
+    /// Build over `layout` with the simulated per-launch evaluation
+    /// cap (gVegas's device-buffer size).
+    pub fn new(layout: Layout, launch_cap: usize) -> GvegasSimEngine {
+        assert!(layout.d <= 10, "gvegas_sim supports d <= 10");
+        GvegasSimEngine {
+            layout,
+            launch_cap: launch_cap.max(1),
+        }
+    }
+}
+
+/// One reduction task's cubes, the gVegas way: launch-capped staging
+/// into `EvalRecord`s ("device" phase with fresh per-launch buffers),
+/// then a serial "host" pass over the staged buffer for the per-cube
+/// reduction and the importance histogram.
+#[allow(clippy::too_many_arguments)]
+fn sample_task_staged(
+    f: &dyn Integrand,
+    layout: &Layout,
+    map: &VegasMap,
+    opts: &VSampleOpts,
+    launch_cap: usize,
+    task: usize,
+    cube_lo: usize,
+    cube_hi: usize,
+) -> TaskPartial {
+    let d = layout.d;
+    let nb = layout.nb;
+    let p = layout.p;
+    let pf = p as f64;
+    let mf = layout.m as f64;
+    let mut integral = 0.0f64;
+    let mut variance = 0.0f64;
+    let mut contrib = if opts.adjust {
+        Some(vec![0.0f64; d * nb])
+    } else {
+        None
+    };
+    let cap_cubes = (launch_cap / p).max(1);
+    let mut u = [0.0f64; 10];
+    let mut coords = [0usize; 10];
+    let cubes_per_block = (BLOCK_POINTS / p).max(1);
+    let cap = cubes_per_block * p;
+    let mut blk = PointBlock::with_capacity(d, cap);
+    let mut vals = vec![0.0f64; cap];
+    let mut bidx = vec![0usize; cap * d];
+
+    let mut cube0 = cube_lo;
+    while cube0 < cube_hi {
+        let cube1 = (cube0 + cap_cubes).min(cube_hi);
+        let n_evals = (cube1 - cube0) * p;
+        // gVegas re-allocates its device buffers each iteration
+        // (early-CUDA design); model that with a fresh allocation per
+        // launch rather than a reused buffer.
+        let mut staged: Vec<EvalRecord> = vec![EvalRecord::default(); n_evals];
+
+        // "Device" phase: scalar fill → eval_batch → stage. The
+        // records round-trip through the host buffer (the design flaw
+        // under test). NOTE: VegasMap multiplies by a precomputed 1/g
+        // where the old loop divided by g — up to 1 ulp per coordinate
+        // — so gVegas samples are *not* bitwise-reproducible against
+        // pre-batch versions (its results are statistical, asserted at
+        // wide tolerances; only the native engines carry a bitwise
+        // contract).
+        let mut rel_cube = 0usize;
+        while rel_cube < cube1 - cube0 {
+            let ncubes = cubes_per_block.min(cube1 - cube0 - rel_cube);
+            let npts = ncubes * p;
+            blk.reset(npts);
+            for c in 0..ncubes {
+                let cube = cube0 + rel_cube + c;
+                layout.cube_coords(cube, &mut coords[..d]);
+                for k in 0..p {
+                    let j = c * p + k;
+                    let sidx = (cube * p + k) as u64;
+                    uniforms_into(sidx, opts.iteration, opts.seed, &mut u[..d]);
+                    map.fill_point(&coords[..d], &u[..d], &mut blk, j, &mut bidx);
+                }
+            }
+            f.eval_batch(&blk, &mut vals[..npts]);
+            for j in 0..npts {
+                let mut rec = EvalRecord::default();
+                for i in 0..d {
+                    // bidx holds i*nb + b; the record keeps b.
+                    // lint:allow(MC001, bin index b < nb <= a few hundred — u16 staging mirrors gVegas's compact device records)
+                    rec.bins[i] = (bidx[j * d + i] - i * nb) as u16;
+                }
+                rec.v = vals[j] * blk.jac(j);
+                staged[rel_cube * p + j] = rec;
+            }
+            rel_cube += ncubes;
+        }
+
+        // "Host" phase: serial pass over the staged buffer for the
+        // per-cube reduction AND the histogram (gVegas does importance
+        // accounting on the CPU).
+        for rel_cube in 0..(cube1 - cube0) {
+            let base = rel_cube * p;
+            let mut s1 = 0.0;
+            let mut s2 = 0.0;
+            for k in 0..p {
+                let rec = &staged[base + k];
+                s1 += rec.v;
+                s2 += rec.v * rec.v;
+                if let Some(contrib) = contrib.as_mut() {
+                    let v2 = rec.v * rec.v;
+                    for i in 0..d {
+                        contrib[i * nb + rec.bins[i] as usize] += v2;
+                    }
+                }
+            }
+            let mean = s1 / pf;
+            let var = ((s2 / pf - mean * mean).max(0.0)) / (pf - 1.0);
+            integral += mean / mf;
+            variance += var / (mf * mf);
+        }
+        cube0 = cube1;
+    }
+
+    TaskPartial {
+        task,
+        cube_lo,
+        cube_hi,
+        integral,
+        variance,
+        contrib,
+        d_new: Vec::new(),
+    }
+}
+
+impl Engine for GvegasSimEngine {
+    fn name(&self) -> &'static str {
+        "gvegas-sim"
+    }
+
+    fn layout(&self) -> &Layout {
+        &self.layout
+    }
+
+    /// `fill` and `exec` are accepted but ignored: the gVegas design
+    /// predates both knobs (scalar staging, fixed launch granularity).
+    fn sample_tasks(
+        &self,
+        f: &dyn Integrand,
+        bins: &Bins,
+        opts: &VSampleOpts,
+        _fill: FillPath,
+        _exec: ExecPath,
+        task_lo: usize,
+        task_hi: usize,
+    ) -> Vec<TaskPartial> {
+        let layout = &self.layout;
+        assert_eq!(bins.d(), layout.d);
+        assert_eq!(bins.nb(), layout.nb);
+        let ntasks = reduction_tasks(layout.m);
+        assert!(
+            task_lo <= task_hi && task_hi <= ntasks,
+            "task range [{task_lo}, {task_hi}) outside 0..{ntasks}"
+        );
+        let span = task_hi - task_lo;
+        let launch_cap = self.launch_cap;
+        let nested: Vec<Vec<TaskPartial>> = parallel_chunks(span, opts.threads, |u0, u1| {
+            let map = VegasMap::new(layout, bins, &f.bounds());
+            (u0..u1)
+                .map(|u| {
+                    let t = task_lo + u;
+                    let (cube_lo, cube_hi) = reduction_task_span(layout.m, ntasks, t);
+                    sample_task_staged(f, layout, &map, opts, launch_cap, t, cube_lo, cube_hi)
+                })
+                .collect()
+        });
+        nested.into_iter().flatten().collect()
+    }
+
+    fn update(&mut self, _partials: &[TaskPartial]) {}
+}
+
 pub fn gvegas_integrate(f: &dyn Integrand, cfg: &GvegasConfig) -> BaselineResult {
     let t0 = Instant::now();
     let d = f.dim();
@@ -84,7 +282,9 @@ pub fn gvegas_integrate(f: &dyn Integrand, cfg: &GvegasConfig) -> BaselineResult
     // lint:allow(MC005, baseline bench harness — configs come from the bench drivers and a bad layout should fail fast, not propagate)
     let layout = Layout::compute(d, per_iter_calls, cfg.nb, 1).expect("layout");
     let nb = cfg.nb;
+    let per_iter_evals = layout.m * layout.p;
 
+    let mut engine = GvegasSimEngine::new(layout, cfg.launch_cap);
     let mut bins = Bins::uniform(d, nb);
     let mut est = WeightedEstimator::new();
     let conv = Convergence::with_tau(cfg.tau_rel);
@@ -92,7 +292,6 @@ pub fn gvegas_integrate(f: &dyn Integrand, cfg: &GvegasConfig) -> BaselineResult
     let mut iterations = 0usize;
     let mut converged = false;
 
-    let cap_cubes = (cfg.launch_cap / layout.p).max(1);
     // Memory-capped iterations are statistically weaker; allow the
     // iteration count to grow so the total call budget matches what the
     // uncapped driver would spend (the paper's gVegas runs many more
@@ -104,118 +303,23 @@ pub fn gvegas_integrate(f: &dyn Integrand, cfg: &GvegasConfig) -> BaselineResult
     let ita = cfg.ita.saturating_mul((cfg.maxcalls / per_iter_calls).max(1)).min(itmax);
 
     for it in 0..itmax {
-        let mut i_iter = 0.0;
-        let mut var_iter = 0.0;
-        let mut contrib = vec![0.0f64; d * nb];
-        // Shared VEGAS transform (identical to the engine's fill).
-        let map = VegasMap::new(&layout, &bins, &f.bounds());
-
-        // Split the iteration into launches bounded by the memory cap.
-        let mut cube0 = 0usize;
-        while cube0 < layout.m {
-            let cube1 = (cube0 + cap_cubes).min(layout.m);
-            let n_evals = (cube1 - cube0) * layout.p;
-            // gVegas re-allocates its device buffers each iteration
-            // (early-CUDA design); model that with a fresh allocation
-            // per launch rather than a reused buffer.
-            let mut staged: Vec<EvalRecord> = vec![EvalRecord::default(); n_evals];
-
-            // "Device" phase: fill-block → eval_batch → stage. The
-            // records still round-trip through the host buffer (the
-            // design flaw under test). NOTE: VegasMap multiplies by a
-            // precomputed 1/g where the old loop divided by g — up to
-            // 1 ulp per coordinate — so gVegas samples are *not*
-            // bitwise-reproducible against pre-batch versions (its
-            // results are statistical, asserted at wide tolerances;
-            // only the native engine carries a bitwise contract).
-            let p = layout.p;
-            let chunks = parallel_chunks(cube1 - cube0, cfg.threads, |a, b| {
-                let mut local: Vec<(usize, EvalRecord)> = Vec::with_capacity((b - a) * p);
-                let mut u = [0.0f64; 10];
-                let mut coords = [0usize; 10];
-                let cubes_per_block = (BLOCK_POINTS / p).max(1);
-                let cap = cubes_per_block * p;
-                let mut blk = PointBlock::with_capacity(d, cap);
-                let mut vals = vec![0.0f64; cap];
-                let mut bidx = vec![0usize; cap * d];
-                let mut rel_cube = a;
-                while rel_cube < b {
-                    let ncubes = cubes_per_block.min(b - rel_cube);
-                    let npts = ncubes * p;
-                    blk.reset(npts);
-                    for c in 0..ncubes {
-                        let cube = cube0 + rel_cube + c;
-                        layout.cube_coords(cube, &mut coords[..d]);
-                        for k in 0..p {
-                            let j = c * p + k;
-                            let sidx = (cube * p + k) as u64;
-                            uniforms_into(sidx, it as u32, cfg.seed, &mut u[..d]);
-                            map.fill_point(&coords[..d], &u[..d], &mut blk, j, &mut bidx);
-                        }
-                    }
-                    f.eval_batch(&blk, &mut vals[..npts]);
-                    for j in 0..npts {
-                        let mut rec = EvalRecord::default();
-                        for i in 0..d {
-                            // bidx holds i*nb + b; the record keeps b.
-                            // lint:allow(MC001, bin index b < nb <= a few hundred — u16 staging mirrors gVegas's compact device records)
-                            rec.bins[i] = (bidx[j * d + i] - i * nb) as u16;
-                        }
-                        rec.v = vals[j] * blk.jac(j);
-                        // Staged slot: launch-relative cube index * p + k,
-                        // i.e. (rel_cube + j/p)*p + j%p == rel_cube*p + j —
-                        // kept in cube/sample form to mirror the staged
-                        // buffer's (cube, k) addressing in the host pass.
-                        local.push(((rel_cube + j / p) * p + j % p, rec));
-                    }
-                    // lint:allow(MC004, chunk-local integer cube cursor — not a floating-point accumulator)
-                    rel_cube += ncubes;
-                }
-                local
-            });
-            // "Copy back": write the records into the staged buffer.
-            for chunk in chunks {
-                for (slot, rec) in chunk {
-                    staged[slot] = rec;
-                }
-            }
-            calls_used += n_evals;
-
-            // "Host" phase: serial pass over the staged buffer for the
-            // per-cube reduction AND the histogram (gVegas does
-            // importance accounting on the CPU).
-            let pf = layout.p as f64;
-            let mf = layout.m as f64;
-            for rel_cube in 0..(cube1 - cube0) {
-                let base = rel_cube * layout.p;
-                let mut s1 = 0.0;
-                let mut s2 = 0.0;
-                for k in 0..layout.p {
-                    let rec = &staged[base + k];
-                    s1 += rec.v;
-                    s2 += rec.v * rec.v;
-                    let v2 = rec.v * rec.v;
-                    for i in 0..d {
-                        contrib[i * nb + rec.bins[i] as usize] += v2;
-                    }
-                }
-                let mean = s1 / pf;
-                let var = ((s2 / pf - mean * mean).max(0.0)) / (pf - 1.0);
-                i_iter += mean / mf;
-                var_iter += var / (mf * mf);
-            }
-            cube0 = cube1;
-        }
+        let opts = VSampleOpts {
+            seed: cfg.seed,
+            // lint:allow(MC001, the scan crosses the field label; `it` is an iteration ordinal bounded by itmax, far below 2^32)
+            iteration: it as u32,
+            adjust: true,
+            threads: cfg.threads,
+        };
+        let (r, contrib) = engine.vsample(&*f, &bins, &opts, FillPath::Simd, ExecPath::default());
+        calls_used += per_iter_evals;
 
         iterations += 1;
         if it >= 2.min(itmax - 1) {
-            est.push(crate::estimator::IterationResult {
-                integral: i_iter,
-                variance: var_iter,
-            });
+            est.push(r);
         }
         if it < ita {
-            bins.adjust(&contrib);
+            // lint:allow(MC005, opts.adjust is true above — vsample always returns the histogram on adjust passes)
+            bins.adjust(&contrib.expect("adjust pass returns a histogram"));
             if est.iterations() >= 2 && est.chi2_dof() > conv.max_chi2_dof {
                 est.reset();
             }
@@ -276,5 +380,51 @@ mod tests {
             },
         );
         assert!(r.calls_used > 0);
+    }
+
+    #[test]
+    fn engine_surface_is_uniform_and_thread_invariant() {
+        // The simulator plugs into the same trait contract as the
+        // native engines: per-task partials are deterministic and
+        // independent of the internal thread count, and the engine
+        // carries no allocation state.
+        let f = by_name("f4", 4).unwrap();
+        let layout = Layout::compute(4, 2048, 12, 1).unwrap();
+        let bins = Bins::uniform(4, 12);
+        let engine = GvegasSimEngine::new(layout, 1 << 10);
+        assert_eq!(engine.name(), "gvegas-sim");
+        assert!(engine.allocation().is_none());
+        assert!(engine.export().is_none());
+        let ntasks = reduction_tasks(layout.m);
+        let mk = |threads| VSampleOpts {
+            seed: 5,
+            iteration: 1,
+            adjust: true,
+            threads,
+        };
+        let a = engine.sample_tasks(
+            &*f, &bins, &mk(1), FillPath::Simd, ExecPath::default(), 0, ntasks,
+        );
+        let b = engine.sample_tasks(
+            &*f, &bins, &mk(4), FillPath::Simd, ExecPath::default(), 0, ntasks,
+        );
+        assert_eq!(a.len(), ntasks);
+        for (x, y) in a.iter().zip(b.iter()) {
+            assert_eq!(x.task, y.task);
+            assert_eq!(x.integral.to_bits(), y.integral.to_bits());
+            assert_eq!(x.variance.to_bits(), y.variance.to_bits());
+        }
+        // Through Box<dyn Engine>, same bits.
+        let mut boxed: Box<dyn Engine> = Box::new(engine.clone());
+        let c = boxed.sample_tasks(
+            &*f, &bins, &mk(2), FillPath::Simd, ExecPath::default(), 0, ntasks,
+        );
+        for (x, y) in a.iter().zip(c.iter()) {
+            assert_eq!(x.integral.to_bits(), y.integral.to_bits());
+        }
+        // One full pass through the provided vsample is well-formed.
+        let (r, contrib) = boxed.vsample(&*f, &bins, &mk(2), FillPath::Simd, ExecPath::default());
+        assert!(r.integral.is_finite() && r.variance >= 0.0);
+        assert_eq!(contrib.unwrap().len(), layout.d * layout.nb);
     }
 }

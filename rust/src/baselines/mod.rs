@@ -18,7 +18,7 @@ mod plain_mc;
 mod vegas_serial;
 mod zmc_sim;
 
-pub use gvegas_sim::{gvegas_integrate, GvegasConfig};
+pub use gvegas_sim::{gvegas_integrate, GvegasConfig, GvegasSimEngine};
 pub use miser::{miser_integrate, MiserConfig};
 pub use plain_mc::{plain_mc_integrate, PlainMcConfig};
 pub use vegas_serial::vegas_serial_integrate;

@@ -1,26 +1,28 @@
 //! Execution backends for one V-Sample pass.
 //!
 //! The driver is backend-agnostic: `PjrtBackend` runs the AOT Pallas
-//! artifact through PJRT (the paper's GPU kernel), `NativeBackend` runs
-//! the Rust engine (the paper's Kokkos-style second platform). Both
-//! draw identical Philox streams, so for the same (seed, iteration) the
-//! results agree to summation-order tolerance.
+//! artifact through PJRT (the paper's GPU kernel), [`EngineBackend`]
+//! adapts any native [`Engine`] — uniform, VEGAS+ stratified, or a
+//! custom impl — to the driver contract (the paper's Kokkos-style
+//! second platform). Both draw identical Philox streams, so for the
+//! same (seed, iteration) the results agree to summation-order
+//! tolerance.
 //!
 //! Both backends are batch-first: the artifact evaluates whole
-//! per-thread-block sample batches on device, and the native engine
-//! mirrors that with its fill-block → `Integrand::eval_batch` → reduce
-//! pipeline over [`crate::engine::PointBlock`]s — one virtual call per
-//! block, never one per point.
+//! per-thread-block sample batches on device, and the native engines
+//! mirror that with the shared fill-block → `Integrand::eval_batch` →
+//! reduce walk ([`crate::engine::walk`]) over
+//! [`crate::engine::PointBlock`]s — one virtual call per block, never
+//! one per point.
 
 use crate::api::StratSnapshot;
-use crate::engine::{vsample_stratified_exec, ExecPath, FillPath, NativeEngine, VSampleOpts};
+use crate::engine::{Engine, ExecPath, FillPath, UniformEngine, VSampleOpts, VegasPlusEngine};
 use crate::error::Result;
 use crate::estimator::IterationResult;
 use crate::grid::Bins;
-use crate::integrands::{Integrand, IntegrandRef};
+use crate::integrands::IntegrandRef;
 use crate::runtime::{ArtifactMeta, PjrtRuntime, Registry, VSampleExecutable};
-use crate::strat::{Allocation, Bounds, Layout};
-use std::cell::RefCell;
+use crate::strat::{Bounds, Layout};
 use std::sync::Arc;
 
 /// One V-Sample pass provider.
@@ -29,11 +31,16 @@ pub trait VSampleBackend {
     fn layout(&self) -> Layout;
     /// Per-axis integration-box bounds.
     fn bounds(&self) -> Bounds;
-    /// Backend label for reports ("pjrt" / "native").
+    /// Backend label for reports ("pjrt" / "native" / "native-vegas+").
     fn name(&self) -> &'static str;
     /// Run one iteration; histogram returned only when `adjust`.
+    ///
+    /// `&mut self` because adaptive backends fold the pass's variance
+    /// observations into their allocation state — the engines'
+    /// [`Engine::update`] hook, which is what lets this layer carry no
+    /// interior-mutability shims.
     fn run(
-        &self,
+        &mut self,
         bins: &Bins,
         seed: u32,
         iteration: u32,
@@ -61,21 +68,67 @@ pub trait VSampleBackend {
     }
 }
 
-/// Native-engine backend.
-pub struct NativeBackend {
-    integrand: Arc<dyn Integrand>,
-    layout: Layout,
+/// Driver adapter over any native [`Engine`] — the one backend that
+/// replaced the historical `NativeBackend`/`StratifiedBackend` pair.
+///
+/// Generic plumbing only: the engine owns layout and allocation state;
+/// this layer contributes the integrand handle, the thread count, the
+/// [`ExecPath`] knob, and the "stats describe the allocation the pass
+/// *ran with*" snapshot discipline (captured before the pass, since
+/// the engine re-apportions inside [`Engine::vsample`]). Works
+/// identically over a concrete engine type and over `Box<dyn Engine>`
+/// — the dyn-dispatch golden tests pin that both produce the same
+/// bits.
+pub struct EngineBackend<E: Engine> {
+    integrand: IntegrandRef,
     threads: usize,
     exec: ExecPath,
+    engine: E,
+    /// Allocation summary snapshot taken at the top of the most recent
+    /// `run` — i.e. the allocation that pass sampled with.
+    last: Option<crate::strat::AllocStats>,
 }
 
-impl NativeBackend {
-    pub fn new(integrand: Arc<dyn Integrand>, layout: Layout, threads: usize) -> Self {
-        NativeBackend {
+impl EngineBackend<UniformEngine> {
+    /// Uniform m-Cubes backend (the historical `NativeBackend`).
+    pub fn uniform(
+        integrand: IntegrandRef,
+        layout: Layout,
+        threads: usize,
+    ) -> EngineBackend<UniformEngine> {
+        EngineBackend::new(integrand, UniformEngine::new(layout), threads)
+    }
+}
+
+impl EngineBackend<VegasPlusEngine> {
+    /// VEGAS+ adaptively-stratified backend (the historical
+    /// `StratifiedBackend`), resuming `resume`'s allocation when its
+    /// cube count matches `layout`.
+    pub fn vegas_plus(
+        integrand: IntegrandRef,
+        layout: Layout,
+        threads: usize,
+        beta: f64,
+        resume: Option<&StratSnapshot>,
+    ) -> Result<EngineBackend<VegasPlusEngine>> {
+        Ok(EngineBackend::new(
             integrand,
-            layout,
+            VegasPlusEngine::new(layout, beta, resume)?,
+            threads,
+        ))
+    }
+}
+
+impl<E: Engine> EngineBackend<E> {
+    /// Wrap an engine the caller built — the seam custom engines (and
+    /// `Box<dyn Engine>`) plug into.
+    pub fn new(integrand: IntegrandRef, engine: E, threads: usize) -> EngineBackend<E> {
+        EngineBackend {
+            integrand,
             threads,
             exec: ExecPath::default(),
+            engine,
+            last: None,
         }
     }
 
@@ -87,11 +140,16 @@ impl NativeBackend {
         self.exec = exec;
         self
     }
+
+    /// The wrapped engine (test/inspection hook).
+    pub fn engine(&self) -> &E {
+        &self.engine
+    }
 }
 
-impl VSampleBackend for NativeBackend {
+impl<E: Engine> VSampleBackend for EngineBackend<E> {
     fn layout(&self) -> Layout {
-        self.layout
+        *self.engine.layout()
     }
 
     fn bounds(&self) -> Bounds {
@@ -99,155 +157,37 @@ impl VSampleBackend for NativeBackend {
     }
 
     fn name(&self) -> &'static str {
-        "native"
+        self.engine.name()
     }
 
     fn run(
-        &self,
+        &mut self,
         bins: &Bins,
         seed: u32,
         iteration: u32,
         adjust: bool,
     ) -> Result<(IterationResult, Option<Vec<f64>>)> {
+        // Snapshot before the pass: observers see the allocation this
+        // iteration actually sampled with, not the re-apportioned one
+        // the engine's update leaves behind for the next iteration.
+        self.last = self.engine.alloc_stats();
         let opts = VSampleOpts {
             seed,
             iteration,
             adjust,
             threads: self.threads,
         };
-        Ok(NativeEngine.vsample_exec(
-            &*self.integrand,
-            &self.layout,
-            bins,
-            &opts,
-            FillPath::Simd,
-            self.exec,
-        ))
-    }
-}
-
-/// Mutable per-run state of the stratified backend: the live
-/// allocation plus the stats snapshot of the iteration that just ran.
-struct StratCell {
-    alloc: Allocation,
-    last: Option<crate::strat::AllocStats>,
-}
-
-/// VEGAS+ adaptively-stratified twin of [`NativeBackend`]: drives
-/// the stratified V-Sample pass (fused streaming schedule by default,
-/// selectable via [`StratifiedBackend::with_exec`]) with a live
-/// [`Allocation`], re-apportioning the per-iteration budget after
-/// every pass. The driver stays allocation-agnostic — it only sees the
-/// [`VSampleBackend`] contract plus `alloc_stats`/`strat_export`.
-pub struct StratifiedBackend {
-    integrand: IntegrandRef,
-    layout: Layout,
-    threads: usize,
-    beta: f64,
-    exec: ExecPath,
-    /// Per-iteration call budget (`layout.calls()`, matching the
-    /// uniform engine so `calls_used` accounting is identical).
-    budget: usize,
-    state: RefCell<StratCell>,
-}
-
-impl StratifiedBackend {
-    /// Build a stratified backend, resuming `resume`'s allocation when
-    /// its cube count matches `layout` (the re-apportionment is a pure
-    /// function of the damped accumulator, so a matching snapshot
-    /// restores the exact per-cube counts); any mismatch starts from
-    /// the uniform split.
-    pub fn new(
-        integrand: IntegrandRef,
-        layout: Layout,
-        threads: usize,
-        beta: f64,
-        resume: Option<&StratSnapshot>,
-    ) -> Result<StratifiedBackend> {
-        let alloc = match resume {
-            Some(s) if s.counts.len() == layout.m => {
-                let mut a = Allocation::from_parts(s.counts.clone(), s.damped.clone())?;
-                a.reallocate(layout.calls(), beta);
-                a
-            }
-            _ => Allocation::uniform(&layout),
-        };
-        Ok(StratifiedBackend {
-            integrand,
-            layout,
-            threads,
-            beta,
-            exec: ExecPath::default(),
-            budget: layout.calls(),
-            state: RefCell::new(StratCell { alloc, last: None }),
-        })
-    }
-
-    /// Chainable override of the execution schedule (default:
-    /// streaming) — same contract as [`NativeBackend::with_exec`].
-    #[must_use]
-    pub fn with_exec(mut self, exec: ExecPath) -> Self {
-        self.exec = exec;
-        self
-    }
-}
-
-impl VSampleBackend for StratifiedBackend {
-    fn layout(&self) -> Layout {
-        self.layout
-    }
-
-    fn bounds(&self) -> Bounds {
-        self.integrand.bounds()
-    }
-
-    fn name(&self) -> &'static str {
-        "native-vegas+"
-    }
-
-    fn run(
-        &self,
-        bins: &Bins,
-        seed: u32,
-        iteration: u32,
-        adjust: bool,
-    ) -> Result<(IterationResult, Option<Vec<f64>>)> {
-        let mut cell = self.state.borrow_mut();
-        let StratCell { alloc, last } = &mut *cell;
-        *last = Some(alloc.stats());
-        let opts = VSampleOpts {
-            seed,
-            iteration,
-            adjust,
-            threads: self.threads,
-        };
-        let out = vsample_stratified_exec(
-            &*self.integrand,
-            &self.layout,
-            bins,
-            alloc,
-            &opts,
-            FillPath::Simd,
-            self.exec,
-        );
-        // Re-apportion for the next iteration from the freshly damped
-        // accumulator (cheap; also leaves the exported snapshot ready
-        // for warm starts even when this was the final iteration).
-        alloc.reallocate(self.budget, self.beta);
-        Ok(out)
+        Ok(self
+            .engine
+            .vsample(&*self.integrand, bins, &opts, FillPath::Simd, self.exec))
     }
 
     fn alloc_stats(&self) -> Option<crate::strat::AllocStats> {
-        self.state.borrow().last
+        self.last
     }
 
     fn strat_export(&self) -> Option<StratSnapshot> {
-        let cell = self.state.borrow();
-        Some(StratSnapshot {
-            beta: self.beta,
-            counts: cell.alloc.counts().to_vec(),
-            damped: cell.alloc.damped().to_vec(),
-        })
+        self.engine.export()
     }
 }
 
@@ -308,7 +248,7 @@ impl VSampleBackend for PjrtBackend {
     }
 
     fn run(
-        &self,
+        &mut self,
         bins: &Bins,
         seed: u32,
         iteration: u32,

@@ -5,15 +5,14 @@
 //! state machine that advances exactly one iteration per `step` call
 //! over a [`RunPlan`]'s stages. Everything else is a thin loop over it:
 //!
-//! * [`drive`] runs a fixed-layout backend (PJRT artifacts, raw native
-//!   backends) to completion, firing observers each iteration.
+//! * [`drive`] runs a fixed-layout backend (PJRT artifacts, raw
+//!   `EngineBackend`s) to completion, firing observers each iteration.
 //! * `api::Session` (the public resumable handle) owns the integrand
 //!   and rebuilds native backends at stage boundaries, so plans may
 //!   change the per-iteration call budget or sampling strategy
 //!   mid-run; it also exports/restores [`api::Checkpoint`]s.
-//! * [`integrate_native_core`] — the shared core behind the facade,
-//!   the scheduler, and the deprecated shims — is `Session` plus an
-//!   observer loop.
+//! * [`integrate_native_core`] — the shared core behind the facade and
+//!   the scheduler — is `Session` plus an observer loop.
 //!
 //! Every run ends with a typed [`StopReason`] carried on
 //! [`DriveOutcome`] and the final [`IterationEvent`].
@@ -259,14 +258,6 @@ pub struct IntegrationOutput {
     pub backend: &'static str,
 }
 
-/// Detailed per-iteration trace (legacy; superseded by observers on
-/// `drive` / `api::Integrator::observe`).
-#[derive(Debug, Clone, Default)]
-pub struct DriverOutput {
-    pub output: Option<IntegrationOutput>,
-    pub iteration_estimates: Vec<(f64, f64)>, // (I_j, sigma_j)
-}
-
 /// `drive` result: the integration output, the adapted grid (ready to
 /// warm-start a later run), and the typed reason the run ended.
 ///
@@ -493,7 +484,7 @@ impl SessionCore {
     /// sampling; `step` must not be called once `finished()`.
     pub(crate) fn step(
         &mut self,
-        backend: &dyn VSampleBackend,
+        backend: &mut dyn VSampleBackend,
         cfg: &JobConfig,
     ) -> Result<StepRecord> {
         debug_assert!(self.stop.is_none(), "stepping a finished session");
@@ -637,7 +628,7 @@ impl SessionCore {
 /// `calls`/`sampling` overrides are rejected here — use
 /// `api::Session` (native engine) for those.
 pub fn drive(
-    backend: &dyn VSampleBackend,
+    backend: &mut dyn VSampleBackend,
     cfg: &JobConfig,
     warm_start: Option<&GridState>,
     mut observer: Option<&mut dyn FnMut(&IterationEvent) -> ObserverControl>,
@@ -777,68 +768,6 @@ pub(crate) fn escalate_native(
         }
     }
     last.ok_or_else(|| Error::Config("no escalation levels ran".into()))
-}
-
-/// Run the two-phase m-Cubes loop on any backend (cold start, no
-/// observers).
-#[cfg(feature = "legacy-api")]
-#[deprecated(
-    since = "0.2.0",
-    note = "use `api::Integrator`, or `coordinator::drive` for raw backends"
-)]
-pub fn run_driver(backend: &dyn VSampleBackend, cfg: &JobConfig) -> Result<IntegrationOutput> {
-    drive(backend, cfg, None, None).map(|o| o.output)
-}
-
-/// Like `run_driver` but also returns the per-iteration estimates.
-#[cfg(feature = "legacy-api")]
-#[deprecated(
-    since = "0.2.0",
-    note = "use an observer on `api::Integrator::observe` (or `drive`) instead"
-)]
-pub fn run_driver_traced(
-    backend: &dyn VSampleBackend,
-    cfg: &JobConfig,
-) -> Result<(IntegrationOutput, DriverOutput)> {
-    let mut estimates: Vec<(f64, f64)> = Vec::new();
-    let mut cb = |ev: &IterationEvent| {
-        estimates.push((ev.estimate.integral, ev.estimate.variance.sqrt()));
-        ObserverControl::Continue
-    };
-    let outcome = drive(backend, cfg, None, Some(&mut cb))?;
-    let trace = DriverOutput {
-        output: Some(outcome.output.clone()),
-        iteration_estimates: estimates,
-    };
-    Ok((outcome.output, trace))
-}
-
-/// Convenience: integrate `f` with the native engine.
-///
-/// Breaking in 0.3.0: the shim now takes the shared [`IntegrandRef`]
-/// handle (`by_name` and the `Fn*Integrand::into_ref` builders already
-/// return one) instead of `&dyn Integrand` — the session core owns its
-/// integrand across stage rebuilds. Call sites holding an
-/// `IntegrandRef` change `&*f` to `&f`.
-#[cfg(feature = "legacy-api")]
-#[deprecated(since = "0.2.0", note = "use `api::Integrator::new(f).run()` instead")]
-pub fn integrate_native(f: &IntegrandRef, cfg: &JobConfig) -> Result<IntegrationOutput> {
-    integrate_native_core(f, cfg, None, None).map(|o| o.output)
-}
-
-/// Escalating-precision integration (see `escalate_native`).
-#[cfg(feature = "legacy-api")]
-#[deprecated(
-    since = "0.2.0",
-    note = "use `api::Integrator::new(f).escalate(levels, factor).run()` instead"
-)]
-pub fn integrate_native_adaptive(
-    f: &IntegrandRef,
-    base: &JobConfig,
-    max_escalations: usize,
-    escalation_factor: usize,
-) -> Result<IntegrationOutput> {
-    escalate_native(f, base, max_escalations, escalation_factor, None, None).map(|o| o.output)
 }
 
 #[cfg(test)]
@@ -1084,13 +1013,15 @@ mod tests {
     #[test]
     fn per_stage_overrides_rejected_on_fixed_backends() {
         use crate::api::Stage;
-        use crate::coordinator::NativeBackend;
+        use crate::coordinator::EngineBackend;
         let f = by_name("f3", 3).unwrap();
         let mut c = cfg(1 << 12, 1e-3);
         c.plan = RunPlan::warmup_then_final(2, 1 << 10, 3);
         let layout = Layout::compute(3, c.maxcalls, c.nb, c.nblocks).unwrap();
-        let backend = NativeBackend::new(f.clone(), layout, 2);
-        let err = drive(&backend, &c, None, None).unwrap_err().to_string();
+        let mut backend = EngineBackend::uniform(f.clone(), layout, 2);
+        let err = drive(&mut backend, &c, None, None)
+            .unwrap_err()
+            .to_string();
         assert!(err.contains("per-stage overrides"), "{err}");
         // A sampling override is equally rejected.
         let mut c2 = cfg(1 << 12, 1e-3);
@@ -1098,7 +1029,7 @@ mod tests {
             Stage::adapt(2).with_sampling(Sampling::vegas_plus()),
             Stage::sample(2),
         ]);
-        assert!(drive(&backend, &c2, None, None).is_err());
+        assert!(drive(&mut backend, &c2, None, None).is_err());
         // ...but the same plan runs on the native session path.
         let out = integrate_native_core(&f, &c, None, None).unwrap();
         assert_eq!(out.output.iterations, 5);
@@ -1291,33 +1222,39 @@ mod tests {
         }
     }
 
-    /// The one sanctioned `allow(deprecated)`: the test that pins the
-    /// legacy shims to the facade core. Every other caller is migrated;
-    /// `--no-default-features` drops the shims (and this module).
-    #[cfg(feature = "legacy-api")]
-    #[allow(deprecated)]
-    mod legacy_shims {
-        use super::super::{integrate_native, run_driver_traced};
-        use super::{cfg, integrate};
-        use crate::coordinator::NativeBackend;
-        use crate::integrands::by_name;
-        use crate::strat::Layout;
-
-        #[test]
-        fn deprecated_shims_still_delegate() {
-            let f = by_name("f3", 3).unwrap();
-            let c = cfg(1 << 12, 1e-3);
-            let new = integrate(&f, &c).unwrap();
-            let old = integrate_native(&f, &c).unwrap();
-            assert_eq!(new.integral, old.integral);
-            assert_eq!(new.sigma, old.sigma);
-            let (traced, trace) = {
-                let layout = Layout::compute(3, c.maxcalls, c.nb, c.nblocks).unwrap();
-                let backend = NativeBackend::new(f.clone(), layout, c.threads);
-                run_driver_traced(&backend, &c).unwrap()
-            };
-            assert_eq!(traced.integral, new.integral);
-            assert_eq!(trace.iteration_estimates.len(), traced.iterations);
+    #[test]
+    fn vegas_plus_suspend_resume_survives_reallocation_state() {
+        // Satellite regression for the removed RefCell shims: the
+        // engines' `&mut self` update hook must leave the stratified
+        // reallocation state exactly where a suspend/resume expects
+        // it. Drive an EngineBackend for two iterations, export its
+        // snapshot, rebuild from the snapshot, and the next iteration
+        // must match the uninterrupted backend bitwise.
+        use crate::coordinator::EngineBackend;
+        use crate::grid::Bins;
+        let f = by_name("f4", 5).unwrap();
+        let layout = Layout::compute(5, 4096, 16, 1).unwrap();
+        let bins = Bins::uniform(5, 16);
+        let beta = 0.75;
+        let mut donor = EngineBackend::vegas_plus(f.clone(), layout, 2, beta, None).unwrap();
+        for it in 0..2u32 {
+            donor.run(&bins, 11, it, true).unwrap();
         }
+        let snap = donor.strat_export().expect("stratified export");
+        let mut resumed =
+            EngineBackend::vegas_plus(f.clone(), layout, 4, beta, Some(&snap)).unwrap();
+        let (rd, cd) = donor.run(&bins, 11, 2, true).unwrap();
+        let (rr, cr) = resumed.run(&bins, 11, 2, true).unwrap();
+        assert_eq!(rd.integral.to_bits(), rr.integral.to_bits());
+        assert_eq!(rd.variance.to_bits(), rr.variance.to_bits());
+        for (a, b) in cd.unwrap().iter().zip(&cr.unwrap()) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        // alloc_stats describes the allocation the pass ran with.
+        let sd = donor.alloc_stats().expect("stats after run");
+        let sr = resumed.alloc_stats().expect("stats after run");
+        assert_eq!(sd.min, sr.min);
+        assert_eq!(sd.max, sr.max);
+        assert_eq!(sd.total, sr.total);
     }
 }

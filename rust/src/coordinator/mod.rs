@@ -5,25 +5,18 @@
 //!
 //! The stepping state machine (`SessionCore`) is shared by
 //! `api::Session` (pull-based, suspend/resume) and [`drive`] (the
-//! blocking loop for fixed-layout backends); the seed's free
-//! functions remain as deprecated shims behind the on-by-default
-//! `legacy-api` cargo feature (build with `--no-default-features` to
-//! drop them). Most callers should go through `crate::api::Integrator`
-//! instead of using this module directly.
+//! blocking loop for fixed-layout backends). Native sampling runs
+//! through [`EngineBackend`], the driver adapter over any
+//! `engine::Engine` impl. Most callers should go through
+//! `crate::api::Integrator` instead of using this module directly.
 
 mod backend;
 mod daemon;
 mod driver;
 mod service;
 
-pub use backend::{NativeBackend, PjrtBackend, StratifiedBackend, VSampleBackend};
+pub use backend::{EngineBackend, PjrtBackend, VSampleBackend};
 pub use daemon::{read_result, submit_job, Daemon, DaemonReport, IntegrandResolver};
-pub use driver::{drive, DriveOutcome, DriverOutput, IntegrationOutput, JobConfig};
-#[cfg(feature = "legacy-api")]
-#[allow(deprecated)]
-pub use driver::{integrate_native, integrate_native_adaptive, run_driver, run_driver_traced};
+pub use driver::{drive, DriveOutcome, IntegrationOutput, JobConfig};
 pub(crate) use driver::{escalate_native, integrate_native_core, SessionCore, StepRecord};
-#[cfg(feature = "legacy-api")]
-#[allow(deprecated)]
-pub use service::IntegrationService;
 pub use service::{JobRequest, JobResult, ResultStream, Scheduler, ServiceMetrics};

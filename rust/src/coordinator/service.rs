@@ -3,7 +3,7 @@
 //! shell around the m-Cubes driver (exercised end-to-end by
 //! `examples/service_demo.rs`).
 //!
-//! Where the old `IntegrationService` ran each job start-to-finish on
+//! Where a naive service would run each job start-to-finish on
 //! whichever worker picked it up, the [`Scheduler`] slices: a worker
 //! steps a job's session until the job has consumed `calls_budget`
 //! integrand evaluations in this slice, then requeues it behind its
@@ -371,14 +371,6 @@ impl Drop for Scheduler {
         }
     }
 }
-
-/// Deprecated name for [`Scheduler`]. The old sequential service ran
-/// each job start-to-finish; the scheduler time-slices sessions
-/// round-robin with priorities — `new`/`submit`/`drain` are
-/// source-compatible.
-#[cfg(feature = "legacy-api")]
-#[deprecated(since = "0.3.0", note = "renamed to `Scheduler`")]
-pub type IntegrationService = Scheduler;
 
 /// Streaming results iterator (completion order). Workers are joined
 /// once the stream is exhausted or dropped.

@@ -1,4 +1,4 @@
-//! Native CPU V-Sample engine — the "second backend" (portability
+//! Native CPU V-Sample engines — the "second backend" (portability
 //! Table 2) and the reference the PJRT path is cross-checked against.
 //!
 //! Implements exactly the same sampling math as the Pallas kernel
@@ -8,6 +8,31 @@
 //! agree to fp-summation-order tolerance — this is asserted by
 //! `rust/tests/integration_runtime.rs`.
 //!
+//! ## The [`Engine`] trait
+//!
+//! Every sampling strategy is an [`Engine`]: it owns its [`Layout`]
+//! (and, when adaptive, its per-cube [`crate::strat::Allocation`]),
+//! samples any reduction-task subrange on demand
+//! ([`Engine::sample_tasks`] — the shard entry point), folds the
+//! complete task-ordered partials into its state once per iteration
+//! ([`Engine::update`]), and exports that state for checkpoints
+//! ([`Engine::export`]). Three impls ship today:
+//!
+//! * [`UniformEngine`] — the paper's uniform m-Cubes schedule
+//!   (`p` samples per cube, counter base `cube * p`);
+//! * [`stratified::VegasPlusEngine`] — VEGAS+ adaptive stratification
+//!   (variable per-cube counts, damped-variance reallocation);
+//! * [`crate::baselines::GvegasSimEngine`] — the gVegas cost model,
+//!   ported onto the trait as the seam a PAGANI-style region-adaptive
+//!   engine plugs into next.
+//!
+//! All of them funnel through ONE fill→`eval_batch`→reduce tile walk
+//! ([`walk`]): the trait contributes only the per-cube sample schedule,
+//! so the Philox counter bookkeeping, the tile loop, and the fixed
+//! 64-task reduction exist in exactly one place.
+//!
+//! ## Reproducibility contract
+//!
 //! Parallelization mirrors the paper's Algorithm 3: the cube range is
 //! split into contiguous *reduction tasks* (a fixed partition of
 //! [`REDUCTION_TASKS`] spans, independent of the thread count); workers
@@ -15,53 +40,39 @@
 //! estimate + histogram over its cubes, and the coordinator folds task
 //! partials in task order. Because both the partition and the fold
 //! order are fixed, results are **bitwise identical for any thread
-//! count** (deterministic, unlike atomics — and stronger than the
-//! per-worker chunking this replaced, which was only reproducible up to
-//! summation-order rounding). The stratified VEGAS+ path
-//! ([`stratified::vsample_stratified`]) shares the same partition, so
-//! `Sampling::VegasPlus { beta: 0 }` reproduces this engine bitwise.
+//! count** — and for any shard count, since the shard subsystem
+//! partitions the same task index space. The stratified engine shares
+//! the partition, so `Sampling::VegasPlus { beta: 0 }` reproduces the
+//! uniform engine bitwise.
 //!
 //! Evaluation is batch-first (the paper's per-thread-block batches):
 //! each worker fills a structure-of-arrays [`PointBlock`] with the
-//! VEGAS-transformed points of a batch of whole sub-cubes, evaluates
-//! the whole block through one `Integrand::eval_batch` call, then
-//! reduces per cube in sample order. The fill itself runs through the
-//! lane-parallel SIMD core ([`simd`]): [`crate::rng::philox_simd`]
-//! computes `LANES` Philox counters per step and
-//! [`VegasMap::fill_points`] applies the bin lookup + affine transform
-//! to the whole lane group. The Philox streams, the transform, and the
-//! ordered reduction are unchanged, so results are bitwise identical
-//! to the scalar per-point loop this replaced (asserted by the
-//! batch-vs-scalar and simd-vs-scalar property tests). Sample indices
-//! are 64-bit end to end — layouts above 2^32 calls draw distinct
-//! counters instead of silently truncating.
-//!
-//! The default execution schedule is the fused streaming tile loop
-//! ([`streaming`]): fill → eval → reduce over small cache-resident
-//! tiles instead of whole blocks, bitwise identical to the block
-//! pipeline described above (which survives as [`ExecPath::Block`],
-//! the reference the equivalence suite compares against).
+//! VEGAS-transformed points of a cache-resident tile, evaluates the
+//! tile through one `Integrand::eval_batch` call, then reduces per
+//! cube in sample order. The fill runs through the lane-parallel SIMD
+//! core ([`simd`]) by default; sample indices are 64-bit end to end —
+//! layouts above 2^32 calls draw distinct counters instead of silently
+//! truncating. [`ExecPath`] selects the tile capacity (streaming
+//! [`STREAM_TILE`] tiles by default, [`BLOCK_POINTS`] block tiles as
+//! the reference); both are bitwise identical (property-tested).
 
 pub mod block;
 pub mod simd;
 pub mod stratified;
-pub mod streaming;
 pub mod tasks;
+pub mod walk;
 
 pub use block::{accumulate_uniform_box, PointBlock, ScalarEval, VegasMap, BLOCK_POINTS};
 pub use simd::FillPath;
-pub use stratified::{vsample_stratified, vsample_stratified_with_fill};
-pub use streaming::{
-    vsample_stratified_exec, vsample_stratified_streaming, vsample_stratified_streaming_with_fill,
-    vsample_streaming, vsample_streaming_with_fill, ExecPath, STREAM_TILE,
-};
+pub use stratified::{vsample_stratified, VegasPlusEngine};
 pub use tasks::{merge_task_partials, vsample_stratified_tasks, vsample_tasks, TaskPartial};
+pub use walk::{ExecPath, STREAM_TILE};
 
+use crate::api::StratSnapshot;
 use crate::estimator::IterationResult;
 use crate::grid::Bins;
 use crate::integrands::Integrand;
-use crate::strat::Layout;
-use crate::util::threadpool::parallel_chunks;
+use crate::strat::{AllocStats, Layout};
 
 /// Maximum dimension supported by the stack-allocated hot path.
 pub const MAX_DIM: usize = 16;
@@ -111,13 +122,6 @@ pub fn reduction_task_span(m: usize, ntasks: usize, t: usize) -> (usize, usize) 
     (lo, lo + q + usize::from(t < r))
 }
 
-/// One worker's partial output.
-struct Partial {
-    integral: f64,
-    variance: f64,
-    contrib: Option<Vec<f64>>,
-}
-
 /// Configuration for a V-Sample pass.
 #[derive(Debug, Clone, Copy)]
 pub struct VSampleOpts {
@@ -129,13 +133,213 @@ pub struct VSampleOpts {
     pub threads: usize,
 }
 
-/// The native engine. Stateless; all state flows through arguments so
-/// the coordinator can drive PJRT and native backends identically.
+/// One sampling strategy over an m-Cubes layout — the seam every
+/// engine (uniform, VEGAS+ stratified, gVegas-sim, and the planned
+/// PAGANI region-adaptive engine) plugs into.
+///
+/// An engine owns its layout and any per-cube allocation state; the
+/// coordinator drives it through exactly five hooks:
+///
+/// * [`Engine::sample_tasks`] — sample a reduction-task subrange (the
+///   shard entry point; every task's partial is bitwise independent of
+///   who computes it);
+/// * [`Engine::update`] — fold the complete, task-ordered partials of
+///   one iteration into the engine's state (`&mut self`, which is what
+///   lets the backend layer drop its historical `RefCell` shims);
+/// * [`Engine::allocation`] — the live per-cube (counts, offsets) view
+///   shard plans are built from, `None` on uniform schedules;
+/// * [`Engine::export`] — checkpoint state for suspend/resume;
+/// * [`Engine::vsample`] — one full pass (default impl: sample every
+///   task, merge in task order, update).
+///
+/// Engines are `Send + Sync`: shard workers sample disjoint task
+/// ranges through `&self` from scoped threads, while `update` keeps
+/// all mutation single-threaded at the merge point.
+pub trait Engine: Send + Sync {
+    /// Backend label for reports ("native" / "native-vegas+" / ...).
+    fn name(&self) -> &'static str;
+
+    /// The stratification layout this engine samples.
+    fn layout(&self) -> &Layout;
+
+    /// Partials of reduction tasks `[task_lo, task_hi)` — bitwise
+    /// identical for any `opts.threads`, any tile capacity (`exec`),
+    /// and either fill path; concatenating subrange results in task
+    /// order reproduces the full pass bitwise.
+    #[allow(clippy::too_many_arguments)]
+    fn sample_tasks(
+        &self,
+        f: &dyn Integrand,
+        bins: &Bins,
+        opts: &VSampleOpts,
+        fill: FillPath,
+        exec: ExecPath,
+        task_lo: usize,
+        task_hi: usize,
+    ) -> Vec<TaskPartial>;
+
+    /// Fold one iteration's complete, task-ordered partials into the
+    /// engine's state (e.g. absorb `d_new` observations and
+    /// re-apportion the next iteration's budget). Uniform engines
+    /// no-op.
+    fn update(&mut self, partials: &[TaskPartial]);
+
+    /// Live per-cube allocation view `(counts, offsets)` — `Some` only
+    /// for adaptively-stratified engines. Shard plans are built from
+    /// this.
+    fn allocation(&self) -> Option<(&[u32], &[u64])> {
+        None
+    }
+
+    /// Summary of the live allocation (`Some` only when adaptive).
+    fn alloc_stats(&self) -> Option<AllocStats> {
+        None
+    }
+
+    /// Checkpoint state export (`Some` only when adaptive): restoring
+    /// an engine from this snapshot resumes the allocation
+    /// bit-identically.
+    fn export(&self) -> Option<StratSnapshot> {
+        None
+    }
+
+    /// One full V-Sample pass: sample every reduction task, merge the
+    /// partials in global task order, and fold them into the engine's
+    /// state. Returns the iteration result and, when `opts.adjust`,
+    /// the row-major `[d][nb]` bin-contribution histogram.
+    fn vsample(
+        &mut self,
+        f: &dyn Integrand,
+        bins: &Bins,
+        opts: &VSampleOpts,
+        fill: FillPath,
+        exec: ExecPath,
+    ) -> (IterationResult, Option<Vec<f64>>) {
+        let (d, nb, ntasks) = {
+            let l = self.layout();
+            (l.d, l.nb, reduction_tasks(l.m))
+        };
+        let partials = self.sample_tasks(f, bins, opts, fill, exec, 0, ntasks);
+        let out = merge_task_partials(d, nb, opts.adjust, &partials);
+        self.update(&partials);
+        out
+    }
+}
+
+/// Trait-object forwarding: a boxed engine is an engine, so generic
+/// plumbing (`EngineBackend<E>`, the shard coordinator) runs over
+/// `Box<dyn Engine>` exactly as it runs over a concrete impl — the
+/// dyn-dispatch golden/property tests pin that both produce the same
+/// bits.
+impl Engine for Box<dyn Engine> {
+    fn name(&self) -> &'static str {
+        (**self).name()
+    }
+
+    fn layout(&self) -> &Layout {
+        (**self).layout()
+    }
+
+    fn sample_tasks(
+        &self,
+        f: &dyn Integrand,
+        bins: &Bins,
+        opts: &VSampleOpts,
+        fill: FillPath,
+        exec: ExecPath,
+        task_lo: usize,
+        task_hi: usize,
+    ) -> Vec<TaskPartial> {
+        (**self).sample_tasks(f, bins, opts, fill, exec, task_lo, task_hi)
+    }
+
+    fn update(&mut self, partials: &[TaskPartial]) {
+        (**self).update(partials);
+    }
+
+    fn allocation(&self) -> Option<(&[u32], &[u64])> {
+        (**self).allocation()
+    }
+
+    fn alloc_stats(&self) -> Option<AllocStats> {
+        (**self).alloc_stats()
+    }
+
+    fn export(&self) -> Option<StratSnapshot> {
+        (**self).export()
+    }
+
+    fn vsample(
+        &mut self,
+        f: &dyn Integrand,
+        bins: &Bins,
+        opts: &VSampleOpts,
+        fill: FillPath,
+        exec: ExecPath,
+    ) -> (IterationResult, Option<Vec<f64>>) {
+        (**self).vsample(f, bins, opts, fill, exec)
+    }
+}
+
+/// The paper's uniform m-Cubes schedule: every sub-cube draws exactly
+/// `p` samples from the consecutive Philox counters `cube * p .. cube
+/// * p + p`. Stateless beyond the layout — [`Engine::update`] is a
+/// no-op.
+#[derive(Debug, Clone)]
+pub struct UniformEngine {
+    layout: Layout,
+}
+
+impl UniformEngine {
+    pub fn new(layout: Layout) -> UniformEngine {
+        UniformEngine { layout }
+    }
+}
+
+impl Engine for UniformEngine {
+    fn name(&self) -> &'static str {
+        "native"
+    }
+
+    fn layout(&self) -> &Layout {
+        &self.layout
+    }
+
+    fn sample_tasks(
+        &self,
+        f: &dyn Integrand,
+        bins: &Bins,
+        opts: &VSampleOpts,
+        fill: FillPath,
+        exec: ExecPath,
+        task_lo: usize,
+        task_hi: usize,
+    ) -> Vec<TaskPartial> {
+        walk::run_tasks(
+            f,
+            &self.layout,
+            bins,
+            &walk::UniformSched { p: self.layout.p },
+            opts,
+            fill,
+            exec,
+            task_lo,
+            task_hi,
+        )
+    }
+
+    fn update(&mut self, _partials: &[TaskPartial]) {}
+}
+
+/// Stateless convenience handle over [`UniformEngine`] for callers
+/// that hold the layout themselves (tests, benches, shard workers):
+/// `NativeEngine.vsample(f, &layout, &bins, &opts)` is one full
+/// uniform pass.
 #[derive(Debug, Clone, Copy, Default)]
 pub struct NativeEngine;
 
 impl NativeEngine {
-    /// One V-Sample pass over every sub-cube in `layout`.
+    /// One uniform V-Sample pass over every sub-cube in `layout`.
     ///
     /// Returns the iteration result and, when `opts.adjust`, the
     /// row-major `[d][nb]` bin-contribution histogram.
@@ -146,30 +350,13 @@ impl NativeEngine {
         bins: &Bins,
         opts: &VSampleOpts,
     ) -> (IterationResult, Option<Vec<f64>>) {
-        self.vsample_with_fill(f, layout, bins, opts, FillPath::Simd)
-    }
-
-    /// [`NativeEngine::vsample`] with an explicit [`FillPath`].
-    ///
-    /// The two paths are bitwise identical (the SIMD determinism
-    /// contract, property-tested); `FillPath::Scalar` exists for the
-    /// equivalence tests and the `simd_fill_speedup` microbench.
-    pub fn vsample_with_fill(
-        &self,
-        f: &dyn Integrand,
-        layout: &Layout,
-        bins: &Bins,
-        opts: &VSampleOpts,
-        fill: FillPath,
-    ) -> (IterationResult, Option<Vec<f64>>) {
-        self.vsample_exec(f, layout, bins, opts, fill, ExecPath::default())
+        self.vsample_exec(f, layout, bins, opts, FillPath::Simd, ExecPath::default())
     }
 
     /// [`NativeEngine::vsample`] with explicit fill and execution
-    /// paths. `ExecPath::Streaming` (the default) runs the fused
-    /// streaming tile loop ([`streaming`]); `ExecPath::Block` runs the
-    /// historical whole-block pipeline. Bitwise identical either way
-    /// (property-tested), so the choice is purely a performance knob.
+    /// paths. Both [`ExecPath`]s and both [`FillPath`]s are bitwise
+    /// identical (property-tested), so the choice is purely a
+    /// performance knob.
     pub fn vsample_exec(
         &self,
         f: &dyn Integrand,
@@ -179,199 +366,7 @@ impl NativeEngine {
         fill: FillPath,
         exec: ExecPath,
     ) -> (IterationResult, Option<Vec<f64>>) {
-        match exec {
-            ExecPath::Streaming => streaming::vsample_streaming_with_fill(f, layout, bins, opts, fill),
-            ExecPath::Block => self.vsample_block(f, layout, bins, opts, fill),
-        }
-    }
-
-    /// The block pipeline: materialize a whole-cube batch, then
-    /// evaluate and reduce it — the reference [`ExecPath::Block`] body.
-    fn vsample_block(
-        &self,
-        f: &dyn Integrand,
-        layout: &Layout,
-        bins: &Bins,
-        opts: &VSampleOpts,
-        fill: FillPath,
-    ) -> (IterationResult, Option<Vec<f64>>) {
-        assert!(layout.d <= MAX_DIM, "d > MAX_DIM");
-        if let Err(e) = layout.validate() {
-            panic!("invalid layout: {e}");
-        }
-        assert_eq!(bins.d(), layout.d);
-        assert_eq!(bins.nb(), layout.nb);
-
-        // Fixed task partition: the same spans (and the same fold
-        // order below) for every thread count — see `REDUCTION_TASKS`.
-        let ntasks = reduction_tasks(layout.m);
-        let task_partials: Vec<Vec<Partial>> =
-            parallel_chunks(ntasks, opts.threads, |t0, t1| {
-                (t0..t1)
-                    .map(|t| {
-                        let (lo, hi) = reduction_task_span(layout.m, ntasks, t);
-                        sample_cube_range(f, layout, bins, opts, lo, hi, fill)
-                    })
-                    .collect()
-            });
-
-        let mut integral = 0.0;
-        let mut variance = 0.0;
-        let mut contrib = opts.adjust.then(|| vec![0.0; layout.d * layout.nb]);
-        for p in task_partials.into_iter().flatten() {
-            integral += p.integral;
-            variance += p.variance;
-            if let (Some(acc), Some(part)) = (contrib.as_mut(), p.contrib.as_ref()) {
-                for (x, y) in acc.iter_mut().zip(part) {
-                    *x += y;
-                }
-            }
-        }
-        (
-            IterationResult {
-                integral,
-                variance,
-            },
-            contrib,
-        )
-    }
-}
-
-/// Serial V-Sample over cubes [cube_lo, cube_hi) — the per-worker body.
-///
-/// Batch pipeline: fill a [`PointBlock`] with the points of a batch of
-/// whole cubes → one `eval_batch` call → ordered per-cube reduction.
-/// The fill runs through the lane-parallel SIMD core by default
-/// (`FillPath::Simd`, see [`simd`]); point order, Philox counters, and
-/// every accumulation order match the scalar loop, so partials are
-/// bitwise identical either way. The global sample index is 64-bit —
-/// layouts beyond 2^32 calls keep distinct counters per sample instead
-/// of silently truncating.
-fn sample_cube_range(
-    f: &dyn Integrand,
-    layout: &Layout,
-    bins: &Bins,
-    opts: &VSampleOpts,
-    cube_lo: usize,
-    cube_hi: usize,
-    fill: FillPath,
-) -> Partial {
-    let d = layout.d;
-    let nb = layout.nb;
-    let m = layout.m as f64;
-    let p = layout.p;
-    let pf = p as f64;
-    // Per-axis affine map unit box -> physical box + importance-grid
-    // transform, shared with the stratified engine and gVegas-sim.
-    let map = VegasMap::new(layout, bins, &f.bounds());
-
-    let mut contrib = opts.adjust.then(|| vec![0.0; d * nb]);
-    let mut integral = 0.0;
-    let mut variance = 0.0;
-
-    let mut coords = [0usize; MAX_DIM];
-
-    // Whole cubes per block: at least one cube, and as many as fit the
-    // target block size when p is small.
-    let cubes_per_block = (BLOCK_POINTS / p).max(1);
-    let cap = cubes_per_block * p;
-    let mut blk = PointBlock::with_capacity(d, cap);
-    let mut vals = vec![0.0f64; cap];
-    let mut bidx = vec![0usize; cap * d];
-    // Row-major `[ncubes][d]` lattice coords of the block's cubes —
-    // the SIMD span fill reads each lane's cube from here, so lane
-    // groups stay full across cube boundaries (crucial when p is 2).
-    let mut cube_coords = vec![0usize; cubes_per_block * d];
-
-    // Decode the first cube, then advance coords as a base-g odometer —
-    // avoids d divisions per cube in the hot loop (perf pass).
-    layout.cube_coords(cube_lo, &mut coords[..d]);
-    let gm1 = layout.g - 1;
-
-    let mut cube = cube_lo;
-    while cube < cube_hi {
-        let ncubes = cubes_per_block.min(cube_hi - cube);
-        let npts = ncubes * p;
-        blk.reset(npts);
-
-        // Decode the block's cube coords (odometer, one step per cube).
-        for c in 0..ncubes {
-            cube_coords[c * d..(c + 1) * d].copy_from_slice(&coords[..d]);
-            for slot in coords.iter_mut().take(d) {
-                if *slot == gm1 {
-                    *slot = 0;
-                } else {
-                    *slot += 1;
-                    break;
-                }
-            }
-        }
-
-        // Fill phase: the block's points in (cube, sample) order — the
-        // global sample indices run consecutively across the block.
-        let base_sidx = cube as u64 * p as u64;
-        match fill {
-            FillPath::Simd => map.fill_span(
-                &cube_coords[..ncubes * d],
-                ncubes,
-                p,
-                base_sidx,
-                opts.iteration,
-                opts.seed,
-                &mut blk,
-                &mut bidx,
-            ),
-            FillPath::Scalar => {
-                for c in 0..ncubes {
-                    map.fill_points_scalar(
-                        &cube_coords[c * d..(c + 1) * d],
-                        base_sidx + (c * p) as u64,
-                        p,
-                        opts.iteration,
-                        opts.seed,
-                        &mut blk,
-                        c * p,
-                        &mut bidx,
-                    );
-                }
-            }
-        }
-
-        // Eval phase: one virtual call for the whole block.
-        f.eval_batch(&blk, &mut vals[..npts]);
-
-        // Reduce phase: per cube, in sample order.
-        for c in 0..ncubes {
-            let base = c * p;
-            let mut s1 = 0.0;
-            let mut s2 = 0.0;
-            for k in 0..p {
-                let j = base + k;
-                let v = vals[j] * blk.jac(j);
-                s1 += v;
-                s2 += v * v;
-                if let Some(cacc) = contrib.as_mut() {
-                    let v2 = v * v;
-                    for i in 0..d {
-                        // SAFETY: bidx slots hold i*nb + b with b < nb,
-                        // so each is < d*nb == cacc.len().
-                        unsafe { *cacc.get_unchecked_mut(bidx[j * d + i]) += v2 };
-                    }
-                }
-            }
-            let mean = s1 / pf;
-            let var = ((s2 / pf - mean * mean).max(0.0)) / (pf - 1.0);
-            integral += mean / m;
-            variance += var / (m * m);
-        }
-
-        cube += ncubes;
-    }
-
-    Partial {
-        integral,
-        variance,
-        contrib,
+        UniformEngine::new(*layout).vsample(f, bins, opts, fill, exec)
     }
 }
 
@@ -457,6 +452,28 @@ mod tests {
             "Var = {}",
             r.variance
         );
+    }
+
+    #[test]
+    fn dyn_engine_matches_static_engine_bitwise() {
+        // Trait-object dispatch must be invisible: a `Box<dyn Engine>`
+        // pass produces the same bits as the concrete impl.
+        let f = by_name("f4", 5).unwrap();
+        let layout = Layout::compute(5, 4096, 20, 4).unwrap();
+        let bins = Bins::uniform(5, 20);
+        let o = opts(42, 0);
+        let mut stat = UniformEngine::new(layout);
+        let (rs, cs) = stat.vsample(&*f, &bins, &o, FillPath::Simd, ExecPath::default());
+        let mut dynamic: Box<dyn Engine> = Box::new(UniformEngine::new(layout));
+        let (rd, cd) = dynamic.vsample(&*f, &bins, &o, FillPath::Simd, ExecPath::default());
+        assert_eq!(rs.integral.to_bits(), rd.integral.to_bits());
+        assert_eq!(rs.variance.to_bits(), rd.variance.to_bits());
+        for (a, b) in cs.unwrap().iter().zip(&cd.unwrap()) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        assert_eq!(dynamic.name(), "native");
+        assert!(dynamic.allocation().is_none());
+        assert!(dynamic.export().is_none());
     }
 
     #[test]

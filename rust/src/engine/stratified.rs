@@ -1,18 +1,20 @@
-//! VEGAS+ adaptive-stratification sampling path — variable per-cube
-//! sample counts over the m-Cubes layout.
+//! VEGAS+ adaptive-stratification engine — variable per-cube sample
+//! counts over the m-Cubes layout.
 //!
-//! The uniform engine ([`crate::engine::NativeEngine::vsample`]) gives
-//! every sub-cube the same `p` samples. This path drives the identical
-//! fill-block → `eval_batch` → reduce pipeline with a per-cube
-//! [`Allocation`]: cube `k` draws `counts[k]` samples from the 64-bit
-//! Philox indices `offsets[k] .. offsets[k] + counts[k]` (exclusive
-//! prefix sums of the counts — no wrapping, even past 2^32 total
-//! calls), so the sample stream of every cube is a pure function of
-//! `(seed, iteration, allocation)` — never of the thread count. After the pass each cube's fresh variance observation
-//! `n_k * Var_k` is folded into the allocation's damped accumulator
-//! (`d_k <- d_k/2 + n_k Var_k / 2`); the *caller* decides when to
-//! [`Allocation::reallocate`] with weights `d_k^beta`
-//! (`crate::coordinator`'s stratified backend does so every iteration).
+//! The uniform engine ([`crate::engine::UniformEngine`]) gives every
+//! sub-cube the same `p` samples. [`VegasPlusEngine`] drives the
+//! identical fill-block → `eval_batch` → reduce walk
+//! ([`crate::engine::walk`]) with a live per-cube [`Allocation`]: cube
+//! `k` draws `counts[k]` samples from the 64-bit Philox indices
+//! `offsets[k] .. offsets[k] + counts[k]` (exclusive prefix sums of
+//! the counts — no wrapping, even past 2^32 total calls), so the
+//! sample stream of every cube is a pure function of
+//! `(seed, iteration, allocation)` — never of the thread count. The
+//! engine's [`Engine::update`] hook folds each cube's fresh variance
+//! observation `n_k * Var_k` into the allocation's damped accumulator
+//! (`d_k <- d_k/2 + n_k Var_k / 2`) and then re-apportions the next
+//! iteration's budget with weights `d_k^beta`
+//! ([`Allocation::reallocate`]).
 //!
 //! ## Reproducibility contract
 //!
@@ -23,139 +25,146 @@
 //! * results are bitwise identical for any `threads` value, and
 //! * with a uniform allocation (`beta = 0`, or the initial state) the
 //!   Philox offsets collapse to `cube * p` and the whole pass is
-//!   bitwise identical to `NativeEngine::vsample` (property-tested in
+//!   bitwise identical to the uniform engine (property-tested in
 //!   `rust/tests/properties.rs`).
 
-// Narrowing / float→int casts in this file are deliberate and
-// audited by `cargo xtask lint` (MC001); see docs/invariants.md.
-#![allow(clippy::cast_possible_truncation)]
-
-use super::block::{PointBlock, VegasMap, BLOCK_POINTS};
 use super::simd::FillPath;
-use super::{reduction_task_span, reduction_tasks, VSampleOpts, MAX_DIM};
+use super::tasks::merge_task_partials;
+use super::walk::{self, ExecPath, StratSched};
+use super::{reduction_tasks, Engine, TaskPartial, VSampleOpts};
+use crate::api::StratSnapshot;
+use crate::error::Result;
 use crate::estimator::IterationResult;
 use crate::grid::Bins;
 use crate::integrands::Integrand;
-use crate::strat::{Allocation, Layout};
-use crate::util::threadpool::parallel_chunks;
+use crate::strat::{AllocStats, Allocation, Layout};
 
-/// One reduction task's partial output. `pub(super)` so the
-/// task-subrange entry points ([`super::tasks`]) reuse the exact same
-/// per-task body the full pass runs.
-pub(super) struct Partial {
-    pub(super) cube_lo: usize,
-    pub(super) integral: f64,
-    pub(super) variance: f64,
-    pub(super) contrib: Option<Vec<f64>>,
-    /// Fresh per-cube variance observations `n_k * Var_k`, indexed
-    /// relative to `cube_lo`.
-    pub(super) d_new: Vec<f64>,
+/// VEGAS+ adaptively-stratified [`Engine`]: owns the layout and the
+/// live [`Allocation`], samples through the shared walk with the
+/// per-cube (counts, offsets) schedule, and re-apportions the
+/// per-iteration budget in [`Engine::update`].
+#[derive(Debug, Clone)]
+pub struct VegasPlusEngine {
+    layout: Layout,
+    beta: f64,
+    /// Per-iteration call budget (`layout.calls()`, matching the
+    /// uniform engine so `calls_used` accounting is identical).
+    budget: usize,
+    alloc: Allocation,
 }
 
-/// One reduction task's body: sample cubes `[cube_lo, cube_hi)` under
-/// the per-cube allocation view (`counts`/`offsets`) and return the
-/// task partial. This is THE stratified per-task arithmetic — both the
-/// full pass below and the shard workers ([`super::tasks`]) call it, so
-/// an N-shard merge folds bit-identical partials. Scratch is owned per
-/// call; allocation placement never changes the float stream.
-#[allow(clippy::too_many_arguments)]
-pub(super) fn sample_task_stratified(
-    f: &dyn Integrand,
-    layout: &Layout,
-    bins: &Bins,
-    counts: &[u32],
-    offsets: &[u64],
-    opts: &VSampleOpts,
-    fill: FillPath,
-    cube_lo: usize,
-    cube_hi: usize,
-) -> Partial {
-    let d = layout.d;
-    let nb = layout.nb;
-    let m = layout.m as f64;
-    let map = VegasMap::new(layout, bins, &f.bounds());
-    let mut blk = PointBlock::with_capacity(d, BLOCK_POINTS);
-    let mut vals = vec![0.0f64; BLOCK_POINTS];
-    let mut bidx = vec![0usize; BLOCK_POINTS * d];
-    let mut coords = [0usize; MAX_DIM];
-    let mut out = Partial {
-        cube_lo,
-        integral: 0.0,
-        variance: 0.0,
-        contrib: opts.adjust.then(|| vec![0.0; d * nb]),
-        d_new: Vec::with_capacity(cube_hi - cube_lo),
-    };
-    for cube in cube_lo..cube_hi {
-        layout.cube_coords(cube, &mut coords[..d]);
-        let n = counts[cube].max(2);
-        let nf = n as f64;
-        let mut s1 = 0.0;
-        let mut s2 = 0.0;
-        // A cube's (variable-size) sample set is processed in
-        // block-sized chunks, carrying s1/s2 across chunks so the
-        // accumulation order matches the uniform engine's.
-        let mut k0 = 0u32;
-        while k0 < n {
-            let chunk = (n - k0).min(BLOCK_POINTS as u32);
-            blk.reset(chunk as usize);
-            // The cube's sample stream starts at its 64-bit
-            // prefix-sum offset — no wrapping, even past 2^32 total
-            // calls.
-            let base_sidx = offsets[cube] + k0 as u64;
-            match fill {
-                FillPath::Simd => map.fill_points(
-                    &coords[..d],
-                    base_sidx,
-                    chunk as usize,
-                    opts.iteration,
-                    opts.seed,
-                    &mut blk,
-                    0,
-                    &mut bidx,
-                ),
-                FillPath::Scalar => map.fill_points_scalar(
-                    &coords[..d],
-                    base_sidx,
-                    chunk as usize,
-                    opts.iteration,
-                    opts.seed,
-                    &mut blk,
-                    0,
-                    &mut bidx,
-                ),
+impl VegasPlusEngine {
+    /// Build a VEGAS+ engine, resuming `resume`'s allocation when its
+    /// cube count matches `layout` (the re-apportionment is a pure
+    /// function of the damped accumulator, so a matching snapshot
+    /// restores the exact per-cube counts); any mismatch starts from
+    /// the uniform split.
+    pub fn new(
+        layout: Layout,
+        beta: f64,
+        resume: Option<&StratSnapshot>,
+    ) -> Result<VegasPlusEngine> {
+        let alloc = match resume {
+            Some(s) if s.counts.len() == layout.m => {
+                let mut a = Allocation::from_parts(s.counts.clone(), s.damped.clone())?;
+                a.reallocate(layout.calls(), beta);
+                a
             }
-            f.eval_batch(&blk, &mut vals[..chunk as usize]);
-            for j in 0..chunk as usize {
-                let v = vals[j] * blk.jac(j);
-                s1 += v;
-                s2 += v * v;
-                if let Some(cacc) = out.contrib.as_mut() {
-                    let v2 = v * v;
-                    for i in 0..d {
-                        cacc[bidx[j * d + i]] += v2;
-                    }
-                }
-            }
-            k0 += chunk;
-        }
-        let mean = s1 / nf;
-        let var = ((s2 / nf - mean * mean).max(0.0)) / (nf - 1.0);
-        out.integral += mean / m;
-        out.variance += var / (m * m);
-        // Variance of the *cube total* — Lepage's d_k observation
-        // driving the next allocation.
-        out.d_new.push(var * nf);
+            _ => Allocation::uniform(&layout),
+        };
+        Ok(VegasPlusEngine {
+            layout,
+            beta,
+            budget: layout.calls(),
+            alloc,
+        })
     }
-    out
+
+    /// Redistribution exponent this engine re-apportions with.
+    pub fn beta(&self) -> f64 {
+        self.beta
+    }
+
+    /// The live allocation (test/inspection hook).
+    pub fn alloc(&self) -> &Allocation {
+        &self.alloc
+    }
 }
 
-/// One VEGAS+ V-Sample pass over every sub-cube in `layout`.
+impl Engine for VegasPlusEngine {
+    fn name(&self) -> &'static str {
+        "native-vegas+"
+    }
+
+    fn layout(&self) -> &Layout {
+        &self.layout
+    }
+
+    fn sample_tasks(
+        &self,
+        f: &dyn Integrand,
+        bins: &Bins,
+        opts: &VSampleOpts,
+        fill: FillPath,
+        exec: ExecPath,
+        task_lo: usize,
+        task_hi: usize,
+    ) -> Vec<TaskPartial> {
+        walk::run_tasks(
+            f,
+            &self.layout,
+            bins,
+            &StratSched {
+                counts: self.alloc.counts(),
+                offsets: self.alloc.offsets(),
+            },
+            opts,
+            fill,
+            exec,
+            task_lo,
+            task_hi,
+        )
+    }
+
+    /// Absorb the fresh per-cube variance observations in task order
+    /// (each cube appears exactly once per iteration, so the absorb
+    /// placement never changes the damped accumulator's bits), then
+    /// re-apportion the next iteration's budget — which also leaves
+    /// the exported snapshot ready for warm starts even when this was
+    /// the final iteration.
+    fn update(&mut self, partials: &[TaskPartial]) {
+        for p in partials {
+            self.alloc.absorb_span(p.cube_lo, &p.d_new);
+        }
+        self.alloc.reallocate(self.budget, self.beta);
+    }
+
+    fn allocation(&self) -> Option<(&[u32], &[u64])> {
+        Some((self.alloc.counts(), self.alloc.offsets()))
+    }
+
+    fn alloc_stats(&self) -> Option<AllocStats> {
+        Some(self.alloc.stats())
+    }
+
+    fn export(&self) -> Option<StratSnapshot> {
+        Some(StratSnapshot {
+            beta: self.beta,
+            counts: self.alloc.counts().to_vec(),
+            damped: self.alloc.damped().to_vec(),
+        })
+    }
+}
+
+/// One VEGAS+ V-Sample pass over every sub-cube in `layout`, against a
+/// caller-owned [`Allocation`].
 ///
-/// Samples cube `k` `alloc.counts()[k]` times, folds the fresh per-cube
-/// variance into `alloc`'s damped accumulator, and returns the
-/// iteration estimate plus (when `opts.adjust`) the row-major `[d][nb]`
-/// bin-contribution histogram — the same contract as the uniform
-/// engine's `vsample`.
+/// Samples cube `k` `alloc.counts()[k]` times and folds the fresh
+/// per-cube variance into `alloc`'s damped accumulator; the *caller*
+/// decides when to [`Allocation::reallocate`] ([`VegasPlusEngine`]
+/// does so every iteration). Returns the iteration estimate plus
+/// (when `opts.adjust`) the row-major `[d][nb]` bin-contribution
+/// histogram — the same contract as the uniform engine's pass.
 pub fn vsample_stratified(
     f: &dyn Integrand,
     layout: &Layout,
@@ -163,68 +172,30 @@ pub fn vsample_stratified(
     alloc: &mut Allocation,
     opts: &VSampleOpts,
 ) -> (IterationResult, Option<Vec<f64>>) {
-    vsample_stratified_with_fill(f, layout, bins, alloc, opts, FillPath::Simd)
-}
-
-/// [`vsample_stratified`] with an explicit [`FillPath`] — the two
-/// paths are bitwise identical (SIMD determinism contract); `Scalar`
-/// exists for the equivalence property tests and the microbench.
-pub fn vsample_stratified_with_fill(
-    f: &dyn Integrand,
-    layout: &Layout,
-    bins: &Bins,
-    alloc: &mut Allocation,
-    opts: &VSampleOpts,
-    fill: FillPath,
-) -> (IterationResult, Option<Vec<f64>>) {
-    assert!(layout.d <= MAX_DIM, "d > MAX_DIM");
-    if let Err(e) = layout.validate() {
-        panic!("invalid layout: {e}");
-    }
-    assert_eq!(bins.d(), layout.d);
-    assert_eq!(bins.nb(), layout.nb);
     assert_eq!(alloc.m(), layout.m, "allocation cube count != layout");
-    let d = layout.d;
-    let nb = layout.nb;
-
     let ntasks = reduction_tasks(layout.m);
-    let task_partials: Vec<Vec<Partial>> = {
-        let counts = alloc.counts();
-        let offsets = alloc.offsets();
-        parallel_chunks(ntasks, opts.threads, |t0, t1| {
-            (t0..t1)
-                .map(|t| {
-                    let (cube_lo, cube_hi) = reduction_task_span(layout.m, ntasks, t);
-                    sample_task_stratified(
-                        f, layout, bins, counts, offsets, opts, fill, cube_lo, cube_hi,
-                    )
-                })
-                .collect()
-        })
+    let partials = {
+        let sched = StratSched {
+            counts: alloc.counts(),
+            offsets: alloc.offsets(),
+        };
+        walk::run_tasks(
+            f,
+            layout,
+            bins,
+            &sched,
+            opts,
+            FillPath::Simd,
+            ExecPath::default(),
+            0,
+            ntasks,
+        )
     };
-
-    let mut integral = 0.0;
-    let mut variance = 0.0;
-    let mut contrib = opts.adjust.then(|| vec![0.0; d * nb]);
-    for p in task_partials.into_iter().flatten() {
-        integral += p.integral;
-        variance += p.variance;
-        if let (Some(acc), Some(part)) = (contrib.as_mut(), p.contrib.as_ref()) {
-            for (x, y) in acc.iter_mut().zip(part) {
-                *x += y;
-            }
-        }
-        for (i, &dn) in p.d_new.iter().enumerate() {
-            alloc.absorb(p.cube_lo + i, dn);
-        }
+    let out = merge_task_partials(layout.d, layout.nb, opts.adjust, &partials);
+    for p in &partials {
+        alloc.absorb_span(p.cube_lo, &p.d_new);
     }
-    (
-        IterationResult {
-            integral,
-            variance,
-        },
-        contrib,
-    )
+    out
 }
 
 #[cfg(test)]
@@ -281,6 +252,78 @@ mod tests {
         for (a, b) in a1.damped().iter().zip(a4.damped()) {
             assert_eq!(a.to_bits(), b.to_bits());
         }
+    }
+
+    #[test]
+    fn engine_pass_matches_free_function_plus_reallocate_bitwise() {
+        // VegasPlusEngine::vsample == vsample_stratified followed by
+        // the caller's reallocate — pinning that the trait port did
+        // not move the re-apportionment relative to the absorb fold.
+        let f = by_name("f3", 4).unwrap();
+        let layout = Layout::compute(4, 4096, 16, 1).unwrap();
+        let bins = Bins::uniform(4, 16);
+        let beta = crate::strat::DEFAULT_BETA;
+        let mut engine = VegasPlusEngine::new(layout, beta, None).unwrap();
+        let mut alloc = Allocation::uniform(&layout);
+        for it in 0..3 {
+            let (re, ce) = engine.vsample(
+                &*f,
+                &bins,
+                &opts(11, it, 2),
+                FillPath::Simd,
+                ExecPath::default(),
+            );
+            let (rf, cf) = vsample_stratified(&*f, &layout, &bins, &mut alloc, &opts(11, it, 3));
+            alloc.reallocate(layout.calls(), beta);
+            assert_eq!(re.integral.to_bits(), rf.integral.to_bits());
+            assert_eq!(re.variance.to_bits(), rf.variance.to_bits());
+            for (a, b) in ce.unwrap().iter().zip(&cf.unwrap()) {
+                assert_eq!(a.to_bits(), b.to_bits());
+            }
+            let (counts, _) = engine.allocation().unwrap();
+            assert_eq!(counts, alloc.counts());
+            for (a, b) in engine.alloc().damped().iter().zip(alloc.damped()) {
+                assert_eq!(a.to_bits(), b.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn resume_restores_the_allocation_bitwise() {
+        // Export after two iterations, rebuild from the snapshot, and
+        // the third iteration must match the uninterrupted engine.
+        let f = by_name("f4", 5).unwrap();
+        let layout = Layout::compute(5, 4096, 16, 1).unwrap();
+        let bins = Bins::uniform(5, 16);
+        let beta = 0.5;
+        let mut donor = VegasPlusEngine::new(layout, beta, None).unwrap();
+        for it in 0..2 {
+            donor.vsample(
+                &*f,
+                &bins,
+                &opts(21, it, 2),
+                FillPath::Simd,
+                ExecPath::default(),
+            );
+        }
+        let snap = donor.export().unwrap();
+        let mut resumed = VegasPlusEngine::new(layout, beta, Some(&snap)).unwrap();
+        let (rd, _) = donor.vsample(
+            &*f,
+            &bins,
+            &opts(21, 2, 2),
+            FillPath::Simd,
+            ExecPath::default(),
+        );
+        let (rr, _) = resumed.vsample(
+            &*f,
+            &bins,
+            &opts(21, 2, 4),
+            FillPath::Simd,
+            ExecPath::default(),
+        );
+        assert_eq!(rd.integral.to_bits(), rr.integral.to_bits());
+        assert_eq!(rd.variance.to_bits(), rr.variance.to_bits());
     }
 
     #[test]

@@ -1,34 +1,34 @@
 //! Task-subrange entry points — the engine surface the shard subsystem
 //! ([`crate::shard`]) is built on.
 //!
-//! The full-pass engines ([`crate::engine::NativeEngine::vsample`],
-//! [`super::stratified::vsample_stratified`], and the streaming twins)
-//! all share one reduction contract: the cube range is partitioned
-//! into the fixed task spans of [`super::reduction_task_span`], every
-//! per-task accumulator starts fresh per task, and the coordinator
-//! folds per-task partials in global task order. That contract means a
-//! *subrange* of tasks can be computed anywhere — another thread,
-//! another worker, another process — and as long as the partials come
-//! back and are folded in the same global task order, the result is
-//! bitwise identical to the single-worker pass.
+//! Every [`super::Engine`] shares one reduction contract: the cube
+//! range is partitioned into the fixed task spans of
+//! [`super::reduction_task_span`], every per-task accumulator starts
+//! fresh per task, and the coordinator folds per-task partials in
+//! global task order. That contract means a *subrange* of tasks can be
+//! computed anywhere — another thread, another worker, another process
+//! — and as long as the partials come back and are folded in the same
+//! global task order, the result is bitwise identical to the
+//! single-worker pass.
 //!
 //! This module exposes exactly that: [`vsample_tasks`] /
 //! [`vsample_stratified_tasks`] compute the partials of tasks
-//! `[task_lo, task_hi)` (each task runs the *identical* per-task body
-//! the full pass runs), and [`merge_task_partials`] reproduces the full
-//! pass's fold over any complete, task-ordered collection of partials.
-//! Philox counters are a pure function of the cube index (uniform:
-//! `cube * p + k`; stratified: `offsets[cube] + k`), so disjoint task
-//! spans draw disjoint counter sub-ranges by construction — no counter
-//! is ever drawn twice across shards.
+//! `[task_lo, task_hi)` (each runs through the one shared walk,
+//! [`super::walk`] — the identical per-task body the full pass runs),
+//! and [`merge_task_partials`] reproduces the full pass's fold over
+//! any complete, task-ordered collection of partials. Philox counters
+//! are a pure function of the cube index (uniform: `cube * p + k`;
+//! stratified: `offsets[cube] + k`), so disjoint task spans draw
+//! disjoint counter sub-ranges by construction — no counter is ever
+//! drawn twice across shards.
 
 use super::simd::FillPath;
-use super::{reduction_task_span, reduction_tasks, sample_cube_range, VSampleOpts, MAX_DIM};
+use super::walk::{self, ExecPath, StratSched, UniformSched};
+use super::VSampleOpts;
 use crate::estimator::IterationResult;
 use crate::grid::Bins;
 use crate::integrands::Integrand;
 use crate::strat::Layout;
-use crate::util::threadpool::parallel_chunks;
 
 /// One reduction task's partial, in transportable form: everything the
 /// coordinator needs to reproduce the single-worker fold — and nothing
@@ -54,28 +54,14 @@ pub struct TaskPartial {
     pub d_new: Vec<f64>,
 }
 
-fn check_task_range(layout: &Layout, bins: &Bins, task_lo: usize, task_hi: usize) -> usize {
-    assert!(layout.d <= MAX_DIM, "d > MAX_DIM");
-    if let Err(e) = layout.validate() {
-        panic!("invalid layout: {e}");
-    }
-    assert_eq!(bins.d(), layout.d);
-    assert_eq!(bins.nb(), layout.nb);
-    let ntasks = reduction_tasks(layout.m);
-    assert!(
-        task_lo <= task_hi && task_hi <= ntasks,
-        "task range [{task_lo}, {task_hi}) outside 0..{ntasks}"
-    );
-    ntasks
-}
-
 /// Uniform-allocation partials of reduction tasks `[task_lo, task_hi)`.
 ///
 /// Each task runs the identical per-task body the full pass runs
-/// (fill → `eval_batch` → ordered per-cube reduction), so for any
-/// partition of `0..reduction_tasks(m)` into subranges, concatenating
-/// the returned vectors reproduces the full pass's partials bitwise.
-/// Internal parallelism (`opts.threads`) never changes the numbers.
+/// (fill → `eval_batch` → ordered per-cube reduction, through the one
+/// shared walk), so for any partition of `0..reduction_tasks(m)` into
+/// subranges, concatenating the returned vectors reproduces the full
+/// pass's partials bitwise. Internal parallelism (`opts.threads`)
+/// never changes the numbers.
 pub fn vsample_tasks(
     f: &dyn Integrand,
     layout: &Layout,
@@ -85,27 +71,17 @@ pub fn vsample_tasks(
     task_lo: usize,
     task_hi: usize,
 ) -> Vec<TaskPartial> {
-    let ntasks = check_task_range(layout, bins, task_lo, task_hi);
-    let span = task_hi - task_lo;
-    let nested: Vec<Vec<TaskPartial>> = parallel_chunks(span, opts.threads, |u0, u1| {
-        (u0..u1)
-            .map(|u| {
-                let t = task_lo + u;
-                let (cube_lo, cube_hi) = reduction_task_span(layout.m, ntasks, t);
-                let p = sample_cube_range(f, layout, bins, opts, cube_lo, cube_hi, fill);
-                TaskPartial {
-                    task: t,
-                    cube_lo,
-                    cube_hi,
-                    integral: p.integral,
-                    variance: p.variance,
-                    contrib: p.contrib,
-                    d_new: Vec::new(),
-                }
-            })
-            .collect()
-    });
-    nested.into_iter().flatten().collect()
+    walk::run_tasks(
+        f,
+        layout,
+        bins,
+        &UniformSched { p: layout.p },
+        opts,
+        fill,
+        ExecPath::default(),
+        task_lo,
+        task_hi,
+    )
 }
 
 /// Stratified (VEGAS+) partials of reduction tasks `[task_lo, task_hi)`
@@ -129,31 +105,19 @@ pub fn vsample_stratified_tasks(
     task_lo: usize,
     task_hi: usize,
 ) -> Vec<TaskPartial> {
-    let ntasks = check_task_range(layout, bins, task_lo, task_hi);
     assert_eq!(counts.len(), layout.m, "allocation cube count != layout");
     assert_eq!(offsets.len(), layout.m, "allocation offsets != layout");
-    let span = task_hi - task_lo;
-    let nested: Vec<Vec<TaskPartial>> = parallel_chunks(span, opts.threads, |u0, u1| {
-        (u0..u1)
-            .map(|u| {
-                let t = task_lo + u;
-                let (cube_lo, cube_hi) = reduction_task_span(layout.m, ntasks, t);
-                let p = super::stratified::sample_task_stratified(
-                    f, layout, bins, counts, offsets, opts, fill, cube_lo, cube_hi,
-                );
-                TaskPartial {
-                    task: t,
-                    cube_lo,
-                    cube_hi,
-                    integral: p.integral,
-                    variance: p.variance,
-                    contrib: p.contrib,
-                    d_new: p.d_new,
-                }
-            })
-            .collect()
-    });
-    nested.into_iter().flatten().collect()
+    walk::run_tasks(
+        f,
+        layout,
+        bins,
+        &StratSched { counts, offsets },
+        opts,
+        fill,
+        ExecPath::default(),
+        task_lo,
+        task_hi,
+    )
 }
 
 /// Fold a complete, task-ordered collection of partials exactly the way
@@ -194,7 +158,7 @@ pub fn merge_task_partials(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::engine::NativeEngine;
+    use crate::engine::{reduction_tasks, NativeEngine};
     use crate::integrands::by_name;
     use crate::strat::Allocation;
 

@@ -1,0 +1,658 @@
+//! The single fill→`eval_batch`→reduce tile walk every engine runs —
+//! THE one copy of the tile loop, the Philox counter bookkeeping, and
+//! the fixed reduction-task partition.
+//!
+//! Every sampling engine ([`super::UniformEngine`],
+//! [`super::stratified::VegasPlusEngine`], and the task-subrange entry
+//! points in [`super::tasks`] the shard workers call) funnels through
+//! [`run_tasks`]: the task range is split across workers with
+//! per-worker scratch, and each reduction task runs [`sample_task`] —
+//! a fused walk over cache-resident tiles. The only thing an engine
+//! contributes is a [`CubeSched`]: how many samples cube `k` draws and
+//! where its 64-bit Philox counter range starts (uniform: `k * p`;
+//! stratified: `offsets[k]`).
+//!
+//! ## Why one walk serves both schedules bitwise
+//!
+//! The historical code carried four copies of this loop (uniform
+//! block, uniform streaming, stratified block, stratified streaming).
+//! They were bitwise interchangeable by construction, which is exactly
+//! why one copy suffices:
+//!
+//! * **Same partition, same fold.** The cube range is split into the
+//!   engine's fixed [`super::REDUCTION_TASKS`] spans and per-task
+//!   partials are folded in task order, so the cross-task reduction
+//!   tree is a pure function of the layout — never of the thread
+//!   count, the tile size, or the shard count.
+//! * **Same counters, segmentation immaterial.** Tile boundaries cut
+//!   cubes at arbitrary offsets, so the SIMD fill sees different lane
+//!   groups than a whole-block fill did — but per the SIMD determinism
+//!   contract ([`super::simd`]) every point's bits depend only on its
+//!   own 64-bit Philox counter, never on its lane neighbours. The
+//!   walk always draws counter `sched.counter_base(cube) + k` for
+//!   sample `k` of `cube`, whatever the tiling.
+//! * **Same accumulation orders.** Within a cube, `s1`/`s2` and the
+//!   v² histogram accumulate in sample order; the open cube's partial
+//!   sums are *carried across tile boundaries*, so each cube's sum is
+//!   the same left-to-right fold regardless of where tiles cut it.
+//!   Per task, cube means fold in cube order. Nothing is
+//!   re-associated.
+//!
+//! [`ExecPath`] is therefore purely a tile-capacity knob:
+//! `Streaming` (the default) walks [`STREAM_TILE`]-point tiles that
+//! stay L1-resident end to end; `Block` walks
+//! [`super::BLOCK_POINTS`]-point tiles (the historical whole-block
+//! batch size, kept as the reference the equivalence suite compares
+//! against). The equivalence is enforced three ways: unit tests here,
+//! the `streaming == block` property tests in
+//! `rust/tests/properties.rs` (both engines, both `Sampling` modes,
+//! static and `Box<dyn Engine>` dispatch), and the golden-value suite
+//! (`rust/tests/golden_values.rs`) that pins the numbers themselves.
+
+use super::block::{PointBlock, VegasMap, BLOCK_POINTS};
+use super::simd::FillPath;
+use super::tasks::TaskPartial;
+use super::{reduction_task_span, reduction_tasks, VSampleOpts, MAX_DIM};
+use crate::grid::Bins;
+use crate::integrands::Integrand;
+use crate::strat::Layout;
+use crate::util::threadpool::parallel_chunks;
+
+/// Which tile capacity a native V-Sample pass walks with.
+///
+/// Both paths are bitwise identical (see the [module docs](self));
+/// `Block` survives as the reference the equivalence suite and the
+/// `streaming_speedup` microbench compare against.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ExecPath {
+    /// Fused streaming tiles: fill → eval → reduce over one
+    /// [`STREAM_TILE`]-point tile at a time. The default everywhere.
+    #[default]
+    Streaming,
+    /// The historical block pipeline's batch size: tiles of
+    /// [`super::BLOCK_POINTS`] points.
+    Block,
+}
+
+/// Points per streaming tile.
+///
+/// Small enough that tile coordinates, Jacobians, values, and
+/// histogram rows all stay L1-resident even at `d = MAX_DIM`
+/// (64 × 16 × 8 B = 8 KiB of coordinates), large enough to amortize
+/// the `eval_batch` virtual call and keep SIMD lane groups full.
+pub const STREAM_TILE: usize = 64;
+
+impl ExecPath {
+    /// Tile capacity in points.
+    #[inline]
+    fn tile_points(self) -> usize {
+        match self {
+            ExecPath::Streaming => STREAM_TILE,
+            ExecPath::Block => BLOCK_POINTS,
+        }
+    }
+}
+
+/// Per-cube sampling schedule: the *only* thing that differs between
+/// the uniform m-Cubes engine and the VEGAS+ stratified engine.
+///
+/// Disjoint cube ranges draw disjoint counter sub-ranges by
+/// construction (uniform: `cube * p + k`; stratified: prefix-sum
+/// `offsets[cube] + k`), which is what makes task spans relocatable
+/// across threads, shards, and processes without re-drawing a counter.
+pub(crate) trait CubeSched {
+    /// Whether the walk records per-cube `n_k * Var_k` observations
+    /// (the VEGAS+ allocator's `d_new` stream).
+    const RECORDS_DNEW: bool;
+    /// Samples cube `cube` draws this pass.
+    fn count(&self, cube: usize) -> usize;
+    /// First 64-bit Philox counter of cube `cube`'s sample stream.
+    fn counter_base(&self, cube: usize) -> u64;
+    /// `Some(p)` when every cube draws exactly `p` samples from
+    /// consecutive counters — unlocks the whole-cube SIMD span fill.
+    fn uniform_p(&self) -> Option<usize>;
+}
+
+/// Uniform m-Cubes schedule: every cube draws `p` samples at counter
+/// base `cube * p`.
+pub(crate) struct UniformSched {
+    pub(crate) p: usize,
+}
+
+impl CubeSched for UniformSched {
+    const RECORDS_DNEW: bool = false;
+
+    #[inline]
+    fn count(&self, _cube: usize) -> usize {
+        self.p
+    }
+
+    #[inline]
+    fn counter_base(&self, cube: usize) -> u64 {
+        cube as u64 * self.p as u64
+    }
+
+    #[inline]
+    fn uniform_p(&self) -> Option<usize> {
+        Some(self.p)
+    }
+}
+
+/// VEGAS+ stratified schedule: cube `k` draws `counts[k]` samples
+/// (floored at 2 so the per-cube variance is defined) from the 64-bit
+/// prefix-sum offsets — no wrapping, even past 2^32 total calls.
+pub(crate) struct StratSched<'a> {
+    pub(crate) counts: &'a [u32],
+    pub(crate) offsets: &'a [u64],
+}
+
+impl CubeSched for StratSched<'_> {
+    const RECORDS_DNEW: bool = true;
+
+    #[inline]
+    fn count(&self, cube: usize) -> usize {
+        // lint:allow(MC001, u32 -> usize widens on every supported target; `cube` only indexes the slice, it is not the value being cast)
+        self.counts[cube].max(2) as usize
+    }
+
+    #[inline]
+    fn counter_base(&self, cube: usize) -> u64 {
+        self.offsets[cube]
+    }
+
+    #[inline]
+    fn uniform_p(&self) -> Option<usize> {
+        None
+    }
+}
+
+/// Per-worker scratch, shared across a worker's tasks — one
+/// cache-resident tile (the SIMD fill writes into it, eval reads it
+/// back while still hot).
+struct Scratch {
+    blk: PointBlock,
+    vals: Vec<f64>,
+    bidx: Vec<usize>,
+    /// Row-major `[ncubes][d]` lattice coords of a tile's run of whole
+    /// cubes — the span fill keeps lane groups full across cube
+    /// boundaries (crucial when p is 2).
+    cube_coords: Vec<usize>,
+    coords: [usize; MAX_DIM],
+}
+
+/// Advance a base-`g` odometer of lattice coords by one cube.
+#[inline]
+fn advance_odometer(coords: &mut [usize], gm1: usize) {
+    for slot in coords.iter_mut() {
+        if *slot == gm1 {
+            *slot = 0;
+        } else {
+            *slot += 1;
+            break;
+        }
+    }
+}
+
+/// Validate the walk's inputs; returns the layout's task count.
+pub(crate) fn check_task_range(
+    layout: &Layout,
+    bins: &Bins,
+    task_lo: usize,
+    task_hi: usize,
+) -> usize {
+    assert!(layout.d <= MAX_DIM, "d > MAX_DIM");
+    if let Err(e) = layout.validate() {
+        panic!("invalid layout: {e}");
+    }
+    assert_eq!(bins.d(), layout.d);
+    assert_eq!(bins.nb(), layout.nb);
+    let ntasks = reduction_tasks(layout.m);
+    assert!(
+        task_lo <= task_hi && task_hi <= ntasks,
+        "task range [{task_lo}, {task_hi}) outside 0..{ntasks}"
+    );
+    ntasks
+}
+
+/// Partials of reduction tasks `[task_lo, task_hi)` under `sched` —
+/// the one parallel task-range driver every engine runs.
+///
+/// Workers pick up contiguous runs of tasks (per-worker scratch is
+/// hoisted out of the task loop), every per-task accumulator starts
+/// fresh, and partials come back in global task order, so for any
+/// partition of `0..reduction_tasks(m)` into subranges, concatenating
+/// the returned vectors reproduces the full pass's partials bitwise.
+/// Internal parallelism (`opts.threads`) never changes the numbers.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn run_tasks<S: CubeSched + Sync>(
+    f: &dyn Integrand,
+    layout: &Layout,
+    bins: &Bins,
+    sched: &S,
+    opts: &VSampleOpts,
+    fill: FillPath,
+    exec: ExecPath,
+    task_lo: usize,
+    task_hi: usize,
+) -> Vec<TaskPartial> {
+    let ntasks = check_task_range(layout, bins, task_lo, task_hi);
+    let cap = exec.tile_points();
+    let d = layout.d;
+    let span = task_hi - task_lo;
+    let nested: Vec<Vec<TaskPartial>> = parallel_chunks(span, opts.threads, |u0, u1| {
+        let map = VegasMap::new(layout, bins, &f.bounds());
+        let mut scratch = Scratch {
+            blk: PointBlock::with_capacity(d, cap),
+            vals: vec![0.0f64; cap],
+            bidx: vec![0usize; cap * d],
+            cube_coords: vec![0usize; cap * d],
+            coords: [0usize; MAX_DIM],
+        };
+        (u0..u1)
+            .map(|u| {
+                let t = task_lo + u;
+                let (cube_lo, cube_hi) = reduction_task_span(layout.m, ntasks, t);
+                sample_task(
+                    f, layout, &map, sched, opts, fill, cap, t, cube_lo, cube_hi, &mut scratch,
+                )
+            })
+            .collect()
+    });
+    nested.into_iter().flatten().collect()
+}
+
+/// One reduction task's body: the fused fill→eval→reduce walk over
+/// cubes `[cube_lo, cube_hi)` in `cap`-point tiles.
+///
+/// The open cube's running sums are carried across tile boundaries so
+/// its accumulation order is the same left-to-right fold for every
+/// tile capacity; see the [module docs](self) for the full bitwise
+/// argument.
+#[allow(clippy::too_many_arguments)]
+fn sample_task<S: CubeSched>(
+    f: &dyn Integrand,
+    layout: &Layout,
+    map: &VegasMap,
+    sched: &S,
+    opts: &VSampleOpts,
+    fill: FillPath,
+    cap: usize,
+    task: usize,
+    cube_lo: usize,
+    cube_hi: usize,
+    s: &mut Scratch,
+) -> TaskPartial {
+    let d = layout.d;
+    let nb = layout.nb;
+    let m = layout.m as f64;
+    let gm1 = layout.g - 1;
+
+    let mut contrib = opts.adjust.then(|| vec![0.0; d * nb]);
+    let mut d_new = if S::RECORDS_DNEW {
+        Vec::with_capacity(cube_hi - cube_lo)
+    } else {
+        Vec::new()
+    };
+    let mut integral = 0.0;
+    let mut variance = 0.0;
+
+    // Decode the first cube, then advance as a base-g odometer — avoids
+    // d divisions per cube in the hot loop.
+    layout.cube_coords(cube_lo, &mut s.coords[..d]);
+    // Walk cursor: the next tile starts `off` samples into `cube`; the
+    // open cube's running sums ride across tile boundaries.
+    let mut cube = cube_lo;
+    let mut off = 0usize;
+    let mut s1 = 0.0;
+    let mut s2 = 0.0;
+
+    while cube < cube_hi {
+        // Measure the tile (counts arithmetic only).
+        let mut tile_len = 0usize;
+        {
+            let (mut mc, mut mo) = (cube, off);
+            while tile_len < cap && mc < cube_hi {
+                let n = sched.count(mc);
+                let take = (n - mo).min(cap - tile_len);
+                tile_len += take;
+                mo += take;
+                if mo == n {
+                    mo = 0;
+                    mc += 1;
+                }
+            }
+        }
+        s.blk.reset(tile_len);
+
+        // Fill phase. Per-cube segments draw counters
+        // `counter_base(cube) + k`; on the uniform schedule a run of
+        // whole cubes goes through the SIMD span fill in one call
+        // (lane groups running straight across cube boundaries — the
+        // per-point bits are identical either way).
+        {
+            let (mut fc, mut fo) = (cube, off);
+            let mut j = 0usize;
+            while j < tile_len {
+                if fo == 0 && fill == FillPath::Simd {
+                    if let Some(p) = sched.uniform_p() {
+                        let whole = (tile_len - j) / p;
+                        if whole > 0 {
+                            for c in 0..whole {
+                                s.cube_coords[c * d..(c + 1) * d]
+                                    .copy_from_slice(&s.coords[..d]);
+                                advance_odometer(&mut s.coords[..d], gm1);
+                            }
+                            map.fill_span_at(
+                                &s.cube_coords[..whole * d],
+                                whole,
+                                p,
+                                sched.counter_base(fc),
+                                opts.iteration,
+                                opts.seed,
+                                &mut s.blk,
+                                j,
+                                &mut s.bidx,
+                            );
+                            j += whole * p;
+                            fc += whole;
+                            continue;
+                        }
+                    }
+                }
+                let n = sched.count(fc);
+                let take = (n - fo).min(tile_len - j);
+                let base = sched.counter_base(fc) + fo as u64;
+                match fill {
+                    FillPath::Simd => map.fill_points(
+                        &s.coords[..d],
+                        base,
+                        take,
+                        opts.iteration,
+                        opts.seed,
+                        &mut s.blk,
+                        j,
+                        &mut s.bidx,
+                    ),
+                    FillPath::Scalar => map.fill_points_scalar(
+                        &s.coords[..d],
+                        base,
+                        take,
+                        opts.iteration,
+                        opts.seed,
+                        &mut s.blk,
+                        j,
+                        &mut s.bidx,
+                    ),
+                }
+                j += take;
+                fo += take;
+                if fo == n {
+                    fo = 0;
+                    fc += 1;
+                    advance_odometer(&mut s.coords[..d], gm1);
+                }
+            }
+        }
+
+        // Eval phase: one virtual call per tile, while the tile is
+        // still L1-hot from the fill.
+        f.eval_batch(&s.blk, &mut s.vals[..tile_len]);
+
+        // Reduce phase: sample order, finalizing each cube as its last
+        // sample streams past.
+        let mut k = 0usize;
+        while k < tile_len {
+            let n = sched.count(cube);
+            let nf = n as f64;
+            let take = (n - off).min(tile_len - k);
+            for jj in k..k + take {
+                let v = s.vals[jj] * s.blk.jac(jj);
+                s1 += v;
+                s2 += v * v;
+                if let Some(cacc) = contrib.as_mut() {
+                    let v2 = v * v;
+                    for i in 0..d {
+                        // SAFETY: bidx slots hold i*nb + b with b < nb,
+                        // so each is < d*nb == cacc.len().
+                        unsafe { *cacc.get_unchecked_mut(s.bidx[jj * d + i]) += v2 };
+                    }
+                }
+            }
+            k += take;
+            off += take;
+            if off == n {
+                let mean = s1 / nf;
+                let var = ((s2 / nf - mean * mean).max(0.0)) / (nf - 1.0);
+                integral += mean / m;
+                variance += var / (m * m);
+                if S::RECORDS_DNEW {
+                    // Variance of the cube total — Lepage's d_k
+                    // observation for the allocator.
+                    d_new.push(var * nf);
+                }
+                s1 = 0.0;
+                s2 = 0.0;
+                off = 0;
+                cube += 1;
+            }
+        }
+    }
+
+    TaskPartial {
+        task,
+        cube_lo,
+        cube_hi,
+        integral,
+        variance,
+        contrib,
+        d_new,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::{merge_task_partials, NativeEngine};
+    use crate::estimator::IterationResult;
+    use crate::integrands::by_name;
+    use crate::strat::Allocation;
+
+    fn opts(seed: u32, it: u32, threads: usize) -> VSampleOpts {
+        VSampleOpts {
+            seed,
+            iteration: it,
+            adjust: true,
+            threads,
+        }
+    }
+
+    /// Full stratified pass at an explicit tile capacity — test-local
+    /// shim over the one walk (absorbs `d_new` in task order, no
+    /// reallocation), mirroring what `VegasPlusEngine` runs.
+    fn strat_exec(
+        f: &dyn Integrand,
+        layout: &Layout,
+        bins: &Bins,
+        alloc: &mut Allocation,
+        o: &VSampleOpts,
+        fill: FillPath,
+        exec: ExecPath,
+    ) -> (IterationResult, Option<Vec<f64>>) {
+        let ntasks = reduction_tasks(layout.m);
+        let partials = run_tasks(
+            f,
+            layout,
+            bins,
+            &StratSched {
+                counts: alloc.counts(),
+                offsets: alloc.offsets(),
+            },
+            o,
+            fill,
+            exec,
+            0,
+            ntasks,
+        );
+        let out = merge_task_partials(layout.d, layout.nb, o.adjust, &partials);
+        for p in &partials {
+            alloc.absorb_span(p.cube_lo, &p.d_new);
+        }
+        out
+    }
+
+    fn assert_bitwise(
+        a: &(IterationResult, Option<Vec<f64>>),
+        b: &(IterationResult, Option<Vec<f64>>),
+        tag: &str,
+    ) {
+        assert_eq!(a.0.integral.to_bits(), b.0.integral.to_bits(), "{tag}: integral");
+        assert_eq!(a.0.variance.to_bits(), b.0.variance.to_bits(), "{tag}: variance");
+        match (&a.1, &b.1) {
+            (Some(ca), Some(cb)) => {
+                for (i, (x, y)) in ca.iter().zip(cb).enumerate() {
+                    assert_eq!(x.to_bits(), y.to_bits(), "{tag}: contrib[{i}]");
+                }
+            }
+            (None, None) => {}
+            _ => panic!("{tag}: histogram presence differs"),
+        }
+    }
+
+    #[test]
+    fn streaming_matches_block_uniform_bitwise() {
+        // p = 5 here (d=6 @4096 -> m=729, p=5), so tiles split cubes:
+        // head / whole-span / tail segments and carried sums all run.
+        for (name, d, calls) in [("f3", 4usize, 4096usize), ("f1", 6, 4096), ("f4", 5, 4096)] {
+            let f = by_name(name, d).unwrap();
+            let layout = Layout::compute(d, calls, 16, 2).unwrap();
+            let bins = Bins::uniform(d, 16);
+            let block = NativeEngine.vsample_exec(
+                &*f,
+                &layout,
+                &bins,
+                &opts(42, 1, 2),
+                FillPath::Simd,
+                ExecPath::Block,
+            );
+            for threads in [1usize, 3, 8] {
+                let stream = NativeEngine.vsample_exec(
+                    &*f,
+                    &layout,
+                    &bins,
+                    &opts(42, 1, threads),
+                    FillPath::Simd,
+                    ExecPath::Streaming,
+                );
+                assert_bitwise(&block, &stream, &format!("{name} d={d} threads={threads}"));
+            }
+            // Scalar fill path streams identically too.
+            let stream_scalar = NativeEngine.vsample_exec(
+                &*f,
+                &layout,
+                &bins,
+                &opts(42, 1, 2),
+                FillPath::Scalar,
+                ExecPath::Streaming,
+            );
+            assert_bitwise(&block, &stream_scalar, &format!("{name} d={d} scalar"));
+        }
+    }
+
+    #[test]
+    fn streaming_reproduces_python_anchor() {
+        // Same pinned numbers as the block engine's
+        // `matches_python_first_iteration_estimate`.
+        let f = by_name("f4", 5).unwrap();
+        let layout = Layout::compute(5, 4096, 20, 4).unwrap();
+        let bins = Bins::uniform(5, 20);
+        let (r, _) = NativeEngine.vsample(&*f, &layout, &bins, &opts(42, 0, 2));
+        assert!(
+            ((r.integral - 2.7858176280788316e-05) / 2.7858176280788316e-05).abs() < 1e-12,
+            "I = {}",
+            r.integral
+        );
+        assert!(
+            ((r.variance - 7.757123669326781e-10) / 7.757123669326781e-10).abs() < 1e-10,
+            "Var = {}",
+            r.variance
+        );
+    }
+
+    #[test]
+    fn streaming_matches_block_stratified_bitwise() {
+        let f = by_name("f3", 4).unwrap();
+        let layout = Layout::compute(4, 4096, 16, 1).unwrap();
+        let bins = Bins::uniform(4, 16);
+        // Skewed allocation: wildly different per-cube counts, so tile
+        // segmentation differs completely between the two capacities.
+        let mut seed_alloc = Allocation::uniform(&layout);
+        seed_alloc.absorb(0, 100.0);
+        for cube in 1..seed_alloc.m() {
+            seed_alloc.absorb(cube, 0.01 * (cube % 7) as f64);
+        }
+        seed_alloc.reallocate(layout.calls(), crate::strat::DEFAULT_BETA);
+        let mut a_block = seed_alloc.clone();
+        let mut a_stream = seed_alloc.clone();
+        let block = strat_exec(
+            &*f,
+            &layout,
+            &bins,
+            &mut a_block,
+            &opts(9, 3, 2),
+            FillPath::Simd,
+            ExecPath::Block,
+        );
+        let stream = strat_exec(
+            &*f,
+            &layout,
+            &bins,
+            &mut a_stream,
+            &opts(9, 3, 5),
+            FillPath::Simd,
+            ExecPath::Streaming,
+        );
+        assert_bitwise(&block, &stream, "stratified f3 d=4");
+        // The damped accumulator (checkpoint state) must match too.
+        for (a, b) in a_block.damped().iter().zip(a_stream.damped()) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn streaming_stratified_uniform_alloc_matches_uniform_stream() {
+        // beta = 0 / initial allocation: offsets collapse to cube * p
+        // and the stratified walk equals the uniform walk bitwise.
+        let f = by_name("f5", 5).unwrap();
+        let layout = Layout::compute(5, 4096, 20, 4).unwrap();
+        let bins = Bins::uniform(5, 20);
+        let uni = NativeEngine.vsample(&*f, &layout, &bins, &opts(42, 0, 2));
+        let mut alloc = Allocation::uniform(&layout);
+        let strat = strat_exec(
+            &*f,
+            &layout,
+            &bins,
+            &mut alloc,
+            &opts(42, 0, 3),
+            FillPath::Simd,
+            ExecPath::Streaming,
+        );
+        assert_bitwise(&uni, &strat, "uniform-alloc f5 d=5");
+    }
+
+    #[test]
+    fn no_adjust_skips_histogram() {
+        let f = by_name("f5", 4).unwrap();
+        let layout = Layout::compute(4, 2048, 10, 2).unwrap();
+        let bins = Bins::uniform(4, 10);
+        let (_, c) = NativeEngine.vsample(
+            &*f,
+            &layout,
+            &bins,
+            &VSampleOpts {
+                adjust: false,
+                ..opts(1, 0, 2)
+            },
+        );
+        assert!(c.is_none());
+    }
+}

@@ -144,16 +144,17 @@
 //!
 //! The seed's free functions — `coordinator::integrate_native`,
 //! `integrate_native_adaptive`, `run_driver`, `run_driver_traced` —
-//! remain as `#[deprecated]` shims over the same session core the
-//! facade uses, and the flat `max_iterations`/`adjust_iterations`/
-//! `skip_iterations` builder knobs are `#[deprecated]` shims that
-//! rebuild a classic [`api::RunPlan`]. The free functions are gated
-//! behind the on-by-default `legacy-api` cargo feature; building with
-//! `--no-default-features` drops them entirely (the removal dry run),
-//! and they disappear for good once downstream callers migrate (see
-//! the migration table in [`api`] and `docs/architecture.md`).
-//! `coordinator::IntegrationService` survives as a deprecated alias
-//! of the [`coordinator::Scheduler`].
+//! and the `coordinator::IntegrationService` alias have been
+//! **removed** (they last shipped behind the since-removed
+//! `legacy-api` cargo feature); the migration table in [`api`] maps
+//! each onto its builder/\[`coordinator::Scheduler`\] equivalent. The
+//! flat `max_iterations`/`adjust_iterations`/`skip_iterations`
+//! builder knobs remain as `#[deprecated]` shims that rebuild a
+//! classic [`api::RunPlan`]. Native execution now goes through the
+//! [`engine::Engine`] trait — [`engine::UniformEngine`],
+//! [`engine::VegasPlusEngine`], and [`baselines::GvegasSimEngine`]
+//! are the three impls — adapted to the driver by one generic
+//! [`coordinator::EngineBackend`] (see `docs/architecture.md`).
 
 pub mod api;
 pub mod baselines;

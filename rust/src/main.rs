@@ -525,7 +525,7 @@ fn cmd_selftest(args: &[String]) -> i32 {
             runtime.device_count()
         );
         let name = p.get("integrand").unwrap();
-        let backend =
+        let mut backend =
             PjrtBackend::load(&runtime, &registry, name, 0).map_err(|e| e.to_string())?;
         let meta = backend.meta().clone();
         let cfg = JobConfig::default()
@@ -535,7 +535,7 @@ fn cmd_selftest(args: &[String]) -> i32 {
             .with_plan(RunPlan::classic(5, 3, 0))
             .with_tolerance(1e-12) // run all 5 iterations
             .with_seed(2024);
-        let pjrt_out = drive(&backend, &cfg, None, None)
+        let pjrt_out = drive(&mut backend, &cfg, None, None)
             .map_err(|e| e.to_string())?
             .output;
         let native_out = Integrator::from_registry(&meta.integrand, meta.dim)

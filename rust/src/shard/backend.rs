@@ -11,6 +11,13 @@
 //!   `mcubes shard-worker` processes can join; missing or corrupt
 //!   reports take the coordinator's straggler path.
 //!
+//! The backend holds a `Box<dyn Engine>` — the same
+//! [`crate::engine::Engine`] impls the single-worker
+//! [`crate::coordinator::EngineBackend`] wraps — and routes everything
+//! through the trait: shard plans come from [`Engine::allocation`],
+//! spans run through [`Engine::sample_tasks`] (the shard entry point),
+//! and the merged partials fold back through [`Engine::update`].
+//!
 //! Determinism: every shard draws its own Philox counter sub-range
 //! (disjoint by construction — see [`super::ShardPlan`]), per-task
 //! partials are bitwise independent of who computed them, and the
@@ -22,51 +29,46 @@
 use std::time::Instant;
 
 use super::coordinator::{ReportShape, SpoolTransport};
-use super::plan::{ShardPlan, ShardSpan};
+use super::plan::ShardPlan;
 use super::report::ShardTask;
-use super::worker::run_span;
 use super::ShardStats;
-use crate::api::{GridState, StratSnapshot};
+use crate::api::GridState;
+use crate::api::StratSnapshot;
 use crate::coordinator::VSampleBackend;
-use crate::engine::{merge_task_partials, TaskPartial, VSampleOpts};
+use crate::engine::{
+    merge_task_partials, Engine, ExecPath, FillPath, TaskPartial, UniformEngine, VSampleOpts,
+    VegasPlusEngine,
+};
 use crate::error::{Error, Result};
 use crate::estimator::IterationResult;
 use crate::grid::Bins;
-use crate::integrands::IntegrandRef;
-use crate::strat::{AllocStats, Allocation, Bounds, Layout, Sampling};
+use crate::integrands::{Integrand, IntegrandRef};
+use crate::strat::{AllocStats, Bounds, Layout, Sampling};
 use crate::util::threadpool::parallel_chunks;
-use std::cell::RefCell;
 
-/// Mutable per-run state: the live VEGAS+ allocation (when adaptive),
-/// the stats snapshot of the iteration that just ran, and the
-/// cumulative shard accounting.
-struct ShardCell {
-    alloc: Option<Allocation>,
-    last: Option<AllocStats>,
-    stats: ShardStats,
-}
-
-/// Sharded twin of `NativeBackend`/`StratifiedBackend`: same
-/// [`VSampleBackend`] contract, N-worker execution.
+/// Sharded twin of the single-worker [`crate::coordinator::EngineBackend`]:
+/// same [`VSampleBackend`] contract, N-worker execution over any
+/// [`Engine`].
 pub struct ShardedBackend {
     integrand: IntegrandRef,
     layout: Layout,
     shards: usize,
     threads: usize,
-    /// `Some(beta)` for VEGAS+ adaptive stratification.
-    beta: Option<f64>,
-    /// Per-iteration call budget (`layout.calls()`, matching the
-    /// single-worker backends so `calls_used` accounting is
-    /// identical).
-    budget: usize,
     spool: Option<SpoolTransport>,
-    cell: RefCell<ShardCell>,
+    /// The engine owns the layout/allocation state; sharding is purely
+    /// an execution strategy layered over [`Engine::sample_tasks`].
+    engine: Box<dyn Engine>,
+    /// Stats snapshot of the allocation the most recent iteration
+    /// sampled with (taken before the engine's update re-apportions).
+    last: Option<AllocStats>,
+    /// Cumulative shard-execution accounting.
+    stats: ShardStats,
 }
 
 impl ShardedBackend {
     /// Build a sharded backend for `shards` workers. For
     /// [`Sampling::VegasPlus`], `resume` restores a matching-layout
-    /// allocation exactly as `StratifiedBackend::new` does.
+    /// allocation exactly as [`VegasPlusEngine::new`] does.
     pub fn new(
         integrand: IntegrandRef,
         layout: Layout,
@@ -75,34 +77,19 @@ impl ShardedBackend {
         sampling: Sampling,
         resume: Option<&StratSnapshot>,
     ) -> Result<ShardedBackend> {
-        let beta = match sampling {
-            Sampling::Uniform => None,
-            Sampling::VegasPlus { beta } => Some(beta),
-        };
-        let alloc = match beta {
-            Some(b) => Some(match resume {
-                Some(s) if s.counts.len() == layout.m => {
-                    let mut a = Allocation::from_parts(s.counts.clone(), s.damped.clone())?;
-                    a.reallocate(layout.calls(), b);
-                    a
-                }
-                _ => Allocation::uniform(&layout),
-            }),
-            None => None,
+        let engine: Box<dyn Engine> = match sampling {
+            Sampling::Uniform => Box::new(UniformEngine::new(layout)),
+            Sampling::VegasPlus { beta } => Box::new(VegasPlusEngine::new(layout, beta, resume)?),
         };
         Ok(ShardedBackend {
             integrand,
             layout,
             shards,
             threads,
-            beta,
-            budget: layout.calls(),
             spool: None,
-            cell: RefCell::new(ShardCell {
-                alloc,
-                last: None,
-                stats: ShardStats::default(),
-            }),
+            engine,
+            last: None,
+            stats: ShardStats::default(),
         })
     }
 
@@ -115,103 +102,106 @@ impl ShardedBackend {
     }
 
     /// The shard plan the next iteration will scatter (pure function
-    /// of the layout and the live allocation).
+    /// of the layout and the engine's live allocation).
     pub fn plan(&self) -> ShardPlan {
-        let cell = self.cell.borrow();
-        match &cell.alloc {
-            Some(a) => ShardPlan::stratified(&self.layout, a.counts(), a.offsets())
-                .shards(self.shards),
+        match self.engine.allocation() {
+            Some((counts, offsets)) => {
+                ShardPlan::stratified(&self.layout, counts, offsets).shards(self.shards)
+            }
             None => ShardPlan::uniform(&self.layout, self.shards),
         }
     }
+}
 
-    /// In-process fan-out: one scoped worker per span, results in
-    /// span (= global task) order.
-    fn run_in_process(
-        &self,
-        plan: &ShardPlan,
-        bins: &Bins,
-        alloc: Option<&Allocation>,
-        opts: &VSampleOpts,
-    ) -> Vec<TaskPartial> {
-        let spans = plan.spans();
-        // Bind the Sync captures explicitly: the closure must not
-        // capture `self` (the RefCell makes it !Sync).
-        let f: &dyn crate::integrands::Integrand = &*self.integrand;
-        let layout = &self.layout;
-        let per_shard: Vec<Vec<Vec<TaskPartial>>> =
-            parallel_chunks(spans.len(), spans.len(), |s0, s1| {
-                (s0..s1)
-                    .map(|s| {
-                        run_span(
-                            f,
-                            layout,
-                            bins,
-                            alloc,
-                            opts,
-                            spans[s].task_lo,
-                            spans[s].task_hi,
-                        )
-                    })
-                    .collect()
-            });
-        per_shard.into_iter().flatten().flatten().collect()
-    }
+/// In-process fan-out: one scoped worker per span, results in span
+/// (= global task) order. Every span runs through the engine's own
+/// [`Engine::sample_tasks`] — the same code path as the single-worker
+/// pass, so the bytes cannot differ.
+fn run_in_process(
+    engine: &dyn Engine,
+    f: &dyn Integrand,
+    plan: &ShardPlan,
+    bins: &Bins,
+    opts: &VSampleOpts,
+) -> Vec<TaskPartial> {
+    let spans = plan.spans();
+    let per_shard: Vec<Vec<Vec<TaskPartial>>> =
+        parallel_chunks(spans.len(), spans.len(), |s0, s1| {
+            (s0..s1)
+                .map(|s| {
+                    engine.sample_tasks(
+                        f,
+                        bins,
+                        opts,
+                        FillPath::Simd,
+                        ExecPath::default(),
+                        spans[s].task_lo,
+                        spans[s].task_hi,
+                    )
+                })
+                .collect()
+        });
+    per_shard.into_iter().flatten().flatten().collect()
+}
 
-    /// Spool fan-out: scatter sealed tasks, gather sealed reports
-    /// (straggler policy inside), partials in global task order.
-    fn run_spooled(
-        &self,
-        spool: &SpoolTransport,
-        plan: &ShardPlan,
-        bins: &Bins,
-        alloc: Option<&Allocation>,
-        opts: &VSampleOpts,
-        stats: &mut ShardStats,
-    ) -> Result<Vec<TaskPartial>> {
-        let grid = match alloc {
-            Some(a) => GridState::from_bins(bins.clone()).with_strat(StratSnapshot {
-                beta: self.beta.unwrap_or(0.0),
-                counts: a.counts().to_vec(),
-                damped: a.damped().to_vec(),
-            }),
-            None => GridState::from_bins(bins.clone()),
-        };
-        let tasks: Vec<ShardTask> = plan
-            .spans()
-            .iter()
-            .map(|sp| ShardTask {
-                integrand: self.integrand.name().to_string(),
-                layout: self.layout,
-                grid: grid.clone(),
-                seed: opts.seed,
-                iteration: opts.iteration,
-                adjust: opts.adjust,
-                shard: sp.shard,
-                task_lo: sp.task_lo,
-                task_hi: sp.task_hi,
-            })
-            .collect();
-        spool.scatter(&tasks)?;
-        let shape = ReportShape {
-            contrib_len: if opts.adjust {
-                Some(self.layout.d * self.layout.nb)
-            } else {
-                None
-            },
-            stratified: alloc.is_some(),
-        };
-        // Bind the Sync captures explicitly: the closure must not
-        // capture `self` (the RefCell makes it !Sync).
-        let f: &dyn crate::integrands::Integrand = &*self.integrand;
-        let layout = &self.layout;
-        let fallback =
-            |sp: &ShardSpan| run_span(f, layout, bins, alloc, opts, sp.task_lo, sp.task_hi);
-        let partials =
-            spool.gather(plan, &tasks, &self.layout, opts.iteration, &shape, &fallback, stats)?;
-        spool.cleanup(plan, opts.iteration);
-        Ok(partials)
-    }
+/// Spool fan-out: scatter sealed tasks, gather sealed reports
+/// (straggler policy inside), partials in global task order. The
+/// straggler fallback recomputes a span locally through the same
+/// [`Engine::sample_tasks`] entry point external workers use.
+#[allow(clippy::too_many_arguments)]
+fn run_spooled(
+    spool: &SpoolTransport,
+    engine: &dyn Engine,
+    integrand: &IntegrandRef,
+    layout: &Layout,
+    plan: &ShardPlan,
+    bins: &Bins,
+    opts: &VSampleOpts,
+    stats: &mut ShardStats,
+) -> Result<Vec<TaskPartial>> {
+    let grid = match engine.export() {
+        Some(snap) => GridState::from_bins(bins.clone()).with_strat(snap),
+        None => GridState::from_bins(bins.clone()),
+    };
+    let tasks: Vec<ShardTask> = plan
+        .spans()
+        .iter()
+        .map(|sp| ShardTask {
+            integrand: integrand.name().to_string(),
+            layout: *layout,
+            grid: grid.clone(),
+            seed: opts.seed,
+            iteration: opts.iteration,
+            adjust: opts.adjust,
+            shard: sp.shard,
+            task_lo: sp.task_lo,
+            task_hi: sp.task_hi,
+        })
+        .collect();
+    spool.scatter(&tasks)?;
+    let shape = ReportShape {
+        contrib_len: if opts.adjust {
+            Some(layout.d * layout.nb)
+        } else {
+            None
+        },
+        stratified: engine.allocation().is_some(),
+    };
+    let f: &dyn Integrand = &**integrand;
+    let fallback = |sp: &super::plan::ShardSpan| {
+        engine.sample_tasks(
+            f,
+            bins,
+            opts,
+            FillPath::Simd,
+            ExecPath::default(),
+            sp.task_lo,
+            sp.task_hi,
+        )
+    };
+    let partials = spool.gather(plan, &tasks, layout, opts.iteration, &shape, &fallback, stats)?;
+    spool.cleanup(plan, opts.iteration);
+    Ok(partials)
 }
 
 impl VSampleBackend for ShardedBackend {
@@ -224,7 +214,7 @@ impl VSampleBackend for ShardedBackend {
     }
 
     fn name(&self) -> &'static str {
-        if self.beta.is_some() {
+        if self.engine.allocation().is_some() {
             "native-sharded-vegas+"
         } else {
             "native-sharded"
@@ -232,23 +222,17 @@ impl VSampleBackend for ShardedBackend {
     }
 
     fn run(
-        &self,
+        &mut self,
         bins: &Bins,
         seed: u32,
         iteration: u32,
         adjust: bool,
     ) -> Result<(IterationResult, Option<Vec<f64>>)> {
-        let mut cell = self.cell.borrow_mut();
-        let ShardCell { alloc, last, stats } = &mut *cell;
-        if let Some(a) = alloc.as_ref() {
-            *last = Some(a.stats());
-        }
-        let plan = match alloc.as_ref() {
-            Some(a) => {
-                ShardPlan::stratified(&self.layout, a.counts(), a.offsets()).shards(self.shards)
-            }
-            None => ShardPlan::uniform(&self.layout, self.shards),
-        };
+        // Snapshot before the pass: observers see the allocation this
+        // iteration sampled with, not the re-apportioned one
+        // `Engine::update` leaves behind.
+        self.last = self.engine.alloc_stats();
+        let plan = self.plan();
         // Give each in-process span worker an equal slice of the
         // thread budget (bitwise-neutral either way).
         let opts = VSampleOpts {
@@ -257,11 +241,21 @@ impl VSampleBackend for ShardedBackend {
             adjust,
             threads: (self.threads / plan.nshards()).max(1),
         };
-        let partials = match &self.spool {
-            Some(spool) => {
-                self.run_spooled(spool, &plan, bins, alloc.as_ref(), &opts, stats)?
-            }
-            None => self.run_in_process(&plan, bins, alloc.as_ref(), &opts),
+        // Disjoint field borrows: the span workers read the engine,
+        // the spool gatherer accumulates into `stats`.
+        let ShardedBackend {
+            integrand,
+            layout,
+            spool,
+            engine,
+            stats,
+            ..
+        } = self;
+        let partials = match spool {
+            Some(spool) => run_spooled(
+                spool, &**engine, integrand, layout, &plan, bins, &opts, stats,
+            )?,
+            None => run_in_process(&**engine, &**integrand, &plan, bins, &opts),
         };
         // The merge refuses to fold anything but the complete,
         // in-order task partition (shard bugs must not become silent
@@ -276,47 +270,32 @@ impl VSampleBackend for ShardedBackend {
             )));
         }
         let merge_start = Instant::now();
-        let out = merge_task_partials(self.layout.d, self.layout.nb, adjust, &partials);
-        if let Some(a) = alloc.as_mut() {
-            // Absorb in global task order — the same per-cube absorb
-            // stream as the single-worker stratified pass.
-            for p in &partials {
-                a.absorb_span(p.cube_lo, &p.d_new);
-            }
-            if let Some(b) = self.beta {
-                a.reallocate(self.budget, b);
-            }
-        }
+        let out = merge_task_partials(layout.d, layout.nb, adjust, &partials);
+        // Same per-cube absorb stream (global task order) and
+        // reallocation as the single-worker engine pass.
+        engine.update(&partials);
         stats.merge_ms += merge_start.elapsed().as_secs_f64() * 1e3;
         stats.shards = stats.shards.max(plan.nshards());
         Ok(out)
     }
 
     fn alloc_stats(&self) -> Option<AllocStats> {
-        self.cell.borrow().last
+        self.last
     }
 
     fn strat_export(&self) -> Option<StratSnapshot> {
-        let cell = self.cell.borrow();
-        match (&cell.alloc, self.beta) {
-            (Some(a), Some(beta)) => Some(StratSnapshot {
-                beta,
-                counts: a.counts().to_vec(),
-                damped: a.damped().to_vec(),
-            }),
-            _ => None,
-        }
+        self.engine.export()
     }
 
     fn shard_stats(&self) -> Option<ShardStats> {
-        Some(self.cell.borrow().stats)
+        Some(self.stats)
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::coordinator::{NativeBackend, StratifiedBackend};
+    use crate::coordinator::EngineBackend;
     use crate::integrands::by_name;
     use crate::strat::DEFAULT_BETA;
 
@@ -336,12 +315,12 @@ mod tests {
     }
 
     #[test]
-    fn sharded_uniform_matches_native_backend_bitwise() {
+    fn sharded_uniform_matches_engine_backend_bitwise() {
         let layout = Layout::compute(4, 4096, 16, 1).unwrap();
         let f = by_name("f4", 4).unwrap();
         let bins = Bins::uniform(4, 16);
-        let reference = NativeBackend::new(f.clone(), layout, 3);
-        let sharded =
+        let mut reference = EngineBackend::uniform(f.clone(), layout, 3);
+        let mut sharded =
             ShardedBackend::new(f, layout, 8, 4, Sampling::Uniform, None).unwrap();
         for it in 0..3u32 {
             let want = reference.run(&bins, 17, it, true).unwrap();
@@ -352,16 +331,17 @@ mod tests {
         assert_eq!(stats.shards, 8);
         assert_eq!(stats.straggler_retries, 0);
         assert!(sharded.strat_export().is_none());
+        assert_eq!(sharded.name(), "native-sharded");
     }
 
     #[test]
-    fn sharded_vegas_plus_matches_stratified_backend_bitwise() {
+    fn sharded_vegas_plus_matches_engine_backend_bitwise() {
         let layout = Layout::compute(5, 4096, 20, 4).unwrap();
         let f = by_name("f5", 5).unwrap();
         let bins = Bins::uniform(5, 20);
-        let reference =
-            StratifiedBackend::new(f.clone(), layout, 2, DEFAULT_BETA, None).unwrap();
-        let sharded = ShardedBackend::new(
+        let mut reference =
+            EngineBackend::vegas_plus(f.clone(), layout, 2, DEFAULT_BETA, None).unwrap();
+        let mut sharded = ShardedBackend::new(
             f,
             layout,
             8,
@@ -389,6 +369,7 @@ mod tests {
             sharded.alloc_stats().map(|s| s.total),
             reference.alloc_stats().map(|s| s.total)
         );
+        assert_eq!(sharded.name(), "native-sharded-vegas+");
     }
 
     #[test]
@@ -396,10 +377,11 @@ mod tests {
         let layout = Layout::compute(4, 2048, 10, 2).unwrap();
         let f = by_name("f2", 4).unwrap();
         let bins = Bins::uniform(4, 10);
-        let one = ShardedBackend::new(f.clone(), layout, 1, 1, Sampling::Uniform, None).unwrap();
+        let mut one =
+            ShardedBackend::new(f.clone(), layout, 1, 1, Sampling::Uniform, None).unwrap();
         let want = one.run(&bins, 4, 0, false).unwrap();
         for shards in [2, 3, 5, 64, 1000] {
-            let b =
+            let mut b =
                 ShardedBackend::new(f.clone(), layout, shards, 2, Sampling::Uniform, None)
                     .unwrap();
             let got = b.run(&bins, 4, 0, false).unwrap();
@@ -408,12 +390,12 @@ mod tests {
     }
 
     #[test]
-    fn resume_restores_the_allocation_like_the_stratified_backend() {
+    fn resume_restores_the_allocation_like_the_engine_backend() {
         let layout = Layout::compute(3, 2048, 12, 1).unwrap();
         let f = by_name("f3", 3).unwrap();
         let bins = Bins::uniform(3, 12);
         // Run two iterations, export, resume both backend kinds.
-        let donor = ShardedBackend::new(
+        let mut donor = ShardedBackend::new(
             f.clone(),
             layout,
             4,
@@ -426,9 +408,9 @@ mod tests {
             donor.run(&bins, 31, it, true).unwrap();
         }
         let snap = donor.strat_export().unwrap();
-        let resumed_ref =
-            StratifiedBackend::new(f.clone(), layout, 2, 0.5, Some(&snap)).unwrap();
-        let resumed_sharded = ShardedBackend::new(
+        let mut resumed_ref =
+            EngineBackend::vegas_plus(f.clone(), layout, 2, 0.5, Some(&snap)).unwrap();
+        let mut resumed_sharded = ShardedBackend::new(
             f,
             layout,
             4,

@@ -213,7 +213,7 @@ fn drive_runs_raw_pjrt_backend() {
     let Some(dir) = artifacts_dir() else { return };
     let reg = Registry::load(dir).unwrap();
     let runtime = PjrtRuntime::cpu().unwrap();
-    let backend = PjrtBackend::load(&runtime, &reg, "f4", 0).unwrap();
+    let mut backend = PjrtBackend::load(&runtime, &reg, "f4", 0).unwrap();
     let meta = backend.meta().clone();
     let cfg = JobConfig::default()
         .with_maxcalls(meta.maxcalls)
@@ -222,7 +222,7 @@ fn drive_runs_raw_pjrt_backend() {
         .with_plan(RunPlan::classic(2, 1, 0))
         .with_tolerance(1e-14)
         .with_seed(1);
-    let outcome = drive(&backend, &cfg, None, None).unwrap();
+    let outcome = drive(&mut backend, &cfg, None, None).unwrap();
     assert_eq!(outcome.output.iterations, 2);
     assert_eq!(outcome.grid.d(), meta.dim);
 }

@@ -8,15 +8,15 @@
 // audited by `cargo xtask lint` (MC001); see docs/invariants.md.
 #![allow(clippy::cast_possible_truncation)]
 
-use mcubes::api::{Checkpoint, Integrator, RunPlan, Session};
-use mcubes::coordinator::{JobConfig, NativeBackend, StratifiedBackend, VSampleBackend};
+use mcubes::api::{Checkpoint, Integrator, RunPlan, Session, StratSnapshot};
+use mcubes::coordinator::{EngineBackend, JobConfig, VSampleBackend};
 use mcubes::engine::{
-    vsample_stratified, vsample_stratified_exec, vsample_stratified_with_fill, ExecPath, FillPath,
-    NativeEngine, ScalarEval, VSampleOpts,
+    merge_task_partials, reduction_tasks, vsample_stratified, Engine, ExecPath, FillPath,
+    NativeEngine, ScalarEval, UniformEngine, VSampleOpts, VegasPlusEngine,
 };
 use mcubes::estimator::{Convergence, IterationResult, WeightedEstimator};
 use mcubes::grid::{rebin, smooth_weights, Bins, GridMode};
-use mcubes::integrands::{by_name, ALL_NAMES};
+use mcubes::integrands::{by_name, Integrand, ALL_NAMES};
 use mcubes::strat::{Allocation, Layout, Sampling, MIN_SAMPLES_PER_CUBE};
 use mcubes::util::prop::{property, Gen};
 
@@ -329,20 +329,31 @@ fn prop_simd_fill_bitwise_matches_scalar() {
         let tag = format!("{name} d={d} calls={calls} nb={nb}");
 
         // Engine 1, Sampling::Uniform: the uniform m-Cubes engine.
-        let simd = NativeEngine.vsample_with_fill(&*f, &layout, &bins, &opts, FillPath::Simd);
-        let scal = NativeEngine.vsample_with_fill(&*f, &layout, &bins, &opts, FillPath::Scalar);
+        let simd =
+            NativeEngine.vsample_exec(&*f, &layout, &bins, &opts, FillPath::Simd, ExecPath::default());
+        let scal = NativeEngine.vsample_exec(
+            &*f,
+            &layout,
+            &bins,
+            &opts,
+            FillPath::Scalar,
+            ExecPath::default(),
+        );
         check_bitwise(&tag, "uniform engine", &simd, &scal)?;
 
         // Engine 2, Sampling::VegasPlus: the stratified engine on a
         // skewed allocation (wild per-cube counts → ragged lane tails).
-        let mut a_simd = skewed_allocation(g, &layout, 0.75);
-        let mut a_scal = a_simd.clone();
-        let s1 =
-            vsample_stratified_with_fill(&*f, &layout, &bins, &mut a_simd, &opts, FillPath::Simd);
-        let s2 =
-            vsample_stratified_with_fill(&*f, &layout, &bins, &mut a_scal, &opts, FillPath::Scalar);
+        // Both passes resume the same snapshot, so they sample the same
+        // per-cube counts.
+        let snap = snapshot_of(&skewed_allocation(g, &layout, 0.75), 0.75);
+        let (s1, d1) = strat_pass(
+            &*f, layout, &bins, 0.75, Some(&snap), &opts, FillPath::Simd, ExecPath::default(),
+        )?;
+        let (s2, d2) = strat_pass(
+            &*f, layout, &bins, 0.75, Some(&snap), &opts, FillPath::Scalar, ExecPath::default(),
+        )?;
         check_bitwise(&tag, "stratified skewed", &s1, &s2)?;
-        for (j, (x, y)) in a_simd.damped().iter().zip(a_scal.damped()).enumerate() {
+        for (j, (x, y)) in d1.iter().zip(&d2).enumerate() {
             if x.to_bits() != y.to_bits() {
                 return Err(format!("{tag}: damped {j}: {x} != {y}"));
             }
@@ -351,12 +362,12 @@ fn prop_simd_fill_bitwise_matches_scalar() {
         // Stratified engine with the uniform allocation (the
         // `VegasPlus { beta: 0 }` ≡ `Uniform` mode) — and it must also
         // equal the uniform engine, closing the triangle.
-        let mut b_simd = Allocation::uniform(&layout);
-        let mut b_scal = b_simd.clone();
-        let u1 =
-            vsample_stratified_with_fill(&*f, &layout, &bins, &mut b_simd, &opts, FillPath::Simd);
-        let u2 =
-            vsample_stratified_with_fill(&*f, &layout, &bins, &mut b_scal, &opts, FillPath::Scalar);
+        let (u1, _) = strat_pass(
+            &*f, layout, &bins, 0.0, None, &opts, FillPath::Simd, ExecPath::default(),
+        )?;
+        let (u2, _) = strat_pass(
+            &*f, layout, &bins, 0.0, None, &opts, FillPath::Scalar, ExecPath::default(),
+        )?;
         check_bitwise(&tag, "stratified uniform", &u1, &u2)?;
         check_bitwise(&tag, "uniform-vs-stratified", &simd, &u1)?;
         Ok(())
@@ -456,6 +467,43 @@ fn skewed_allocation(g: &mut Gen, layout: &Layout, beta: f64) -> Allocation {
     }
     alloc.reallocate(layout.calls(), beta);
     alloc
+}
+
+/// Freeze an allocation into the checkpoint form `VegasPlusEngine`
+/// resumes from.
+fn snapshot_of(alloc: &Allocation, beta: f64) -> StratSnapshot {
+    StratSnapshot {
+        beta,
+        counts: alloc.counts().to_vec(),
+        damped: alloc.damped().to_vec(),
+    }
+}
+
+/// One stratified pass with explicit fill/exec paths, run through the
+/// public [`Engine`] trait: build a `VegasPlusEngine` (resuming `snap`
+/// when given — reallocation is a deterministic function of
+/// `(damped, budget, beta)`, so two engines resumed from the same
+/// snapshot sample identical per-cube counts), sample every reduction
+/// task, merge in task order, fold the observations back, and return
+/// the merged pass plus the engine's damped accumulator.
+#[allow(clippy::too_many_arguments, clippy::type_complexity)]
+fn strat_pass(
+    f: &dyn Integrand,
+    layout: Layout,
+    bins: &Bins,
+    beta: f64,
+    snap: Option<&StratSnapshot>,
+    opts: &VSampleOpts,
+    fill: FillPath,
+    exec: ExecPath,
+) -> Result<((IterationResult, Option<Vec<f64>>), Vec<f64>), String> {
+    let mut engine = VegasPlusEngine::new(layout, beta, snap).map_err(|e| e.to_string())?;
+    let ntasks = reduction_tasks(layout.m);
+    let partials = engine.sample_tasks(f, bins, opts, fill, exec, 0, ntasks);
+    let out = merge_task_partials(layout.d, layout.nb, opts.adjust, &partials);
+    engine.update(&partials);
+    let snap = engine.export().ok_or("vegas+ engine must export")?;
+    Ok((out, snap.damped))
 }
 
 /// Same bitwise contract for the VEGAS+ stratified engine, whose
@@ -629,7 +677,7 @@ fn prop_stratified_thread_invariance_and_beta0_equivalence() {
 /// reproduce bitwise.
 #[allow(clippy::too_many_arguments)]
 fn legacy_driver_oracle(
-    backend: &dyn VSampleBackend,
+    backend: &mut dyn VSampleBackend,
     d: usize,
     nb: usize,
     seed: u32,
@@ -698,12 +746,12 @@ fn prop_classic_session_bitwise_matches_legacy_driver() {
         let layout = Layout::compute(d, calls, nb, nblocks).map_err(|e| e.to_string())?;
 
         let (est, bins, iters, converged) = if vegas {
-            let backend = StratifiedBackend::new(f.clone(), layout, threads, beta, None)
+            let mut backend = EngineBackend::vegas_plus(f.clone(), layout, threads, beta, None)
                 .map_err(|e| e.to_string())?;
-            legacy_driver_oracle(&backend, d, nb, seed, tau, itmax, ita, skip)
+            legacy_driver_oracle(&mut backend, d, nb, seed, tau, itmax, ita, skip)
         } else {
-            let backend = NativeBackend::new(f.clone(), layout, threads);
-            legacy_driver_oracle(&backend, d, nb, seed, tau, itmax, ita, skip)
+            let mut backend = EngineBackend::uniform(f.clone(), layout, threads);
+            legacy_driver_oracle(&mut backend, d, nb, seed, tau, itmax, ita, skip)
         };
 
         let sampling = if vegas {
@@ -957,34 +1005,94 @@ fn prop_streaming_thread_invariance_bitwise_matches_block() {
         check_bitwise(&tag, "uniform scalar fill", &ss, &sb)?;
 
         // Stratified engine on a skewed allocation: wildly uneven
-        // per-cube counts make tiles split cubes at every offset.
-        let alloc0 = skewed_allocation(g, &layout, 0.75);
-        let mut a_block = alloc0.clone();
-        let r_block = vsample_stratified_exec(
-            &*f,
-            &layout,
-            &bins,
-            &mut a_block,
-            &opts(4),
-            FillPath::Simd,
-            ExecPath::Block,
-        );
+        // per-cube counts make tiles split cubes at every offset. Both
+        // schedules resume the same frozen snapshot through the public
+        // `Engine` trait.
+        let snap = snapshot_of(&skewed_allocation(g, &layout, 0.75), 0.75);
+        let (r_block, d_block) = strat_pass(
+            &*f, layout, &bins, 0.75, Some(&snap), &opts(4), FillPath::Simd, ExecPath::Block,
+        )?;
         for threads in [1usize, 8] {
-            let mut a_stream = alloc0.clone();
-            let r_stream = vsample_stratified_exec(
+            let (r_stream, d_stream) = strat_pass(
                 &*f,
-                &layout,
+                layout,
                 &bins,
-                &mut a_stream,
+                0.75,
+                Some(&snap),
                 &opts(threads),
                 FillPath::Simd,
                 ExecPath::Streaming,
-            );
+            )?;
             check_bitwise(&tag, &format!("stratified streaming t={threads}"), &r_stream, &r_block)?;
-            for (j, (x, y)) in a_stream.damped().iter().zip(a_block.damped()).enumerate() {
+            for (j, (x, y)) in d_stream.iter().zip(&d_block).enumerate() {
                 if x.to_bits() != y.to_bits() {
                     return Err(format!("{tag}: stratified damped {j}: {x} != {y}"));
                 }
+            }
+        }
+        Ok(())
+    });
+}
+
+/// **Satellite acceptance property.** Trait-object dispatch is
+/// invisible: driving `Box<dyn Engine>` through [`Engine::vsample`]
+/// produces the same bits as the concrete engine — estimate,
+/// histogram, and (VEGAS+) the exported allocation snapshot — for
+/// both native engines across random shapes, fill paths, and thread
+/// counts.
+#[test]
+fn prop_dyn_engine_dispatch_bitwise_matches_static() {
+    property("dyn_vs_static_engine", 12, |g: &mut Gen, i| {
+        let names = ["f1", "f3", "f4", "f6"];
+        let name = names[i % names.len()];
+        let d = g.usize_range(1, 6);
+        let calls = g.usize_range(512, 8192);
+        let nb = g.usize_range(4, 30);
+        let seed = g.usize_range(0, 1 << 30) as u32;
+        let threads = g.usize_range(1, 4);
+        let fill = if g.f64() < 0.5 {
+            FillPath::Simd
+        } else {
+            FillPath::Scalar
+        };
+        let f = by_name(name, d).map_err(|e| e.to_string())?;
+        let layout = Layout::compute(d, calls, nb, 1).map_err(|e| e.to_string())?;
+        let bins = Bins::uniform(d, nb);
+        let opts = VSampleOpts {
+            seed,
+            iteration: 1,
+            adjust: true,
+            threads,
+        };
+        let tag = format!("{name} d={d} calls={calls} nb={nb}");
+
+        // Uniform engine: static vs boxed.
+        let mut st = UniformEngine::new(layout);
+        let mut dy: Box<dyn Engine> = Box::new(UniformEngine::new(layout));
+        let a = st.vsample(&*f, &bins, &opts, fill, ExecPath::default());
+        let b = dy.vsample(&*f, &bins, &opts, fill, ExecPath::default());
+        check_bitwise(&tag, "uniform dyn-vs-static", &b, &a)?;
+
+        // VEGAS+ engine, both sides resumed from one frozen snapshot so
+        // they sample identical per-cube counts.
+        let snap = snapshot_of(&skewed_allocation(g, &layout, 0.75), 0.75);
+        let mut st =
+            VegasPlusEngine::new(layout, 0.75, Some(&snap)).map_err(|e| e.to_string())?;
+        let mut dy: Box<dyn Engine> =
+            Box::new(VegasPlusEngine::new(layout, 0.75, Some(&snap)).map_err(|e| e.to_string())?);
+        let a = st.vsample(&*f, &bins, &opts, fill, ExecPath::default());
+        let b = dy.vsample(&*f, &bins, &opts, fill, ExecPath::default());
+        check_bitwise(&tag, "vegas+ dyn-vs-static", &b, &a)?;
+        let (sa, sb) = (
+            st.export().ok_or("static engine must export")?,
+            dy.export().ok_or("boxed engine must export")?,
+        );
+        if sa.counts != sb.counts {
+            return Err(format!("{tag}: dyn vs static counts differ"));
+        }
+        for (j, (x, y)) in sa.damped.iter().zip(&sb.damped).enumerate() {
+            if x.to_bits() != y.to_bits() {
+                return Err(format!("{tag}: dyn vs static damped {j}: {x} != {y}"));
             }
         }
         Ok(())

@@ -128,7 +128,8 @@ fn torn_reports_and_dead_workers_fall_back_bitwise() {
     let layout = Layout::compute(4, 2048, 10, 2).unwrap();
     let bins = Bins::uniform(4, 10);
     let f = by_name("f2", 4).unwrap();
-    let reference = ShardedBackend::new(f.clone(), layout, 4, 2, Sampling::Uniform, None).unwrap();
+    let mut reference =
+        ShardedBackend::new(f.clone(), layout, 4, 2, Sampling::Uniform, None).unwrap();
     let want = reference.run(&bins, 11, 0, true).unwrap();
 
     let dir = scratch("straggler");
@@ -141,7 +142,7 @@ fn torn_reports_and_dead_workers_fall_back_bitwise() {
     let transport = SpoolTransport::open(&dir, opts).unwrap();
     // Shard 0's report is already present but torn mid-write.
     std::fs::write(dir.join("reports").join(spool_file_name(0, 0)), b"{\"$schema").unwrap();
-    let spooled = ShardedBackend::new(f, layout, 4, 2, Sampling::Uniform, None)
+    let mut spooled = ShardedBackend::new(f, layout, 4, 2, Sampling::Uniform, None)
         .unwrap()
         .with_spool(transport);
     let got = spooled.run(&bins, 11, 0, true).unwrap();
@@ -168,7 +169,7 @@ fn strict_spool_mode_fails_typed_instead_of_hanging() {
         local_fallback: false,
     };
     let transport = SpoolTransport::open(&dir, opts).unwrap();
-    let strict = ShardedBackend::new(f, layout, 4, 1, Sampling::Uniform, None)
+    let mut strict = ShardedBackend::new(f, layout, 4, 1, Sampling::Uniform, None)
         .unwrap()
         .with_spool(transport);
     let err = strict.run(&bins, 3, 0, false).unwrap_err();

@@ -449,8 +449,9 @@ def run_classic3(fv, d, maxcalls, nb, seed, beta=None):
     """RunPlan::classic(3, 0, 0): three non-adjusting sample iterations.
 
     beta=None runs the uniform engine; a float runs the VEGAS+
-    stratified backend (absorb every pass, reallocate after every
-    iteration — exactly `StratifiedBackend::run`).
+    stratified engine (absorb every pass, reallocate after every
+    iteration — exactly `VegasPlusEngine::update` as driven by
+    `EngineBackend::run`).
     """
     g, m, p = layout_compute(d, maxcalls, nb)
     edges = bins_uniform(d, nb)

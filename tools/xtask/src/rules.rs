@@ -415,20 +415,26 @@ mod tests {
     }
 
     #[test]
-    fn streaming_kernel_is_in_rule_scope() {
-        // The fused streaming kernel (engine/streaming.rs) must sit
-        // inside the same fences as the rest of engine/: MC002/MC003
-        // flag hash containers and clocks there, while MC004 blesses
-        // its per-task tile accumulation (it *is* the fixed 64-task
-        // reduction partition) — and keeps flagging everyone else.
+    fn shared_walk_is_in_rule_scope() {
+        // The shared tile walk (engine/walk.rs) — the one copy of the
+        // fill→eval→reduce loop every native `Engine` samples through —
+        // must sit inside the same fences as the rest of engine/:
+        // MC002/MC003 flag hash containers and clocks there, while
+        // MC004 blesses its per-task tile accumulation (it *is* the
+        // fixed 64-task reduction partition) — and keeps flagging
+        // everyone else. The stratified engine shares the fences too.
         let clock = "use std::time::Instant;\n";
-        let f = run("engine/streaming.rs", clock);
+        let f = run("engine/walk.rs", clock);
         assert_eq!(f.len(), 1);
         assert_eq!(f[0].rule, "MC003");
         let hash = "use std::collections::HashMap;\n";
-        assert_eq!(run("engine/streaming.rs", hash)[0].rule, "MC002");
+        assert_eq!(run("engine/walk.rs", hash)[0].rule, "MC002");
+        assert_eq!(run("engine/stratified.rs", hash)[0].rule, "MC002");
+        let cast = "let lo = sample_idx as u32;\n";
+        assert_eq!(run("engine/walk.rs", cast)[0].rule, "MC001");
         let acc = "parallel_chunks(n, t, |a, b| { s += a; });\n";
-        assert!(run("engine/streaming.rs", acc).is_empty());
+        assert!(run("engine/walk.rs", acc).is_empty());
+        assert!(run("engine/stratified.rs", acc).is_empty());
         assert_eq!(run("coordinator/backend.rs", acc).len(), 1);
     }
 

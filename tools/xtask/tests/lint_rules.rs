@@ -116,6 +116,31 @@ fn mc000_rejects_unknown_rules_and_missing_reasons() {
     );
 }
 
+/// Scope pinning for the engine module layout. The rule scopes are
+/// path prefixes (`engine/`, ...), so they follow the tree — but the
+/// *documented* layout ("one copy of the hot loop", see
+/// docs/architecture.md) is a file-level promise this test pins: the
+/// shared tile walk and the stratified engine live where MC001–MC004
+/// fence them, and the pre-refactor `engine/streaming.rs` (whose walk
+/// was folded into `engine/walk.rs`) is gone, not lingering outside
+/// anyone's attention.
+#[test]
+fn engine_layout_matches_rule_scope() {
+    let src = Path::new(env!("CARGO_MANIFEST_DIR")).join("../../rust/src");
+    for kept in ["engine/walk.rs", "engine/stratified.rs", "engine/mod.rs"] {
+        assert!(
+            src.join(kept).is_file(),
+            "{kept} moved — update the MC001–MC004 scope notes in \
+             rules.rs and docs/invariants.md"
+        );
+    }
+    assert!(
+        !src.join("engine/streaming.rs").exists(),
+        "engine/streaming.rs is back — the shared walk must stay the \
+         one copy of the fill→eval→reduce loop (engine/walk.rs)"
+    );
+}
+
 /// The gate: the real tree lints clean. Every narrowing cast, hash
 /// container, clock read, parallel accumulation, and panicking
 /// extractor in rust/src is either fixed or carries a reasoned
